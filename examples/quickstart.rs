@@ -1,0 +1,74 @@
+//! Quickstart: generate a small corpus, train word2vec with the paper's
+//! GEMM scheme, evaluate, and inspect nearest neighbours — the 60-second
+//! tour of the public API.
+//!
+//! Run with:  cargo run --release --example quickstart
+
+use pw2v::config::{Backend, TrainConfig};
+use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
+use pw2v::corpus::vocab::Vocab;
+use pw2v::eval;
+use pw2v::eval::similarity::cosine;
+use pw2v::model::SharedModel;
+use pw2v::train;
+use pw2v::util::si;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A synthetic corpus with known semantic structure (stands in for
+    //    text8; see DESIGN.md §6).
+    let scfg = SyntheticConfig {
+        vocab: 3_000,
+        tokens: 400_000,
+        clusters: 25,
+        beta: 5.0,
+        ..SyntheticConfig::default()
+    };
+    let latent = LatentModel::new(scfg);
+    let corpus = std::env::temp_dir().join("pw2v_quickstart_corpus.txt");
+    let n = latent.write_corpus(&corpus)?;
+    println!("corpus: {n} tokens");
+
+    // 2. Vocabulary + model.
+    let vocab = Vocab::build_from_file(&corpus, 2)?;
+    println!("vocab: {} words", vocab.len());
+    let mut cfg = TrainConfig::default();
+    cfg.backend = Backend::Gemm; // the paper's scheme
+    cfg.dim = 64;
+    cfg.epochs = 3;
+    cfg.sample = 1e-3;
+    cfg.lr = 0.05;
+    let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+
+    // 3. Train.
+    let out = train::train(&cfg, &corpus, &vocab, &model)?;
+    println!(
+        "trained {} words in {:.1}s = {} words/sec",
+        out.snapshot.words,
+        out.snapshot.secs,
+        si(out.snapshot.words_per_sec())
+    );
+
+    // 4. Evaluate against the generator's ground truth.
+    let sim_set = eval::gen_similarity_set(&latent, 200, 7);
+    let report = eval::eval_similarity(&sim_set, &vocab, model.m_in());
+    println!(
+        "similarity: Spearman rho x100 = {:.1} over {} pairs",
+        report.rho100, report.pairs_covered
+    );
+
+    // 5. Nearest neighbours of a frequent word.
+    let probe = vocab.word(10).to_string();
+    let probe_row = model.m_in().unit_row(10);
+    let mut scored: Vec<(f64, u32)> = (0..vocab.len() as u32)
+        .filter(|&w| w != 10)
+        .map(|w| (cosine(&probe_row, model.m_in().row(w)), w))
+        .collect();
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    println!("nearest neighbours of '{probe}':");
+    for (score, w) in scored.iter().take(5) {
+        println!("  {:<12} cos={score:.3}", vocab.word(*w));
+    }
+
+    std::fs::remove_file(&corpus).ok();
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Scaling-curve generator: measures this box's real single-thread rates,
+//! then prints the paper's Fig. 3 (threads) and Fig. 4 (nodes) curves from
+//! the calibrated performance models — the projection half of DESIGN.md §3's
+//! hardware substitution.
+//!
+//! Run with:  cargo run --release --example scaling_curves
+
+use pw2v::bench::workload;
+use pw2v::config::TrainConfig;
+use pw2v::corpus::synthetic::SyntheticConfig;
+use pw2v::perfmodel::arch;
+use pw2v::perfmodel::calibrate::Calibration;
+use pw2v::perfmodel::simulate::{
+    fig3_series, fig3_thread_axis, fig4_series, FigParams,
+};
+use pw2v::util::si;
+
+fn main() -> anyhow::Result<()> {
+    // Calibrate on a small corpus (real measurement, this box).
+    let wl = workload(SyntheticConfig {
+        vocab: 10_000,
+        tokens: 500_000,
+        clusters: 40,
+        seed: 11,
+        ..SyntheticConfig::default()
+    })?;
+    let mut cfg = TrainConfig::default();
+    cfg.dim = 300;
+    cfg.sample = 1e-3;
+    eprintln!("calibrating single-thread rates (real runs) ...");
+    let cal = Calibration::measure(&cfg, &wl.corpus, &wl.vocab, false)?;
+    println!(
+        "measured 1T: original {} | bidmach {} | ours {}  (ours/original = {:.2}x; paper 2.6x)",
+        si(cal.scalar_w1),
+        si(cal.bidmach_w1),
+        si(cal.gemm_w1),
+        cal.gemm_over_scalar()
+    );
+
+    // Project Fig. 3 with the MEASURED ratio re-anchored to the paper's
+    // absolute 1T scalar rate (this vCPU's absolute speed differs).
+    let p = FigParams::default();
+    let bdw = arch::broadwell();
+    let w1_scalar = 70_000.0;
+    let w1_gemm = w1_scalar * cal.gemm_over_scalar();
+    let axis = fig3_thread_axis(&bdw);
+    let (s_curve, g_curve) = fig3_series(&bdw, &p, w1_scalar, w1_gemm, &axis);
+    println!("\nFig 3 (Broadwell, modelled from measured ratio):");
+    println!("{:>8} {:>12} {:>12} {:>8}", "threads", "original", "ours", "ratio");
+    for (s, g) in s_curve.iter().zip(&g_curve) {
+        println!(
+            "{:>8} {:>12} {:>12} {:>7.2}x",
+            s.x,
+            si(s.words_per_sec),
+            si(g.words_per_sec),
+            g.words_per_sec / s.words_per_sec
+        );
+    }
+
+    let nodes = [1usize, 2, 4, 8, 16, 32];
+    println!("\nFig 4 (clusters, modelled):");
+    println!("{:>8} {:>14} {:>14}", "nodes", "BDW+FDR", "KNL+OPA");
+    let bdw_series =
+        fig4_series(&bdw, arch::fdr_infiniband(), &p, w1_gemm, &nodes);
+    let knl_series = fig4_series(
+        &arch::knl(),
+        arch::omnipath(),
+        &p,
+        w1_gemm * 85.0 / 182.0,
+        &nodes,
+    );
+    for (b, k) in bdw_series.iter().zip(&knl_series) {
+        println!(
+            "{:>8} {:>14} {:>14}",
+            b.x,
+            si(b.words_per_sec),
+            si(k.words_per_sec)
+        );
+    }
+    println!("\npaper anchors: 5.8M @72T BDW; 110M @32 BDW nodes; 94.7M @16 KNL");
+    Ok(())
+}

@@ -1,0 +1,122 @@
+"""AOT compile path: lower the Layer-2 step to HLO **text** artifacts.
+
+Run once by ``make artifacts``; python never runs on the train path.  The
+rust runtime (``rust/src/runtime/``) loads these with
+``HloModuleProto::from_text_file`` → ``PjRtClient::compile`` → ``execute``.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly.  See /opt/xla-example/README.md.
+
+Each exported variant is a fixed-shape ``step(wi[W,B,D], wo[W,S,D], lr)``;
+``manifest.json`` indexes them so the rust side picks the variant matching
+its configured superbatch geometry.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Geometries the rust coordinator may request:
+#   - test:   tiny, compiles fast, used by rust unit/integration tests
+#   - quick:  the examples/quickstart geometry
+#   - paper:  the paper's 1B-benchmark parameters (D=300, K=5 -> S=6,
+#             context batch ~2*window=10..20 -> B=16) at several superbatch
+#             widths W for the call-amortisation ablation
+#
+# EVERY geometry is emitted through BOTH L2 paths:
+#   - "pallas": the fused L1 kernel under interpret=True.  This is the
+#     TPU-structured artifact; on the CPU PJRT client its grid loop
+#     executes serially with per-step buffer copies and measures ~9x
+#     slower (EXPERIMENTS.md §Perf), so it is kept for structure
+#     validation and TPU hand-off.
+#   - "jnp": the same step as XLA-fused einsums — what the rust trainer
+#     executes by default on CPU (numerically identical; tested).
+GEOMETRIES = [
+    ("test_w4_b8_s6_d32", 4, 8, 6, 32),
+    ("quick_w16_b16_s6_d64", 16, 16, 6, 64),
+    ("paper_w16_b16_s6_d300", 16, 16, 6, 300),
+    ("paper_w64_b16_s6_d300", 64, 16, 6, 300),
+    ("paper_w256_b16_s6_d300", 256, 16, 6, 300),
+]
+
+VARIANTS = [(name, "pallas", w, b, s, d) for name, w, b, s, d in GEOMETRIES] + [
+    (f"jnp_{name}", "jnp", w, b, s, d) for name, w, b, s, d in GEOMETRIES
+]
+
+STEP_FNS = {"pallas": model.step_pallas, "jnp": model.step_jnp}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(kind: str, w: int, b: int, s: int, d: int) -> str:
+    fn = STEP_FNS[kind]
+    lowered = jax.jit(fn).lower(*model.shapes(w, b, s, d))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated variant names to build"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {"format": "hlo-text", "entries": []}
+    for name, kind, w, b, s, d in VARIANTS:
+        if only and name not in only:
+            continue
+        text = lower_variant(kind, w, b, s, d)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "kind": kind,
+                "w": w,
+                "b": b,
+                "s": s,
+                "d": d,
+                "dtype": "f32",
+                "sha256_16": digest,
+                # inputs: wi[W,B,D], wo[W,S,D], lr[] ; outputs (tuple):
+                # dwi[W,B,D], dwo[W,S,D]
+                "inputs": [[w, b, d], [w, s, d], []],
+                "outputs": [[w, b, d], [w, s, d]],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['entries'])} variants)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Pure-jnp correctness oracle for the fused SGNS window-update kernel.
+
+This is the mathematical ground truth the Pallas kernel (``sgns.py``) and the
+AOT-lowered HLO artifact are tested against.  It implements one *superbatch*
+of the paper's shared-memory scheme (Ji et al. 2016, Sec. III-B):
+
+For each of the ``W`` windows in the superbatch we are given
+
+  * ``wi``  — the gathered input-word rows,   shape ``[W, B, D]``
+  * ``wo``  — the gathered output-word rows,  shape ``[W, S, D]``
+              (row 0 = the positive target, rows 1..S-1 = the K = S-1
+              negative samples *shared across the whole input batch*)
+  * ``lr``  — the scalar SGD learning rate.
+
+and compute the three GEMMs of the paper's Fig. 2 (right):
+
+  logits = wi @ wo^T                      [W, B, S]   (GEMM 1)
+  err    = (label - sigmoid(logits)) * lr [W, B, S]
+  dwi    = err @ wo                       [W, B, D]   (GEMM 2)
+  dwo    = err^T @ wi                     [W, S, D]   (GEMM 3)
+
+``label`` is 1 for column 0 (the positive target) and 0 for the negative
+columns — exactly the ``label - sigma(inn)`` error of Algorithm 1, batched.
+
+The function returns *deltas* ``(dwi, dwo)`` rather than updated rows: the
+rust coordinator scatter-ADDS them into the shared model, which preserves
+Hogwild semantics under concurrent writers (see DESIGN.md Sec. 2).
+
+Gradient notes (matches Algorithm 1 of the paper):
+  * Both ``dwi`` and ``dwo`` are computed from the PRE-update matrices —
+    the paper's scheme batches all updates to the end of the GEMM block.
+  * No normalization by B or S: word2vec applies the raw per-pair gradient,
+    so the batched form is the straight sum over pairs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sigmoid(x):
+    """Numerically-stable logistic function (matches jax.nn.sigmoid)."""
+    return jnp.where(
+        x >= 0,
+        1.0 / (1.0 + jnp.exp(-x)),
+        jnp.exp(x) / (1.0 + jnp.exp(x)),
+    )
+
+
+def label_row(s: int, dtype=jnp.float32):
+    """The shared label pattern: [1, 0, 0, ..., 0] of length S."""
+    return jnp.concatenate(
+        [jnp.ones((1,), dtype=dtype), jnp.zeros((s - 1,), dtype=dtype)]
+    )
+
+
+def sgns_window_grads(wi, wo, lr):
+    """SGNS deltas for a single window.
+
+    Args:
+      wi: [B, D] input-word rows.
+      wo: [S, D] output rows (row 0 positive, rest shared negatives).
+      lr: scalar learning rate.
+    Returns:
+      (dwi [B, D], dwo [S, D]) — deltas to scatter-add into the model.
+    """
+    b, d = wi.shape
+    s, d2 = wo.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    logits = wi @ wo.T  # [B, S]
+    labels = label_row(s, wi.dtype)[None, :]  # [1, S]
+    err = (labels - sigmoid(logits)) * lr  # [B, S]
+    dwi = err @ wo  # [B, D]
+    dwo = err.T @ wi  # [S, D]
+    return dwi, dwo
+
+
+def sgns_superbatch_grads(wi, wo, lr):
+    """SGNS deltas for a whole superbatch.
+
+    Args:
+      wi: [W, B, D]; wo: [W, S, D]; lr: scalar.
+    Returns:
+      (dwi [W, B, D], dwo [W, S, D]).
+    """
+    w, b, d = wi.shape
+    w2, s, d2 = wo.shape
+    assert w == w2 and d == d2
+    logits = jnp.einsum("wbd,wsd->wbs", wi, wo)
+    labels = label_row(s, wi.dtype)[None, None, :]
+    err = (labels - sigmoid(logits)) * lr
+    dwi = jnp.einsum("wbs,wsd->wbd", err, wo)
+    dwo = jnp.einsum("wbs,wbd->wsd", err, wi)
+    return dwi, dwo
+
+
+def sgns_objective(wi, wo):
+    """The (maximised) negative-sampling objective of Eq. (3), summed over
+    the superbatch.  Used by tests to check the deltas are an ascent
+    direction, and by the convergence tests as a loss proxy."""
+    logits = jnp.einsum("wbd,wsd->wbs", wi, wo)
+    s = logits.shape[-1]
+    labels = label_row(s, wi.dtype)[None, None, :]
+    # log sigma(x) for positives, log sigma(-x) for negatives
+    signed = jnp.where(labels > 0, logits, -logits)
+    # log(sigmoid(z)) = -softplus(-z), stable
+    return -jnp.sum(jnp.logaddexp(0.0, -signed))

@@ -1,0 +1,109 @@
+"""Layer-1 Pallas kernel: fused SGNS superbatch update.
+
+This is the paper's compute hot-spot (Ji et al. 2016, Fig. 2 right): one
+window's input batch against the shared target+negatives block, expressed as
+three back-to-back GEMMs fused in one kernel so the ``wi``/``wo`` blocks are
+loaded into VMEM once and reused three times.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper blocks for
+Xeon registers/L1 via MKL SGEMM; on TPU the analogue is keeping each
+window's ``(B+S)×D`` working set resident in VMEM across the three MXU
+calls.  The grid dimension runs over the ``W`` superbatched windows — the
+BlockSpec index maps express the HBM→VMEM schedule that the paper's code
+gets implicitly from looping over minibatches.
+
+``interpret=True`` is REQUIRED on this box: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO so the same
+program runs under the rust PJRT CPU client.  Structure (block shapes, VMEM
+footprint, fusion) is what we optimise; interpret wallclock is not a TPU
+proxy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sgns_kernel(lr_ref, wi_ref, wo_ref, dwi_ref, dwo_ref):
+    """One grid step = one window.
+
+    Block shapes (leading 1 is the gridded window axis):
+      lr_ref  : [1]        scalar learning rate (same block every step)
+      wi_ref  : [1, B, D]  input-word rows
+      wo_ref  : [1, S, D]  row 0 positive target, rows 1.. negatives
+      dwi_ref : [1, B, D]  out: input-row deltas
+      dwo_ref : [1, S, D]  out: output-row deltas
+    """
+    wi = wi_ref[0]  # [B, D]
+    wo = wo_ref[0]  # [S, D]
+    lr = lr_ref[0]
+
+    s = wo.shape[0]
+    # GEMM 1: similarity logits of every (input, sample) pair.
+    logits = jnp.dot(wi, wo.T, preferred_element_type=jnp.float32)  # [B, S]
+    # Label pattern [1, 0, ..., 0]: column 0 is the positive target.
+    labels = (jax.lax.broadcasted_iota(jnp.int32, (1, s), 1) == 0).astype(
+        logits.dtype
+    )
+    err = (labels - jax.nn.sigmoid(logits)) * lr  # [B, S]
+    # GEMM 2 + GEMM 3: both gradients from the PRE-update blocks (the
+    # paper's end-of-block update semantics).
+    dwi_ref[0] = jnp.dot(err, wo, preferred_element_type=jnp.float32).astype(
+        wi.dtype
+    )
+    dwo_ref[0] = jnp.dot(err.T, wi, preferred_element_type=jnp.float32).astype(
+        wo.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sgns_superbatch(wi, wo, lr, *, interpret: bool = True):
+    """Fused SGNS deltas over a superbatch of W windows.
+
+    Args:
+      wi: f32[W, B, D] gathered input rows.
+      wo: f32[W, S, D] gathered output rows (col 0 positive).
+      lr: f32 scalar learning rate.
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      (dwi f32[W, B, D], dwo f32[W, S, D]) deltas to scatter-add.
+    """
+    w, b, d = wi.shape
+    w2, s, d2 = wo.shape
+    if (w, d) != (w2, d2):
+        raise ValueError(f"shape mismatch wi={wi.shape} wo={wo.shape}")
+    lr_arr = jnp.reshape(jnp.asarray(lr, dtype=wi.dtype), (1,))
+
+    grid = (w,)
+    return pl.pallas_call(
+        _sgns_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # lr broadcast to all steps
+            pl.BlockSpec((1, b, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w, b, d), wi.dtype),
+            jax.ShapeDtypeStruct((w, s, d), wo.dtype),
+        ],
+        interpret=interpret,
+    )(lr_arr, wi, wo)
+
+
+def vmem_bytes(b: int, s: int, d: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step: wi + wo + dwi + dwo
+    blocks plus the [B,S] logits/err intermediates.  Used by DESIGN.md's
+    roofline notes and by tests that guard the footprint stays tiny."""
+    blocks = 2 * (b * d + s * d)  # in + out copies
+    inter = 2 * (b * s)  # logits + err
+    return dtype_bytes * (blocks + inter)

@@ -1,0 +1,65 @@
+"""Layer-2 JAX model: the SGNS superbatch train step.
+
+Build-time only — lowered once by ``aot.py`` to HLO text and never imported
+at runtime.  The step the rust coordinator executes per superbatch is
+
+    step : (wi[W,B,D], wo[W,S,D], lr) -> (dwi[W,B,D], dwo[W,S,D])
+
+where the gather (model rows -> wi/wo) and the Hogwild scatter-add
+(dwi/dwo -> model rows) live in rust (Layer 3), because they touch the
+shared mutable model.  The pure-functional GEMM core is what XLA sees.
+
+Two implementations of the same math:
+  * ``step_pallas``  — calls the Layer-1 Pallas kernel (the shipped path).
+  * ``step_jnp``     — pure-jnp einsum variant (reference / A-B testing;
+                       also the oracle the kernel is tested against).
+
+Also here: ``softmax_step`` — the full-softmax Skip-gram of Eq. (2), used
+only by tests to validate that negative sampling approximates its gradient
+direction (never exported: cost ∝ V).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.sgns import sgns_superbatch
+
+
+def step_pallas(wi, wo, lr):
+    """Shipped train step: fused Pallas SGNS kernel over the superbatch."""
+    return sgns_superbatch(wi, wo, lr, interpret=True)
+
+
+def step_jnp(wi, wo, lr):
+    """Reference train step: same math in pure jnp (XLA-fused einsums)."""
+    return ref.sgns_superbatch_grads(wi, wo, lr)
+
+
+def softmax_step(wi, m_out, target, lr):
+    """Full-softmax Skip-gram gradient of Eq. (2) for one window.
+
+    Args:
+      wi: [B, D] input rows; m_out: [V, D] full output matrix;
+      target: int32 scalar target word id; lr: scalar.
+    Returns:
+      (dwi [B, D], dm_out [V, D]).  Test-only: cost is O(V*D).
+    """
+    logits = wi @ m_out.T  # [B, V]
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(target, m_out.shape[0], dtype=wi.dtype)[None, :]
+    err = (onehot - p) * lr  # [B, V]
+    dwi = err @ m_out
+    dm_out = err.T @ wi
+    return dwi, dm_out
+
+
+def shapes(w: int, b: int, s: int, d: int, dtype=jnp.float32):
+    """ShapeDtypeStructs for AOT lowering of a (W,B,S,D) step variant."""
+    return (
+        jax.ShapeDtypeStruct((w, b, d), dtype),
+        jax.ShapeDtypeStruct((w, s, d), dtype),
+        jax.ShapeDtypeStruct((), dtype),
+    )

@@ -1,0 +1,141 @@
+"""Layer-1 correctness: the fused Pallas SGNS kernel vs. the pure-jnp oracle.
+
+This is the CORE numeric signal of the whole stack: if these pass, the HLO
+artifact the rust coordinator executes computes exactly the batched
+Algorithm-1 gradients of the paper.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sgns import sgns_superbatch, vmem_bytes
+
+
+def rand(shape, seed, scale=0.1, dtype=jnp.float32):
+    return (jax.random.normal(jax.random.PRNGKey(seed), shape) * scale).astype(dtype)
+
+
+def assert_matches_ref(w, b, s, d, lr, seed=0, rtol=1e-5, atol=1e-6):
+    wi = rand((w, b, d), seed)
+    wo = rand((w, s, d), seed + 1)
+    dwi, dwo = sgns_superbatch(wi, wo, lr)
+    rwi, rwo = ref.sgns_superbatch_grads(wi, wo, lr)
+    np.testing.assert_allclose(dwi, rwi, rtol=rtol, atol=atol)
+    np.testing.assert_allclose(dwo, rwo, rtol=rtol, atol=atol)
+
+
+class TestKernelVsRef:
+    def test_paper_geometry(self):
+        """The paper's 1B-benchmark parameters: D=300, K=5, B=16."""
+        assert_matches_ref(w=8, b=16, s=6, d=300, lr=0.025)
+
+    def test_tiny(self):
+        assert_matches_ref(w=1, b=1, s=2, d=4, lr=0.5)
+
+    def test_single_window(self):
+        assert_matches_ref(w=1, b=16, s=6, d=300, lr=0.025)
+
+    def test_wide_superbatch(self):
+        assert_matches_ref(w=64, b=8, s=6, d=64, lr=0.01)
+
+    def test_large_lr(self):
+        assert_matches_ref(w=4, b=8, s=6, d=32, lr=1.0)
+
+    def test_zero_lr_gives_zero_deltas(self):
+        wi, wo = rand((4, 8, 32), 0), rand((4, 6, 32), 1)
+        dwi, dwo = sgns_superbatch(wi, wo, 0.0)
+        assert float(jnp.abs(dwi).max()) == 0.0
+        assert float(jnp.abs(dwo).max()) == 0.0
+
+    @given(
+        w=st.integers(1, 8),
+        b=st.integers(1, 20),
+        s=st.integers(2, 12),
+        d=st.sampled_from([1, 3, 8, 32, 100, 300]),
+        lr=st.floats(1e-4, 1.0),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_hypothesis_shape_sweep(self, w, b, s, d, lr, seed):
+        """The harness-mandated hypothesis sweep over kernel shapes."""
+        assert_matches_ref(w, b, s, d, lr, seed=seed)
+
+    def test_shape_mismatch_raises(self):
+        wi, wo = rand((4, 8, 32), 0), rand((3, 6, 32), 1)
+        with pytest.raises(ValueError):
+            sgns_superbatch(wi, wo, 0.025)
+
+
+class TestKernelSemantics:
+    """Checks of the SGNS math itself, independent of the oracle."""
+
+    def test_deltas_are_ascent_direction(self):
+        """Applying the deltas must increase the Eq. (3) objective."""
+        wi, wo = rand((8, 16, 64), 3), rand((8, 6, 64), 4)
+        before = ref.sgns_objective(wi, wo)
+        dwi, dwo = sgns_superbatch(wi, wo, 0.05)
+        after = ref.sgns_objective(wi + dwi, wo + dwo)
+        assert float(after) > float(before)
+
+    def test_positive_column_pulls_together(self):
+        """Gradient on the positive pair increases its dot product."""
+        wi = rand((1, 1, 16), 5)
+        wo = rand((1, 6, 16), 6)
+        dwi, dwo = sgns_superbatch(wi, wo, 0.1)
+        before = float(jnp.vdot(wi[0, 0], wo[0, 0]))
+        after = float(jnp.vdot(wi[0, 0] + dwi[0, 0], wo[0, 0] + dwo[0, 0]))
+        assert after > before
+
+    def test_negative_columns_push_apart(self):
+        """Gradient on each negative pair decreases its dot product when
+        the current similarity is positive."""
+        # Make all vectors positively aligned so sigma(logit) > 0.5.
+        wi = jnp.abs(rand((1, 4, 16), 7)) + 0.5
+        wo = jnp.abs(rand((1, 6, 16), 8)) + 0.5
+        dwi, dwo = sgns_superbatch(wi, wo, 0.05)
+        for k in range(1, 6):
+            before = float(jnp.vdot(wi[0, 0], wo[0, k]))
+            after = float(
+                jnp.vdot(wi[0, 0] + dwi[0, 0], wo[0, k] + dwo[0, k])
+            )
+            assert after < before, f"negative sample {k} not pushed apart"
+
+    def test_windows_independent(self):
+        """Each window's deltas depend only on that window's rows."""
+        wi, wo = rand((4, 8, 32), 9), rand((4, 6, 32), 10)
+        dwi_all, dwo_all = sgns_superbatch(wi, wo, 0.025)
+        dwi_one, dwo_one = sgns_superbatch(wi[1:2], wo[1:2], 0.025)
+        np.testing.assert_allclose(dwi_all[1:2], dwi_one, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(dwo_all[1:2], dwo_one, rtol=1e-5, atol=1e-7)
+
+    def test_lr_scales_linearly(self):
+        wi, wo = rand((2, 8, 32), 11), rand((2, 6, 32), 12)
+        d1, _ = sgns_superbatch(wi, wo, 0.01)
+        d2, _ = sgns_superbatch(wi, wo, 0.02)
+        np.testing.assert_allclose(2.0 * d1, d2, rtol=1e-4, atol=1e-7)
+
+    def test_shared_negative_reduction(self):
+        """dwo for a negative row must equal the SUM of per-input
+        contributions — the register/cache reduction the paper credits for
+        cutting model-update traffic (Sec. III-C)."""
+        wi, wo = rand((1, 8, 32), 13), rand((1, 6, 32), 14)
+        _, dwo = sgns_superbatch(wi, wo, 0.05)
+        acc = np.zeros((6, 32), np.float32)
+        for i in range(8):
+            _, dwo_i = ref.sgns_window_grads(wi[0, i : i + 1], wo[0], 0.05)
+            acc += np.asarray(dwo_i)
+        np.testing.assert_allclose(dwo[0], acc, rtol=1e-4, atol=1e-6)
+
+
+class TestVmemFootprint:
+    def test_paper_config_fits_easily(self):
+        """DESIGN.md §Hardware-Adaptation: one grid step's working set at
+        paper parameters is tiny relative to a 16 MB VMEM."""
+        assert vmem_bytes(b=16, s=6, d=300) < 128 * 1024
+
+    def test_footprint_formula(self):
+        assert vmem_bytes(b=1, s=1, d=1) == 4 * (2 * 2 + 2)

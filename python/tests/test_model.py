@@ -1,0 +1,121 @@
+"""Layer-2 tests: the train step variants, the full-softmax reference, and
+the AOT lowering path (HLO text generation + manifest geometry)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def rand(shape, seed, scale=0.1):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+class TestStepVariants:
+    def test_pallas_and_jnp_steps_agree(self):
+        wi, wo = rand((8, 16, 64), 0), rand((8, 6, 64), 1)
+        p = model.step_pallas(wi, wo, 0.025)
+        j = model.step_jnp(wi, wo, 0.025)
+        np.testing.assert_allclose(p[0], j[0], rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(p[1], j[1], rtol=1e-5, atol=1e-6)
+
+    @given(
+        w=st.integers(1, 6),
+        b=st.integers(1, 16),
+        s=st.integers(2, 8),
+        d=st.sampled_from([4, 32, 300]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_agreement_sweep(self, w, b, s, d):
+        wi, wo = rand((w, b, d), 2), rand((w, s, d), 3)
+        p = model.step_pallas(wi, wo, 0.05)
+        j = model.step_jnp(wi, wo, 0.05)
+        np.testing.assert_allclose(p[0], j[0], rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(p[1], j[1], rtol=1e-4, atol=1e-6)
+
+    def test_shapes_helper(self):
+        shapes = model.shapes(4, 8, 6, 32)
+        assert shapes[0].shape == (4, 8, 32)
+        assert shapes[1].shape == (4, 6, 32)
+        assert shapes[2].shape == ()
+
+
+class TestSoftmaxReference:
+    """Negative sampling must approximate the full-softmax gradient
+    direction (Eq. 2 vs Eq. 3 of the paper)."""
+
+    def test_negative_sampling_aligns_with_softmax(self):
+        v, d, b = 50, 16, 4
+        m_out = rand((v, d), 4)
+        wi = rand((b, d), 5)
+        target = jnp.int32(7)
+        dwi_sm, _ = model.softmax_step(wi, m_out, target, 1.0)
+
+        # Average many negative-sampling gradient estimates.
+        acc = jnp.zeros_like(wi)
+        k = jax.random.PRNGKey(6)
+        n_est = 200
+        for i in range(n_est):
+            k, sub = jax.random.split(k)
+            negs = jax.random.randint(sub, (5,), 0, v)
+            outs = jnp.concatenate([jnp.array([7]), negs])
+            wo = m_out[outs]
+            dwi, _ = ref.sgns_window_grads(wi, wo, 1.0)
+            acc = acc + dwi
+        acc = acc / n_est
+
+        # Cosine between the flattened gradients should be clearly positive.
+        cos = jnp.vdot(acc, dwi_sm) / (
+            jnp.linalg.norm(acc) * jnp.linalg.norm(dwi_sm) + 1e-9
+        )
+        assert float(cos) > 0.5, f"cos={float(cos)}"
+
+    def test_softmax_step_shapes(self):
+        v, d, b = 20, 8, 3
+        dwi, dm = model.softmax_step(
+            rand((b, d), 7), rand((v, d), 8), jnp.int32(3), 0.1
+        )
+        assert dwi.shape == (b, d)
+        assert dm.shape == (v, d)
+
+
+class TestAotLowering:
+    def test_hlo_text_is_parseable_hlo(self):
+        text = aot.lower_variant("pallas", 2, 4, 3, 8)
+        assert "HloModule" in text
+        assert "f32[2,4,8]" in text  # wi param shape
+        assert "f32[2,3,8]" in text  # wo param shape
+
+    def test_jnp_variant_lowers_too(self):
+        text = aot.lower_variant("jnp", 2, 4, 3, 8)
+        assert "HloModule" in text
+
+    def test_variant_table_geometry_consistent(self):
+        for name, kind, w, b, s, d in aot.VARIANTS:
+            assert kind in aot.STEP_FNS
+            assert all(x > 0 for x in (w, b, s, d))
+            assert f"w{w}" in name and f"d{d}" in name
+
+    def test_deterministic_lowering(self):
+        a = aot.lower_variant("pallas", 1, 2, 2, 4)
+        b = aot.lower_variant("pallas", 1, 2, 2, 4)
+        assert a == b
+
+
+class TestObjective:
+    def test_objective_improves_with_deltas(self):
+        wi, wo = rand((4, 8, 32), 9), rand((4, 6, 32), 10)
+        before = ref.sgns_objective(wi, wo)
+        dwi, dwo = model.step_pallas(wi, wo, 0.1)
+        after = ref.sgns_objective(wi + dwi, wo + dwo)
+        assert float(after) > float(before)
+
+    @pytest.mark.parametrize("s", [2, 6, 11])
+    def test_label_pattern(self, s):
+        lab = ref.label_row(s)
+        assert lab[0] == 1.0
+        assert jnp.sum(lab) == 1.0

@@ -1,0 +1,97 @@
+//! Fig. 3 — thread scalability of the original word2vec vs our scheme on
+//! a dual-socket Broadwell (paper Sec. IV-B).
+//!
+//! What is REAL here: single-thread throughput of each back-end, measured
+//! on this box (the paper's 1T speedup claim, ~2.6×), plus honest
+//! multi-thread measurements (this box exposes one vCPU, so they are flat
+//! — reported anyway for transparency).  What is MODELLED: the 1–72
+//! thread curve, projected through the calibrated coherence model
+//! (rust/src/perfmodel/cache.rs), anchored on the paper's 1T rates; the
+//! measured ratio on this box validates the anchor gap.
+
+use pw2v::bench::{standard_workload, BenchTable};
+use pw2v::config::{Backend, TrainConfig};
+use pw2v::model::SharedModel;
+use pw2v::perfmodel::arch::broadwell;
+use pw2v::perfmodel::simulate::{fig3_series, fig3_thread_axis, FigParams};
+use pw2v::train;
+use pw2v::util::si;
+
+fn measure(backend: Backend, threads: usize, wl: &pw2v::bench::Workload) -> f64 {
+    let mut cfg = TrainConfig::default();
+    cfg.backend = backend;
+    cfg.threads = threads;
+    cfg.dim = 300;
+    cfg.sample = 1e-4;
+    let model = SharedModel::init(wl.vocab.len(), cfg.dim, cfg.seed);
+    let out = train::train(&cfg, &wl.corpus, &wl.vocab, &model).unwrap();
+    out.snapshot.words_per_sec()
+}
+
+fn main() -> anyhow::Result<()> {
+    let wl = standard_workload()?;
+    eprintln!(
+        "corpus: {} tokens, vocab {}",
+        wl.vocab.total_words(),
+        wl.vocab.len()
+    );
+
+    // Real measurements on this box.
+    let mut measured = BenchTable::new(
+        "fig3_measured_this_box",
+        &["threads", "original_wps", "ours_wps", "speedup"],
+    );
+    let hw_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut w1_scalar = 0.0;
+    let mut w1_gemm = 0.0;
+    for t in [1usize, 2, 4] {
+        if t > 2 * hw_threads {
+            break;
+        }
+        let s = measure(Backend::Scalar, t, &wl);
+        let g = measure(Backend::Gemm, t, &wl);
+        if t == 1 {
+            w1_scalar = s;
+            w1_gemm = g;
+        }
+        measured.row(vec![
+            t.to_string(),
+            si(s),
+            si(g),
+            format!("{:.2}x", g / s),
+        ]);
+    }
+    measured.finish()?;
+    println!(
+        "\nmeasured 1-thread speedup (paper claims 2.6x): {:.2}x",
+        w1_gemm / w1_scalar
+    );
+
+    // Modelled Fig. 3 curve: calibrated coherence model, anchored at the
+    // paper's Broadwell 1T rates (our measured RATIO validates the gap;
+    // absolute per-core speed of this vCPU differs from a 2.3 GHz BDW).
+    let bdw = broadwell();
+    let p = FigParams::default();
+    let axis = fig3_thread_axis(&bdw);
+    let (scalar_curve, gemm_curve) =
+        fig3_series(&bdw, &p, 70_000.0, 182_000.0, &axis);
+    let mut modelled = BenchTable::new(
+        "fig3_modelled_bdw",
+        &["threads", "original_wps", "ours_wps", "speedup"],
+    );
+    for (s, g) in scalar_curve.iter().zip(&gemm_curve) {
+        modelled.row(vec![
+            s.x.to_string(),
+            si(s.words_per_sec),
+            si(g.words_per_sec),
+            format!("{:.2}x", g.words_per_sec / s.words_per_sec),
+        ]);
+    }
+    modelled.finish()?;
+    println!(
+        "\npaper anchors: original 1.6M words/s @72T, ours 5.8M words/s @72T (3.6x)"
+    );
+    Ok(())
+}

@@ -1,0 +1,177 @@
+//! Microbenchmarks of the hot-path primitives (the §Perf working set):
+//! GEMM kernels at the paper's shapes, level-1 ops, negative-sampler
+//! implementations, and the PJRT per-call overhead that motivates
+//! superbatching.
+
+use pw2v::bench::{time, BenchTable};
+use pw2v::corpus::vocab::Vocab;
+use pw2v::linalg::{axpy, dot, gemm_nn, gemm_nt, gemm_tn};
+use pw2v::runtime::{Manifest, Runtime};
+use pw2v::sampling::unigram::UnigramSampler;
+use pw2v::util::rng::Xoshiro256ss;
+use pw2v::util::si;
+use std::collections::HashMap;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Xoshiro256ss::new(seed);
+    (0..n).map(|_| r.next_f32() - 0.5).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    gemm_bench()?;
+    vecops_bench()?;
+    sampler_bench()?;
+    pjrt_call_overhead()?;
+    Ok(())
+}
+
+fn gemm_bench() -> anyhow::Result<()> {
+    let mut table = BenchTable::new(
+        "micro_gemm",
+        &["kernel", "shape", "ns_per_call", "gflops"],
+    );
+    // The paper's window shapes: B=16, S=6, D=300.
+    let (b, s, d) = (16usize, 6usize, 300usize);
+    let wi = randv(b * d, 1);
+    let wo = randv(s * d, 2);
+    let err = randv(b * s, 3);
+    let mut out_bs = vec![0.0f32; b * s];
+    let mut out_bd = vec![0.0f32; b * d];
+    let mut out_sd = vec![0.0f32; s * d];
+    let iters = 2000;
+
+    let st = time(100, iters, || {
+        gemm_nt(b, s, d, 1.0, &wi, &wo, 0.0, &mut out_bs);
+        std::hint::black_box(&out_bs);
+    });
+    let flops = 2.0 * b as f64 * s as f64 * d as f64;
+    table.row(vec![
+        "gemm_nt (logits)".into(),
+        format!("[{b},{d}]x[{d},{s}]"),
+        format!("{:.0}", st.median * 1e9),
+        format!("{:.2}", flops / st.median / 1e9),
+    ]);
+
+    let st = time(100, iters, || {
+        gemm_nn(b, d, s, 1.0, &err, &wo, 0.0, &mut out_bd);
+        std::hint::black_box(&out_bd);
+    });
+    table.row(vec![
+        "gemm_nn (dWi)".into(),
+        format!("[{b},{s}]x[{s},{d}]"),
+        format!("{:.0}", st.median * 1e9),
+        format!("{:.2}", flops / st.median / 1e9),
+    ]);
+
+    let st = time(100, iters, || {
+        gemm_tn(s, d, b, 1.0, &err, &wi, 0.0, &mut out_sd);
+        std::hint::black_box(&out_sd);
+    });
+    table.row(vec![
+        "gemm_tn (dWo)".into(),
+        format!("[{s},{b}]x[{b},{d}]"),
+        format!("{:.0}", st.median * 1e9),
+        format!("{:.2}", flops / st.median / 1e9),
+    ]);
+    table.finish()
+}
+
+fn vecops_bench() -> anyhow::Result<()> {
+    let mut table =
+        BenchTable::new("micro_vecops", &["op", "dim", "ns_per_call"]);
+    let d = 300usize;
+    let a = randv(d, 4);
+    let mut b = randv(d, 5);
+    let st = time(1000, 20_000, || {
+        std::hint::black_box(dot(&a, &b));
+    });
+    table.row(vec![
+        "dot".into(),
+        d.to_string(),
+        format!("{:.1}", st.median * 1e9),
+    ]);
+    let st = time(1000, 20_000, || {
+        axpy(0.01, &a, &mut b);
+        std::hint::black_box(&b);
+    });
+    table.row(vec![
+        "axpy".into(),
+        d.to_string(),
+        format!("{:.1}", st.median * 1e9),
+    ]);
+    table.finish()
+}
+
+fn sampler_bench() -> anyhow::Result<()> {
+    let counts: HashMap<String, u64> = (0..100_000usize)
+        .map(|i| (format!("w{i}"), (1_000_000_000 / (i + 1)) as u64))
+        .collect();
+    let vocab = Vocab::from_counts(counts, 1);
+    let table_sampler = UnigramSampler::table(&vocab, 0.75, 10_000_000);
+    let alias_sampler = UnigramSampler::alias(&vocab, 0.75);
+    let mut rng = Xoshiro256ss::new(7);
+    let mut out = BenchTable::new(
+        "micro_negative_sampler",
+        &["impl", "ns_per_sample"],
+    );
+    let st = time(2, 5, || {
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc = acc.wrapping_add(table_sampler.sample(&mut rng) as u64);
+        }
+        std::hint::black_box(acc);
+    });
+    out.row(vec![
+        "original table (1e7 entries)".into(),
+        format!("{:.1}", st.median * 1e3),
+    ]);
+    let st = time(2, 5, || {
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc = acc.wrapping_add(alias_sampler.sample(&mut rng) as u64);
+        }
+        std::hint::black_box(acc);
+    });
+    out.row(vec![
+        "alias method".into(),
+        format!("{:.1}", st.median * 1e3),
+    ]);
+    out.finish()
+}
+
+fn pjrt_call_overhead() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("micro_pjrt: artifacts not built, skipping");
+        return Ok(());
+    }
+    let m = Manifest::load(dir)?;
+    let rt = Runtime::cpu()?;
+    let mut table = BenchTable::new(
+        "micro_pjrt_call",
+        &["variant", "W", "us_per_call", "us_per_window", "windows_per_sec"],
+    );
+    for name in [
+        "paper_w16_b16_s6_d300",
+        "paper_w64_b16_s6_d300",
+        "paper_w256_b16_s6_d300",
+        "jnp_paper_w64_b16_s6_d300",
+    ] {
+        let v = m.by_name(name)?;
+        let exe = rt.compile_variant(&m, v)?;
+        let wi = randv(exe.wi_len(), 8);
+        let wo = randv(exe.wo_len(), 9);
+        let st = time(3, 20, || {
+            let r = exe.run(&wi, &wo, 0.025).unwrap();
+            std::hint::black_box(r);
+        });
+        table.row(vec![
+            name.into(),
+            v.w.to_string(),
+            format!("{:.0}", st.median * 1e6),
+            format!("{:.1}", st.median * 1e6 / v.w as f64),
+            si(v.w as f64 / st.median),
+        ]);
+    }
+    table.finish()
+}

@@ -1,0 +1,108 @@
+//! Table I — predictive accuracy of the original word2vec vs our scheme
+//! on three corpora of different sizes/statistics (paper Sec. IV-B).
+//!
+//! REAL end-to-end: three synthetic corpora (the text8 / 1B / 7.2B stand-
+//! ins at this box's scale — DESIGN.md §3), both back-ends trained from
+//! identical inits, evaluated on ground-truth similarity (Spearman ρ×100)
+//! and planted analogies (3CosAdd exact match).  The paper's CLAIM under
+//! reproduction: ours ≈ original accuracy on every corpus (Δ≈0), not the
+//! absolute numbers (different corpora).
+
+use pw2v::bench::{workload, BenchTable, Workload};
+use pw2v::config::{Backend, TrainConfig};
+use pw2v::corpus::synthetic::SyntheticConfig;
+use pw2v::eval;
+use pw2v::model::SharedModel;
+use pw2v::train;
+
+fn corpora() -> Vec<(&'static str, SyntheticConfig)> {
+    vec![
+        (
+            "text8-class (0.6M tok)",
+            SyntheticConfig {
+                vocab: 5_000,
+                tokens: 600_000,
+                clusters: 30,
+                beta: 5.0,
+                seed: 101,
+                ..SyntheticConfig::default()
+            },
+        ),
+        (
+            "1B-class (1.2M tok)",
+            SyntheticConfig {
+                vocab: 8_000,
+                tokens: 1_200_000,
+                clusters: 40,
+                beta: 5.0,
+                seed: 102,
+                ..SyntheticConfig::default()
+            },
+        ),
+        (
+            "7.2B-class (2.4M tok)",
+            SyntheticConfig {
+                vocab: 12_000,
+                tokens: 2_400_000,
+                clusters: 50,
+                beta: 5.0,
+                seed: 103,
+                ..SyntheticConfig::default()
+            },
+        ),
+    ]
+}
+
+pub fn train_and_eval(
+    wl: &Workload,
+    backend: Backend,
+    epochs: usize,
+) -> (f64, f64) {
+    let mut cfg = TrainConfig::default();
+    cfg.backend = backend;
+    cfg.dim = 100;
+    cfg.epochs = epochs;
+    cfg.sample = 1e-3;
+    cfg.lr = 0.05;
+    let model = SharedModel::init(wl.vocab.len(), cfg.dim, cfg.seed);
+    train::train(&cfg, &wl.corpus, &wl.vocab, &model).unwrap();
+    let sim_set = eval::gen_similarity_set(&wl.latent, 300, 7);
+    let ana_set = eval::gen_analogy_set(&wl.latent);
+    let sim = eval::eval_similarity(&sim_set, &wl.vocab, model.m_in());
+    let ana = eval::eval_analogy(&ana_set, &wl.vocab, model.m_in());
+    (sim.rho100, ana.accuracy100())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut table = BenchTable::new(
+        "table1_accuracy",
+        &[
+            "corpus",
+            "vocab",
+            "sim_original",
+            "sim_ours",
+            "ana_original",
+            "ana_ours",
+        ],
+    );
+    for (name, scfg) in corpora() {
+        let wl = workload(scfg)?;
+        eprintln!("training on {name} ...");
+        let (sim_o, ana_o) = train_and_eval(&wl, Backend::Scalar, 3);
+        let (sim_g, ana_g) = train_and_eval(&wl, Backend::Gemm, 3);
+        table.row(vec![
+            name.to_string(),
+            wl.vocab.len().to_string(),
+            format!("{sim_o:.1}"),
+            format!("{sim_g:.1}"),
+            format!("{ana_o:.1}"),
+            format!("{ana_g:.1}"),
+        ]);
+    }
+    table.finish()?;
+    println!(
+        "\npaper claim under reproduction: |sim_ours - sim_original| small on\n\
+         every corpus (paper Table I: 66.5 vs 63.4, 64.1 vs 64.0, 69.8 vs 70.0)"
+    );
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Table II — robustness of predictive accuracy as the vocabulary shrinks
+//! (paper Sec. IV-B): smaller vocabularies concentrate updates on fewer
+//! rows, raising Hogwild conflict rates; the claim is that BOTH schemes
+//! hold their accuracy all the way down to the smallest vocabulary.
+//!
+//! REAL end-to-end: one corpus, vocabulary truncated to the top-N words,
+//! both back-ends trained and evaluated per truncation.
+
+use pw2v::bench::{accuracy_workload, BenchTable};
+use pw2v::config::{Backend, TrainConfig};
+use pw2v::eval;
+use pw2v::model::SharedModel;
+use pw2v::train;
+
+fn main() -> anyhow::Result<()> {
+    let wl = accuracy_workload(201)?;
+    let full = wl.vocab.len();
+    // The paper sweeps 1.1M -> 50K (×22); we sweep the same ×22 span.
+    let sizes = vec![full, full / 2, full / 4, full / 10, full / 22];
+
+    let mut table = BenchTable::new(
+        "table2_vocab_sweep",
+        &[
+            "vocab_size",
+            "sim_original",
+            "sim_ours",
+            "ana_original",
+            "ana_ours",
+            "sim_pairs_covered",
+        ],
+    );
+    let sim_set = eval::gen_similarity_set(&wl.latent, 300, 7);
+    let ana_set = eval::gen_analogy_set(&wl.latent);
+
+    for &n in &sizes {
+        let vocab = wl.vocab.truncated(n);
+        eprintln!("vocab {n} ...");
+        let mut row = vec![n.to_string()];
+        let mut sims = Vec::new();
+        let mut anas = Vec::new();
+        let mut covered = 0usize;
+        for backend in [Backend::Scalar, Backend::Gemm] {
+            let mut cfg = TrainConfig::default();
+            cfg.backend = backend;
+            cfg.dim = 100;
+            cfg.epochs = 3;
+            cfg.sample = 1e-3;
+            cfg.lr = 0.05;
+            let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+            train::train(&cfg, &wl.corpus, &vocab, &model)?;
+            let sim = eval::eval_similarity(&sim_set, &vocab, model.m_in());
+            let ana = eval::eval_analogy(&ana_set, &vocab, model.m_in());
+            covered = sim.pairs_covered;
+            sims.push(sim.rho100);
+            anas.push(ana.accuracy100());
+        }
+        row.push(format!("{:.1}", sims[0]));
+        row.push(format!("{:.1}", sims[1]));
+        row.push(format!("{:.1}", anas[0]));
+        row.push(format!("{:.1}", anas[1]));
+        // Coverage context: test pairs are drawn over the FULL vocabulary,
+        // so tiny truncations evaluate on very few pairs (the paper's
+        // smallest vocab is 4.5% of full — same ratio as our last row).
+        row.push(covered.to_string());
+        table.row(row);
+    }
+    table.finish()?;
+    println!(
+        "\npaper claim under reproduction: ours tracks the original at every\n\
+         vocabulary size, including the smallest (paper Table II)"
+    );
+    Ok(())
+}

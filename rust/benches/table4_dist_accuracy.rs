@@ -1,0 +1,90 @@
+//! Table IV — predictive accuracy of distributed word2vec as the node
+//! count grows (paper Sec. IV-C).
+//!
+//! Entirely REAL: N replicas with separate models train on corpus shards
+//! with sub-model sync + node-scaled learning rates, and the merged model
+//! is evaluated on the ground-truth sets.  The paper's claim under
+//! reproduction: accuracy holds near the single-node baseline as N grows
+//! (within ~1 point up to large N), and the lr-scaling trick is what
+//! makes that possible (ablation row).
+
+use pw2v::bench::{accuracy_workload, BenchTable};
+use pw2v::config::TrainConfig;
+use pw2v::dist::{train_distributed, DistConfig};
+use pw2v::eval;
+use pw2v::model::SharedModel;
+use pw2v::train;
+
+fn main() -> anyhow::Result<()> {
+    let wl = accuracy_workload(301)?;
+    let sim_set = eval::gen_similarity_set(&wl.latent, 300, 7);
+    let ana_set = eval::gen_analogy_set(&wl.latent);
+
+    let mut cfg = TrainConfig::default();
+    cfg.dim = 100;
+    cfg.epochs = 3;
+    cfg.sample = 1e-3;
+    cfg.lr = 0.05;
+
+    // Single-node shared-memory baseline ("Original (N=1)" row).
+    let model = SharedModel::init(wl.vocab.len(), cfg.dim, cfg.seed);
+    let mut base_cfg = cfg.clone();
+    base_cfg.backend = pw2v::config::Backend::Scalar;
+    train::train(&base_cfg, &wl.corpus, &wl.vocab, &model)?;
+    let sim0 = eval::eval_similarity(&sim_set, &wl.vocab, model.m_in());
+    let ana0 = eval::eval_analogy(&ana_set, &wl.vocab, model.m_in());
+
+    let mut table = BenchTable::new(
+        "table4_dist_accuracy",
+        &["config", "similarity", "analogy"],
+    );
+    table.row(vec![
+        "original (N=1)".into(),
+        format!("{:.1}", sim0.rho100),
+        format!("{:.1}", ana0.accuracy100()),
+    ]);
+
+    for nodes in [1usize, 2, 4, 8] {
+        let mut dist = DistConfig::for_nodes(nodes);
+        dist.policy =
+            pw2v::dist::SyncPolicy::submodel_for_vocab(wl.vocab.len());
+        // Interval scaled to this corpus (paper scale / ~1000) and
+        // LINEARLY with N — the paper's Sec. IV-C "further increase model
+        // synchronization frequency" at high node counts (the ablation
+        // bench shows what happens without it).
+        dist.sync_interval = (120_000 / nodes as u64).max(10_000);
+        let out = train_distributed(&cfg, &dist, &wl.corpus, &wl.vocab)?;
+        let sim = eval::eval_similarity(&sim_set, &wl.vocab, out.model.m_in());
+        let ana = eval::eval_analogy(&ana_set, &wl.vocab, out.model.m_in());
+        table.row(vec![
+            format!("distributed N={nodes}"),
+            format!("{:.1}", sim.rho100),
+            format!("{:.1}", ana.accuracy100()),
+        ]);
+    }
+
+    // Ablation: N=4 WITHOUT the paper's lr scaling.
+    {
+        let mut dist = DistConfig::for_nodes(4);
+        dist.policy =
+            pw2v::dist::SyncPolicy::submodel_for_vocab(wl.vocab.len());
+        dist.sync_interval = 60_000;
+        dist.scale_lr = false;
+        let out = train_distributed(&cfg, &dist, &wl.corpus, &wl.vocab)?;
+        let sim = eval::eval_similarity(&sim_set, &wl.vocab, out.model.m_in());
+        let ana = eval::eval_analogy(&ana_set, &wl.vocab, out.model.m_in());
+        table.row(vec![
+            "N=4 without lr scaling (ablation)".into(),
+            format!("{:.1}", sim.rho100),
+            format!("{:.1}", ana.accuracy100()),
+        ]);
+    }
+
+    table.finish()?;
+    println!(
+        "\npaper claim under reproduction: distributed accuracy within ~1-2\n\
+         points of single-node out to large N (paper Table IV: 64.1 -> 63.2\n\
+         similarity from N=1 to N=32 on BDW)"
+    );
+    Ok(())
+}

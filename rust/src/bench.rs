@@ -1,0 +1,179 @@
+//! Bench harness (criterion substitute; DESIGN.md §3): timing statistics,
+//! aligned table printing matched to the paper's table/figure layouts, CSV
+//! emission under `bench_results/`, and the shared synthetic workload
+//! cache used by every bench binary.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::corpus::synthetic::{LatentModel, SyntheticConfig};
+use crate::corpus::vocab::Vocab;
+use crate::util::csv::CsvWriter;
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` throwaway runs.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    Stats {
+        iters: n,
+        min: samples[0],
+        median: samples[n / 2],
+        mean: samples.iter().sum::<f64>() / n as f64,
+        max: samples[n - 1],
+    }
+}
+
+/// An aligned results table that also lands in `bench_results/*.csv`.
+pub struct BenchTable {
+    name: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl BenchTable {
+    pub fn new(name: &str, header: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, fields: Vec<String>) {
+        assert_eq!(fields.len(), self.header.len(), "row arity");
+        self.rows.push(fields);
+    }
+
+    /// Print aligned to stdout and write `bench_results/<name>.csv`.
+    pub fn finish(self) -> anyhow::Result<()> {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, f) in r.iter().enumerate() {
+                widths[i] = widths[i].max(f.len());
+            }
+        }
+        println!("\n== {} ==", self.name);
+        let fmt_row = |fields: &[String]| {
+            fields
+                .iter()
+                .enumerate()
+                .map(|(i, f)| format!("{:<w$}", f, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.header));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for r in &self.rows {
+            println!("{}", fmt_row(r));
+        }
+        let path = Path::new("bench_results").join(format!("{}.csv", self.name));
+        let headers: Vec<&str> = self.header.iter().map(|s| s.as_str()).collect();
+        let mut csv = CsvWriter::create(&path, &headers)?;
+        for r in &self.rows {
+            csv.row(r)?;
+        }
+        csv.flush()?;
+        println!("(csv: {})", path.display());
+        Ok(())
+    }
+}
+
+/// A cached synthetic workload: corpus file + vocab + latent ground truth.
+pub struct Workload {
+    pub corpus: PathBuf,
+    pub vocab: Vocab,
+    pub latent: LatentModel,
+}
+
+/// Generate (or reuse from `bench_data/`) the corpus for `cfg`.
+pub fn workload(cfg: SyntheticConfig) -> anyhow::Result<Workload> {
+    std::fs::create_dir_all("bench_data")?;
+    let path = PathBuf::from(format!(
+        "bench_data/corpus_v{}_t{}_c{}_s{}.txt",
+        cfg.vocab, cfg.tokens, cfg.clusters, cfg.seed
+    ));
+    let latent = LatentModel::new(cfg);
+    if !path.exists() {
+        eprintln!("generating workload {} ...", path.display());
+        latent.write_corpus(&path)?;
+    }
+    let vocab = Vocab::build_from_file(&path, 1)?;
+    Ok(Workload {
+        corpus: path,
+        vocab,
+        latent,
+    })
+}
+
+/// The standard bench corpus (stands in for the 1B-word benchmark at this
+/// box's scale): Zipf vocabulary ~20K retained words, 2M tokens.
+pub fn standard_workload() -> anyhow::Result<Workload> {
+    workload(SyntheticConfig {
+        vocab: 20_000,
+        tokens: 2_000_000,
+        clusters: 50,
+        ..SyntheticConfig::default()
+    })
+}
+
+/// A smaller corpus for convergence-heavy (accuracy) benches.
+pub fn accuracy_workload(seed: u64) -> anyhow::Result<Workload> {
+    workload(SyntheticConfig {
+        vocab: 8_000,
+        tokens: 1_200_000,
+        clusters: 40,
+        beta: 5.0,
+        seed,
+        ..SyntheticConfig::default()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reports_ordered_stats() {
+        let mut x = 0u64;
+        let s = time(1, 5, || {
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.mean > 0.0);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = BenchTable::new("pw2v_test_table", &["a", "b"]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.finish().unwrap();
+        let csv = std::fs::read_to_string("bench_results/pw2v_test_table.csv")
+            .unwrap();
+        assert!(csv.contains("x,1"));
+        std::fs::remove_file("bench_results/pw2v_test_table.csv").ok();
+    }
+}

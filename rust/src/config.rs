@@ -1,0 +1,302 @@
+//! Training configuration.
+//!
+//! Defaults follow the paper's 1B-benchmark setting (Sec. IV-A): `dim=300,
+//! negative=5, window=5, sample=1e-4`, starting `lr=0.025` (the original
+//! word2vec skip-gram default), input batch `B=16` (the paper's "10–20"),
+//! superbatch `W=64` (our PJRT call-amortisation knob, ablated in
+//! `benches/ablations.rs`).
+//!
+//! Configs load from a simple `key = value` file (TOML-subset; the full
+//! toml crate is not vendored offline) and/or CLI overrides, so every
+//! example and bench is driven by the same config surface.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+use std::str::FromStr;
+
+use crate::util::args::Args;
+
+/// Which trainer back-end executes the SGNS updates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Mikolov's original Hogwild scalar scheme (Algorithm 1) — level-1 BLAS.
+    Scalar,
+    /// BIDMach's scheme (paper Sec. III-D): separate positive/negative
+    /// matrix-vector passes — level-2 BLAS.
+    Bidmach,
+    /// The paper's contribution: minibatched, shared-negative GEMM scheme —
+    /// level-3 BLAS, native rust kernels.
+    Gemm,
+    /// Same scheme, executing the AOT-compiled JAX/Pallas artifact through
+    /// the PJRT CPU client.
+    Pjrt,
+}
+
+impl FromStr for Backend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" | "original" => Ok(Backend::Scalar),
+            "bidmach" => Ok(Backend::Bidmach),
+            "gemm" | "ours" => Ok(Backend::Gemm),
+            "pjrt" | "xla" => Ok(Backend::Pjrt),
+            other => anyhow::bail!(
+                "unknown backend '{other}' (scalar|bidmach|gemm|pjrt)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Backend::Scalar => "scalar",
+            Backend::Bidmach => "bidmach",
+            Backend::Gemm => "gemm",
+            Backend::Pjrt => "pjrt",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Learning-rate schedule selector (paper Sec. III-E ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LrSchedule {
+    /// Original word2vec: linear decay with corpus progress.
+    Linear,
+    /// Paper's distributed trick: scaled start, sharper decay with node count.
+    DistScaled,
+    /// AdaGrad (rejected by the paper for memory/bandwidth cost; implemented
+    /// for the ablation).
+    Adagrad,
+    /// RMSProp (ditto).
+    Rmsprop,
+}
+
+impl FromStr for LrSchedule {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" => Ok(LrSchedule::Linear),
+            "dist" | "dist-scaled" => Ok(LrSchedule::DistScaled),
+            "adagrad" => Ok(LrSchedule::Adagrad),
+            "rmsprop" => Ok(LrSchedule::Rmsprop),
+            other => anyhow::bail!(
+                "unknown lr schedule '{other}' (linear|dist|adagrad|rmsprop)"
+            ),
+        }
+    }
+}
+
+/// Full training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Embedding dimension D.
+    pub dim: usize,
+    /// Max context window c (actual window per position is 1..=c, drawn
+    /// uniformly, as in the original code).
+    pub window: usize,
+    /// Number of negative samples K.
+    pub negative: usize,
+    /// Frequent-word subsampling threshold t (0 disables).
+    pub sample: f32,
+    /// Discard words with corpus count below this.
+    pub min_count: u64,
+    /// Starting learning rate alpha.
+    pub lr: f32,
+    /// Floor for the decayed learning rate, as a fraction of `lr`.
+    pub lr_min_frac: f32,
+    /// Training epochs over the corpus.
+    pub epochs: usize,
+    /// Worker threads (shared-memory parallelism).
+    pub threads: usize,
+    /// Input batch size B: max context words batched per window.
+    pub batch: usize,
+    /// Superbatch width W: windows per kernel/artifact call.
+    pub superbatch: usize,
+    /// Trainer back-end.
+    pub backend: Backend,
+    /// LR schedule.
+    pub lr_schedule: LrSchedule,
+    /// RNG seed.
+    pub seed: u64,
+    /// Directory holding AOT artifacts (for `Backend::Pjrt`).
+    pub artifacts_dir: String,
+    /// Unigram table exponent (0.75 in the paper/original).
+    pub unigram_power: f32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            dim: 300,
+            window: 5,
+            negative: 5,
+            sample: 1e-4,
+            min_count: 5,
+            lr: 0.025,
+            lr_min_frac: 1e-4,
+            epochs: 1,
+            threads: 1,
+            batch: 16,
+            superbatch: 64,
+            backend: Backend::Gemm,
+            lr_schedule: LrSchedule::Linear,
+            seed: 1,
+            artifacts_dir: "artifacts".to_string(),
+            unigram_power: 0.75,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Number of output rows per window: 1 positive + K shared negatives.
+    pub fn samples(&self) -> usize {
+        1 + self.negative
+    }
+
+    /// A small config for unit tests: tiny dims, deterministic.
+    pub fn test_tiny() -> Self {
+        Self {
+            dim: 32,
+            window: 3,
+            negative: 5,
+            sample: 0.0,
+            min_count: 1,
+            epochs: 1,
+            batch: 8,
+            superbatch: 4,
+            ..Self::default()
+        }
+    }
+
+    /// Apply `--key value` CLI overrides (shared across all subcommands).
+    pub fn apply_args(&mut self, a: &Args) -> anyhow::Result<()> {
+        self.dim = a.get("dim", self.dim)?;
+        self.window = a.get("window", self.window)?;
+        self.negative = a.get("negative", self.negative)?;
+        self.sample = a.get("sample", self.sample)?;
+        self.min_count = a.get("min-count", self.min_count)?;
+        self.lr = a.get("lr", self.lr)?;
+        self.epochs = a.get("epochs", self.epochs)?;
+        self.threads = a.get("threads", self.threads)?;
+        self.batch = a.get("batch", self.batch)?;
+        self.superbatch = a.get("superbatch", self.superbatch)?;
+        self.seed = a.get("seed", self.seed)?;
+        if let Some(b) = a.opt::<Backend>("backend")? {
+            self.backend = b;
+        }
+        if let Some(l) = a.opt::<LrSchedule>("lr-schedule")? {
+            self.lr_schedule = l;
+        }
+        if let Some(d) = a.opt::<String>("artifacts-dir")? {
+            self.artifacts_dir = d;
+        }
+        self.validate()
+    }
+
+    /// Load `key = value` lines (TOML subset: comments with `#`, no
+    /// sections) and apply them over the current values.
+    pub fn load_file<P: AsRef<Path>>(&mut self, path: P) -> anyhow::Result<()> {
+        let text = std::fs::read_to_string(&path)?;
+        let kv = parse_kv(&text)?;
+        let mut flat: Vec<String> = Vec::new();
+        for (k, v) in kv {
+            flat.push(format!("--{k}"));
+            flat.push(v);
+        }
+        self.apply_args(&Args::parse(flat))
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.dim > 0, "dim must be > 0");
+        anyhow::ensure!(self.window > 0, "window must be > 0");
+        anyhow::ensure!(self.negative > 0, "negative must be > 0");
+        anyhow::ensure!(self.batch > 0, "batch must be > 0");
+        anyhow::ensure!(self.superbatch > 0, "superbatch must be > 0");
+        anyhow::ensure!(self.threads > 0, "threads must be > 0");
+        anyhow::ensure!(self.epochs > 0, "epochs must be > 0");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.sample),
+            "sample must be in [0,1]"
+        );
+        anyhow::ensure!(self.lr > 0.0, "lr must be > 0");
+        Ok(())
+    }
+}
+
+/// Parse `key = value` lines; `#` starts a comment; quotes optional.
+pub fn parse_kv(text: &str) -> anyhow::Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("config line {}: expected key = value", lineno + 1)
+        })?;
+        let v = v.trim().trim_matches('"').trim_matches('\'');
+        out.insert(k.trim().to_string(), v.to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = TrainConfig::default();
+        assert_eq!(c.dim, 300);
+        assert_eq!(c.negative, 5);
+        assert_eq!(c.window, 5);
+        assert!((c.sample - 1e-4).abs() < 1e-9);
+        assert_eq!(c.samples(), 6);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = TrainConfig::default();
+        let a = Args::parse(
+            "--dim 64 --backend scalar --lr 0.05 --lr-schedule adagrad"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.dim, 64);
+        assert_eq!(c.backend, Backend::Scalar);
+        assert_eq!(c.lr_schedule, LrSchedule::Adagrad);
+    }
+
+    #[test]
+    fn kv_file_parsing() {
+        let kv = parse_kv("dim = 128  # comment\nbackend = \"gemm\"\n\n# x\n")
+            .unwrap();
+        assert_eq!(kv["dim"], "128");
+        assert_eq!(kv["backend"], "gemm");
+    }
+
+    #[test]
+    fn kv_rejects_bad_line() {
+        assert!(parse_kv("not a kv line").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_zero_dim() {
+        let mut c = TrainConfig::default();
+        c.dim = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn backend_parsing() {
+        assert_eq!("ours".parse::<Backend>().unwrap(), Backend::Gemm);
+        assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Pjrt);
+        assert!("nope".parse::<Backend>().is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Corpus substrate: vocabulary, streaming readers, subsampling, sharding,
+//! and the synthetic latent-model corpus generator that substitutes for the
+//! paper's text8 / One-Billion-Words / 7.2B-word corpora (DESIGN.md §3, §6).
+
+pub mod reader;
+pub mod shard;
+pub mod subsample;
+pub mod synthetic;
+pub mod vocab;
+
+pub use reader::{SentenceReader, MAX_SENTENCE_LEN};
+pub use subsample::Subsampler;
+pub use synthetic::{LatentModel, SyntheticConfig};
+pub use vocab::Vocab;

@@ -1,0 +1,198 @@
+//! Streaming corpus reader: whitespace tokens → id sentences.
+//!
+//! Mirrors the original word2vec's reading discipline: a "sentence" is a
+//! newline-delimited line, clipped at [`MAX_SENTENCE_LEN`] tokens;
+//! out-of-vocabulary tokens are dropped.  Readers can be restricted to a
+//! byte range of the file, which is how both the multi-thread trainer and
+//! the distributed sharder partition the corpus (each worker seeks to its
+//! range and starts at the next line boundary, as the C code does).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek, SeekFrom};
+use std::path::Path;
+
+use super::vocab::Vocab;
+
+/// The original's MAX_SENTENCE_LENGTH.
+pub const MAX_SENTENCE_LEN: usize = 1000;
+
+/// Streaming sentence iterator over a byte range of a tokenized file.
+pub struct SentenceReader<'v> {
+    reader: BufReader<File>,
+    vocab: &'v Vocab,
+    /// Read stops once the underlying offset passes this.
+    end: u64,
+    pos: u64,
+    line: String,
+    done: bool,
+}
+
+impl<'v> SentenceReader<'v> {
+    /// Read the whole file.
+    pub fn open<P: AsRef<Path>>(path: P, vocab: &'v Vocab) -> anyhow::Result<Self> {
+        let len = std::fs::metadata(&path)?.len();
+        Self::open_range(path, vocab, 0, len)
+    }
+
+    /// Read `[start, end)`; if `start > 0`, skip to the next line boundary
+    /// (the partial first line belongs to the previous shard).
+    pub fn open_range<P: AsRef<Path>>(
+        path: P,
+        vocab: &'v Vocab,
+        start: u64,
+        end: u64,
+    ) -> anyhow::Result<Self> {
+        let mut f = File::open(&path)?;
+        f.seek(SeekFrom::Start(start))?;
+        let mut reader = BufReader::with_capacity(1 << 20, f);
+        let mut pos = start;
+        if start > 0 {
+            let mut skipped = String::new();
+            let n = reader.read_line(&mut skipped)?;
+            pos += n as u64;
+        }
+        Ok(Self {
+            reader,
+            vocab,
+            end,
+            pos,
+            line: String::new(),
+            done: false,
+        })
+    }
+
+    /// Next sentence as vocabulary ids (OOV dropped, clipped). `None` at
+    /// end of range.  Empty sentences are skipped.
+    pub fn next_sentence(&mut self) -> anyhow::Result<Option<Vec<u32>>> {
+        loop {
+            if self.done || self.pos >= self.end {
+                return Ok(None);
+            }
+            self.line.clear();
+            let n = self.reader.read_line(&mut self.line)?;
+            if n == 0 {
+                self.done = true;
+                return Ok(None);
+            }
+            self.pos += n as u64;
+            let mut sent = Vec::new();
+            for tok in self.line.split_ascii_whitespace() {
+                if let Some(id) = self.vocab.id(tok) {
+                    sent.push(id);
+                    if sent.len() >= MAX_SENTENCE_LEN {
+                        break;
+                    }
+                }
+            }
+            if !sent.is_empty() {
+                return Ok(Some(sent));
+            }
+        }
+    }
+
+    /// Drain the remainder of the range into a Vec (tests/small corpora).
+    pub fn collect_sentences(mut self) -> anyhow::Result<Vec<Vec<u32>>> {
+        let mut out = Vec::new();
+        while let Some(s) = self.next_sentence()? {
+            out.push(s);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(name: &str, content: &str) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(name);
+        let mut f = File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn reads_sentences_as_ids() {
+        let path = write_tmp("pw2v_reader1.txt", "a b c\nb c d\n");
+        let vocab = Vocab::build("a b b c c c d".split_whitespace(), 1);
+        let r = SentenceReader::open(&path, &vocab).unwrap();
+        let sents = r.collect_sentences().unwrap();
+        assert_eq!(sents.len(), 2);
+        assert_eq!(sents[0].len(), 3);
+        // c is most frequent -> id 0; b -> 1; a and d count 1.
+        assert_eq!(vocab.word(0), "c");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn drops_oov() {
+        let path = write_tmp("pw2v_reader2.txt", "a UNKNOWN b\n");
+        let vocab = Vocab::build("a b".split_whitespace(), 1);
+        let r = SentenceReader::open(&path, &vocab).unwrap();
+        let sents = r.collect_sentences().unwrap();
+        assert_eq!(sents[0].len(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn skips_empty_lines() {
+        let path = write_tmp("pw2v_reader3.txt", "\n\na b\n\n");
+        let vocab = Vocab::build("a b".split_whitespace(), 1);
+        let sents = SentenceReader::open(&path, &vocab)
+            .unwrap()
+            .collect_sentences()
+            .unwrap();
+        assert_eq!(sents.len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ranges_partition_the_file() {
+        // Every line must be seen exactly once across disjoint ranges.
+        let mut content = String::new();
+        for i in 0..100 {
+            content.push_str(&format!("w{} w{}\n", i % 7, (i + 1) % 7));
+        }
+        let path = write_tmp("pw2v_reader4.txt", &content);
+        let tokens: Vec<String> =
+            (0..7).map(|i| format!("w{i}")).collect();
+        let vocab = Vocab::build(tokens.iter().map(|s| s.as_str()), 1);
+        let len = std::fs::metadata(&path).unwrap().len();
+
+        let whole = SentenceReader::open(&path, &vocab)
+            .unwrap()
+            .collect_sentences()
+            .unwrap();
+
+        let mut parts = Vec::new();
+        let nshards = 3u64;
+        for s in 0..nshards {
+            let start = len * s / nshards;
+            let end = len * (s + 1) / nshards;
+            let got = SentenceReader::open_range(&path, &vocab, start, end)
+                .unwrap()
+                .collect_sentences()
+                .unwrap();
+            parts.extend(got);
+        }
+        assert_eq!(parts.len(), whole.len());
+        assert_eq!(parts, whole);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn clips_very_long_sentences() {
+        let long: String = std::iter::repeat("a ")
+            .take(2 * MAX_SENTENCE_LEN)
+            .collect();
+        let path = write_tmp("pw2v_reader5.txt", &long);
+        let vocab = Vocab::build(["a"], 1);
+        let sents = SentenceReader::open(&path, &vocab)
+            .unwrap()
+            .collect_sentences()
+            .unwrap();
+        assert_eq!(sents[0].len(), MAX_SENTENCE_LEN);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,106 @@
+//! Corpus sharding for data-parallel training (paper Sec. III-E): the
+//! training file is partitioned into equal byte ranges, one per worker
+//! thread (shared memory) or per node (distributed).  Ranges are aligned
+//! to line boundaries by the reader, so every sentence belongs to exactly
+//! one shard.
+
+use std::path::Path;
+
+/// A byte range `[start, end)` of the corpus file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub start: u64,
+    pub end: u64,
+}
+
+impl Shard {
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
+/// Split a file into `n` equal byte ranges.
+pub fn shards_for_file<P: AsRef<Path>>(path: P, n: usize) -> anyhow::Result<Vec<Shard>> {
+    let len = std::fs::metadata(&path)?.len();
+    Ok(shards_for_len(len, n))
+}
+
+/// Split `len` bytes into `n` contiguous ranges differing by at most 1 byte.
+pub fn shards_for_len(len: u64, n: usize) -> Vec<Shard> {
+    assert!(n > 0);
+    (0..n as u64)
+        .map(|i| Shard {
+            index: i as usize,
+            start: len * i / n as u64,
+            end: len * (i + 1) / n as u64,
+        })
+        .collect()
+}
+
+/// Two-level sharding for the distributed trainer: corpus → node shard →
+/// per-thread subshards within the node's range.
+pub fn subshards(shard: Shard, threads: usize) -> Vec<Shard> {
+    assert!(threads > 0);
+    let len = shard.len();
+    (0..threads as u64)
+        .map(|i| Shard {
+            index: shard.index * threads + i as usize,
+            start: shard.start + len * i / threads as u64,
+            end: shard.start + len * (i + 1) / threads as u64,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_whole_range_disjointly() {
+        for n in [1usize, 2, 3, 7, 32] {
+            let s = shards_for_len(1_000_003, n);
+            assert_eq!(s.len(), n);
+            assert_eq!(s[0].start, 0);
+            assert_eq!(s[n - 1].end, 1_000_003);
+            for w in s.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            let total: u64 = s.iter().map(|x| x.len()).sum();
+            assert_eq!(total, 1_000_003);
+        }
+    }
+
+    #[test]
+    fn balanced_within_one_byte() {
+        let s = shards_for_len(100, 7);
+        let min = s.iter().map(|x| x.len()).min().unwrap();
+        let max = s.iter().map(|x| x.len()).max().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn subshards_nest() {
+        let node = Shard {
+            index: 2,
+            start: 100,
+            end: 200,
+        };
+        let subs = subshards(node, 4);
+        assert_eq!(subs[0].start, 100);
+        assert_eq!(subs[3].end, 200);
+        for w in subs.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+
+    #[test]
+    fn empty_file_gives_empty_shards() {
+        let s = shards_for_len(0, 4);
+        assert!(s.iter().all(|x| x.is_empty()));
+    }
+}

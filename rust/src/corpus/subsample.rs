@@ -1,0 +1,127 @@
+//! Frequent-word subsampling (Mikolov et al. 2013, Eq. 5 as implemented in
+//! the C code): word w with corpus count `cn` is KEPT with probability
+//!
+//!   p_keep = (sqrt(cn / (sample * T)) + 1) * (sample * T) / cn
+//!
+//! where `T` is the total token count.  This aggressively discards the most
+//! frequent words, which both speeds training and improves accuracy; the
+//! paper uses `sample = 1e-4` throughout.
+
+use super::vocab::Vocab;
+use crate::util::rng::Xoshiro256ss;
+
+#[derive(Clone, Debug)]
+pub struct Subsampler {
+    /// Per-word keep probability (clamped to 1).
+    keep: Vec<f32>,
+    enabled: bool,
+}
+
+impl Subsampler {
+    pub fn new(vocab: &Vocab, sample: f32) -> Self {
+        if sample <= 0.0 || vocab.is_empty() {
+            return Self {
+                keep: vec![1.0; vocab.len()],
+                enabled: false,
+            };
+        }
+        let t = sample as f64 * vocab.total_words() as f64;
+        let keep = vocab
+            .counts()
+            .iter()
+            .map(|&cn| {
+                let cn = cn as f64;
+                (((cn / t).sqrt() + 1.0) * t / cn).min(1.0) as f32
+            })
+            .collect();
+        Self {
+            keep,
+            enabled: true,
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn keep_prob(&self, id: u32) -> f32 {
+        self.keep[id as usize]
+    }
+
+    /// Bernoulli decision for one occurrence of `id`.
+    #[inline]
+    pub fn keep(&self, id: u32, rng: &mut Xoshiro256ss) -> bool {
+        !self.enabled || rng.next_f32() < self.keep[id as usize]
+    }
+
+    /// Filter a sentence in place.
+    pub fn filter(&self, sentence: &mut Vec<u32>, rng: &mut Xoshiro256ss) {
+        if self.enabled {
+            sentence.retain(|&id| rng.next_f32() < self.keep[id as usize]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zipf_vocab(v: usize) -> Vocab {
+        // counts ~ 1e6 / rank
+        let counts: std::collections::HashMap<String, u64> = (0..v)
+            .map(|i| (format!("w{i}"), (1_000_000 / (i + 1)) as u64))
+            .collect();
+        Vocab::from_counts(counts, 1)
+    }
+
+    #[test]
+    fn disabled_when_sample_zero() {
+        let v = zipf_vocab(10);
+        let s = Subsampler::new(&v, 0.0);
+        assert!(!s.enabled());
+        let mut rng = Xoshiro256ss::new(1);
+        assert!((0..10u32).all(|i| s.keep(i, &mut rng)));
+    }
+
+    #[test]
+    fn frequent_words_discarded_more() {
+        let v = zipf_vocab(1000);
+        let s = Subsampler::new(&v, 1e-4);
+        // Monotone: keep prob must not decrease with rank (rarer => keep more).
+        for i in 1..1000u32 {
+            assert!(
+                s.keep_prob(i) >= s.keep_prob(i - 1) - 1e-6,
+                "rank {i}"
+            );
+        }
+        // The most frequent word must be heavily subsampled.
+        assert!(s.keep_prob(0) < 0.3, "keep(0) = {}", s.keep_prob(0));
+        // Rare words must be untouched.
+        assert_eq!(s.keep_prob(999), 1.0);
+    }
+
+    #[test]
+    fn empirical_rate_matches_probability() {
+        let v = zipf_vocab(100);
+        let s = Subsampler::new(&v, 1e-3);
+        let mut rng = Xoshiro256ss::new(42);
+        let n = 200_000;
+        let kept = (0..n).filter(|_| s.keep(0, &mut rng)).count();
+        let want = s.keep_prob(0) as f64;
+        let got = kept as f64 / n as f64;
+        assert!((got - want).abs() < 0.01, "got {got} want {want}");
+    }
+
+    #[test]
+    fn filter_removes_in_place() {
+        let v = zipf_vocab(100);
+        let s = Subsampler::new(&v, 1e-5); // very aggressive
+        let mut rng = Xoshiro256ss::new(7);
+        let mut sent: Vec<u32> = (0..100).map(|i| i % 5).collect();
+        let before = sent.len();
+        s.filter(&mut sent, &mut rng);
+        assert!(sent.len() < before);
+    }
+}

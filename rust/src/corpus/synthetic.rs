@@ -1,0 +1,470 @@
+//! Synthetic corpus with **known ground truth** — the substitute for the
+//! paper's text8 / One-Billion-Words / 7.2B-word corpora (no network in
+//! this environment; DESIGN.md §3, §6).
+//!
+//! Generative model (distributional-hypothesis by construction):
+//!
+//! * every word `w` gets a latent unit vector `z_w ∈ R^L`, organised into
+//!   `C` clusters; a set of `R` relation offsets plants analogy structure
+//!   (`z_b ≈ normalize(z_a + r)` for planted pairs);
+//! * unigram frequencies are Zipf(s) (matching real-corpus statistics the
+//!   paper's throughput depends on);
+//! * each sentence draws a topic cluster, then emits tokens from
+//!   `p(w | c) ∝ unigram(w) · exp(β ⟨z_w, center_c⟩)`, mixed with global
+//!   unigram noise.
+//!
+//! Co-occurrence statistics are therefore log-linear in the latent space,
+//! which is exactly the structure SGNS factorises (Levy & Goldberg 2014) —
+//! so a correct trainer recovers embeddings affinely related to `z`, the
+//! planted similarities rank-correlate with model cosines (Table I/II/IV
+//! protocol), and planted analogies are answerable by 3CosAdd.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::sampling::alias::AliasTable;
+use crate::util::rng::Xoshiro256ss;
+
+/// Parameters of the generative model.
+#[derive(Clone, Debug)]
+pub struct SyntheticConfig {
+    /// Vocabulary size V.
+    pub vocab: usize,
+    /// Tokens to emit.
+    pub tokens: u64,
+    /// Latent dimension L.
+    pub latent_dim: usize,
+    /// Number of semantic clusters C.
+    pub clusters: usize,
+    /// Number of analogy relations R.
+    pub relations: usize,
+    /// Planted (a, b) pairs per relation.
+    pub pairs_per_relation: usize,
+    /// Zipf exponent for unigram frequencies.
+    pub zipf: f64,
+    /// Sharpness of the topical emission distribution.
+    pub beta: f64,
+    /// Probability of emitting from the global unigram instead of the topic.
+    pub noise: f64,
+    /// Mean sentence length (geometric, clamped to [5, 70]).
+    pub sentence_len: usize,
+    /// Cluster dispersion: latent noise added around the cluster center.
+    pub sigma: f64,
+    pub seed: u64,
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        Self {
+            vocab: 10_000,
+            tokens: 2_000_000,
+            latent_dim: 16,
+            clusters: 40,
+            relations: 6,
+            pairs_per_relation: 12,
+            zipf: 1.0,
+            beta: 4.0,
+            noise: 0.25,
+            sentence_len: 20,
+            sigma: 0.35,
+            seed: 1234,
+        }
+    }
+}
+
+impl SyntheticConfig {
+    /// Small config for unit tests (fast to generate + train).
+    pub fn test_tiny() -> Self {
+        Self {
+            vocab: 500,
+            tokens: 60_000,
+            clusters: 10,
+            relations: 3,
+            pairs_per_relation: 5,
+            ..Self::default()
+        }
+    }
+}
+
+/// A planted analogy pair list for one relation: (a, b) with z_b ≈ z_a + r.
+#[derive(Clone, Debug)]
+pub struct Relation {
+    pub pairs: Vec<(u32, u32)>,
+}
+
+/// The ground-truth latent model + corpus generator.
+pub struct LatentModel {
+    pub cfg: SyntheticConfig,
+    /// Latent unit vectors, row-major [V, L].
+    pub z: Vec<f32>,
+    /// Cluster assignment per word.
+    pub cluster_of: Vec<u16>,
+    /// Zipf unigram weights (unnormalised), per word id (descending).
+    pub unigram: Vec<f64>,
+    /// Planted analogy relations.
+    pub relations: Vec<Relation>,
+    /// Per-cluster emission alias tables.
+    emit: Vec<AliasTable>,
+    /// Global unigram alias table.
+    global: AliasTable,
+    /// Cluster weights (mass of member words) for topic selection.
+    topic: AliasTable,
+}
+
+impl LatentModel {
+    pub fn new(cfg: SyntheticConfig) -> Self {
+        assert!(cfg.vocab >= 10 && cfg.clusters >= 2);
+        assert!(cfg.clusters <= u16::MAX as usize);
+        let mut rng = Xoshiro256ss::new(cfg.seed);
+        let l = cfg.latent_dim;
+        let v = cfg.vocab;
+
+        // Cluster centers: random unit vectors.
+        let mut centers = vec![0.0f32; cfg.clusters * l];
+        for c in 0..cfg.clusters {
+            let row = &mut centers[c * l..(c + 1) * l];
+            random_unit(row, &mut rng);
+        }
+
+        // Word latents: center + sigma * noise, normalised.  Cluster
+        // assignment round-robins over ranks so every cluster holds words
+        // from the whole frequency spectrum (the paper's hot rows then
+        // spread across topics, as in real corpora).
+        let mut z = vec![0.0f32; v * l];
+        let mut cluster_of = vec![0u16; v];
+        for w in 0..v {
+            let c = w % cfg.clusters;
+            cluster_of[w] = c as u16;
+            let row = &mut z[w * l..(w + 1) * l];
+            for (i, x) in row.iter_mut().enumerate() {
+                *x = centers[c * l + i]
+                    + (cfg.sigma * rng.next_gauss()) as f32;
+            }
+            normalize(row);
+        }
+
+        // Plant analogy relations: offset vectors applied to random words.
+        // For each relation draw an offset `r`; for each pair pick `a` and
+        // REDEFINE z_b := normalize(z_a + r) for a fresh word b (chosen
+        // from mid-frequency ranks so both a and b occur often enough to
+        // be learnable).
+        let mut relations = Vec::with_capacity(cfg.relations);
+        let mut used: Vec<bool> = vec![false; v];
+        let lo = v / 20; // skip the ultra-frequent head
+        let hi = (v * 3 / 5).max(lo + 2 * cfg.pairs_per_relation + 2);
+        for _ in 0..cfg.relations {
+            let mut offset = vec![0.0f32; l];
+            random_unit(&mut offset, &mut rng);
+            // moderate offset magnitude keeps b's cluster geometry intact
+            for x in offset.iter_mut() {
+                *x *= 0.8;
+            }
+            let mut pairs = Vec::with_capacity(cfg.pairs_per_relation);
+            let mut guard = 0;
+            while pairs.len() < cfg.pairs_per_relation && guard < 10_000 {
+                guard += 1;
+                let a = lo + rng.below(hi - lo);
+                let b = lo + rng.below(hi - lo);
+                if a == b || used[a] || used[b] {
+                    continue;
+                }
+                used[a] = true;
+                used[b] = true;
+                let (za, zb) = rows_mut(&mut z, l, a, b);
+                for i in 0..l {
+                    zb[i] = za[i] + offset[i];
+                }
+                normalize(zb);
+                pairs.push((a as u32, b as u32));
+            }
+            relations.push(Relation { pairs });
+        }
+
+        // Zipf unigram over frequency-ranked ids.
+        let unigram: Vec<f64> = (0..v)
+            .map(|i| 1.0 / ((i + 1) as f64).powf(cfg.zipf))
+            .collect();
+
+        // Emission distributions:
+        //   p(w|c) ∝ unigram(w)^0.7 · exp(beta·<z_w, center_c>).
+        // The 0.7 damping keeps the Zipf head from swamping the topical
+        // signal (head words sit in every cluster), so co-occurrence
+        // stays strongly log-linear in the latent space.
+        let mut emit = Vec::with_capacity(cfg.clusters);
+        for c in 0..cfg.clusters {
+            let center = &centers[c * l..(c + 1) * l];
+            let weights: Vec<f64> = (0..v)
+                .map(|w| {
+                    let zc = dotf(&z[w * l..(w + 1) * l], center);
+                    unigram[w].powf(0.7) * (cfg.beta * zc as f64).exp()
+                })
+                .collect();
+            emit.push(AliasTable::new(&weights));
+        }
+        let global = AliasTable::new(&unigram);
+
+        // Topic weights: total unigram mass per cluster.
+        let mut mass = vec![0.0f64; cfg.clusters];
+        for w in 0..v {
+            mass[cluster_of[w] as usize] += unigram[w];
+        }
+        let topic = AliasTable::new(&mass);
+
+        Self {
+            cfg,
+            z,
+            cluster_of,
+            unigram,
+            relations,
+            emit,
+            global,
+            topic,
+        }
+    }
+
+    /// Latent vector of word `w`.
+    pub fn latent(&self, w: u32) -> &[f32] {
+        let l = self.cfg.latent_dim;
+        &self.z[w as usize * l..(w as usize + 1) * l]
+    }
+
+    /// Ground-truth similarity = latent cosine (latents are unit vectors).
+    pub fn similarity(&self, a: u32, b: u32) -> f32 {
+        dotf(self.latent(a), self.latent(b))
+    }
+
+    /// Token for word id (ids are frequency-ranked by construction).
+    pub fn token(&self, w: u32) -> String {
+        format!("w{w:06}")
+    }
+
+    /// Emit one sentence of word ids.
+    pub fn sentence(&self, rng: &mut Xoshiro256ss) -> Vec<u32> {
+        // Geometric length with the configured mean, clamped to [5, 70].
+        let p = 1.0 / self.cfg.sentence_len as f64;
+        let mut len = 0usize;
+        while rng.next_f64() >= p && len < 70 {
+            len += 1;
+        }
+        let len = len.clamp(5, 70);
+        let c = self.topic.sample(rng) as usize;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            let w = if rng.next_f64() < self.cfg.noise {
+                self.global.sample(rng)
+            } else {
+                self.emit[c].sample(rng)
+            };
+            out.push(w);
+        }
+        out
+    }
+
+    /// Write `tokens` worth of sentences to a corpus file (one sentence
+    /// per line).  Returns the number of tokens written.
+    pub fn write_corpus<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<u64> {
+        let mut rng = Xoshiro256ss::new(self.cfg.seed ^ 0x5EED_C0DE);
+        let f = std::fs::File::create(path)?;
+        let mut w = std::io::BufWriter::with_capacity(1 << 20, f);
+        let mut written = 0u64;
+        let mut line = String::with_capacity(1024);
+        while written < self.cfg.tokens {
+            let sent = self.sentence(&mut rng);
+            line.clear();
+            for (i, &id) in sent.iter().enumerate() {
+                if i > 0 {
+                    line.push(' ');
+                }
+                line.push_str(&self.token(id));
+            }
+            line.push('\n');
+            w.write_all(line.as_bytes())?;
+            written += sent.len() as u64;
+        }
+        w.flush()?;
+        Ok(written)
+    }
+}
+
+fn random_unit(row: &mut [f32], rng: &mut Xoshiro256ss) {
+    for x in row.iter_mut() {
+        *x = rng.next_gauss() as f32;
+    }
+    normalize(row);
+}
+
+fn normalize(row: &mut [f32]) {
+    let n = dotf(row, row).sqrt().max(1e-12);
+    for x in row.iter_mut() {
+        *x /= n;
+    }
+}
+
+fn dotf(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Two disjoint mutable rows of a row-major matrix.
+fn rows_mut(z: &mut [f32], l: usize, a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+    assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = z.split_at_mut(b * l);
+        (&mut lo[a * l..(a + 1) * l], &mut hi[..l])
+    } else {
+        let (lo, hi) = z.split_at_mut(a * l);
+        let bl = &mut lo[b * l..(b + 1) * l];
+        (&mut hi[..l], bl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> LatentModel {
+        LatentModel::new(SyntheticConfig::test_tiny())
+    }
+
+    #[test]
+    fn latents_are_unit() {
+        let m = tiny_model();
+        for w in 0..m.cfg.vocab as u32 {
+            let n = dotf(m.latent(w), m.latent(w));
+            assert!((n - 1.0).abs() < 1e-4, "word {w} norm {n}");
+        }
+    }
+
+    #[test]
+    fn same_cluster_more_similar() {
+        let m = tiny_model();
+        let (mut same, mut diff) = (Vec::new(), Vec::new());
+        let mut rng = Xoshiro256ss::new(99);
+        for _ in 0..3000 {
+            let a = rng.below(m.cfg.vocab) as u32;
+            let b = rng.below(m.cfg.vocab) as u32;
+            if a == b {
+                continue;
+            }
+            let s = m.similarity(a, b);
+            if m.cluster_of[a as usize] == m.cluster_of[b as usize] {
+                same.push(s);
+            } else {
+                diff.push(s);
+            }
+        }
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        assert!(
+            mean(&same) > mean(&diff) + 0.2,
+            "same {} vs diff {}",
+            mean(&same),
+            mean(&diff)
+        );
+    }
+
+    #[test]
+    fn relations_plant_parallel_offsets() {
+        let m = tiny_model();
+        for rel in &m.relations {
+            assert!(!rel.pairs.is_empty());
+            // For two pairs (a,b), (c,d) of a relation, z_b - z_a must be
+            // closer to z_d - z_c than random word differences are.
+            if rel.pairs.len() >= 2 {
+                let (a, b) = rel.pairs[0];
+                let (c, d) = rel.pairs[1];
+                let l = m.cfg.latent_dim;
+                let mut off1 = vec![0.0f32; l];
+                let mut off2 = vec![0.0f32; l];
+                for i in 0..l {
+                    off1[i] = m.latent(b)[i] - m.latent(a)[i];
+                    off2[i] = m.latent(d)[i] - m.latent(c)[i];
+                }
+                let cos = dotf(&off1, &off2)
+                    / (dotf(&off1, &off1).sqrt() * dotf(&off2, &off2).sqrt())
+                        .max(1e-9);
+                assert!(cos > 0.5, "relation offsets not parallel: {cos}");
+            }
+        }
+    }
+
+    #[test]
+    fn sentences_have_sane_lengths() {
+        let m = tiny_model();
+        let mut rng = Xoshiro256ss::new(5);
+        for _ in 0..200 {
+            let s = m.sentence(&mut rng);
+            assert!((5..=70).contains(&s.len()));
+            assert!(s.iter().all(|&w| (w as usize) < m.cfg.vocab));
+        }
+    }
+
+    #[test]
+    fn corpus_is_topical() {
+        // Words co-occurring in a sentence must be latently more similar
+        // than random pairs — the distributional hypothesis holds in the
+        // generated data.
+        let m = tiny_model();
+        let mut rng = Xoshiro256ss::new(6);
+        let mut cooc = Vec::new();
+        let mut rand_pairs = Vec::new();
+        for _ in 0..300 {
+            let s = m.sentence(&mut rng);
+            for i in 1..s.len() {
+                if s[i] != s[i - 1] {
+                    cooc.push(m.similarity(s[i], s[i - 1]));
+                }
+            }
+            let a = rng.below(m.cfg.vocab) as u32;
+            let b = rng.below(m.cfg.vocab) as u32;
+            if a != b {
+                rand_pairs.push(m.similarity(a, b));
+            }
+        }
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        // Co-occurring pairs run ~2× the random-pair similarity in the
+        // tiny test config (larger configs are sharper).
+        assert!(
+            mean(&cooc) > mean(&rand_pairs) + 0.05,
+            "cooc {} vs random {}",
+            mean(&cooc),
+            mean(&rand_pairs)
+        );
+    }
+
+    #[test]
+    fn write_corpus_roundtrips_through_vocab() {
+        let mut cfg = SyntheticConfig::test_tiny();
+        cfg.tokens = 5_000;
+        let m = LatentModel::new(cfg);
+        let path = std::env::temp_dir().join("pw2v_synth_test.txt");
+        let n = m.write_corpus(&path).unwrap();
+        assert!(n >= 5_000);
+        let v = crate::corpus::vocab::Vocab::build_from_file(&path, 1).unwrap();
+        assert!(v.len() > 100, "vocab too small: {}", v.len());
+        // Tokens parse back to ids.
+        assert!(v.id("w000000").is_some());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let mut cfg = SyntheticConfig::test_tiny();
+        cfg.tokens = 30_000;
+        cfg.noise = 1.0; // pure unigram to test the frequency profile
+        let m = LatentModel::new(cfg);
+        let mut rng = Xoshiro256ss::new(7);
+        let mut counts = vec![0u64; m.cfg.vocab];
+        let mut total = 0u64;
+        while total < 30_000 {
+            for w in m.sentence(&mut rng) {
+                counts[w as usize] += 1;
+                total += 1;
+            }
+        }
+        let head: u64 = counts[..10].iter().sum();
+        assert!(
+            head as f64 / total as f64 > 0.25,
+            "head mass {}",
+            head as f64 / total as f64
+        );
+    }
+}

@@ -1,0 +1,229 @@
+//! Vocabulary: token → id mapping with corpus counts, built exactly like
+//! the original word2vec — count, filter by `min_count`, sort by frequency
+//! descending so id 0 is the most frequent word.  Frequency-sorted ids are
+//! load-bearing downstream: the distributed sub-model synchroniser and the
+//! cache-conflict performance model both reason about "the top-k rows".
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct Vocab {
+    /// Words sorted by count descending (index = word id).
+    words: Vec<String>,
+    counts: Vec<u64>,
+    index: HashMap<String, u32>,
+    /// Total corpus tokens covered by the retained vocabulary.
+    total: u64,
+}
+
+impl Vocab {
+    /// Build from an iterator of tokens.
+    pub fn build<I, S>(tokens: I, min_count: u64) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: AsRef<str>,
+    {
+        let mut counts: HashMap<String, u64> = HashMap::new();
+        for t in tokens {
+            *counts.entry(t.as_ref().to_string()).or_insert(0) += 1;
+        }
+        Self::from_counts(counts, min_count)
+    }
+
+    /// Build by streaming a whitespace-tokenized file (one pass).
+    pub fn build_from_file<P: AsRef<Path>>(
+        path: P,
+        min_count: u64,
+    ) -> anyhow::Result<Self> {
+        let f = std::fs::File::open(&path)?;
+        let mut reader = std::io::BufReader::with_capacity(1 << 20, f);
+        let mut counts: HashMap<String, u64> = HashMap::new();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            for t in line.split_ascii_whitespace() {
+                *counts.entry(t.to_string()).or_insert(0) += 1;
+            }
+        }
+        Ok(Self::from_counts(counts, min_count))
+    }
+
+    pub fn from_counts(counts: HashMap<String, u64>, min_count: u64) -> Self {
+        let mut pairs: Vec<(String, u64)> = counts
+            .into_iter()
+            .filter(|(_, c)| *c >= min_count)
+            .collect();
+        // Sort by count desc, then lexicographically for determinism.
+        pairs.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        let mut v = Vocab::default();
+        for (w, c) in pairs {
+            v.index.insert(w.clone(), v.words.len() as u32);
+            v.words.push(w);
+            v.counts.push(c);
+            v.total += c;
+        }
+        v
+    }
+
+    /// Truncate to the `n` most frequent words (Table II's vocab sweep).
+    pub fn truncated(&self, n: usize) -> Vocab {
+        let n = n.min(self.words.len());
+        let mut v = Vocab::default();
+        for i in 0..n {
+            v.index.insert(self.words[i].clone(), i as u32);
+            v.words.push(self.words[i].clone());
+            v.counts.push(self.counts[i]);
+            v.total += self.counts[i];
+        }
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Total retained-token count (the original's `train_words`).
+    pub fn total_words(&self) -> u64 {
+        self.total
+    }
+
+    pub fn id(&self, word: &str) -> Option<u32> {
+        self.index.get(word).copied()
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        &self.words[id as usize]
+    }
+
+    pub fn count(&self, id: u32) -> u64 {
+        self.counts[id as usize]
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Relative frequency of a word id.
+    pub fn freq(&self, id: u32) -> f64 {
+        self.counts[id as usize] as f64 / self.total.max(1) as f64
+    }
+
+    /// `word<TAB>count` lines, frequency order.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for (word, count) in self.words.iter().zip(&self.counts) {
+            writeln!(w, "{word}\t{count}")?;
+        }
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut v = Vocab::default();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let (w, c) = line.split_once('\t').ok_or_else(|| {
+                anyhow::anyhow!("vocab line {}: expected word<TAB>count", lineno + 1)
+            })?;
+            let c: u64 = c.parse()?;
+            v.index.insert(w.to_string(), v.words.len() as u32);
+            v.words.push(w.to_string());
+            v.counts.push(c);
+            v.total += c;
+        }
+        // Enforce the frequency-sorted invariant.
+        anyhow::ensure!(
+            v.counts.windows(2).all(|p| p[0] >= p[1]),
+            "vocab file not sorted by count descending"
+        );
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vocab {
+        Vocab::build(
+            "the cat sat on the mat the cat".split_whitespace(),
+            1,
+        )
+    }
+
+    #[test]
+    fn ids_are_frequency_sorted() {
+        let v = sample();
+        assert_eq!(v.word(0), "the"); // count 3
+        assert_eq!(v.word(1), "cat"); // count 2
+        assert_eq!(v.count(0), 3);
+        assert_eq!(v.count(1), 2);
+        assert_eq!(v.len(), 5);
+        assert_eq!(v.total_words(), 8);
+    }
+
+    #[test]
+    fn min_count_filters() {
+        let v = Vocab::build(
+            "the cat sat on the mat the cat".split_whitespace(),
+            2,
+        );
+        assert_eq!(v.len(), 2); // only "the" and "cat"
+        assert!(v.id("sat").is_none());
+    }
+
+    #[test]
+    fn truncation_keeps_top_n() {
+        let v = sample();
+        let t = v.truncated(2);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.word(0), "the");
+        assert!(t.id("mat").is_none());
+        assert_eq!(t.total_words(), 5);
+    }
+
+    #[test]
+    fn truncation_beyond_len_is_identity() {
+        let v = sample();
+        assert_eq!(v.truncated(100).len(), v.len());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let v = sample();
+        let path = std::env::temp_dir().join("pw2v_vocab_test.txt");
+        v.save(&path).unwrap();
+        let l = Vocab::load(&path).unwrap();
+        assert_eq!(l.len(), v.len());
+        for i in 0..v.len() as u32 {
+            assert_eq!(l.word(i), v.word(i));
+            assert_eq!(l.count(i), v.count(i));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let a = Vocab::build("b a".split_whitespace(), 1);
+        let b = Vocab::build("a b".split_whitespace(), 1);
+        assert_eq!(a.word(0), b.word(0));
+    }
+
+    #[test]
+    fn freq_sums_to_one() {
+        let v = sample();
+        let s: f64 = (0..v.len() as u32).map(|i| v.freq(i)).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

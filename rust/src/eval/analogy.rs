@@ -1,0 +1,190 @@
+//! Word-analogy evaluation (the Google analogy-set protocol, paper
+//! Sec. IV-A): for each question `a:b :: c:?` predict the vocabulary word
+//! maximising 3CosAdd over unit vectors, excluding the three query words;
+//! a question counts only on EXACT match.
+
+use crate::corpus::vocab::Vocab;
+use crate::model::Embedding;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct AnalogyQuestion {
+    pub a: String,
+    pub b: String,
+    pub c: String,
+    pub d: String,
+    /// Section label ("semantic" / "syntactic" / custom relation id).
+    pub section: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct AnalogyReport {
+    pub total: usize,
+    /// Questions with all four words in vocabulary.
+    pub covered: usize,
+    pub correct: usize,
+}
+
+impl AnalogyReport {
+    /// Accuracy ×100 over covered questions (the paper's metric).
+    pub fn accuracy100(&self) -> f64 {
+        if self.covered == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.covered as f64 * 100.0
+        }
+    }
+}
+
+/// Unit-normalised copy of the whole matrix (query once, reuse per set).
+pub fn normalized_matrix(emb: &Embedding) -> Vec<f32> {
+    let (v, d) = (emb.vocab(), emb.dim());
+    let mut out = vec![0.0f32; v * d];
+    for w in 0..v as u32 {
+        let row = emb.row(w);
+        let n = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+        for (o, x) in out[w as usize * d..(w as usize + 1) * d]
+            .iter_mut()
+            .zip(row)
+        {
+            *o = x / n;
+        }
+    }
+    out
+}
+
+/// Evaluate a question set; returns per-section reports plus the overall.
+pub fn eval_analogy(
+    questions: &[AnalogyQuestion],
+    vocab: &Vocab,
+    emb: &Embedding,
+) -> AnalogyReport {
+    let d = emb.dim();
+    let v = emb.vocab();
+    let unit = normalized_matrix(emb);
+    let mut report = AnalogyReport {
+        total: questions.len(),
+        ..Default::default()
+    };
+    let mut query = vec![0.0f32; d];
+    for q in questions {
+        let ids = (
+            vocab.id(&q.a),
+            vocab.id(&q.b),
+            vocab.id(&q.c),
+            vocab.id(&q.d),
+        );
+        let (Some(ia), Some(ib), Some(ic), Some(id_)) = ids else {
+            continue;
+        };
+        report.covered += 1;
+        // 3CosAdd: argmax_w cos(w, b - a + c) over unit vectors.
+        let (ua, ub, uc) = (
+            &unit[ia as usize * d..(ia as usize + 1) * d],
+            &unit[ib as usize * d..(ib as usize + 1) * d],
+            &unit[ic as usize * d..(ic as usize + 1) * d],
+        );
+        for l in 0..d {
+            query[l] = ub[l] - ua[l] + uc[l];
+        }
+        let mut best = f32::NEG_INFINITY;
+        let mut best_w = u32::MAX;
+        for w in 0..v as u32 {
+            if w == ia || w == ib || w == ic {
+                continue;
+            }
+            let row = &unit[w as usize * d..(w as usize + 1) * d];
+            let score: f32 = crate::linalg::dot(row, &query);
+            if score > best {
+                best = score;
+                best_w = w;
+            }
+        }
+        if best_w == id_ {
+            report.correct += 1;
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Construct an embedding with exact linear analogy structure.
+    fn planted() -> (Vocab, Embedding, Vec<AnalogyQuestion>) {
+        // words: king queen man woman + distractors x y
+        let vocab = Vocab::build(
+            "king king king queen queen man man woman x y".split_whitespace(),
+            1,
+        );
+        let mut emb = Embedding::zeros(vocab.len(), 3);
+        let set = |e: &mut Embedding, w: &str, v: [f32; 3], vc: &Vocab| {
+            e.row_mut(vc.id(w).unwrap()).copy_from_slice(&v);
+        };
+        // queen = king + royal_offset; woman = man + same structure
+        set(&mut emb, "king", [1.0, 0.0, 1.0], &vocab);
+        set(&mut emb, "queen", [1.0, 1.0, 1.0], &vocab);
+        set(&mut emb, "man", [1.0, 0.0, -1.0], &vocab);
+        set(&mut emb, "woman", [1.0, 1.0, -1.0], &vocab);
+        set(&mut emb, "x", [-1.0, -1.0, 0.0], &vocab);
+        set(&mut emb, "y", [-1.0, 0.5, -0.5], &vocab);
+        let q = vec![AnalogyQuestion {
+            a: "king".into(),
+            b: "queen".into(),
+            c: "man".into(),
+            d: "woman".into(),
+            section: "semantic".into(),
+        }];
+        (vocab, emb, q)
+    }
+
+    #[test]
+    fn planted_analogy_answered() {
+        let (vocab, emb, q) = planted();
+        let r = eval_analogy(&q, &vocab, &emb);
+        assert_eq!(r.covered, 1);
+        assert_eq!(r.correct, 1);
+        assert_eq!(r.accuracy100(), 100.0);
+    }
+
+    #[test]
+    fn query_words_excluded() {
+        // Without exclusion, "queen" itself would win the argmax (it is
+        // closest to b - a + c in this geometry for b itself).
+        let (vocab, emb, _) = planted();
+        let q = vec![AnalogyQuestion {
+            a: "man".into(),
+            b: "woman".into(),
+            c: "king".into(),
+            d: "queen".into(),
+            section: "semantic".into(),
+        }];
+        let r = eval_analogy(&q, &vocab, &emb);
+        assert_eq!(r.correct, 1);
+    }
+
+    #[test]
+    fn oov_questions_uncovered() {
+        let (vocab, emb, mut q) = planted();
+        q.push(AnalogyQuestion {
+            a: "king".into(),
+            b: "zzz".into(),
+            c: "man".into(),
+            d: "woman".into(),
+            section: "semantic".into(),
+        });
+        let r = eval_analogy(&q, &vocab, &emb);
+        assert_eq!(r.total, 2);
+        assert_eq!(r.covered, 1);
+    }
+
+    #[test]
+    fn wrong_geometry_scores_zero() {
+        let (vocab, mut emb, q) = planted();
+        // Scramble woman's vector: the answer should now be wrong.
+        emb.row_mut(vocab.id("woman").unwrap())
+            .copy_from_slice(&[-5.0, -5.0, 5.0]);
+        let r = eval_analogy(&q, &vocab, &emb);
+        assert_eq!(r.correct, 0);
+    }
+}

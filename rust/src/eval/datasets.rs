@@ -1,0 +1,230 @@
+//! Test-set IO + synthetic generation.
+//!
+//! * Loaders for the STANDARD file formats (WS-353 `word1<TAB>word2<TAB>score`
+//!   with optional header, and `questions-words.txt` with `: section`
+//!   headers) so real datasets drop in if the user supplies them.
+//! * Generators that build equivalent sets from the latent ground-truth
+//!   model (DESIGN.md §3): similarity pairs scored by exact latent cosine,
+//!   analogy questions from the planted relation pairs.
+
+use std::path::Path;
+
+use super::analogy::AnalogyQuestion;
+use super::similarity::SimilarityPair;
+use crate::corpus::synthetic::LatentModel;
+use crate::util::rng::Xoshiro256ss;
+
+/// Load a WS-353-style TSV (`word1 word2 score`, tab- or comma-separated;
+/// lines failing to parse a score are treated as headers and skipped).
+pub fn load_similarity_set<P: AsRef<Path>>(path: P) -> anyhow::Result<Vec<SimilarityPair>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let fields: Vec<&str> = line
+            .split(|c| c == '\t' || c == ',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .collect();
+        if fields.len() < 3 {
+            continue;
+        }
+        if let Ok(score) = fields[2].parse::<f64>() {
+            out.push(SimilarityPair {
+                a: fields[0].to_lowercase(),
+                b: fields[1].to_lowercase(),
+                score,
+            });
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "no similarity pairs parsed");
+    Ok(out)
+}
+
+/// Load a Google-format analogy file (`: section` headers, then
+/// `a b c d` lines).
+pub fn load_analogy_set<P: AsRef<Path>>(path: P) -> anyhow::Result<Vec<AnalogyQuestion>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    let mut section = "default".to_string();
+    for line in text.lines() {
+        if let Some(s) = line.strip_prefix(':') {
+            section = s.trim().to_string();
+            continue;
+        }
+        let f: Vec<&str> = line.split_ascii_whitespace().collect();
+        if f.len() == 4 {
+            out.push(AnalogyQuestion {
+                a: f[0].to_lowercase(),
+                b: f[1].to_lowercase(),
+                c: f[2].to_lowercase(),
+                d: f[3].to_lowercase(),
+                section: section.clone(),
+            });
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "no analogy questions parsed");
+    Ok(out)
+}
+
+/// Save helpers (round-trip the standard formats).
+pub fn save_similarity_set<P: AsRef<Path>>(
+    path: P,
+    pairs: &[SimilarityPair],
+) -> anyhow::Result<()> {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "Word 1\tWord 2\tHuman (mean)")?;
+    for p in pairs {
+        writeln!(w, "{}\t{}\t{}", p.a, p.b, p.score)?;
+    }
+    Ok(())
+}
+
+pub fn save_analogy_set<P: AsRef<Path>>(
+    path: P,
+    questions: &[AnalogyQuestion],
+) -> anyhow::Result<()> {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let mut cur = String::new();
+    for q in questions {
+        if q.section != cur {
+            writeln!(w, ": {}", q.section)?;
+            cur = q.section.clone();
+        }
+        writeln!(w, "{} {} {} {}", q.a, q.b, q.c, q.d)?;
+    }
+    Ok(())
+}
+
+/// Generate a WS-353-like pair set from the latent model: `n` pairs
+/// stratified across the similarity range, scored 0..10 by exact latent
+/// cosine.
+pub fn gen_similarity_set(lm: &LatentModel, n: usize, seed: u64) -> Vec<SimilarityPair> {
+    let mut rng = Xoshiro256ss::new(seed);
+    let v = lm.cfg.vocab;
+    // Stratify: half same-cluster pairs (high similarity), half random.
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let a = rng.below(v) as u32;
+        let want_same = out.len() % 2 == 0;
+        let mut b = rng.below(v) as u32;
+        if want_same {
+            // Find a same-cluster partner.
+            let target = lm.cluster_of[a as usize];
+            let mut tries = 0;
+            while (lm.cluster_of[b as usize] != target || b == a) && tries < 200 {
+                b = rng.below(v) as u32;
+                tries += 1;
+            }
+        }
+        if a == b {
+            continue;
+        }
+        let cos = lm.similarity(a, b) as f64;
+        out.push(SimilarityPair {
+            a: lm.token(a),
+            b: lm.token(b),
+            // Map [-1,1] -> [0,10] like human judgement scales.
+            score: (cos + 1.0) * 5.0,
+        });
+    }
+    out
+}
+
+/// Generate the analogy question set from planted relations: all ordered
+/// pairs-of-pairs within each relation, like the Google set's structure.
+pub fn gen_analogy_set(lm: &LatentModel) -> Vec<AnalogyQuestion> {
+    let mut out = Vec::new();
+    for (ri, rel) in lm.relations.iter().enumerate() {
+        let section = format!("relation-{ri}");
+        for (i, &(a, b)) in rel.pairs.iter().enumerate() {
+            for (j, &(c, d)) in rel.pairs.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                out.push(AnalogyQuestion {
+                    a: lm.token(a),
+                    b: lm.token(b),
+                    c: lm.token(c),
+                    d: lm.token(d),
+                    section: section.clone(),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::SyntheticConfig;
+
+    fn lm() -> LatentModel {
+        LatentModel::new(SyntheticConfig::test_tiny())
+    }
+
+    #[test]
+    fn similarity_set_properties() {
+        let m = lm();
+        let set = gen_similarity_set(&m, 100, 1);
+        assert_eq!(set.len(), 100);
+        for p in &set {
+            assert!(p.a != p.b);
+            assert!((0.0..=10.0).contains(&p.score));
+        }
+        // Stratification gives a spread of scores.
+        let max = set.iter().map(|p| p.score).fold(0.0, f64::max);
+        let min = set.iter().map(|p| p.score).fold(10.0, f64::min);
+        assert!(max - min > 2.0, "degenerate spread {min}..{max}");
+    }
+
+    #[test]
+    fn analogy_set_from_relations() {
+        let m = lm();
+        let qs = gen_analogy_set(&m);
+        let p = m.cfg.pairs_per_relation;
+        assert_eq!(qs.len(), m.cfg.relations * p * (p - 1));
+        // All questions reference planted pairs.
+        for q in &qs {
+            assert_ne!(q.a, q.c);
+        }
+    }
+
+    #[test]
+    fn similarity_roundtrip() {
+        let m = lm();
+        let set = gen_similarity_set(&m, 20, 2);
+        let path = std::env::temp_dir().join("pw2v_simset_test.tsv");
+        save_similarity_set(&path, &set).unwrap();
+        let got = load_similarity_set(&path).unwrap();
+        assert_eq!(got.len(), set.len());
+        assert_eq!(got[0].a, set[0].a);
+        assert!((got[0].score - set[0].score).abs() < 1e-9);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn analogy_roundtrip() {
+        let m = lm();
+        let qs = gen_analogy_set(&m);
+        let path = std::env::temp_dir().join("pw2v_anaset_test.txt");
+        save_analogy_set(&path, &qs).unwrap();
+        let got = load_analogy_set(&path).unwrap();
+        assert_eq!(got.len(), qs.len());
+        assert_eq!(got[0], qs[0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ws353_header_skipped() {
+        let path = std::env::temp_dir().join("pw2v_ws_test.tsv");
+        std::fs::write(&path, "Word 1\tWord 2\tHuman (mean)\ncat\tdog\t7.5\n")
+            .unwrap();
+        let got = load_similarity_set(&path).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].a, "cat");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,16 @@
+//! Evaluation: word similarity (Spearman ρ against reference judgements,
+//! the WS-353 protocol) and word analogy (3CosAdd exact match, the Google
+//! analogy-set protocol), plus generation of synthetic test sets with
+//! exact ground truth from the latent corpus model (DESIGN.md §3, §6).
+
+pub mod analogy;
+pub mod datasets;
+pub mod similarity;
+pub mod spearman;
+
+pub use analogy::{eval_analogy, AnalogyQuestion, AnalogyReport};
+pub use datasets::{
+    gen_analogy_set, gen_similarity_set, load_analogy_set, load_similarity_set,
+};
+pub use similarity::{eval_similarity, SimilarityPair};
+pub use spearman::spearman;

@@ -1,0 +1,128 @@
+//! Word-similarity evaluation (the WS-353 protocol, paper Sec. IV-A):
+//! rank word pairs by model cosine similarity and report Spearman ρ
+//! against the reference judgements.
+
+use super::spearman::spearman;
+use crate::corpus::vocab::Vocab;
+use crate::model::Embedding;
+
+/// A test pair: two words and a reference similarity judgement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimilarityPair {
+    pub a: String,
+    pub b: String,
+    pub score: f64,
+}
+
+/// Result: Spearman ρ (×100, as the paper reports) and coverage.
+#[derive(Clone, Copy, Debug)]
+pub struct SimilarityReport {
+    /// Spearman ρ × 100 over the covered pairs.
+    pub rho100: f64,
+    pub pairs_total: usize,
+    pub pairs_covered: usize,
+}
+
+/// Cosine of two rows.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let (mut num, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in a.iter().zip(b) {
+        num += *x as f64 * *y as f64;
+        na += *x as f64 * *x as f64;
+        nb += *y as f64 * *y as f64;
+    }
+    if na <= 0.0 || nb <= 0.0 {
+        0.0
+    } else {
+        num / (na.sqrt() * nb.sqrt())
+    }
+}
+
+/// Evaluate `M_in` embeddings on a pair set; OOV pairs are skipped (the
+/// standard protocol).
+pub fn eval_similarity(
+    pairs: &[SimilarityPair],
+    vocab: &Vocab,
+    emb: &Embedding,
+) -> SimilarityReport {
+    let mut model_scores = Vec::new();
+    let mut ref_scores = Vec::new();
+    for p in pairs {
+        if let (Some(ia), Some(ib)) = (vocab.id(&p.a), vocab.id(&p.b)) {
+            model_scores.push(cosine(emb.row(ia), emb.row(ib)));
+            ref_scores.push(p.score);
+        }
+    }
+    let rho = spearman(&model_scores, &ref_scores).unwrap_or(0.0);
+    SimilarityReport {
+        rho100: rho * 100.0,
+        pairs_total: pairs.len(),
+        pairs_covered: model_scores.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab4() -> Vocab {
+        Vocab::build("a a a a b b b c c d".split_whitespace(), 1)
+    }
+
+    fn emb4() -> Embedding {
+        // a=[1,0], b=[0.9,0.1], c=[0,1], d=[-1,0]
+        let mut e = Embedding::zeros(4, 2);
+        e.row_mut(0).copy_from_slice(&[1.0, 0.0]);
+        e.row_mut(1).copy_from_slice(&[0.9, 0.1]);
+        e.row_mut(2).copy_from_slice(&[0.0, 1.0]);
+        e.row_mut(3).copy_from_slice(&[-1.0, 0.0]);
+        e
+    }
+
+    fn pair(a: &str, b: &str, s: f64) -> SimilarityPair {
+        SimilarityPair {
+            a: a.into(),
+            b: b.into(),
+            score: s,
+        }
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn agreeing_judgements_score_high() {
+        let pairs = vec![
+            pair("a", "b", 9.0), // cos ~0.99
+            pair("a", "c", 5.0), // cos 0
+            pair("a", "d", 1.0), // cos -1
+        ];
+        let r = eval_similarity(&pairs, &vocab4(), &emb4());
+        assert!((r.rho100 - 100.0).abs() < 1e-9, "rho={}", r.rho100);
+        assert_eq!(r.pairs_covered, 3);
+    }
+
+    #[test]
+    fn inverted_judgements_score_low() {
+        let pairs = vec![
+            pair("a", "b", 1.0),
+            pair("a", "c", 5.0),
+            pair("a", "d", 9.0),
+        ];
+        let r = eval_similarity(&pairs, &vocab4(), &emb4());
+        assert!((r.rho100 + 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oov_pairs_skipped() {
+        let pairs = vec![pair("a", "b", 9.0), pair("a", "zzz", 5.0), pair("a", "d", 1.0)];
+        let r = eval_similarity(&pairs, &vocab4(), &emb4());
+        assert_eq!(r.pairs_total, 3);
+        assert_eq!(r.pairs_covered, 2);
+    }
+}

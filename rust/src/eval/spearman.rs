@@ -1,0 +1,112 @@
+//! Spearman rank correlation coefficient with average-rank tie handling —
+//! the WS-353 scoring statistic.
+
+/// Spearman ρ of two equal-length samples.  Returns `None` for length < 2
+/// or zero-variance inputs.
+pub fn spearman(a: &[f64], b: &[f64]) -> Option<f64> {
+    if a.len() != b.len() || a.len() < 2 {
+        return None;
+    }
+    let ra = ranks(a);
+    let rb = ranks(b);
+    pearson(&ra, &rb)
+}
+
+/// Average ranks (1-based; ties share the mean of their positions).
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+fn pearson(a: &[f64], b: &[f64]) -> Option<f64> {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let (mut num, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for (x, y) in a.iter().zip(b) {
+        num += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return None;
+    }
+    Some(num / (va * vb).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_correlation() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [10.0, 20.0, 30.0, 40.0];
+        assert!((spearman(&a, &b).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_anticorrelation() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [3.0, 2.0, 1.0];
+        assert!((spearman(&a, &b).unwrap() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_based_not_linear() {
+        // Monotone nonlinear map preserves ρ = 1.
+        let a = [1.0f64, 2.0, 3.0, 4.0, 5.0];
+        let b: Vec<f64> = a.iter().map(|x| x.exp()).collect();
+        assert!((spearman(&a, &b).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_averaged() {
+        let a = [1.0, 1.0, 2.0];
+        let r = ranks(&a);
+        assert_eq!(r, vec![1.5, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn known_value_with_ties() {
+        // Hand-computed example.
+        let a = [1.0, 2.0, 2.0, 3.0];
+        let b = [1.0, 3.0, 2.0, 4.0];
+        let rho = spearman(&a, &b).unwrap();
+        assert!(rho > 0.8 && rho < 1.0, "rho={rho}");
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        assert!(spearman(&[1.0], &[2.0]).is_none());
+        assert!(spearman(&[1.0, 1.0], &[1.0, 2.0]).is_none()); // zero variance
+        assert!(spearman(&[1.0, 2.0], &[1.0]).is_none()); // length mismatch
+    }
+
+    #[test]
+    fn noisy_positive_correlation() {
+        let mut rng = crate::util::rng::Xoshiro256ss::new(1);
+        let a: Vec<f64> = (0..500).map(|i| i as f64).collect();
+        let b: Vec<f64> = a
+            .iter()
+            .map(|x| x + 100.0 * rng.next_gauss())
+            .collect();
+        let rho = spearman(&a, &b).unwrap();
+        assert!(rho > 0.5 && rho < 1.0, "rho={rho}");
+    }
+}

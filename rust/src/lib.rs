@@ -1,0 +1,40 @@
+//! # pw2v — Parallelizing Word2Vec in Shared and Distributed Memory
+//!
+//! A production-grade reproduction of Ji, Satish, Li & Dubey (2016),
+//! *"Parallelizing Word2Vec in Shared and Distributed Memory"* (cs.DC,
+//! arXiv:1604.04661), built as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: corpus pipeline,
+//!   vocabulary, negative sampling, the shared Hogwild model store, four
+//!   trainer back-ends (original scalar Hogwild, BIDMach-style level-2,
+//!   the paper's batched shared-negative GEMM scheme, and the same scheme
+//!   through an AOT-compiled XLA executable), the distributed runtime
+//!   (model replicas + sub-model synchronization + learning-rate scaling),
+//!   evaluation, metrics, and the calibrated performance model used to
+//!   regenerate the paper's scaling figures.
+//! * **Layer 2** — `python/compile/model.py`: the SGNS superbatch step in
+//!   JAX, AOT-lowered to HLO text under `artifacts/`.
+//! * **Layer 1** — `python/compile/kernels/sgns.py`: the fused
+//!   three-GEMM SGNS Pallas kernel the step calls.
+//!
+//! Python never runs at train time; the rust binary consumes only
+//! `artifacts/*.hlo.txt` via the PJRT CPU client (`xla` crate).
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index
+//! mapping every table/figure of the paper to a bench target.
+
+pub mod bench;
+pub mod config;
+pub mod corpus;
+pub mod dist;
+pub mod eval;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sampling;
+pub mod train;
+pub mod util;
+
+pub use config::TrainConfig;

@@ -1,0 +1,308 @@
+//! Level-3 BLAS: small-matrix f32 GEMM kernels (MKL-SGEMM substitute).
+//!
+//! The paper's scheme needs exactly three GEMM shapes per window
+//! (Fig. 2 right; B≈16, S=1+K≈6, D≈300):
+//!
+//!   1. `logits[B,S] = Wi[B,D] · Wo[S,D]ᵀ`   — [`gemm_nt`]
+//!   2. `dWi[B,D]    = Err[B,S] · Wo[S,D]`   — [`gemm_nn`]
+//!   3. `dWo[S,D]    = Err[B,S]ᵀ · Wi[B,D]`  — [`gemm_tn`]
+//!
+//! All three are organised so the *innermost* loop runs contiguously over
+//! the long `D` axis (the embedding dimension) and autovectorises; the
+//! small `B`/`S` axes are the outer loops.  This is the same reuse
+//! structure MKL gives the paper: `Wo` is loaded once per window and used
+//! across the whole input batch — the locality win over level-1 updates.
+
+use super::vecops::{axpy, dot};
+
+/// `c[m,n] = alpha * a[m,k] · b[n,k]ᵀ + beta * c`  (rows-dot-rows).
+pub fn gemm_nt(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let br = &b[j * k..(j + 1) * k];
+            let d = dot(ar, br);
+            crow[j] = alpha * d + beta * crow[j];
+        }
+    }
+}
+
+/// `c[m,n] = alpha * a[m,k] · b[k,n] + beta * c`.
+///
+/// Single-pass register accumulation: each output row is produced in ONE
+/// sweep over the contiguous `n` axis, accumulating all `k` contributions
+/// in registers (the axpy-per-`l` formulation re-reads and re-writes the
+/// output row `k` times and measured ~6× slower at the paper's shapes —
+/// see EXPERIMENTS.md §Perf).
+pub fn gemm_nn(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let coeff = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        accumulate_rows(n, k, alpha, coeff, 1, b, beta, crow);
+    }
+}
+
+/// `c[m,n] = alpha * a[k,m]ᵀ · b[k,n] + beta * c`.
+///
+/// Same single-pass structure as [`gemm_nn`]; the coefficient for output
+/// row `j` is the strided column `a[:, j]`.
+pub fn gemm_tn(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for j in 0..m {
+        let crow = &mut c[j * n..(j + 1) * n];
+        accumulate_rows(n, k, alpha, &a[j..], m, b, beta, crow);
+    }
+}
+
+/// `crow = alpha * Σ_l coeff[l*stride] · b[l, :] + beta * crow`, one sweep
+/// over `n` with the `k` partial products held in registers.  `k` is
+/// blocked by 4 so the compiler keeps 4 row pointers + 4 coefficients
+/// live and fuses the multiply-adds.
+#[inline]
+fn accumulate_rows(
+    n: usize,
+    k: usize,
+    alpha: f32,
+    coeff: &[f32],
+    stride: usize,
+    b: &[f32],
+    beta: f32,
+    crow: &mut [f32],
+) {
+    if beta == 0.0 {
+        crow.fill(0.0);
+    } else if beta != 1.0 {
+        for x in crow.iter_mut() {
+            *x *= beta;
+        }
+    }
+    let mut l = 0;
+    // Blocks of 4 source rows.
+    while l + 4 <= k {
+        let (c0, c1, c2, c3) = (
+            alpha * coeff[l * stride],
+            alpha * coeff[(l + 1) * stride],
+            alpha * coeff[(l + 2) * stride],
+            alpha * coeff[(l + 3) * stride],
+        );
+        let b0 = &b[l * n..(l + 1) * n];
+        let b1 = &b[(l + 1) * n..(l + 2) * n];
+        let b2 = &b[(l + 2) * n..(l + 3) * n];
+        let b3 = &b[(l + 3) * n..(l + 4) * n];
+        for j in 0..n {
+            crow[j] += c0 * b0[j] + c1 * b1[j] + c2 * b2[j] + c3 * b3[j];
+        }
+        l += 4;
+    }
+    // Remainder pair (k = 4q+2/4q+3 is the common SGNS case: S = 6).
+    if l + 2 <= k {
+        let (c0, c1) = (alpha * coeff[l * stride], alpha * coeff[(l + 1) * stride]);
+        let b0 = &b[l * n..(l + 1) * n];
+        let b1 = &b[(l + 1) * n..(l + 2) * n];
+        for j in 0..n {
+            crow[j] += c0 * b0[j] + c1 * b1[j];
+        }
+        l += 2;
+    }
+    if l < k {
+        let cl = alpha * coeff[l * stride];
+        if cl != 0.0 {
+            axpy(cl, &b[l * n..(l + 1) * n], crow);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256ss;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Xoshiro256ss::new(seed);
+        (0..n).map(|_| r.next_f32() - 0.5).collect()
+    }
+
+    fn naive_nt(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for l in 0..k {
+                    c[i * n + j] += a[i * k + l] * b[j * k + l];
+                }
+            }
+        }
+        c
+    }
+
+    fn naive_nn(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for l in 0..k {
+                    c[i * n + j] += a[i * k + l] * b[l * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn naive_tn(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for l in 0..k {
+                    c[i * n + j] += a[l * m + i] * b[l * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < 1e-3, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    // Shapes including the paper's (16, 6, 300) and awkward remainders.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (2, 3, 5),
+        (16, 6, 300),
+        (6, 16, 300),
+        (7, 9, 13),
+        (16, 6, 7),
+        (1, 6, 300),
+    ];
+
+    #[test]
+    fn nt_matches_naive() {
+        for &(m, n, k) in SHAPES {
+            let a = randv(m * k, 1);
+            let b = randv(n * k, 2);
+            let mut c = vec![0.0; m * n];
+            gemm_nt(m, n, k, 1.0, &a, &b, 0.0, &mut c);
+            close(&c, &naive_nt(m, n, k, &a, &b));
+        }
+    }
+
+    #[test]
+    fn nn_matches_naive() {
+        for &(m, n, k) in SHAPES {
+            let a = randv(m * k, 3);
+            let b = randv(k * n, 4);
+            let mut c = vec![0.0; m * n];
+            gemm_nn(m, n, k, 1.0, &a, &b, 0.0, &mut c);
+            close(&c, &naive_nn(m, n, k, &a, &b));
+        }
+    }
+
+    #[test]
+    fn tn_matches_naive() {
+        for &(m, n, k) in SHAPES {
+            let a = randv(k * m, 5);
+            let b = randv(k * n, 6);
+            let mut c = vec![0.0; m * n];
+            gemm_tn(m, n, k, 1.0, &a, &b, 0.0, &mut c);
+            close(&c, &naive_tn(m, n, k, &a, &b));
+        }
+    }
+
+    #[test]
+    fn alpha_beta_semantics() {
+        let (m, n, k) = (4, 3, 8);
+        let a = randv(m * k, 7);
+        let b = randv(n * k, 8);
+        let c0 = randv(m * n, 9);
+
+        let mut c = c0.clone();
+        gemm_nt(m, n, k, 2.0, &a, &b, 0.5, &mut c);
+        let plain = naive_nt(m, n, k, &a, &b);
+        for i in 0..m * n {
+            let want = 2.0 * plain[i] + 0.5 * c0[i];
+            assert!((c[i] - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sgns_gemm_chain_consistency() {
+        // The three GEMMs chained as the trainer uses them must equal the
+        // direct per-pair computation (mirrors the python oracle).
+        let (bsz, s, d) = (8, 6, 32);
+        let wi = randv(bsz * d, 10);
+        let wo = randv(s * d, 11);
+        let lr = 0.025f32;
+
+        let mut logits = vec![0.0; bsz * s];
+        gemm_nt(bsz, s, d, 1.0, &wi, &wo, 0.0, &mut logits);
+        let mut err = vec![0.0; bsz * s];
+        for i in 0..bsz {
+            for j in 0..s {
+                let label = if j == 0 { 1.0 } else { 0.0 };
+                let sig = 1.0 / (1.0 + (-logits[i * s + j]).exp());
+                err[i * s + j] = (label - sig) * lr;
+            }
+        }
+        let mut dwi = vec![0.0; bsz * d];
+        gemm_nn(bsz, d, s, 1.0, &err, &wo, 0.0, &mut dwi);
+        let mut dwo = vec![0.0; s * d];
+        gemm_tn(s, d, bsz, 1.0, &err, &wi, 0.0, &mut dwo);
+
+        // Naive per-pair accumulation (Algorithm 1 with end-of-batch updates).
+        let mut ndwi = vec![0.0f32; bsz * d];
+        let mut ndwo = vec![0.0f32; s * d];
+        for i in 0..bsz {
+            for j in 0..s {
+                let mut inn = 0.0;
+                for l in 0..d {
+                    inn += wi[i * d + l] * wo[j * d + l];
+                }
+                let label = if j == 0 { 1.0 } else { 0.0 };
+                let g = (label - 1.0 / (1.0 + (-inn).exp())) * lr;
+                for l in 0..d {
+                    ndwi[i * d + l] += g * wo[j * d + l];
+                    ndwo[j * d + l] += g * wi[i * d + l];
+                }
+            }
+        }
+        close(&dwi, &ndwi);
+        close(&dwo, &ndwo);
+    }
+}

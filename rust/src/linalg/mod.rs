@@ -1,0 +1,15 @@
+//! Level-1/2/3 BLAS substrate (MKL substitute; DESIGN.md §3).
+//!
+//! The paper's entire argument is a contrast between BLAS levels:
+//! level-1 dot/axpy (original word2vec), level-2 matrix–vector (BIDMach's
+//! organisation), and level-3 GEMM (the paper's scheme).  Each trainer
+//! back-end in `crate::train` uses exactly the primitives of its level, so
+//! the measured contrast mirrors the paper's.
+
+pub mod gemm;
+pub mod sigmoid;
+pub mod vecops;
+
+pub use gemm::{gemm_nn, gemm_nt, gemm_tn};
+pub use sigmoid::{sigmoid_exact, SigmoidTable};
+pub use vecops::{axpy, dot, scale_add};

@@ -1,0 +1,115 @@
+//! Logistic function: exact, and the original word2vec's precomputed
+//! `EXP_TABLE` (1000 entries over [-6, 6], saturating outside), used by the
+//! scalar baseline for bit-level fidelity to the C code's behaviour.
+
+/// Exact numerically-stable sigmoid.
+#[inline]
+pub fn sigmoid_exact(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// word2vec's EXP_TABLE: `table[i] = sigma((i/SIZE*2 - 1) * MAX_EXP)`.
+pub struct SigmoidTable {
+    table: Vec<f32>,
+    max_exp: f32,
+}
+
+impl SigmoidTable {
+    pub const DEFAULT_SIZE: usize = 1000;
+    pub const DEFAULT_MAX_EXP: f32 = 6.0;
+
+    pub fn new(size: usize, max_exp: f32) -> Self {
+        let mut table = Vec::with_capacity(size);
+        for i in 0..size {
+            // exp table as in word2vec: exp((i / size * 2 - 1) * MAX_EXP)
+            let e = ((i as f32 / size as f32 * 2.0 - 1.0) * max_exp).exp();
+            table.push(e / (e + 1.0));
+        }
+        Self { table, max_exp }
+    }
+
+    pub fn default_table() -> Self {
+        Self::new(Self::DEFAULT_SIZE, Self::DEFAULT_MAX_EXP)
+    }
+
+    /// Lookup with the original's saturation: returns 1 for x >= MAX_EXP,
+    /// 0 for x <= -MAX_EXP.  (The C code *skips* the update in the
+    /// saturated region for the positive/negative label logic; callers
+    /// replicate that where needed.)
+    #[inline]
+    pub fn get(&self, x: f32) -> f32 {
+        if x >= self.max_exp {
+            1.0
+        } else if x <= -self.max_exp {
+            0.0
+        } else {
+            let idx = ((x + self.max_exp)
+                * (self.table.len() as f32 / self.max_exp / 2.0))
+                as usize;
+            self.table[idx.min(self.table.len() - 1)]
+        }
+    }
+
+    /// The saturation bound MAX_EXP.
+    #[inline]
+    pub fn max(&self) -> f32 {
+        self.max_exp
+    }
+
+    /// Whether the original code would skip this activation entirely
+    /// (|x| > MAX_EXP ⇒ gradient treated as 0 or ±1 clamp).
+    #[inline]
+    pub fn saturated(&self, x: f32) -> bool {
+        x.abs() >= self.max_exp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_matches_definition() {
+        for &x in &[-30.0f32, -6.0, -1.0, 0.0, 0.5, 6.0, 30.0] {
+            let want = 1.0 / (1.0 + (-x as f64).exp());
+            assert!((sigmoid_exact(x) as f64 - want).abs() < 1e-6, "x={x}");
+        }
+    }
+
+    #[test]
+    fn table_close_to_exact_in_range() {
+        let t = SigmoidTable::default_table();
+        for i in -59..=59 {
+            let x = i as f32 * 0.1;
+            let err = (t.get(x) - sigmoid_exact(x)).abs();
+            assert!(err < 0.01, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn table_saturates() {
+        let t = SigmoidTable::default_table();
+        assert_eq!(t.get(6.0), 1.0);
+        assert_eq!(t.get(100.0), 1.0);
+        assert_eq!(t.get(-6.0), 0.0);
+        assert_eq!(t.get(-100.0), 0.0);
+        assert!(t.saturated(6.5));
+        assert!(!t.saturated(5.9));
+    }
+
+    #[test]
+    fn table_monotone() {
+        let t = SigmoidTable::default_table();
+        let mut prev = -1.0f32;
+        for i in -600..=600 {
+            let v = t.get(i as f32 * 0.01);
+            assert!(v >= prev - 1e-6);
+            prev = v;
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Level-1 BLAS primitives: the operations Algorithm 1 is made of.
+//!
+//! These are written with fixed-width chunking so LLVM autovectorises them
+//! (verified in the perf pass — see EXPERIMENTS.md §Perf); they are the
+//! fair "original word2vec" baseline, not a strawman.
+
+/// Dot product `<a, b>`.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let (ac, ar) = a.split_at(a.len() - a.len() % 8);
+    let (bc, br) = b.split_at(ac.len());
+    for (ca, cb) in ac.chunks_exact(8).zip(bc.chunks_exact(8)) {
+        for i in 0..8 {
+            acc[i] += ca[i] * cb[i];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for (x, y) in ar.iter().zip(br) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y += alpha * x` (the model-update primitive of Algorithm 1).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n8 = x.len() - x.len() % 8;
+    let (xc, xr) = x.split_at(n8);
+    let (yc, yr) = y.split_at_mut(n8);
+    for (cx, cy) in xc.chunks_exact(8).zip(yc.chunks_exact_mut(8)) {
+        for i in 0..8 {
+            cy[i] += alpha * cx[i];
+        }
+    }
+    for (x, y) in xr.iter().zip(yr) {
+        *y += alpha * x;
+    }
+}
+
+/// `y = a*x + b*y` elementwise (used by AdaGrad/RMSProp accumulators).
+#[inline]
+pub fn scale_add(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi = a * xi + b * *yi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        // Cover remainder handling: lengths around the chunk width.
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 300] {
+            let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.91).cos()).collect();
+            let got = dot(&a, &b);
+            let want = naive_dot(&a, &b);
+            assert!((got - want).abs() < 1e-4, "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_naive() {
+        for n in [1usize, 7, 8, 13, 300] {
+            let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let mut y: Vec<f32> = (0..n).map(|i| (i as f32) * 0.5).collect();
+            let mut want = y.clone();
+            axpy(0.25, &x, &mut y);
+            for (w, xi) in want.iter_mut().zip(&x) {
+                *w += 0.25 * xi;
+            }
+            assert_eq!(y, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scale_add_basic() {
+        let x = [1.0f32, 2.0];
+        let mut y = [10.0f32, 20.0];
+        scale_add(2.0, &x, 0.5, &mut y);
+        assert_eq!(y, [7.0, 14.0]);
+    }
+}

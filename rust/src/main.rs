@@ -1,0 +1,287 @@
+//! `pw2v` — the command-line launcher.
+//!
+//! Subcommands:
+//!   gen-corpus   generate a synthetic latent-model corpus + test sets
+//!   train        shared-memory training (backend selectable)
+//!   train-dist   distributed data-parallel training (replica threads)
+//!   eval         evaluate saved vectors on similarity/analogy sets
+//!   simulate     regenerate the paper's Fig 3 / Fig 4 scaling curves
+//!   info         runtime + artifact diagnostics
+
+use std::path::PathBuf;
+
+use pw2v::config::TrainConfig;
+use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
+use pw2v::corpus::vocab::Vocab;
+use pw2v::dist::{train_distributed, DistConfig, SyncPolicy};
+use pw2v::eval;
+use pw2v::model::{io as model_io, SharedModel};
+use pw2v::perfmodel::{self, simulate};
+use pw2v::train;
+use pw2v::util::args::Args;
+use pw2v::util::si;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let cmd = std::env::args().nth(1).unwrap_or_default();
+    let args = Args::from_env_tail(2);
+    match cmd.as_str() {
+        "gen-corpus" => gen_corpus(&args),
+        "train" => cmd_train(&args),
+        "train-dist" => cmd_train_dist(&args),
+        "eval" => cmd_eval(&args),
+        "simulate" => cmd_simulate(&args),
+        "info" => cmd_info(&args),
+        "" | "help" | "--help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' (try `pw2v help`)"),
+    }
+}
+
+const HELP: &str = "\
+pw2v — Parallelizing Word2Vec in Shared and Distributed Memory (Ji et al. 2016)
+
+USAGE: pw2v <subcommand> [--key value ...]
+
+  gen-corpus  --out corpus.txt [--tokens N --vocab V --seed S]
+              [--simset sim.tsv --anaset ana.txt]
+  train       --corpus corpus.txt --out vectors.txt
+              [--backend scalar|bidmach|gemm|pjrt --threads T --dim D ...]
+  train-dist  --corpus corpus.txt --nodes N [--sync-interval W --policy sub|full]
+              [--out vectors.txt]
+  eval        --vectors vectors.txt [--simset sim.tsv] [--anaset ana.txt]
+  simulate    --figure 3|4 [--machine bdw|knl|hsw]
+  info        [--artifacts-dir artifacts]
+";
+
+fn gen_corpus(a: &Args) -> anyhow::Result<()> {
+    let out: String = a.required("out")?;
+    let mut scfg = SyntheticConfig::default();
+    scfg.tokens = a.get("tokens", scfg.tokens)?;
+    scfg.vocab = a.get("vocab", scfg.vocab)?;
+    scfg.clusters = a.get("clusters", scfg.clusters)?;
+    scfg.seed = a.get("seed", scfg.seed)?;
+    let simset: Option<String> = a.opt("simset")?;
+    let anaset: Option<String> = a.opt("anaset")?;
+    a.check_unknown()?;
+
+    eprintln!(
+        "generating {} tokens, vocab {}, {} clusters ...",
+        scfg.tokens, scfg.vocab, scfg.clusters
+    );
+    let lm = LatentModel::new(scfg);
+    let n = lm.write_corpus(&out)?;
+    eprintln!("wrote {n} tokens to {out}");
+    if let Some(p) = simset {
+        let set = eval::gen_similarity_set(&lm, 350, 7);
+        eval::datasets::save_similarity_set(&p, &set)?;
+        eprintln!("wrote {} similarity pairs to {p}", set.len());
+    }
+    if let Some(p) = anaset {
+        let set = eval::gen_analogy_set(&lm);
+        eval::datasets::save_analogy_set(&p, &set)?;
+        eprintln!("wrote {} analogy questions to {p}", set.len());
+    }
+    Ok(())
+}
+
+fn cmd_train(a: &Args) -> anyhow::Result<()> {
+    let corpus = PathBuf::from(a.required::<String>("corpus")?);
+    let out: Option<String> = a.opt("out")?;
+    let mut cfg = TrainConfig::default();
+    if let Some(f) = a.opt::<String>("config")? {
+        cfg.load_file(f)?;
+    }
+    cfg.apply_args(a)?;
+    a.check_unknown()?;
+
+    eprintln!("building vocabulary ...");
+    let vocab = Vocab::build_from_file(&corpus, cfg.min_count)?;
+    eprintln!(
+        "vocab {} words, corpus {} tokens",
+        vocab.len(),
+        vocab.total_words()
+    );
+    let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+    eprintln!(
+        "training: backend={} threads={} dim={} epochs={}",
+        cfg.backend, cfg.threads, cfg.dim, cfg.epochs
+    );
+    let outcome = train::train(&cfg, &corpus, &vocab, &model)?;
+    let snap = outcome.snapshot;
+    eprintln!(
+        "done: {} words in {:.1}s = {} words/sec ({} windows, {} calls)",
+        snap.words,
+        snap.secs,
+        si(snap.words_per_sec()),
+        snap.windows,
+        snap.calls
+    );
+    if let Some(p) = out {
+        model_io::save_text(&p, &vocab, model.m_in())?;
+        eprintln!("vectors saved to {p}");
+    }
+    Ok(())
+}
+
+fn cmd_train_dist(a: &Args) -> anyhow::Result<()> {
+    let corpus = PathBuf::from(a.required::<String>("corpus")?);
+    let nodes: usize = a.get("nodes", 2)?;
+    let out: Option<String> = a.opt("out")?;
+    let mut cfg = TrainConfig::default();
+    cfg.apply_args(a)?;
+    let mut dist = DistConfig::for_nodes(nodes);
+    dist.sync_interval = a.get("sync-interval", dist.sync_interval)?;
+    match a.opt::<String>("policy")?.as_deref() {
+        Some("full") => dist.policy = SyncPolicy::Full,
+        Some("sub") | None => {}
+        Some(p) => anyhow::bail!("unknown policy '{p}' (sub|full)"),
+    }
+    if a.flag("no-lr-scaling") {
+        dist.scale_lr = false;
+    }
+    a.check_unknown()?;
+
+    let vocab = Vocab::build_from_file(&corpus, cfg.min_count)?;
+    eprintln!(
+        "distributed training: {} nodes, sync every {} words, vocab {}",
+        nodes,
+        dist.sync_interval,
+        vocab.len()
+    );
+    let outcome = train_distributed(&cfg, &dist, &corpus, &vocab)?;
+    eprintln!(
+        "done: {} words in {:.1}s = {} words/sec aggregate",
+        outcome.words,
+        outcome.secs,
+        si(outcome.words as f64 / outcome.secs.max(1e-9))
+    );
+    for (i, st) in outcome.sync_stats.iter().enumerate() {
+        eprintln!(
+            "  node {i}: {} rounds, {} rows synced, {} wire bytes",
+            st.rounds,
+            st.rows_synced,
+            si(st.wire_bytes as f64)
+        );
+    }
+    if let Some(p) = out {
+        model_io::save_text(&p, &vocab, outcome.model.m_in())?;
+        eprintln!("vectors saved to {p}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(a: &Args) -> anyhow::Result<()> {
+    let vectors: String = a.required("vectors")?;
+    let simset: Option<String> = a.opt("simset")?;
+    let anaset: Option<String> = a.opt("anaset")?;
+    a.check_unknown()?;
+
+    let (words, emb) = model_io::load_text(&vectors)?;
+    // Rebuild a vocab view over the saved order (ranks become counts so
+    // the frequency-sorted invariant holds).
+    let n = words.len();
+    let counts: std::collections::HashMap<String, u64> = words
+        .iter()
+        .enumerate()
+        .map(|(i, w)| (w.clone(), (n - i) as u64))
+        .collect();
+    let vocab = Vocab::from_counts(counts, 1);
+    eprintln!("loaded {} vectors of dim {}", n, emb.dim());
+
+    if let Some(p) = simset {
+        let pairs = eval::load_similarity_set(&p)?;
+        let r = eval::eval_similarity(&pairs, &vocab, &emb);
+        println!(
+            "similarity: rho100 = {:.1} over {}/{} pairs",
+            r.rho100, r.pairs_covered, r.pairs_total
+        );
+    }
+    if let Some(p) = anaset {
+        let qs = eval::load_analogy_set(&p)?;
+        let r = eval::eval_analogy(&qs, &vocab, &emb);
+        println!(
+            "analogy: accuracy = {:.1}% over {}/{} questions",
+            r.accuracy100(),
+            r.covered,
+            r.total
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(a: &Args) -> anyhow::Result<()> {
+    let figure: usize = a.get("figure", 3)?;
+    let machine: String = a.get("machine", "bdw".to_string())?;
+    a.check_unknown()?;
+    let spec = match machine.as_str() {
+        "bdw" => perfmodel::arch::broadwell(),
+        "knl" => perfmodel::arch::knl(),
+        "hsw" => perfmodel::arch::haswell(),
+        m => anyhow::bail!("unknown machine '{m}' (bdw|knl|hsw)"),
+    };
+    let p = simulate::FigParams::default();
+    match figure {
+        3 => {
+            let axis = simulate::fig3_thread_axis(&spec);
+            let (scalar, gemm) =
+                simulate::fig3_series(&spec, &p, 70_000.0, 182_000.0, &axis);
+            println!("# Fig 3 ({}): threads original ours", spec.name);
+            for (s, g) in scalar.iter().zip(&gemm) {
+                println!(
+                    "{:>3}  {:>10}  {:>10}",
+                    s.x,
+                    si(s.words_per_sec),
+                    si(g.words_per_sec)
+                );
+            }
+        }
+        4 => {
+            let fabric = if machine == "knl" {
+                perfmodel::arch::omnipath()
+            } else {
+                perfmodel::arch::fdr_infiniband()
+            };
+            let nodes = [1, 2, 4, 8, 16, 32];
+            let series =
+                simulate::fig4_series(&spec, fabric, &p, 182_000.0, &nodes);
+            println!("# Fig 4 ({} cluster): nodes words/sec", spec.name);
+            for pt in series {
+                println!("{:>3}  {:>10}", pt.x, si(pt.words_per_sec));
+            }
+        }
+        f => anyhow::bail!("unknown figure {f} (3|4)"),
+    }
+    Ok(())
+}
+
+fn cmd_info(a: &Args) -> anyhow::Result<()> {
+    let dir: String = a.get("artifacts-dir", "artifacts".to_string())?;
+    a.check_unknown()?;
+    println!("pw2v {}", env!("CARGO_PKG_VERSION"));
+    match pw2v::runtime::Runtime::cpu() {
+        Ok(rt) => println!("pjrt platform: {}", rt.platform()),
+        Err(e) => println!("pjrt unavailable: {e}"),
+    }
+    match pw2v::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts ({dir}):");
+            for v in &m.entries {
+                println!(
+                    "  {:<28} kind={:<6} W={} B={} S={} D={}",
+                    v.name, v.kind, v.w, v.b, v.s, v.d
+                );
+            }
+        }
+        Err(e) => println!("artifacts: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! Training metrics: lock-free counters shared across worker threads, and
+//! a progress reporter matching the original's "Alpha / progress / words/sec"
+//! log line.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Global counters shared by every worker thread / node.
+#[derive(Debug)]
+pub struct Counters {
+    /// Tokens processed (drives lr decay + throughput).
+    pub words: AtomicU64,
+    /// Windows (superbatch elements) processed.
+    pub windows: AtomicU64,
+    /// Kernel / artifact calls issued.
+    pub calls: AtomicU64,
+    /// Model-synchronisation rounds completed (distributed).
+    pub syncs: AtomicU64,
+    /// Bytes sent over the (simulated or real) transport.
+    pub bytes_sent: AtomicU64,
+    start: Instant,
+}
+
+impl Default for Counters {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self {
+            words: AtomicU64::new(0),
+            windows: AtomicU64::new(0),
+            calls: AtomicU64::new(0),
+            syncs: AtomicU64::new(0),
+            bytes_sent: AtomicU64::new(0),
+            start: Instant::now(),
+        }
+    }
+
+    #[inline]
+    pub fn add_words(&self, n: u64) -> u64 {
+        self.words.fetch_add(n, Ordering::Relaxed) + n
+    }
+
+    #[inline]
+    pub fn add_windows(&self, n: u64) {
+        self.windows.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_calls(&self, n: u64) {
+        self.calls.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_syncs(&self, n: u64) {
+        self.syncs.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_bytes(&self, n: u64) {
+        self.bytes_sent.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn words_now(&self) -> u64 {
+        self.words.load(Ordering::Relaxed)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Words per second since construction.
+    pub fn throughput(&self) -> f64 {
+        let s = self.elapsed_secs();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.words_now() as f64 / s
+        }
+    }
+
+    /// Snapshot for reports.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            words: self.words_now(),
+            windows: self.windows.load(Ordering::Relaxed),
+            calls: self.calls.load(Ordering::Relaxed),
+            syncs: self.syncs.load(Ordering::Relaxed),
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            secs: self.elapsed_secs(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Snapshot {
+    pub words: u64,
+    pub windows: u64,
+    pub calls: u64,
+    pub syncs: u64,
+    pub bytes_sent: u64,
+    pub secs: f64,
+}
+
+impl Snapshot {
+    pub fn words_per_sec(&self) -> f64 {
+        if self.secs <= 0.0 {
+            0.0
+        } else {
+            self.words as f64 / self.secs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crossbeam_utils::thread;
+
+    #[test]
+    fn counters_accumulate_across_threads() {
+        let c = Counters::new();
+        thread::scope(|s| {
+            for _ in 0..4 {
+                let c = &c;
+                s.spawn(move |_| {
+                    for _ in 0..1000 {
+                        c.add_words(3);
+                        c.add_windows(1);
+                    }
+                });
+            }
+        })
+        .unwrap();
+        assert_eq!(c.words_now(), 12_000);
+        let snap = c.snapshot();
+        assert_eq!(snap.windows, 4_000);
+        assert!(snap.words_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Dense row-major `[V, D]` embedding matrix with cache-line-aligned rows.
+//!
+//! Alignment matters for the paper's argument: false sharing between
+//! adjacent rows is part of the Hogwild coherence traffic (Sec. III-A), so
+//! rows are padded to 64-byte boundaries (`stride >= dim`), matching what a
+//! careful production implementation does.
+
+use crate::util::rng::Xoshiro256ss;
+
+pub const CACHE_LINE: usize = 64;
+const F32_PER_LINE: usize = CACHE_LINE / std::mem::size_of::<f32>();
+
+#[derive(Clone, Debug)]
+pub struct Embedding {
+    vocab: usize,
+    dim: usize,
+    /// Row stride in f32 elements (dim rounded up to the cache line).
+    stride: usize,
+    data: Vec<f32>,
+}
+
+impl Embedding {
+    /// All-zeros matrix (the original initialises `M_out` to zero).
+    pub fn zeros(vocab: usize, dim: usize) -> Self {
+        let stride = crate::util::round_up(dim.max(1), F32_PER_LINE);
+        Self {
+            vocab,
+            dim,
+            stride,
+            data: vec![0.0; vocab * stride],
+        }
+    }
+
+    /// Uniform init in `[-0.5/dim, 0.5/dim)` (the original's `M_in` init).
+    pub fn uniform_init(vocab: usize, dim: usize, seed: u64) -> Self {
+        let mut e = Self::zeros(vocab, dim);
+        let mut rng = Xoshiro256ss::new(seed);
+        for w in 0..vocab {
+            let row = e.row_mut(w as u32);
+            for x in row.iter_mut() {
+                *x = (rng.next_f32() - 0.5) / dim as f32;
+            }
+        }
+        e
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    #[inline]
+    pub fn row(&self, w: u32) -> &[f32] {
+        let o = w as usize * self.stride;
+        &self.data[o..o + self.dim]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, w: u32) -> &mut [f32] {
+        let o = w as usize * self.stride;
+        &mut self.data[o..o + self.dim]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Raw base pointer (for the Hogwild wrapper).
+    pub(crate) fn as_ptr(&self) -> *const f32 {
+        self.data.as_ptr()
+    }
+
+    /// L2-normalised copy of a row (for cosine evaluation).
+    pub fn unit_row(&self, w: u32) -> Vec<f32> {
+        let r = self.row(w);
+        let n = r.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+        r.iter().map(|x| x / n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_cache_aligned() {
+        for dim in [1usize, 15, 16, 17, 100, 300] {
+            let e = Embedding::zeros(10, dim);
+            assert_eq!(e.stride() % F32_PER_LINE, 0, "dim={dim}");
+            assert!(e.stride() >= dim);
+            // Base allocation of Vec<f32> is at least 4-aligned; row offsets
+            // are multiples of 16 f32s = 64 bytes apart.
+            let a = e.row(3).as_ptr() as usize;
+            let b = e.row(4).as_ptr() as usize;
+            assert_eq!((b - a) % CACHE_LINE, 0);
+        }
+    }
+
+    #[test]
+    fn uniform_init_range_and_determinism() {
+        let a = Embedding::uniform_init(100, 50, 7);
+        let b = Embedding::uniform_init(100, 50, 7);
+        assert_eq!(a.data(), b.data());
+        let bound = 0.5 / 50.0;
+        for w in 0..100u32 {
+            for &x in a.row(w) {
+                assert!(x >= -bound && x < bound);
+            }
+        }
+        // Not all zero.
+        assert!(a.data().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn row_mut_isolated() {
+        let mut e = Embedding::zeros(4, 3);
+        e.row_mut(1).copy_from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(e.row(0), &[0.0, 0.0, 0.0]);
+        assert_eq!(e.row(1), &[1.0, 2.0, 3.0]);
+        assert_eq!(e.row(2), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn unit_row_normalises() {
+        let mut e = Embedding::zeros(1, 4);
+        e.row_mut(0).copy_from_slice(&[3.0, 0.0, 4.0, 0.0]);
+        let u = e.unit_row(0);
+        assert!((u[0] - 0.6).abs() < 1e-6);
+        assert!((u[2] - 0.8).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,194 @@
+//! Hogwild shared-model wrapper: lock-free concurrent mutation of the two
+//! embedding matrices (Niu et al. 2011, as used by word2vec and by the
+//! paper's "Hogwild over GEMM blocks" scheme, Sec. III-C).
+//!
+//! # Safety model
+//!
+//! Hogwild updates are *deliberately racy*: threads read and write model
+//! rows without synchronisation, accepting lost/torn updates as algorithmic
+//! noise (the paper's convergence argument).  Rust's reference model cannot
+//! express "benign" data races through `&mut`, so this wrapper hands out
+//! raw-pointer row views.  Two invariants keep this sound enough in
+//! practice (identical to the C original's guarantees):
+//!
+//! * the allocation is owned by [`SharedModel`] and outlives all workers
+//!   (workers borrow the `SharedModel`, enforced by scoped threads);
+//! * reads/writes are plain f32 loads/stores — torn values are possible in
+//!   principle but are exactly the approximation Hogwild admits.
+//!
+//! All mutation flows through `row_in/row_out` + `apply_delta`, keeping the
+//! unsafety in one audited module.
+
+use super::embedding::Embedding;
+use crate::linalg::vecops::axpy;
+
+/// The shared `{M_in, M_out}` pair of the paper's Ω.
+pub struct SharedModel {
+    m_in: Embedding,
+    m_out: Embedding,
+}
+
+// SAFETY: see module docs — concurrent mutation is the Hogwild contract.
+unsafe impl Sync for SharedModel {}
+
+impl SharedModel {
+    pub fn new(m_in: Embedding, m_out: Embedding) -> Self {
+        assert_eq!(m_in.vocab(), m_out.vocab());
+        assert_eq!(m_in.dim(), m_out.dim());
+        Self { m_in, m_out }
+    }
+
+    /// Standard word2vec init: `M_in` uniform, `M_out` zeros.
+    pub fn init(vocab: usize, dim: usize, seed: u64) -> Self {
+        Self::new(
+            Embedding::uniform_init(vocab, dim, seed),
+            Embedding::zeros(vocab, dim),
+        )
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.m_in.vocab()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.m_in.dim()
+    }
+
+    /// Immutable view of the input matrix (evaluation path, single-threaded).
+    pub fn m_in(&self) -> &Embedding {
+        &self.m_in
+    }
+
+    pub fn m_out(&self) -> &Embedding {
+        &self.m_out
+    }
+
+    /// Exclusive views (setup / sync phases where `&mut self` is held).
+    pub fn m_in_mut(&mut self) -> &mut Embedding {
+        &mut self.m_in
+    }
+
+    pub fn m_out_mut(&mut self) -> &mut Embedding {
+        &mut self.m_out
+    }
+
+    /// Racy mutable view of an input row.
+    ///
+    /// # Safety
+    /// Caller must be a Hogwild worker scoped inside the model's lifetime;
+    /// concurrent calls on the same row are permitted by the algorithm.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_in(&self, w: u32) -> &mut [f32] {
+        let o = w as usize * self.m_in.stride();
+        std::slice::from_raw_parts_mut(
+            (self.m_in.as_ptr() as *mut f32).add(o),
+            self.m_in.dim(),
+        )
+    }
+
+    /// Racy mutable view of an output row (same contract as [`row_in`]).
+    ///
+    /// # Safety
+    /// See [`Self::row_in`].
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_out(&self, w: u32) -> &mut [f32] {
+        let o = w as usize * self.m_out.stride();
+        std::slice::from_raw_parts_mut(
+            (self.m_out.as_ptr() as *mut f32).add(o),
+            self.m_out.dim(),
+        )
+    }
+
+    /// Scatter-add a delta into an input row (`M_in[w] += delta`).
+    #[inline]
+    pub fn add_in(&self, w: u32, delta: &[f32]) {
+        // SAFETY: Hogwild contract (module docs).
+        unsafe { axpy(1.0, delta, self.row_in(w)) }
+    }
+
+    /// Scatter-add a delta into an output row.
+    #[inline]
+    pub fn add_out(&self, w: u32, delta: &[f32]) {
+        // SAFETY: Hogwild contract (module docs).
+        unsafe { axpy(1.0, delta, self.row_out(w)) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crossbeam_utils::thread;
+
+    #[test]
+    fn init_shapes() {
+        let m = SharedModel::init(100, 32, 1);
+        assert_eq!(m.vocab(), 100);
+        assert_eq!(m.dim(), 32);
+        // M_out starts zero, M_in doesn't.
+        assert!(m.m_out().data().iter().all(|&x| x == 0.0));
+        assert!(m.m_in().data().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn add_applies_delta() {
+        let m = SharedModel::init(10, 4, 2);
+        let before = m.m_in().row(3).to_vec();
+        m.add_in(3, &[1.0, 2.0, 3.0, 4.0]);
+        let after = m.m_in().row(3);
+        for i in 0..4 {
+            assert!((after[i] - before[i] - (i + 1) as f32).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn concurrent_disjoint_updates_all_land() {
+        // With disjoint rows there are no conflicts, so every update must
+        // be applied exactly.
+        let m = SharedModel::init(64, 8, 3);
+        thread::scope(|s| {
+            for t in 0..4u32 {
+                let m = &m;
+                s.spawn(move |_| {
+                    for _ in 0..1000 {
+                        for w in (t * 16)..(t * 16 + 16) {
+                            m.add_out(w, &[1.0; 8]);
+                        }
+                    }
+                });
+            }
+        })
+        .unwrap();
+        for w in 0..64u32 {
+            for &x in m.m_out().row(w) {
+                assert_eq!(x, 1000.0, "row {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_conflicting_updates_mostly_land() {
+        // Hogwild on the SAME row: losses are allowed but must be a small
+        // fraction on this hardware (sanity check of the coherence story).
+        let m = SharedModel::init(1, 8, 4);
+        let per_thread = 50_000;
+        let threads = 4;
+        thread::scope(|s| {
+            for _ in 0..threads {
+                let m = &m;
+                s.spawn(move |_| {
+                    for _ in 0..per_thread {
+                        m.add_out(0, &[1.0; 8]);
+                    }
+                });
+            }
+        })
+        .unwrap();
+        let expected = (per_thread * threads) as f32;
+        for &x in m.m_out().row(0) {
+            assert!(x > expected * 0.5, "lost too many updates: {x}/{expected}");
+            assert!(x <= expected + 0.5);
+        }
+    }
+}

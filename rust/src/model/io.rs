@@ -1,0 +1,186 @@
+//! word2vec vector-file persistence, both classic formats:
+//!
+//! * text:   header `V D\n`, then `word v1 v2 ... vD\n` per word;
+//! * binary: header `V D\n`, then `word<SPACE>` + D little-endian f32s.
+//!
+//! Interoperable with gensim / the original distribution's tools.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::embedding::Embedding;
+use crate::corpus::vocab::Vocab;
+
+/// Save `M_in` (the word vectors) in text format.
+pub fn save_text<P: AsRef<Path>>(
+    path: P,
+    vocab: &Vocab,
+    emb: &Embedding,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(vocab.len() == emb.vocab(), "vocab/matrix size mismatch");
+    let mut w = BufWriter::with_capacity(1 << 20, std::fs::File::create(path)?);
+    writeln!(w, "{} {}", vocab.len(), emb.dim())?;
+    for id in 0..vocab.len() as u32 {
+        write!(w, "{}", vocab.word(id))?;
+        for &x in emb.row(id) {
+            write!(w, " {x}")?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Save in binary format.
+pub fn save_binary<P: AsRef<Path>>(
+    path: P,
+    vocab: &Vocab,
+    emb: &Embedding,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(vocab.len() == emb.vocab(), "vocab/matrix size mismatch");
+    let mut w = BufWriter::with_capacity(1 << 20, std::fs::File::create(path)?);
+    writeln!(w, "{} {}", vocab.len(), emb.dim())?;
+    for id in 0..vocab.len() as u32 {
+        write!(w, "{} ", vocab.word(id))?;
+        for &x in emb.row(id) {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a text-format vector file: returns `(words, matrix)`.
+pub fn load_text<P: AsRef<Path>>(path: P) -> anyhow::Result<(Vec<String>, Embedding)> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::with_capacity(1 << 20, f);
+    let mut header = String::new();
+    r.read_line(&mut header)?;
+    let (v, d) = parse_header(&header)?;
+    let mut words = Vec::with_capacity(v);
+    let mut emb = Embedding::zeros(v, d);
+    let mut line = String::new();
+    for i in 0..v {
+        line.clear();
+        anyhow::ensure!(r.read_line(&mut line)? > 0, "truncated at row {i}");
+        let mut it = line.split_ascii_whitespace();
+        let word = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty vector line {i}"))?;
+        words.push(word.to_string());
+        let row = emb.row_mut(i as u32);
+        for (j, slot) in row.iter_mut().enumerate() {
+            let tok = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("row {i}: missing dim {j}"))?;
+            *slot = tok.parse()?;
+        }
+    }
+    Ok((words, emb))
+}
+
+/// Load a binary-format vector file.
+pub fn load_binary<P: AsRef<Path>>(
+    path: P,
+) -> anyhow::Result<(Vec<String>, Embedding)> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::with_capacity(1 << 20, f);
+    let mut header = String::new();
+    r.read_line(&mut header)?;
+    let (v, d) = parse_header(&header)?;
+    let mut words = Vec::with_capacity(v);
+    let mut emb = Embedding::zeros(v, d);
+    for i in 0..v {
+        // word bytes up to space
+        let mut word = Vec::new();
+        loop {
+            let mut b = [0u8; 1];
+            r.read_exact(&mut b)?;
+            if b[0] == b' ' {
+                break;
+            }
+            word.push(b[0]);
+        }
+        words.push(String::from_utf8(word)?);
+        let row = emb.row_mut(i as u32);
+        let mut buf = vec![0u8; 4 * d];
+        r.read_exact(&mut buf)?;
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = f32::from_le_bytes(buf[4 * j..4 * j + 4].try_into().unwrap());
+        }
+        // trailing newline
+        let mut nl = [0u8; 1];
+        r.read_exact(&mut nl)?;
+    }
+    Ok((words, emb))
+}
+
+fn parse_header(line: &str) -> anyhow::Result<(usize, usize)> {
+    let mut it = line.split_ascii_whitespace();
+    let v = it
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("bad header"))?
+        .parse()?;
+    let d = it
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("bad header"))?
+        .parse()?;
+    Ok((v, d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (Vocab, Embedding) {
+        let vocab = Vocab::build("b a a".split_whitespace(), 1);
+        let mut emb = Embedding::zeros(2, 3);
+        emb.row_mut(0).copy_from_slice(&[1.5, -2.0, 0.25]);
+        emb.row_mut(1).copy_from_slice(&[0.0, 3.0, -0.125]);
+        (vocab, emb)
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let (vocab, emb) = sample();
+        let path = std::env::temp_dir().join("pw2v_io_text.vec");
+        save_text(&path, &vocab, &emb).unwrap();
+        let (words, got) = load_text(&path).unwrap();
+        assert_eq!(words, vec!["a".to_string(), "b".to_string()]);
+        for i in 0..2u32 {
+            assert_eq!(got.row(i), emb.row(i));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let (vocab, emb) = sample();
+        let path = std::env::temp_dir().join("pw2v_io_bin.vec");
+        save_binary(&path, &vocab, &emb).unwrap();
+        let (words, got) = load_binary(&path).unwrap();
+        assert_eq!(words.len(), 2);
+        for i in 0..2u32 {
+            assert_eq!(got.row(i), emb.row(i));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let (vocab, _) = sample();
+        let emb = Embedding::zeros(5, 3);
+        let path = std::env::temp_dir().join("pw2v_io_bad.vec");
+        assert!(save_text(&path, &vocab, &emb).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_text_rejected() {
+        let path = std::env::temp_dir().join("pw2v_io_trunc.vec");
+        std::fs::write(&path, "3 2\nw0 1 2\n").unwrap();
+        assert!(load_text(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

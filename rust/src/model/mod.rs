@@ -1,0 +1,9 @@
+//! Model substrate: the `[V, D]` embedding matrices `M_in`/`M_out`, their
+//! lock-free Hogwild sharing wrapper, and word2vec-format persistence.
+
+pub mod embedding;
+pub mod hogwild;
+pub mod io;
+
+pub use embedding::Embedding;
+pub use hogwild::SharedModel;

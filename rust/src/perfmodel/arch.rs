@@ -1,0 +1,140 @@
+//! Machine descriptors for the paper's testbeds (Sec. IV-A) plus the GPU
+//! comparison points quoted from BIDMach [10].
+
+/// A shared-memory machine.
+#[derive(Clone, Debug)]
+pub struct MachineSpec {
+    pub name: &'static str,
+    /// Physical cores (all sockets).
+    pub cores: usize,
+    /// Hardware threads per core (SMT/HT).
+    pub smt: usize,
+    pub sockets: usize,
+    pub freq_ghz: f64,
+    /// f32 FLOPs per cycle per core (FMA × vector width × ports).
+    pub flops_per_cycle: f64,
+    /// Aggregate memory bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Same-socket cache-line transfer latency, ns.
+    pub coh_ns_same: f64,
+    /// Cross-socket line transfer latency, ns.
+    pub coh_ns_cross: f64,
+}
+
+impl MachineSpec {
+    /// Peak single-precision TFLOP/s.
+    pub fn peak_tflops(&self) -> f64 {
+        self.cores as f64 * self.freq_ghz * self.flops_per_cycle / 1e3
+    }
+
+    pub fn threads(&self) -> usize {
+        self.cores * self.smt
+    }
+
+    pub fn cores_per_socket(&self) -> usize {
+        self.cores / self.sockets
+    }
+}
+
+/// Dual-socket Haswell E5-2680 v3 (paper Table III).
+pub fn haswell() -> MachineSpec {
+    MachineSpec {
+        name: "Intel HSW (Xeon E5-2680 v3)",
+        cores: 24,
+        smt: 2,
+        sockets: 2,
+        freq_ghz: 2.5,
+        flops_per_cycle: 32.0, // AVX2 FMA: 2×8×2
+        mem_bw_gbs: 136.0,
+        coh_ns_same: 60.0,
+        coh_ns_cross: 180.0,
+    }
+}
+
+/// Dual-socket Broadwell E5-2697 v4 (the paper's main machine: 36 cores).
+pub fn broadwell() -> MachineSpec {
+    MachineSpec {
+        name: "Intel BDW (Xeon E5-2697 v4)",
+        cores: 36,
+        smt: 2,
+        sockets: 2,
+        freq_ghz: 2.3,
+        flops_per_cycle: 32.0,
+        mem_bw_gbs: 154.0,
+        coh_ns_same: 60.0,
+        coh_ns_cross: 180.0,
+    }
+}
+
+/// Knights Landing Xeon Phi, 68 cores (single socket, MCDRAM).
+pub fn knl() -> MachineSpec {
+    MachineSpec {
+        name: "Intel KNL (Xeon Phi)",
+        cores: 68,
+        smt: 4,
+        sockets: 1,
+        freq_ghz: 1.4,
+        flops_per_cycle: 64.0, // AVX-512 FMA ×2
+        mem_bw_gbs: 400.0,     // MCDRAM
+        coh_ns_same: 120.0,    // mesh is slower per hop
+        coh_ns_cross: 120.0,
+    }
+}
+
+/// GPU throughput points quoted from BIDMach [10] (words/sec on the 1B
+/// benchmark) — the paper quotes these rather than re-running them.
+pub fn bidmach_gpu_points() -> Vec<(&'static str, f64)> {
+    vec![
+        ("Nvidia K40 (BIDMach)", 4.2e6),
+        ("Nvidia GeForce Titan-X (BIDMach)", 8.5e6),
+    ]
+}
+
+/// Cluster fabric descriptor (Sec. III-E).
+#[derive(Clone, Debug)]
+pub struct FabricSpec {
+    pub name: &'static str,
+    /// Per-node bandwidth, GB/s.
+    pub bw_gbs: f64,
+    /// Per-collective latency, µs.
+    pub latency_us: f64,
+}
+
+/// FDR InfiniBand (Broadwell cluster).
+pub fn fdr_infiniband() -> FabricSpec {
+    FabricSpec {
+        name: "FDR InfiniBand",
+        bw_gbs: 6.8,
+        latency_us: 3.0,
+    }
+}
+
+/// Intel Omni-Path (KNL cluster).
+pub fn omnipath() -> FabricSpec {
+    FabricSpec {
+        name: "Intel OPA",
+        bw_gbs: 12.3,
+        latency_us: 2.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_flops_sane() {
+        // BDW: 36 × 2.3 × 32 ≈ 2.65 TFLOP/s (paper: Titan-X has ~3× BDW).
+        let bdw = broadwell().peak_tflops();
+        assert!((2.0..3.5).contains(&bdw), "bdw={bdw}");
+        let knl = knl().peak_tflops();
+        assert!(knl > bdw, "knl should exceed bdw");
+    }
+
+    #[test]
+    fn threads_and_sockets() {
+        assert_eq!(broadwell().threads(), 72);
+        assert_eq!(broadwell().cores_per_socket(), 18);
+        assert_eq!(knl().threads(), 272);
+    }
+}

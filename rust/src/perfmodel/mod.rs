@@ -1,0 +1,29 @@
+//! Calibrated performance model — the substitute for the paper's 36-core
+//! Broadwell / 68-core KNL machines and 32-node clusters (this box has
+//! one vCPU; DESIGN.md §3).
+//!
+//! The paper's scaling claims are, at bottom, arithmetic about (a) how many
+//! model updates each scheme performs per trained word and (b) what each
+//! update costs when other threads/nodes contend for the same cache lines
+//! or NIC.  This module implements exactly that arithmetic:
+//!
+//! * [`arch`]    — machine descriptors for the paper's testbeds;
+//! * [`cache`]   — the Hogwild coherence-stall model (update rates ×
+//!   collision probability × line-transfer latency);
+//! * [`network`] — the distributed sync-cost model (sub-model bytes/round
+//!   over a finite-bandwidth fabric);
+//! * [`simulate`]— the Fig 3 / Fig 4 curve generators, calibrated against
+//!   REAL single-thread throughput measured on this box ([`calibrate`]).
+//!
+//! What is real vs. modelled is stated per bench in EXPERIMENTS.md.
+
+pub mod arch;
+pub mod cache;
+pub mod calibrate;
+pub mod network;
+pub mod simulate;
+
+pub use arch::MachineSpec;
+pub use cache::{CoherenceModel, SchemeCost};
+pub use calibrate::Calibration;
+pub use simulate::{fig3_series, fig4_series, ScalingPoint};

@@ -1,0 +1,199 @@
+//! Figure generators: project calibrated single-thread rates through the
+//! coherence model (Fig. 3) and the cluster model (Fig. 4 / Table V).
+
+use super::arch::{broadwell, knl, FabricSpec, MachineSpec};
+use super::cache::{CoherenceModel, SchemeCost};
+use super::network::ClusterModel;
+use crate::dist::sync::SyncPolicy;
+
+/// One point of a scaling curve.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingPoint {
+    /// Threads (Fig. 3) or nodes (Fig. 4).
+    pub x: usize,
+    pub words_per_sec: f64,
+}
+
+/// Scheme parameters for figure generation.
+#[derive(Clone, Copy, Debug)]
+pub struct FigParams {
+    /// Effective average context words per center (≈ window at paper
+    /// defaults, after dynamic-window averaging 2·(c+1)/2 ≈ c+1 ≈ 6; the
+    /// constant cancels in ratios).
+    pub ctx: f64,
+    pub negative: f64,
+    pub dim: usize,
+    /// Collision mass of the row-update distribution (vocab-dependent).
+    pub collision_mass: f64,
+}
+
+impl Default for FigParams {
+    fn default() -> Self {
+        Self {
+            ctx: 5.0,
+            negative: 5.0,
+            dim: 300,
+            // EFFECTIVE collision mass, calibrated against the paper's
+            // Fig. 3 anchors (see cache.rs docs); the raw Σp² of the
+            // 1.1M-word unigram^0.75 distribution is ~1.6e-4, inflated by
+            // the window of vulnerability and false sharing.
+            collision_mass: 0.05,
+        }
+    }
+}
+
+/// Fig. 3: thread-scaling series on a machine for (scalar, gemm) schemes.
+/// `w1_scalar`/`w1_gemm` anchor single-thread rates (measured or paper).
+pub fn fig3_series(
+    machine: &MachineSpec,
+    p: &FigParams,
+    w1_scalar: f64,
+    w1_gemm: f64,
+    threads: &[usize],
+) -> (Vec<ScalingPoint>, Vec<ScalingPoint>) {
+    let model = CoherenceModel::new(machine.clone(), p.collision_mass, p.dim);
+    let scalar = SchemeCost::scalar(p.ctx, p.negative, w1_scalar);
+    let gemm = SchemeCost::gemm(p.ctx, p.negative, w1_gemm);
+    let mk = |cost: &SchemeCost| {
+        threads
+            .iter()
+            .map(|&t| ScalingPoint {
+                x: t,
+                words_per_sec: model.throughput(cost, t),
+            })
+            .collect()
+    };
+    (mk(&scalar), mk(&gemm))
+}
+
+/// The thread counts the paper plots in Fig. 3.
+pub fn fig3_thread_axis(machine: &MachineSpec) -> Vec<usize> {
+    let mut t = vec![1, 2, 4, 8, 16];
+    let c = machine.cores;
+    if !t.contains(&c) {
+        t.push(c);
+    }
+    let ht = machine.threads();
+    if !t.contains(&ht) {
+        t.push(ht);
+    }
+    t.sort_unstable();
+    t
+}
+
+/// Fig. 4: node-scaling series for a cluster of `machine` nodes over
+/// `fabric`, with the paper's shrinking sync interval.
+pub fn fig4_series(
+    machine: &MachineSpec,
+    fabric: FabricSpec,
+    p: &FigParams,
+    w1_gemm: f64,
+    nodes: &[usize],
+) -> Vec<ScalingPoint> {
+    let coh = CoherenceModel::new(machine.clone(), p.collision_mass, p.dim);
+    let gemm = SchemeCost::gemm(p.ctx, p.negative, w1_gemm);
+    let node_rate = coh.throughput(&gemm, machine.threads());
+    let cluster = ClusterModel {
+        fabric,
+        node_words_per_sec: node_rate,
+        vocab: 1_115_011,
+        dim: p.dim,
+    };
+    nodes
+        .iter()
+        .map(|&n| {
+            let interval = crate::dist::node::DistConfig::for_nodes(n).sync_interval;
+            ScalingPoint {
+                x: n,
+                words_per_sec: cluster.throughput(
+                    n,
+                    &SyncPolicy::submodel_default(),
+                    interval,
+                ),
+            }
+        })
+        .collect()
+}
+
+/// Convenience: the two clusters of the paper's Fig. 4.
+pub fn paper_clusters() -> Vec<(MachineSpec, FabricSpec)> {
+    vec![
+        (broadwell(), super::arch::fdr_infiniband()),
+        (knl(), super::arch::omnipath()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::arch::fdr_infiniband;
+
+    #[test]
+    fn fig3_shape_matches_paper() {
+        // Anchors = paper 1T rates; shape claims of Fig. 3 must hold:
+        // ours ~3.6x the original at 72 threads, original flattens early.
+        let p = FigParams::default();
+        let bdw = broadwell();
+        let axis = fig3_thread_axis(&bdw);
+        let (scalar, gemm) = fig3_series(&bdw, &p, 70_000.0, 182_000.0, &axis);
+        let last_s = scalar.last().unwrap().words_per_sec;
+        let last_g = gemm.last().unwrap().words_per_sec;
+        let ratio = last_g / last_s;
+        assert!(
+            (2.5..6.0).contains(&ratio),
+            "72-thread speedup {ratio} out of paper range"
+        );
+        // Absolute ballpark: paper reports 1.6M vs 5.8M words/s.
+        assert!((0.8e6..3.0e6).contains(&last_s), "scalar {last_s}");
+        assert!((3.5e6..9.0e6).contains(&last_g), "gemm {last_g}");
+    }
+
+    #[test]
+    fn fig3_gemm_near_linear_within_socket() {
+        // "near perfect within a single socket" (18 cores of the 2×18 BDW).
+        let p = FigParams::default();
+        let bdw = broadwell();
+        let (_, gemm) = fig3_series(&bdw, &p, 70_000.0, 182_000.0, &[1, 18, 36]);
+        let eff18 = gemm[1].words_per_sec / (18.0 * gemm[0].words_per_sec);
+        let eff36 = gemm[2].words_per_sec / (36.0 * gemm[0].words_per_sec);
+        assert!(eff18 > 0.85, "gemm 18T efficiency {eff18}");
+        assert!(eff36 > 0.6, "gemm 36T efficiency {eff36}");
+        assert!(eff36 < eff18, "cross-socket must cost something");
+    }
+
+    #[test]
+    fn fig4_near_linear_then_bends() {
+        let p = FigParams::default();
+        let series = fig4_series(
+            &broadwell(),
+            fdr_infiniband(),
+            &p,
+            182_000.0,
+            &[1, 2, 4, 8, 16, 32],
+        );
+        let w1 = series[0].words_per_sec;
+        let eff = |i: usize| series[i].words_per_sec / (series[i].x as f64 * w1);
+        assert!(eff(2) > 0.85, "4-node eff {}", eff(2));
+        assert!(eff(5) < eff(2), "32-node should bend below 4-node");
+        // Paper Table V ballpark: 4 BDW nodes ≈ 20M, 32 ≈ 110M words/s.
+        let w4 = series[2].words_per_sec;
+        let w32 = series[5].words_per_sec;
+        assert!((1.2e7..3.5e7).contains(&w4), "4-node {w4}");
+        assert!((6e7..2.0e8).contains(&w32), "32-node {w32}");
+    }
+
+    #[test]
+    fn knl_beats_bdw_single_node() {
+        // Paper Table III: KNL 8.9M vs BDW 5.8M.  With the same per-word
+        // cost anchors scaled by core count/freq, KNL must come out ahead.
+        let p = FigParams::default();
+        let coh_b = CoherenceModel::new(broadwell(), p.collision_mass, p.dim);
+        let coh_k = CoherenceModel::new(knl(), p.collision_mass, p.dim);
+        // KNL cores are ~0.5x BDW single-thread (freq + uarch).
+        let g_b = SchemeCost::gemm(p.ctx, p.negative, 182_000.0);
+        let g_k = SchemeCost::gemm(p.ctx, p.negative, 85_000.0);
+        let w_b = coh_b.throughput(&g_b, broadwell().threads());
+        let w_k = coh_k.throughput(&g_k, knl().threads());
+        assert!(w_k > w_b, "knl {w_k} vs bdw {w_b}");
+    }
+}

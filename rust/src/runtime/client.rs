@@ -1,0 +1,120 @@
+//! PJRT CPU client wrapper: HLO text → compiled executable.
+//!
+//! One [`Runtime`] per process; compiled [`StepExecutable`]s are cheap
+//! handles that can be used from the training loop.  The interchange
+//! format is HLO *text* — the vendored xla_extension 0.5.1 rejects
+//! jax≥0.5's serialized protos (64-bit instruction ids), while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use super::executable::StepExecutable;
+use super::manifest::{Manifest, Variant};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> anyhow::Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text file with known step geometry.
+    pub fn compile_step<P: AsRef<Path>>(
+        &self,
+        path: P,
+        w: usize,
+        b: usize,
+        s: usize,
+        d: usize,
+    ) -> anyhow::Result<StepExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+            anyhow::anyhow!("parse {}: {e}", path.as_ref().display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile: {e}"))?;
+        Ok(StepExecutable::new(exe, w, b, s, d))
+    }
+
+    /// Compile a manifest variant.
+    pub fn compile_variant(
+        &self,
+        manifest: &Manifest,
+        v: &Variant,
+    ) -> anyhow::Result<StepExecutable> {
+        self.compile_step(manifest.path_of(v), v.w, v.b, v.s, v.d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end artifact round trip: python-lowered Pallas kernel → HLO
+    /// text → PJRT compile → execute → matches the rust-side oracle.
+    /// Skipped when artifacts are absent (run `make artifacts`).
+    #[test]
+    fn compile_and_run_test_artifact() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.by_name("test_w4_b8_s6_d32").unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.compile_variant(&m, v).unwrap();
+
+        let (w, b, s, d) = (v.w, v.b, v.s, v.d);
+        let mut rng = crate::util::rng::Xoshiro256ss::new(1);
+        let wi: Vec<f32> = (0..w * b * d).map(|_| rng.next_f32() * 0.2 - 0.1).collect();
+        let wo: Vec<f32> = (0..w * s * d).map(|_| rng.next_f32() * 0.2 - 0.1).collect();
+        let lr = 0.025f32;
+        let (dwi, dwo) = exe.run(&wi, &wo, lr).unwrap();
+        assert_eq!(dwi.len(), w * b * d);
+        assert_eq!(dwo.len(), w * s * d);
+
+        // Oracle: per-window three-GEMM chain in rust.
+        let mut want_dwi = vec![0.0f32; w * b * d];
+        let mut want_dwo = vec![0.0f32; w * s * d];
+        for win in 0..w {
+            let wi_w = &wi[win * b * d..(win + 1) * b * d];
+            let wo_w = &wo[win * s * d..(win + 1) * s * d];
+            let mut logits = vec![0.0f32; b * s];
+            crate::linalg::gemm_nt(b, s, d, 1.0, wi_w, wo_w, 0.0, &mut logits);
+            let mut err = vec![0.0f32; b * s];
+            for i in 0..b {
+                for j in 0..s {
+                    let label = if j == 0 { 1.0 } else { 0.0 };
+                    let sig = 1.0 / (1.0 + (-logits[i * s + j]).exp());
+                    err[i * s + j] = (label - sig) * lr;
+                }
+            }
+            crate::linalg::gemm_nn(
+                b, d, s, 1.0, &err, wo_w, 0.0,
+                &mut want_dwi[win * b * d..(win + 1) * b * d],
+            );
+            crate::linalg::gemm_tn(
+                s, d, b, 1.0, &err, wi_w, 0.0,
+                &mut want_dwo[win * s * d..(win + 1) * s * d],
+            );
+        }
+        for (i, (g, w_)) in dwi.iter().zip(&want_dwi).enumerate() {
+            assert!((g - w_).abs() < 1e-4, "dwi[{i}]: {g} vs {w_}");
+        }
+        for (i, (g, w_)) in dwo.iter().zip(&want_dwo).enumerate() {
+            assert!((g - w_).abs() < 1e-4, "dwo[{i}]: {g} vs {w_}");
+        }
+    }
+}

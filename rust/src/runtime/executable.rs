@@ -1,0 +1,87 @@
+//! A compiled SGNS step with fixed geometry `(W, B, S, D)`:
+//! `run(wi, wo, lr) -> (dwi, dwo)` over flat f32 buffers.
+
+use std::sync::Mutex;
+
+pub struct StepExecutable {
+    /// The compiled executable.  All PJRT interaction happens under this
+    /// lock: the `xla` crate's `PjRtClient` is `Rc`-based, so buffer
+    /// creation/drop must not race across threads; serialising calls
+    /// makes the cross-thread sharing below sound (the CPU client runs
+    /// the computation on its own thread pool regardless).
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    pub w: usize,
+    pub b: usize,
+    pub s: usize,
+    pub d: usize,
+}
+
+// SAFETY: every use of the inner executable (and of the Rc-based client
+// handles created from it) is serialised by the Mutex above, so no Rc
+// refcount or PJRT state is ever touched concurrently.  PJRT itself is
+// thread-safe for execution.
+unsafe impl Send for StepExecutable {}
+unsafe impl Sync for StepExecutable {}
+
+impl StepExecutable {
+    pub fn new(
+        exe: xla::PjRtLoadedExecutable,
+        w: usize,
+        b: usize,
+        s: usize,
+        d: usize,
+    ) -> Self {
+        Self {
+            exe: Mutex::new(exe),
+            w,
+            b,
+            s,
+            d,
+        }
+    }
+
+    /// Number of f32s in the `wi` input.
+    pub fn wi_len(&self) -> usize {
+        self.w * self.b * self.d
+    }
+
+    /// Number of f32s in the `wo` input.
+    pub fn wo_len(&self) -> usize {
+        self.w * self.s * self.d
+    }
+
+    /// Execute one superbatch step.  `wi`/`wo` are row-major
+    /// `[W,B,D]`/`[W,S,D]`; returns `(dwi, dwo)` with the same layouts.
+    ///
+    /// Inputs are staged as PJRT buffers and executed via `execute_b`:
+    /// the crate's literal-taking `execute` leaks its device-side input
+    /// buffers (`buffer.release()` without a matching free in the C shim
+    /// — ~1.1 MB/call at paper geometry; see EXPERIMENTS.md §Perf),
+    /// whereas buffers we create ourselves are properly dropped.
+    pub fn run(&self, wi: &[f32], wo: &[f32], lr: f32) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(wi.len() == self.wi_len(), "wi length mismatch");
+        anyhow::ensure!(wo.len() == self.wo_len(), "wo length mismatch");
+        let exe = self.exe.lock().unwrap();
+        let client = exe.client();
+        let b_wi = client
+            .buffer_from_host_buffer(wi, &[self.w, self.b, self.d], None)
+            .map_err(wrap)?;
+        let b_wo = client
+            .buffer_from_host_buffer(wo, &[self.w, self.s, self.d], None)
+            .map_err(wrap)?;
+        let b_lr = client
+            .buffer_from_host_buffer(&[lr], &[], None)
+            .map_err(wrap)?;
+        let result = exe.execute_b(&[b_wi, b_wo, b_lr]).map_err(wrap)?;
+        let out = result[0][0].to_literal_sync().map_err(wrap)?;
+        // aot.py lowers with return_tuple=True: a 2-tuple (dwi, dwo).
+        let (l_dwi, l_dwo) = out.to_tuple2().map_err(wrap)?;
+        let dwi = l_dwi.to_vec::<f32>().map_err(wrap)?;
+        let dwo = l_dwo.to_vec::<f32>().map_err(wrap)?;
+        Ok((dwi, dwo))
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}

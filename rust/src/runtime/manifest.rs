@@ -1,0 +1,175 @@
+//! `artifacts/manifest.json` parsing: the index of AOT-compiled step
+//! variants (one per superbatch geometry), written by `python -m compile.aot`.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One AOT-lowered `step(wi[W,B,D], wo[W,S,D], lr)` variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Variant {
+    pub name: String,
+    pub file: String,
+    /// "pallas" (fused L1 kernel) or "jnp" (pure-jnp L2 reference).
+    pub kind: String,
+    pub w: usize,
+    pub b: usize,
+    pub s: usize,
+    pub d: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Variant>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text)?;
+        anyhow::ensure!(
+            j.field("format")?.as_str() == Some("hlo-text"),
+            "unsupported artifact format"
+        );
+        let mut entries = Vec::new();
+        for e in j.field("entries")?.as_arr().unwrap_or(&[]) {
+            entries.push(Variant {
+                name: req_str(e, "name")?,
+                file: req_str(e, "file")?,
+                kind: req_str(e, "kind")?,
+                w: req_usize(e, "w")?,
+                b: req_usize(e, "b")?,
+                s: req_usize(e, "s")?,
+                d: req_usize(e, "d")?,
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest has no entries");
+        Ok(Self { dir, entries })
+    }
+
+    pub fn by_name(&self, name: &str) -> anyhow::Result<&Variant> {
+        self.entries
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact variant named '{name}'"))
+    }
+
+    /// Find a variant with the exact geometry, preferring `kind` (fall
+    /// back to any kind with the right shape).
+    pub fn by_geometry_kind(
+        &self,
+        kind: &str,
+        w: usize,
+        b: usize,
+        s: usize,
+        d: usize,
+    ) -> anyhow::Result<&Variant> {
+        let matches = |v: &&Variant| (v.w, v.b, v.s, v.d) == (w, b, s, d);
+        self.entries
+            .iter()
+            .find(|v| v.kind == kind && matches(v))
+            .or_else(|| self.entries.iter().find(matches))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for geometry W={w} B={b} S={s} D={d}; \
+                     available: {:?}",
+                    self.entries
+                        .iter()
+                        .map(|v| (v.name.as_str(), v.w, v.b, v.s, v.d))
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Find the variant the CPU trainer should run: the "jnp" lowering of
+    /// the step (numerically identical to the Pallas kernel — tested —
+    /// and ~9× faster under the CPU PJRT client, whose interpret-mode
+    /// grid loop is serial; see EXPERIMENTS.md §Perf).  The "pallas"
+    /// artifact remains the TPU-structured build.
+    pub fn by_geometry(
+        &self,
+        w: usize,
+        b: usize,
+        s: usize,
+        d: usize,
+    ) -> anyhow::Result<&Variant> {
+        self.by_geometry_kind("jnp", w, b, s, d)
+    }
+
+    pub fn path_of(&self, v: &Variant) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+}
+
+fn req_str(j: &Json, k: &str) -> anyhow::Result<String> {
+    Ok(j.field(k)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("field '{k}' not a string"))?
+        .to_string())
+}
+
+fn req_usize(j: &Json, k: &str) -> anyhow::Result<usize> {
+    j.field(k)?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("field '{k}' not a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_and_selects() {
+        let dir = std::env::temp_dir().join("pw2v_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"format":"hlo-text","entries":[
+                {"name":"a","file":"a.hlo.txt","kind":"pallas","w":4,"b":8,"s":6,"d":32},
+                {"name":"j","file":"j.hlo.txt","kind":"jnp","w":4,"b":8,"s":6,"d":32}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.by_name("a").unwrap().d, 32);
+        // Default geometry lookup prefers the jnp kind (CPU execution)...
+        assert_eq!(m.by_geometry(4, 8, 6, 32).unwrap().name, "j");
+        // ...explicit kind selection works, with fallback across kinds.
+        assert_eq!(m.by_geometry_kind("pallas", 4, 8, 6, 32).unwrap().name, "a");
+        assert!(m.by_geometry(1, 1, 1, 1).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_mentions_make_artifacts() {
+        let err = Manifest::load("/nonexistent_dir_xyz").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_artifacts_if_present() {
+        // Validates the actual repo artifacts when they exist (CI runs
+        // after `make artifacts`).
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            let v = m.by_name("test_w4_b8_s6_d32").unwrap();
+            assert_eq!((v.w, v.b, v.s, v.d), (4, 8, 6, 32));
+            assert!(m.path_of(v).exists());
+        }
+    }
+}

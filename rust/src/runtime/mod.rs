@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text; see the recipe notes there) and executes them on the CPU
+//! PJRT client from the training hot path.  Python is never invoked here —
+//! the rust binary is self-contained once `artifacts/` exists.
+
+pub mod client;
+pub mod executable;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use executable::StepExecutable;
+pub use manifest::{Manifest, Variant};

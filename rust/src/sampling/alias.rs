@@ -1,0 +1,141 @@
+//! Walker's alias method: O(1) sampling from an arbitrary discrete
+//! distribution with O(n) setup.  Used for the negative-sampling unigram
+//! distribution and by the synthetic-corpus generator's per-cluster
+//! emission distributions.
+
+use crate::util::rng::Xoshiro256ss;
+
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    /// Acceptance threshold per bucket, scaled to u64 range for a
+    /// branch-cheap integer comparison.
+    prob: Vec<u64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from unnormalised non-negative weights (at least one > 0).
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "alias table needs at least one weight");
+        let sum: f64 = weights.iter().sum();
+        assert!(
+            sum > 0.0 && weights.iter().all(|&w| w >= 0.0),
+            "weights must be non-negative with positive sum"
+        );
+        // Scaled probabilities * n; split into small/large worklists.
+        let mut scaled: Vec<f64> =
+            weights.iter().map(|&w| w / sum * n as f64).collect();
+        let mut prob = vec![0u64; n];
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<u32> = Vec::new();
+        let mut large: Vec<u32> = Vec::new();
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s as usize] = (scaled[s as usize] * u64::MAX as f64) as u64;
+            alias[s as usize] = l;
+            scaled[l as usize] -= 1.0 - scaled[s as usize];
+            if scaled[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = u64::MAX;
+        }
+        Self { prob, alias }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256ss) -> u32 {
+        let i = rng.below(self.prob.len());
+        if rng.next_u64() <= self.prob[i] {
+            i as u32
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(table: &AliasTable, n: usize, draws: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256ss::new(seed);
+        let mut counts = vec![0usize; n];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng) as usize] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn uniform_weights() {
+        let t = AliasTable::new(&[1.0; 8]);
+        let f = empirical(&t, 8, 400_000, 1);
+        for p in f {
+            assert!((p - 0.125).abs() < 0.005, "p={p}");
+        }
+    }
+
+    #[test]
+    fn skewed_weights() {
+        let w = [8.0, 4.0, 2.0, 1.0, 1.0];
+        let t = AliasTable::new(&w);
+        let f = empirical(&t, 5, 800_000, 2);
+        let sum: f64 = w.iter().sum();
+        for (i, p) in f.iter().enumerate() {
+            let want = w[i] / sum;
+            assert!((p - want).abs() < 0.005, "i={i} p={p} want={want}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_never_sampled() {
+        let t = AliasTable::new(&[1.0, 0.0, 1.0]);
+        let f = empirical(&t, 3, 200_000, 3);
+        assert_eq!(f[1], 0.0);
+    }
+
+    #[test]
+    fn single_element() {
+        let t = AliasTable::new(&[5.0]);
+        let mut rng = Xoshiro256ss::new(4);
+        for _ in 0..100 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_all_zero() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn zipf_like_large() {
+        // Sanity at vocabulary scale: top-1 mass of Zipf(1) over 10k.
+        let w: Vec<f64> = (1..=10_000).map(|r| 1.0 / r as f64).collect();
+        let t = AliasTable::new(&w);
+        let f = empirical(&t, 10_000, 500_000, 5);
+        let h: f64 = (1..=10_000).map(|r| 1.0 / r as f64).sum();
+        assert!((f[0] - 1.0 / h).abs() < 0.01);
+    }
+}

@@ -1,0 +1,264 @@
+//! Minibatch / superbatch assembly — the heart of the paper's
+//! parallelization scheme (Sec. III-B, Fig. 2 right).
+//!
+//! For each center position `t` of a sentence we form one [`Window`]:
+//!
+//! * `inputs`  — the context words around `t` (at most `B` of them; the
+//!   dynamic window already bounds this by `2*window`), which become the
+//!   rows of `Wi[B, D]`;
+//! * `outputs` — the center word (positive target) followed by `K`
+//!   negative samples drawn ONCE and **shared by every input in the
+//!   batch** ("negative sample sharing"), the rows of `Wo[S, D]`.
+//!
+//! [`BatchBuilder`] packs `W` consecutive windows into a [`Superbatch`] so
+//! one kernel/PJRT call covers many windows (our artifact-amortisation
+//! knob; the pure-rust GEMM trainer uses W=1-equivalent inner loops).
+
+use super::unigram::UnigramSampler;
+use super::window::{context_range, dynamic_window};
+use crate::util::rng::Xoshiro256ss;
+
+/// One training window: a batch of input words sharing target + negatives.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Window {
+    /// Context word ids (the rows of Wi). Non-empty, len <= batch cap.
+    pub inputs: Vec<u32>,
+    /// Target (index 0) then the K shared negative ids (rows of Wo).
+    pub outputs: Vec<u32>,
+}
+
+impl Window {
+    pub fn target(&self) -> u32 {
+        self.outputs[0]
+    }
+
+    pub fn negatives(&self) -> &[u32] {
+        &self.outputs[1..]
+    }
+}
+
+/// A fixed-geometry batch of `W` windows, padded for the AOT artifact path.
+#[derive(Clone, Debug)]
+pub struct Superbatch {
+    pub windows: Vec<Window>,
+    /// Geometry every window is padded to by the PJRT trainer.
+    pub b: usize,
+    pub s: usize,
+    /// Tokens consumed building this superbatch (for throughput/lr decay);
+    /// counts every center position processed, as the original does.
+    pub words: u64,
+}
+
+/// Streams sentences into windows/superbatches.
+pub struct BatchBuilder<'a> {
+    sampler: &'a UnigramSampler,
+    /// Max half-window c.
+    window: usize,
+    /// Input batch cap B.
+    batch: usize,
+    /// Negative samples K.
+    negative: usize,
+}
+
+impl<'a> BatchBuilder<'a> {
+    pub fn new(
+        sampler: &'a UnigramSampler,
+        window: usize,
+        batch: usize,
+        negative: usize,
+    ) -> Self {
+        assert!(window >= 1 && batch >= 1 && negative >= 1);
+        Self {
+            sampler,
+            window,
+            batch,
+            negative,
+        }
+    }
+
+    /// Output rows per window (1 + K).
+    pub fn samples(&self) -> usize {
+        1 + self.negative
+    }
+
+    /// Build the windows of one (already subsampled) sentence.
+    ///
+    /// Matches the original skip-gram traversal: every position is a
+    /// center; its context words are the inputs; the center is the shared
+    /// positive target.  Negatives exclude the target (resampled on
+    /// collision), like the original.
+    pub fn windows_of(
+        &self,
+        sentence: &[u32],
+        rng: &mut Xoshiro256ss,
+    ) -> Vec<Window> {
+        let mut out = Vec::with_capacity(sentence.len());
+        for t in 0..sentence.len() {
+            let win = dynamic_window(self.window, rng);
+            let mut inputs: Vec<u32> = context_range(t, win, sentence.len())
+                .map(|p| sentence[p])
+                .collect();
+            if inputs.is_empty() {
+                continue;
+            }
+            inputs.truncate(self.batch);
+            let target = sentence[t];
+            let mut outputs = Vec::with_capacity(1 + self.negative);
+            outputs.push(target);
+            for _ in 0..self.negative {
+                outputs.push(self.sampler.sample_excluding(target, rng));
+            }
+            out.push(Window { inputs, outputs });
+        }
+        out
+    }
+
+    /// Pack an iterator of sentences into superbatches of `w` windows.
+    /// The trailing partial superbatch (if any) is returned too.
+    pub fn superbatches<I>(
+        &self,
+        sentences: I,
+        w: usize,
+        rng: &mut Xoshiro256ss,
+    ) -> Vec<Superbatch>
+    where
+        I: IntoIterator<Item = Vec<u32>>,
+    {
+        let mut out = Vec::new();
+        let mut cur = Vec::with_capacity(w);
+        let mut words = 0u64;
+        for sent in sentences {
+            words += sent.len() as u64;
+            for win in self.windows_of(&sent, rng) {
+                cur.push(win);
+                if cur.len() == w {
+                    out.push(Superbatch {
+                        windows: std::mem::replace(&mut cur, Vec::with_capacity(w)),
+                        b: self.batch,
+                        s: self.samples(),
+                        words: std::mem::take(&mut words),
+                    });
+                }
+            }
+        }
+        if !cur.is_empty() {
+            out.push(Superbatch {
+                windows: cur,
+                b: self.batch,
+                s: self.samples(),
+                words,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::vocab::Vocab;
+    use std::collections::HashMap;
+
+    fn vocab(v: usize) -> Vocab {
+        let counts: HashMap<String, u64> = (0..v)
+            .map(|i| (format!("w{i:03}"), (1000 / (i + 1)) as u64))
+            .collect();
+        Vocab::from_counts(counts, 1)
+    }
+
+    fn builder_parts(v: usize) -> (Vocab, UnigramSampler) {
+        let vc = vocab(v);
+        let s = UnigramSampler::alias(&vc, 0.75);
+        (vc, s)
+    }
+
+    #[test]
+    fn every_position_is_a_center() {
+        let (_, s) = builder_parts(50);
+        let b = BatchBuilder::new(&s, 5, 16, 5);
+        let mut rng = Xoshiro256ss::new(1);
+        let sent: Vec<u32> = (0..20).collect();
+        let ws = b.windows_of(&sent, &mut rng);
+        assert_eq!(ws.len(), 20);
+        for (t, w) in ws.iter().enumerate() {
+            assert_eq!(w.target(), sent[t]);
+        }
+    }
+
+    #[test]
+    fn negatives_shared_and_exclude_target() {
+        let (_, s) = builder_parts(50);
+        let b = BatchBuilder::new(&s, 5, 16, 5);
+        let mut rng = Xoshiro256ss::new(2);
+        let sent: Vec<u32> = (0..10).collect();
+        for w in b.windows_of(&sent, &mut rng) {
+            assert_eq!(w.outputs.len(), 6);
+            // one shared negative set per window, none equal to target
+            for &n in w.negatives() {
+                assert_ne!(n, w.target());
+            }
+            assert!(!w.inputs.is_empty());
+            assert!(w.inputs.len() <= 16);
+        }
+    }
+
+    #[test]
+    fn inputs_are_context_words() {
+        let (_, s) = builder_parts(50);
+        let b = BatchBuilder::new(&s, 2, 16, 5);
+        let mut rng = Xoshiro256ss::new(3);
+        let sent: Vec<u32> = vec![10, 11, 12, 13, 14];
+        for (t, w) in b.windows_of(&sent, &mut rng).iter().enumerate() {
+            for &inp in &w.inputs {
+                let pos = sent.iter().position(|&x| x == inp).unwrap();
+                assert!(pos != t);
+                assert!((pos as isize - t as isize).unsigned_abs() <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_cap_respected() {
+        let (_, s) = builder_parts(200);
+        let b = BatchBuilder::new(&s, 50, 4, 5);
+        let mut rng = Xoshiro256ss::new(4);
+        let sent: Vec<u32> = (0..100).collect();
+        for w in b.windows_of(&sent, &mut rng) {
+            assert!(w.inputs.len() <= 4);
+        }
+    }
+
+    #[test]
+    fn singleton_sentence_yields_nothing() {
+        let (_, s) = builder_parts(10);
+        let b = BatchBuilder::new(&s, 5, 16, 5);
+        let mut rng = Xoshiro256ss::new(5);
+        assert!(b.windows_of(&[3], &mut rng).is_empty());
+    }
+
+    #[test]
+    fn superbatch_packing_and_word_counts() {
+        let (_, s) = builder_parts(50);
+        let b = BatchBuilder::new(&s, 5, 16, 5);
+        let mut rng = Xoshiro256ss::new(6);
+        let sents: Vec<Vec<u32>> = (0..10).map(|_| (0..17).collect()).collect();
+        let sbs = b.superbatches(sents.clone(), 64, &mut rng);
+        let total_windows: usize = sbs.iter().map(|sb| sb.windows.len()).sum();
+        assert_eq!(total_windows, 170); // every position a center
+        let total_words: u64 = sbs.iter().map(|sb| sb.words).sum();
+        assert_eq!(total_words, 170);
+        for sb in &sbs[..sbs.len() - 1] {
+            assert_eq!(sb.windows.len(), 64);
+        }
+    }
+
+    #[test]
+    fn determinism_per_seed() {
+        let (_, s) = builder_parts(50);
+        let b = BatchBuilder::new(&s, 5, 16, 5);
+        let sent: Vec<u32> = (0..30).collect();
+        let w1 = b.windows_of(&sent, &mut Xoshiro256ss::new(9));
+        let w2 = b.windows_of(&sent, &mut Xoshiro256ss::new(9));
+        assert_eq!(w1, w2);
+    }
+}

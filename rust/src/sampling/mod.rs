@@ -1,0 +1,14 @@
+//! Sampling substrate: the unigram^0.75 negative-sampling distribution
+//! (both the original's table method and an O(1) alias method), dynamic
+//! context windows, and the minibatch/superbatch builder that implements
+//! the paper's "negative sample sharing" (Sec. III-B).
+
+pub mod alias;
+pub mod batch;
+pub mod unigram;
+pub mod window;
+
+pub use alias::AliasTable;
+pub use batch::{BatchBuilder, Superbatch, Window};
+pub use unigram::UnigramSampler;
+pub use window::dynamic_window;

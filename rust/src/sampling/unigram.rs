@@ -1,0 +1,170 @@
+//! The negative-sampling distribution P_n(w) ∝ count(w)^0.75 (Mikolov et
+//! al. 2013), in two implementations:
+//!
+//! * [`UnigramSampler::table`] — the original C code's precomputed index
+//!   table (default size 1e8, configurable), sampled with the word2vec LCG.
+//!   Used by the scalar baseline for fidelity.
+//! * [`UnigramSampler::alias`] — Walker alias method, O(1) with no giant
+//!   table; used by the batched trainers.
+//!
+//! Both expose the same `sample` interface and the same distribution, which
+//! a test asserts.
+
+use super::alias::AliasTable;
+use crate::corpus::vocab::Vocab;
+use crate::util::rng::Xoshiro256ss;
+
+pub enum UnigramSampler {
+    Table { table: Vec<u32> },
+    Alias { table: AliasTable },
+}
+
+impl UnigramSampler {
+    /// The original's table method (`InitUnigramTable`).
+    pub fn table(vocab: &Vocab, power: f32, table_size: usize) -> Self {
+        assert!(!vocab.is_empty());
+        let pow_sum: f64 = vocab
+            .counts()
+            .iter()
+            .map(|&c| (c as f64).powf(power as f64))
+            .sum();
+        let mut table = vec![0u32; table_size];
+        let mut i = 0usize;
+        let mut cum = (vocab.count(0) as f64).powf(power as f64) / pow_sum;
+        for (a, slot) in table.iter_mut().enumerate() {
+            *slot = i as u32;
+            if a as f64 / table_size as f64 > cum {
+                if i < vocab.len() - 1 {
+                    i += 1;
+                }
+                cum += (vocab.count(i as u32) as f64).powf(power as f64) / pow_sum;
+            }
+        }
+        Self::Table { table }
+    }
+
+    /// Alias-method sampler over the same distribution.
+    pub fn alias(vocab: &Vocab, power: f32) -> Self {
+        assert!(!vocab.is_empty());
+        let weights: Vec<f64> = vocab
+            .counts()
+            .iter()
+            .map(|&c| (c as f64).powf(power as f64))
+            .collect();
+        Self::Alias {
+            table: AliasTable::new(&weights),
+        }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256ss) -> u32 {
+        match self {
+            Self::Table { table } => table[rng.below(table.len())],
+            Self::Alias { table } => table.sample(rng),
+        }
+    }
+
+    /// Draw a negative sample avoiding `exclude` (the positive target), as
+    /// the original does (resamples on collision).
+    #[inline]
+    pub fn sample_excluding(&self, exclude: u32, rng: &mut Xoshiro256ss) -> u32 {
+        loop {
+            let s = self.sample(rng);
+            if s != exclude {
+                return s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn zipf_vocab(v: usize) -> Vocab {
+        let counts: HashMap<String, u64> = (0..v)
+            .map(|i| (format!("w{i:04}"), (100_000 / (i + 1)) as u64))
+            .collect();
+        Vocab::from_counts(counts, 1)
+    }
+
+    fn empirical(s: &UnigramSampler, v: usize, draws: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256ss::new(seed);
+        let mut counts = vec![0usize; v];
+        for _ in 0..draws {
+            counts[s.sample(&mut rng) as usize] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    fn expected(vocab: &Vocab, power: f32) -> Vec<f64> {
+        let pow: Vec<f64> = vocab
+            .counts()
+            .iter()
+            .map(|&c| (c as f64).powf(power as f64))
+            .collect();
+        let sum: f64 = pow.iter().sum();
+        pow.iter().map(|p| p / sum).collect()
+    }
+
+    #[test]
+    fn table_matches_power_distribution() {
+        let v = zipf_vocab(50);
+        let s = UnigramSampler::table(&v, 0.75, 1_000_000);
+        let emp = empirical(&s, 50, 500_000, 1);
+        let want = expected(&v, 0.75);
+        for i in 0..50 {
+            assert!(
+                (emp[i] - want[i]).abs() < 0.01,
+                "word {i}: {} vs {}",
+                emp[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn alias_matches_power_distribution() {
+        let v = zipf_vocab(50);
+        let s = UnigramSampler::alias(&v, 0.75);
+        let emp = empirical(&s, 50, 500_000, 2);
+        let want = expected(&v, 0.75);
+        for i in 0..50 {
+            assert!((emp[i] - want[i]).abs() < 0.01, "word {i}");
+        }
+    }
+
+    #[test]
+    fn table_and_alias_agree() {
+        let v = zipf_vocab(100);
+        let t = UnigramSampler::table(&v, 0.75, 2_000_000);
+        let a = UnigramSampler::alias(&v, 0.75);
+        let et = empirical(&t, 100, 400_000, 3);
+        let ea = empirical(&a, 100, 400_000, 4);
+        for i in 0..100 {
+            assert!((et[i] - ea[i]).abs() < 0.01, "word {i}");
+        }
+    }
+
+    #[test]
+    fn excluding_never_returns_excluded() {
+        let v = zipf_vocab(10);
+        let s = UnigramSampler::alias(&v, 0.75);
+        let mut rng = Xoshiro256ss::new(5);
+        for _ in 0..10_000 {
+            assert_ne!(s.sample_excluding(0, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn power_one_is_plain_unigram() {
+        let v = zipf_vocab(20);
+        let s = UnigramSampler::alias(&v, 1.0);
+        let emp = empirical(&s, 20, 400_000, 6);
+        let want = expected(&v, 1.0);
+        for i in 0..20 {
+            assert!((emp[i] - want[i]).abs() < 0.01);
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Dynamic context windows, as in the original word2vec: for each center
+//! position the effective window is `c - b` where `b` is drawn uniformly
+//! from `0..c`, i.e. the actual half-width is uniform in `1..=c`.  This
+//! implicitly weights close-by context words higher.
+
+use crate::util::rng::Xoshiro256ss;
+
+/// Draw the effective half-window (uniform in 1..=max_window).
+#[inline]
+pub fn dynamic_window(max_window: usize, rng: &mut Xoshiro256ss) -> usize {
+    1 + rng.below(max_window)
+}
+
+/// Enumerate the context positions of `center` in a sentence of length
+/// `len` under half-window `win`: `[center-win, center+win] \ {center}`,
+/// clipped to the sentence.
+pub fn context_range(center: usize, win: usize, len: usize) -> impl Iterator<Item = usize> {
+    let lo = center.saturating_sub(win);
+    let hi = (center + win).min(len.saturating_sub(1));
+    (lo..=hi).filter(move |&p| p != center)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_in_bounds() {
+        let mut rng = Xoshiro256ss::new(1);
+        for _ in 0..10_000 {
+            let w = dynamic_window(5, &mut rng);
+            assert!((1..=5).contains(&w));
+        }
+    }
+
+    #[test]
+    fn window_uniform() {
+        let mut rng = Xoshiro256ss::new(2);
+        let mut counts = [0usize; 5];
+        let n = 500_000;
+        for _ in 0..n {
+            counts[dynamic_window(5, &mut rng) - 1] += 1;
+        }
+        for c in counts {
+            let f = c as f64 / n as f64;
+            assert!((f - 0.2).abs() < 0.01, "f={f}");
+        }
+    }
+
+    #[test]
+    fn context_excludes_center_and_clips() {
+        let ctx: Vec<usize> = context_range(0, 2, 5).collect();
+        assert_eq!(ctx, vec![1, 2]);
+        let ctx: Vec<usize> = context_range(4, 2, 5).collect();
+        assert_eq!(ctx, vec![2, 3]);
+        let ctx: Vec<usize> = context_range(2, 2, 5).collect();
+        assert_eq!(ctx, vec![0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn context_of_singleton_sentence_empty() {
+        assert_eq!(context_range(0, 5, 1).count(), 0);
+    }
+}

@@ -1,0 +1,183 @@
+//! The paper's GEMM scheme executed through the AOT stack: the JAX/Pallas
+//! superbatch step (`python/compile/`), lowered to HLO text at build time
+//! and run here via the PJRT CPU client.  This is the three-layer
+//! composition path: rust gathers/scatters against the Hogwild model and
+//! the fused three-GEMM kernel runs inside XLA.
+//!
+//! Geometry is fixed per artifact `(W, B, S, D)`; windows with fewer than
+//! `B` inputs are zero-padded (zero rows produce exactly zero deltas for
+//! the rows they touch — see the kernel docs — and padded `dwi` rows are
+//! simply not scattered).  Trailing partial superbatches pad whole windows
+//! the same way.
+
+use std::sync::Arc;
+
+use super::Backend;
+use crate::model::SharedModel;
+use crate::runtime::StepExecutable;
+use crate::sampling::batch::Window;
+
+pub struct PjrtBackend {
+    exe: Arc<StepExecutable>,
+    /// Staging buffers, reused across calls.
+    wi: Vec<f32>,
+    wo: Vec<f32>,
+}
+
+impl PjrtBackend {
+    pub fn new(exe: Arc<StepExecutable>) -> Self {
+        let (wi_len, wo_len) = (exe.wi_len(), exe.wo_len());
+        Self {
+            exe,
+            wi: vec![0.0; wi_len],
+            wo: vec![0.0; wo_len],
+        }
+    }
+
+    /// Max windows per call.
+    pub fn superbatch(&self) -> usize {
+        self.exe.w
+    }
+
+    fn run_chunk(
+        &mut self,
+        model: &SharedModel,
+        windows: &[Window],
+        lr: f32,
+    ) -> anyhow::Result<()> {
+        let (w_cap, b_cap, s, d) =
+            (self.exe.w, self.exe.b, self.exe.s, self.exe.d);
+        anyhow::ensure!(windows.len() <= w_cap, "chunk exceeds artifact W");
+
+        // Gather with zero padding.
+        self.wi.fill(0.0);
+        self.wo.fill(0.0);
+        for (wdx, win) in windows.iter().enumerate() {
+            anyhow::ensure!(
+                win.inputs.len() <= b_cap && win.outputs.len() == s,
+                "window geometry mismatch (b={} cap={b_cap}, s={} want {s})",
+                win.inputs.len(),
+                win.outputs.len()
+            );
+            for (i, &inp) in win.inputs.iter().enumerate() {
+                // SAFETY: Hogwild contract (model::hogwild docs).
+                let row = unsafe { model.row_in(inp) };
+                let o = (wdx * b_cap + i) * d;
+                self.wi[o..o + d].copy_from_slice(row);
+            }
+            for (j, &out) in win.outputs.iter().enumerate() {
+                // SAFETY: Hogwild contract.
+                let row = unsafe { model.row_out(out) };
+                let o = (wdx * s + j) * d;
+                self.wo[o..o + d].copy_from_slice(row);
+            }
+        }
+
+        let (dwi, dwo) = self.exe.run(&self.wi, &self.wo, lr)?;
+
+        // Scatter-add only the real rows.
+        for (wdx, win) in windows.iter().enumerate() {
+            for (i, &inp) in win.inputs.iter().enumerate() {
+                let o = (wdx * b_cap + i) * d;
+                model.add_in(inp, &dwi[o..o + d]);
+            }
+            for (j, &out) in win.outputs.iter().enumerate() {
+                let o = (wdx * s + j) * d;
+                model.add_out(out, &dwo[o..o + d]);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn process(
+        &mut self,
+        model: &SharedModel,
+        windows: &[Window],
+        lr: f32,
+    ) -> anyhow::Result<()> {
+        for chunk in windows.chunks(self.exe.w) {
+            self.run_chunk(model, chunk, lr)?;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Manifest, Runtime};
+    use crate::train::sgd_gemm::GemmBackend;
+
+    fn test_exe() -> Option<Arc<StepExecutable>> {
+        let dir =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.by_name("test_w4_b8_s6_d32").unwrap().clone();
+        let rt = Runtime::cpu().unwrap();
+        Some(Arc::new(rt.compile_variant(&m, &v).unwrap()))
+    }
+
+    fn window(inputs: &[u32], target: u32, negs: &[u32]) -> Window {
+        let mut outputs = vec![target];
+        outputs.extend_from_slice(negs);
+        Window {
+            inputs: inputs.to_vec(),
+            outputs,
+        }
+    }
+
+    /// The AOT path must produce the same model as the native GEMM path —
+    /// the cross-layer equivalence test for the whole stack.
+    #[test]
+    fn pjrt_matches_native_gemm() {
+        let Some(exe) = test_exe() else { return };
+        let dim = 32;
+        let model_p = SharedModel::init(50, dim, 21);
+        let model_g = SharedModel::init(50, dim, 21);
+        // 6 windows (more than W=4 to exercise chunking), ragged batches.
+        let windows = vec![
+            window(&[1, 2, 3], 10, &[20, 21, 22, 23, 24]),
+            window(&[4], 11, &[25, 26, 27, 28, 29]),
+            window(&[5, 6, 7, 8, 9, 12, 13, 14], 15, &[30, 31, 32, 33, 34]),
+            window(&[16, 17], 18, &[35, 36, 37, 38, 39]),
+            window(&[19, 40], 41, &[42, 43, 44, 45, 46]),
+            window(&[47], 48, &[1, 2, 3, 4, 5]),
+        ];
+        let mut p = PjrtBackend::new(exe);
+        let mut g = GemmBackend::new(dim, 8, 6);
+        p.process(&model_p, &windows, 0.05).unwrap();
+        g.process(&model_g, &windows, 0.05).unwrap();
+
+        for r in 0..50u32 {
+            for (a, b) in model_p.m_in().row(r).iter().zip(model_g.m_in().row(r)) {
+                assert!((a - b).abs() < 1e-4, "m_in row {r}");
+            }
+            for (a, b) in model_p.m_out().row(r).iter().zip(model_g.m_out().row(r)) {
+                assert!((a - b).abs() < 1e-4, "m_out row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_geometry() {
+        let Some(exe) = test_exe() else { return };
+        let model = SharedModel::init(50, 32, 1);
+        let mut p = PjrtBackend::new(exe);
+        // s=3 != artifact s=6
+        let w = window(&[1], 2, &[3, 4]);
+        assert!(p.process(&model, &[w], 0.05).is_err());
+        // b=9 > artifact cap 8
+        let w = window(&[1, 2, 3, 4, 5, 6, 7, 8, 9], 10, &[3, 4, 5, 6, 7]);
+        assert!(p.process(&model, &[w], 0.05).is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! The ORIGINAL word2vec trainer: Hogwild scalar SGD, a faithful port of
+//! Algorithm 1 of the paper (Mikolov's C reference).
+//!
+//! Level-1 BLAS only: per (input, sample) pair one dot product and two
+//! axpy updates, model mutated after EVERY pair.  Negatives are drawn per
+//! input word (NOT shared across the batch) from the unigram table with
+//! the original's LCG-driven lookup, and the EXP_TABLE sigmoid
+//! approximation is used, including its saturation behaviour.
+//!
+//! This is the baseline every figure/table of the paper compares against;
+//! keeping it faithful (rather than lightly batched) is what makes the
+//! measured speedups meaningful.
+
+use super::Backend;
+use crate::linalg::sigmoid::SigmoidTable;
+use crate::linalg::vecops::{axpy, dot};
+use crate::model::SharedModel;
+use crate::sampling::batch::Window;
+use crate::sampling::unigram::UnigramSampler;
+use crate::util::rng::Xoshiro256ss;
+
+pub struct ScalarBackend<'a> {
+    sampler: &'a UnigramSampler,
+    negative: usize,
+    sigmoid: SigmoidTable,
+    rng: Xoshiro256ss,
+    /// `temp` accumulator of Algorithm 1 (the input-row delta).
+    temp: Vec<f32>,
+}
+
+impl<'a> ScalarBackend<'a> {
+    pub fn new(sampler: &'a UnigramSampler, negative: usize, dim: usize, seed: u64) -> Self {
+        Self {
+            sampler,
+            negative,
+            sigmoid: SigmoidTable::default_table(),
+            rng: Xoshiro256ss::new(seed),
+            temp: vec![0.0; dim],
+        }
+    }
+
+    /// Lines 2–21 of Algorithm 1 for one (input word, target) pair set.
+    #[inline]
+    fn train_pair(&mut self, model: &SharedModel, input: u32, target: u32, lr: f32) {
+        // SAFETY: Hogwild contract (model::hogwild module docs).
+        let wi = unsafe { model.row_in(input) };
+        self.temp.fill(0.0);
+        for k in 0..=self.negative {
+            let (word, label) = if k == 0 {
+                (target, 1.0f32)
+            } else {
+                (self.sampler.sample_excluding(target, &mut self.rng), 0.0)
+            };
+            // SAFETY: Hogwild contract.
+            let wo = unsafe { model.row_out(word) };
+            let inn = dot(wi, wo);
+            // The original skips the gradient entirely when the logit
+            // saturates the EXP_TABLE and the label agrees; otherwise it
+            // clamps to the table ends.
+            let g = if inn > self.sigmoid.max() {
+                if label == 1.0 {
+                    continue;
+                }
+                (label - 1.0) * lr
+            } else if inn < -self.sigmoid.max() {
+                if label == 0.0 {
+                    continue;
+                }
+                label * lr
+            } else {
+                (label - self.sigmoid.get(inn)) * lr
+            };
+            // temp += g * M_out[word]; M_out[word] += g * M_in[input]
+            axpy(g, wo, &mut self.temp);
+            axpy(g, wi, wo);
+        }
+        // M_in[input] += temp
+        axpy(1.0, &self.temp, wi);
+    }
+}
+
+impl<'a> Backend for ScalarBackend<'a> {
+    fn process(
+        &mut self,
+        model: &SharedModel,
+        windows: &[Window],
+        lr: f32,
+    ) -> anyhow::Result<()> {
+        for w in windows {
+            let target = w.target();
+            // NOTE: w.negatives() is intentionally ignored — the original
+            // draws fresh negatives per input word.
+            for i in 0..w.inputs.len() {
+                self.train_pair(model, w.inputs[i], target, lr);
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::vocab::Vocab;
+    use std::collections::HashMap;
+
+    fn setup(v: usize, dim: usize) -> (SharedModel, UnigramSampler) {
+        let counts: HashMap<String, u64> = (0..v)
+            .map(|i| (format!("w{i:03}"), (1000 / (i + 1)) as u64))
+            .collect();
+        let vocab = Vocab::from_counts(counts, 1);
+        let sampler = UnigramSampler::alias(&vocab, 0.75);
+        (SharedModel::init(v, dim, 7), sampler)
+    }
+
+    fn window(inputs: &[u32], target: u32, negs: &[u32]) -> Window {
+        let mut outputs = vec![target];
+        outputs.extend_from_slice(negs);
+        Window {
+            inputs: inputs.to_vec(),
+            outputs,
+        }
+    }
+
+    #[test]
+    fn updates_touch_expected_rows() {
+        let (model, sampler) = setup(50, 16);
+        let mut b = ScalarBackend::new(&sampler, 5, 16, 1);
+        let before_in: Vec<Vec<f32>> =
+            (0..50u32).map(|w| model.m_in().row(w).to_vec()).collect();
+        let w = window(&[3, 4], 9, &[1, 2, 5, 6, 7]);
+        // Two passes: M_out starts at zero (word2vec init), so the very
+        // first pair leaves M_in unchanged (temp += g·0); the second pass
+        // sees the updated M_out and moves M_in.
+        b.process(&model, std::slice::from_ref(&w), 0.05).unwrap();
+        b.process(&model, &[w], 0.05).unwrap();
+        // Input rows 3 and 4 must change...
+        assert_ne!(model.m_in().row(3), &before_in[3][..]);
+        assert_ne!(model.m_in().row(4), &before_in[4][..]);
+        // ...and no other input row may.
+        for w in 0..50u32 {
+            if w != 3 && w != 4 {
+                assert_eq!(model.m_in().row(w), &before_in[w as usize][..], "row {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn positive_pair_similarity_increases() {
+        let (model, sampler) = setup(50, 16);
+        let mut b = ScalarBackend::new(&sampler, 5, 16, 2);
+        let sim = |m: &SharedModel| dot(m.m_in().row(3), m.m_out().row(9));
+        let before = sim(&model);
+        for _ in 0..200 {
+            b.process(&model, &[window(&[3], 9, &[1, 2, 5, 6, 7])], 0.05)
+                .unwrap();
+        }
+        assert!(sim(&model) > before + 0.5, "similarity did not grow");
+    }
+
+    #[test]
+    fn objective_improves_over_training() {
+        // On a tiny planted corpus the NS objective of the trained pairs
+        // must improve (ascent direction end-to-end).
+        let (model, sampler) = setup(30, 8);
+        let mut b = ScalarBackend::new(&sampler, 3, 8, 3);
+        let windows: Vec<Window> = (0..10u32)
+            .map(|t| window(&[(t + 1) % 30, (t + 2) % 30], t, &[]))
+            .map(|mut w| {
+                w.outputs.extend([20, 21, 22]);
+                w
+            })
+            .collect();
+        let obj = |m: &SharedModel| -> f64 {
+            windows
+                .iter()
+                .flat_map(|w| {
+                    w.inputs.iter().map(|&i| {
+                        let x = dot(m.m_in().row(i), m.m_out().row(w.target()));
+                        -(1.0 + (-x as f64).exp()).ln()
+                    })
+                })
+                .sum()
+        };
+        let before = obj(&model);
+        for _ in 0..100 {
+            b.process(&model, &windows, 0.05).unwrap();
+        }
+        assert!(obj(&model) > before, "positive-pair objective fell");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (m1, sampler) = setup(50, 16);
+        let (m2, _) = setup(50, 16);
+        let w = window(&[3, 4, 5], 9, &[]);
+        let mut w1 = w.clone();
+        w1.outputs.extend([1, 2, 6, 7, 8]);
+        let mut b1 = ScalarBackend::new(&sampler, 5, 16, 42);
+        let mut b2 = ScalarBackend::new(&sampler, 5, 16, 42);
+        b1.process(&m1, std::slice::from_ref(&w1), 0.05).unwrap();
+        b2.process(&m2, std::slice::from_ref(&w1), 0.05).unwrap();
+        assert_eq!(m1.m_in().data(), m2.m_in().data());
+        assert_eq!(m1.m_out().data(), m2.m_out().data());
+    }
+}

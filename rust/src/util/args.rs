@@ -1,0 +1,160 @@
+//! Tiny declarative CLI argument parser (clap is not vendored offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals, with
+//! typed accessors and a collected usage/error report.  Each subcommand in
+//! `main.rs` builds one [`Args`] over its tail of argv.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    /// Keys consumed via accessors, to report unknown options.
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    opts.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(rest.to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Self {
+            opts,
+            flags,
+            positional,
+            seen: Default::default(),
+        }
+    }
+
+    pub fn from_env_tail(skip: usize) -> Self {
+        Self::parse(std::env::args().skip(skip))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.seen.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt<T: FromStr>(&self, name: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.seen.borrow_mut().push(name.to_string());
+        match self.opts.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|e| {
+                anyhow::anyhow!("--{name}: cannot parse '{v}': {e}")
+            }),
+        }
+    }
+
+    pub fn get<T: FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt(name)?.unwrap_or(default))
+    }
+
+    pub fn required<T: FromStr>(&self, name: &str) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.opt(name)?
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error on any provided `--option` never consumed by an accessor.
+    /// Call after all accessors ran.
+    pub fn check_unknown(&self) -> anyhow::Result<()> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown options: {unknown:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = args("--dim 300 --window=5 input.txt");
+        assert_eq!(a.get::<usize>("dim", 0).unwrap(), 300);
+        assert_eq!(a.get::<usize>("window", 0).unwrap(), 5);
+        assert_eq!(a.positional(), &["input.txt".to_string()]);
+    }
+
+    #[test]
+    fn flags_vs_opts() {
+        let a = args("--verbose --threads 4");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get::<usize>("threads", 1).unwrap(), 4);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args("--x 1 --dry-run");
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = args("--lr 0.05");
+        assert_eq!(a.get::<f32>("lr", 0.025).unwrap(), 0.05);
+        assert_eq!(a.get::<f32>("sample", 1e-4).unwrap(), 1e-4);
+        assert!(a.required::<String>("corpus").is_err());
+    }
+
+    #[test]
+    fn parse_error_mentions_option() {
+        let a = args("--dim banana");
+        let e = a.get::<usize>("dim", 0).unwrap_err().to_string();
+        assert!(e.contains("--dim"), "{e}");
+    }
+
+    #[test]
+    fn unknown_detection() {
+        let a = args("--dim 1 --typo 2");
+        let _ = a.get::<usize>("dim", 0).unwrap();
+        assert!(a.check_unknown().is_err());
+    }
+}

@@ -1,0 +1,91 @@
+//! Tiny CSV writer for bench results (`bench_results/*.csv`).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Self {
+            w,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.cols,
+            "csv row has {} fields, header has {}",
+            fields.len(),
+            self.cols
+        );
+        let line: Vec<String> = fields.iter().map(|f| escape(f)).collect();
+        writeln!(self.w, "{}", line.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+fn escape(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
+    }
+}
+
+/// Format a float field compactly.
+pub fn num(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e12 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("pw2v_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["x,y".into(), "z\"q\"".into()]).unwrap();
+        w.row(&["1".into(), "2".into()]).unwrap();
+        w.flush().unwrap();
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(got, "a,b\n\"x,y\",\"z\"\"q\"\"\"\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let dir = std::env::temp_dir().join("pw2v_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        assert!(w.row(&["only-one".into()]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn num_formatting() {
+        assert_eq!(num(3.0), "3");
+        assert_eq!(num(0.5), "0.500000");
+    }
+}

@@ -1,0 +1,55 @@
+//! Self-contained utility substrates.
+//!
+//! The offline build environment vendors only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (clap, serde/serde_json, rand,
+//! criterion, proptest) are unavailable.  Everything this crate needs from
+//! them is implemented here, with tests — see DESIGN.md §3.
+
+pub mod args;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+/// Round `x` up to the next multiple of `align`.
+#[inline]
+pub fn round_up(x: usize, align: usize) -> usize {
+    debug_assert!(align.is_power_of_two());
+    (x + align - 1) & !(align - 1)
+}
+
+/// Human-readable SI formatting for rates ("5.8M", "110M", "1.2G").
+pub fn si(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 64), 0);
+        assert_eq!(round_up(1, 64), 64);
+        assert_eq!(round_up(64, 64), 64);
+        assert_eq!(round_up(65, 64), 128);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(si(5_800_000.0), "5.80M");
+        assert_eq!(si(110e6), "110.00M");
+        assert_eq!(si(1_234.0), "1.23K");
+        assert_eq!(si(12.5), "12.50");
+        assert_eq!(si(2.5e9), "2.50G");
+    }
+}

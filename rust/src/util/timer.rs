@@ -1,0 +1,100 @@
+//! Timing + throughput measurement helpers (criterion is not vendored;
+//! `crate::bench` builds the stats harness on top of these).
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Words-per-second meter with a monotonically growing count.
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    sw: Stopwatch,
+    items: u64,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        Self {
+            sw: Stopwatch::new(),
+            items: 0,
+        }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    /// Items per second since construction.
+    pub fn rate(&self) -> f64 {
+        let s = self.sw.secs();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.items as f64 / s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.secs() >= 0.004);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut m = ThroughputMeter::new();
+        m.add(100);
+        m.add(50);
+        assert_eq!(m.items(), 150);
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(m.rate() > 0.0);
+    }
+}

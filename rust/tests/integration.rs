@@ -1,0 +1,245 @@
+//! Integration tests: full pipelines across modules — corpus generation →
+//! vocabulary → training (every back-end) → evaluation → persistence, the
+//! distributed protocol over both transports, and the CLI binary.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use pw2v::config::{Backend, TrainConfig};
+use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
+use pw2v::corpus::vocab::Vocab;
+use pw2v::dist::{train_distributed, DistConfig, SyncPolicy};
+use pw2v::eval;
+use pw2v::model::{io as model_io, SharedModel};
+use pw2v::train;
+
+struct Fixture {
+    corpus: PathBuf,
+    vocab: Vocab,
+    latent: LatentModel,
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.corpus).ok();
+    }
+}
+
+fn fixture(tokens: u64, seed: u64) -> Fixture {
+    let scfg = SyntheticConfig {
+        vocab: 2_000,
+        tokens,
+        clusters: 20,
+        beta: 5.0,
+        seed,
+        ..SyntheticConfig::default()
+    };
+    let latent = LatentModel::new(scfg);
+    let corpus = std::env::temp_dir().join(format!(
+        "pw2v_it_{}_{}.txt",
+        seed,
+        std::process::id()
+    ));
+    latent.write_corpus(&corpus).unwrap();
+    let vocab = Vocab::build_from_file(&corpus, 1).unwrap();
+    Fixture {
+        corpus,
+        vocab,
+        latent,
+    }
+}
+
+/// Every back-end must actually LEARN: similarity correlation with the
+/// planted ground truth must be strongly positive after training, far
+/// beyond chance.
+#[test]
+fn all_backends_learn_planted_semantics() {
+    let f = fixture(400_000, 11);
+    let sim_set = eval::gen_similarity_set(&f.latent, 200, 3);
+    for backend in [Backend::Scalar, Backend::Bidmach, Backend::Gemm] {
+        let mut cfg = TrainConfig::default();
+        cfg.backend = backend;
+        cfg.dim = 64;
+        cfg.epochs = 3;
+        cfg.sample = 1e-3;
+        cfg.lr = 0.05;
+        let model = SharedModel::init(f.vocab.len(), cfg.dim, cfg.seed);
+        train::train(&cfg, &f.corpus, &f.vocab, &model).unwrap();
+        let r = eval::eval_similarity(&sim_set, &f.vocab, model.m_in());
+        assert!(
+            r.rho100 > 30.0,
+            "{backend}: rho100 = {:.1} (should be >> 0)",
+            r.rho100
+        );
+    }
+}
+
+/// The PJRT (AOT JAX/Pallas) back-end must learn equivalently to the
+/// native GEMM back-end — the whole-stack composition test.
+#[test]
+fn pjrt_backend_learns_like_native() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let f = fixture(200_000, 13);
+    let sim_set = eval::gen_similarity_set(&f.latent, 200, 3);
+    let mut rhos = Vec::new();
+    for backend in [Backend::Gemm, Backend::Pjrt] {
+        let mut cfg = TrainConfig::default();
+        cfg.backend = backend;
+        cfg.dim = 32; // matches the test artifact D
+        cfg.batch = 8;
+        cfg.superbatch = 4; // matches test_w4_b8_s6_d32
+        cfg.epochs = 3;
+        cfg.sample = 1e-3;
+        cfg.lr = 0.05;
+        cfg.artifacts_dir = artifacts.to_string_lossy().into_owned();
+        let model = SharedModel::init(f.vocab.len(), cfg.dim, cfg.seed);
+        train::train(&cfg, &f.corpus, &f.vocab, &model).unwrap();
+        let r = eval::eval_similarity(&sim_set, &f.vocab, model.m_in());
+        rhos.push(r.rho100);
+    }
+    assert!(rhos[0] > 25.0, "native rho {:.1}", rhos[0]);
+    assert!(rhos[1] > 25.0, "pjrt rho {:.1}", rhos[1]);
+    assert!(
+        (rhos[0] - rhos[1]).abs() < 15.0,
+        "native {:.1} vs pjrt {:.1} diverge",
+        rhos[0],
+        rhos[1]
+    );
+}
+
+/// Distributed training with sub-model sync must match single-node
+/// accuracy within a small margin (Table IV's claim, miniature).
+#[test]
+fn distributed_matches_single_node_accuracy() {
+    let f = fixture(400_000, 17);
+    let sim_set = eval::gen_similarity_set(&f.latent, 200, 3);
+    let mut cfg = TrainConfig::default();
+    cfg.dim = 64;
+    cfg.epochs = 2;
+    cfg.sample = 1e-3;
+    cfg.lr = 0.05;
+
+    let model = SharedModel::init(f.vocab.len(), cfg.dim, cfg.seed);
+    train::train(&cfg, &f.corpus, &f.vocab, &model).unwrap();
+    let single = eval::eval_similarity(&sim_set, &f.vocab, model.m_in()).rho100;
+
+    let mut dist = DistConfig::for_nodes(4);
+    dist.sync_interval = 25_000;
+    dist.policy = SyncPolicy::submodel_for_vocab(f.vocab.len());
+    let out = train_distributed(&cfg, &dist, &f.corpus, &f.vocab).unwrap();
+    let multi = eval::eval_similarity(&sim_set, &f.vocab, out.model.m_in()).rho100;
+
+    assert!(single > 30.0, "single-node rho {single:.1}");
+    assert!(
+        multi > single - 12.0,
+        "distributed rho {multi:.1} fell too far below single {single:.1}"
+    );
+    // Sub-model sync must have actually skipped rows.
+    let full_rows_per_round = 2 * f.vocab.len() as u64;
+    let st = &out.sync_stats[0];
+    assert!(st.rows_synced < st.rounds * full_rows_per_round);
+}
+
+/// Save → load round trip preserves evaluation results.
+#[test]
+fn persistence_roundtrip_preserves_eval() {
+    let f = fixture(200_000, 19);
+    let sim_set = eval::gen_similarity_set(&f.latent, 150, 3);
+    let mut cfg = TrainConfig::default();
+    cfg.dim = 48;
+    cfg.epochs = 2;
+    cfg.sample = 1e-3;
+    let model = SharedModel::init(f.vocab.len(), cfg.dim, cfg.seed);
+    train::train(&cfg, &f.corpus, &f.vocab, &model).unwrap();
+    let before = eval::eval_similarity(&sim_set, &f.vocab, model.m_in()).rho100;
+
+    let path = std::env::temp_dir().join(format!("pw2v_it_vec_{}.txt", std::process::id()));
+    model_io::save_text(&path, &f.vocab, model.m_in()).unwrap();
+    let (words, emb) = model_io::load_text(&path).unwrap();
+    assert_eq!(words.len(), f.vocab.len());
+    let after = eval::eval_similarity(&sim_set, &f.vocab, &emb).rho100;
+    assert!((before - after).abs() < 1e-6);
+    std::fs::remove_file(&path).ok();
+}
+
+/// The CLI binary end to end: gen-corpus → train → eval.
+#[test]
+fn cli_pipeline() {
+    let bin = env!("CARGO_BIN_EXE_pw2v");
+    let tmp = std::env::temp_dir().join(format!("pw2v_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let corpus = tmp.join("c.txt");
+    let simset = tmp.join("sim.tsv");
+    let vectors = tmp.join("v.txt");
+
+    let ok = Command::new(bin)
+        .args([
+            "gen-corpus",
+            "--out",
+            corpus.to_str().unwrap(),
+            "--tokens",
+            "200000",
+            "--vocab",
+            "2000",
+            "--simset",
+            simset.to_str().unwrap(),
+        ])
+        .status()
+        .unwrap();
+    assert!(ok.success());
+
+    let ok = Command::new(bin)
+        .args([
+            "train",
+            "--corpus",
+            corpus.to_str().unwrap(),
+            "--out",
+            vectors.to_str().unwrap(),
+            "--dim",
+            "48",
+            "--epochs",
+            "2",
+            "--min-count",
+            "1",
+            "--sample",
+            "0.001",
+        ])
+        .status()
+        .unwrap();
+    assert!(ok.success());
+
+    let out = Command::new(bin)
+        .args([
+            "eval",
+            "--vectors",
+            vectors.to_str().unwrap(),
+            "--simset",
+            simset.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("rho100"), "{stdout}");
+
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+/// `simulate` subcommand prints both figures.
+#[test]
+fn cli_simulate() {
+    let bin = env!("CARGO_BIN_EXE_pw2v");
+    for fig in ["3", "4"] {
+        let out = Command::new(bin)
+            .args(["simulate", "--figure", fig])
+            .output()
+            .unwrap();
+        assert!(out.status.success());
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains(&format!("Fig {fig}")), "{stdout}");
+    }
+}

@@ -1,0 +1,198 @@
+//! Property-based tests (randomised invariants; proptest is not vendored
+//! offline, so cases are driven by the crate's own deterministic RNG —
+//! hundreds of random cases per property, seed-reproducible).
+
+use pw2v::corpus::shard::{shards_for_len, subshards};
+use pw2v::eval::spearman::spearman;
+use pw2v::linalg::{dot, gemm_nn, gemm_nt, gemm_tn};
+use pw2v::model::SharedModel;
+use pw2v::sampling::batch::Window;
+use pw2v::train::sgd_gemm::GemmBackend;
+use pw2v::train::Backend;
+use pw2v::util::json::Json;
+use pw2v::util::rng::Xoshiro256ss;
+
+fn randv(rng: &mut Xoshiro256ss, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() - 0.5).collect()
+}
+
+/// GEMM kernels agree with the naive triple loop on random shapes.
+#[test]
+fn prop_gemm_matches_naive() {
+    let mut rng = Xoshiro256ss::new(0xA11CE);
+    for case in 0..200 {
+        let m = 1 + rng.below(24);
+        let n = 1 + rng.below(24);
+        let k = 1 + rng.below(310);
+        let a = randv(&mut rng, m * k);
+        let b_nt = randv(&mut rng, n * k);
+        let b_nn = randv(&mut rng, k * n);
+        let a_tn = randv(&mut rng, k * m);
+
+        let mut c = vec![0.0f32; m * n];
+        gemm_nt(m, n, k, 1.0, &a, &b_nt, 0.0, &mut c);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 =
+                    (0..k).map(|l| a[i * k + l] * b_nt[j * k + l]).sum();
+                assert!(
+                    (c[i * n + j] - want).abs() < 1e-3,
+                    "case {case} nt ({m},{n},{k}) at ({i},{j})"
+                );
+            }
+        }
+
+        let mut c = vec![0.0f32; m * n];
+        gemm_nn(m, n, k, 1.0, &a, &b_nn, 0.0, &mut c);
+        // spot-check a random cell (full check is O(mnk) × 200 cases)
+        let (i, j) = (rng.below(m), rng.below(n));
+        let want: f32 = (0..k).map(|l| a[i * k + l] * b_nn[l * n + j]).sum();
+        assert!((c[i * n + j] - want).abs() < 1e-3, "case {case} nn");
+
+        let mut c = vec![0.0f32; m * n];
+        gemm_tn(m, n, k, 1.0, &a_tn, &b_nn, 0.0, &mut c);
+        let (i, j) = (rng.below(m), rng.below(n));
+        let want: f32 = (0..k).map(|l| a_tn[l * m + i] * b_nn[l * n + j]).sum();
+        assert!((c[i * n + j] - want).abs() < 1e-3, "case {case} tn");
+    }
+}
+
+/// Shards partition any length exactly, for any shard/thread counts.
+#[test]
+fn prop_shards_partition() {
+    let mut rng = Xoshiro256ss::new(0x5AAD);
+    for _ in 0..300 {
+        let len = rng.below(10_000_000) as u64;
+        let n = 1 + rng.below(64);
+        let shards = shards_for_len(len, n);
+        assert_eq!(shards.len(), n);
+        let mut cursor = 0u64;
+        for s in &shards {
+            assert_eq!(s.start, cursor);
+            cursor = s.end;
+        }
+        assert_eq!(cursor, len);
+        // Nested subshards partition their parent.
+        let t = 1 + rng.below(8);
+        for s in &shards {
+            let subs = subshards(*s, t);
+            let mut c = s.start;
+            for sub in &subs {
+                assert_eq!(sub.start, c);
+                c = sub.end;
+            }
+            assert_eq!(c, s.end);
+        }
+    }
+}
+
+/// Spearman is invariant under strictly monotone transforms and bounded
+/// in [-1, 1].
+#[test]
+fn prop_spearman_monotone_invariance() {
+    let mut rng = Xoshiro256ss::new(0x0E0);
+    for _ in 0..200 {
+        let n = 3 + rng.below(100);
+        let a: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let Some(rho) = spearman(&a, &b) else { continue };
+        assert!((-1.0..=1.0).contains(&rho));
+        // Monotone transform of a leaves rho unchanged.
+        let a2: Vec<f64> = a.iter().map(|x| (3.0 * x).exp() + 7.0).collect();
+        let rho2 = spearman(&a2, &b).unwrap();
+        assert!((rho - rho2).abs() < 1e-9, "{rho} vs {rho2}");
+        // Symmetry.
+        let rho3 = spearman(&b, &a).unwrap();
+        assert!((rho - rho3).abs() < 1e-9);
+    }
+}
+
+/// Training deltas of the GEMM backend always improve the window's own
+/// objective for small lr (ascent property on random models/windows).
+#[test]
+fn prop_gemm_step_is_ascent() {
+    let mut rng = Xoshiro256ss::new(0xBEEF);
+    for case in 0..60 {
+        let v = 20 + rng.below(50);
+        let dim = 8 + rng.below(48);
+        let model = SharedModel::init(v, dim, rng.next_u64());
+        // Random prewarm so M_out is nonzero.
+        for r in 0..v as u32 {
+            // SAFETY: single-threaded test.
+            let row = unsafe { model.row_out(r) };
+            for x in row {
+                *x = rng.next_f32() * 0.2 - 0.1;
+            }
+        }
+        let b = 1 + rng.below(8);
+        let s = 2 + rng.below(6);
+        let mut ids: Vec<u32> = (0..v as u32).collect();
+        rng.shuffle(&mut ids);
+        let window = Window {
+            inputs: ids[..b].to_vec(),
+            outputs: ids[b..b + s].to_vec(),
+        };
+        let windows = vec![window];
+        let before = pw2v::train::ns_objective(&model, &windows);
+        let mut backend = GemmBackend::new(dim, 8, 8);
+        backend.process(&model, &windows, 0.01).unwrap();
+        let after = pw2v::train::ns_objective(&model, &windows);
+        assert!(
+            after > before - 1e-9,
+            "case {case}: objective fell {before} -> {after}"
+        );
+    }
+}
+
+/// JSON parser round-trips random values produced by the writer.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Xoshiro256ss, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.next_f64() * 2000.0 - 1000.0).round()),
+            3 => {
+                let n = rng.below(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Xoshiro256ss::new(0x15E);
+    for _ in 0..300 {
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(back, v, "{text}");
+    }
+}
+
+/// dot(a,b) is symmetric and linear in its first argument.
+#[test]
+fn prop_dot_linearity() {
+    let mut rng = Xoshiro256ss::new(0xD07);
+    for _ in 0..200 {
+        let n = 1 + rng.below(512);
+        let a = randv(&mut rng, n);
+        let b = randv(&mut rng, n);
+        let c = randv(&mut rng, n);
+        let lhs = dot(&a, &b) + dot(&c, &b);
+        let sum: Vec<f32> = a.iter().zip(&c).map(|(x, y)| x + y).collect();
+        let rhs = dot(&sum, &b);
+        assert!((lhs - rhs).abs() < 1e-2, "{lhs} vs {rhs} (n={n})");
+        assert!((dot(&a, &b) - dot(&b, &a)).abs() < 1e-4);
+    }
+}
