@@ -11,21 +11,32 @@
 
 use pw2v::bench::{standard_workload, BenchTable};
 use pw2v::config::{Backend, TrainConfig};
+use pw2v::linalg::simd::SimdMode;
 use pw2v::model::SharedModel;
 use pw2v::perfmodel::arch::broadwell;
 use pw2v::perfmodel::simulate::{fig3_series, fig3_thread_axis, FigParams};
 use pw2v::train;
 use pw2v::util::si;
 
-fn measure(backend: Backend, threads: usize, wl: &pw2v::bench::Workload) -> f64 {
+fn measure_simd(
+    backend: Backend,
+    threads: usize,
+    simd: SimdMode,
+    wl: &pw2v::bench::Workload,
+) -> f64 {
     let mut cfg = TrainConfig::default();
     cfg.backend = backend;
     cfg.threads = threads;
     cfg.dim = 300;
     cfg.sample = 1e-4;
+    cfg.simd = simd;
     let model = SharedModel::init(wl.vocab.len(), cfg.dim, cfg.seed);
     let out = train::train(&cfg, &wl.corpus, &wl.vocab, &model).unwrap();
     out.snapshot.words_per_sec()
+}
+
+fn measure(backend: Backend, threads: usize, wl: &pw2v::bench::Workload) -> f64 {
+    measure_simd(backend, threads, SimdMode::Auto, wl)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -35,6 +46,23 @@ fn main() -> anyhow::Result<()> {
         wl.vocab.total_words(),
         wl.vocab.len()
     );
+
+    // Kernel-dispatch ablation: the SAME GEMM trainer, explicit-AVX2 vs
+    // pinned-scalar kernels, end to end (the tentpole's speedup measured
+    // at trainer level, not just in microbenches).
+    let mut dispatch = BenchTable::new(
+        "fig3_simd_dispatch",
+        &["simd", "gemm_wps_1t", "speedup_vs_scalar"],
+    );
+    let w_scalar = measure_simd(Backend::Gemm, 1, SimdMode::Scalar, &wl);
+    let w_auto = measure_simd(Backend::Gemm, 1, SimdMode::Auto, &wl);
+    dispatch.row(vec!["scalar".into(), si(w_scalar), "1.00x".into()]);
+    dispatch.row(vec![
+        "auto".into(),
+        si(w_auto),
+        format!("{:.2}x", w_auto / w_scalar.max(1.0)),
+    ]);
+    dispatch.finish()?;
 
     // Real measurements on this box.
     let mut measured = BenchTable::new(

@@ -5,6 +5,7 @@
 
 use pw2v::bench::{time, BenchTable};
 use pw2v::corpus::vocab::Vocab;
+use pw2v::linalg::simd::{self, SimdMode};
 use pw2v::linalg::{axpy, dot, gemm_nn, gemm_nt, gemm_tn};
 use pw2v::runtime::{Manifest, Runtime};
 use pw2v::sampling::unigram::UnigramSampler;
@@ -18,10 +19,121 @@ fn randv(n: usize, seed: u64) -> Vec<f32> {
 }
 
 fn main() -> anyhow::Result<()> {
+    simd_dispatch_bench()?;
     gemm_bench()?;
     vecops_bench()?;
     sampler_bench()?;
     pjrt_call_overhead()?;
+    Ok(())
+}
+
+/// Dispatch-aware kernel rows (`dot/avx2`, `gemm_nt/scalar`, …): the
+/// SIMD-vs-scalar contrast this crate's perf trajectory tracks from the
+/// explicit-SIMD PR onward.  Record the output in EXPERIMENTS.md §Perf.
+fn simd_dispatch_bench() -> anyhow::Result<()> {
+    let mut table = BenchTable::new(
+        "micro_simd_dispatch",
+        &["kernel", "level", "shape", "ns_per_call", "gflops"],
+    );
+    // The paper's window shapes: B=16, S=6, D=300.
+    let (b, s, d) = (16usize, 6usize, 300usize);
+    let wi = randv(b * d, 1);
+    let wo = randv(s * d, 2);
+    let err = randv(b * s, 3);
+    let va = randv(d, 4);
+    let mut vy = randv(d, 5);
+    let mut out_bs = vec![0.0f32; b * s];
+    let mut out_bd = vec![0.0f32; b * d];
+    let mut out_sd = vec![0.0f32; s * d];
+    let gemm_flops = 2.0 * b as f64 * s as f64 * d as f64;
+    let iters = 2000;
+
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    let levels: &[SimdMode] = if simd::configure(SimdMode::Avx2).is_ok() {
+        &[SimdMode::Avx2, SimdMode::Scalar]
+    } else {
+        eprintln!("micro_simd_dispatch: no avx2+fma, scalar level only");
+        &[SimdMode::Scalar]
+    };
+    let mut per_kernel: HashMap<&'static str, Vec<pw2v::bench::Stats>> =
+        HashMap::new();
+    for &mode in levels {
+        let level = simd::configure(mode)?;
+        let mut entry = |name: &'static str, st: pw2v::bench::Stats, flops: f64| {
+            per_kernel.entry(name).or_default().push(st);
+            table.row(vec![
+                name.into(),
+                level.to_string(),
+                if flops > 0.0 {
+                    format!("[{b},{d}]x[{d},{s}]")
+                } else {
+                    format!("d={d}")
+                },
+                format!("{:.0}", st.median * 1e9),
+                if flops > 0.0 {
+                    format!("{:.2}", flops / st.median / 1e9)
+                } else {
+                    "-".into()
+                },
+            ]);
+        };
+
+        let st = time(200, 20_000, || {
+            std::hint::black_box(simd::dot(&wi[..d], &wo[..d]));
+        });
+        entry("dot", st, 0.0);
+        let st = time(200, 20_000, || {
+            simd::axpy(0.01, &va, &mut vy);
+            std::hint::black_box(&vy);
+        });
+        entry("axpy", st, 0.0);
+        let st = time(100, iters, || {
+            simd::gemm_nt(b, s, d, 1.0, &wi, &wo, 0.0, &mut out_bs);
+            std::hint::black_box(&out_bs);
+        });
+        entry("gemm_nt", st, gemm_flops);
+        let st = time(100, iters, || {
+            simd::gemm_nn(b, d, s, 1.0, &err, &wo, 0.0, &mut out_bd);
+            std::hint::black_box(&out_bd);
+        });
+        entry("gemm_nn", st, gemm_flops);
+        let st = time(100, iters, || {
+            simd::gemm_tn(s, d, b, 1.0, &err, &wi, 0.0, &mut out_sd);
+            std::hint::black_box(&out_sd);
+        });
+        entry("gemm_tn", st, gemm_flops);
+        let st = time(100, iters, || {
+            let mut e = err.clone();
+            simd::sgns_err(&mut e, s, 0.025);
+            std::hint::black_box(&e);
+        });
+        entry("sgns_err", st, 0.0);
+    }
+    simd::configure(SimdMode::Auto)?;
+    table.finish()?;
+
+    if levels.len() == 2 {
+        let mut table = BenchTable::new(
+            "micro_simd_speedup",
+            &["kernel", "avx2_over_scalar"],
+        );
+        for name in ["dot", "axpy", "gemm_nt", "gemm_nn", "gemm_tn", "sgns_err"] {
+            let t = &per_kernel[name];
+            // t[0] ran under avx2, t[1] under scalar.
+            let ratio = pw2v::bench::speedup(&t[0], &t[1]);
+            speedups.push((name.to_string(), ratio));
+            table.row(vec![name.into(), format!("{ratio:.2}x")]);
+        }
+        table.finish()?;
+        if let Some((_, r)) =
+            speedups.iter().find(|(n, _)| n == "gemm_nt")
+        {
+            println!(
+                "gemm_nt avx2 speedup at (16,6,300): {r:.2}x \
+                 (acceptance floor: 1.5x)"
+            );
+        }
+    }
     Ok(())
 }
 
@@ -146,7 +258,13 @@ fn pjrt_call_overhead() -> anyhow::Result<()> {
         return Ok(());
     }
     let m = Manifest::load(dir)?;
-    let rt = Runtime::cpu()?;
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("micro_pjrt: runtime unavailable ({e}), skipping");
+            return Ok(());
+        }
+    };
     let mut table = BenchTable::new(
         "micro_pjrt_call",
         &["variant", "W", "us_per_call", "us_per_window", "windows_per_sec"],

@@ -42,6 +42,12 @@ pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
     }
 }
 
+/// Median-time ratio `slow/fast` between two measurements (the bench
+/// tables' speedup column; >1 means `fast` wins).
+pub fn speedup(fast: &Stats, slow: &Stats) -> f64 {
+    slow.median / fast.median.max(1e-12)
+}
+
 /// An aligned results table that also lands in `bench_results/*.csv`.
 pub struct BenchTable {
     name: String,
@@ -164,6 +170,13 @@ mod tests {
         assert!(s.min <= s.median && s.median <= s.max);
         assert!(s.mean > 0.0);
         std::hint::black_box(x);
+    }
+
+    #[test]
+    fn speedup_is_median_ratio() {
+        let fast = Stats { iters: 1, min: 1.0, median: 2.0, mean: 2.0, max: 3.0 };
+        let slow = Stats { iters: 1, min: 3.0, median: 5.0, mean: 5.0, max: 7.0 };
+        assert!((speedup(&fast, &slow) - 2.5).abs() < 1e-12);
     }
 
     #[test]

@@ -15,6 +15,7 @@ use std::fmt;
 use std::path::Path;
 use std::str::FromStr;
 
+use crate::linalg::simd::SimdMode;
 use crate::util::args::Args;
 
 /// Which trainer back-end executes the SGNS updates.
@@ -91,6 +92,38 @@ impl FromStr for LrSchedule {
     }
 }
 
+/// Which sigmoid the GEMM trainer's fused error kernel evaluates
+/// (ablation: the original's EXP_TABLE approximation vs the exact form).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SigmoidMode {
+    /// Numerically exact sigmoid (SIMD-dispatched in the GEMM backend).
+    #[default]
+    Exact,
+    /// word2vec's precomputed table with round-to-nearest-bin lookup.
+    Table,
+}
+
+impl FromStr for SigmoidMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Ok(SigmoidMode::Exact),
+            "table" => Ok(SigmoidMode::Table),
+            other => anyhow::bail!("unknown sigmoid mode '{other}' (exact|table)"),
+        }
+    }
+}
+
+impl fmt::Display for SigmoidMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            SigmoidMode::Exact => "exact",
+            SigmoidMode::Table => "table",
+        })
+    }
+}
+
 /// Full training configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -127,6 +160,12 @@ pub struct TrainConfig {
     pub artifacts_dir: String,
     /// Unigram table exponent (0.75 in the paper/original).
     pub unigram_power: f32,
+    /// Kernel dispatch policy for the GEMM hot path (`--simd`); `Auto`
+    /// picks AVX2+FMA when the CPU has it, `Scalar` pins the portable
+    /// kernels for ablations.
+    pub simd: SimdMode,
+    /// Sigmoid evaluation in the GEMM backend (`--sigmoid`).
+    pub sigmoid_mode: SigmoidMode,
 }
 
 impl Default for TrainConfig {
@@ -148,6 +187,8 @@ impl Default for TrainConfig {
             seed: 1,
             artifacts_dir: "artifacts".to_string(),
             unigram_power: 0.75,
+            simd: SimdMode::Auto,
+            sigmoid_mode: SigmoidMode::Exact,
         }
     }
 }
@@ -194,6 +235,12 @@ impl TrainConfig {
         }
         if let Some(d) = a.opt::<String>("artifacts-dir")? {
             self.artifacts_dir = d;
+        }
+        if let Some(s) = a.opt::<SimdMode>("simd")? {
+            self.simd = s;
+        }
+        if let Some(s) = a.opt::<SigmoidMode>("sigmoid")? {
+            self.sigmoid_mode = s;
         }
         self.validate()
     }
@@ -298,5 +345,22 @@ mod tests {
         assert_eq!("ours".parse::<Backend>().unwrap(), Backend::Gemm);
         assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Pjrt);
         assert!("nope".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn simd_and_sigmoid_knobs() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.simd, SimdMode::Auto);
+        assert_eq!(c.sigmoid_mode, SigmoidMode::Exact);
+        let a = Args::parse(
+            "--simd scalar --sigmoid table"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.simd, SimdMode::Scalar);
+        assert_eq!(c.sigmoid_mode, SigmoidMode::Table);
+        assert!("avx512".parse::<SimdMode>().is_err());
+        assert!("lut".parse::<SigmoidMode>().is_err());
     }
 }

@@ -64,28 +64,40 @@ impl<'v> SentenceReader<'v> {
     /// Next sentence as vocabulary ids (OOV dropped, clipped). `None` at
     /// end of range.  Empty sentences are skipped.
     pub fn next_sentence(&mut self) -> anyhow::Result<Option<Vec<u32>>> {
+        let mut sent = Vec::new();
+        Ok(if self.next_sentence_into(&mut sent)? {
+            Some(sent)
+        } else {
+            None
+        })
+    }
+
+    /// Zero-allocation variant: fill `out` (cleared first) with the next
+    /// sentence's ids.  Returns `false` at end of range.  The trainer's
+    /// hot loop reuses one buffer across the whole shard.
+    pub fn next_sentence_into(&mut self, out: &mut Vec<u32>) -> anyhow::Result<bool> {
         loop {
             if self.done || self.pos >= self.end {
-                return Ok(None);
+                return Ok(false);
             }
             self.line.clear();
             let n = self.reader.read_line(&mut self.line)?;
             if n == 0 {
                 self.done = true;
-                return Ok(None);
+                return Ok(false);
             }
             self.pos += n as u64;
-            let mut sent = Vec::new();
+            out.clear();
             for tok in self.line.split_ascii_whitespace() {
                 if let Some(id) = self.vocab.id(tok) {
-                    sent.push(id);
-                    if sent.len() >= MAX_SENTENCE_LEN {
+                    out.push(id);
+                    if out.len() >= MAX_SENTENCE_LEN {
                         break;
                     }
                 }
             }
-            if !sent.is_empty() {
-                return Ok(Some(sent));
+            if !out.is_empty() {
+                return Ok(true);
             }
         }
     }

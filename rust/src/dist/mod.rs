@@ -1,0 +1,28 @@
+//! Distributed data-parallel training (paper Sec. III-E).
+//!
+//! N replica "nodes" (threads standing in for MPI ranks; the in-process
+//! shared-memory transport plays the fabric) train private full model
+//! replicas on disjoint corpus shards.  Every `sync_interval` words each
+//! node joins a synchronous allreduce round that AVERAGES model rows
+//! across replicas — either the full model (`SyncPolicy::Full`, the
+//! naive scheme whose traffic kills scaling) or the paper's SUB-MODEL
+//! scheme: the hot head of the frequency-sorted vocabulary every round,
+//! plus a rotating slice of the cold tail, cutting per-round traffic to a
+//! few percent of the model.
+//!
+//! The learning rate uses the paper's distributed trick (`LrState::
+//! dist_scaled`): the start rate scales with N and the decay sharpens, so
+//! accuracy holds as nodes are added (Table IV; ablated by
+//! `benches/table4_dist_accuracy.rs` with `scale_lr = false`).
+//!
+//! Module map: [`node`] — per-replica configuration; [`sync`] — sync
+//! policies and the row-averaging collective; [`train`] — the replica
+//! driver [`train_distributed`].
+
+pub mod node;
+pub mod sync;
+pub mod train;
+
+pub use node::DistConfig;
+pub use sync::SyncPolicy;
+pub use train::{train_distributed, DistOutcome, SyncStats};

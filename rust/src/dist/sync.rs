@@ -1,0 +1,195 @@
+//! Synchronization policies and the in-process row-averaging collective.
+//!
+//! The paper's network-traffic reduction (Sec. III-E): instead of
+//! allreducing the full 2·V·D model every round (~2.5 GB at 1B-benchmark
+//! scale), each round moves the HOT head of the frequency-sorted
+//! vocabulary (ids are count-sorted, so the head is a prefix) plus one
+//! rotating slice of the cold tail, so every row still syncs periodically
+//! while per-round payload drops by ~8×.
+
+use std::ops::Range;
+
+use crate::linalg::vecops::axpy;
+use crate::model::SharedModel;
+
+/// Which model rows a synchronization round moves.
+#[derive(Clone, Debug)]
+pub enum SyncPolicy {
+    /// Average every row every round (the bandwidth-bound baseline).
+    Full,
+    /// The paper's sub-model scheme: rows `0..hot_rows` every round, plus
+    /// cold-tail slice `(round-1) % cold_parts` of the remainder.
+    SubModel { hot_rows: usize, cold_parts: u32 },
+}
+
+impl SyncPolicy {
+    /// Sub-model policy sized for the paper's 1B-benchmark vocabulary.
+    pub fn submodel_default() -> Self {
+        Self::submodel_for_vocab(1_115_011)
+    }
+
+    /// Sub-model policy for a vocabulary of `vocab` rows: hot head =
+    /// 1/16th of the vocabulary, cold tail rotated over 16 rounds
+    /// (≈12% of rows per round; every row syncs at least every 16
+    /// rounds).
+    pub fn submodel_for_vocab(vocab: usize) -> Self {
+        Self::SubModel {
+            hot_rows: (vocab / 16).max(1),
+            cold_parts: 16,
+        }
+    }
+
+    /// The (disjoint, ascending) row ranges due in 1-based `round`.
+    pub fn rows_due(&self, vocab: usize, round: u32) -> Vec<Range<u32>> {
+        match *self {
+            SyncPolicy::Full => {
+                if vocab == 0 {
+                    vec![]
+                } else {
+                    vec![0..vocab as u32]
+                }
+            }
+            SyncPolicy::SubModel {
+                hot_rows,
+                cold_parts,
+            } => {
+                let hot = hot_rows.min(vocab) as u32;
+                let mut out = Vec::with_capacity(2);
+                if hot > 0 {
+                    out.push(0..hot);
+                }
+                let cold = vocab as u32 - hot;
+                let parts = cold_parts.max(1);
+                let idx = round.wrapping_sub(1) % parts;
+                let lo = hot + (cold as u64 * idx as u64 / parts as u64) as u32;
+                let hi =
+                    hot + (cold as u64 * (idx as u64 + 1) / parts as u64) as u32;
+                if hi > lo {
+                    out.push(lo..hi);
+                }
+                out
+            }
+        }
+    }
+
+    /// Total rows due in `round` (one matrix).
+    pub fn rows_due_count(&self, vocab: usize, round: u32) -> u64 {
+        self.rows_due(vocab, round)
+            .iter()
+            .map(|r| r.len() as u64)
+            .sum()
+    }
+}
+
+/// Average row `r` of both matrices across all `models`, writing the mean
+/// back into every replica.  `scratch` must hold `dim` f32s.
+///
+/// Callers partition rows disjointly across nodes (see
+/// `train::allreduce_rows`), so no two threads ever touch the same row —
+/// the Hogwild raw-row access is race-free here by construction.
+pub(crate) fn average_row(models: &[SharedModel], r: u32, scratch: &mut [f32]) {
+    let inv = 1.0 / models.len() as f32;
+    // M_in
+    scratch.fill(0.0);
+    for m in models {
+        // SAFETY: rows are partitioned across sync workers (see above).
+        axpy(inv, unsafe { m.row_in(r) }, scratch);
+    }
+    for m in models {
+        // SAFETY: as above.
+        unsafe { m.row_in(r) }.copy_from_slice(scratch);
+    }
+    // M_out
+    scratch.fill(0.0);
+    for m in models {
+        // SAFETY: as above.
+        axpy(inv, unsafe { m.row_out(r) }, scratch);
+    }
+    for m in models {
+        // SAFETY: as above.
+        unsafe { m.row_out(r) }.copy_from_slice(scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_policy_is_everything_every_round() {
+        let p = SyncPolicy::Full;
+        for round in 1..5 {
+            assert_eq!(p.rows_due(100, round), vec![0..100]);
+            assert_eq!(p.rows_due_count(100, round), 100);
+        }
+    }
+
+    #[test]
+    fn submodel_hot_rows_every_round_cold_rotates() {
+        let vocab = 1600usize;
+        let p = SyncPolicy::submodel_for_vocab(vocab);
+        let SyncPolicy::SubModel { hot_rows, cold_parts } = p.clone() else {
+            panic!("expected submodel");
+        };
+        assert_eq!(hot_rows, 100);
+        // The hot head is in every round; cold slices tile the tail
+        // exactly once per `cold_parts` rounds.
+        let mut covered = vec![0u32; vocab];
+        for round in 1..=cold_parts {
+            let due = p.rows_due(vocab, round);
+            assert_eq!(due[0], 0..100, "round {round}");
+            for range in &due {
+                for r in range.clone() {
+                    covered[r as usize] += 1;
+                }
+            }
+        }
+        for (r, &c) in covered.iter().enumerate() {
+            if r < 100 {
+                assert_eq!(c, cold_parts, "hot row {r}");
+            } else {
+                assert_eq!(c, 1, "cold row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn submodel_per_round_fraction_is_small() {
+        let vocab = 1_115_011usize;
+        let p = SyncPolicy::submodel_default();
+        let avg: f64 = (1..=16)
+            .map(|r| p.rows_due_count(vocab, r) as f64)
+            .sum::<f64>()
+            / 16.0;
+        let frac = avg / vocab as f64;
+        assert!((0.10..0.15).contains(&frac), "per-round fraction {frac}");
+    }
+
+    #[test]
+    fn tiny_vocab_edge_cases() {
+        let p = SyncPolicy::submodel_for_vocab(1);
+        assert_eq!(p.rows_due_count(1, 1), 1);
+        let p = SyncPolicy::SubModel { hot_rows: 10, cold_parts: 4 };
+        // hot larger than vocab: clamps, no cold tail.
+        assert_eq!(p.rows_due(5, 3), vec![0..5]);
+        assert!(SyncPolicy::Full.rows_due(0, 1).is_empty());
+    }
+
+    #[test]
+    fn average_row_averages_both_matrices() {
+        let models: Vec<SharedModel> =
+            (0..4).map(|s| SharedModel::init(8, 4, s as u64)).collect();
+        let want_in: Vec<f32> = (0..4)
+            .map(|l| {
+                models.iter().map(|m| m.m_in().row(3)[l]).sum::<f32>() / 4.0
+            })
+            .collect();
+        let mut scratch = vec![0.0f32; 4];
+        average_row(&models, 3, &mut scratch);
+        for m in &models {
+            for l in 0..4 {
+                assert!((m.m_in().row(3)[l] - want_in[l]).abs() < 1e-6);
+            }
+        }
+    }
+}

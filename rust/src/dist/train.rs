@@ -1,0 +1,409 @@
+//! The replica driver: N node threads, private model replicas, barrier-
+//! synchronous allreduce rounds (paper Sec. III-E).
+//!
+//! Protocol per round, every node:
+//!
+//! 1. train ~`sync_interval` corpus words on its shard (GEMM backend over
+//!    the zero-allocation arena pipeline, exactly like the shared-memory
+//!    trainer's inner loop);
+//! 2. barrier; if EVERY node has exhausted its shard×epochs, stop;
+//! 3. otherwise allreduce: the round's due rows (policy) are partitioned
+//!    round-robin across nodes, and each node averages its rows across
+//!    all replicas in place; barrier; next round.
+//!
+//! Nodes that finish early keep joining rounds (contributing their frozen
+//! replica) until all are done, so every node executes the same barrier
+//! sequence — the same discipline an MPI implementation needs.  Traffic
+//! accounting assumes a ring allreduce (`2·(N-1)/N × payload` per node
+//! per round), matching the cluster cost model in `perfmodel::network`.
+//!
+//! The merged result is a final full average of all replicas.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+use std::time::Instant;
+
+use super::node::DistConfig;
+use super::sync::{average_row, SyncPolicy};
+use crate::config::TrainConfig;
+use crate::corpus::reader::{SentenceReader, MAX_SENTENCE_LEN};
+use crate::corpus::shard::{shards_for_file, Shard};
+use crate::corpus::subsample::Subsampler;
+use crate::corpus::vocab::Vocab;
+use crate::model::SharedModel;
+use crate::sampling::batch::{BatchBuilder, SuperbatchArena};
+use crate::sampling::unigram::UnigramSampler;
+use crate::train::lr::LrState;
+use crate::train::sgd_gemm::GemmBackend;
+use crate::train::Backend;
+use crate::util::rng::Xoshiro256ss;
+
+/// Per-node synchronization accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SyncStats {
+    /// Allreduce rounds this node joined.
+    pub rounds: u64,
+    /// Model rows (× both matrices) due across those rounds.
+    pub rows_synced: u64,
+    /// Bytes this node moves on the wire under a ring allreduce.
+    pub wire_bytes: u64,
+}
+
+/// Result of a distributed run.
+#[derive(Debug)]
+pub struct DistOutcome {
+    /// The merged (full-average) model.
+    pub model: SharedModel,
+    /// Corpus words processed across all nodes (× epochs).
+    pub words: u64,
+    /// Wall-clock seconds.
+    pub secs: f64,
+    /// Per-node sync accounting.
+    pub sync_stats: Vec<SyncStats>,
+}
+
+/// Train `dist.nodes` model replicas over shards of `corpus` with
+/// periodic sub-model (or full) synchronization, and merge.
+pub fn train_distributed(
+    cfg: &TrainConfig,
+    dist: &DistConfig,
+    corpus: &Path,
+    vocab: &Vocab,
+) -> anyhow::Result<DistOutcome> {
+    cfg.validate()?;
+    anyhow::ensure!(dist.nodes >= 1, "need at least one node");
+    anyhow::ensure!(dist.sync_interval >= 1, "sync_interval must be >= 1");
+    // Same dispatch policy as the shared-memory trainer (`--simd`).
+    crate::linalg::simd::configure(cfg.simd)?;
+    let n = dist.nodes;
+
+    let sampler = UnigramSampler::alias(vocab, cfg.unigram_power);
+    let subsampler = Subsampler::new(vocab, cfg.sample);
+    let total_words = vocab.total_words() * cfg.epochs as u64;
+    let lr_state = if dist.scale_lr {
+        LrState::dist_scaled(cfg.lr, cfg.lr_min_frac, total_words, n)
+    } else {
+        LrState::linear(cfg.lr, cfg.lr_min_frac, total_words)
+    };
+    let shards = shards_for_file(corpus, n)?;
+    // Every replica starts from the SAME init (the paper's replicas do).
+    let mut models: Vec<SharedModel> = (0..n)
+        .map(|_| SharedModel::init(vocab.len(), cfg.dim, cfg.seed))
+        .collect();
+
+    let barrier = Barrier::new(n);
+    let done_nodes = AtomicUsize::new(0);
+    let words_done = AtomicUsize::new(0);
+    let start = Instant::now();
+
+    let stats: Vec<SyncStats> = std::thread::scope(
+        |scope| -> anyhow::Result<Vec<SyncStats>> {
+            let mut handles = Vec::new();
+            for (idx, shard) in shards.iter().enumerate() {
+                let (models, barrier, done_nodes, words_done, lr_state) = (
+                    &models[..],
+                    &barrier,
+                    &done_nodes,
+                    &words_done,
+                    &lr_state,
+                );
+                let (sampler, subsampler) = (&sampler, &subsampler);
+                let policy = dist.policy.clone();
+                handles.push(scope.spawn(move || {
+                    node_loop(NodeCtx {
+                        cfg,
+                        dist_interval: dist.sync_interval,
+                        policy,
+                        idx,
+                        shard: *shard,
+                        corpus,
+                        vocab,
+                        models,
+                        barrier,
+                        done_nodes,
+                        words_done,
+                        lr_state,
+                        sampler,
+                        subsampler,
+                    })
+                }));
+            }
+            let mut stats = Vec::with_capacity(n);
+            for h in handles {
+                stats.push(
+                    h.join()
+                        .map_err(|_| anyhow::anyhow!("node thread panicked"))??,
+                );
+            }
+            Ok(stats)
+        },
+    )?;
+
+    // Final full merge: one full-model averaging round (same collective
+    // as the per-round sync), then replica 0 is the merged model.
+    if n > 1 {
+        let mut scratch = vec![0.0f32; cfg.dim];
+        for r in 0..vocab.len() as u32 {
+            average_row(&models, r, &mut scratch);
+        }
+    }
+
+    Ok(DistOutcome {
+        model: models.swap_remove(0),
+        words: words_done.load(Ordering::Relaxed) as u64,
+        secs: start.elapsed().as_secs_f64(),
+        sync_stats: stats,
+    })
+}
+
+/// Borrowed context for one node thread (keeps the spawn closure tidy).
+struct NodeCtx<'a> {
+    cfg: &'a TrainConfig,
+    dist_interval: u64,
+    policy: SyncPolicy,
+    idx: usize,
+    shard: Shard,
+    corpus: &'a Path,
+    vocab: &'a Vocab,
+    models: &'a [SharedModel],
+    barrier: &'a Barrier,
+    done_nodes: &'a AtomicUsize,
+    words_done: &'a AtomicUsize,
+    lr_state: &'a LrState,
+    sampler: &'a UnigramSampler,
+    subsampler: &'a Subsampler,
+}
+
+fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
+    let cfg = ctx.cfg;
+    let n = ctx.models.len();
+    let model = &ctx.models[ctx.idx];
+    let mut backend = GemmBackend::new(cfg.dim, cfg.batch, cfg.samples())
+        .with_sigmoid(cfg.sigmoid_mode);
+    let mut rng =
+        Xoshiro256ss::new(cfg.seed ^ (ctx.idx as u64 * 0x5D1_77F + 13));
+    let builder =
+        BatchBuilder::new(ctx.sampler, cfg.window, cfg.batch, cfg.negative);
+    let mut arena = SuperbatchArena::with_capacity(
+        cfg.superbatch,
+        cfg.batch,
+        cfg.samples(),
+    );
+    let mut sent: Vec<u32> = Vec::with_capacity(MAX_SENTENCE_LEN);
+    let mut scratch = vec![0.0f32; cfg.dim];
+    let mut stats = SyncStats::default();
+
+    let mut reader = SentenceReader::open_range(
+        ctx.corpus,
+        ctx.vocab,
+        ctx.shard.start,
+        ctx.shard.end,
+    )?;
+    let mut epoch = 0usize;
+    let mut exhausted = false;
+    let mut signalled_done = false;
+    let mut raw_words = 0u64;
+    let mut round: u32 = 1;
+    // A node that fails must KEEP joining barriers (acting exhausted) or
+    // the other N-1 nodes deadlock in `Barrier::wait`; the error is held
+    // here and returned once the whole group stops.
+    let mut failure: Option<anyhow::Error> = None;
+
+    loop {
+        // Phase 1: train ~sync_interval words of this node's shard.
+        let mut processed = 0u64;
+        while !exhausted && processed < ctx.dist_interval {
+            match reader.next_sentence_into(&mut sent) {
+                Err(e) => {
+                    failure = Some(e);
+                    exhausted = true;
+                    break;
+                }
+                Ok(false) => {
+                    epoch += 1;
+                    if epoch >= cfg.epochs {
+                        exhausted = true;
+                        break;
+                    }
+                    match SentenceReader::open_range(
+                        ctx.corpus,
+                        ctx.vocab,
+                        ctx.shard.start,
+                        ctx.shard.end,
+                    ) {
+                        Ok(r) => reader = r,
+                        Err(e) => {
+                            failure = Some(e);
+                            exhausted = true;
+                            break;
+                        }
+                    }
+                    continue;
+                }
+                Ok(true) => {}
+            }
+            processed += sent.len() as u64;
+            raw_words += sent.len() as u64;
+            ctx.subsampler.filter(&mut sent, &mut rng);
+            builder.fill_arena(&sent, &mut rng, &mut arena);
+            if arena.len() >= cfg.superbatch {
+                let lr = ctx.lr_state.advance(raw_words);
+                ctx.words_done
+                    .fetch_add(raw_words as usize, Ordering::Relaxed);
+                raw_words = 0;
+                if let Err(e) = backend.process_arena(model, &arena, lr) {
+                    failure = Some(e);
+                    exhausted = true;
+                }
+                arena.clear();
+                if exhausted {
+                    break;
+                }
+            }
+        }
+        if exhausted && failure.is_none() && !arena.is_empty() {
+            let lr = ctx.lr_state.advance(raw_words);
+            ctx.words_done
+                .fetch_add(raw_words as usize, Ordering::Relaxed);
+            raw_words = 0;
+            if let Err(e) = backend.process_arena(model, &arena, lr) {
+                failure = Some(e);
+            }
+            arena.clear();
+        } else if exhausted && raw_words > 0 {
+            ctx.lr_state.advance(raw_words);
+            ctx.words_done
+                .fetch_add(raw_words as usize, Ordering::Relaxed);
+            raw_words = 0;
+        }
+        if exhausted && !signalled_done {
+            ctx.done_nodes.fetch_add(1, Ordering::SeqCst);
+            signalled_done = true;
+        }
+
+        // Phase 2: uniform stop decision.  The barrier orders every
+        // node's `done_nodes` update before every node's read, so all
+        // replicas take the same branch.
+        ctx.barrier.wait();
+        if ctx.done_nodes.load(Ordering::SeqCst) == n {
+            break;
+        }
+
+        // Phase 3: allreduce the round's due rows; rows are partitioned
+        // round-robin across nodes so writes never collide.
+        let due = ctx.policy.rows_due(ctx.vocab.len(), round);
+        let mut due_rows = 0u64;
+        for range in &due {
+            due_rows += range.len() as u64;
+            for r in range.clone() {
+                if r as usize % n == ctx.idx {
+                    average_row(ctx.models, r, &mut scratch);
+                }
+            }
+        }
+        stats.rounds += 1;
+        stats.rows_synced += 2 * due_rows;
+        // Ring allreduce wire cost per node: 2·(N-1)/N × payload.
+        let payload = 2 * due_rows * cfg.dim as u64 * 4;
+        stats.wire_bytes += 2 * payload * (n as u64 - 1) / n as u64;
+        ctx.barrier.wait();
+        round += 1;
+    }
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{LatentModel, SyntheticConfig};
+
+    fn tiny_corpus(seed: u64) -> (std::path::PathBuf, Vocab) {
+        let mut scfg = SyntheticConfig::test_tiny();
+        scfg.tokens = 40_000;
+        scfg.seed = seed;
+        let lm = LatentModel::new(scfg);
+        let path = std::env::temp_dir().join(format!(
+            "pw2v_dist_corpus_{seed}_{}.txt",
+            std::process::id()
+        ));
+        lm.write_corpus(&path).unwrap();
+        let vocab = Vocab::build_from_file(&path, 1).unwrap();
+        (path, vocab)
+    }
+
+    #[test]
+    fn replicas_train_and_account_traffic() {
+        let (path, vocab) = tiny_corpus(41);
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        let mut dist = DistConfig::for_nodes(3);
+        dist.sync_interval = 4_000;
+        dist.policy = SyncPolicy::submodel_for_vocab(vocab.len());
+        let out = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+        assert_eq!(out.sync_stats.len(), 3);
+        // Every node joined the same number of rounds.
+        let r0 = out.sync_stats[0].rounds;
+        assert!(r0 >= 1, "no sync rounds at interval 4k over 40k words");
+        for st in &out.sync_stats {
+            assert_eq!(st.rounds, r0);
+            assert!(st.rows_synced > 0);
+            assert!(st.wire_bytes > 0);
+            // Sub-model sync must move fewer rows than full sync would.
+            assert!(st.rows_synced < st.rounds * 2 * vocab.len() as u64);
+        }
+        // All corpus words processed (each node its shard, one epoch).
+        assert_eq!(out.words, vocab.total_words());
+        // The merged model moved away from init.
+        let init = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+        assert_ne!(out.model.m_in().data(), init.m_in().data());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn single_node_has_no_wire_traffic() {
+        let (path, vocab) = tiny_corpus(43);
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        let mut dist = DistConfig::for_nodes(1);
+        dist.sync_interval = 5_000;
+        let out = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+        assert_eq!(out.words, vocab.total_words());
+        assert_eq!(out.sync_stats[0].wire_bytes, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn full_policy_moves_whole_model() {
+        let (path, vocab) = tiny_corpus(47);
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        let mut dist = DistConfig::for_nodes(2);
+        dist.sync_interval = 8_000;
+        dist.policy = SyncPolicy::Full;
+        let out = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+        let st = &out.sync_stats[0];
+        assert_eq!(st.rows_synced, st.rounds * 2 * vocab.len() as u64);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replicas_converge_toward_each_other() {
+        // After syncing, replicas share the hot head: their row-0 vectors
+        // must be closer to each other than independently trained models.
+        let (path, vocab) = tiny_corpus(53);
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        cfg.epochs = 2;
+        let mut dist = DistConfig::for_nodes(2);
+        dist.sync_interval = 2_000; // many rounds over 80k words
+        dist.policy = SyncPolicy::submodel_for_vocab(vocab.len());
+        let out = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+        assert!(out.sync_stats[0].rounds > 5);
+        assert_eq!(out.words, 2 * vocab.total_words());
+        std::fs::remove_file(&path).ok();
+    }
+}

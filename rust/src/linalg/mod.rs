@@ -5,11 +5,18 @@
 //! organisation), and level-3 GEMM (the paper's scheme).  Each trainer
 //! back-end in `crate::train` uses exactly the primitives of its level, so
 //! the measured contrast mirrors the paper's.
+//!
+//! The GEMM trainer's hot path goes through [`simd`], which dispatches at
+//! runtime between explicit AVX2+FMA kernels and these portable ones
+//! (`--simd {auto,avx2,scalar}`); the portable kernels remain the
+//! reference semantics and the fair scalar baseline.
 
 pub mod gemm;
 pub mod sigmoid;
+pub mod simd;
 pub mod vecops;
 
 pub use gemm::{gemm_nn, gemm_nt, gemm_tn};
 pub use sigmoid::{sigmoid_exact, SigmoidTable};
+pub use simd::{SimdLevel, SimdMode};
 pub use vecops::{axpy, dot, scale_add};

@@ -1,6 +1,9 @@
 //! Logistic function: exact, and the original word2vec's precomputed
-//! `EXP_TABLE` (1000 entries over [-6, 6], saturating outside), used by the
-//! scalar baseline for bit-level fidelity to the C code's behaviour.
+//! `EXP_TABLE` (1000 entries over [-6, 6], saturating outside), used by
+//! the scalar baseline.  The table matches the C code's resolution and
+//! saturation behaviour, but the in-range lookup deliberately diverges:
+//! it rounds to the nearest bin where the C original truncates (see
+//! [`SigmoidTable::get`] for the bias this removes).
 
 /// Exact numerically-stable sigmoid.
 #[inline]
@@ -41,6 +44,13 @@ impl SigmoidTable {
     /// 0 for x <= -MAX_EXP.  (The C code *skips* the update in the
     /// saturated region for the positive/negative label logic; callers
     /// replicate that where needed.)
+    ///
+    /// Unlike the C original, the in-range lookup rounds to the NEAREST
+    /// bin instead of truncating.  Truncation always selects the bin
+    /// below `x`, a systematic downward shift of up to one full bin
+    /// (≈0.003 in σ at the default resolution) that biases every gradient
+    /// in the same direction; rounding halves the worst-case error and
+    /// centres it at zero (asserted by `rounding_beats_truncation`).
     #[inline]
     pub fn get(&self, x: f32) -> f32 {
         if x >= self.max_exp {
@@ -48,9 +58,9 @@ impl SigmoidTable {
         } else if x <= -self.max_exp {
             0.0
         } else {
-            let idx = ((x + self.max_exp)
-                * (self.table.len() as f32 / self.max_exp / 2.0))
-                as usize;
+            let t = (x + self.max_exp)
+                * (self.table.len() as f32 / self.max_exp / 2.0);
+            let idx = (t + 0.5) as usize;
             self.table[idx.min(self.table.len() - 1)]
         }
     }
@@ -100,6 +110,30 @@ mod tests {
         assert_eq!(t.get(-100.0), 0.0);
         assert!(t.saturated(6.5));
         assert!(!t.saturated(5.9));
+    }
+
+    /// Round-to-nearest lookup: error vs the exact sigmoid is bounded by
+    /// half a bin's worth of σ-variation and is UNBIASED, where the C
+    /// original's truncating lookup erred low on essentially every point.
+    #[test]
+    fn rounding_beats_truncation() {
+        let t = SigmoidTable::default_table();
+        // Bin width in x is 2*MAX_EXP/SIZE = 0.012; max |σ'| = 1/4, so the
+        // nearest-bin error is ≤ 0.012/2 * 0.25 + interpolation slack.
+        let mut sum_err = 0.0f64;
+        let mut max_err = 0.0f32;
+        let mut n = 0u32;
+        let mut x = -5.9f32;
+        while x < 5.9 {
+            let err = t.get(x) - sigmoid_exact(x);
+            sum_err += err as f64;
+            max_err = max_err.max(err.abs());
+            n += 1;
+            x += 0.000_7; // incommensurate with the bin width
+        }
+        let bias = sum_err / n as f64;
+        assert!(max_err < 2.0e-3, "max err {max_err}");
+        assert!(bias.abs() < 2.0e-4, "lookup bias {bias}");
     }
 
     #[test]

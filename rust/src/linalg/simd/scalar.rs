@@ -1,0 +1,21 @@
+//! Portable-scalar dispatch targets: thin delegations to the original
+//! autovectorised kernels in `linalg::vecops` / `linalg::gemm`, plus the
+//! reference form of the fused SGNS error kernel.
+//!
+//! These are deliberately the SAME functions the crate used before the
+//! explicit-SIMD layer existed, so `--simd scalar` reproduces pre-SIMD
+//! results bit for bit (asserted in `simd::tests` and `tests/props.rs`).
+
+use crate::linalg::sigmoid::sigmoid_exact;
+
+pub use crate::linalg::gemm::{gemm_nn, gemm_nt, gemm_tn};
+pub use crate::linalg::vecops::{axpy, dot};
+
+/// `logits[r, j] <- (label(j) − σ(logits[r, j])) · lr`, exact sigmoid.
+/// Column 0 of each `s`-wide row is the positive target (label 1).
+pub fn sgns_err(logits: &mut [f32], s: usize, lr: f32) {
+    for (idx, x) in logits.iter_mut().enumerate() {
+        let label = if idx % s == 0 { 1.0 } else { 0.0 };
+        *x = (label - sigmoid_exact(*x)) * lr;
+    }
+}

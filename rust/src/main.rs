@@ -54,7 +54,8 @@ USAGE: pw2v <subcommand> [--key value ...]
   gen-corpus  --out corpus.txt [--tokens N --vocab V --seed S]
               [--simset sim.tsv --anaset ana.txt]
   train       --corpus corpus.txt --out vectors.txt
-              [--backend scalar|bidmach|gemm|pjrt --threads T --dim D ...]
+              [--backend scalar|bidmach|gemm|pjrt --threads T --dim D
+               --simd auto|avx2|scalar --sigmoid exact|table ...]
   train-dist  --corpus corpus.txt --nodes N [--sync-interval W --policy sub|full]
               [--out vectors.txt]
   eval        --vectors vectors.txt [--simset sim.tsv] [--anaset ana.txt]
@@ -112,8 +113,8 @@ fn cmd_train(a: &Args) -> anyhow::Result<()> {
     );
     let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
     eprintln!(
-        "training: backend={} threads={} dim={} epochs={}",
-        cfg.backend, cfg.threads, cfg.dim, cfg.epochs
+        "training: backend={} threads={} dim={} epochs={} simd={} sigmoid={}",
+        cfg.backend, cfg.threads, cfg.dim, cfg.epochs, cfg.simd, cfg.sigmoid_mode
     );
     let outcome = train::train(&cfg, &corpus, &vocab, &model)?;
     let snap = outcome.snapshot;

@@ -118,7 +118,7 @@ impl Snapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crossbeam_utils::thread;
+    use std::thread;
 
     #[test]
     fn counters_accumulate_across_threads() {
@@ -126,15 +126,14 @@ mod tests {
         thread::scope(|s| {
             for _ in 0..4 {
                 let c = &c;
-                s.spawn(move |_| {
+                s.spawn(move || {
                     for _ in 0..1000 {
                         c.add_words(3);
                         c.add_windows(1);
                     }
                 });
             }
-        })
-        .unwrap();
+        });
         assert_eq!(c.words_now(), 12_000);
         let snap = c.snapshot();
         assert_eq!(snap.windows, 4_000);

@@ -20,7 +20,7 @@
 //! unsafety in one audited module.
 
 use super::embedding::Embedding;
-use crate::linalg::vecops::axpy;
+use crate::linalg::simd::axpy;
 
 /// The shared `{M_in, M_out}` pair of the paper's Ω.
 pub struct SharedModel {
@@ -119,7 +119,7 @@ impl SharedModel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crossbeam_utils::thread;
+    use std::thread;
 
     #[test]
     fn init_shapes() {
@@ -150,7 +150,7 @@ mod tests {
         thread::scope(|s| {
             for t in 0..4u32 {
                 let m = &m;
-                s.spawn(move |_| {
+                s.spawn(move || {
                     for _ in 0..1000 {
                         for w in (t * 16)..(t * 16 + 16) {
                             m.add_out(w, &[1.0; 8]);
@@ -158,8 +158,7 @@ mod tests {
                     }
                 });
             }
-        })
-        .unwrap();
+        });
         for w in 0..64u32 {
             for &x in m.m_out().row(w) {
                 assert_eq!(x, 1000.0, "row {w}");
@@ -177,14 +176,13 @@ mod tests {
         thread::scope(|s| {
             for _ in 0..threads {
                 let m = &m;
-                s.spawn(move |_| {
+                s.spawn(move || {
                     for _ in 0..per_thread {
                         m.add_out(0, &[1.0; 8]);
                     }
                 });
             }
-        })
-        .unwrap();
+        });
         let expected = (per_thread * threads) as f32;
         for &x in m.m_out().row(0) {
             assert!(x > expected * 0.5, "lost too many updates: {x}/{expected}");

@@ -2,11 +2,26 @@
 //! (HLO text; see the recipe notes there) and executes them on the CPU
 //! PJRT client from the training hot path.  Python is never invoked here —
 //! the rust binary is self-contained once `artifacts/` exists.
+//!
+//! The PJRT client itself needs the vendored `xla` crate, which is only
+//! present on the AOT build hosts; everything XLA-facing is therefore
+//! compiled under the `pjrt` cargo feature.  Without the feature, stub
+//! types with the same surface are provided so every call site (trainer,
+//! benches, `pw2v info`) compiles and reports "pjrt support not compiled
+//! in" at runtime instead.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod executable;
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
+#[cfg(feature = "pjrt")]
 pub use executable::StepExecutable;
 pub use manifest::{Manifest, Variant};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Runtime, StepExecutable};

@@ -1,0 +1,95 @@
+//! Surface-compatible stand-ins for the PJRT runtime, compiled when the
+//! `pjrt` cargo feature is off (i.e. the vendored `xla` crate is absent).
+//!
+//! Every constructor fails with a clear message, so call sites keep their
+//! ordinary error handling: `pw2v info` prints "pjrt unavailable", the
+//! trainer refuses `--backend pjrt`, and the PJRT benches skip.  No stub
+//! value can ever be constructed, so the methods below are unreachable at
+//! runtime — they exist purely to satisfy the type surface of
+//! `runtime::client` / `runtime::executable`.
+
+use std::path::Path;
+
+use super::manifest::{Manifest, Variant};
+
+const UNAVAILABLE: &str =
+    "pjrt support not compiled in (rebuild with `--features pjrt` and the vendored xla crate)";
+
+/// Stub of [`crate::runtime::client::Runtime`].
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always fails: there is no PJRT client in this build.
+    pub fn cpu() -> anyhow::Result<Self> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Unreachable (no `Runtime` can exist), kept for signature parity.
+    pub fn compile_step<P: AsRef<Path>>(
+        &self,
+        _path: P,
+        _w: usize,
+        _b: usize,
+        _s: usize,
+        _d: usize,
+    ) -> anyhow::Result<StepExecutable> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+
+    /// Unreachable, kept for signature parity.
+    pub fn compile_variant(
+        &self,
+        _manifest: &Manifest,
+        _variant: &Variant,
+    ) -> anyhow::Result<StepExecutable> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+}
+
+/// Stub of [`crate::runtime::executable::StepExecutable`].
+pub struct StepExecutable {
+    pub w: usize,
+    pub b: usize,
+    pub s: usize,
+    pub d: usize,
+    _private: (),
+}
+
+impl StepExecutable {
+    /// Number of f32s in the `wi` input.
+    pub fn wi_len(&self) -> usize {
+        self.w * self.b * self.d
+    }
+
+    /// Number of f32s in the `wo` input.
+    pub fn wo_len(&self) -> usize {
+        self.w * self.s * self.d
+    }
+
+    /// Unreachable (no `StepExecutable` can exist in this build).
+    pub fn run(
+        &self,
+        _wi: &[f32],
+        _wo: &[f32],
+        _lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = Runtime::cpu().unwrap_err().to_string();
+        assert!(err.contains("pjrt support not compiled in"), "{err}");
+    }
+}

@@ -49,6 +49,130 @@ pub struct Superbatch {
     pub words: u64,
 }
 
+/// Flat structure-of-arrays storage for a superbatch of windows — the
+/// zero-allocation counterpart of `Vec<Window>`.
+///
+/// `windows_of` heap-allocates two `Vec<u32>` per window, which at the
+/// paper's rates is millions of allocator round-trips per second on the
+/// hot path.  The arena instead keeps three flat reusable buffers:
+///
+/// * `inputs`        — all context ids, windows back to back;
+/// * `input_offsets` — `len()+1` cumulative offsets delimiting each
+///   window's inputs (CSR-style);
+/// * `outputs`       — exactly `s` ids per window (target, then the K
+///   shared negatives).
+///
+/// [`BatchBuilder::fill_arena`] appends windows in place and
+/// [`clear`](Self::clear) resets lengths without releasing capacity, so a
+/// steady-state training loop performs no allocations per window
+/// (asserted by `tests/alloc_steadystate.rs`).
+#[derive(Clone, Debug)]
+pub struct SuperbatchArena {
+    inputs: Vec<u32>,
+    input_offsets: Vec<u32>,
+    outputs: Vec<u32>,
+    /// Output rows per window (1 + K).
+    s: usize,
+    /// Input batch cap B (windows never exceed it).
+    b_cap: usize,
+}
+
+impl SuperbatchArena {
+    pub fn new(b_cap: usize, s: usize) -> Self {
+        assert!(b_cap >= 1 && s >= 1);
+        Self {
+            inputs: Vec::new(),
+            input_offsets: vec![0],
+            outputs: Vec::new(),
+            s,
+            b_cap,
+        }
+    }
+
+    /// Pre-size for `windows` windows so the first superbatch already runs
+    /// allocation-free.
+    pub fn with_capacity(windows: usize, b_cap: usize, s: usize) -> Self {
+        let mut a = Self::new(b_cap, s);
+        a.inputs.reserve(windows * b_cap);
+        a.input_offsets.reserve(windows + 1);
+        a.outputs.reserve(windows * s);
+        a
+    }
+
+    /// Number of windows currently stored.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.input_offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Output rows per window (1 + K).
+    #[inline]
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    /// Input batch cap B.
+    #[inline]
+    pub fn b_cap(&self) -> usize {
+        self.b_cap
+    }
+
+    /// Reset to empty, KEEPING all buffer capacity.
+    pub fn clear(&mut self) {
+        self.inputs.clear();
+        self.input_offsets.clear();
+        self.input_offsets.push(0);
+        self.outputs.clear();
+    }
+
+    /// Context ids of window `w`.
+    #[inline]
+    pub fn inputs_of(&self, w: usize) -> &[u32] {
+        let lo = self.input_offsets[w] as usize;
+        let hi = self.input_offsets[w + 1] as usize;
+        &self.inputs[lo..hi]
+    }
+
+    /// Target + shared negatives of window `w`.
+    #[inline]
+    pub fn outputs_of(&self, w: usize) -> &[u32] {
+        &self.outputs[w * self.s..(w + 1) * self.s]
+    }
+
+    /// All output ids, windows back to back (`len() * s` entries) — the
+    /// view the GEMM backend deduplicates shared negatives over.
+    #[inline]
+    pub fn outputs_flat(&self) -> &[u32] {
+        &self.outputs
+    }
+
+    /// Append one window directly (tests / custom drivers; the trainer
+    /// fills through [`BatchBuilder::fill_arena`]).
+    pub fn push_window(&mut self, inputs: &[u32], outputs: &[u32]) {
+        assert!(!inputs.is_empty() && inputs.len() <= self.b_cap);
+        assert_eq!(outputs.len(), self.s);
+        self.inputs.extend_from_slice(inputs);
+        self.outputs.extend_from_slice(outputs);
+        self.input_offsets.push(self.inputs.len() as u32);
+    }
+
+    /// Materialise as allocated [`Window`]s (compatibility path for
+    /// back-ends without a native arena implementation).
+    pub fn to_windows(&self) -> Vec<Window> {
+        (0..self.len())
+            .map(|w| Window {
+                inputs: self.inputs_of(w).to_vec(),
+                outputs: self.outputs_of(w).to_vec(),
+            })
+            .collect()
+    }
+}
+
 /// Streams sentences into windows/superbatches.
 pub struct BatchBuilder<'a> {
     sampler: &'a UnigramSampler,
@@ -111,6 +235,44 @@ impl<'a> BatchBuilder<'a> {
             out.push(Window { inputs, outputs });
         }
         out
+    }
+
+    /// Append the windows of one (already subsampled) sentence into
+    /// `arena` WITHOUT allocating per window — the zero-allocation
+    /// counterpart of [`windows_of`](Self::windows_of).
+    ///
+    /// Consumes the RNG identically to `windows_of` (one dynamic-window
+    /// draw per position, K negative draws per emitted window), so the two
+    /// paths produce the same windows for the same seed (tested below).
+    pub fn fill_arena(
+        &self,
+        sentence: &[u32],
+        rng: &mut Xoshiro256ss,
+        arena: &mut SuperbatchArena,
+    ) {
+        // Hard asserts (once per sentence): a geometry mismatch would
+        // silently interleave windows at the wrong stride.
+        assert_eq!(arena.s(), self.samples(), "arena S != builder 1+K");
+        assert_eq!(arena.b_cap(), self.batch, "arena B cap != builder batch");
+        for t in 0..sentence.len() {
+            let win = dynamic_window(self.window, rng);
+            let start = arena.inputs.len();
+            for p in context_range(t, win, sentence.len()) {
+                if arena.inputs.len() - start == self.batch {
+                    break;
+                }
+                arena.inputs.push(sentence[p]);
+            }
+            if arena.inputs.len() == start {
+                continue; // no context: not a window
+            }
+            let target = sentence[t];
+            arena.outputs.push(target);
+            for _ in 0..self.negative {
+                arena.outputs.push(self.sampler.sample_excluding(target, rng));
+            }
+            arena.input_offsets.push(arena.inputs.len() as u32);
+        }
     }
 
     /// Pack an iterator of sentences into superbatches of `w` windows.
@@ -250,6 +412,63 @@ mod tests {
         for sb in &sbs[..sbs.len() - 1] {
             assert_eq!(sb.windows.len(), 64);
         }
+    }
+
+    /// The arena path must produce EXACTLY the windows of `windows_of`
+    /// for the same seed (same RNG consumption, same truncation).
+    #[test]
+    fn arena_matches_windows_of() {
+        let (_, s) = builder_parts(80);
+        let b = BatchBuilder::new(&s, 5, 4, 5);
+        let sent: Vec<u32> = (0..40).map(|i| i % 80).collect();
+        let windows = b.windows_of(&sent, &mut Xoshiro256ss::new(21));
+        let mut arena = SuperbatchArena::new(4, 6);
+        b.fill_arena(&sent, &mut Xoshiro256ss::new(21), &mut arena);
+        assert_eq!(arena.len(), windows.len());
+        assert_eq!(arena.to_windows(), windows);
+        for (w, win) in windows.iter().enumerate() {
+            assert_eq!(arena.inputs_of(w), &win.inputs[..]);
+            assert_eq!(arena.outputs_of(w), &win.outputs[..]);
+        }
+    }
+
+    /// `clear` keeps capacity: refilling with the same stream allocates
+    /// nothing (capacity pointers stay put).
+    #[test]
+    fn arena_clear_keeps_capacity() {
+        let (_, s) = builder_parts(50);
+        let b = BatchBuilder::new(&s, 5, 16, 5);
+        let sent: Vec<u32> = (0..30).collect();
+        let mut arena = SuperbatchArena::new(16, 6);
+        b.fill_arena(&sent, &mut Xoshiro256ss::new(3), &mut arena);
+        let caps = (
+            arena.inputs.capacity(),
+            arena.input_offsets.capacity(),
+            arena.outputs.capacity(),
+        );
+        for round in 0..5 {
+            arena.clear();
+            assert!(arena.is_empty(), "round {round}");
+            b.fill_arena(&sent, &mut Xoshiro256ss::new(3), &mut arena);
+            assert_eq!(
+                caps,
+                (
+                    arena.inputs.capacity(),
+                    arena.input_offsets.capacity(),
+                    arena.outputs.capacity(),
+                ),
+                "capacity changed on refill round {round}"
+            );
+        }
+    }
+
+    #[test]
+    fn arena_with_capacity_presizes() {
+        let a = SuperbatchArena::with_capacity(64, 16, 6);
+        assert!(a.inputs.capacity() >= 64 * 16);
+        assert!(a.outputs.capacity() >= 64 * 6);
+        assert!(a.input_offsets.capacity() >= 65);
+        assert_eq!(a.len(), 0);
     }
 
     #[test]

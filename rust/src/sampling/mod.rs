@@ -9,6 +9,6 @@ pub mod unigram;
 pub mod window;
 
 pub use alias::AliasTable;
-pub use batch::{BatchBuilder, Superbatch, Window};
+pub use batch::{BatchBuilder, Superbatch, SuperbatchArena, Window};
 pub use unigram::UnigramSampler;
 pub use window::dynamic_window;

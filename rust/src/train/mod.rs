@@ -24,7 +24,7 @@ pub use lr::{LrState};
 pub use trainer::{train, TrainOutcome};
 
 use crate::model::SharedModel;
-use crate::sampling::batch::Window;
+use crate::sampling::batch::{SuperbatchArena, Window};
 
 /// A trainer back-end: processes a block of windows against the shared
 /// model.  One instance per worker thread (holds scratch + private RNG);
@@ -33,6 +33,23 @@ pub trait Backend {
     /// Process `windows` at learning rate `lr`, mutating `model`.
     fn process(&mut self, model: &SharedModel, windows: &[Window], lr: f32)
         -> anyhow::Result<()>;
+
+    /// Process a flat superbatch arena (the trainer's hot path).
+    ///
+    /// The default materialises `Vec<Window>`s and forwards to
+    /// [`process`](Self::process) — correct for every back-end, with the
+    /// same allocation profile the pre-arena trainer had.  Back-ends with
+    /// a native flat path (the GEMM backend) override this to run
+    /// allocation-free.
+    fn process_arena(
+        &mut self,
+        model: &SharedModel,
+        arena: &SuperbatchArena,
+        lr: f32,
+    ) -> anyhow::Result<()> {
+        let windows = arena.to_windows();
+        self.process(model, &windows, lr)
+    }
 
     /// Human-readable name for logs/benches.
     fn name(&self) -> &'static str;

@@ -7,27 +7,87 @@
 //! ```text
 //! gather:  Wi[B,D] <- M_in[inputs],  Wo[S,D] <- M_out[target + negatives]
 //! GEMM 1:  logits = Wi · Woᵀ                  (level-3, reuses Wo across B)
-//! elem:    err    = (label - σ(logits)) · lr
+//! elem:    err    = (label - σ(logits)) · lr   (fused SIMD kernel)
 //! GEMM 2:  dWi    = err · Wo
 //! GEMM 3:  dWo    = errᵀ · Wi
 //! scatter: M_in[inputs] += dWi rows, M_out[outputs] += dWo rows (Hogwild)
 //! ```
 //!
-//! The scatter phase performs ONE update per touched row per window — the
-//! update-count reduction (Sec. III-C) that cuts coherence traffic versus
-//! the scalar baseline's per-pair updates.
+//! All kernels go through [`crate::linalg::simd`], so the backend runs the
+//! AVX2+FMA path on capable CPUs and the portable path under
+//! `--simd scalar` (bit-identical to the pre-SIMD crate).
+//!
+//! Two processing surfaces:
+//!
+//! * [`Backend::process`] — window-at-a-time over `&[Window]` (reference
+//!   semantics: each window gathers fresh rows, scatters immediately);
+//! * [`Backend::process_arena`] — the trainer's zero-allocation superbatch
+//!   path over a flat [`SuperbatchArena`].  `Wo` rows are gathered ONCE
+//!   per superbatch per distinct id (shared negatives repeat heavily under
+//!   the Zipf unigram distribution), window blocks are assembled from that
+//!   L1-hot copy, and `dWo` accumulates per distinct id with a single
+//!   Hogwild update at the end — extending the paper's Sec. III-C
+//!   update-count reduction from the window to the superbatch.
 //!
 //! Optionally wraps the scatter in AdaGrad/RMSProp per-parameter rescaling
 //! for the Sec. III-E ablation.
 
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
 use std::sync::Arc;
 
 use super::lr::{AdaGrad, RmsProp};
 use super::Backend;
-use crate::linalg::gemm::{gemm_nn, gemm_nt, gemm_tn};
-use crate::linalg::sigmoid::sigmoid_exact;
+use crate::config::SigmoidMode;
+use crate::linalg::sigmoid::SigmoidTable;
+use crate::linalg::simd;
 use crate::model::SharedModel;
-use crate::sampling::batch::Window;
+use crate::sampling::batch::{SuperbatchArena, Window};
+
+/// FxHash-style multiply-mix hasher for the `u32` output-id dedup map:
+/// SipHash (the `HashMap` default) is a measurable tax at millions of
+/// lookups per second on exactly the hot path this backend optimises,
+/// and hash-flooding resistance buys nothing against word ids.
+#[derive(Default)]
+struct FxU32Hasher(u64);
+
+impl Hasher for FxU32Hasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u8(b);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.mix(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.mix(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.mix(n);
+    }
+}
+
+impl FxU32Hasher {
+    #[inline]
+    fn mix(&mut self, n: u64) {
+        self.0 = (self.0.rotate_left(5) ^ n).wrapping_mul(0x51_7c_c1_b7_27_22_0a_95);
+    }
+}
+
+type FxU32Map<V> = HashMap<u32, V, BuildHasherDefault<FxU32Hasher>>;
 
 /// Per-parameter update rule applied at scatter time.
 #[derive(Clone, Default)]
@@ -47,6 +107,15 @@ pub struct GemmBackend {
     dwi: Vec<f32>,
     dwo: Vec<f32>,
     rule: UpdateRule,
+    /// `Some` = EXP_TABLE sigmoid (config `sigmoid = table`); `None` =
+    /// exact sigmoid through the fused SIMD kernel.
+    sigmoid_table: Option<SigmoidTable>,
+    /// Superbatch dedup scratch (reused; steady-state allocation-free).
+    uniq_ids: Vec<u32>,
+    slot_of: FxU32Map<u32>,
+    out_slots: Vec<u32>,
+    wo_uniq: Vec<f32>,
+    dwo_uniq: Vec<f32>,
 }
 
 impl GemmBackend {
@@ -59,12 +128,42 @@ impl GemmBackend {
             dwi: vec![0.0; batch_cap * dim],
             dwo: vec![0.0; samples * dim],
             rule: UpdateRule::Plain,
+            sigmoid_table: None,
+            uniq_ids: Vec::new(),
+            slot_of: FxU32Map::default(),
+            out_slots: Vec::new(),
+            wo_uniq: Vec::new(),
+            dwo_uniq: Vec::new(),
         }
     }
 
     pub fn with_rule(mut self, rule: UpdateRule) -> Self {
         self.rule = rule;
         self
+    }
+
+    /// Select the sigmoid the fused error kernel evaluates.
+    pub fn with_sigmoid(mut self, mode: SigmoidMode) -> Self {
+        self.sigmoid_table = match mode {
+            SigmoidMode::Exact => None,
+            SigmoidMode::Table => Some(SigmoidTable::default_table()),
+        };
+        self
+    }
+
+    /// `logits[..b*s] <- (label - σ) · lr` under the configured sigmoid.
+    #[inline]
+    fn err_inplace(&mut self, b: usize, s: usize, lr: f32) {
+        let logits = &mut self.logits[..b * s];
+        match &self.sigmoid_table {
+            None => simd::sgns_err(logits, s, lr),
+            Some(t) => {
+                for (idx, x) in logits.iter_mut().enumerate() {
+                    let label = if idx % s == 0 { 1.0 } else { 0.0 };
+                    *x = (label - t.get(*x)) * lr;
+                }
+            }
+        }
     }
 
     /// One window: gather → 3 GEMMs → scatter.
@@ -86,55 +185,67 @@ impl GemmBackend {
             self.wo[j * d..(j + 1) * d].copy_from_slice(row);
         }
 
-        let (wi, wo) = (&self.wi[..b * d], &self.wo[..s * d]);
-
         // GEMM 1: logits = Wi · Woᵀ.
-        gemm_nt(b, s, d, 1.0, wi, wo, 0.0, &mut self.logits[..b * s]);
+        simd::gemm_nt(
+            b,
+            s,
+            d,
+            1.0,
+            &self.wi[..b * d],
+            &self.wo[..s * d],
+            0.0,
+            &mut self.logits[..b * s],
+        );
 
         // err = (label - sigma(logits)) * lr, in place.
-        for i in 0..b {
-            for j in 0..s {
-                let label = if j == 0 { 1.0 } else { 0.0 };
-                let x = &mut self.logits[i * s + j];
-                *x = (label - sigmoid_exact(*x)) * lr;
-            }
-        }
-        let err = &self.logits[..b * s];
+        self.err_inplace(b, s, lr);
 
         // GEMM 2 + 3 from the PRE-update blocks.
-        gemm_nn(b, d, s, 1.0, err, wo, 0.0, &mut self.dwi[..b * d]);
-        gemm_tn(s, d, b, 1.0, err, wi, 0.0, &mut self.dwo[..s * d]);
+        simd::gemm_nn(
+            b,
+            d,
+            s,
+            1.0,
+            &self.logits[..b * s],
+            &self.wo[..s * d],
+            0.0,
+            &mut self.dwi[..b * d],
+        );
+        simd::gemm_tn(
+            s,
+            d,
+            b,
+            1.0,
+            &self.logits[..b * s],
+            &self.wi[..b * d],
+            0.0,
+            &mut self.dwo[..s * d],
+        );
 
         // Scatter-add (one Hogwild update per touched row).
-        match &self.rule {
-            UpdateRule::Plain => {
-                for (i, &inp) in w.inputs.iter().enumerate() {
-                    model.add_in(inp, &self.dwi[i * d..(i + 1) * d]);
-                }
-                for (j, &out) in w.outputs.iter().enumerate() {
-                    model.add_out(out, &self.dwo[j * d..(j + 1) * d]);
-                }
+        self.scatter_dwi(model, &w.inputs);
+        for (j, &out) in w.outputs.iter().enumerate() {
+            let delta = &mut self.dwo[j * d..(j + 1) * d];
+            match &self.rule {
+                UpdateRule::Plain => {}
+                UpdateRule::Adagrad(ag) => ag.adjust_out(out, delta),
+                UpdateRule::Rmsprop(rp) => rp.adjust_out(out, delta),
             }
-            UpdateRule::Adagrad(ag) => {
-                for (i, &inp) in w.inputs.iter().enumerate() {
-                    ag.adjust_in(inp, &mut self.dwi[i * d..(i + 1) * d]);
-                    model.add_in(inp, &self.dwi[i * d..(i + 1) * d]);
-                }
-                for (j, &out) in w.outputs.iter().enumerate() {
-                    ag.adjust_out(out, &mut self.dwo[j * d..(j + 1) * d]);
-                    model.add_out(out, &self.dwo[j * d..(j + 1) * d]);
-                }
+            model.add_out(out, delta);
+        }
+    }
+
+    /// Scatter `dwi` rows for `inputs`, applying the update rule.
+    fn scatter_dwi(&mut self, model: &SharedModel, inputs: &[u32]) {
+        let d = self.dim;
+        for (i, &inp) in inputs.iter().enumerate() {
+            let delta = &mut self.dwi[i * d..(i + 1) * d];
+            match &self.rule {
+                UpdateRule::Plain => {}
+                UpdateRule::Adagrad(ag) => ag.adjust_in(inp, delta),
+                UpdateRule::Rmsprop(rp) => rp.adjust_in(inp, delta),
             }
-            UpdateRule::Rmsprop(rp) => {
-                for (i, &inp) in w.inputs.iter().enumerate() {
-                    rp.adjust_in(inp, &mut self.dwi[i * d..(i + 1) * d]);
-                    model.add_in(inp, &self.dwi[i * d..(i + 1) * d]);
-                }
-                for (j, &out) in w.outputs.iter().enumerate() {
-                    rp.adjust_out(out, &mut self.dwo[j * d..(j + 1) * d]);
-                    model.add_out(out, &self.dwo[j * d..(j + 1) * d]);
-                }
-            }
+            model.add_in(inp, delta);
         }
     }
 }
@@ -157,6 +268,130 @@ impl Backend for GemmBackend {
         Ok(())
     }
 
+    /// Flat superbatch path: zero allocations at steady state, one `Wo`
+    /// gather and one `dWo` Hogwild update per DISTINCT output id per
+    /// superbatch.
+    fn process_arena(
+        &mut self,
+        model: &SharedModel,
+        arena: &SuperbatchArena,
+        lr: f32,
+    ) -> anyhow::Result<()> {
+        let d = self.dim;
+        let s = arena.s();
+        anyhow::ensure!(
+            s * d <= self.wo.len() && arena.b_cap() * d <= self.wi.len(),
+            "arena geometry exceeds backend capacity"
+        );
+
+        // Deduplicate output ids across the whole superbatch.
+        self.slot_of.clear();
+        self.uniq_ids.clear();
+        self.out_slots.clear();
+        {
+            let uniq = &mut self.uniq_ids;
+            let slots = &mut self.out_slots;
+            let map = &mut self.slot_of;
+            for &id in arena.outputs_flat() {
+                let slot = *map.entry(id).or_insert_with(|| {
+                    let next = uniq.len() as u32;
+                    uniq.push(id);
+                    next
+                });
+                slots.push(slot);
+            }
+        }
+
+        // Gather each distinct Wo row ONCE (pre-superbatch state — the
+        // same deferred-read semantics as the PJRT artifact path).
+        let u = self.uniq_ids.len();
+        if self.wo_uniq.len() < u * d {
+            self.wo_uniq.resize(u * d, 0.0);
+            self.dwo_uniq.resize(u * d, 0.0);
+        }
+        for (slot, &id) in self.uniq_ids.iter().enumerate() {
+            // SAFETY: Hogwild contract (model::hogwild docs).
+            let row = unsafe { model.row_out(id) };
+            self.wo_uniq[slot * d..(slot + 1) * d].copy_from_slice(row);
+        }
+        self.dwo_uniq[..u * d].fill(0.0);
+
+        for w in 0..arena.len() {
+            let b = arena.inputs_of(w).len();
+            debug_assert!(b >= 1 && b <= arena.b_cap());
+
+            // Gather Wi fresh per window (context rows rarely repeat).
+            for (i, &inp) in arena.inputs_of(w).iter().enumerate() {
+                // SAFETY: Hogwild contract.
+                let row = unsafe { model.row_in(inp) };
+                self.wi[i * d..(i + 1) * d].copy_from_slice(row);
+            }
+            // Assemble the window's Wo block from the L1-hot dedup copy.
+            let slots = &self.out_slots[w * s..(w + 1) * s];
+            for (j, &slot) in slots.iter().enumerate() {
+                let src = slot as usize * d;
+                self.wo[j * d..(j + 1) * d]
+                    .copy_from_slice(&self.wo_uniq[src..src + d]);
+            }
+
+            simd::gemm_nt(
+                b,
+                s,
+                d,
+                1.0,
+                &self.wi[..b * d],
+                &self.wo[..s * d],
+                0.0,
+                &mut self.logits[..b * s],
+            );
+            self.err_inplace(b, s, lr);
+            simd::gemm_nn(
+                b,
+                d,
+                s,
+                1.0,
+                &self.logits[..b * s],
+                &self.wo[..s * d],
+                0.0,
+                &mut self.dwi[..b * d],
+            );
+            simd::gemm_tn(
+                s,
+                d,
+                b,
+                1.0,
+                &self.logits[..b * s],
+                &self.wi[..b * d],
+                0.0,
+                &mut self.dwo[..s * d],
+            );
+
+            // Wi scatters stay per window; dWo accumulates per slot.
+            self.scatter_dwi(model, arena.inputs_of(w));
+            let slots = &self.out_slots[w * s..(w + 1) * s];
+            for (j, &slot) in slots.iter().enumerate() {
+                let dst = slot as usize * d;
+                simd::axpy(
+                    1.0,
+                    &self.dwo[j * d..(j + 1) * d],
+                    &mut self.dwo_uniq[dst..dst + d],
+                );
+            }
+        }
+
+        // One Hogwild update per distinct output id per superbatch.
+        for (slot, &id) in self.uniq_ids.iter().enumerate() {
+            let delta = &mut self.dwo_uniq[slot * d..(slot + 1) * d];
+            match &self.rule {
+                UpdateRule::Plain => {}
+                UpdateRule::Adagrad(ag) => ag.adjust_out(id, delta),
+                UpdateRule::Rmsprop(rp) => rp.adjust_out(id, delta),
+            }
+            model.add_out(id, delta);
+        }
+        Ok(())
+    }
+
     fn name(&self) -> &'static str {
         "gemm"
     }
@@ -165,7 +400,9 @@ impl Backend for GemmBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::sigmoid::sigmoid_exact;
     use crate::linalg::vecops::dot;
+    use crate::sampling::batch::SuperbatchArena;
 
     fn window(inputs: &[u32], target: u32, negs: &[u32]) -> Window {
         let mut outputs = vec![target];
@@ -174,6 +411,14 @@ mod tests {
             inputs: inputs.to_vec(),
             outputs,
         }
+    }
+
+    fn arena_of(windows: &[Window], b_cap: usize, s: usize) -> SuperbatchArena {
+        let mut a = SuperbatchArena::new(b_cap, s);
+        for w in windows {
+            a.push_window(&w.inputs, &w.outputs);
+        }
+        a
     }
 
     /// The GEMM backend must produce EXACTLY the same deltas as a naive
@@ -224,6 +469,78 @@ mod tests {
                 assert!((a[l] - b_[l]).abs() < 1e-5, "m_out row {r} dim {l}");
             }
         }
+    }
+
+    /// For a SINGLE window the arena path must equal the window path
+    /// (dedup + deferred dWo scatter collapse to the same computation).
+    #[test]
+    fn arena_single_window_matches_process() {
+        let dim = 24;
+        let model_w = SharedModel::init(40, dim, 31);
+        let model_a = SharedModel::init(40, dim, 31);
+        // Duplicate negative (21 twice) exercises the dedup accumulation.
+        let w = window(&[1, 2, 3], 10, &[20, 21, 21, 22, 23]);
+        let mut g1 = GemmBackend::new(dim, 16, 6);
+        let mut g2 = GemmBackend::new(dim, 16, 6);
+        g1.process(&model_w, std::slice::from_ref(&w), 0.05).unwrap();
+        let arena = arena_of(std::slice::from_ref(&w), 16, 6);
+        g2.process_arena(&model_a, &arena, 0.05).unwrap();
+        for r in 0..40u32 {
+            for (x, y) in model_w.m_in().row(r).iter().zip(model_a.m_in().row(r)) {
+                assert!((x - y).abs() < 1e-6, "m_in row {r}");
+            }
+            for (x, y) in model_w.m_out().row(r).iter().zip(model_a.m_out().row(r)) {
+                assert!((x - y).abs() < 1e-6, "m_out row {r}");
+            }
+        }
+    }
+
+    /// Multi-window arena: same gradients as the naive end-of-superbatch
+    /// computation (all reads from pre-superbatch state for Wo, fresh Wi).
+    #[test]
+    fn arena_learns_and_dedups() {
+        let dim = 16;
+        let model = SharedModel::init(30, dim, 5);
+        // Shared negatives repeat across windows: 6 windows, negatives all
+        // drawn from {20..25}.
+        let windows: Vec<Window> = (0..6u32)
+            .map(|t| window(&[t + 1, t + 2], t + 10, &[20, 21, 22, 23, 24]))
+            .collect();
+        let arena = arena_of(&windows, 16, 6);
+        let mut g = GemmBackend::new(dim, 16, 6);
+        let before = crate::train::ns_objective(&model, &windows);
+        for _ in 0..200 {
+            g.process_arena(&model, &arena, 0.05).unwrap();
+        }
+        let after = crate::train::ns_objective(&model, &windows);
+        assert!(after > before, "{before} -> {after}");
+        let sim = |a: u32, b_: u32| dot(model.m_in().row(a), model.m_out().row(b_));
+        assert!(sim(1, 10) > 0.5);
+        assert!(sim(1, 20) < 0.1);
+    }
+
+    /// The EXP_TABLE sigmoid mode trains equivalently to exact at window
+    /// scale (the table is a ≲2e-3 approximation).
+    #[test]
+    fn sigmoid_table_mode_close_to_exact() {
+        let dim = 16;
+        let m_exact = SharedModel::init(30, dim, 8);
+        let m_table = SharedModel::init(30, dim, 8);
+        let w = window(&[1, 2, 3], 10, &[20, 21, 22, 23, 24]);
+        let mut ge = GemmBackend::new(dim, 16, 6).with_sigmoid(SigmoidMode::Exact);
+        let mut gt = GemmBackend::new(dim, 16, 6).with_sigmoid(SigmoidMode::Table);
+        for _ in 0..50 {
+            ge.process(&m_exact, std::slice::from_ref(&w), 0.05).unwrap();
+            gt.process(&m_table, std::slice::from_ref(&w), 0.05).unwrap();
+        }
+        for r in 0..30u32 {
+            for (x, y) in m_exact.m_in().row(r).iter().zip(m_table.m_in().row(r)) {
+                assert!((x - y).abs() < 0.02, "row {r}: {x} vs {y}");
+            }
+        }
+        // And the table mode must actually learn.
+        let sim = dot(m_table.m_in().row(1), m_table.m_out().row(10));
+        assert!(sim > 0.4, "table-mode sim {sim}");
     }
 
     #[test]

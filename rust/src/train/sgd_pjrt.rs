@@ -123,7 +123,15 @@ mod tests {
         }
         let m = Manifest::load(&dir).unwrap();
         let v = m.by_name("test_w4_b8_s6_d32").unwrap().clone();
-        let rt = Runtime::cpu().unwrap();
+        let rt = match Runtime::cpu() {
+            Ok(rt) => rt,
+            Err(e) => {
+                // Artifacts exist but this build has no PJRT (stub
+                // runtime, `pjrt` feature off): skip, don't fail.
+                eprintln!("skipping: {e}");
+                return None;
+            }
+        };
         Some(Arc::new(rt.compile_variant(&m, &v).unwrap()))
     }
 

@@ -3,7 +3,14 @@
 //! Mirrors the original word2vec's threading discipline: the corpus file is
 //! split into `threads` byte ranges; each worker streams its range
 //! (epochs× times), subsamples, builds windows/superbatches, and drives its
-//! own [`Backend`] instance against the shared model.  The learning rate
+//! own [`Backend`] instance against the shared model.
+//!
+//! The hot loop is allocation-free at steady state: each worker owns one
+//! reused sentence buffer (`SentenceReader::next_sentence_into`) and one
+//! `SuperbatchArena` that `BatchBuilder::fill_arena` refills in place;
+//! back-ends consume the arena directly via [`Backend::process_arena`].
+//! `train` also pins the SIMD dispatch level from `cfg.simd` before the
+//! workers start (`--simd {auto,avx2,scalar}`).  The learning rate
 //! decays with GLOBAL progress (an atomic word counter), exactly like the
 //! original's `word_count_actual`.
 
@@ -17,14 +24,15 @@ use super::sgd_pjrt::PjrtBackend;
 use super::sgd_scalar::ScalarBackend;
 use super::Backend;
 use crate::config::{Backend as BackendKind, LrSchedule, TrainConfig};
-use crate::corpus::reader::SentenceReader;
+use crate::corpus::reader::{SentenceReader, MAX_SENTENCE_LEN};
 use crate::corpus::shard::shards_for_file;
 use crate::corpus::subsample::Subsampler;
 use crate::corpus::vocab::Vocab;
+use crate::linalg::simd;
 use crate::metrics::{Counters, Snapshot};
 use crate::model::SharedModel;
 use crate::runtime::{Manifest, Runtime, StepExecutable};
-use crate::sampling::batch::BatchBuilder;
+use crate::sampling::batch::{BatchBuilder, SuperbatchArena};
 use crate::sampling::unigram::UnigramSampler;
 use crate::util::rng::Xoshiro256ss;
 
@@ -44,6 +52,9 @@ pub fn train(
 ) -> anyhow::Result<TrainOutcome> {
     cfg.validate()?;
     anyhow::ensure!(vocab.len() == model.vocab(), "vocab/model size mismatch");
+    // Apply the kernel dispatch policy for this run (Auto unpins back to
+    // detection, so an earlier pinned run never leaks into this one).
+    simd::configure(cfg.simd)?;
     let sampler = UnigramSampler::alias(vocab, cfg.unigram_power);
 
     // The PJRT executable is compiled once and shared by all workers.
@@ -73,7 +84,8 @@ pub fn train(
             BackendKind::Bidmach => Box::new(BidmachBackend::new(cfg.batch)),
             BackendKind::Gemm => Box::new(
                 GemmBackend::new(cfg.dim, cfg.batch, cfg.samples())
-                    .with_rule(UpdateRule::Plain),
+                    .with_rule(UpdateRule::Plain)
+                    .with_sigmoid(cfg.sigmoid_mode),
             ),
             BackendKind::Pjrt => Box::new(PjrtBackend::new(
                 pjrt_exe.as_ref().expect("pjrt exe prepared above").clone(),
@@ -117,7 +129,14 @@ pub fn train_with_factory<'f>(
                 );
                 let builder =
                     BatchBuilder::new(sampler, cfg.window, cfg.batch, cfg.negative);
-                let mut buf = Vec::with_capacity(cfg.superbatch);
+                // Reused across the whole shard: zero allocations per
+                // window at steady state (tests/alloc_steadystate.rs).
+                let mut arena = SuperbatchArena::with_capacity(
+                    cfg.superbatch,
+                    cfg.batch,
+                    cfg.samples(),
+                );
+                let mut sent: Vec<u32> = Vec::with_capacity(MAX_SENTENCE_LEN);
                 let mut raw_words = 0u64;
                 for _epoch in 0..cfg.epochs {
                     let mut reader = SentenceReader::open_range(
@@ -126,28 +145,26 @@ pub fn train_with_factory<'f>(
                         shard.start,
                         shard.end,
                     )?;
-                    while let Some(mut sent) = reader.next_sentence()? {
+                    while reader.next_sentence_into(&mut sent)? {
                         raw_words += sent.len() as u64;
                         subsampler.filter(&mut sent, &mut rng);
-                        for w in builder.windows_of(&sent, &mut rng) {
-                            buf.push(w);
-                            if buf.len() == cfg.superbatch {
-                                let lr = lr_state.advance(raw_words);
-                                counters.add_words(raw_words);
-                                raw_words = 0;
-                                backend.process(model, &buf, lr)?;
-                                counters.add_windows(buf.len() as u64);
-                                counters.add_calls(1);
-                                buf.clear();
-                            }
+                        builder.fill_arena(&sent, &mut rng, &mut arena);
+                        if arena.len() >= cfg.superbatch {
+                            let lr = lr_state.advance(raw_words);
+                            counters.add_words(raw_words);
+                            raw_words = 0;
+                            backend.process_arena(model, &arena, lr)?;
+                            counters.add_windows(arena.len() as u64);
+                            counters.add_calls(1);
+                            arena.clear();
                         }
                     }
                 }
-                if !buf.is_empty() {
+                if !arena.is_empty() {
                     let lr = lr_state.advance(raw_words);
                     counters.add_words(raw_words);
-                    backend.process(model, &buf, lr)?;
-                    counters.add_windows(buf.len() as u64);
+                    backend.process_arena(model, &arena, lr)?;
+                    counters.add_windows(arena.len() as u64);
                     counters.add_calls(1);
                 } else if raw_words > 0 {
                     lr_state.advance(raw_words);

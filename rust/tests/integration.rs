@@ -1,6 +1,6 @@
 //! Integration tests: full pipelines across modules — corpus generation →
 //! vocabulary → training (every back-end) → evaluation → persistence, the
-//! distributed protocol over both transports, and the CLI binary.
+//! distributed sub-model sync protocol, and the CLI binary.
 
 use std::path::PathBuf;
 use std::process::Command;

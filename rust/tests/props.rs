@@ -4,6 +4,7 @@
 
 use pw2v::corpus::shard::{shards_for_len, subshards};
 use pw2v::eval::spearman::spearman;
+use pw2v::linalg::simd::{self, SimdMode};
 use pw2v::linalg::{dot, gemm_nn, gemm_nt, gemm_tn};
 use pw2v::model::SharedModel;
 use pw2v::sampling::batch::Window;
@@ -55,6 +56,182 @@ fn prop_gemm_matches_naive() {
         let want: f32 = (0..k).map(|l| a_tn[l * m + i] * b_nn[l * n + j]).sum();
         assert!((c[i * n + j] - want).abs() < 1e-3, "case {case} tn");
     }
+}
+
+/// The AVX2 dispatch kernels agree with the scalar dispatch kernels
+/// within 1e-4 across awkward shapes (lengths 1, 7, 8, 9, 300) and
+/// UNALIGNED slice starts (offsets 1..4 f32s off any 32-byte boundary) —
+/// gathered model blocks give no alignment guarantee, so the unaligned
+/// path is the production path.
+///
+/// One test drives all kernels: it pins the process-global dispatch
+/// level, so splitting it across #[test]s would race.
+#[test]
+fn prop_simd_matches_scalar_on_awkward_shapes() {
+    // This process has exactly one configure caller (this test), so
+    // pinned-level assertions are race-free here — unlike the lib's unit
+    // tests, where `train` calls configure on sibling threads.
+    //
+    // First: `--simd scalar` must reproduce the portable kernels BIT FOR
+    // BIT through the dispatcher.
+    {
+        let mut rng = Xoshiro256ss::new(0xB17);
+        simd::configure(SimdMode::Scalar).unwrap();
+        let a = randv(&mut rng, 300);
+        let b = randv(&mut rng, 300);
+        assert_eq!(simd::dot(&a, &b).to_bits(), dot(&a, &b).to_bits());
+        let c0 = randv(&mut rng, 16 * 6);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        let (wi, wo) = (randv(&mut rng, 16 * 300), randv(&mut rng, 6 * 300));
+        simd::gemm_nt(16, 6, 300, 1.0, &wi, &wo, 0.5, &mut c1);
+        gemm_nt(16, 6, 300, 1.0, &wi, &wo, 0.5, &mut c2);
+        assert_eq!(
+            c1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            c2.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    if simd::configure(SimdMode::Avx2).is_err() {
+        simd::configure(SimdMode::Auto).unwrap();
+        eprintln!("skipping: this CPU has no avx2+fma");
+        return;
+    }
+    let close = |x: f32, y: f32, what: &str| {
+        assert!(
+            (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+            "{what}: avx2 {x} vs scalar {y}"
+        );
+    };
+    let mut rng = Xoshiro256ss::new(0x51D);
+
+    // Level-1 kernels over lengths around the 8-lane width, with offsets.
+    for &n in &[1usize, 7, 8, 9, 15, 16, 17, 300] {
+        for off in 0..4usize {
+            let abuf = randv(&mut rng, n + off);
+            let bbuf = randv(&mut rng, n + off);
+            let ybuf = randv(&mut rng, n + off);
+            let (a, b) = (&abuf[off..], &bbuf[off..]);
+
+            simd::configure(SimdMode::Scalar).unwrap();
+            let want_dot = simd::dot(a, b);
+            let mut want_y = ybuf[off..].to_vec();
+            simd::axpy(0.37, a, &mut want_y);
+
+            simd::configure(SimdMode::Avx2).unwrap();
+            let got_dot = simd::dot(a, b);
+            let mut got_y = ybuf[off..].to_vec();
+            simd::axpy(0.37, a, &mut got_y);
+
+            close(got_dot, want_dot, &format!("dot n={n} off={off}"));
+            for i in 0..n {
+                close(got_y[i], want_y[i], &format!("axpy n={n} off={off} i={i}"));
+            }
+        }
+    }
+
+    // GEMM kernels at the paper's shapes plus remainder-heavy ones.
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (2, 3, 5),
+        (7, 9, 13),
+        (16, 6, 7),
+        (16, 6, 300),
+        (6, 16, 300),
+        (1, 6, 300),
+        (5, 8, 9),
+        (3, 11, 17),
+    ];
+    for &(m, n, k) in shapes {
+        for off in 0..2usize {
+            let abuf = randv(&mut rng, m * k + off);
+            let bnt = randv(&mut rng, n * k + off);
+            let bnn = randv(&mut rng, k * n + off);
+            let atn = randv(&mut rng, k * m + off);
+            let c0 = randv(&mut rng, m * n);
+            let (alpha, beta) = (1.25f32, 0.5f32);
+
+            simd::configure(SimdMode::Scalar).unwrap();
+            let mut want_nt = c0.clone();
+            gemm_via_dispatch_nt(m, n, k, alpha, &abuf[off..], &bnt[off..], beta, &mut want_nt);
+            let mut want_nn = c0.clone();
+            gemm_via_dispatch_nn(m, n, k, alpha, &abuf[off..], &bnn[off..], beta, &mut want_nn);
+            let mut want_tn = c0.clone();
+            gemm_via_dispatch_tn(m, n, k, alpha, &atn[off..], &bnn[off..], beta, &mut want_tn);
+
+            simd::configure(SimdMode::Avx2).unwrap();
+            let mut got_nt = c0.clone();
+            gemm_via_dispatch_nt(m, n, k, alpha, &abuf[off..], &bnt[off..], beta, &mut got_nt);
+            let mut got_nn = c0.clone();
+            gemm_via_dispatch_nn(m, n, k, alpha, &abuf[off..], &bnn[off..], beta, &mut got_nn);
+            let mut got_tn = c0.clone();
+            gemm_via_dispatch_tn(m, n, k, alpha, &atn[off..], &bnn[off..], beta, &mut got_tn);
+
+            for i in 0..m * n {
+                close(got_nt[i], want_nt[i], &format!("nt ({m},{n},{k}) off={off} i={i}"));
+                close(got_nn[i], want_nn[i], &format!("nn ({m},{n},{k}) off={off} i={i}"));
+                close(got_tn[i], want_tn[i], &format!("tn ({m},{n},{k}) off={off} i={i}"));
+            }
+        }
+    }
+
+    // Fused error kernel: remainder lanes + positive-column fixup.
+    for &(b, s) in &[(1usize, 2usize), (3, 5), (16, 6), (7, 9)] {
+        let logits = randv(&mut rng, b * s);
+        simd::configure(SimdMode::Scalar).unwrap();
+        let mut want = logits.clone();
+        simd::sgns_err(&mut want, s, 0.025);
+        simd::configure(SimdMode::Avx2).unwrap();
+        let mut got = logits.clone();
+        simd::sgns_err(&mut got, s, 0.025);
+        for i in 0..b * s {
+            close(got[i], want[i], &format!("sgns_err b={b} s={s} i={i}"));
+        }
+    }
+
+    simd::configure(SimdMode::Auto).unwrap();
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_via_dispatch_nt(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    simd::gemm_nt(m, n, k, alpha, &a[..m * k], &b[..n * k], beta, c);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_via_dispatch_nn(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    simd::gemm_nn(m, n, k, alpha, &a[..m * k], &b[..k * n], beta, c);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_via_dispatch_tn(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    simd::gemm_tn(m, n, k, alpha, &a[..k * m], &b[..k * n], beta, c);
 }
 
 /// Shards partition any length exactly, for any shard/thread counts.
