@@ -1,17 +1,23 @@
 //! Microbenchmarks of the hot-path primitives (the §Perf working set):
-//! GEMM kernels at the paper's shapes, level-1 ops, negative-sampler
-//! implementations, and the PJRT per-call overhead that motivates
-//! superbatching.
+//! GEMM kernels at the paper's shapes, the fused-vs-gemm3 window-kernel
+//! ablation, level-1 ops, negative-sampler implementations, and the PJRT
+//! per-call overhead that motivates superbatching.
+//!
+//! `cargo bench --bench microbench -- --json` additionally merges the
+//! kernel GFLOP/s and the fused ablation into `BENCH_throughput.json` at
+//! the repo root (the machine-readable perf trajectory).
 
-use pw2v::bench::{time, BenchTable};
+use pw2v::bench::{speedup, time, BenchTable, ThroughputReport};
 use pw2v::corpus::vocab::Vocab;
 use pw2v::linalg::simd::{self, SimdMode};
 use pw2v::linalg::{axpy, dot, gemm_nn, gemm_nt, gemm_tn};
 use pw2v::runtime::{Manifest, Runtime};
 use pw2v::sampling::unigram::UnigramSampler;
+use pw2v::util::args::Args;
+use pw2v::util::json::Json;
 use pw2v::util::rng::Xoshiro256ss;
 use pw2v::util::si;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 fn randv(n: usize, seed: u64) -> Vec<f32> {
     let mut r = Xoshiro256ss::new(seed);
@@ -19,22 +25,161 @@ fn randv(n: usize, seed: u64) -> Vec<f32> {
 }
 
 fn main() -> anyhow::Result<()> {
-    simd_dispatch_bench()?;
+    let args = Args::from_env_tail(1);
+    let mut report = args.flag("json").then(ThroughputReport::open_at_repo_root);
+    simd_dispatch_bench(&mut report)?;
+    sgns_window_ablation(&mut report)?;
     gemm_bench()?;
     vecops_bench()?;
     sampler_bench()?;
     pjrt_call_overhead()?;
+    if let Some(r) = report.as_mut() {
+        r.save()?;
+    }
+    Ok(())
+}
+
+/// The tentpole ablation: one window at the paper's (B=16, S=6, D=300)
+/// shape, the fused single-pass kernel vs the gemm3 chain — each EXACTLY
+/// as the arena path runs it (fused reads `Wo` / accumulates `dWo`
+/// through the superbatch dedup slots; gemm3 assembles the window block,
+/// runs the 3 GEMMs + error kernel, then axpy-accumulates `dWo` per
+/// slot).  One window = one center word, so windows/sec is the
+/// kernel-level words/sec bound the acceptance criterion tracks
+/// (floor: fused ≥ 1.3× gemm3 single-thread).
+fn sgns_window_ablation(
+    report: &mut Option<ThroughputReport>,
+) -> anyhow::Result<()> {
+    let (b, s, d) = (16usize, 6usize, 300usize);
+    let u = 64usize; // distinct output rows in the dedup block
+    let wi = randv(b * d, 21);
+    let wo_uniq = randv(u * d, 22);
+    let slots: Vec<u32> = vec![3, 17, 9, 33, 41, 58];
+    let lr = 0.025f32;
+    // FMA count of the mathematical window: logits + dWi + dWo.
+    let flops = 3.0 * 2.0 * (b * s * d) as f64;
+
+    let mut wo_blk = vec![0.0f32; s * d];
+    let mut logits = vec![0.0f32; b * s];
+    let mut dwi = vec![0.0f32; b * d];
+    let mut dwo_blk = vec![0.0f32; s * d];
+    let mut dwo_uniq = vec![0.0f32; u * d];
+
+    let mut table = BenchTable::new(
+        "micro_sgns_window",
+        &["level", "kernel", "ns_per_window", "gflops", "windows_per_sec"],
+    );
+    let levels: &[SimdMode] = if simd::configure(SimdMode::Avx2).is_ok() {
+        &[SimdMode::Avx2, SimdMode::Scalar]
+    } else {
+        eprintln!("micro_sgns_window: no avx2+fma, scalar level only");
+        &[SimdMode::Scalar]
+    };
+    let mut json_levels: BTreeMap<String, Json> = BTreeMap::new();
+    for &mode in levels {
+        let level = simd::configure(mode)?;
+        dwo_uniq.fill(0.0);
+        let st3 = time(100, 2000, || {
+            for (j, &slot) in slots.iter().enumerate() {
+                let r = slot as usize * d;
+                wo_blk[j * d..(j + 1) * d]
+                    .copy_from_slice(&wo_uniq[r..r + d]);
+            }
+            simd::gemm_nt(b, s, d, 1.0, &wi, &wo_blk, 0.0, &mut logits);
+            simd::sgns_err(&mut logits, s, lr);
+            simd::gemm_nn(b, d, s, 1.0, &logits, &wo_blk, 0.0, &mut dwi);
+            simd::gemm_tn(s, d, b, 1.0, &logits, &wi, 0.0, &mut dwo_blk);
+            for (j, &slot) in slots.iter().enumerate() {
+                let r = slot as usize * d;
+                simd::axpy(
+                    1.0,
+                    &dwo_blk[j * d..(j + 1) * d],
+                    &mut dwo_uniq[r..r + d],
+                );
+            }
+            std::hint::black_box(&dwo_uniq);
+        });
+        dwo_uniq.fill(0.0);
+        let stf = time(100, 2000, || {
+            simd::sgns_fused(
+                s,
+                d,
+                lr,
+                &wi,
+                &wo_uniq,
+                &slots,
+                &mut logits,
+                &mut dwi,
+                &mut dwo_uniq,
+            );
+            std::hint::black_box(&dwo_uniq);
+        });
+        let ratio = speedup(&stf, &st3); // >1: fused wins
+        let mut row = |kernel: &str, st: &pw2v::bench::Stats| {
+            table.row(vec![
+                level.to_string(),
+                kernel.into(),
+                format!("{:.0}", st.median * 1e9),
+                format!("{:.2}", flops / st.median / 1e9),
+                si(1.0 / st.median),
+            ]);
+        };
+        row("fused", &stf);
+        row("gemm3", &st3);
+        println!(
+            "sgns window @({b},{s},{d}) [{level}]: fused {ratio:.2}x over \
+             gemm3 (acceptance floor 1.3x single-thread)"
+        );
+        let per_kernel = |st: &pw2v::bench::Stats| {
+            Json::obj([
+                ("ns_per_window", Json::num(st.median * 1e9)),
+                ("gflops", Json::num(flops / st.median / 1e9)),
+                ("words_per_sec", Json::num(1.0 / st.median)),
+            ])
+        };
+        json_levels.insert(
+            level.to_string(),
+            Json::obj([
+                ("fused", per_kernel(&stf)),
+                ("gemm3", per_kernel(&st3)),
+                ("fused_over_gemm3", Json::num(ratio)),
+            ]),
+        );
+    }
+    simd::configure(SimdMode::Auto)?;
+    table.finish()?;
+    if let Some(r) = report.as_mut() {
+        r.set(
+            "micro_sgns_window",
+            Json::obj([
+                (
+                    "shape",
+                    Json::obj([
+                        ("b", Json::Num(b as f64)),
+                        ("s", Json::Num(s as f64)),
+                        ("d", Json::Num(d as f64)),
+                        ("uniq_rows", Json::Num(u as f64)),
+                    ]),
+                ),
+                ("levels", Json::Obj(json_levels)),
+            ]),
+        );
+    }
     Ok(())
 }
 
 /// Dispatch-aware kernel rows (`dot/avx2`, `gemm_nt/scalar`, …): the
 /// SIMD-vs-scalar contrast this crate's perf trajectory tracks from the
-/// explicit-SIMD PR onward.  Record the output in EXPERIMENTS.md §Perf.
-fn simd_dispatch_bench() -> anyhow::Result<()> {
+/// explicit-SIMD PR onward.  Record the output in EXPERIMENTS.md §Perf;
+/// `--json` lands the same numbers in `BENCH_throughput.json`.
+fn simd_dispatch_bench(
+    report: &mut Option<ThroughputReport>,
+) -> anyhow::Result<()> {
     let mut table = BenchTable::new(
         "micro_simd_dispatch",
         &["kernel", "level", "shape", "ns_per_call", "gflops"],
     );
+    let mut json_levels: BTreeMap<String, Json> = BTreeMap::new();
     // The paper's window shapes: B=16, S=6, D=300.
     let (b, s, d) = (16usize, 6usize, 300usize);
     let wi = randv(b * d, 1);
@@ -59,8 +204,23 @@ fn simd_dispatch_bench() -> anyhow::Result<()> {
         HashMap::new();
     for &mode in levels {
         let level = simd::configure(mode)?;
+        let mut level_json: BTreeMap<String, Json> = BTreeMap::new();
         let mut entry = |name: &'static str, st: pw2v::bench::Stats, flops: f64| {
             per_kernel.entry(name).or_default().push(st);
+            level_json.insert(
+                name.to_string(),
+                Json::obj([
+                    ("ns_per_call", Json::num(st.median * 1e9)),
+                    (
+                        "gflops",
+                        if flops > 0.0 {
+                            Json::num(flops / st.median / 1e9)
+                        } else {
+                            Json::Null
+                        },
+                    ),
+                ]),
+            );
             table.row(vec![
                 name.into(),
                 level.to_string(),
@@ -108,9 +268,13 @@ fn simd_dispatch_bench() -> anyhow::Result<()> {
             std::hint::black_box(&e);
         });
         entry("sgns_err", st, 0.0);
+        json_levels.insert(level.to_string(), Json::Obj(level_json));
     }
     simd::configure(SimdMode::Auto)?;
     table.finish()?;
+    if let Some(r) = report.as_mut() {
+        r.set("micro_kernels", Json::Obj(json_levels));
+    }
 
     if levels.len() == 2 {
         let mut table = BenchTable::new(

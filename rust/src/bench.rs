@@ -3,12 +3,14 @@
 //! emission under `bench_results/`, and the shared synthetic workload
 //! cache used by every bench binary.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::corpus::synthetic::{LatentModel, SyntheticConfig};
 use crate::corpus::vocab::Vocab;
 use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
 
 /// Timing statistics over repeated runs.
 #[derive(Clone, Copy, Debug)]
@@ -104,6 +106,79 @@ impl BenchTable {
     }
 }
 
+/// Merge-updating writer for the machine-readable perf trajectory:
+/// `BENCH_throughput.json` at the repo root.
+///
+/// Each bench harness invoked with `--json` replaces only its OWN
+/// top-level sections, so `microbench` (kernel GFLOP/s, fused-vs-gemm3
+/// window ablation) and `fig3_thread_scaling` (trainer words/sec per
+/// backend × kernel × threads) accumulate into one file that later PRs
+/// diff against.
+pub struct ThroughputReport {
+    path: PathBuf,
+    sections: BTreeMap<String, Json>,
+}
+
+impl ThroughputReport {
+    /// Open (or create) the report at `path`, keeping existing sections.
+    ///
+    /// An existing file that fails to parse is NOT silently discarded —
+    /// the trajectory is the whole point of the file — it is preserved as
+    /// `<path>.bak` with a loud warning before this run starts fresh.
+    pub fn at(path: PathBuf) -> Self {
+        let mut sections = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            match Json::parse(&text) {
+                Ok(Json::Obj(m)) => sections = m,
+                Ok(_) | Err(_) => {
+                    let bak = path.with_extension("json.bak");
+                    eprintln!(
+                        "WARNING: {} exists but is not a JSON object; \
+                         preserving it as {} and starting fresh",
+                        path.display(),
+                        bak.display()
+                    );
+                    let _ = std::fs::copy(&path, &bak);
+                }
+            }
+        }
+        Self { path, sections }
+    }
+
+    /// Open the report at the repo root: the nearest ancestor of the
+    /// current directory holding `ROADMAP.md` (benches run from `rust/`,
+    /// the trajectory file lives one level up), else the current
+    /// directory.
+    pub fn open_at_repo_root() -> Self {
+        let mut dir =
+            std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        for _ in 0..4 {
+            if dir.join("ROADMAP.md").exists() {
+                break;
+            }
+            match dir.parent() {
+                Some(p) => dir = p.to_path_buf(),
+                None => break,
+            }
+        }
+        Self::at(dir.join("BENCH_throughput.json"))
+    }
+
+    /// Replace one top-level section.
+    pub fn set(&mut self, section: &str, value: Json) {
+        self.sections.insert(section.to_string(), value);
+    }
+
+    /// Write the merged report back to disk.
+    pub fn save(&mut self) -> anyhow::Result<()> {
+        self.sections.insert("schema".to_string(), Json::Num(1.0));
+        let text = Json::Obj(self.sections.clone()).to_string();
+        std::fs::write(&self.path, text + "\n")?;
+        println!("(json: {})", self.path.display());
+        Ok(())
+    }
+}
+
 /// A cached synthetic workload: corpus file + vocab + latent ground truth.
 pub struct Workload {
     pub corpus: PathBuf,
@@ -177,6 +252,35 @@ mod tests {
         let fast = Stats { iters: 1, min: 1.0, median: 2.0, mean: 2.0, max: 3.0 };
         let slow = Stats { iters: 1, min: 3.0, median: 5.0, mean: 5.0, max: 7.0 };
         assert!((speedup(&fast, &slow) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_report_merges_sections() {
+        let path = std::env::temp_dir().join(format!(
+            "pw2v_throughput_{}.json",
+            std::process::id()
+        ));
+        std::fs::remove_file(&path).ok();
+        let mut r = ThroughputReport::at(path.clone());
+        r.set("alpha", Json::obj([("x", Json::num(1))]));
+        r.save().unwrap();
+        // A second writer must keep the first writer's section.
+        let mut r = ThroughputReport::at(path.clone());
+        r.set("beta", Json::num(2));
+        r.save().unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("alpha").unwrap().get("x").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("beta").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("schema").unwrap().as_f64(), Some(1.0));
+        // A corrupt trajectory file is preserved as .bak, not clobbered.
+        std::fs::write(&path, "{not json").unwrap();
+        let mut r = ThroughputReport::at(path.clone());
+        r.set("gamma", Json::num(3));
+        r.save().unwrap();
+        let bak = path.with_extension("json.bak");
+        assert_eq!(std::fs::read_to_string(&bak).unwrap(), "{not json");
+        std::fs::remove_file(&bak).ok();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

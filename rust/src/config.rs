@@ -92,6 +92,48 @@ impl FromStr for LrSchedule {
     }
 }
 
+/// Which kernel organisation the GEMM backend runs per window
+/// (`--kernel`; the fused-kernel PR's ablation axis).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelMode {
+    /// The fused single-pass kernel wherever it applies (exact sigmoid);
+    /// falls back to the gemm3 chain under `--sigmoid table`.
+    #[default]
+    Auto,
+    /// Require the fused single-pass kernel (`simd::sgns_fused`).
+    /// Rejected in combination with `--sigmoid table` (the fused kernel
+    /// evaluates the exact sigmoid only).
+    Fused,
+    /// The three-GEMM chain (`gemm_nt → sgns_err → gemm_nn → gemm_tn`),
+    /// preserved bit-for-bit from the pre-fusion crate for ablations.
+    Gemm3,
+}
+
+impl FromStr for KernelMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelMode::Auto),
+            "fused" => Ok(KernelMode::Fused),
+            "gemm3" => Ok(KernelMode::Gemm3),
+            other => anyhow::bail!(
+                "unknown kernel mode '{other}' (auto|fused|gemm3)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for KernelMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            KernelMode::Auto => "auto",
+            KernelMode::Fused => "fused",
+            KernelMode::Gemm3 => "gemm3",
+        })
+    }
+}
+
 /// Which sigmoid the GEMM trainer's fused error kernel evaluates
 /// (ablation: the original's EXP_TABLE approximation vs the exact form).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -166,6 +208,9 @@ pub struct TrainConfig {
     pub simd: SimdMode,
     /// Sigmoid evaluation in the GEMM backend (`--sigmoid`).
     pub sigmoid_mode: SigmoidMode,
+    /// Kernel organisation in the GEMM backend (`--kernel`): the fused
+    /// single-pass window kernel vs the ablation-preserved gemm3 chain.
+    pub kernel: KernelMode,
 }
 
 impl Default for TrainConfig {
@@ -189,6 +234,7 @@ impl Default for TrainConfig {
             unigram_power: 0.75,
             simd: SimdMode::Auto,
             sigmoid_mode: SigmoidMode::Exact,
+            kernel: KernelMode::Auto,
         }
     }
 }
@@ -242,6 +288,9 @@ impl TrainConfig {
         if let Some(s) = a.opt::<SigmoidMode>("sigmoid")? {
             self.sigmoid_mode = s;
         }
+        if let Some(k) = a.opt::<KernelMode>("kernel")? {
+            self.kernel = k;
+        }
         self.validate()
     }
 
@@ -271,6 +320,12 @@ impl TrainConfig {
             "sample must be in [0,1]"
         );
         anyhow::ensure!(self.lr > 0.0, "lr must be > 0");
+        anyhow::ensure!(
+            !(self.kernel == KernelMode::Fused
+                && self.sigmoid_mode == SigmoidMode::Table),
+            "--kernel fused evaluates the exact sigmoid; \
+             use --kernel gemm3 with --sigmoid table"
+        );
         Ok(())
     }
 }
@@ -345,6 +400,29 @@ mod tests {
         assert_eq!("ours".parse::<Backend>().unwrap(), Backend::Gemm);
         assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Pjrt);
         assert!("nope".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn kernel_knob_parsing_and_validation() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.kernel, KernelMode::Auto);
+        let a = Args::parse(
+            "--kernel gemm3".split_whitespace().map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.kernel, KernelMode::Gemm3);
+        assert_eq!("fused".parse::<KernelMode>().unwrap(), KernelMode::Fused);
+        assert!("4gemm".parse::<KernelMode>().is_err());
+        assert_eq!(KernelMode::Gemm3.to_string(), "gemm3");
+
+        // Fused + EXP_TABLE sigmoid is contradictory and rejected; Auto +
+        // table silently takes the gemm3 path instead.
+        let mut c = TrainConfig::default();
+        c.kernel = KernelMode::Fused;
+        c.sigmoid_mode = SigmoidMode::Table;
+        assert!(c.validate().is_err());
+        c.kernel = KernelMode::Auto;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

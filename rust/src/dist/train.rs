@@ -180,12 +180,15 @@ fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
     let n = ctx.models.len();
     let model = &ctx.models[ctx.idx];
     let mut backend = GemmBackend::new(cfg.dim, cfg.batch, cfg.samples())
-        .with_sigmoid(cfg.sigmoid_mode);
+        .with_sigmoid(cfg.sigmoid_mode)
+        .with_kernel(cfg.kernel);
     let mut rng =
         Xoshiro256ss::new(cfg.seed ^ (ctx.idx as u64 * 0x5D1_77F + 13));
     let builder =
         BatchBuilder::new(ctx.sampler, cfg.window, cfg.batch, cfg.negative);
-    let mut arena = SuperbatchArena::with_capacity(
+    // Sentence-slack sizing: same overshoot bound as the shared-memory
+    // trainer (fill_arena appends whole sentences).
+    let mut arena = SuperbatchArena::with_sentence_slack(
         cfg.superbatch,
         cfg.batch,
         cfg.samples(),

@@ -16,7 +16,11 @@
 //!   the tiny `S`/`B` reduction in registers;
 //! * `sgns_err` — fused sigmoid + gradient scale using a Cephes-style
 //!   vector `exp` (relative error ≲ 2e-7, far inside the 1e-4 parity
-//!   budget asserted by `tests/props.rs`).
+//!   budget asserted by `tests/props.rs`);
+//! * `sgns_fused` — the single-pass window kernel: logits, error, and
+//!   BOTH gradient accumulations in one call, with the slot block's `wo`
+//!   rows and `dwo` accumulators register-resident across all `b` input
+//!   rows (the FULL-W2V-style fusion that replaces the gemm3 chain).
 
 #![allow(clippy::missing_safety_doc)]
 
@@ -300,6 +304,263 @@ unsafe fn exp256(x: __m256) -> __m256 {
         _mm256_set1_epi32(127),
     )));
     _mm256_mul_ps(y, pow2)
+}
+
+/// Fused single-pass SGNS window kernel (see `scalar::sgns_fused` for the
+/// reference semantics).  Three register-resident phases over the gathered
+/// tiles, no materialised `logits`/`err` round trips between kernels:
+///
+/// 1. **logits tile** — `err[i,j] = <wi_i, wo[slots_j]>` with the same
+///    dot4 column blocking as `gemm_nt` (one `Wi` load feeds 4 FMA
+///    chains);
+/// 2. **error** — the vectorised `(label − σ)·lr` transform in place over
+///    the `b·s` tile (L1-resident, ≤ 384 B at paper shapes);
+/// 3. **gradient sweep** — ONE pass over the `D` axis per output-slot
+///    block: the block's `wo` rows and `dwo` accumulators live in
+///    registers while ALL `b` input rows stream through, so each `dwo`
+///    row is read+written once per window (the gemm3 chain's `gemm_nn` +
+///    `gemm_tn` instead re-read the `wo`/`wi` blocks `b`- and `s`-fold).
+///
+/// The register-tiled phase 3 requires DISTINCT slots (two accumulators
+/// for one row would lose an update at store time); windows with a
+/// duplicated negative draw — rare under a large unigram table — take a
+/// sequential axpy fallback with identical semantics.
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn sgns_fused(
+    s: usize,
+    d: usize,
+    lr: f32,
+    wi: &[f32],
+    wo: &[f32],
+    slots: &[u32],
+    err: &mut [f32],
+    dwi: &mut [f32],
+    dwo: &mut [f32],
+) {
+    let b = wi.len() / d;
+
+    // Phase 1: logits tile, dot4-blocked over the slot columns.
+    {
+        let pwi = wi.as_ptr();
+        let pwo = wo.as_ptr();
+        for i in 0..b {
+            let ar = pwi.add(i * d);
+            let mut j = 0usize;
+            while j + 4 <= s {
+                let (d0, d1, d2, d3) = dot4(
+                    ar,
+                    pwo.add(slots[j] as usize * d),
+                    pwo.add(slots[j + 1] as usize * d),
+                    pwo.add(slots[j + 2] as usize * d),
+                    pwo.add(slots[j + 3] as usize * d),
+                    d,
+                );
+                err[i * s + j] = d0;
+                err[i * s + j + 1] = d1;
+                err[i * s + j + 2] = d2;
+                err[i * s + j + 3] = d3;
+                j += 4;
+            }
+            while j < s {
+                err[i * s + j] = dot(
+                    std::slice::from_raw_parts(ar, d),
+                    std::slice::from_raw_parts(pwo.add(slots[j] as usize * d), d),
+                );
+                j += 1;
+            }
+        }
+    }
+
+    // Phase 2: vectorised error transform over the L1-resident tile.
+    sgns_err(&mut err[..b * s], s, lr);
+
+    // Duplicate slots (same output id drawn twice in one window): the
+    // register-tiled phase 3 would lose one accumulator at store time, so
+    // take the sequential (reference-order) path instead.
+    let has_dup = slots
+        .iter()
+        .enumerate()
+        .any(|(j, sj)| slots[..j].contains(sj));
+    if has_dup {
+        for i in 0..b {
+            let wi_row = &wi[i * d..(i + 1) * d];
+            dwi[i * d..(i + 1) * d].fill(0.0);
+            for (j, &slot) in slots.iter().enumerate() {
+                let e = err[i * s + j];
+                let r = slot as usize * d;
+                axpy(e, &wo[r..r + d], &mut dwi[i * d..(i + 1) * d]);
+                axpy(e, wi_row, &mut dwo[r..r + d]);
+            }
+        }
+        return;
+    }
+
+    // Phase 3: register-tiled gradient sweep, slot blocks of 4/2/1.  For
+    // each 8-lane block of D, the slot block's `wo` vectors and `dwo`
+    // accumulators stay in registers while all `b` input rows stream by;
+    // `dwi` is overwritten by the first slot block and accumulated by the
+    // rest.
+    let pwi = wi.as_ptr();
+    let pwo = wo.as_ptr();
+    let pdwi = dwi.as_mut_ptr();
+    let pdwo = dwo.as_mut_ptr();
+    let perr = err.as_ptr();
+    let mut j0 = 0usize;
+    while j0 < s {
+        let first = j0 == 0;
+        if s - j0 >= 4 {
+            let r0 = slots[j0] as usize * d;
+            let r1 = slots[j0 + 1] as usize * d;
+            let r2 = slots[j0 + 2] as usize * d;
+            let r3 = slots[j0 + 3] as usize * d;
+            let mut l = 0usize;
+            while l + 8 <= d {
+                let w0 = _mm256_loadu_ps(pwo.add(r0 + l));
+                let w1 = _mm256_loadu_ps(pwo.add(r1 + l));
+                let w2 = _mm256_loadu_ps(pwo.add(r2 + l));
+                let w3 = _mm256_loadu_ps(pwo.add(r3 + l));
+                let mut a0 = _mm256_loadu_ps(pdwo.add(r0 + l));
+                let mut a1 = _mm256_loadu_ps(pdwo.add(r1 + l));
+                let mut a2 = _mm256_loadu_ps(pdwo.add(r2 + l));
+                let mut a3 = _mm256_loadu_ps(pdwo.add(r3 + l));
+                for i in 0..b {
+                    let e = perr.add(i * s + j0);
+                    let vwi = _mm256_loadu_ps(pwi.add(i * d + l));
+                    let e0 = _mm256_set1_ps(*e);
+                    let e1 = _mm256_set1_ps(*e.add(1));
+                    let e2 = _mm256_set1_ps(*e.add(2));
+                    let e3 = _mm256_set1_ps(*e.add(3));
+                    let mut g = if first {
+                        _mm256_setzero_ps()
+                    } else {
+                        _mm256_loadu_ps(pdwi.add(i * d + l))
+                    };
+                    g = _mm256_fmadd_ps(e0, w0, g);
+                    g = _mm256_fmadd_ps(e1, w1, g);
+                    g = _mm256_fmadd_ps(e2, w2, g);
+                    g = _mm256_fmadd_ps(e3, w3, g);
+                    _mm256_storeu_ps(pdwi.add(i * d + l), g);
+                    a0 = _mm256_fmadd_ps(e0, vwi, a0);
+                    a1 = _mm256_fmadd_ps(e1, vwi, a1);
+                    a2 = _mm256_fmadd_ps(e2, vwi, a2);
+                    a3 = _mm256_fmadd_ps(e3, vwi, a3);
+                }
+                _mm256_storeu_ps(pdwo.add(r0 + l), a0);
+                _mm256_storeu_ps(pdwo.add(r1 + l), a1);
+                _mm256_storeu_ps(pdwo.add(r2 + l), a2);
+                _mm256_storeu_ps(pdwo.add(r3 + l), a3);
+                l += 8;
+            }
+            while l < d {
+                let mut a0 = *pdwo.add(r0 + l);
+                let mut a1 = *pdwo.add(r1 + l);
+                let mut a2 = *pdwo.add(r2 + l);
+                let mut a3 = *pdwo.add(r3 + l);
+                for i in 0..b {
+                    let e = perr.add(i * s + j0);
+                    let x = *pwi.add(i * d + l);
+                    let mut g = if first { 0.0 } else { *pdwi.add(i * d + l) };
+                    g += *e * *pwo.add(r0 + l)
+                        + *e.add(1) * *pwo.add(r1 + l)
+                        + *e.add(2) * *pwo.add(r2 + l)
+                        + *e.add(3) * *pwo.add(r3 + l);
+                    *pdwi.add(i * d + l) = g;
+                    a0 += *e * x;
+                    a1 += *e.add(1) * x;
+                    a2 += *e.add(2) * x;
+                    a3 += *e.add(3) * x;
+                }
+                *pdwo.add(r0 + l) = a0;
+                *pdwo.add(r1 + l) = a1;
+                *pdwo.add(r2 + l) = a2;
+                *pdwo.add(r3 + l) = a3;
+                l += 1;
+            }
+            j0 += 4;
+        } else if s - j0 >= 2 {
+            let r0 = slots[j0] as usize * d;
+            let r1 = slots[j0 + 1] as usize * d;
+            let mut l = 0usize;
+            while l + 8 <= d {
+                let w0 = _mm256_loadu_ps(pwo.add(r0 + l));
+                let w1 = _mm256_loadu_ps(pwo.add(r1 + l));
+                let mut a0 = _mm256_loadu_ps(pdwo.add(r0 + l));
+                let mut a1 = _mm256_loadu_ps(pdwo.add(r1 + l));
+                for i in 0..b {
+                    let e = perr.add(i * s + j0);
+                    let vwi = _mm256_loadu_ps(pwi.add(i * d + l));
+                    let e0 = _mm256_set1_ps(*e);
+                    let e1 = _mm256_set1_ps(*e.add(1));
+                    let mut g = if first {
+                        _mm256_setzero_ps()
+                    } else {
+                        _mm256_loadu_ps(pdwi.add(i * d + l))
+                    };
+                    g = _mm256_fmadd_ps(e0, w0, g);
+                    g = _mm256_fmadd_ps(e1, w1, g);
+                    _mm256_storeu_ps(pdwi.add(i * d + l), g);
+                    a0 = _mm256_fmadd_ps(e0, vwi, a0);
+                    a1 = _mm256_fmadd_ps(e1, vwi, a1);
+                }
+                _mm256_storeu_ps(pdwo.add(r0 + l), a0);
+                _mm256_storeu_ps(pdwo.add(r1 + l), a1);
+                l += 8;
+            }
+            while l < d {
+                let mut a0 = *pdwo.add(r0 + l);
+                let mut a1 = *pdwo.add(r1 + l);
+                for i in 0..b {
+                    let e = perr.add(i * s + j0);
+                    let x = *pwi.add(i * d + l);
+                    let mut g = if first { 0.0 } else { *pdwi.add(i * d + l) };
+                    g += *e * *pwo.add(r0 + l) + *e.add(1) * *pwo.add(r1 + l);
+                    *pdwi.add(i * d + l) = g;
+                    a0 += *e * x;
+                    a1 += *e.add(1) * x;
+                }
+                *pdwo.add(r0 + l) = a0;
+                *pdwo.add(r1 + l) = a1;
+                l += 1;
+            }
+            j0 += 2;
+        } else {
+            let r0 = slots[j0] as usize * d;
+            let mut l = 0usize;
+            while l + 8 <= d {
+                let w0 = _mm256_loadu_ps(pwo.add(r0 + l));
+                let mut a0 = _mm256_loadu_ps(pdwo.add(r0 + l));
+                for i in 0..b {
+                    let e0 = _mm256_set1_ps(*perr.add(i * s + j0));
+                    let vwi = _mm256_loadu_ps(pwi.add(i * d + l));
+                    let mut g = if first {
+                        _mm256_setzero_ps()
+                    } else {
+                        _mm256_loadu_ps(pdwi.add(i * d + l))
+                    };
+                    g = _mm256_fmadd_ps(e0, w0, g);
+                    _mm256_storeu_ps(pdwi.add(i * d + l), g);
+                    a0 = _mm256_fmadd_ps(e0, vwi, a0);
+                }
+                _mm256_storeu_ps(pdwo.add(r0 + l), a0);
+                l += 8;
+            }
+            while l < d {
+                let mut a0 = *pdwo.add(r0 + l);
+                for i in 0..b {
+                    let e = *perr.add(i * s + j0);
+                    let x = *pwi.add(i * d + l);
+                    let mut g = if first { 0.0 } else { *pdwi.add(i * d + l) };
+                    g += e * *pwo.add(r0 + l);
+                    *pdwi.add(i * d + l) = g;
+                    a0 += e * x;
+                }
+                *pdwo.add(r0 + l) = a0;
+                l += 1;
+            }
+            j0 += 1;
+        }
+    }
 }
 
 /// Fused `logits <- (label − σ(logits)) · lr`: the bulk is computed with

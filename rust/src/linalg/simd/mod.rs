@@ -19,8 +19,12 @@
 //!
 //! The dispatched surface is the complete per-window hot path: `dot`,
 //! `axpy`, the three GEMM microkernels at the paper's (B≈16, S≈6, D≈300)
-//! shapes, and the fused `err = (label − σ(logits))·lr` elementwise
-//! kernel between GEMM 1 and GEMMs 2/3.
+//! shapes, the fused `err = (label − σ(logits))·lr` elementwise kernel
+//! between GEMM 1 and GEMMs 2/3 — and [`sgns_fused`], the single-pass
+//! window kernel that replaces that whole four-kernel chain with one
+//! register-tiled sweep (`--kernel {auto,fused,gemm3}` selects between
+//! them in the GEMM backend; `gemm3` keeps the chain bit-for-bit for
+//! ablation).
 
 use std::fmt;
 use std::str::FromStr;
@@ -270,6 +274,59 @@ pub fn sgns_err(logits: &mut [f32], s: usize, lr: f32) {
     scalar::sgns_err(logits, s, lr)
 }
 
+/// Dispatched FUSED single-pass SGNS window kernel — the perf-PR
+/// tentpole that collapses `gemm_nt → sgns_err → gemm_nn → gemm_tn` into
+/// one call (see `scalar::sgns_fused` for the reference semantics and
+/// `avx2::sgns_fused` for the register-tiling):
+///
+/// * `wi` holds `b = wi.len()/d` gathered input rows;
+/// * `slots` selects the `s` output rows inside `wo`/`dwo` (the
+///   superbatch dedup block; identity `0..s` for the window-at-a-time
+///   path), `slots[0]` being the positive target;
+/// * `err` is caller scratch of at least `b·s` (the L1-resident logits
+///   tile — never round-trips between kernel calls);
+/// * `dwi` is OVERWRITTEN with the input-row gradients;
+/// * `dwo` rows named by `slots` are ACCUMULATED into (callers zero or
+///   carry them across a superbatch).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn sgns_fused(
+    s: usize,
+    d: usize,
+    lr: f32,
+    wi: &[f32],
+    wo: &[f32],
+    slots: &[u32],
+    err: &mut [f32],
+    dwi: &mut [f32],
+    dwo: &mut [f32],
+) {
+    // Release-mode asserts: the AVX2 kernel indexes through raw pointers,
+    // so bad geometry must panic here, not corrupt memory there.
+    assert!(d > 0 && s > 0 && slots.len() == s, "sgns_fused geometry");
+    assert!(
+        wi.len() % d == 0 && dwi.len() == wi.len(),
+        "sgns_fused wi/dwi geometry"
+    );
+    let b = wi.len() / d;
+    assert!(err.len() >= b * s, "sgns_fused err scratch undersized");
+    let max_row = slots.iter().map(|&x| x as usize).max().unwrap_or(0);
+    assert!(
+        (max_row + 1) * d <= wo.len() && (max_row + 1) * d <= dwo.len(),
+        "sgns_fused slot out of range"
+    );
+    #[cfg(target_arch = "x86_64")]
+    {
+        if level() == SimdLevel::Avx2 {
+            // SAFETY: detection gate; slice bounds asserted above.
+            return unsafe {
+                avx2::sgns_fused(s, d, lr, wi, wo, slots, err, dwi, dwo)
+            };
+        }
+    }
+    scalar::sgns_fused(s, d, lr, wi, wo, slots, err, dwi, dwo)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -338,6 +395,60 @@ mod tests {
             let label = if idx % 6 == 0 { 1.0 } else { 0.0 };
             let want = (label - sigmoid_exact(*x)) * 0.025;
             assert_eq!(g.to_bits(), want.to_bits(), "idx {idx}");
+        }
+    }
+
+    /// Whatever level is currently dispatched, the fused window kernel
+    /// must agree with the per-pair definition — including slot
+    /// indirection and duplicate slots (the sequential-fallback path).
+    #[test]
+    fn sgns_fused_matches_definition() {
+        for (b, s, d, slots) in [
+            (16usize, 6usize, 300usize, vec![3u32, 7, 0, 5, 2, 6]),
+            (1, 5, 33, vec![1, 4, 2, 0, 3]),
+            (4, 3, 8, vec![2, 0, 1]),
+            // Duplicate slot: two identical negative draws in one window.
+            (5, 6, 31, vec![0, 4, 4, 2, 1, 3]),
+        ] {
+            let u = 8usize; // rows in the wo/dwo blocks
+            let mut rng = Xoshiro256ss::new(0xF05E + b as u64);
+            let wi = randv(b * d, rng.next_u64());
+            let wo = randv(u * d, rng.next_u64());
+            let lr = 0.025f32;
+            let mut err = vec![0.0f32; b * s];
+            let mut dwi = randv(b * d, 1); // garbage: must be overwritten
+            let mut dwo = randv(u * d, 2);
+            let dwo0 = dwo.clone(); // accumulation baseline
+            sgns_fused(s, d, lr, &wi, &wo, &slots, &mut err, &mut dwi, &mut dwo);
+
+            let mut want_dwi = vec![0.0f32; b * d];
+            let mut want_dwo = dwo0;
+            for i in 0..b {
+                for (j, &slot) in slots.iter().enumerate() {
+                    let r = slot as usize * d;
+                    let x: f32 = (0..d)
+                        .map(|l| wi[i * d + l] * wo[r + l])
+                        .sum();
+                    let label = if j == 0 { 1.0 } else { 0.0 };
+                    let e = (label - sigmoid_exact(x)) * lr;
+                    for l in 0..d {
+                        want_dwi[i * d + l] += e * wo[r + l];
+                        want_dwo[r + l] += e * wi[i * d + l];
+                    }
+                }
+            }
+            for (idx, (g, w)) in dwi.iter().zip(&want_dwi).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                    "dwi (b={b},s={s},d={d}) idx {idx}: {g} vs {w}"
+                );
+            }
+            for (idx, (g, w)) in dwo.iter().zip(&want_dwo).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                    "dwo (b={b},s={s},d={d}) idx {idx}: {g} vs {w}"
+                );
+            }
         }
     }
 

@@ -1,6 +1,7 @@
 //! Portable-scalar dispatch targets: thin delegations to the original
 //! autovectorised kernels in `linalg::vecops` / `linalg::gemm`, plus the
-//! reference form of the fused SGNS error kernel.
+//! reference forms of the fused SGNS error kernel and the fused
+//! single-pass SGNS window kernel.
 //!
 //! These are deliberately the SAME functions the crate used before the
 //! explicit-SIMD layer existed, so `--simd scalar` reproduces pre-SIMD
@@ -17,5 +18,58 @@ pub fn sgns_err(logits: &mut [f32], s: usize, lr: f32) {
     for (idx, x) in logits.iter_mut().enumerate() {
         let label = if idx % s == 0 { 1.0 } else { 0.0 };
         *x = (label - sigmoid_exact(*x)) * lr;
+    }
+}
+
+/// Fused single-pass SGNS window kernel, portable reference form.
+///
+/// For the `b = wi.len() / d` input rows against the `s` output rows
+/// selected by `slots` (row indices into `wo`/`dwo`; `slots[0]` is the
+/// positive target), one call computes what the gemm3 chain spreads over
+/// `gemm_nt → sgns_err → gemm_nn → gemm_tn`:
+///
+/// ```text
+/// err[i,j]       = (label(j) − σ(<wi_i, wo[slots_j]>)) · lr
+/// dwi[i]         = Σ_j err[i,j] · wo[slots_j]     (overwritten)
+/// dwo[slots_j]  += Σ_i err[i,j] · wi_i            (accumulated)
+/// ```
+///
+/// `err` is caller scratch of at least `b·s` — the logits tile lives in
+/// L1 for the duration of one window instead of round-tripping between
+/// separate kernel calls.  Duplicate slots are legal (two identical
+/// negative draws in one window): the sequential axpy accumulation below
+/// is the reference semantics the AVX2 fast path must preserve.
+#[allow(clippy::too_many_arguments)]
+pub fn sgns_fused(
+    s: usize,
+    d: usize,
+    lr: f32,
+    wi: &[f32],
+    wo: &[f32],
+    slots: &[u32],
+    err: &mut [f32],
+    dwi: &mut [f32],
+    dwo: &mut [f32],
+) {
+    let b = wi.len() / d;
+    // Pass 1: logits tile.
+    for i in 0..b {
+        let wi_row = &wi[i * d..(i + 1) * d];
+        for (j, &slot) in slots.iter().enumerate() {
+            let r = slot as usize * d;
+            err[i * s + j] = dot(wi_row, &wo[r..r + d]);
+        }
+    }
+    sgns_err(&mut err[..b * s], s, lr);
+    // Pass 2: both gradient accumulations from the same err tile.
+    for i in 0..b {
+        let wi_row = &wi[i * d..(i + 1) * d];
+        dwi[i * d..(i + 1) * d].fill(0.0);
+        for (j, &slot) in slots.iter().enumerate() {
+            let e = err[i * s + j];
+            let r = slot as usize * d;
+            axpy(e, &wo[r..r + d], &mut dwi[i * d..(i + 1) * d]);
+            axpy(e, wi_row, &mut dwo[r..r + d]);
+        }
     }
 }

@@ -55,7 +55,8 @@ USAGE: pw2v <subcommand> [--key value ...]
               [--simset sim.tsv --anaset ana.txt]
   train       --corpus corpus.txt --out vectors.txt
               [--backend scalar|bidmach|gemm|pjrt --threads T --dim D
-               --simd auto|avx2|scalar --sigmoid exact|table ...]
+               --simd auto|avx2|scalar --kernel auto|fused|gemm3
+               --sigmoid exact|table ...]
   train-dist  --corpus corpus.txt --nodes N [--sync-interval W --policy sub|full]
               [--out vectors.txt]
   eval        --vectors vectors.txt [--simset sim.tsv] [--anaset ana.txt]
@@ -113,8 +114,15 @@ fn cmd_train(a: &Args) -> anyhow::Result<()> {
     );
     let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
     eprintln!(
-        "training: backend={} threads={} dim={} epochs={} simd={} sigmoid={}",
-        cfg.backend, cfg.threads, cfg.dim, cfg.epochs, cfg.simd, cfg.sigmoid_mode
+        "training: backend={} threads={} dim={} epochs={} simd={} kernel={} \
+         sigmoid={}",
+        cfg.backend,
+        cfg.threads,
+        cfg.dim,
+        cfg.epochs,
+        cfg.simd,
+        cfg.kernel,
+        cfg.sigmoid_mode
     );
     let outcome = train::train(&cfg, &corpus, &vocab, &model)?;
     let snap = outcome.snapshot;

@@ -16,6 +16,7 @@
 
 use super::unigram::UnigramSampler;
 use super::window::{context_range, dynamic_window};
+use crate::corpus::reader::MAX_SENTENCE_LEN;
 use crate::util::rng::Xoshiro256ss;
 
 /// One training window: a batch of input words sharing target + negatives.
@@ -97,6 +98,22 @@ impl SuperbatchArena {
         a.input_offsets.reserve(windows + 1);
         a.outputs.reserve(windows * s);
         a
+    }
+
+    /// The trainer-loop constructor: capacity for `superbatch` windows
+    /// PLUS the worst-case overshoot of one appended sentence.
+    ///
+    /// The hot loop appends a WHOLE sentence via
+    /// [`BatchBuilder::fill_arena`] before checking `len() >= superbatch`,
+    /// so the arena can legitimately hold up to `superbatch − 1 +
+    /// MAX_SENTENCE_LEN` windows at flush time (a sentence emits at most
+    /// one window per token, and the reader clips sentences at
+    /// [`MAX_SENTENCE_LEN`]).  Sizing for exactly `superbatch` windows
+    /// made that overshoot reallocate — an a-priori bound here means the
+    /// arena NEVER reallocates after construction, whatever the corpus
+    /// streams in (asserted by `tests/alloc_steadystate.rs`).
+    pub fn with_sentence_slack(superbatch: usize, b_cap: usize, s: usize) -> Self {
+        Self::with_capacity(superbatch + MAX_SENTENCE_LEN, b_cap, s)
     }
 
     /// Number of windows currently stored.
@@ -469,6 +486,41 @@ mod tests {
         assert!(a.outputs.capacity() >= 64 * 6);
         assert!(a.input_offsets.capacity() >= 65);
         assert_eq!(a.len(), 0);
+    }
+
+    /// Sentence-slack sizing covers the worst legal overshoot: a
+    /// superbatch one window short of full, plus a clipped-at-maximum
+    /// sentence appended on top — no buffer may reallocate.
+    #[test]
+    fn sentence_slack_absorbs_max_sentence_overshoot() {
+        let (_, s) = builder_parts(50);
+        let superbatch = 4usize;
+        let b = BatchBuilder::new(&s, 5, 16, 5);
+        let mut arena = SuperbatchArena::with_sentence_slack(superbatch, 16, 6);
+        let caps = (
+            arena.inputs.capacity(),
+            arena.input_offsets.capacity(),
+            arena.outputs.capacity(),
+        );
+        let mut rng = Xoshiro256ss::new(11);
+        // superbatch − 1 windows already pending...
+        let stub: Vec<u32> = (0..(superbatch as u32 - 1)).collect();
+        b.fill_arena(&stub, &mut rng, &mut arena);
+        assert_eq!(arena.len(), superbatch - 1);
+        // ...then one maximum-length sentence lands in one append.
+        let long: Vec<u32> =
+            (0..MAX_SENTENCE_LEN as u32).map(|i| i % 50).collect();
+        b.fill_arena(&long, &mut rng, &mut arena);
+        assert_eq!(arena.len(), superbatch - 1 + MAX_SENTENCE_LEN);
+        assert_eq!(
+            caps,
+            (
+                arena.inputs.capacity(),
+                arena.input_offsets.capacity(),
+                arena.outputs.capacity(),
+            ),
+            "sentence-slack arena reallocated on worst-case overshoot"
+        );
     }
 
     #[test]

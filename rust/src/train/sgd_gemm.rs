@@ -1,8 +1,9 @@
 //! THE PAPER'S SCHEME (Sec. III-B/C): minibatched, shared-negative-sample
-//! SGNS organised as three level-3 BLAS calls per window, with all model
-//! updates deferred to the end of the window block.
+//! SGNS with all model updates deferred to the end of the window block,
+//! in one of two kernel organisations (`--kernel {auto,fused,gemm3}`):
 //!
-//! Per window (Fig. 2 right):
+//! **gemm3** — three level-3 BLAS calls per window (Fig. 2 right),
+//! preserved bit-for-bit from the pre-fusion crate for ablations:
 //!
 //! ```text
 //! gather:  Wi[B,D] <- M_in[inputs],  Wo[S,D] <- M_out[target + negatives]
@@ -12,6 +13,18 @@
 //! GEMM 3:  dWo    = errᵀ · Wi
 //! scatter: M_in[inputs] += dWi rows, M_out[outputs] += dWo rows (Hogwild)
 //! ```
+//!
+//! **fused** (default) — ONE call to [`simd::sgns_fused`] per window: the
+//! dot products, the `(label − σ)·lr` error, and both gradient
+//! accumulations happen in the same register tiles, so the gathered
+//! blocks are swept ~once instead of three-plus times and the
+//! `logits`/`err` intermediates never round-trip between kernels.  On the
+//! arena path the kernel additionally reads `Wo` rows and accumulates
+//! `dWo` THROUGH the superbatch dedup slots, which deletes the per-window
+//! `Wo` block assembly copy and the per-window `dWo` accumulation pass
+//! that the gemm3 chain needs.  The fused kernel evaluates the exact
+//! sigmoid; under `--sigmoid table` the backend keeps the gemm3 chain
+//! (`--kernel fused --sigmoid table` is rejected at config validation).
 //!
 //! All kernels go through [`crate::linalg::simd`], so the backend runs the
 //! AVX2+FMA path on capable CPUs and the portable path under
@@ -38,7 +51,7 @@ use std::sync::Arc;
 
 use super::lr::{AdaGrad, RmsProp};
 use super::Backend;
-use crate::config::SigmoidMode;
+use crate::config::{KernelMode, SigmoidMode};
 use crate::linalg::sigmoid::SigmoidTable;
 use crate::linalg::simd;
 use crate::model::SharedModel;
@@ -110,6 +123,11 @@ pub struct GemmBackend {
     /// `Some` = EXP_TABLE sigmoid (config `sigmoid = table`); `None` =
     /// exact sigmoid through the fused SIMD kernel.
     sigmoid_table: Option<SigmoidTable>,
+    /// Kernel organisation (`--kernel`); see [`Self::use_fused`].
+    kernel: KernelMode,
+    /// Identity slot map `0..s` for the fused window-at-a-time path
+    /// (reused; steady-state allocation-free).
+    win_slots: Vec<u32>,
     /// Superbatch dedup scratch (reused; steady-state allocation-free).
     uniq_ids: Vec<u32>,
     slot_of: FxU32Map<u32>,
@@ -129,6 +147,8 @@ impl GemmBackend {
             dwo: vec![0.0; samples * dim],
             rule: UpdateRule::Plain,
             sigmoid_table: None,
+            kernel: KernelMode::Auto,
+            win_slots: Vec::new(),
             uniq_ids: Vec::new(),
             slot_of: FxU32Map::default(),
             out_slots: Vec::new(),
@@ -151,6 +171,21 @@ impl GemmBackend {
         self
     }
 
+    /// Select the kernel organisation (`--kernel`).
+    pub fn with_kernel(mut self, kernel: KernelMode) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The fused single-pass kernel runs unless the caller pinned `gemm3`
+    /// or configured the EXP_TABLE sigmoid (the fused kernel evaluates
+    /// the exact sigmoid only; the contradictory `--kernel fused
+    /// --sigmoid table` is rejected by `TrainConfig::validate`).
+    #[inline]
+    fn use_fused(&self) -> bool {
+        self.kernel != KernelMode::Gemm3 && self.sigmoid_table.is_none()
+    }
+
     /// `logits[..b*s] <- (label - σ) · lr` under the configured sigmoid.
     #[inline]
     fn err_inplace(&mut self, b: usize, s: usize, lr: f32) {
@@ -166,7 +201,7 @@ impl GemmBackend {
         }
     }
 
-    /// One window: gather → 3 GEMMs → scatter.
+    /// One window: gather → fused kernel (or 3-GEMM chain) → scatter.
     fn window(&mut self, model: &SharedModel, w: &Window, lr: f32) {
         let d = self.dim;
         let b = w.inputs.len();
@@ -185,42 +220,61 @@ impl GemmBackend {
             self.wo[j * d..(j + 1) * d].copy_from_slice(row);
         }
 
-        // GEMM 1: logits = Wi · Woᵀ.
-        simd::gemm_nt(
-            b,
-            s,
-            d,
-            1.0,
-            &self.wi[..b * d],
-            &self.wo[..s * d],
-            0.0,
-            &mut self.logits[..b * s],
-        );
+        if self.use_fused() {
+            // One single-pass kernel call over the gathered blocks
+            // (identity slots: the window block IS the wo/dwo storage).
+            self.win_slots.clear();
+            self.win_slots.extend(0..s as u32);
+            self.dwo[..s * d].fill(0.0);
+            simd::sgns_fused(
+                s,
+                d,
+                lr,
+                &self.wi[..b * d],
+                &self.wo[..s * d],
+                &self.win_slots[..s],
+                &mut self.logits[..b * s],
+                &mut self.dwi[..b * d],
+                &mut self.dwo[..s * d],
+            );
+        } else {
+            // GEMM 1: logits = Wi · Woᵀ.
+            simd::gemm_nt(
+                b,
+                s,
+                d,
+                1.0,
+                &self.wi[..b * d],
+                &self.wo[..s * d],
+                0.0,
+                &mut self.logits[..b * s],
+            );
 
-        // err = (label - sigma(logits)) * lr, in place.
-        self.err_inplace(b, s, lr);
+            // err = (label - sigma(logits)) * lr, in place.
+            self.err_inplace(b, s, lr);
 
-        // GEMM 2 + 3 from the PRE-update blocks.
-        simd::gemm_nn(
-            b,
-            d,
-            s,
-            1.0,
-            &self.logits[..b * s],
-            &self.wo[..s * d],
-            0.0,
-            &mut self.dwi[..b * d],
-        );
-        simd::gemm_tn(
-            s,
-            d,
-            b,
-            1.0,
-            &self.logits[..b * s],
-            &self.wi[..b * d],
-            0.0,
-            &mut self.dwo[..s * d],
-        );
+            // GEMM 2 + 3 from the PRE-update blocks.
+            simd::gemm_nn(
+                b,
+                d,
+                s,
+                1.0,
+                &self.logits[..b * s],
+                &self.wo[..s * d],
+                0.0,
+                &mut self.dwi[..b * d],
+            );
+            simd::gemm_tn(
+                s,
+                d,
+                b,
+                1.0,
+                &self.logits[..b * s],
+                &self.wi[..b * d],
+                0.0,
+                &mut self.dwo[..s * d],
+            );
+        }
 
         // Scatter-add (one Hogwild update per touched row).
         self.scatter_dwi(model, &w.inputs);
@@ -316,6 +370,7 @@ impl Backend for GemmBackend {
         }
         self.dwo_uniq[..u * d].fill(0.0);
 
+        let fused = self.use_fused();
         for w in 0..arena.len() {
             let b = arena.inputs_of(w).len();
             debug_assert!(b >= 1 && b <= arena.b_cap());
@@ -326,6 +381,26 @@ impl Backend for GemmBackend {
                 let row = unsafe { model.row_in(inp) };
                 self.wi[i * d..(i + 1) * d].copy_from_slice(row);
             }
+
+            if fused {
+                // One single-pass kernel call that reads Wo rows and
+                // accumulates dWo THROUGH the dedup slots — no per-window
+                // Wo block assembly, no per-window dWo accumulation pass.
+                simd::sgns_fused(
+                    s,
+                    d,
+                    lr,
+                    &self.wi[..b * d],
+                    &self.wo_uniq[..u * d],
+                    &self.out_slots[w * s..(w + 1) * s],
+                    &mut self.logits[..b * s],
+                    &mut self.dwi[..b * d],
+                    &mut self.dwo_uniq[..u * d],
+                );
+                self.scatter_dwi(model, arena.inputs_of(w));
+                continue;
+            }
+
             // Assemble the window's Wo block from the L1-hot dedup copy.
             let slots = &self.out_slots[w * s..(w + 1) * s];
             for (j, &slot) in slots.iter().enumerate() {
@@ -541,6 +616,97 @@ mod tests {
         // And the table mode must actually learn.
         let sim = dot(m_table.m_in().row(1), m_table.m_out().row(10));
         assert!(sim > 0.4, "table-mode sim {sim}");
+    }
+
+    /// The fused single-pass kernel and the ablation-preserved gemm3
+    /// chain must train the same model, window path and arena path alike
+    /// (the arena case exercises slot-indirected reads/accumulation and a
+    /// duplicated negative, i.e. the kernel's sequential fallback).
+    #[test]
+    fn fused_matches_gemm3_both_paths() {
+        let dim = 24;
+        let lr = 0.05f32;
+        let windows = vec![
+            window(&[1, 2, 3], 10, &[20, 21, 21, 22, 23]), // dup negative
+            window(&[4], 11, &[20, 24, 25, 26, 27]),
+            window(&[5, 6, 7, 8], 12, &[21, 22, 28, 29, 20]),
+        ];
+        for arena_path in [false, true] {
+            let mut m_fused = SharedModel::init(40, dim, 77);
+            let mut m_gemm3 = SharedModel::init(40, dim, 77);
+            // Prewarm M_out identically (word2vec zero-init would zero
+            // every dWi and hide the input-gradient half of the kernel).
+            for m in [&mut m_fused, &mut m_gemm3] {
+                for r in 0..40u32 {
+                    for (i, x) in
+                        m.m_out_mut().row_mut(r).iter_mut().enumerate()
+                    {
+                        *x = 0.02
+                            * ((r as f32) - 19.5)
+                            * if i % 2 == 0 { 0.05 } else { -0.05 };
+                    }
+                }
+            }
+            let mut gf =
+                GemmBackend::new(dim, 16, 6).with_kernel(KernelMode::Fused);
+            let mut g3 =
+                GemmBackend::new(dim, 16, 6).with_kernel(KernelMode::Gemm3);
+            if arena_path {
+                let arena = arena_of(&windows, 16, 6);
+                gf.process_arena(&m_fused, &arena, lr).unwrap();
+                g3.process_arena(&m_gemm3, &arena, lr).unwrap();
+            } else {
+                gf.process(&m_fused, &windows, lr).unwrap();
+                g3.process(&m_gemm3, &windows, lr).unwrap();
+            }
+            let mut moved = false;
+            let init = SharedModel::init(40, dim, 77);
+            for r in 0..40u32 {
+                for (x, y) in
+                    m_fused.m_in().row(r).iter().zip(m_gemm3.m_in().row(r))
+                {
+                    assert!(
+                        (x - y).abs() < 1e-5,
+                        "arena={arena_path} m_in row {r}: {x} vs {y}"
+                    );
+                }
+                for (x, y) in
+                    m_fused.m_out().row(r).iter().zip(m_gemm3.m_out().row(r))
+                {
+                    assert!(
+                        (x - y).abs() < 1e-5,
+                        "arena={arena_path} m_out row {r}: {x} vs {y}"
+                    );
+                }
+                moved |= m_fused
+                    .m_in()
+                    .row(r)
+                    .iter()
+                    .zip(init.m_in().row(r))
+                    .any(|(a, b)| (a - b).abs() > 1e-6);
+            }
+            assert!(moved, "arena={arena_path}: model did not move");
+        }
+    }
+
+    /// `--sigmoid table` forces the gemm3 chain even under kernel Auto
+    /// (the fused kernel evaluates the exact sigmoid only) — the model
+    /// must still train.
+    #[test]
+    fn table_sigmoid_takes_gemm3_path_under_auto() {
+        let dim = 16;
+        let model = SharedModel::init(30, dim, 8);
+        let mut g = GemmBackend::new(dim, 16, 6)
+            .with_kernel(KernelMode::Auto)
+            .with_sigmoid(SigmoidMode::Table);
+        assert!(!g.use_fused());
+        let w = window(&[1, 2, 3], 10, &[20, 21, 22, 23, 24]);
+        let arena = arena_of(std::slice::from_ref(&w), 16, 6);
+        for _ in 0..50 {
+            g.process_arena(&model, &arena, 0.05).unwrap();
+        }
+        let sim = dot(model.m_in().row(1), model.m_out().row(10));
+        assert!(sim > 0.4, "table-under-auto sim {sim}");
     }
 
     #[test]

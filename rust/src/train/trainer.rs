@@ -85,7 +85,8 @@ pub fn train(
             BackendKind::Gemm => Box::new(
                 GemmBackend::new(cfg.dim, cfg.batch, cfg.samples())
                     .with_rule(UpdateRule::Plain)
-                    .with_sigmoid(cfg.sigmoid_mode),
+                    .with_sigmoid(cfg.sigmoid_mode)
+                    .with_kernel(cfg.kernel),
             ),
             BackendKind::Pjrt => Box::new(PjrtBackend::new(
                 pjrt_exe.as_ref().expect("pjrt exe prepared above").clone(),
@@ -131,7 +132,11 @@ pub fn train_with_factory<'f>(
                     BatchBuilder::new(sampler, cfg.window, cfg.batch, cfg.negative);
                 // Reused across the whole shard: zero allocations per
                 // window at steady state (tests/alloc_steadystate.rs).
-                let mut arena = SuperbatchArena::with_capacity(
+                // Sentence-slack sizing: `fill_arena` appends a whole
+                // sentence BEFORE the superbatch check below, so the
+                // arena must absorb a MAX_SENTENCE_LEN overshoot without
+                // reallocating.
+                let mut arena = SuperbatchArena::with_sentence_slack(
                     cfg.superbatch,
                     cfg.batch,
                     cfg.samples(),
@@ -232,6 +237,31 @@ mod tests {
             let init = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
             assert_ne!(model.m_in().data(), init.m_in().data());
             assert!(out.final_lr < cfg.lr);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Both kernel organisations drive the full trainer: identical word
+    /// accounting, and both move the model off its init.
+    #[test]
+    fn gemm_kernel_modes_both_train() {
+        let (path, vocab) = tiny_corpus();
+        for kernel in [
+            crate::config::KernelMode::Fused,
+            crate::config::KernelMode::Gemm3,
+        ] {
+            let mut cfg = TrainConfig::test_tiny();
+            cfg.backend = crate::config::Backend::Gemm;
+            cfg.kernel = kernel;
+            cfg.sample = 0.0;
+            let (model, out) = run(&cfg, &path, &vocab);
+            assert_eq!(
+                out.snapshot.words,
+                vocab.total_words(),
+                "kernel {kernel}: word count"
+            );
+            let init = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+            assert_ne!(model.m_in().data(), init.m_in().data());
         }
         std::fs::remove_file(&path).ok();
     }

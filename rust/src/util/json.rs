@@ -75,6 +75,30 @@ impl Json {
         self.get(key)
             .ok_or_else(|| anyhow::anyhow!("missing json field '{key}'"))
     }
+
+    /// Build an object from `(key, value)` pairs — the bench emitters'
+    /// construction helper (`serde_json::json!` is not vendored offline).
+    pub fn obj<I>(pairs: I) -> Json
+    where
+        I: IntoIterator<Item = (&'static str, Json)>,
+    {
+        Json::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    /// Shorthand numeric constructor.
+    pub fn num<T: Into<f64>>(x: T) -> Json {
+        Json::Num(x.into())
+    }
+
+    /// Shorthand string constructor.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
 }
 
 struct Parser<'a> {
@@ -356,6 +380,18 @@ mod tests {
             Json::parse(r#""A""#).unwrap(),
             Json::Str("A".into())
         );
+    }
+
+    #[test]
+    fn obj_builder_constructs_and_serialises() {
+        let j = Json::obj([
+            ("name", Json::str("fused")),
+            ("x", Json::num(1.5)),
+            ("rows", Json::Arr(vec![Json::num(1), Json::num(2)])),
+        ]);
+        assert_eq!(j.get("name").unwrap().as_str(), Some("fused"));
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
     }
 
     #[test]

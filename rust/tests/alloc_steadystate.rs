@@ -1,19 +1,22 @@
 //! Acceptance gate for the zero-allocation superbatch pipeline: at steady
-//! state, filling the arena and processing it through the GEMM backend
-//! performs ZERO heap allocations per window.
+//! state, filling the arena and processing it through the GEMM backend —
+//! fused kernel and gemm3 chain alike — performs ZERO heap allocations
+//! per window, INCLUDING when clipped-at-maximum sentences overshoot the
+//! superbatch width (the sentence-slack arena sizing).
 //!
 //! A counting `#[global_allocator]` wraps `System`; after a warmup that
-//! reaches every buffer's high-water capacity, fifty further superbatch
-//! rounds must leave the allocation counter untouched.  This file holds
-//! exactly ONE test: other tests in the same binary would run on sibling
-//! threads and allocate concurrently, poisoning the counter.
+//! reaches every buffer's high-water capacity, further superbatch rounds
+//! must leave the allocation counter untouched.  This file holds exactly
+//! ONE test: other tests in the same binary would run on sibling threads
+//! and allocate concurrently, poisoning the counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use pw2v::config::SigmoidMode;
+use pw2v::config::{KernelMode, SigmoidMode};
 use pw2v::corpus::vocab::Vocab;
+use pw2v::corpus::MAX_SENTENCE_LEN;
 use pw2v::model::SharedModel;
 use pw2v::sampling::batch::{BatchBuilder, SuperbatchArena};
 use pw2v::sampling::unigram::UnigramSampler;
@@ -121,4 +124,77 @@ fn steady_state_training_loop_allocates_nothing() {
          ({windows_per_round} windows each)",
         after - before
     );
+
+    // ------------------------------------------------------------------
+    // Long-sentence corpus: sentences clipped at MAX_SENTENCE_LEN land in
+    // the arena as ONE append of ~1000 windows, far past the superbatch
+    // width.  The trainer's sentence-slack sizing must absorb that
+    // without the arena ever reallocating — even on the VERY FIRST fill,
+    // before any warmup (this is the regression the exactly-sized arena
+    // had).
+    // ------------------------------------------------------------------
+    let long_sentences: Vec<Vec<u32>> = (0..3)
+        .map(|s: u32| {
+            (0..MAX_SENTENCE_LEN as u32)
+                .map(|i| (i.wrapping_mul(11).wrapping_add(s * 29)) % vocab_size as u32)
+                .collect()
+        })
+        .collect();
+    let mut long_arena =
+        SuperbatchArena::with_sentence_slack(superbatch, batch, 1 + negative);
+    {
+        let mut rng = Xoshiro256ss::new(123);
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        builder.fill_arena(&long_sentences[0], &mut rng, &mut long_arena);
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert!(long_arena.len() >= superbatch, "overshoot not exercised");
+        assert_eq!(
+            after - before,
+            0,
+            "sentence-slack arena reallocated on a first-fill overshoot \
+             ({} windows)",
+            long_arena.len()
+        );
+        long_arena.clear();
+    }
+
+    // Both kernel organisations must be allocation-free at steady state on
+    // the long-sentence stream (fused is the default hot path; gemm3 is
+    // the preserved ablation chain).
+    for kernel in [KernelMode::Fused, KernelMode::Gemm3] {
+        let mut backend = GemmBackend::new(dim, batch, 1 + negative)
+            .with_sigmoid(SigmoidMode::Exact)
+            .with_kernel(kernel);
+        let mut long_round =
+            |arena: &mut SuperbatchArena, backend: &mut GemmBackend| {
+                let mut rng = Xoshiro256ss::new(321);
+                for sent in &long_sentences {
+                    builder.fill_arena(sent, &mut rng, arena);
+                    if arena.len() >= superbatch {
+                        backend.process_arena(&model, arena, 0.025).unwrap();
+                        arena.clear();
+                    }
+                }
+                if !arena.is_empty() {
+                    backend.process_arena(&model, arena, 0.025).unwrap();
+                    arena.clear();
+                }
+            };
+        // Warmup reaches the backend scratch high-water (wo_uniq etc.).
+        for _ in 0..3 {
+            long_round(&mut long_arena, &mut backend);
+        }
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..20 {
+            long_round(&mut long_arena, &mut backend);
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state long-sentence loop allocated {} times \
+             (kernel {kernel:?})",
+            after - before
+        );
+    }
 }

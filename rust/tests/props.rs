@@ -17,6 +17,17 @@ fn randv(rng: &mut Xoshiro256ss, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.next_f32() - 0.5).collect()
 }
 
+/// The SIMD dispatch level is process-global; tests that pin it must not
+/// interleave.  Every `configure`-calling test takes this lock.
+static DISPATCH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// `PW2V_SIMD=scalar` (the CI dispatch-matrix leg) restricts the
+/// configure-driven tests to the portable kernels, so the whole suite is
+/// exercised once per dispatch level.
+fn scalar_only() -> bool {
+    std::env::var("PW2V_SIMD").map(|v| v == "scalar").unwrap_or(false)
+}
+
 /// GEMM kernels agree with the naive triple loop on random shapes.
 #[test]
 fn prop_gemm_matches_naive() {
@@ -64,14 +75,13 @@ fn prop_gemm_matches_naive() {
 /// gathered model blocks give no alignment guarantee, so the unaligned
 /// path is the production path.
 ///
-/// One test drives all kernels: it pins the process-global dispatch
-/// level, so splitting it across #[test]s would race.
+/// Tests that pin the process-global dispatch level serialise on
+/// [`DISPATCH_LOCK`].
 #[test]
 fn prop_simd_matches_scalar_on_awkward_shapes() {
-    // This process has exactly one configure caller (this test), so
-    // pinned-level assertions are race-free here — unlike the lib's unit
-    // tests, where `train` calls configure on sibling threads.
-    //
+    // Pinning the process-global dispatch level must not interleave with
+    // the fused-parity test below.
+    let _guard = DISPATCH_LOCK.lock().unwrap();
     // First: `--simd scalar` must reproduce the portable kernels BIT FOR
     // BIT through the dispatcher.
     {
@@ -92,6 +102,11 @@ fn prop_simd_matches_scalar_on_awkward_shapes() {
         );
     }
 
+    if scalar_only() {
+        simd::configure(SimdMode::Auto).unwrap();
+        eprintln!("PW2V_SIMD=scalar: scalar dispatch verified, avx2 legs skipped");
+        return;
+    }
     if simd::configure(SimdMode::Avx2).is_err() {
         simd::configure(SimdMode::Auto).unwrap();
         eprintln!("skipping: this CPU has no avx2+fma");
@@ -189,6 +204,120 @@ fn prop_simd_matches_scalar_on_awkward_shapes() {
         }
     }
 
+    simd::configure(SimdMode::Auto).unwrap();
+}
+
+/// The fused single-pass kernel matches the gemm3 chain
+/// (`gemm_nt → sgns_err → gemm_nn → gemm_tn` + slot accumulation) within
+/// 1e-4 across the awkward-shape matrix — B=1, odd S, D not a multiple of
+/// 8, UNALIGNED slice starts, shuffled slot indirection, and duplicated
+/// slots (two identical negative draws in one window, the kernel's
+/// sequential-fallback path) — under every dispatch level this CPU has.
+#[test]
+fn prop_fused_matches_gemm3_chain() {
+    let _guard = DISPATCH_LOCK.lock().unwrap();
+    let mut modes = vec![SimdMode::Scalar];
+    if !scalar_only() && simd::configure(SimdMode::Avx2).is_ok() {
+        modes.push(SimdMode::Avx2);
+    }
+    let close = |x: f32, y: f32, what: &str| {
+        assert!(
+            (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+            "{what}: fused {x} vs gemm3 {y}"
+        );
+    };
+    // (b, s, d): paper shape, B=1, odd S, D % 8 != 0, tiny everything.
+    let shapes: &[(usize, usize, usize)] = &[
+        (16, 6, 300),
+        (1, 6, 300),
+        (1, 2, 8),
+        (3, 5, 7),
+        (16, 6, 299),
+        (16, 5, 301),
+        (7, 3, 64),
+        (4, 9, 17),
+        (5, 6, 31),
+        (2, 7, 1),
+    ];
+    let mut rng = Xoshiro256ss::new(0xF0CE);
+    for &mode in &modes {
+        simd::configure(mode).unwrap();
+        for &(b, s, d) in shapes {
+            let u = s + 3; // dedup block larger than the window's slot set
+            for off in 0..2usize {
+                for dup in [false, true] {
+                    // Shuffled slot indirection; optionally force a
+                    // duplicate (legal: repeated negative draw).
+                    let mut slots: Vec<u32> = (0..u as u32).collect();
+                    rng.shuffle(&mut slots);
+                    let mut slots = slots[..s].to_vec();
+                    if dup && s >= 2 {
+                        // `s / 2` self-assigns when s == 2, so fall back
+                        // to duplicating slot 0 — a real duplicate in
+                        // every case.
+                        let src = if s / 2 == s - 1 { 0 } else { s / 2 };
+                        slots[s - 1] = slots[src];
+                    }
+                    let wibuf = randv(&mut rng, b * d + off);
+                    let wobuf = randv(&mut rng, u * d + off);
+                    let wi = &wibuf[off..];
+                    let wo = &wobuf[off..];
+                    let lr = 0.025f32;
+
+                    // gemm3 chain, exactly as the arena path runs it.
+                    let mut wo_blk = vec![0.0f32; s * d];
+                    for (j, &slot) in slots.iter().enumerate() {
+                        let r = slot as usize * d;
+                        wo_blk[j * d..(j + 1) * d]
+                            .copy_from_slice(&wo[r..r + d]);
+                    }
+                    let mut logits = vec![0.0f32; b * s];
+                    simd::gemm_nt(b, s, d, 1.0, wi, &wo_blk, 0.0, &mut logits);
+                    simd::sgns_err(&mut logits, s, lr);
+                    let mut want_dwi = vec![0.0f32; b * d];
+                    simd::gemm_nn(
+                        b, d, s, 1.0, &logits, &wo_blk, 0.0, &mut want_dwi,
+                    );
+                    let mut dwo_blk = vec![0.0f32; s * d];
+                    simd::gemm_tn(s, d, b, 1.0, &logits, wi, 0.0, &mut dwo_blk);
+                    let mut want_dwo = vec![0.0f32; u * d];
+                    for (j, &slot) in slots.iter().enumerate() {
+                        let r = slot as usize * d;
+                        simd::axpy(
+                            1.0,
+                            &dwo_blk[j * d..(j + 1) * d],
+                            &mut want_dwo[r..r + d],
+                        );
+                    }
+
+                    // Fused single call (err scratch deliberately dirty).
+                    let mut err = randv(&mut rng, b * s);
+                    let mut got_dwi = randv(&mut rng, b * d);
+                    let mut got_dwo = vec![0.0f32; u * d];
+                    simd::sgns_fused(
+                        s,
+                        d,
+                        lr,
+                        wi,
+                        wo,
+                        &slots,
+                        &mut err,
+                        &mut got_dwi,
+                        &mut got_dwo,
+                    );
+
+                    let what =
+                        format!("({b},{s},{d}) off={off} dup={dup} {mode:?}");
+                    for i in 0..b * d {
+                        close(got_dwi[i], want_dwi[i], &format!("dwi {what} i={i}"));
+                    }
+                    for i in 0..u * d {
+                        close(got_dwo[i], want_dwo[i], &format!("dwo {what} i={i}"));
+                    }
+                }
+            }
+        }
+    }
     simd::configure(SimdMode::Auto).unwrap();
 }
 
