@@ -8,6 +8,8 @@
 //! the repo root (the machine-readable perf trajectory).
 
 use pw2v::bench::{speedup, time, BenchTable, ThroughputReport};
+use pw2v::corpus::encoded::EncodedCorpus;
+use pw2v::corpus::reader::SentenceReader;
 use pw2v::corpus::vocab::Vocab;
 use pw2v::linalg::simd::{self, SimdMode};
 use pw2v::linalg::{axpy, dot, gemm_nn, gemm_nt, gemm_tn};
@@ -29,6 +31,7 @@ fn main() -> anyhow::Result<()> {
     let mut report = args.flag("json").then(ThroughputReport::open_at_repo_root);
     simd_dispatch_bench(&mut report)?;
     sgns_window_ablation(&mut report)?;
+    corpus_cache_bench(&mut report)?;
     gemm_bench()?;
     vecops_bench()?;
     sampler_bench()?;
@@ -298,6 +301,98 @@ fn simd_dispatch_bench(
             );
         }
     }
+    Ok(())
+}
+
+/// Ingest-layer contrast on the standard 2M-token workload: the one-time
+/// encode cost (MB/s of source text) vs the per-epoch read cost of the
+/// streaming text path (tokenize + hash every token) and the encoded
+/// `u32` cache (sequential id scan, zero hashing).  `--json` lands all
+/// three in `BENCH_throughput.json` — the cached/text read ratio is the
+/// epoch-2+ ingest speedup the corpus-cache PR claims.
+fn corpus_cache_bench(
+    report: &mut Option<ThroughputReport>,
+) -> anyhow::Result<()> {
+    let wl = pw2v::bench::standard_workload()?;
+    let cache = std::env::temp_dir().join(format!(
+        "pw2v_micro_cache_{}.pw2v.u32",
+        std::process::id()
+    ));
+    let mut stats = None;
+    let st_encode = time(0, 3, || {
+        stats = Some(EncodedCorpus::build(&wl.corpus, &wl.vocab, &cache).unwrap());
+    });
+    let stats = stats.expect("at least one encode iteration ran");
+    let enc = EncodedCorpus::open(&cache, &wl.vocab)?;
+
+    let mut sent: Vec<u32> = Vec::new();
+    let mut tokens = 0u64;
+    let st_cached = time(1, 5, || {
+        tokens = 0;
+        let mut r = enc.reader();
+        while r.next_sentence_into(&mut sent).unwrap() {
+            tokens += sent.len() as u64;
+        }
+        std::hint::black_box(tokens);
+    });
+    let st_text = time(1, 5, || {
+        let mut n = 0u64;
+        let mut r = SentenceReader::open(&wl.corpus, &wl.vocab).unwrap();
+        while r.next_sentence_into(&mut sent).unwrap() {
+            n += sent.len() as u64;
+        }
+        std::hint::black_box(n);
+    });
+
+    let encode_mbs = stats.text_bytes as f64 / 1e6 / st_encode.median;
+    let text_wps = tokens as f64 / st_text.median;
+    let cached_wps = tokens as f64 / st_cached.median;
+    let ratio = speedup(&st_cached, &st_text); // >1: cached read wins
+
+    let mut table = BenchTable::new(
+        "micro_corpus_cache",
+        &["stage", "metric", "value"],
+    );
+    table.row(vec![
+        "encode (one-time)".into(),
+        "MB/s of text".into(),
+        format!("{encode_mbs:.0}"),
+    ]);
+    table.row(vec![
+        "read text (per epoch)".into(),
+        "words/sec".into(),
+        si(text_wps),
+    ]);
+    table.row(vec![
+        "read cached (per epoch)".into(),
+        "words/sec".into(),
+        si(cached_wps),
+    ]);
+    table.row(vec![
+        "cached/text".into(),
+        "ratio".into(),
+        format!("{ratio:.2}x"),
+    ]);
+    table.finish()?;
+    println!(
+        "corpus cache: encode {encode_mbs:.0} MB/s once, then epoch reads \
+         {ratio:.2}x faster than streaming text"
+    );
+    if let Some(r) = report.as_mut() {
+        r.set(
+            "micro_corpus_cache",
+            Json::obj([
+                ("text_bytes", Json::num(stats.text_bytes as f64)),
+                ("sentences", Json::num(stats.sentences as f64)),
+                ("tokens", Json::num(stats.tokens as f64)),
+                ("encode_mb_per_sec", Json::num(encode_mbs)),
+                ("text_read_words_per_sec", Json::num(text_wps)),
+                ("cached_read_words_per_sec", Json::num(cached_wps)),
+                ("cached_over_text", Json::num(ratio)),
+            ]),
+        );
+    }
+    std::fs::remove_file(&cache).ok();
     Ok(())
 }
 

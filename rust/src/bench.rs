@@ -150,18 +150,14 @@ impl ThroughputReport {
     /// the trajectory file lives one level up), else the current
     /// directory.
     pub fn open_at_repo_root() -> Self {
-        let mut dir =
-            std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
-        for _ in 0..4 {
-            if dir.join("ROADMAP.md").exists() {
-                break;
-            }
-            match dir.parent() {
-                Some(p) => dir = p.to_path_buf(),
-                None => break,
-            }
-        }
-        Self::at(dir.join("BENCH_throughput.json"))
+        let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        let root = cwd
+            .ancestors()
+            .take(5)
+            .find(|dir| dir.join("ROADMAP.md").exists())
+            .unwrap_or(cwd.as_path())
+            .to_path_buf();
+        Self::at(root.join("BENCH_throughput.json"))
     }
 
     /// Replace one top-level section.

@@ -12,7 +12,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::str::FromStr;
 
 use crate::linalg::simd::SimdMode;
@@ -134,6 +134,49 @@ impl fmt::Display for KernelMode {
     }
 }
 
+/// Where the trainer reads sentences from (`--corpus-cache`): the
+/// streaming text path, or the pre-encoded `u32` cache
+/// (`corpus::encoded`) that deletes per-epoch tokenization and vocab
+/// hashing from the hot loop.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum CorpusCacheMode {
+    /// Stream the text corpus every epoch (the pre-cache behavior,
+    /// bit-for-bit).
+    #[default]
+    Off,
+    /// Build (or reuse) `<corpus>.pw2v.u32` next to the input: built iff
+    /// missing, stale, or vocab-fingerprint-mismatched, then train from
+    /// it.
+    Auto,
+    /// Like `Auto` but the cache lives at this explicit path.
+    Path(PathBuf),
+}
+
+impl FromStr for CorpusCacheMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "" => anyhow::bail!("--corpus-cache needs off|auto|<path>"),
+            "off" | "none" => Ok(CorpusCacheMode::Off),
+            "auto" => Ok(CorpusCacheMode::Auto),
+            // Anything else is a cache path.  (A file literally named
+            // `off` or `auto` can be addressed as `./off`.)
+            _ => Ok(CorpusCacheMode::Path(PathBuf::from(s))),
+        }
+    }
+}
+
+impl fmt::Display for CorpusCacheMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CorpusCacheMode::Off => f.write_str("off"),
+            CorpusCacheMode::Auto => f.write_str("auto"),
+            CorpusCacheMode::Path(p) => write!(f, "{}", p.display()),
+        }
+    }
+}
+
 /// Which sigmoid the GEMM trainer's fused error kernel evaluates
 /// (ablation: the original's EXP_TABLE approximation vs the exact form).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -211,6 +254,10 @@ pub struct TrainConfig {
     /// Kernel organisation in the GEMM backend (`--kernel`): the fused
     /// single-pass window kernel vs the ablation-preserved gemm3 chain.
     pub kernel: KernelMode,
+    /// Corpus ingest backend (`--corpus-cache {off,auto,<path>}`): stream
+    /// the text file per epoch, or train from the pre-encoded `u32`
+    /// cache.
+    pub corpus_cache: CorpusCacheMode,
 }
 
 impl Default for TrainConfig {
@@ -235,6 +282,7 @@ impl Default for TrainConfig {
             simd: SimdMode::Auto,
             sigmoid_mode: SigmoidMode::Exact,
             kernel: KernelMode::Auto,
+            corpus_cache: CorpusCacheMode::Off,
         }
     }
 }
@@ -290,6 +338,9 @@ impl TrainConfig {
         }
         if let Some(k) = a.opt::<KernelMode>("kernel")? {
             self.kernel = k;
+        }
+        if let Some(c) = a.opt::<CorpusCacheMode>("corpus-cache")? {
+            self.corpus_cache = c;
         }
         self.validate()
     }
@@ -423,6 +474,27 @@ mod tests {
         assert!(c.validate().is_err());
         c.kernel = KernelMode::Auto;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn corpus_cache_knob_parsing() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.corpus_cache, CorpusCacheMode::Off);
+        let a = Args::parse(
+            "--corpus-cache auto".split_whitespace().map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.corpus_cache, CorpusCacheMode::Auto);
+        assert_eq!(
+            "OFF".parse::<CorpusCacheMode>().unwrap(),
+            CorpusCacheMode::Off
+        );
+        assert_eq!(
+            "/tmp/c.u32".parse::<CorpusCacheMode>().unwrap(),
+            CorpusCacheMode::Path(PathBuf::from("/tmp/c.u32"))
+        );
+        assert!("".parse::<CorpusCacheMode>().is_err());
+        assert_eq!(CorpusCacheMode::Auto.to_string(), "auto");
     }
 
     #[test]

@@ -1,0 +1,658 @@
+//! Pre-encoded `u32` corpus cache: the ingest layer's second backend.
+//!
+//! The streaming text path re-reads the corpus and re-hashes every token
+//! through the vocabulary on every epoch and every shard pass.  Ji et
+//! al. train from a pre-tokenized integer stream so the per-word cost is
+//! pure SGNS work; this module moves our encoding out of the epoch loop
+//! the same way.  A one-time builder pass streams the text corpus through
+//! the existing [`SentenceReader`] and writes `<corpus>.pw2v.u32`:
+//! out-of-vocabulary tokens already dropped, sentences already clipped to
+//! [`MAX_SENTENCE_LEN`], every surviving sentence stored as packed
+//! little-endian `u32` ids.  Epoch 2+ I/O shrinks to a sequential `u32`
+//! scan with ZERO vocabulary lookups (asserted by
+//! `tests/corpus_parity.rs` via the debug `Vocab::id_lookups` counter).
+//!
+//! ## File format (version 1)
+//!
+//! ```text
+//! offset  size             field
+//! 0       8                magic "PW2VU32\0"
+//! 8       4                version (u32 LE) = 1
+//! 12      4                max token id in the payload (u32 LE; 0 when
+//!                          n_tokens = 0) — lets `open` bound-check the
+//!                          whole id stream in O(1) instead of scanning
+//!                          gigabytes of mmapped tokens at startup
+//! 16      8                vocab fingerprint (u64 LE, Vocab::fingerprint)
+//! 24      8                source text length in bytes (u64 LE)
+//! 32      8                n_sentences (u64 LE)
+//! 40      8                n_tokens (u64 LE)
+//! 48      4·n_tokens       token ids (u32 LE, concatenated sentences)
+//! …       8·n_sentences    per-sentence source-line byte offset (u64 LE)
+//! …       8·(n_sentences+1) token-prefix index (u64 LE, starts[0]=0,
+//!                          starts[n]=n_tokens)
+//! ```
+//!
+//! The per-sentence LINE OFFSET into the source text file is the key to
+//! drop-in sharding: `trainer.rs` and `dist/train.rs` partition the
+//! corpus into byte ranges of the TEXT file, and
+//! [`EncodedCorpus::reader_range`] selects exactly the sentences whose
+//! line offset falls in `[start, end)` — the same rule the (fixed)
+//! [`SentenceReader::open_range`] applies — so every shard split yields
+//! bit-identical sentence streams on both paths.
+//!
+//! Readers mmap the cache on 64-bit unix (raw `mmap(2)`/`munmap(2)`
+//! through the libc the std runtime already links — no new crate), and
+//! fall back to one buffered read into memory elsewhere, under
+//! `--no-default-features` (the `mmap` feature), or with
+//! `PW2V_CORPUS_MMAP=off` (the CI leg exercising the portable reader).
+//! Caches that fail validation (wrong magic/version, truncated body,
+//! stale vocab fingerprint, changed source length, zero sentences,
+//! out-of-range ids) are never trained from: `auto` mode preserves them
+//! as `<cache>.bak` — the same discipline as `BENCH_throughput.json` —
+//! and rebuilds.
+
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use super::reader::{SentenceReader, MAX_SENTENCE_LEN};
+use super::vocab::Vocab;
+
+/// Identifies the file as a pw2v u32 corpus cache.
+pub const MAGIC: [u8; 8] = *b"PW2VU32\0";
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Suffix `auto` mode appends to the corpus path.
+pub const CACHE_SUFFIX: &str = ".pw2v.u32";
+
+const HEADER_LEN: usize = 48;
+
+/// What one builder pass did (the microbench derives encode MB/s).
+#[derive(Clone, Copy, Debug)]
+pub struct BuildStats {
+    pub sentences: u64,
+    pub tokens: u64,
+    /// Byte length of the source text file.
+    pub text_bytes: u64,
+    pub secs: f64,
+}
+
+/// A validated, memory-mapped (or memory-loaded) encoded corpus.
+///
+/// Shared by reference across all worker threads: the backing bytes are
+/// immutable for the mapping's lifetime, and each worker iterates its own
+/// [`EncodedSentenceReader`] cursor.
+pub struct EncodedCorpus {
+    bytes: Bytes,
+    text_len: u64,
+    n_sentences: u64,
+    n_tokens: u64,
+    off_off: usize,
+    starts_off: usize,
+}
+
+impl EncodedCorpus {
+    /// Where `auto` mode puts the cache: `<corpus>.pw2v.u32` next to the
+    /// input.
+    pub fn cache_path_for(corpus: &Path) -> PathBuf {
+        let mut os = corpus.as_os_str().to_os_string();
+        os.push(CACHE_SUFFIX);
+        PathBuf::from(os)
+    }
+
+    /// One-time encoding pass: stream `text` through the existing
+    /// [`SentenceReader`] (exactly once) and write the cache to `out`.
+    /// The write goes to `<out>.tmp` first and is renamed into place, so
+    /// a crashed build never leaves a half-written cache that a later
+    /// `auto` run could pick up.
+    pub fn build(text: &Path, vocab: &Vocab, out: &Path) -> anyhow::Result<BuildStats> {
+        let t0 = Instant::now();
+        let text_len = std::fs::metadata(text)?.len();
+        let tmp = append_name(out, ".tmp");
+        let mut w = BufWriter::with_capacity(1 << 20, File::create(&tmp)?);
+        w.write_all(&MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        // max token id / n_sentences / n_tokens are not known until the
+        // pass completes; they are patched over these placeholders below.
+        w.write_all(&0u32.to_le_bytes())?;
+        w.write_all(&vocab.fingerprint().to_le_bytes())?;
+        w.write_all(&text_len.to_le_bytes())?;
+        w.write_all(&0u64.to_le_bytes())?;
+        w.write_all(&0u64.to_le_bytes())?;
+
+        let mut offsets: Vec<u64> = Vec::new();
+        let mut starts: Vec<u64> = vec![0];
+        let mut n_tokens = 0u64;
+        let mut max_id = 0u32;
+        let mut reader = SentenceReader::open(text, vocab)?;
+        let mut sent: Vec<u32> = Vec::with_capacity(MAX_SENTENCE_LEN);
+        while let Some(line_off) = reader.next_sentence_into_with_pos(&mut sent)? {
+            offsets.push(line_off);
+            n_tokens += sent.len() as u64;
+            starts.push(n_tokens);
+            for &id in &sent {
+                max_id = max_id.max(id);
+                w.write_all(&id.to_le_bytes())?;
+            }
+        }
+        for &o in &offsets {
+            w.write_all(&o.to_le_bytes())?;
+        }
+        for &s in &starts {
+            w.write_all(&s.to_le_bytes())?;
+        }
+        w.flush()?;
+        let mut f = w.into_inner().map_err(|e| e.into_error())?;
+        f.seek(SeekFrom::Start(12))?;
+        f.write_all(&max_id.to_le_bytes())?;
+        f.seek(SeekFrom::Start(32))?;
+        f.write_all(&(offsets.len() as u64).to_le_bytes())?;
+        f.write_all(&n_tokens.to_le_bytes())?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, out)?;
+        Ok(BuildStats {
+            sentences: offsets.len() as u64,
+            tokens: n_tokens,
+            text_bytes: text_len,
+            secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Open and fully validate a cache against `vocab`.  Every rejection
+    /// path here is exercised by `tests/corpus_parity.rs`.
+    pub fn open(path: &Path, vocab: &Vocab) -> anyhow::Result<Self> {
+        let inner = || -> anyhow::Result<Self> {
+            let bytes = load_bytes(path)?;
+            Self::parse(bytes, vocab)
+        };
+        inner().map_err(|e| e.context(format!("corpus cache {}", path.display())))
+    }
+
+    fn parse(bytes: Bytes, vocab: &Vocab) -> anyhow::Result<Self> {
+        let b: &[u8] = &bytes;
+        anyhow::ensure!(
+            b.len() >= HEADER_LEN,
+            "truncated: {} bytes, the header alone is {HEADER_LEN}",
+            b.len()
+        );
+        anyhow::ensure!(
+            b[..8] == MAGIC,
+            "bad magic: not a pw2v u32 corpus cache"
+        );
+        let version = u32::from_le_bytes(b[8..12].try_into().unwrap());
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported version {version} (this build reads {VERSION})"
+        );
+        let max_id = u32::from_le_bytes(b[12..16].try_into().unwrap());
+        let le64 = |at: usize| u64::from_le_bytes(b[at..at + 8].try_into().unwrap());
+        let fp = le64(16);
+        let expected_fp = vocab.fingerprint();
+        anyhow::ensure!(
+            fp == expected_fp,
+            "stale vocab fingerprint {fp:#018x} (current vocabulary is \
+             {expected_fp:#018x}); the cache was built under a different \
+             vocabulary"
+        );
+        let text_len = le64(24);
+        let n_sentences = le64(32);
+        let n_tokens = le64(40);
+        // u128 arithmetic: a corrupt header must fail the size check, not
+        // overflow it.
+        let expected = HEADER_LEN as u128
+            + 4 * n_tokens as u128
+            + 8 * n_sentences as u128
+            + 8 * (n_sentences as u128 + 1);
+        anyhow::ensure!(
+            b.len() as u128 == expected,
+            "truncated or corrupt: {} bytes on disk, header implies {expected}",
+            b.len()
+        );
+        anyhow::ensure!(
+            n_sentences > 0,
+            "zero sentences (source corpus empty or fully out-of-vocabulary); \
+             refusing to train from it"
+        );
+        // Out-of-range ids would index past the model matrices.  The
+        // builder records the payload's max id in the header, so this
+        // bound-check is O(1) — opening a multi-GB mmapped cache must not
+        // force a full sequential page-in before training starts.
+        anyhow::ensure!(
+            (max_id as usize) < vocab.len(),
+            "token ids out of range: payload max id {max_id}, vocabulary \
+             has {} entries",
+            vocab.len()
+        );
+        let off_off = HEADER_LEN + 4 * n_tokens as usize;
+        let starts_off = off_off + 8 * n_sentences as usize;
+        let c = Self {
+            bytes,
+            text_len,
+            n_sentences,
+            n_tokens,
+            off_off,
+            starts_off,
+        };
+        // The index scan below is O(n_sentences) — ~16 bytes per sentence,
+        // a few percent of the file — and is load-bearing: range sharding
+        // binary-searches `offsets`, so unsorted offsets would silently
+        // misroute whole shards.  The token payload itself is NOT scanned
+        // (see the max-id header check above).
+        anyhow::ensure!(c.token_start(0) == 0, "corrupt index: starts[0] != 0");
+        anyhow::ensure!(
+            c.token_start(n_sentences) == n_tokens,
+            "corrupt index: starts[n] != n_tokens"
+        );
+        let mut prev_off: Option<u64> = None;
+        for i in 0..n_sentences {
+            let o = c.offset(i);
+            anyhow::ensure!(
+                o < text_len,
+                "corrupt index: sentence {i} line offset {o} past source \
+                 length {text_len}"
+            );
+            if let Some(p) = prev_off {
+                anyhow::ensure!(
+                    o > p,
+                    "corrupt index: line offsets not strictly increasing at \
+                     sentence {i}"
+                );
+            }
+            prev_off = Some(o);
+            let lo = c.token_start(i);
+            let hi = c.token_start(i + 1);
+            anyhow::ensure!(
+                hi > lo && hi - lo <= MAX_SENTENCE_LEN as u64,
+                "corrupt index: sentence {i} spans tokens {lo}..{hi} \
+                 (must be 1..={MAX_SENTENCE_LEN})"
+            );
+        }
+        Ok(c)
+    }
+
+    /// Open a valid cache at `cache`, building (or rebuilding) it from
+    /// `text` when missing or stale.  Staleness: failed validation, a
+    /// changed source length, or a source file modified AFTER the cache
+    /// was written (catches same-length rewrites — e.g. a line-shuffled
+    /// corpus — that the fingerprint and length cannot see).  A
+    /// stale/corrupt cache is preserved as `<cache>.bak` before the
+    /// rebuild, like `BENCH_throughput.json` does for the perf
+    /// trajectory.  Returns the cache and whether this call (re)built it.
+    pub fn ensure(
+        text: &Path,
+        vocab: &Vocab,
+        cache: &Path,
+    ) -> anyhow::Result<(Self, bool)> {
+        let text_meta = std::fs::metadata(text)?;
+        let text_len = text_meta.len();
+        if cache.exists() {
+            // make(1)-style dependency rule; strict `>` so the cache a
+            // build finishes in the same mtime tick as its source read
+            // still counts as fresh.
+            let cache_mtime =
+                std::fs::metadata(cache).and_then(|m| m.modified());
+            let text_newer = match (text_meta.modified(), cache_mtime) {
+                (Ok(t), Ok(c)) => t > c,
+                // No mtime support on this platform/fs: fall back to the
+                // length + fingerprint checks alone.
+                _ => false,
+            };
+            let why = match Self::open(cache, vocab) {
+                Ok(c) if c.text_len() == text_len && !text_newer => {
+                    return Ok((c, false))
+                }
+                Ok(c) if c.text_len() != text_len => format!(
+                    "source text length changed ({} -> {text_len})",
+                    c.text_len()
+                ),
+                Ok(_) => "source text modified after the cache was built"
+                    .to_string(),
+                Err(e) => format!("{e:#}"),
+            };
+            let bak = append_name(cache, ".bak");
+            eprintln!(
+                "WARNING: corpus cache {} is stale ({why}); preserving it \
+                 as {} and rebuilding",
+                cache.display(),
+                bak.display()
+            );
+            std::fs::rename(cache, &bak)?;
+        }
+        let st = Self::build(text, vocab, cache)?;
+        eprintln!(
+            "encoded {} -> {}: {} sentences, {} tokens from {} text bytes \
+             in {:.2}s",
+            text.display(),
+            cache.display(),
+            st.sentences,
+            st.tokens,
+            st.text_bytes,
+            st.secs
+        );
+        Ok((Self::open(cache, vocab)?, true))
+    }
+
+    /// Byte length of the source text file (recorded at build time).
+    /// Sharding uses THIS length so text and encoded paths split the
+    /// corpus identically.
+    pub fn text_len(&self) -> u64 {
+        self.text_len
+    }
+
+    pub fn n_sentences(&self) -> u64 {
+        self.n_sentences
+    }
+
+    pub fn n_tokens(&self) -> u64 {
+        self.n_tokens
+    }
+
+    /// Cursor over the whole corpus.
+    pub fn reader(&self) -> EncodedSentenceReader<'_> {
+        EncodedSentenceReader {
+            corpus: self,
+            next: 0,
+            end: self.n_sentences,
+        }
+    }
+
+    /// Cursor over the sentences the text reader would yield for the
+    /// byte range `[start, end)` of the SOURCE file: exactly those whose
+    /// source line begins in the range.
+    pub fn reader_range(&self, start: u64, end: u64) -> EncodedSentenceReader<'_> {
+        let lo = self.lower_bound(start);
+        let hi = self.lower_bound(end).max(lo);
+        EncodedSentenceReader {
+            corpus: self,
+            next: lo,
+            end: hi,
+        }
+    }
+
+    /// First sentence index whose line offset is `>= target`.
+    fn lower_bound(&self, target: u64) -> u64 {
+        let (mut lo, mut hi) = (0u64, self.n_sentences);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.offset(mid) < target {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    fn le64_at(&self, at: usize) -> u64 {
+        u64::from_le_bytes(self.bytes[at..at + 8].try_into().unwrap())
+    }
+
+    /// Source-line byte offset of sentence `i`.
+    fn offset(&self, i: u64) -> u64 {
+        self.le64_at(self.off_off + 8 * i as usize)
+    }
+
+    /// Token-prefix index entry `i` (valid for `0..=n_sentences`).
+    fn token_start(&self, i: u64) -> u64 {
+        self.le64_at(self.starts_off + 8 * i as usize)
+    }
+
+    /// Copy sentence `i`'s ids into `out` (cleared first); allocation-free
+    /// once `out` has reached its high-water capacity.
+    fn sentence_into(&self, i: u64, out: &mut Vec<u32>) {
+        out.clear();
+        let t0 = self.token_start(i) as usize;
+        let t1 = self.token_start(i + 1) as usize;
+        let base = HEADER_LEN + 4 * t0;
+        let raw = &self.bytes[base..base + 4 * (t1 - t0)];
+        out.extend(
+            raw.chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap())),
+        );
+    }
+}
+
+/// Streaming cursor over a sentence range of an [`EncodedCorpus`].  Holds
+/// NO vocabulary reference: by construction the cached path cannot hash a
+/// token (the acceptance criterion "zero vocab lookups on epoch >= 2" is
+/// provable from this type alone).
+pub struct EncodedSentenceReader<'c> {
+    corpus: &'c EncodedCorpus,
+    next: u64,
+    /// One past the last sentence index of the range.
+    end: u64,
+}
+
+impl EncodedSentenceReader<'_> {
+    /// Same contract as [`SentenceReader::next_sentence_into`]: fill
+    /// `out` with the next sentence's ids, `false` at end of range.
+    /// (Infallible here; the `Result` keeps both readers interchangeable
+    /// behind `SentenceSource`.)
+    pub fn next_sentence_into(&mut self, out: &mut Vec<u32>) -> anyhow::Result<bool> {
+        if self.next >= self.end {
+            return Ok(false);
+        }
+        self.corpus.sentence_into(self.next, out);
+        self.next += 1;
+        Ok(true)
+    }
+
+    /// Sentences left in the range.
+    pub fn remaining(&self) -> u64 {
+        self.end - self.next
+    }
+
+    /// Drain the range into a Vec (tests/small corpora).
+    pub fn collect_sentences(mut self) -> anyhow::Result<Vec<Vec<u32>>> {
+        let mut out = Vec::new();
+        let mut sent = Vec::new();
+        while self.next_sentence_into(&mut sent)? {
+            out.push(sent.clone());
+        }
+        Ok(out)
+    }
+}
+
+/// Append `suffix` to a path's final component (`x.u32` -> `x.u32.bak`).
+fn append_name(path: &Path, suffix: &str) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(suffix);
+    PathBuf::from(os)
+}
+
+/// Backing storage for an open cache: a read-only mmap where available,
+/// else the file read into memory.
+enum Bytes {
+    Owned(Vec<u8>),
+    #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+    Mapped(mmap::Mmap),
+}
+
+impl std::ops::Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match self {
+            Bytes::Owned(v) => v,
+            #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+            Bytes::Mapped(m) => m.as_slice(),
+        }
+    }
+}
+
+fn load_bytes(path: &Path) -> anyhow::Result<Bytes> {
+    #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+    {
+        let off = matches!(
+            std::env::var("PW2V_CORPUS_MMAP").as_deref(),
+            Ok("off") | Ok("0")
+        );
+        if !off {
+            let f = File::open(path)?;
+            return Ok(Bytes::Mapped(mmap::Mmap::map(&f)?));
+        }
+    }
+    Ok(Bytes::Owned(std::fs::read(path)?))
+}
+
+/// Raw read-only file mapping.  `std` already links the platform libc, so
+/// declaring `mmap(2)`/`munmap(2)` directly keeps the offline build
+/// dependency-free (the constants below are the Linux/BSD values for
+/// 64-bit targets; other platforms take the buffered path).
+#[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+mod mmap {
+    use std::ffi::{c_int, c_void};
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, length: usize) -> c_int;
+    }
+
+    pub struct Mmap {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is PROT_READ and private; no writer exists for
+    // its lifetime, so shared immutable access from any thread is sound.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        pub fn map(f: &File) -> std::io::Result<Self> {
+            let len = f.metadata()?.len() as usize;
+            if len == 0 {
+                // mmap(2) rejects zero-length mappings.
+                return Ok(Self {
+                    ptr: std::ptr::null_mut(),
+                    len: 0,
+                });
+            }
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    f.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Self { ptr, len })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            if self.len == 0 {
+                return &[];
+            }
+            // SAFETY: `ptr` is a live PROT_READ mapping of `len` bytes.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            if self.len > 0 {
+                // SAFETY: `ptr`/`len` came from a successful mmap call.
+                let _ = unsafe { munmap(self.ptr, self.len) };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_tmp(name: &str, content: &str) -> PathBuf {
+        let path = std::env::temp_dir()
+            .join(format!("pw2v_enc_{}_{name}", std::process::id()));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    fn vocab_abc() -> Vocab {
+        Vocab::build(["a", "b", "c"], 1)
+    }
+
+    #[test]
+    fn roundtrips_sentences_and_offsets() {
+        let path = write_tmp("rt.txt", "a b c\n\nZZ\nc b\n");
+        let cache = append_name(&path, CACHE_SUFFIX);
+        let vocab = vocab_abc();
+        let st = EncodedCorpus::build(&path, &vocab, &cache).unwrap();
+        assert_eq!(st.sentences, 2);
+        assert_eq!(st.tokens, 5);
+        assert_eq!(st.text_bytes, 14);
+        let enc = EncodedCorpus::open(&cache, &vocab).unwrap();
+        assert_eq!(enc.n_sentences(), 2);
+        assert_eq!(enc.n_tokens(), 5);
+        assert_eq!(enc.text_len(), 14);
+        let got = enc.reader().collect_sentences().unwrap();
+        let want = SentenceReader::open(&path, &vocab)
+            .unwrap()
+            .collect_sentences()
+            .unwrap();
+        assert_eq!(got, want);
+        // Range selection: the second sentence's line starts at byte 10.
+        assert_eq!(enc.reader_range(0, 10).remaining(), 1);
+        assert_eq!(enc.reader_range(10, 14).remaining(), 1);
+        assert_eq!(enc.reader_range(0, 11).remaining(), 2);
+        assert_eq!(enc.reader_range(11, 14).remaining(), 0);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&cache).ok();
+    }
+
+    #[test]
+    fn ensure_reuses_then_rebuilds_on_text_change() {
+        let path = write_tmp("ens.txt", "a b\nb c\n");
+        let cache = append_name(&path, CACHE_SUFFIX);
+        let vocab = vocab_abc();
+        let (_, built) = EncodedCorpus::ensure(&path, &vocab, &cache).unwrap();
+        assert!(built);
+        let (_, built) = EncodedCorpus::ensure(&path, &vocab, &cache).unwrap();
+        assert!(!built, "valid cache must be reused");
+        // Appending to the text invalidates via the recorded length.
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"c c\n").unwrap();
+        drop(f);
+        let (enc, built) = EncodedCorpus::ensure(&path, &vocab, &cache).unwrap();
+        assert!(built, "length change must trigger a rebuild");
+        assert_eq!(enc.n_sentences(), 3);
+        assert!(append_name(&cache, ".bak").exists(), "old cache preserved");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&cache).ok();
+        std::fs::remove_file(append_name(&cache, ".bak")).ok();
+    }
+
+    #[test]
+    fn empty_corpus_is_rejected() {
+        let path = write_tmp("empty.txt", "");
+        let cache = append_name(&path, CACHE_SUFFIX);
+        let vocab = vocab_abc();
+        EncodedCorpus::build(&path, &vocab, &cache).unwrap();
+        let err = EncodedCorpus::open(&cache, &vocab).unwrap_err();
+        assert!(format!("{err:#}").contains("zero sentences"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&cache).ok();
+    }
+}

@@ -1,14 +1,20 @@
-//! Corpus substrate: vocabulary, streaming readers, subsampling, sharding,
-//! and the synthetic latent-model corpus generator that substitutes for the
-//! paper's text8 / One-Billion-Words / 7.2B-word corpora (DESIGN.md §3, §6).
+//! Corpus substrate: vocabulary, streaming readers, the pre-encoded `u32`
+//! corpus cache (`encoded`/`source`: mmap-backed, zero per-epoch hashing),
+//! subsampling, sharding, and the synthetic latent-model corpus generator
+//! that substitutes for the paper's text8 / One-Billion-Words / 7.2B-word
+//! corpora (DESIGN.md §3, §6).
 
+pub mod encoded;
 pub mod reader;
 pub mod shard;
+pub mod source;
 pub mod subsample;
 pub mod synthetic;
 pub mod vocab;
 
+pub use encoded::{EncodedCorpus, EncodedSentenceReader};
 pub use reader::{SentenceReader, MAX_SENTENCE_LEN};
+pub use source::{Corpus, SentenceSource, SourceReader};
 pub use subsample::Subsampler;
 pub use synthetic::{LatentModel, SyntheticConfig};
 pub use vocab::Vocab;

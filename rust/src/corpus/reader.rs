@@ -8,7 +8,7 @@
 //! range and starts at the next line boundary, as the C code does).
 
 use std::fs::File;
-use std::io::{BufRead, BufReader, Seek, SeekFrom};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Seek, SeekFrom};
 use std::path::Path;
 
 use super::vocab::Vocab;
@@ -34,8 +34,16 @@ impl<'v> SentenceReader<'v> {
         Self::open_range(path, vocab, 0, len)
     }
 
-    /// Read `[start, end)`; if `start > 0`, skip to the next line boundary
-    /// (the partial first line belongs to the previous shard).
+    /// Read `[start, end)`; if `start` lands mid-line, skip to the next
+    /// line boundary (the partial first line belongs to the previous
+    /// shard).  A line that BEGINS exactly at `start` is owned by this
+    /// shard and is NOT skipped: the previous shard's reader stops as
+    /// soon as its position reaches its `end`, so a line starting on the
+    /// boundary would otherwise be read by nobody.  (The original C code
+    /// sidesteps the question by seeking without any alignment and eating
+    /// a partial first word; our line-aligned discipline needs the
+    /// boundary case decided explicitly, and the encoded corpus index
+    /// reproduces exactly this rule.)
     pub fn open_range<P: AsRef<Path>>(
         path: P,
         vocab: &'v Vocab,
@@ -43,13 +51,26 @@ impl<'v> SentenceReader<'v> {
         end: u64,
     ) -> anyhow::Result<Self> {
         let mut f = File::open(&path)?;
-        f.seek(SeekFrom::Start(start))?;
+        if start > 0 {
+            // Inspect the byte BEFORE `start`: '\n' means `start` opens a
+            // fresh line; anything else means we are mid-line.
+            f.seek(SeekFrom::Start(start - 1))?;
+        }
         let mut reader = BufReader::with_capacity(1 << 20, f);
         let mut pos = start;
         if start > 0 {
-            let mut skipped = String::new();
-            let n = reader.read_line(&mut skipped)?;
-            pos += n as u64;
+            let mut prev = [0u8; 1];
+            let at_boundary = match reader.read_exact(&mut prev) {
+                Ok(()) => prev[0] == b'\n',
+                // `start` at/past EOF: nothing to skip or read.
+                Err(e) if e.kind() == ErrorKind::UnexpectedEof => true,
+                Err(e) => return Err(e.into()),
+            };
+            if !at_boundary {
+                let mut skipped = String::new();
+                let n = reader.read_line(&mut skipped)?;
+                pos += n as u64;
+            }
         }
         Ok(Self {
             reader,
@@ -76,15 +97,28 @@ impl<'v> SentenceReader<'v> {
     /// sentence's ids.  Returns `false` at end of range.  The trainer's
     /// hot loop reuses one buffer across the whole shard.
     pub fn next_sentence_into(&mut self, out: &mut Vec<u32>) -> anyhow::Result<bool> {
+        Ok(self.next_sentence_into_with_pos(out)?.is_some())
+    }
+
+    /// Like [`Self::next_sentence_into`], additionally reporting the byte
+    /// offset of the LINE the sentence came from (`None` at end of
+    /// range).  The encoded-corpus builder records this offset per
+    /// sentence so byte-range sharding of the cache selects exactly the
+    /// sentences the text reader would yield for the same range.
+    pub fn next_sentence_into_with_pos(
+        &mut self,
+        out: &mut Vec<u32>,
+    ) -> anyhow::Result<Option<u64>> {
         loop {
             if self.done || self.pos >= self.end {
-                return Ok(false);
+                return Ok(None);
             }
+            let line_start = self.pos;
             self.line.clear();
             let n = self.reader.read_line(&mut self.line)?;
             if n == 0 {
                 self.done = true;
-                return Ok(false);
+                return Ok(None);
             }
             self.pos += n as u64;
             out.clear();
@@ -97,7 +131,7 @@ impl<'v> SentenceReader<'v> {
                 }
             }
             if !out.is_empty() {
-                return Ok(true);
+                return Ok(Some(line_start));
             }
         }
     }
@@ -190,6 +224,85 @@ mod tests {
         }
         assert_eq!(parts.len(), whole.len());
         assert_eq!(parts, whole);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Pin the range-edge rule: a shard whose `start` falls exactly on a
+    /// line boundary OWNS that line.  The previous shard's reader stops
+    /// once `pos >= end`, so before the fix the boundary line was skipped
+    /// by the next shard too and silently dropped from training.
+    #[test]
+    fn range_starting_on_line_boundary_owns_that_line() {
+        let path = write_tmp("pw2v_reader6.txt", "aa\nbb\ncc\n");
+        let vocab = Vocab::build(["aa", "bb", "cc"], 1);
+        // Lines start at bytes 0, 3, 6; total length 9.
+        let first = SentenceReader::open_range(&path, &vocab, 0, 3)
+            .unwrap()
+            .collect_sentences()
+            .unwrap();
+        assert_eq!(first.len(), 1, "shard [0,3) is exactly the first line");
+        let second = SentenceReader::open_range(&path, &vocab, 3, 9)
+            .unwrap()
+            .collect_sentences()
+            .unwrap();
+        assert_eq!(
+            second.len(),
+            2,
+            "start=3 is a line boundary: 'bb' belongs to this shard"
+        );
+        assert_eq!(second[0], vec![vocab.id("bb").unwrap()]);
+        // A start mid-line still cedes the partial line to the previous
+        // shard: start=4 is inside "bb\n", so only "cc" remains.
+        let mid = SentenceReader::open_range(&path, &vocab, 4, 9)
+            .unwrap()
+            .collect_sentences()
+            .unwrap();
+        assert_eq!(mid.len(), 1);
+        assert_eq!(mid[0], vec![vocab.id("cc").unwrap()]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Exhaustive split sweep: EVERY byte split point must partition the
+    /// sentence stream exactly (no loss, no duplication) — including the
+    /// splits that land on line boundaries, which the pre-fix reader
+    /// dropped.
+    #[test]
+    fn every_split_point_partitions_exactly() {
+        let content = "a b\n\ncc\ndd ee a\nb\n";
+        let path = write_tmp("pw2v_reader7.txt", content);
+        let vocab = Vocab::build(["a", "b", "cc", "dd", "ee"], 1);
+        let len = content.len() as u64;
+        let whole = SentenceReader::open(&path, &vocab)
+            .unwrap()
+            .collect_sentences()
+            .unwrap();
+        for split in 0..=len {
+            let mut parts = SentenceReader::open_range(&path, &vocab, 0, split)
+                .unwrap()
+                .collect_sentences()
+                .unwrap();
+            parts.extend(
+                SentenceReader::open_range(&path, &vocab, split, len)
+                    .unwrap()
+                    .collect_sentences()
+                    .unwrap(),
+            );
+            assert_eq!(parts, whole, "split at byte {split}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reports_line_offsets() {
+        let path = write_tmp("pw2v_reader8.txt", "a b\n\nZZZ\nb a\n");
+        let vocab = Vocab::build(["a", "b"], 1);
+        let mut r = SentenceReader::open(&path, &vocab).unwrap();
+        let mut sent = Vec::new();
+        // First sentence from the line at byte 0; the empty line and the
+        // all-OOV line are skipped, so the next comes from byte 9.
+        assert_eq!(r.next_sentence_into_with_pos(&mut sent).unwrap(), Some(0));
+        assert_eq!(r.next_sentence_into_with_pos(&mut sent).unwrap(), Some(9));
+        assert_eq!(r.next_sentence_into_with_pos(&mut sent).unwrap(), None);
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,161 @@
+//! The ingest seam: one `SentenceSource` contract over the streaming
+//! text reader and the pre-encoded `u32` cache, plus the [`Corpus`]
+//! handle the trainers open once and range-shard per worker/epoch.
+//!
+//! Both backends shard over byte ranges OF THE SOURCE TEXT FILE (the
+//! cache header records the text length), so `--corpus-cache` never
+//! changes which sentences a given worker sees — only how cheaply it
+//! reads them.
+
+use std::path::{Path, PathBuf};
+
+use super::encoded::{EncodedCorpus, EncodedSentenceReader};
+use super::reader::SentenceReader;
+use super::vocab::Vocab;
+use crate::config::CorpusCacheMode;
+
+/// The sentence-iteration contract shared by every corpus backend: fill
+/// `out` (cleared first) with the next sentence's vocabulary ids, `false`
+/// at end of range.  Zero allocations at steady state.
+pub trait SentenceSource {
+    fn next_sentence_into(&mut self, out: &mut Vec<u32>) -> anyhow::Result<bool>;
+}
+
+impl SentenceSource for SentenceReader<'_> {
+    fn next_sentence_into(&mut self, out: &mut Vec<u32>) -> anyhow::Result<bool> {
+        SentenceReader::next_sentence_into(self, out)
+    }
+}
+
+impl SentenceSource for EncodedSentenceReader<'_> {
+    fn next_sentence_into(&mut self, out: &mut Vec<u32>) -> anyhow::Result<bool> {
+        EncodedSentenceReader::next_sentence_into(self, out)
+    }
+}
+
+/// An opened training corpus: the text file itself, or its encoded
+/// cache.  Shared by reference across worker threads; each worker opens
+/// its own range cursors (per epoch) through [`Corpus::open_range`].
+pub enum Corpus<'v> {
+    Text {
+        path: PathBuf,
+        vocab: &'v Vocab,
+        /// File length at open time (shard geometry).
+        len: u64,
+    },
+    Encoded(EncodedCorpus),
+}
+
+impl<'v> Corpus<'v> {
+    /// Open `path` under the given cache policy.  `Auto`/`Path` build or
+    /// rebuild the encoded cache as needed (see [`EncodedCorpus::ensure`]).
+    pub fn open(
+        path: &Path,
+        vocab: &'v Vocab,
+        mode: &CorpusCacheMode,
+    ) -> anyhow::Result<Self> {
+        match mode {
+            CorpusCacheMode::Off => Ok(Corpus::Text {
+                path: path.to_path_buf(),
+                vocab,
+                len: std::fs::metadata(path)?.len(),
+            }),
+            CorpusCacheMode::Auto => {
+                let cache = EncodedCorpus::cache_path_for(path);
+                let (enc, _) = EncodedCorpus::ensure(path, vocab, &cache)?;
+                Ok(Corpus::Encoded(enc))
+            }
+            CorpusCacheMode::Path(cache) => {
+                let (enc, _) = EncodedCorpus::ensure(path, vocab, cache)?;
+                Ok(Corpus::Encoded(enc))
+            }
+        }
+    }
+
+    /// Byte length the shard splitter divides: the TEXT file's length on
+    /// both backends, so `--corpus-cache` leaves shard geometry (and
+    /// therefore every worker's sentence stream) unchanged.
+    pub fn shard_len(&self) -> u64 {
+        match self {
+            Corpus::Text { len, .. } => *len,
+            Corpus::Encoded(e) => e.text_len(),
+        }
+    }
+
+    pub fn is_encoded(&self) -> bool {
+        matches!(self, Corpus::Encoded(_))
+    }
+
+    /// Cursor over the sentences of text-byte range `[start, end)`.
+    pub fn open_range(&self, start: u64, end: u64) -> anyhow::Result<SourceReader<'_>> {
+        Ok(match self {
+            Corpus::Text { path, vocab, .. } => SourceReader::Text(
+                SentenceReader::open_range(path, vocab, start, end)?,
+            ),
+            Corpus::Encoded(e) => SourceReader::Encoded(e.reader_range(start, end)),
+        })
+    }
+}
+
+/// A range cursor over either backend (the trainers' per-epoch reader).
+pub enum SourceReader<'a> {
+    Text(SentenceReader<'a>),
+    Encoded(EncodedSentenceReader<'a>),
+}
+
+impl SourceReader<'_> {
+    pub fn next_sentence_into(&mut self, out: &mut Vec<u32>) -> anyhow::Result<bool> {
+        match self {
+            SourceReader::Text(r) => r.next_sentence_into(out),
+            SourceReader::Encoded(r) => r.next_sentence_into(out),
+        }
+    }
+}
+
+impl SentenceSource for SourceReader<'_> {
+    fn next_sentence_into(&mut self, out: &mut Vec<u32>) -> anyhow::Result<bool> {
+        SourceReader::next_sentence_into(self, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_tmp(name: &str, content: &str) -> PathBuf {
+        let path = std::env::temp_dir()
+            .join(format!("pw2v_src_{}_{name}", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn off_streams_text_and_auto_builds_cache() {
+        let path = write_tmp("oa.txt", "a b\nb a\n");
+        let vocab = Vocab::build(["a", "b"], 1);
+        let text = Corpus::open(&path, &vocab, &CorpusCacheMode::Off).unwrap();
+        assert!(!text.is_encoded());
+        assert_eq!(text.shard_len(), 8);
+        let auto = Corpus::open(&path, &vocab, &CorpusCacheMode::Auto).unwrap();
+        assert!(auto.is_encoded());
+        assert_eq!(auto.shard_len(), 8);
+        let cache = EncodedCorpus::cache_path_for(&path);
+        assert!(cache.exists());
+        // Both cursors yield the same stream through the trait.
+        let collect = |c: &Corpus| {
+            let mut r = c.open_range(0, 8).unwrap();
+            let mut out = Vec::new();
+            let mut sent = Vec::new();
+            while r.next_sentence_into(&mut sent).unwrap() {
+                out.push(sent.clone());
+            }
+            out
+        };
+        assert_eq!(collect(&text), collect(&auto));
+        assert_eq!(collect(&text).len(), 2);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&cache).ok();
+    }
+}

@@ -7,8 +7,9 @@
 use std::collections::HashMap;
 use std::io::{BufRead, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
-#[derive(Clone, Debug, Default)]
+#[derive(Debug, Default)]
 pub struct Vocab {
     /// Words sorted by count descending (index = word id).
     words: Vec<String>,
@@ -16,6 +17,23 @@ pub struct Vocab {
     index: HashMap<String, u32>,
     /// Total corpus tokens covered by the retained vocabulary.
     total: u64,
+    /// Debug-build instrumentation: number of [`Vocab::id`] hash lookups
+    /// against THIS instance.  The encoded-corpus acceptance criterion
+    /// asserts this stays flat while training from a cache (the cached
+    /// path never hashes a token).  Release builds never touch it.
+    lookups: AtomicU64,
+}
+
+impl Clone for Vocab {
+    fn clone(&self) -> Self {
+        Self {
+            words: self.words.clone(),
+            counts: self.counts.clone(),
+            index: self.index.clone(),
+            total: self.total,
+            lookups: AtomicU64::new(self.lookups.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl Vocab {
@@ -97,7 +115,16 @@ impl Vocab {
     }
 
     pub fn id(&self, word: &str) -> Option<u32> {
+        #[cfg(debug_assertions)]
+        self.lookups.fetch_add(1, Ordering::Relaxed);
         self.index.get(word).copied()
+    }
+
+    /// Hash lookups performed through [`Vocab::id`] so far (debug builds
+    /// only; always 0 in release).  Tests use before/after snapshots to
+    /// prove the cached-corpus path performs no per-token hashing.
+    pub fn id_lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
     }
 
     pub fn word(&self, id: u32) -> &str {
@@ -115,6 +142,28 @@ impl Vocab {
     /// Relative frequency of a word id.
     pub fn freq(&self, id: u32) -> f64 {
         self.counts[id as usize] as f64 / self.total.max(1) as f64
+    }
+
+    /// Order-sensitive 64-bit FNV-1a digest over the full (word, count)
+    /// sequence.  The encoded corpus cache stores it in its header: a
+    /// cache built under a different vocabulary (different corpus,
+    /// `min_count`, or truncation) has a different fingerprint and is
+    /// rejected/rebuilt instead of feeding stale ids to the trainer.
+    pub fn fingerprint(&self) -> u64 {
+        fn mix(h: &mut u64, bytes: &[u8]) {
+            for &b in bytes {
+                *h = (*h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        mix(&mut h, &(self.words.len() as u64).to_le_bytes());
+        for (w, c) in self.words.iter().zip(&self.counts) {
+            mix(&mut h, w.as_bytes());
+            // 0xFF never occurs in UTF-8: an unambiguous separator.
+            mix(&mut h, &[0xFF]);
+            mix(&mut h, &c.to_le_bytes());
+        }
+        h
     }
 
     /// `word<TAB>count` lines, frequency order.
@@ -218,6 +267,37 @@ mod tests {
         let a = Vocab::build("b a".split_whitespace(), 1);
         let b = Vocab::build("a b".split_whitespace(), 1);
         assert_eq!(a.word(0), b.word(0));
+    }
+
+    #[test]
+    fn fingerprint_tracks_vocab_identity() {
+        let v = sample();
+        assert_eq!(v.fingerprint(), sample().fingerprint());
+        assert_eq!(v.fingerprint(), v.clone().fingerprint());
+        // Any change to the retained set or counts changes the digest.
+        assert_ne!(v.fingerprint(), v.truncated(2).fingerprint());
+        let shifted = Vocab::build(
+            "the cat sat on the mat the cat the".split_whitespace(),
+            1,
+        );
+        assert_ne!(v.fingerprint(), shifted.fingerprint());
+        // Word-boundary ambiguity is broken by the 0xFF separator.
+        let a = Vocab::build(["ab", "c"], 1);
+        let b = Vocab::build(["a", "bc"], 1);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn id_lookup_counter_counts_in_debug_builds() {
+        let v = sample();
+        let before = v.id_lookups();
+        let _ = v.id("the");
+        let _ = v.id("UNKNOWN");
+        if cfg!(debug_assertions) {
+            assert_eq!(v.id_lookups() - before, 2);
+        } else {
+            assert_eq!(v.id_lookups(), 0);
+        }
     }
 
     #[test]

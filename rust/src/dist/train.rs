@@ -27,8 +27,9 @@ use std::time::Instant;
 use super::node::DistConfig;
 use super::sync::{average_row, SyncPolicy};
 use crate::config::TrainConfig;
-use crate::corpus::reader::{SentenceReader, MAX_SENTENCE_LEN};
-use crate::corpus::shard::{shards_for_file, Shard};
+use crate::corpus::reader::MAX_SENTENCE_LEN;
+use crate::corpus::shard::{shards_for_len, Shard};
+use crate::corpus::source::Corpus;
 use crate::corpus::subsample::Subsampler;
 use crate::corpus::vocab::Vocab;
 use crate::model::SharedModel;
@@ -86,7 +87,11 @@ pub fn train_distributed(
     } else {
         LrState::linear(cfg.lr, cfg.lr_min_frac, total_words)
     };
-    let shards = shards_for_file(corpus, n)?;
+    // Same ingest policy as the shared-memory trainer: the encoded-cache
+    // backends shard over text-byte geometry, so node shards are
+    // identical across `--corpus-cache` modes.
+    let source = Corpus::open(corpus, vocab, &cfg.corpus_cache)?;
+    let shards = shards_for_len(source.shard_len(), n);
     // Every replica starts from the SAME init (the paper's replicas do).
     let mut models: Vec<SharedModel> = (0..n)
         .map(|_| SharedModel::init(vocab.len(), cfg.dim, cfg.seed))
@@ -109,6 +114,7 @@ pub fn train_distributed(
                     &lr_state,
                 );
                 let (sampler, subsampler) = (&sampler, &subsampler);
+                let source = &source;
                 let policy = dist.policy.clone();
                 handles.push(scope.spawn(move || {
                     node_loop(NodeCtx {
@@ -117,7 +123,7 @@ pub fn train_distributed(
                         policy,
                         idx,
                         shard: *shard,
-                        corpus,
+                        source,
                         vocab,
                         models,
                         barrier,
@@ -164,7 +170,7 @@ struct NodeCtx<'a> {
     policy: SyncPolicy,
     idx: usize,
     shard: Shard,
-    corpus: &'a Path,
+    source: &'a Corpus<'a>,
     vocab: &'a Vocab,
     models: &'a [SharedModel],
     barrier: &'a Barrier,
@@ -197,12 +203,7 @@ fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
     let mut scratch = vec![0.0f32; cfg.dim];
     let mut stats = SyncStats::default();
 
-    let mut reader = SentenceReader::open_range(
-        ctx.corpus,
-        ctx.vocab,
-        ctx.shard.start,
-        ctx.shard.end,
-    )?;
+    let mut reader = ctx.source.open_range(ctx.shard.start, ctx.shard.end)?;
     let mut epoch = 0usize;
     let mut exhausted = false;
     let mut signalled_done = false;
@@ -229,12 +230,8 @@ fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
                         exhausted = true;
                         break;
                     }
-                    match SentenceReader::open_range(
-                        ctx.corpus,
-                        ctx.vocab,
-                        ctx.shard.start,
-                        ctx.shard.end,
-                    ) {
+                    match ctx.source.open_range(ctx.shard.start, ctx.shard.end)
+                    {
                         Ok(r) => reader = r,
                         Err(e) => {
                             failure = Some(e);
@@ -377,6 +374,30 @@ mod tests {
         assert_eq!(out.words, vocab.total_words());
         assert_eq!(out.sync_stats[0].wire_bytes, 0);
         std::fs::remove_file(&path).ok();
+    }
+
+    /// The replica protocol over the encoded cache: identical word
+    /// accounting and a usable merged model (node shards are text-byte
+    /// based on both ingest paths, so the streams match sentence for
+    /// sentence).
+    #[test]
+    fn replicas_train_from_encoded_cache() {
+        let (path, vocab) = tiny_corpus(59);
+        let cache =
+            crate::corpus::encoded::EncodedCorpus::cache_path_for(&path);
+        std::fs::remove_file(&cache).ok();
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        cfg.corpus_cache = crate::config::CorpusCacheMode::Auto;
+        let mut dist = DistConfig::for_nodes(2);
+        dist.sync_interval = 8_000;
+        let out = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+        assert_eq!(out.words, vocab.total_words());
+        assert!(cache.exists());
+        let init = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+        assert_ne!(out.model.m_in().data(), init.m_in().data());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&cache).ok();
     }
 
     #[test]

@@ -56,7 +56,9 @@ USAGE: pw2v <subcommand> [--key value ...]
   train       --corpus corpus.txt --out vectors.txt
               [--backend scalar|bidmach|gemm|pjrt --threads T --dim D
                --simd auto|avx2|scalar --kernel auto|fused|gemm3
-               --sigmoid exact|table ...]
+               --sigmoid exact|table --corpus-cache off|auto|PATH ...]
+              (--corpus-cache auto encodes <corpus>.pw2v.u32 once and
+               trains from the u32 cache: no per-epoch re-tokenization)
   train-dist  --corpus corpus.txt --nodes N [--sync-interval W --policy sub|full]
               [--out vectors.txt]
   eval        --vectors vectors.txt [--simset sim.tsv] [--anaset ana.txt]
@@ -115,14 +117,15 @@ fn cmd_train(a: &Args) -> anyhow::Result<()> {
     let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
     eprintln!(
         "training: backend={} threads={} dim={} epochs={} simd={} kernel={} \
-         sigmoid={}",
+         sigmoid={} corpus-cache={}",
         cfg.backend,
         cfg.threads,
         cfg.dim,
         cfg.epochs,
         cfg.simd,
         cfg.kernel,
-        cfg.sigmoid_mode
+        cfg.sigmoid_mode,
+        cfg.corpus_cache
     );
     let outcome = train::train(&cfg, &corpus, &vocab, &model)?;
     let snap = outcome.snapshot;

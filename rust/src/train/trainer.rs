@@ -6,8 +6,11 @@
 //! own [`Backend`] instance against the shared model.
 //!
 //! The hot loop is allocation-free at steady state: each worker owns one
-//! reused sentence buffer (`SentenceReader::next_sentence_into`) and one
-//! `SuperbatchArena` that `BatchBuilder::fill_arena` refills in place;
+//! reused sentence buffer (`SentenceSource::next_sentence_into`, served
+//! by the streaming text reader or — under `--corpus-cache` — the
+//! pre-encoded `u32` cache, which also deletes per-epoch vocab hashing)
+//! and one `SuperbatchArena` that `BatchBuilder::fill_arena` refills in
+//! place;
 //! back-ends consume the arena directly via [`Backend::process_arena`].
 //! `train` also pins the SIMD dispatch level from `cfg.simd` before the
 //! workers start (`--simd {auto,avx2,scalar}`).  The learning rate
@@ -24,8 +27,9 @@ use super::sgd_pjrt::PjrtBackend;
 use super::sgd_scalar::ScalarBackend;
 use super::Backend;
 use crate::config::{Backend as BackendKind, LrSchedule, TrainConfig};
-use crate::corpus::reader::{SentenceReader, MAX_SENTENCE_LEN};
-use crate::corpus::shard::shards_for_file;
+use crate::corpus::reader::MAX_SENTENCE_LEN;
+use crate::corpus::shard::shards_for_len;
+use crate::corpus::source::Corpus;
 use crate::corpus::subsample::Subsampler;
 use crate::corpus::vocab::Vocab;
 use crate::linalg::simd;
@@ -115,7 +119,12 @@ pub fn train_with_factory<'f>(
     };
     let subsampler = Subsampler::new(vocab, cfg.sample);
     let counters = Counters::new();
-    let shards = shards_for_file(corpus, cfg.threads)?;
+    // `--corpus-cache {off,auto,<path>}`: Off streams the text file per
+    // epoch; Auto/Path open (building if needed) the encoded `u32` cache.
+    // Shard geometry is text-byte based either way, so the cache policy
+    // never changes which sentences a worker sees.
+    let source = Corpus::open(corpus, vocab, &cfg.corpus_cache)?;
+    let shards = shards_for_len(source.shard_len(), cfg.threads);
 
     std::thread::scope(|scope| -> anyhow::Result<()> {
         let mut handles = Vec::new();
@@ -123,6 +132,7 @@ pub fn train_with_factory<'f>(
             let lr_state = &lr_state;
             let counters = &counters;
             let subsampler = &subsampler;
+            let source = &source;
             let handle = scope.spawn(move || -> anyhow::Result<()> {
                 let mut backend = factory(shard.index)?;
                 let mut rng = Xoshiro256ss::new(
@@ -144,12 +154,8 @@ pub fn train_with_factory<'f>(
                 let mut sent: Vec<u32> = Vec::with_capacity(MAX_SENTENCE_LEN);
                 let mut raw_words = 0u64;
                 for _epoch in 0..cfg.epochs {
-                    let mut reader = SentenceReader::open_range(
-                        corpus,
-                        vocab,
-                        shard.start,
-                        shard.end,
-                    )?;
+                    let mut reader =
+                        source.open_range(shard.start, shard.end)?;
                     while reader.next_sentence_into(&mut sent)? {
                         raw_words += sent.len() as u64;
                         subsampler.filter(&mut sent, &mut rng);
@@ -275,6 +281,44 @@ mod tests {
         let (_, out) = run(&cfg, &path, &vocab);
         assert_eq!(out.snapshot.words, vocab.total_words());
         std::fs::remove_file(&path).ok();
+    }
+
+    /// `--corpus-cache auto` builds the cache on first use, reuses it on
+    /// the second run, and accounts the exact same word totals as the
+    /// text path (bitwise model parity is pinned in
+    /// `tests/corpus_parity.rs`).
+    #[test]
+    fn auto_corpus_cache_trains_identically_counted() {
+        // Private corpus file: this test asserts cache-file mtimes, so it
+        // must not share `tiny_corpus()`'s path with concurrent tests.
+        let mut scfg = SyntheticConfig::test_tiny();
+        scfg.tokens = 30_000;
+        let lm = LatentModel::new(scfg);
+        let path = std::env::temp_dir().join(format!(
+            "pw2v_trainer_cc_{}.txt",
+            std::process::id()
+        ));
+        lm.write_corpus(&path).unwrap();
+        let vocab = Vocab::build_from_file(&path, 1).unwrap();
+        let cache =
+            crate::corpus::encoded::EncodedCorpus::cache_path_for(&path);
+        std::fs::remove_file(&cache).ok();
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.threads = 2;
+        cfg.epochs = 2;
+        cfg.sample = 0.0;
+        cfg.corpus_cache = crate::config::CorpusCacheMode::Auto;
+        let (_, out) = run(&cfg, &path, &vocab);
+        assert_eq!(out.snapshot.words, 2 * vocab.total_words());
+        assert!(cache.exists(), "auto mode must leave the cache behind");
+        // Second run reuses the cache (mtime/content untouched).
+        let before = std::fs::metadata(&cache).unwrap().modified().unwrap();
+        let (_, out) = run(&cfg, &path, &vocab);
+        assert_eq!(out.snapshot.words, 2 * vocab.total_words());
+        let after = std::fs::metadata(&cache).unwrap().modified().unwrap();
+        assert_eq!(before, after, "valid cache must not be rebuilt");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&cache).ok();
     }
 
     #[test]

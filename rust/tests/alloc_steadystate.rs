@@ -9,12 +9,19 @@
 //! must leave the allocation counter untouched.  This file holds exactly
 //! ONE test: other tests in the same binary would run on sibling threads
 //! and allocate concurrently, poisoning the counter.
+//!
+//! Covers both ingest backends: the in-memory sentence fixtures (the
+//! builder/backend pipeline alone) and the encoded `u32` corpus cache
+//! (reader → builder → backend), whose per-epoch cursor re-creation must
+//! also be allocation-free.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::HashMap;
+use std::io::Write;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use pw2v::config::{KernelMode, SigmoidMode};
+use pw2v::corpus::encoded::EncodedCorpus;
 use pw2v::corpus::vocab::Vocab;
 use pw2v::corpus::MAX_SENTENCE_LEN;
 use pw2v::model::SharedModel;
@@ -197,4 +204,67 @@ fn steady_state_training_loop_allocates_nothing() {
             after - before
         );
     }
+
+    // ------------------------------------------------------------------
+    // Encoded-corpus leg: the cached ingest path (EncodedSentenceReader →
+    // fill_arena → process_arena) must ALSO be allocation-free per window
+    // at steady state — including opening a fresh range cursor every
+    // round, which is exactly what the trainer does per epoch.
+    // ------------------------------------------------------------------
+    let text_path = std::env::temp_dir().join(format!(
+        "pw2v_alloc_enc_{}.txt",
+        std::process::id()
+    ));
+    {
+        // Materialise the fixture stream as a real text corpus (ids →
+        // words roundtrip through the same vocab).
+        let mut f = std::fs::File::create(&text_path).unwrap();
+        for sent in &sentences {
+            let line: Vec<&str> =
+                sent.iter().map(|&id| vocab.word(id)).collect();
+            writeln!(f, "{}", line.join(" ")).unwrap();
+        }
+    }
+    let cache_path = EncodedCorpus::cache_path_for(&text_path);
+    EncodedCorpus::build(&text_path, &vocab, &cache_path).unwrap();
+    let enc = EncodedCorpus::open(&cache_path, &vocab).unwrap();
+    assert_eq!(enc.n_sentences(), sentences.len() as u64);
+
+    let mut backend = GemmBackend::new(dim, batch, 1 + negative)
+        .with_sigmoid(SigmoidMode::Exact);
+    let mut sent_buf: Vec<u32> = Vec::with_capacity(MAX_SENTENCE_LEN);
+    let mut enc_round = |arena: &mut SuperbatchArena,
+                         backend: &mut GemmBackend,
+                         sent_buf: &mut Vec<u32>| {
+        let mut rng = Xoshiro256ss::new(99);
+        let mut reader = enc.reader_range(0, enc.text_len());
+        while reader.next_sentence_into(sent_buf).unwrap() {
+            builder.fill_arena(sent_buf, &mut rng, arena);
+            if arena.len() >= superbatch {
+                backend.process_arena(&model, arena, 0.025).unwrap();
+                arena.clear();
+            }
+        }
+        if !arena.is_empty() {
+            backend.process_arena(&model, arena, 0.025).unwrap();
+            arena.clear();
+        }
+    };
+    for _ in 0..3 {
+        enc_round(&mut arena, &mut backend, &mut sent_buf);
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..50 {
+        enc_round(&mut arena, &mut backend, &mut sent_buf);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state ENCODED-corpus loop allocated {} times over 50 \
+         rounds (reader re-created each round)",
+        after - before
+    );
+    std::fs::remove_file(&text_path).ok();
+    std::fs::remove_file(&cache_path).ok();
 }

@@ -1,0 +1,376 @@
+//! Streaming/encoded corpus parity suite (the corpus-cache PR's
+//! acceptance gate).
+//!
+//! 1. For randomized corpora full of ingest edge cases — empty and
+//!    whitespace-only lines, OOV runs, lines past `MAX_SENTENCE_LEN`,
+//!    multi-byte (non-ASCII) whitespace glued into tokens, missing final
+//!    newline — the [`EncodedSentenceReader`] must yield BIT-IDENTICAL
+//!    sentence sequences to the streaming [`SentenceReader`], whole-file
+//!    and shard-by-shard for every split in {2, 3, 7}.
+//! 2. A seeded single-thread end-to-end train must produce bitwise-equal
+//!    embeddings on the text vs the cached corpus, for both `--kernel
+//!    gemm3` and `fused` — and (in debug builds) perform ZERO vocab hash
+//!    lookups while training from the cache.
+//! 3. Invalid caches — wrong magic/version, truncation, stale vocab
+//!    fingerprint, zero sentences — are rejected, and `auto` mode
+//!    preserves the corrupt file as `.bak` and rebuilds instead of
+//!    feeding garbage to the trainer.
+
+use std::path::{Path, PathBuf};
+
+use pw2v::config::{CorpusCacheMode, KernelMode, TrainConfig};
+use pw2v::corpus::encoded::{EncodedCorpus, CACHE_SUFFIX, MAGIC};
+use pw2v::corpus::reader::SentenceReader;
+use pw2v::corpus::shard::shards_for_len;
+use pw2v::corpus::source::Corpus;
+use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
+use pw2v::corpus::vocab::Vocab;
+use pw2v::corpus::MAX_SENTENCE_LEN;
+use pw2v::model::SharedModel;
+use pw2v::train;
+use pw2v::util::rng::Xoshiro256ss;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pw2v_parity_{}_{name}", std::process::id()))
+}
+
+fn write_file(name: &str, content: &str) -> PathBuf {
+    let path = tmp(name);
+    std::fs::write(&path, content).unwrap();
+    path
+}
+
+fn with_suffix(p: &Path, suffix: &str) -> PathBuf {
+    let mut os = p.as_os_str().to_os_string();
+    os.push(suffix);
+    PathBuf::from(os)
+}
+
+/// Vocabulary the nasty corpora are read under: w0..w19 only, so every
+/// other token (OOV markers, multibyte-whitespace-glued pairs) drops.
+fn small_vocab() -> Vocab {
+    Vocab::build((0..20).map(|i| format!("w{i}")), 1)
+}
+
+/// A corpus built to hit every ingest edge at once.
+fn nasty_corpus(seed: u64) -> String {
+    let mut rng = Xoshiro256ss::new(seed);
+    let mut s = String::new();
+    // Guarantee at least one retained sentence whatever the dice say.
+    s.push_str("w1 w2 w3\n");
+    let lines = 40 + rng.below(60);
+    for _ in 0..lines {
+        match rng.below(10) {
+            0 => s.push('\n'),                   // empty line
+            1 => s.push_str(" \t  \n"),          // whitespace-only line
+            2 => {
+                // Pure OOV run: the line must vanish from both streams.
+                for _ in 0..1 + rng.below(5) {
+                    s.push_str("OOVTOKEN ");
+                }
+                s.push('\n');
+            }
+            3 => {
+                // Longer than MAX_SENTENCE_LEN: both readers clip.
+                for i in 0..MAX_SENTENCE_LEN + 50 {
+                    s.push_str(&format!("w{} ", i % 20));
+                }
+                s.push('\n');
+            }
+            4 => {
+                // Multi-byte whitespace (U+00A0, U+2009) is NOT ASCII
+                // whitespace: it glues neighbours into one OOV token.
+                s.push_str("w1\u{00A0}w2 w3\u{2009}w4 w5\n");
+            }
+            _ => {
+                for _ in 0..1 + rng.below(12) {
+                    // ~1 in 6 tokens is OOV inside an otherwise good line.
+                    if rng.below(6) == 0 {
+                        s.push_str("ZZZ ");
+                    } else {
+                        s.push_str(&format!("w{} ", rng.below(20)));
+                    }
+                }
+                s.push('\n');
+            }
+        }
+    }
+    if rng.below(3) == 0 {
+        // Final line without '\n'.
+        s.push_str("w4 w5 w6");
+    }
+    s
+}
+
+fn collect_text(path: &Path, vocab: &Vocab, start: u64, end: u64) -> Vec<Vec<u32>> {
+    SentenceReader::open_range(path, vocab, start, end)
+        .unwrap()
+        .collect_sentences()
+        .unwrap()
+}
+
+#[test]
+fn encoded_matches_streaming_across_shard_splits() {
+    let vocab = small_vocab();
+    for seed in [1u64, 2, 3, 5, 8, 13, 2026] {
+        let path = write_file(&format!("shards_{seed}.txt"), &nasty_corpus(seed));
+        let cache = with_suffix(&path, CACHE_SUFFIX);
+        EncodedCorpus::build(&path, &vocab, &cache).unwrap();
+        let enc = EncodedCorpus::open(&cache, &vocab).unwrap();
+        let len = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(enc.text_len(), len);
+
+        let whole_text = collect_text(&path, &vocab, 0, len);
+        assert!(!whole_text.is_empty());
+        let whole_enc = enc.reader().collect_sentences().unwrap();
+        assert_eq!(whole_enc, whole_text, "seed {seed}: whole-file parity");
+
+        for nshards in [2usize, 3, 7] {
+            let mut text_all = Vec::new();
+            let mut enc_all = Vec::new();
+            for sh in shards_for_len(len, nshards) {
+                let t = collect_text(&path, &vocab, sh.start, sh.end);
+                let e = enc
+                    .reader_range(sh.start, sh.end)
+                    .collect_sentences()
+                    .unwrap();
+                assert_eq!(
+                    e, t,
+                    "seed {seed}: shard {}/{nshards} [{}, {}) diverges",
+                    sh.index, sh.start, sh.end
+                );
+                text_all.extend(t);
+                enc_all.extend(e);
+            }
+            // The shard union must also be lossless and duplication-free
+            // on BOTH paths (this is what the boundary fix buys).
+            assert_eq!(text_all, whole_text, "seed {seed}: text {nshards}-way");
+            assert_eq!(enc_all, whole_text, "seed {seed}: encoded {nshards}-way");
+        }
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&cache).ok();
+    }
+}
+
+/// Adversarial split sweep on a tiny corpus: EVERY byte is a split point,
+/// so every line boundary lands exactly on a shard edge at least once.
+#[test]
+fn encoded_matches_streaming_at_every_split_point() {
+    let vocab = small_vocab();
+    let content = "w1 w2\n\nw3\nOOVTOKEN\nw4 w5 w1\nw2";
+    let path = write_file("everysplit.txt", content);
+    let cache = with_suffix(&path, CACHE_SUFFIX);
+    EncodedCorpus::build(&path, &vocab, &cache).unwrap();
+    let enc = EncodedCorpus::open(&cache, &vocab).unwrap();
+    let len = content.len() as u64;
+    let whole = collect_text(&path, &vocab, 0, len);
+    for split in 0..=len {
+        let mut text_parts = collect_text(&path, &vocab, 0, split);
+        text_parts.extend(collect_text(&path, &vocab, split, len));
+        let mut enc_parts = enc.reader_range(0, split).collect_sentences().unwrap();
+        enc_parts.extend(enc.reader_range(split, len).collect_sentences().unwrap());
+        assert_eq!(text_parts, whole, "text split at byte {split}");
+        assert_eq!(enc_parts, whole, "encoded split at byte {split}");
+    }
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&cache).ok();
+}
+
+fn tiny_synthetic(seed: u64) -> (PathBuf, Vocab) {
+    let mut scfg = SyntheticConfig::test_tiny();
+    scfg.tokens = 25_000;
+    scfg.seed = seed;
+    let lm = LatentModel::new(scfg);
+    let path = tmp(&format!("train_{seed}.txt"));
+    lm.write_corpus(&path).unwrap();
+    let vocab = Vocab::build_from_file(&path, 1).unwrap();
+    (path, vocab)
+}
+
+/// The end-to-end acceptance criterion: a seeded single-thread train is
+/// BITWISE identical between the text path and the cached path, for both
+/// kernel organisations — and the cached run never hashes a token.
+#[test]
+fn cached_training_is_bitwise_identical_to_text() {
+    let (path, vocab) = tiny_synthetic(71);
+    let cache = with_suffix(&path, ".cache.u32");
+    // Build once up front so the lookup snapshot below excludes the
+    // (one-time) encoding pass.
+    EncodedCorpus::build(&path, &vocab, &cache).unwrap();
+    for kernel in [KernelMode::Gemm3, KernelMode::Fused] {
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.backend = pw2v::config::Backend::Gemm;
+        cfg.kernel = kernel;
+        cfg.threads = 1;
+        cfg.epochs = 2;
+        cfg.sample = 1e-3; // exercise the subsampler on both paths
+        cfg.seed = 99;
+
+        cfg.corpus_cache = CorpusCacheMode::Off;
+        let text_model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+        let text_out = train::train(&cfg, &path, &vocab, &text_model).unwrap();
+
+        cfg.corpus_cache = CorpusCacheMode::Path(cache.clone());
+        let lookups_before = vocab.id_lookups();
+        let enc_model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+        let enc_out = train::train(&cfg, &path, &vocab, &enc_model).unwrap();
+
+        assert_eq!(
+            text_out.snapshot.words, enc_out.snapshot.words,
+            "kernel {kernel}: word accounting"
+        );
+        assert_eq!(
+            text_model.m_in().data(),
+            enc_model.m_in().data(),
+            "kernel {kernel}: M_in must be bitwise identical"
+        );
+        assert_eq!(
+            text_model.m_out().data(),
+            enc_model.m_out().data(),
+            "kernel {kernel}: M_out must be bitwise identical"
+        );
+        if cfg!(debug_assertions) {
+            assert_eq!(
+                vocab.id_lookups(),
+                lookups_before,
+                "kernel {kernel}: cached training must perform zero vocab \
+                 hash lookups (every epoch, not just epoch >= 2)"
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&cache).ok();
+}
+
+/// Every corruption class is detected at open, with a diagnosable error.
+#[test]
+fn cache_invalidation_rejects_every_corruption_class() {
+    let vocab = small_vocab();
+    let path = write_file("inval.txt", "w1 w2 w3\nw4 w5\n");
+    let cache = with_suffix(&path, CACHE_SUFFIX);
+    EncodedCorpus::build(&path, &vocab, &cache).unwrap();
+    let good = std::fs::read(&cache).unwrap();
+    let expect_err = |bytes: &[u8], needle: &str| {
+        std::fs::write(&cache, bytes).unwrap();
+        let err = EncodedCorpus::open(&cache, &vocab).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(needle), "want '{needle}' in: {msg}");
+    };
+
+    // Wrong magic.
+    let mut bad = good.clone();
+    bad[0] ^= 0xFF;
+    expect_err(&bad, "magic");
+    // Unsupported version.
+    let mut bad = good.clone();
+    bad[8] = 99;
+    expect_err(&bad, "version");
+    // Truncated body.
+    expect_err(&good[..good.len() - 5], "truncated");
+    // Truncated below even the header.
+    expect_err(&good[..20], "truncated");
+    // Stale vocab fingerprint (flip one digest byte).
+    let mut bad = good.clone();
+    bad[16] ^= 0x01;
+    expect_err(&bad, "fingerprint");
+    // Zero sentences: a structurally valid, empty cache.
+    let mut empty = good[..48].to_vec();
+    empty[32..40].fill(0); // n_sentences = 0
+    empty[40..48].fill(0); // n_tokens = 0
+    empty.extend_from_slice(&0u64.to_le_bytes()); // starts = [0]
+    expect_err(&empty, "zero sentences");
+    // Out-of-range ids: the builder records the payload's max id in the
+    // header (bytes 12..16) so `open` bound-checks the whole stream in
+    // O(1); a max id at/past the vocab length must be rejected.
+    let mut bad = good.clone();
+    bad[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+    expect_err(&bad, "out of range");
+
+    // A stale cache is also rejected when read through a DIFFERENT vocab
+    // than it was built under (the satellite's headline case).
+    std::fs::write(&cache, &good).unwrap();
+    let other = Vocab::build((0..21).map(|i| format!("w{i}")), 1);
+    let err = EncodedCorpus::open(&cache, &other).unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"));
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&cache).ok();
+}
+
+/// `auto` mode turns every rejection into a rebuild: the corrupt file is
+/// preserved as `.bak` (the BENCH_throughput.json discipline) and the
+/// rebuilt cache trains cleanly.
+#[test]
+fn auto_mode_rebuilds_corrupt_cache_and_preserves_bak() {
+    let vocab = small_vocab();
+    let path = write_file("rebuild.txt", "w1 w2\nw3 w4 w5\n");
+    let cache = with_suffix(&path, CACHE_SUFFIX);
+    let bak = with_suffix(&cache, ".bak");
+    std::fs::remove_file(&bak).ok();
+
+    // Corrupt "cache" left by some earlier failure.
+    std::fs::write(&cache, b"definitely not a cache").unwrap();
+    let corpus = Corpus::open(&path, &vocab, &CorpusCacheMode::Auto).unwrap();
+    assert!(corpus.is_encoded());
+    assert_eq!(
+        std::fs::read(&bak).unwrap(),
+        b"definitely not a cache",
+        "corrupt cache must be preserved, not clobbered"
+    );
+    // The rebuilt cache matches the text stream.
+    let len = std::fs::metadata(&path).unwrap().len();
+    let mut reader = corpus.open_range(0, len).unwrap();
+    let mut sent = Vec::new();
+    let mut got = Vec::new();
+    while reader.next_sentence_into(&mut sent).unwrap() {
+        got.push(sent.clone());
+    }
+    assert_eq!(got, collect_text(&path, &vocab, 0, len));
+
+    // Stale-vocab rebuild: reuse the same file under a grown vocabulary.
+    let grown = Vocab::build((0..25).map(|i| format!("w{i}")), 1);
+    let corpus = Corpus::open(&path, &grown, &CorpusCacheMode::Auto).unwrap();
+    assert!(corpus.is_encoded());
+    let enc = EncodedCorpus::open(&cache, &grown).unwrap();
+    assert_eq!(enc.n_sentences(), 2);
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&cache).ok();
+    std::fs::remove_file(&bak).ok();
+}
+
+/// A same-length, same-vocabulary rewrite of the corpus (the classic
+/// case: shuffling lines between epochs' runs) defeats both the length
+/// check and the fingerprint — the mtime rule must catch it.
+#[test]
+fn auto_mode_rebuilds_when_source_is_rewritten_same_length() {
+    let vocab = small_vocab();
+    let path = write_file("shuffle.txt", "w1 w2\nw3 w4\n");
+    let cache = with_suffix(&path, CACHE_SUFFIX);
+    let (enc, built) = EncodedCorpus::ensure(&path, &vocab, &cache).unwrap();
+    assert!(built);
+    let first = enc.reader().collect_sentences().unwrap();
+    drop(enc);
+    // Same byte length, same token multiset (fingerprint is built from
+    // the vocab, which is fixed here), different ORDER.  Sleep past
+    // coarse filesystem mtime granularity so the rewrite is strictly
+    // newer than the cache.
+    std::thread::sleep(std::time::Duration::from_millis(1100));
+    std::fs::write(&path, "w3 w4\nw1 w2\n").unwrap();
+    let (enc, built) = EncodedCorpus::ensure(&path, &vocab, &cache).unwrap();
+    assert!(built, "same-length rewrite must invalidate via mtime");
+    let second = enc.reader().collect_sentences().unwrap();
+    assert_ne!(first, second, "rebuilt cache must reflect the new order");
+    assert_eq!(second, collect_text(&path, &vocab, 0, 12));
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&cache).ok();
+    std::fs::remove_file(with_suffix(&cache, ".bak")).ok();
+}
+
+/// MAGIC is part of the public format contract; pin it so a refactor
+/// cannot silently orphan existing caches.
+#[test]
+fn format_magic_is_stable() {
+    assert_eq!(&MAGIC, b"PW2VU32\0");
+    assert_eq!(CACHE_SUFFIX, ".pw2v.u32");
+}
