@@ -20,6 +20,7 @@ use pw2v::linalg::simd::SimdMode;
 use pw2v::model::SharedModel;
 use pw2v::perfmodel::arch::broadwell;
 use pw2v::perfmodel::simulate::{fig3_series, fig3_thread_axis, FigParams};
+use pw2v::runtime::topology::{NumaMode, Topology};
 use pw2v::train;
 use pw2v::util::args::Args;
 use pw2v::util::json::Json;
@@ -48,6 +49,7 @@ fn measure_cfg(
     threads: usize,
     simd: SimdMode,
     kernel: KernelMode,
+    numa: NumaMode,
     wl: &pw2v::bench::Workload,
 ) -> f64 {
     let mut cfg = TrainConfig::default();
@@ -57,6 +59,7 @@ fn measure_cfg(
     cfg.sample = 1e-4;
     cfg.simd = simd;
     cfg.kernel = kernel;
+    cfg.numa = numa;
     let model = SharedModel::init(wl.vocab.len(), cfg.dim, cfg.seed);
     let out = train::train(&cfg, &wl.corpus, &wl.vocab, &model).unwrap();
     out.snapshot.words_per_sec()
@@ -68,7 +71,7 @@ fn measure_simd(
     simd: SimdMode,
     wl: &pw2v::bench::Workload,
 ) -> f64 {
-    measure_cfg(backend, threads, simd, KernelMode::Auto, wl)
+    measure_cfg(backend, threads, simd, KernelMode::Auto, NumaMode::Off, wl)
 }
 
 fn measure(backend: Backend, threads: usize, wl: &pw2v::bench::Workload) -> f64 {
@@ -104,8 +107,22 @@ fn main() -> anyhow::Result<()> {
         if t > 2 * hw_threads {
             break;
         }
-        let wf = measure_cfg(Backend::Gemm, t, SimdMode::Auto, KernelMode::Fused, &wl);
-        let wg = measure_cfg(Backend::Gemm, t, SimdMode::Auto, KernelMode::Gemm3, &wl);
+        let wf = measure_cfg(
+            Backend::Gemm,
+            t,
+            SimdMode::Auto,
+            KernelMode::Fused,
+            NumaMode::Off,
+            &wl,
+        );
+        let wg = measure_cfg(
+            Backend::Gemm,
+            t,
+            SimdMode::Auto,
+            KernelMode::Gemm3,
+            NumaMode::Off,
+            &wl,
+        );
         fused_by_t.push((t, wf));
         kern.row(vec![
             t.to_string(),
@@ -123,6 +140,47 @@ fn main() -> anyhow::Result<()> {
         }
     }
     kern.finish()?;
+
+    // NUMA pinning leg: the SAME gemm/fused/auto trainer with the model
+    // sharded + workers pinned (`--numa auto`) vs the flat unpinned path
+    // (`--numa off`, rows reused from the kernel ablation above).  On a
+    // one-node box the ratio is ~1.0 by construction (the sharded path
+    // adds only the shard-map lookup); the separation appears on
+    // multi-socket runners, where BENCH_throughput.json tracks it.
+    let topo_nodes = Topology::detect().map(|t| t.nodes()).unwrap_or(1);
+    let mut numa_tbl = BenchTable::new(
+        "fig3_numa_pinning",
+        &["threads", "numa_off_wps", "numa_auto_wps", "auto_over_off"],
+    );
+    let mut numa_rows: Vec<Json> = Vec::new();
+    for &(t, w_off) in &fused_by_t {
+        let w_auto = measure_cfg(
+            Backend::Gemm,
+            t,
+            SimdMode::Auto,
+            KernelMode::Fused,
+            NumaMode::Auto,
+            &wl,
+        );
+        numa_tbl.row(vec![
+            t.to_string(),
+            si(w_off),
+            si(w_auto),
+            format!("{:.2}x", w_auto / w_off.max(1.0)),
+        ]);
+        numa_rows.push(Json::obj([
+            ("threads", Json::Num(t as f64)),
+            ("nodes", Json::Num(topo_nodes as f64)),
+            ("numa_off_wps", Json::num(w_off)),
+            ("numa_auto_wps", Json::num(w_auto)),
+            ("auto_over_off", Json::num(w_auto / w_off.max(1.0))),
+        ]));
+    }
+    numa_tbl.finish()?;
+    println!(
+        "numa pinning leg measured on {topo_nodes} node(s) — ratios separate \
+         only on multi-socket machines"
+    );
 
     // Kernel-dispatch ablation: the SAME GEMM trainer, explicit-AVX2 vs
     // pinned-scalar kernels, end to end (the tentpole's speedup measured
@@ -201,6 +259,7 @@ fn main() -> anyhow::Result<()> {
     );
     if let Some(r) = report.as_mut() {
         r.set("fig3_throughput", Json::Arr(json_rows));
+        r.set("fig3_numa", Json::Arr(numa_rows));
         r.save()?;
     }
     Ok(())

@@ -13,6 +13,7 @@ use pw2v::corpus::reader::SentenceReader;
 use pw2v::corpus::vocab::Vocab;
 use pw2v::linalg::simd::{self, SimdMode};
 use pw2v::linalg::{axpy, dot, gemm_nn, gemm_nt, gemm_tn};
+use pw2v::runtime::topology::Topology;
 use pw2v::runtime::{Manifest, Runtime};
 use pw2v::sampling::unigram::UnigramSampler;
 use pw2v::util::args::Args;
@@ -31,6 +32,7 @@ fn main() -> anyhow::Result<()> {
     let mut report = args.flag("json").then(ThroughputReport::open_at_repo_root);
     simd_dispatch_bench(&mut report)?;
     sgns_window_ablation(&mut report)?;
+    numa_row_update_bench(&mut report)?;
     corpus_cache_bench(&mut report)?;
     gemm_bench()?;
     vecops_bench()?;
@@ -393,6 +395,132 @@ fn corpus_cache_bench(
         );
     }
     std::fs::remove_file(&cache).ok();
+    Ok(())
+}
+
+/// NUMA contrast for the Hogwild scatter pattern: row-sized `axpy`
+/// updates (`y += alpha·x`, D=300 — exactly a model-row scatter) swept
+/// over a working set first-touched on EACH node, driven from a thread
+/// pinned to node 0.  On a multi-socket box the remote-buffer sweep pays
+/// interconnect latency/bandwidth; the local/remote ratio is the
+/// per-row cost the `--numa` sharding avoids.  Single-node machines (and
+/// `PW2V_TOPOLOGY` overrides) report the local number only.
+fn numa_row_update_bench(
+    report: &mut Option<ThroughputReport>,
+) -> anyhow::Result<()> {
+    let topo = Topology::detect()?;
+    let nodes = topo.nodes();
+    let d = 300usize;
+    // ~157 MB per buffer — well past mainstream server LLCs (55–60 MB
+    // on the dual-socket BDW/ICX class this bench targets), so sweeps
+    // stream from the buffer's HOME memory rather than cache and the
+    // local/remote ratio measures the interconnect, not the LLC.
+    // (Exotic V-cache parts with >157 MB LLC would still cache it —
+    // the `nodes`/`rows` fields in the JSON record the geometry.)
+    let rows = 131_072usize;
+    // One buffer per node: allocated (untouched zero pages) and first
+    // WRITTEN inside a thread pinned to that node.
+    let mut bufs: Vec<(bool, Vec<f32>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..nodes)
+            .map(|node| {
+                let topo = &topo;
+                s.spawn(move || {
+                    let pinned = topo.pin_to_node(node);
+                    // The allocation maps untouched zero pages; this
+                    // fill is the first touch, from the pinned thread.
+                    let mut v = vec![0.0f32; rows * d];
+                    v.fill(0.25);
+                    (pinned, v)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let pinned_all = bufs.iter().all(|(p, _)| *p);
+    let delta = vec![0.01f32; d];
+    // Measure from node 0's perspective: sweep every buffer with
+    // row-granularity scatter-adds.
+    let stats: Vec<pw2v::bench::Stats> = std::thread::scope(|s| {
+        s.spawn(|| {
+            topo.pin_to_node(0);
+            bufs.iter_mut()
+                .map(|(_, buf)| {
+                    time(1, 5, || {
+                        for r in 0..rows {
+                            simd::axpy(
+                                1.0,
+                                &delta,
+                                &mut buf[r * d..(r + 1) * d],
+                            );
+                        }
+                        std::hint::black_box(&buf);
+                    })
+                })
+                .collect()
+        })
+        .join()
+        .unwrap()
+    });
+
+    let gbps =
+        |st: &pw2v::bench::Stats| 2.0 * (rows * d * 4) as f64 / st.median / 1e9;
+    let mut table = BenchTable::new(
+        "micro_numa",
+        &["buffer_home_node", "gb_per_sec", "vs_node0"],
+    );
+    let local = gbps(&stats[0]);
+    let mut per_node = Vec::new();
+    for (node, st) in stats.iter().enumerate() {
+        let g = gbps(st);
+        per_node.push(Json::num(g));
+        table.row(vec![
+            node.to_string(),
+            format!("{g:.1}"),
+            format!("{:.2}x", local / g.max(1e-9)),
+        ]);
+    }
+    table.finish()?;
+    if !pinned_all {
+        eprintln!(
+            "micro_numa: pinning unavailable on this host — numbers do not \
+             separate local from remote"
+        );
+    }
+    let remote = (nodes > 1).then(|| gbps(&stats[nodes - 1]));
+    match remote {
+        Some(r) => println!(
+            "numa row-update bandwidth from node 0: local {local:.1} GB/s, \
+             remote {r:.1} GB/s ({:.2}x)",
+            local / r.max(1e-9)
+        ),
+        None => println!(
+            "numa row-update bandwidth: {local:.1} GB/s (single node — no \
+             remote leg)"
+        ),
+    }
+    if let Some(rep) = report.as_mut() {
+        rep.set(
+            "micro_numa",
+            Json::obj([
+                ("nodes", Json::num(nodes as f64)),
+                ("pinned", Json::Bool(pinned_all)),
+                ("dim", Json::num(d as f64)),
+                ("rows", Json::num(rows as f64)),
+                ("per_node_gb_per_sec", Json::Arr(per_node)),
+                ("local_gb_per_sec", Json::num(local)),
+                (
+                    "remote_gb_per_sec",
+                    remote.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "local_over_remote",
+                    remote
+                        .map(|r| Json::num(local / r.max(1e-9)))
+                        .unwrap_or(Json::Null),
+                ),
+            ]),
+        );
+    }
     Ok(())
 }
 

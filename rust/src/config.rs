@@ -16,6 +16,7 @@ use std::path::{Path, PathBuf};
 use std::str::FromStr;
 
 use crate::linalg::simd::SimdMode;
+use crate::runtime::topology::NumaMode;
 use crate::util::args::Args;
 
 /// Which trainer back-end executes the SGNS updates.
@@ -258,6 +259,14 @@ pub struct TrainConfig {
     /// the text file per epoch, or train from the pre-encoded `u32`
     /// cache.
     pub corpus_cache: CorpusCacheMode,
+    /// NUMA policy (`--numa {off,auto,<nodes>}`): `off` = flat model +
+    /// unpinned workers (the pre-NUMA path bit-for-bit); `auto` = shard
+    /// model rows across the detected node topology and pin workers
+    /// node-locally; `<nodes>` = force a synthetic node count (ablations,
+    /// tests).  The shared-memory trainer holds the flat model AND the
+    /// sharded copy while training (transient 2x model memory; see
+    /// EXPERIMENTS.md §NUMA).
+    pub numa: NumaMode,
 }
 
 impl Default for TrainConfig {
@@ -283,6 +292,7 @@ impl Default for TrainConfig {
             sigmoid_mode: SigmoidMode::Exact,
             kernel: KernelMode::Auto,
             corpus_cache: CorpusCacheMode::Off,
+            numa: NumaMode::Off,
         }
     }
 }
@@ -342,6 +352,9 @@ impl TrainConfig {
         if let Some(c) = a.opt::<CorpusCacheMode>("corpus-cache")? {
             self.corpus_cache = c;
         }
+        if let Some(nm) = a.opt::<NumaMode>("numa")? {
+            self.numa = nm;
+        }
         self.validate()
     }
 
@@ -377,6 +390,15 @@ impl TrainConfig {
             "--kernel fused evaluates the exact sigmoid; \
              use --kernel gemm3 with --sigmoid table"
         );
+        // Same bound as NumaMode's FromStr: programmatically built
+        // configs must not reach the per-node allocation/thread spawn
+        // with an absurd count either.
+        if let NumaMode::Nodes(n) = self.numa {
+            anyhow::ensure!(
+                (1..=1024).contains(&n),
+                "numa nodes must be in 1..=1024 (got {n})"
+            );
+        }
         Ok(())
     }
 }
@@ -495,6 +517,31 @@ mod tests {
         );
         assert!("".parse::<CorpusCacheMode>().is_err());
         assert_eq!(CorpusCacheMode::Auto.to_string(), "auto");
+    }
+
+    #[test]
+    fn numa_knob_parsing() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.numa, NumaMode::Off);
+        let a = Args::parse(
+            "--numa auto".split_whitespace().map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.numa, NumaMode::Auto);
+        let a = Args::parse("--numa 2".split_whitespace().map(String::from));
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.numa, NumaMode::Nodes(2));
+        let a = Args::parse(
+            "--numa banana".split_whitespace().map(String::from),
+        );
+        assert!(c.apply_args(&a).is_err());
+        // validate() enforces the node bound for programmatically built
+        // configs too (FromStr is not the only entry point).
+        let mut c = TrainConfig::default();
+        c.numa = NumaMode::Nodes(500_000);
+        assert!(c.validate().is_err());
+        c.numa = NumaMode::Nodes(8);
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -6,6 +6,8 @@
 
 use std::path::Path;
 
+use crate::util::split_point;
+
 /// A byte range `[start, end)` of the corpus file.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Shard {
@@ -30,14 +32,15 @@ pub fn shards_for_file<P: AsRef<Path>>(path: P, n: usize) -> anyhow::Result<Vec<
     Ok(shards_for_len(len, n))
 }
 
-/// Split `len` bytes into `n` contiguous ranges differing by at most 1 byte.
+/// Split `len` bytes into `n` contiguous ranges differing by at most 1 byte
+/// (the repo-wide [`split_point`] rule).
 pub fn shards_for_len(len: u64, n: usize) -> Vec<Shard> {
     assert!(n > 0);
     (0..n as u64)
         .map(|i| Shard {
             index: i as usize,
-            start: len * i / n as u64,
-            end: len * (i + 1) / n as u64,
+            start: split_point(len, n as u64, i),
+            end: split_point(len, n as u64, i + 1),
         })
         .collect()
 }
@@ -50,8 +53,8 @@ pub fn subshards(shard: Shard, threads: usize) -> Vec<Shard> {
     (0..threads as u64)
         .map(|i| Shard {
             index: shard.index * threads + i as usize,
-            start: shard.start + len * i / threads as u64,
-            end: shard.start + len * (i + 1) / threads as u64,
+            start: shard.start + split_point(len, threads as u64, i),
+            end: shard.start + split_point(len, threads as u64, i + 1),
         })
         .collect()
 }

@@ -33,6 +33,7 @@ use crate::corpus::source::Corpus;
 use crate::corpus::subsample::Subsampler;
 use crate::corpus::vocab::Vocab;
 use crate::model::SharedModel;
+use crate::runtime::topology::{self, Topology};
 use crate::sampling::batch::{BatchBuilder, SuperbatchArena};
 use crate::sampling::unigram::UnigramSampler;
 use crate::train::lr::LrState;
@@ -93,8 +94,19 @@ pub fn train_distributed(
     let source = Corpus::open(corpus, vocab, &cfg.corpus_cache)?;
     let shards = shards_for_len(source.shard_len(), n);
     // Every replica starts from the SAME init (the paper's replicas do).
+    // Under `--numa {auto,<nodes>}` each replica becomes NODE-LOCAL:
+    // allocation here maps untouched zero pages, and the replica's own
+    // pinned thread performs the (bitwise-identical) init, so first-touch
+    // places the whole replica on its node.  Cross-socket traffic then
+    // flows only through the existing batched allreduce rounds instead of
+    // per-row Hogwild scatters.  `--numa off` keeps the pre-NUMA
+    // main-thread init bit-for-bit.
+    let topo = topology::resolve(cfg.numa)?;
     let mut models: Vec<SharedModel> = (0..n)
-        .map(|_| SharedModel::init(vocab.len(), cfg.dim, cfg.seed))
+        .map(|_| match &topo {
+            None => SharedModel::init(vocab.len(), cfg.dim, cfg.seed),
+            Some(_) => SharedModel::alloc(vocab.len(), cfg.dim),
+        })
         .collect();
 
     let barrier = Barrier::new(n);
@@ -116,6 +128,7 @@ pub fn train_distributed(
                 let (sampler, subsampler) = (&sampler, &subsampler);
                 let source = &source;
                 let policy = dist.policy.clone();
+                let topo = topo.as_ref();
                 handles.push(scope.spawn(move || {
                     node_loop(NodeCtx {
                         cfg,
@@ -132,6 +145,7 @@ pub fn train_distributed(
                         lr_state,
                         sampler,
                         subsampler,
+                        topo,
                     })
                 }));
             }
@@ -179,12 +193,24 @@ struct NodeCtx<'a> {
     lr_state: &'a LrState,
     sampler: &'a UnigramSampler,
     subsampler: &'a Subsampler,
+    /// `Some` = NUMA mode: pin this node thread and first-touch its
+    /// replica before training.
+    topo: Option<&'a Topology>,
 }
 
 fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
     let cfg = ctx.cfg;
     let n = ctx.models.len();
     let model = &ctx.models[ctx.idx];
+    if let Some(t) = ctx.topo {
+        // Pin FIRST, then init + allocate scratch: the replica's pages
+        // and this worker's arena land on the pinned node.  The init is
+        // bitwise-identical to `SharedModel::init(_, _, cfg.seed)`; other
+        // replicas read this one only inside allreduce rounds, which the
+        // phase-2 barrier orders after every node's init + training leg.
+        t.pin_to_node(ctx.idx % t.nodes());
+        model.first_touch_init(cfg.seed);
+    }
     let mut backend = GemmBackend::new(cfg.dim, cfg.batch, cfg.samples())
         .with_sigmoid(cfg.sigmoid_mode)
         .with_kernel(cfg.kernel);
@@ -252,7 +278,7 @@ fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
                 ctx.words_done
                     .fetch_add(raw_words as usize, Ordering::Relaxed);
                 raw_words = 0;
-                if let Err(e) = backend.process_arena(model, &arena, lr) {
+                if let Err(e) = backend.process_arena(model.store(), &arena, lr) {
                     failure = Some(e);
                     exhausted = true;
                 }
@@ -267,7 +293,7 @@ fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
             ctx.words_done
                 .fetch_add(raw_words as usize, Ordering::Relaxed);
             raw_words = 0;
-            if let Err(e) = backend.process_arena(model, &arena, lr) {
+            if let Err(e) = backend.process_arena(model.store(), &arena, lr) {
                 failure = Some(e);
             }
             arena.clear();

@@ -56,11 +56,17 @@ USAGE: pw2v <subcommand> [--key value ...]
   train       --corpus corpus.txt --out vectors.txt
               [--backend scalar|bidmach|gemm|pjrt --threads T --dim D
                --simd auto|avx2|scalar --kernel auto|fused|gemm3
-               --sigmoid exact|table --corpus-cache off|auto|PATH ...]
+               --sigmoid exact|table --corpus-cache off|auto|PATH
+               --numa off|auto|NODES ...]
               (--corpus-cache auto encodes <corpus>.pw2v.u32 once and
-               trains from the u32 cache: no per-epoch re-tokenization)
+               trains from the u32 cache: no per-epoch re-tokenization;
+               --numa auto shards M_in/M_out across NUMA nodes and pins
+               workers so Hogwild scatters stay socket-local)
   train-dist  --corpus corpus.txt --nodes N [--sync-interval W --policy sub|full]
-              [--out vectors.txt]
+              [--numa off|auto|NODES --out vectors.txt]
+              (--numa auto pins each replica to a NUMA node and
+               first-touches it there — one replica per socket keeps
+               training traffic node-local)
   eval        --vectors vectors.txt [--simset sim.tsv] [--anaset ana.txt]
   simulate    --figure 3|4 [--machine bdw|knl|hsw]
   info        [--artifacts-dir artifacts]
@@ -117,7 +123,7 @@ fn cmd_train(a: &Args) -> anyhow::Result<()> {
     let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
     eprintln!(
         "training: backend={} threads={} dim={} epochs={} simd={} kernel={} \
-         sigmoid={} corpus-cache={}",
+         sigmoid={} corpus-cache={} numa={}",
         cfg.backend,
         cfg.threads,
         cfg.dim,
@@ -125,7 +131,8 @@ fn cmd_train(a: &Args) -> anyhow::Result<()> {
         cfg.simd,
         cfg.kernel,
         cfg.sigmoid_mode,
-        cfg.corpus_cache
+        cfg.corpus_cache,
+        cfg.numa
     );
     let outcome = train::train(&cfg, &corpus, &vocab, &model)?;
     let snap = outcome.snapshot;
@@ -164,10 +171,12 @@ fn cmd_train_dist(a: &Args) -> anyhow::Result<()> {
 
     let vocab = Vocab::build_from_file(&corpus, cfg.min_count)?;
     eprintln!(
-        "distributed training: {} nodes, sync every {} words, vocab {}",
+        "distributed training: {} nodes, sync every {} words, vocab {}, \
+         numa={}",
         nodes,
         dist.sync_interval,
-        vocab.len()
+        vocab.len(),
+        cfg.numa
     );
     let outcome = train_distributed(&cfg, &dist, &corpus, &vocab)?;
     eprintln!(

@@ -8,6 +8,19 @@
 use crate::util::rng::Xoshiro256ss;
 
 pub const CACHE_LINE: usize = 64;
+
+/// One row of the standard word2vec init stream — the ONLY definition of
+/// the init distribution.  `Embedding::uniform_init` (main-thread init)
+/// and `SharedModel::first_touch_init` (pinned in-thread init for
+/// NUMA-local dist replicas) both consume the same sequential RNG through
+/// here, which is what makes their bitwise-equality contract structural
+/// rather than a copy kept in sync by hand.
+#[inline]
+pub(crate) fn uniform_init_row(row: &mut [f32], dim: usize, rng: &mut Xoshiro256ss) {
+    for x in row.iter_mut() {
+        *x = (rng.next_f32() - 0.5) / dim as f32;
+    }
+}
 const F32_PER_LINE: usize = CACHE_LINE / std::mem::size_of::<f32>();
 
 #[derive(Clone, Debug)]
@@ -36,10 +49,7 @@ impl Embedding {
         let mut e = Self::zeros(vocab, dim);
         let mut rng = Xoshiro256ss::new(seed);
         for w in 0..vocab {
-            let row = e.row_mut(w as u32);
-            for x in row.iter_mut() {
-                *x = (rng.next_f32() - 0.5) / dim as f32;
-            }
+            uniform_init_row(e.row_mut(w as u32), dim, &mut rng);
         }
         e
     }
@@ -79,6 +89,24 @@ impl Embedding {
     /// Raw base pointer (for the Hogwild wrapper).
     pub(crate) fn as_ptr(&self) -> *const f32 {
         self.data.as_ptr()
+    }
+
+    /// Racy mutable row view — the Hogwild wrappers' SINGLE audited
+    /// pointer-math site (both the flat and the NUMA-sharded store
+    /// route every row access through here).
+    ///
+    /// # Safety
+    /// Caller upholds the Hogwild contract (`model::hogwild` docs): the
+    /// embedding outlives the borrow and racy same-row access is the
+    /// algorithm's admitted approximation.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn racy_row(&self, row: u32) -> &mut [f32] {
+        let o = row as usize * self.stride;
+        std::slice::from_raw_parts_mut(
+            (self.data.as_ptr() as *mut f32).add(o),
+            self.dim,
+        )
     }
 
     /// L2-normalised copy of a row (for cosine evaluation).

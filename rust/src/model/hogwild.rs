@@ -18,9 +18,118 @@
 //!
 //! All mutation flows through `row_in/row_out` + `apply_delta`, keeping the
 //! unsafety in one audited module.
+//!
+//! # NUMA sharding
+//!
+//! Two storage layouts sit behind the [`ModelRef`] dispatcher the
+//! trainer back-ends program against:
+//!
+//! * [`SharedModel`] — the flat pair of `[V, D]` matrices (the pre-NUMA
+//!   layout, `--numa off` bit-for-bit).  Under Linux first-touch paging
+//!   the whole model lands on the allocating thread's node, so on a
+//!   multi-socket box every worker on the other socket crosses the
+//!   interconnect for every row it gathers or scatters.
+//! * [`NumaModel`] — row ranges split per NUMA node by a [`ShardMap`],
+//!   each node's segment allocated AND first-written by a thread pinned
+//!   to that node (`runtime::topology`), so its pages are node-local.
+//!   `row_in`/`row_out`/the `add_*` scatters route through the shard map;
+//!   values are bit-for-bit the flat layout's (only page placement
+//!   changes), which is what makes the `--numa off` ≡ sharded 1-thread
+//!   parity suite (`tests/numa_parity.rs`) possible.
+//!
+//! [`ModelRef`] is a `Copy` enum rather than a trait object on purpose:
+//! row gathers/scatters are the hot loop, and an enum match devirtualises
+//! to a perfectly-predicted branch with the flat path's pointer math
+//! still inlined — `--numa off` keeps pre-NUMA codegen, not just
+//! pre-NUMA values.
 
-use super::embedding::Embedding;
+use super::embedding::{uniform_init_row, Embedding};
 use crate::linalg::simd::axpy;
+use crate::runtime::topology::Topology;
+use crate::util::rng::Xoshiro256ss;
+use crate::util::split_point;
+
+/// The row-level model handle every trainer back-end programs against:
+/// racy Hogwild row views plus the scatter-add helpers, dispatching to
+/// the flat [`SharedModel`] or the NUMA-sharded [`NumaModel`].
+#[derive(Clone, Copy)]
+pub enum ModelRef<'a> {
+    Flat(&'a SharedModel),
+    Numa(&'a NumaModel),
+}
+
+impl<'a> ModelRef<'a> {
+    #[inline]
+    pub fn vocab(&self) -> usize {
+        match self {
+            ModelRef::Flat(m) => m.vocab(),
+            ModelRef::Numa(m) => m.vocab(),
+        }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        match self {
+            ModelRef::Flat(m) => m.dim(),
+            ModelRef::Numa(m) => m.dim(),
+        }
+    }
+
+    /// Racy mutable view of an input row (borrowing the underlying
+    /// model, not this `Copy` handle).
+    ///
+    /// # Safety
+    /// Caller must be a Hogwild worker scoped inside the model's lifetime;
+    /// concurrent calls on the same row are permitted by the algorithm
+    /// (module docs).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_in(&self, w: u32) -> &'a mut [f32] {
+        match *self {
+            ModelRef::Flat(m) => m.row_in(w),
+            ModelRef::Numa(m) => m.row_in(w),
+        }
+    }
+
+    /// Racy mutable view of an output row (same contract as `row_in`).
+    ///
+    /// # Safety
+    /// See [`Self::row_in`].
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_out(&self, w: u32) -> &'a mut [f32] {
+        match *self {
+            ModelRef::Flat(m) => m.row_out(w),
+            ModelRef::Numa(m) => m.row_out(w),
+        }
+    }
+
+    /// Scatter-add a delta into an input row (`M_in[w] += delta`).
+    #[inline]
+    pub fn add_in(&self, w: u32, delta: &[f32]) {
+        // SAFETY: Hogwild contract (module docs).
+        unsafe { axpy(1.0, delta, self.row_in(w)) }
+    }
+
+    /// Scatter-add a delta into an output row.
+    #[inline]
+    pub fn add_out(&self, w: u32, delta: &[f32]) {
+        // SAFETY: Hogwild contract (module docs).
+        unsafe { axpy(1.0, delta, self.row_out(w)) }
+    }
+}
+
+impl<'a> From<&'a SharedModel> for ModelRef<'a> {
+    fn from(m: &'a SharedModel) -> Self {
+        ModelRef::Flat(m)
+    }
+}
+
+impl<'a> From<&'a NumaModel> for ModelRef<'a> {
+    fn from(m: &'a NumaModel) -> Self {
+        ModelRef::Numa(m)
+    }
+}
 
 /// The shared `{M_in, M_out}` pair of the paper's Ω.
 pub struct SharedModel {
@@ -80,11 +189,7 @@ impl SharedModel {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn row_in(&self, w: u32) -> &mut [f32] {
-        let o = w as usize * self.m_in.stride();
-        std::slice::from_raw_parts_mut(
-            (self.m_in.as_ptr() as *mut f32).add(o),
-            self.m_in.dim(),
-        )
+        self.m_in.racy_row(w)
     }
 
     /// Racy mutable view of an output row (same contract as [`row_in`]).
@@ -94,11 +199,7 @@ impl SharedModel {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn row_out(&self, w: u32) -> &mut [f32] {
-        let o = w as usize * self.m_out.stride();
-        std::slice::from_raw_parts_mut(
-            (self.m_out.as_ptr() as *mut f32).add(o),
-            self.m_out.dim(),
-        )
+        self.m_out.racy_row(w)
     }
 
     /// Scatter-add a delta into an input row (`M_in[w] += delta`).
@@ -113,6 +214,219 @@ impl SharedModel {
     pub fn add_out(&self, w: u32, delta: &[f32]) {
         // SAFETY: Hogwild contract (module docs).
         unsafe { axpy(1.0, delta, self.row_out(w)) }
+    }
+
+    /// Allocate WITHOUT initialising content pages: both matrices are
+    /// zero-filled via the allocator's zeroed path, which on Linux maps
+    /// untouched copy-on-write zero pages.  The first real WRITE places
+    /// each page (first-touch) — pair with [`first_touch_init`] from a
+    /// pinned thread so a distributed replica's pages land on its node
+    /// (`dist::train` under `--numa`).
+    ///
+    /// [`first_touch_init`]: Self::first_touch_init
+    pub fn alloc(vocab: usize, dim: usize) -> Self {
+        Self::new(Embedding::zeros(vocab, dim), Embedding::zeros(vocab, dim))
+    }
+
+    /// Standard word2vec init written THROUGH the racy row views, so the
+    /// calling (pinned) thread is the first toucher of every content
+    /// page.  Bit-for-bit identical to [`Self::init`] with the same seed:
+    /// the same sequential RNG stream over `M_in` rows, zeros in `M_out`
+    /// (written explicitly — committing the page is the point).
+    pub fn first_touch_init(&self, seed: u64) {
+        let mut rng = Xoshiro256ss::new(seed);
+        let dim = self.dim();
+        for w in 0..self.vocab() as u32 {
+            // SAFETY: Hogwild contract; init races are the caller's to
+            // exclude (each dist replica is initialised by one thread).
+            uniform_init_row(unsafe { self.row_in(w) }, dim, &mut rng);
+            // SAFETY: as above.
+            unsafe { self.row_out(w) }.fill(0.0);
+        }
+    }
+}
+
+impl SharedModel {
+    /// This model as the back-end-facing [`ModelRef`] handle.
+    #[inline]
+    pub fn store(&self) -> ModelRef<'_> {
+        ModelRef::Flat(self)
+    }
+}
+
+/// Contiguous partition of the model's `0..vocab` rows across NUMA
+/// nodes: node `i` owns rows `boundaries[i]..boundaries[i+1]`, computed
+/// with the shared [`split_point`] rule corpus shards use.  Degenerate
+/// geometries are legal: a single node owns everything; with more nodes
+/// than rows some nodes own empty ranges (and never see a row access).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    vocab: usize,
+    boundaries: Vec<u32>,
+}
+
+impl ShardMap {
+    pub fn contiguous(vocab: usize, nodes: usize) -> Self {
+        assert!(nodes >= 1, "shard map needs >= 1 node");
+        assert!(vocab <= u32::MAX as usize);
+        let boundaries = (0..=nodes as u64)
+            .map(|i| split_point(vocab as u64, nodes as u64, i) as u32)
+            .collect();
+        Self { vocab, boundaries }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.boundaries.len() - 1
+    }
+
+    /// Rows owned by `node`.
+    pub fn range(&self, node: usize) -> std::ops::Range<u32> {
+        self.boundaries[node]..self.boundaries[node + 1]
+    }
+
+    /// `(node, row-local index)` of a global row — the hot-path routing
+    /// every sharded row access goes through.  Arithmetic guess plus a
+    /// ±1 fix-up (the floor-division boundaries keep any guess within
+    /// one node of the answer for equal-ish ranges; the loops also cover
+    /// degenerate empty-range geometries).
+    #[inline]
+    pub fn locate(&self, row: u32) -> (usize, u32) {
+        debug_assert!((row as usize) < self.vocab, "row {row} out of range");
+        let n = self.nodes() as u64;
+        let mut g = ((row as u64 * n) / self.vocab as u64) as usize;
+        while row < self.boundaries[g] {
+            g -= 1;
+        }
+        while row >= self.boundaries[g + 1] {
+            g += 1;
+        }
+        (g, row - self.boundaries[g])
+    }
+}
+
+/// One node's slice of the model: local `[rows, D]` matrices whose pages
+/// were first-touched by a thread pinned to that node.
+struct NodeShard {
+    m_in: Embedding,
+    m_out: Embedding,
+}
+
+/// The NUMA-sharded model store: `M_in`/`M_out` row ranges per node
+/// (paper Sec. IV's dual-socket setting; `--numa {auto,<nodes>}`).
+///
+/// Values are bit-for-bit the flat [`SharedModel`]'s — construction
+/// copies rows from a source model and [`copy_back`](Self::copy_back)
+/// returns them — so the sharded path changes WHERE rows live, never
+/// what they hold.
+pub struct NumaModel {
+    map: ShardMap,
+    dim: usize,
+    shards: Vec<NodeShard>,
+}
+
+// SAFETY: same Hogwild contract as `SharedModel` — the segments are
+// owned by this struct, outlive all scoped workers, and racy row access
+// is the algorithm's admitted approximation.
+unsafe impl Sync for NumaModel {}
+
+impl NumaModel {
+    /// Shard `src` across `topo`'s nodes.  Each node's segment is
+    /// allocated and FIRST WRITTEN inside a thread pinned to that node,
+    /// so under Linux first-touch policy its pages are node-local.
+    /// Pinning is best-effort (synthetic test topologies name cpus that
+    /// may not exist); the copied values are identical either way.
+    pub fn from_model(src: &SharedModel, topo: &Topology) -> Self {
+        let map = ShardMap::contiguous(src.vocab(), topo.nodes());
+        let dim = src.dim();
+        let mut shards: Vec<Option<NodeShard>> =
+            (0..topo.nodes()).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for (node, slot) in shards.iter_mut().enumerate() {
+                let map = &map;
+                scope.spawn(move || {
+                    topo.pin_to_node(node);
+                    let range = map.range(node);
+                    let rows = (range.end - range.start) as usize;
+                    let mut m_in = Embedding::zeros(rows, dim);
+                    let mut m_out = Embedding::zeros(rows, dim);
+                    for (local, global) in range.enumerate() {
+                        m_in.row_mut(local as u32)
+                            .copy_from_slice(src.m_in().row(global));
+                        m_out
+                            .row_mut(local as u32)
+                            .copy_from_slice(src.m_out().row(global));
+                    }
+                    *slot = Some(NodeShard { m_in, m_out });
+                });
+            }
+        });
+        Self {
+            map,
+            dim,
+            shards: shards.into_iter().map(|s| s.expect("init joined")).collect(),
+        }
+    }
+
+    pub fn shard_map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    /// This model as the back-end-facing [`ModelRef`] handle.
+    #[inline]
+    pub fn store(&self) -> ModelRef<'_> {
+        ModelRef::Numa(self)
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.map.vocab()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Racy mutable view of an input row, routed through the shard map.
+    ///
+    /// # Safety
+    /// Same Hogwild contract as [`SharedModel::row_in`].
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_in(&self, w: u32) -> &mut [f32] {
+        let (node, local) = self.map.locate(w);
+        self.shards[node].m_in.racy_row(local)
+    }
+
+    /// Racy mutable view of an output row, routed through the shard map.
+    ///
+    /// # Safety
+    /// Same Hogwild contract as [`SharedModel::row_in`].
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_out(&self, w: u32) -> &mut [f32] {
+        let (node, local) = self.map.locate(w);
+        self.shards[node].m_out.racy_row(local)
+    }
+
+    /// Copy the trained rows back into a flat model (after all workers
+    /// joined; the trainer returns results through the caller's
+    /// `SharedModel`, so every downstream consumer — eval, save,
+    /// allreduce — is layout-agnostic).  (Scatter-adds go through
+    /// [`ModelRef::add_in`]/[`add_out`](ModelRef::add_out) — the single
+    /// update entry point for both layouts.)
+    pub fn copy_back(&self, dst: &SharedModel) {
+        assert_eq!(dst.vocab(), self.map.vocab());
+        assert_eq!(dst.dim(), self.dim);
+        for w in 0..self.map.vocab() as u32 {
+            // SAFETY: single-threaded epilogue; Hogwild contract.
+            unsafe {
+                dst.row_in(w).copy_from_slice(self.row_in(w));
+                dst.row_out(w).copy_from_slice(self.row_out(w));
+            }
+        }
     }
 }
 
@@ -187,6 +501,117 @@ mod tests {
         for &x in m.m_out().row(0) {
             assert!(x > expected * 0.5, "lost too many updates: {x}/{expected}");
             assert!(x <= expected + 0.5);
+        }
+    }
+
+    #[test]
+    fn alloc_plus_first_touch_init_matches_init_bitwise() {
+        let a = SharedModel::init(70, 24, 99);
+        let b = SharedModel::alloc(70, 24);
+        b.first_touch_init(99);
+        assert_eq!(a.m_in().data(), b.m_in().data());
+        assert_eq!(a.m_out().data(), b.m_out().data());
+    }
+
+    #[test]
+    fn shard_map_partitions_exactly() {
+        // (vocab, nodes) including uneven rows-per-node, a single node,
+        // and more nodes than rows.
+        for (vocab, nodes) in
+            [(10usize, 3usize), (100, 1), (2, 4), (7, 7), (1000, 6), (1, 3)]
+        {
+            let map = ShardMap::contiguous(vocab, nodes);
+            assert_eq!(map.nodes(), nodes);
+            assert_eq!(map.range(0).start, 0);
+            assert_eq!(map.range(nodes - 1).end, vocab as u32);
+            let mut covered = 0u64;
+            for i in 0..nodes {
+                let r = map.range(i);
+                assert!(r.start <= r.end, "({vocab},{nodes}) node {i}");
+                if i + 1 < nodes {
+                    assert_eq!(r.end, map.range(i + 1).start);
+                }
+                covered += (r.end - r.start) as u64;
+            }
+            assert_eq!(covered, vocab as u64, "({vocab},{nodes})");
+            // locate agrees with the ranges for EVERY row.
+            for row in 0..vocab as u32 {
+                let (node, local) = map.locate(row);
+                let r = map.range(node);
+                assert!(
+                    r.contains(&row),
+                    "({vocab},{nodes}) row {row} -> node {node} {r:?}"
+                );
+                assert_eq!(local, row - r.start);
+            }
+        }
+    }
+
+    #[test]
+    fn numa_model_roundtrip_is_bitwise() {
+        // Sharded copy-in + copy-back reproduces the flat model exactly,
+        // across node counts including empty shards (nodes > rows).
+        for nodes in [1usize, 2, 3, 64] {
+            let topo = crate::runtime::topology::Topology::single_node()
+                .regroup(nodes);
+            let src = SharedModel::init(50, 16, 7);
+            let numa = NumaModel::from_model(&src, &topo);
+            assert_eq!(numa.vocab(), 50);
+            assert_eq!(numa.dim(), 16);
+            for w in 0..50u32 {
+                // SAFETY: single-threaded test.
+                unsafe {
+                    assert_eq!(&*numa.row_in(w), src.m_in().row(w));
+                    assert_eq!(&*numa.row_out(w), src.m_out().row(w));
+                }
+            }
+            let dst = SharedModel::init(50, 16, 1234); // different content
+            numa.copy_back(&dst);
+            assert_eq!(dst.m_in().data(), src.m_in().data());
+            assert_eq!(dst.m_out().data(), src.m_out().data());
+        }
+    }
+
+    #[test]
+    fn numa_model_scatters_route_through_shard_map() {
+        let topo =
+            crate::runtime::topology::Topology::single_node().regroup(3);
+        let src = SharedModel::init(10, 4, 3);
+        let numa = NumaModel::from_model(&src, &topo);
+        // A row in every shard, updated through the ModelRef-facing
+        // scatters (the single update entry point for both layouts).
+        for w in [0u32, 4, 9] {
+            numa.store().add_in(w, &[1.0, 2.0, 3.0, 4.0]);
+            numa.store().add_out(w, &[4.0, 3.0, 2.0, 1.0]);
+        }
+        let dst = SharedModel::alloc(10, 4);
+        numa.copy_back(&dst);
+        for w in 0..10u32 {
+            let (din, dout): (Vec<f32>, Vec<f32>) = (
+                dst.m_in()
+                    .row(w)
+                    .iter()
+                    .zip(src.m_in().row(w))
+                    .map(|(a, b)| a - b)
+                    .collect(),
+                dst.m_out()
+                    .row(w)
+                    .iter()
+                    .zip(src.m_out().row(w))
+                    .map(|(a, b)| a - b)
+                    .collect(),
+            );
+            if [0u32, 4, 9].contains(&w) {
+                for (i, x) in din.iter().enumerate() {
+                    assert!((x - (i + 1) as f32).abs() < 1e-6, "row {w}");
+                }
+                for (i, x) in dout.iter().enumerate() {
+                    assert!((x - (4 - i) as f32).abs() < 1e-6, "row {w}");
+                }
+            } else {
+                assert!(din.iter().all(|&x| x == 0.0), "row {w} touched");
+                assert!(dout.iter().all(|&x| x == 0.0), "row {w} touched");
+            }
         }
     }
 }

@@ -1,9 +1,10 @@
 //! Model substrate: the `[V, D]` embedding matrices `M_in`/`M_out`, their
-//! lock-free Hogwild sharing wrapper, and word2vec-format persistence.
+//! lock-free Hogwild sharing wrappers (flat and NUMA-sharded), and
+//! word2vec-format persistence.
 
 pub mod embedding;
 pub mod hogwild;
 pub mod io;
 
 pub use embedding::Embedding;
-pub use hogwild::SharedModel;
+pub use hogwild::{ModelRef, NumaModel, ShardMap, SharedModel};

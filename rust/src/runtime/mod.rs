@@ -17,6 +17,7 @@ pub mod executable;
 pub mod manifest;
 #[cfg(not(feature = "pjrt"))]
 pub mod stub;
+pub mod topology;
 
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;

@@ -1,0 +1,404 @@
+//! NUMA topology discovery + thread pinning — the substrate of the
+//! NUMA-aware sharding PR.
+//!
+//! The paper's shared-memory results (Sec. IV, dual-socket Broadwell)
+//! depend on Hogwild scatters staying socket-local; the follow-up work
+//! (arXiv:1611.06172) makes the same argument for KNL/multi-socket
+//! scaling.  Before this layer existed the trainer allocated one flat
+//! `M_in`/`M_out` pair from the main thread — under Linux first-touch
+//! policy the ENTIRE model landed on the main thread's node, so on a
+//! multi-socket box every worker on the other socket crossed the
+//! interconnect for every row gather and scatter.
+//!
+//! Discovery order (`Topology::detect`):
+//!
+//! 1. `PW2V_TOPOLOGY` env override — a `;`-separated list of cpulists,
+//!    one per synthetic node (e.g. `0-3,8;4-7`), for tests and CI
+//!    matrices on machines whose real topology is a single node;
+//! 2. `/sys/devices/system/node/node*/cpulist` on Linux;
+//! 3. a single synthetic node holding cpu `0..available_parallelism`
+//!    (non-Linux, or `/sys` unreadable).
+//!
+//! Pinning goes through a raw `sched_setaffinity(2)` declaration against
+//! the libc std already links — the same no-new-crates discipline as the
+//! corpus cache's raw `mmap(2)` (see `corpus::encoded`).  Pinning is
+//! best-effort everywhere: a cpu list that names offline cpus (synthetic
+//! test topologies) or a non-Linux host simply leaves the thread
+//! unpinned, and the sharded-model math is identical either way (only
+//! page placement and cache traffic change).
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::util::split_point;
+
+/// The `--numa` config knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum NumaMode {
+    /// Flat model, unpinned workers — bit-for-bit the pre-NUMA path.
+    #[default]
+    Off,
+    /// Shard the model across the detected topology and pin workers.
+    Auto,
+    /// Shard across exactly N synthetic nodes (the detected cpu set is
+    /// split into N contiguous groups) — the ablation/test knob.
+    Nodes(usize),
+}
+
+impl FromStr for NumaMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Ok(NumaMode::Off),
+            "auto" => Ok(NumaMode::Auto),
+            other => {
+                let n: usize = other.parse().map_err(|_| {
+                    anyhow::anyhow!("unknown numa mode '{other}' (off|auto|<nodes>)")
+                })?;
+                // Upper bound: the sharded store spawns one init thread
+                // and one boundary entry per node, so an absurd count
+                // must fail here as a config error, not abort later in
+                // allocation or thread spawn.  1024 comfortably exceeds
+                // any real machine's node count (matches the pinning
+                // mask's cpu width).
+                anyhow::ensure!(
+                    (1..=1024).contains(&n),
+                    "--numa <nodes> must be in 1..=1024 (got {n})"
+                );
+                Ok(NumaMode::Nodes(n))
+            }
+        }
+    }
+}
+
+impl fmt::Display for NumaMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NumaMode::Off => f.write_str("off"),
+            NumaMode::Auto => f.write_str("auto"),
+            NumaMode::Nodes(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+/// One NUMA node: its id and the cpus that live on it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NumaNode {
+    pub id: usize,
+    pub cpus: Vec<usize>,
+}
+
+/// The machine's node/cpu geometry (real, overridden, or synthetic).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    nodes: Vec<NumaNode>,
+}
+
+impl Topology {
+    /// Discover the topology: `PW2V_TOPOLOGY` override, else sysfs, else
+    /// one synthetic node.  A malformed override is a hard error (a
+    /// silently ignored test matrix would test nothing).
+    pub fn detect() -> anyhow::Result<Self> {
+        if let Ok(spec) = std::env::var("PW2V_TOPOLOGY") {
+            return Self::from_spec(&spec)
+                .map_err(|e| anyhow::anyhow!("PW2V_TOPOLOGY: {e}"));
+        }
+        Ok(Self::from_sysfs().unwrap_or_else(Self::single_node))
+    }
+
+    /// Parse a synthetic topology spec: cpulists separated by `;`, one
+    /// per node (`0-3,8;4-7` = node0 {0,1,2,3,8}, node1 {4,5,6,7}).
+    pub fn from_spec(spec: &str) -> anyhow::Result<Self> {
+        let mut nodes = Vec::new();
+        for (id, part) in spec.split(';').enumerate() {
+            let cpus = parse_cpulist(part)?;
+            anyhow::ensure!(!cpus.is_empty(), "node {id}: empty cpulist");
+            nodes.push(NumaNode { id, cpus });
+        }
+        anyhow::ensure!(!nodes.is_empty(), "empty topology spec");
+        Ok(Self { nodes })
+    }
+
+    /// `/sys/devices/system/node/node<k>/cpulist`; `None` when the sysfs
+    /// tree is absent/unreadable (non-Linux, restricted containers).
+    fn from_sysfs() -> Option<Self> {
+        let dir = std::path::Path::new("/sys/devices/system/node");
+        let mut ids: Vec<usize> = std::fs::read_dir(dir)
+            .ok()?
+            .filter_map(|e| {
+                let name = e.ok()?.file_name().into_string().ok()?;
+                name.strip_prefix("node")?.parse::<usize>().ok()
+            })
+            .collect();
+        ids.sort_unstable();
+        let mut nodes = Vec::new();
+        for id in ids {
+            let list =
+                std::fs::read_to_string(dir.join(format!("node{id}/cpulist")))
+                    .ok()?;
+            let cpus = parse_cpulist(list.trim()).ok()?;
+            if !cpus.is_empty() {
+                nodes.push(NumaNode { id, cpus });
+            }
+        }
+        if nodes.is_empty() {
+            None
+        } else {
+            Some(Self { nodes })
+        }
+    }
+
+    /// The fallback geometry: everything on one synthetic node.
+    pub fn single_node() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self {
+            nodes: vec![NumaNode {
+                id: 0,
+                cpus: (0..n).collect(),
+            }],
+        }
+    }
+
+    /// Regroup into exactly `n` synthetic nodes (`--numa <n>`): the full
+    /// cpu list, in node order, split into `n` contiguous groups with
+    /// the shared [`split_point`] rule corpus shards use.  Groups may be
+    /// empty when `n` exceeds the cpu count — those nodes simply train
+    /// unpinned.
+    pub fn regroup(&self, n: usize) -> Self {
+        assert!(n >= 1);
+        let all: Vec<usize> =
+            self.nodes.iter().flat_map(|nd| nd.cpus.iter().copied()).collect();
+        let len = all.len() as u64;
+        let nodes = (0..n)
+            .map(|i| NumaNode {
+                id: i,
+                cpus: all[split_point(len, n as u64, i as u64) as usize
+                    ..split_point(len, n as u64, i as u64 + 1) as usize]
+                    .to_vec(),
+            })
+            .collect();
+        Self { nodes }
+    }
+
+    /// The first `n` REAL nodes, boundaries intact — the `--numa auto`
+    /// low-thread clamp: unlike [`regroup`](Self::regroup), a group here
+    /// never straddles two physical nodes, so first-touch placement
+    /// stays node-pure.
+    pub fn take_nodes(&self, n: usize) -> Self {
+        assert!(n >= 1);
+        Self {
+            nodes: self.nodes.iter().take(n).cloned().collect(),
+        }
+    }
+
+    /// Number of nodes.
+    pub fn nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Cpus of node `i` (empty slice for out-of-range / cpu-less nodes).
+    pub fn cpus(&self, i: usize) -> &[usize] {
+        self.nodes.get(i).map(|n| n.cpus.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn total_cpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).sum()
+    }
+
+    /// Pin the CALLING thread to node `i`'s cpus.  Best-effort: returns
+    /// `false` (thread left as-is) on non-Linux hosts, empty/out-of-range
+    /// cpu sets, or kernel rejection (offline cpus in a synthetic spec).
+    pub fn pin_to_node(&self, i: usize) -> bool {
+        pin_to_cpus(self.cpus(i))
+    }
+}
+
+/// Resolve a `--numa` mode to the topology the sharded path should use
+/// (`None` = flat path).
+pub fn resolve(mode: NumaMode) -> anyhow::Result<Option<Topology>> {
+    Ok(match mode {
+        NumaMode::Off => None,
+        NumaMode::Auto => Some(Topology::detect()?),
+        NumaMode::Nodes(n) => Some(Topology::detect()?.regroup(n)),
+    })
+}
+
+/// Parse a kernel-style cpulist: `0-3,8,10-11`.
+fn parse_cpulist(s: &str) -> anyhow::Result<Vec<usize>> {
+    let mut cpus = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize = lo.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("bad cpulist range start '{part}'")
+                })?;
+                let hi: usize = hi.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("bad cpulist range end '{part}'")
+                })?;
+                anyhow::ensure!(lo <= hi, "inverted cpulist range '{part}'");
+                cpus.extend(lo..=hi);
+            }
+            None => cpus.push(part.parse().map_err(|_| {
+                anyhow::anyhow!("bad cpulist entry '{part}'")
+            })?),
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    Ok(cpus)
+}
+
+/// Pin the calling thread to `cpus` via raw `sched_setaffinity(2)` (pid 0
+/// = calling thread on Linux).  `std` already links libc, so a direct
+/// declaration keeps the offline build dependency-free — the same
+/// discipline as `corpus::encoded`'s raw `mmap(2)`.
+#[cfg(target_os = "linux")]
+pub fn pin_to_cpus(cpus: &[usize]) -> bool {
+    // Fixed-width 1024-cpu mask (glibc's default cpu_set_t size).
+    const SETSIZE: usize = 1024;
+    let mut mask = [0u64; SETSIZE / 64];
+    let mut any = false;
+    for &c in cpus {
+        if c < SETSIZE {
+            mask[c / 64] |= 1u64 << (c % 64);
+            any = true;
+        }
+    }
+    if !any {
+        return false;
+    }
+    extern "C" {
+        fn sched_setaffinity(
+            pid: i32,
+            cpusetsize: usize,
+            mask: *const u64,
+        ) -> i32;
+    }
+    // SAFETY: mask is a valid, initialised buffer of the passed size; the
+    // call only reads it and mutates kernel-side scheduler state for the
+    // calling thread.
+    unsafe {
+        sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to_cpus(_cpus: &[usize]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_grammar() {
+        assert_eq!(parse_cpulist("0-3,8,10-11").unwrap(), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpulist("5").unwrap(), vec![5]);
+        assert_eq!(parse_cpulist(" 1 , 0 ").unwrap(), vec![0, 1]);
+        // Duplicates collapse; empty segments are tolerated (sysfs files
+        // end with a newline-stripped but sometimes trailing comma).
+        assert_eq!(parse_cpulist("2,2,1,").unwrap(), vec![1, 2]);
+        assert!(parse_cpulist("3-1").is_err());
+        assert!(parse_cpulist("x").is_err());
+        assert!(parse_cpulist("1-y").is_err());
+    }
+
+    #[test]
+    fn spec_parsing() {
+        let t = Topology::from_spec("0-3,8;4-7").unwrap();
+        assert_eq!(t.nodes(), 2);
+        assert_eq!(t.cpus(0), &[0, 1, 2, 3, 8]);
+        assert_eq!(t.cpus(1), &[4, 5, 6, 7]);
+        assert_eq!(t.total_cpus(), 9);
+        // Out-of-range node: empty, unpinnable, but not a panic.
+        assert_eq!(t.cpus(7), &[] as &[usize]);
+        assert!(!t.pin_to_node(7));
+        assert!(Topology::from_spec("").is_err());
+        assert!(Topology::from_spec("0-3;;4").is_err());
+        assert!(Topology::from_spec("0-3;oops").is_err());
+    }
+
+    #[test]
+    fn detect_always_yields_a_node() {
+        // Whatever the host looks like (real sysfs, env override from the
+        // CI matrix, or the fallback), detection must produce >= 1 node
+        // with >= 1 cpu.
+        let t = Topology::detect().unwrap();
+        assert!(t.nodes() >= 1);
+        assert!(t.total_cpus() >= 1);
+    }
+
+    #[test]
+    fn regroup_splits_contiguously() {
+        let t = Topology::from_spec("0-7").unwrap();
+        let r = t.regroup(2);
+        assert_eq!(r.nodes(), 2);
+        assert_eq!(r.cpus(0), &[0, 1, 2, 3]);
+        assert_eq!(r.cpus(1), &[4, 5, 6, 7]);
+        // Uneven split balances within one cpu.
+        let r = t.regroup(3);
+        let sizes: Vec<usize> = (0..3).map(|i| r.cpus(i).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 8);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        // More nodes than cpus: empty groups are legal (train unpinned).
+        let r = Topology::from_spec("0").unwrap().regroup(3);
+        assert_eq!(r.nodes(), 3);
+        assert_eq!(r.total_cpus(), 1);
+    }
+
+    #[test]
+    fn take_nodes_keeps_real_boundaries() {
+        let t = Topology::from_spec("0-3;4-7;8-11").unwrap();
+        let clamped = t.take_nodes(2);
+        assert_eq!(clamped.nodes(), 2);
+        // Unlike regroup, the kept groups ARE the physical nodes.
+        assert_eq!(clamped.cpus(0), t.cpus(0));
+        assert_eq!(clamped.cpus(1), t.cpus(1));
+        // Clamping above the node count is a no-op.
+        assert_eq!(t.take_nodes(9), t);
+    }
+
+    #[test]
+    fn numa_mode_parsing_and_display() {
+        assert_eq!("off".parse::<NumaMode>().unwrap(), NumaMode::Off);
+        assert_eq!("AUTO".parse::<NumaMode>().unwrap(), NumaMode::Auto);
+        assert_eq!("2".parse::<NumaMode>().unwrap(), NumaMode::Nodes(2));
+        assert_eq!("1024".parse::<NumaMode>().unwrap(), NumaMode::Nodes(1024));
+        assert!("0".parse::<NumaMode>().is_err());
+        // Absurd node counts must die at config parse, not in the
+        // sharded store's per-node allocation/thread spawn.
+        assert!("1025".parse::<NumaMode>().is_err());
+        assert!("4000000000".parse::<NumaMode>().is_err());
+        assert!("sockets".parse::<NumaMode>().is_err());
+        assert_eq!(NumaMode::Off.to_string(), "off");
+        assert_eq!(NumaMode::Nodes(4).to_string(), "4");
+        assert_eq!(NumaMode::default(), NumaMode::Off);
+    }
+
+    #[test]
+    fn resolve_modes() {
+        assert!(resolve(NumaMode::Off).unwrap().is_none());
+        let t = resolve(NumaMode::Nodes(2)).unwrap().unwrap();
+        assert_eq!(t.nodes(), 2);
+        assert!(resolve(NumaMode::Auto).unwrap().is_some());
+    }
+
+    /// Pinning to the current topology's node 0 must either succeed (Linux
+    /// with online cpus) or degrade to a clean `false` — never panic.
+    #[test]
+    fn pinning_is_best_effort() {
+        let t = Topology::detect().unwrap();
+        let _ = t.pin_to_node(0);
+        assert!(!pin_to_cpus(&[]));
+        // Cpus beyond the fixed mask width are ignored, not UB.
+        assert!(!pin_to_cpus(&[100_000]));
+    }
+}

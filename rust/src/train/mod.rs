@@ -23,16 +23,26 @@ pub mod trainer;
 pub use lr::{LrState};
 pub use trainer::{train, TrainOutcome};
 
-use crate::model::SharedModel;
+use crate::model::{ModelRef, SharedModel};
 use crate::sampling::batch::{SuperbatchArena, Window};
 
 /// A trainer back-end: processes a block of windows against the shared
 /// model.  One instance per worker thread (holds scratch + private RNG);
 /// the model is shared Hogwild-style.
+///
+/// Back-ends see the model through the [`ModelRef`] row handle, so the
+/// same code drives the flat layout (`--numa off`) and the NUMA-sharded
+/// layout (`--numa {auto,<nodes>}`) — the store decides where rows
+/// live, the back-end never does (and the enum dispatch keeps the flat
+/// path's row pointer math inlined).
 pub trait Backend {
     /// Process `windows` at learning rate `lr`, mutating `model`.
-    fn process(&mut self, model: &SharedModel, windows: &[Window], lr: f32)
-        -> anyhow::Result<()>;
+    fn process(
+        &mut self,
+        model: ModelRef<'_>,
+        windows: &[Window],
+        lr: f32,
+    ) -> anyhow::Result<()>;
 
     /// Process a flat superbatch arena (the trainer's hot path).
     ///
@@ -43,7 +53,7 @@ pub trait Backend {
     /// allocation-free.
     fn process_arena(
         &mut self,
-        model: &SharedModel,
+        model: ModelRef<'_>,
         arena: &SuperbatchArena,
         lr: f32,
     ) -> anyhow::Result<()> {
@@ -90,7 +100,7 @@ mod obj_tests {
         let before = ns_objective(&model, &windows);
         let mut b = super::sgd_gemm::GemmBackend::new(16, 8, 6);
         for _ in 0..50 {
-            b.process(&model, &windows, 0.05).unwrap();
+            b.process(model.store(), &windows, 0.05).unwrap();
         }
         let after = ns_objective(&model, &windows);
         assert!(after > before, "{before} -> {after}");

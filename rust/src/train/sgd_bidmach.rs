@@ -19,7 +19,7 @@
 use super::Backend;
 use crate::linalg::sigmoid::sigmoid_exact;
 use crate::linalg::vecops::{axpy, dot};
-use crate::model::SharedModel;
+use crate::model::ModelRef;
 use crate::sampling::batch::Window;
 
 pub struct BidmachBackend {
@@ -44,7 +44,7 @@ impl BidmachBackend {
     #[inline]
     fn vector_pass(
         &mut self,
-        model: &SharedModel,
+        model: ModelRef<'_>,
         inputs: &[u32],
         out_word: u32,
         label: f32,
@@ -77,7 +77,7 @@ impl BidmachBackend {
 impl Backend for BidmachBackend {
     fn process(
         &mut self,
-        model: &SharedModel,
+        model: ModelRef<'_>,
         windows: &[Window],
         lr: f32,
     ) -> anyhow::Result<()> {
@@ -104,6 +104,7 @@ impl Backend for BidmachBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::SharedModel;
 
     fn window(inputs: &[u32], target: u32, negs: &[u32]) -> Window {
         let mut outputs = vec![target];
@@ -121,7 +122,7 @@ mod tests {
         let w = window(&[1, 2, 3], 10, &[11, 12]);
         let sim = |a: u32, b_: u32| dot(model.m_in().row(a), model.m_out().row(b_));
         for _ in 0..300 {
-            b.process(&model, std::slice::from_ref(&w), 0.05).unwrap();
+            b.process(model.store(), std::slice::from_ref(&w), 0.05).unwrap();
         }
         assert!(sim(1, 10) > 0.5, "positive sim {}", sim(1, 10));
         assert!(sim(1, 11) < 0.1, "negative sim {}", sim(1, 11));
@@ -134,7 +135,7 @@ mod tests {
         let before_out: Vec<Vec<f32>> =
             (0..30u32).map(|w| model.m_out().row(w).to_vec()).collect();
         let mut b = BidmachBackend::new(16);
-        b.process(&model, &[window(&[1, 2], 5, &[7, 8])], 0.1)
+        b.process(model.store(), &[window(&[1, 2], 5, &[7, 8])], 0.1)
             .unwrap();
         for w in 0..30u32 {
             let touched = [5u32, 7, 8].contains(&w);
@@ -148,6 +149,6 @@ mod tests {
         let model = SharedModel::init(10, 4, 5);
         let mut b = BidmachBackend::new(2);
         let w = window(&[1, 2, 3], 5, &[6]);
-        assert!(b.process(&model, &[w], 0.1).is_err());
+        assert!(b.process(model.store(), &[w], 0.1).is_err());
     }
 }

@@ -54,7 +54,7 @@ use super::Backend;
 use crate::config::{KernelMode, SigmoidMode};
 use crate::linalg::sigmoid::SigmoidTable;
 use crate::linalg::simd;
-use crate::model::SharedModel;
+use crate::model::ModelRef;
 use crate::sampling::batch::{SuperbatchArena, Window};
 
 /// FxHash-style multiply-mix hasher for the `u32` output-id dedup map:
@@ -202,7 +202,7 @@ impl GemmBackend {
     }
 
     /// One window: gather → fused kernel (or 3-GEMM chain) → scatter.
-    fn window(&mut self, model: &SharedModel, w: &Window, lr: f32) {
+    fn window(&mut self, model: ModelRef<'_>, w: &Window, lr: f32) {
         let d = self.dim;
         let b = w.inputs.len();
         let s = w.outputs.len();
@@ -290,7 +290,7 @@ impl GemmBackend {
     }
 
     /// Scatter `dwi` rows for `inputs`, applying the update rule.
-    fn scatter_dwi(&mut self, model: &SharedModel, inputs: &[u32]) {
+    fn scatter_dwi(&mut self, model: ModelRef<'_>, inputs: &[u32]) {
         let d = self.dim;
         for (i, &inp) in inputs.iter().enumerate() {
             let delta = &mut self.dwi[i * d..(i + 1) * d];
@@ -307,7 +307,7 @@ impl GemmBackend {
 impl Backend for GemmBackend {
     fn process(
         &mut self,
-        model: &SharedModel,
+        model: ModelRef<'_>,
         windows: &[Window],
         lr: f32,
     ) -> anyhow::Result<()> {
@@ -327,7 +327,7 @@ impl Backend for GemmBackend {
     /// superbatch.
     fn process_arena(
         &mut self,
-        model: &SharedModel,
+        model: ModelRef<'_>,
         arena: &SuperbatchArena,
         lr: f32,
     ) -> anyhow::Result<()> {
@@ -475,6 +475,7 @@ impl Backend for GemmBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::SharedModel;
     use crate::linalg::sigmoid::sigmoid_exact;
     use crate::linalg::vecops::dot;
     use crate::sampling::batch::SuperbatchArena;
@@ -508,7 +509,7 @@ mod tests {
         let lr = 0.07f32;
 
         let mut g = GemmBackend::new(dim, 16, 6);
-        g.process(&model_g, std::slice::from_ref(&w), lr).unwrap();
+        g.process(model_g.store(), std::slice::from_ref(&w), lr).unwrap();
 
         // Naive: compute ALL gradients from pre-update state, apply at end.
         let b = w.inputs.len();
@@ -557,9 +558,9 @@ mod tests {
         let w = window(&[1, 2, 3], 10, &[20, 21, 21, 22, 23]);
         let mut g1 = GemmBackend::new(dim, 16, 6);
         let mut g2 = GemmBackend::new(dim, 16, 6);
-        g1.process(&model_w, std::slice::from_ref(&w), 0.05).unwrap();
+        g1.process(model_w.store(), std::slice::from_ref(&w), 0.05).unwrap();
         let arena = arena_of(std::slice::from_ref(&w), 16, 6);
-        g2.process_arena(&model_a, &arena, 0.05).unwrap();
+        g2.process_arena(model_a.store(), &arena, 0.05).unwrap();
         for r in 0..40u32 {
             for (x, y) in model_w.m_in().row(r).iter().zip(model_a.m_in().row(r)) {
                 assert!((x - y).abs() < 1e-6, "m_in row {r}");
@@ -585,7 +586,7 @@ mod tests {
         let mut g = GemmBackend::new(dim, 16, 6);
         let before = crate::train::ns_objective(&model, &windows);
         for _ in 0..200 {
-            g.process_arena(&model, &arena, 0.05).unwrap();
+            g.process_arena(model.store(), &arena, 0.05).unwrap();
         }
         let after = crate::train::ns_objective(&model, &windows);
         assert!(after > before, "{before} -> {after}");
@@ -605,8 +606,8 @@ mod tests {
         let mut ge = GemmBackend::new(dim, 16, 6).with_sigmoid(SigmoidMode::Exact);
         let mut gt = GemmBackend::new(dim, 16, 6).with_sigmoid(SigmoidMode::Table);
         for _ in 0..50 {
-            ge.process(&m_exact, std::slice::from_ref(&w), 0.05).unwrap();
-            gt.process(&m_table, std::slice::from_ref(&w), 0.05).unwrap();
+            ge.process(m_exact.store(), std::slice::from_ref(&w), 0.05).unwrap();
+            gt.process(m_table.store(), std::slice::from_ref(&w), 0.05).unwrap();
         }
         for r in 0..30u32 {
             for (x, y) in m_exact.m_in().row(r).iter().zip(m_table.m_in().row(r)) {
@@ -653,11 +654,11 @@ mod tests {
                 GemmBackend::new(dim, 16, 6).with_kernel(KernelMode::Gemm3);
             if arena_path {
                 let arena = arena_of(&windows, 16, 6);
-                gf.process_arena(&m_fused, &arena, lr).unwrap();
-                g3.process_arena(&m_gemm3, &arena, lr).unwrap();
+                gf.process_arena(m_fused.store(), &arena, lr).unwrap();
+                g3.process_arena(m_gemm3.store(), &arena, lr).unwrap();
             } else {
-                gf.process(&m_fused, &windows, lr).unwrap();
-                g3.process(&m_gemm3, &windows, lr).unwrap();
+                gf.process(m_fused.store(), &windows, lr).unwrap();
+                g3.process(m_gemm3.store(), &windows, lr).unwrap();
             }
             let mut moved = false;
             let init = SharedModel::init(40, dim, 77);
@@ -703,7 +704,7 @@ mod tests {
         let w = window(&[1, 2, 3], 10, &[20, 21, 22, 23, 24]);
         let arena = arena_of(std::slice::from_ref(&w), 16, 6);
         for _ in 0..50 {
-            g.process_arena(&model, &arena, 0.05).unwrap();
+            g.process_arena(model.store(), &arena, 0.05).unwrap();
         }
         let sim = dot(model.m_in().row(1), model.m_out().row(10));
         assert!(sim > 0.4, "table-under-auto sim {sim}");
@@ -716,7 +717,7 @@ mod tests {
         let w = window(&[1, 2, 3], 10, &[11, 12, 13, 14, 15]);
         let sim = |a: u32, b_: u32| dot(model.m_in().row(a), model.m_out().row(b_));
         for _ in 0..300 {
-            g.process(&model, std::slice::from_ref(&w), 0.05).unwrap();
+            g.process(model.store(), std::slice::from_ref(&w), 0.05).unwrap();
         }
         assert!(sim(1, 10) > 0.5);
         assert!(sim(1, 11) < 0.1);
@@ -734,8 +735,8 @@ mod tests {
         let model_single = SharedModel::init(10, dim, 9);
         let mut g1 = GemmBackend::new(dim, 16, 6);
         let mut g2 = GemmBackend::new(dim, 16, 6);
-        g1.process(&model, &[w_dup], 0.05).unwrap();
-        g2.process(&model_single, &[w_single], 0.05).unwrap();
+        g1.process(model.store(), &[w_dup], 0.05).unwrap();
+        g2.process(model_single.store(), &[w_single], 0.05).unwrap();
         // Dup delta on M_in[1] must be ~2x the single delta.
         let base = SharedModel::init(10, dim, 9);
         let d_dup: Vec<f32> = model
@@ -775,7 +776,7 @@ mod tests {
         let mut deltas = Vec::new();
         let mut prev = model.m_in().row(1).to_vec();
         for _ in 0..5 {
-            g.process(&model, std::slice::from_ref(&w), 0.05).unwrap();
+            g.process(model.store(), std::slice::from_ref(&w), 0.05).unwrap();
             let cur = model.m_in().row(1).to_vec();
             let step: f32 = cur
                 .iter()

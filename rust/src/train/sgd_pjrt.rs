@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use super::Backend;
-use crate::model::SharedModel;
+use crate::model::ModelRef;
 use crate::runtime::StepExecutable;
 use crate::sampling::batch::Window;
 
@@ -41,7 +41,7 @@ impl PjrtBackend {
 
     fn run_chunk(
         &mut self,
-        model: &SharedModel,
+        model: ModelRef<'_>,
         windows: &[Window],
         lr: f32,
     ) -> anyhow::Result<()> {
@@ -93,7 +93,7 @@ impl PjrtBackend {
 impl Backend for PjrtBackend {
     fn process(
         &mut self,
-        model: &SharedModel,
+        model: ModelRef<'_>,
         windows: &[Window],
         lr: f32,
     ) -> anyhow::Result<()> {
@@ -111,6 +111,7 @@ impl Backend for PjrtBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::SharedModel;
     use crate::runtime::{Manifest, Runtime};
     use crate::train::sgd_gemm::GemmBackend;
 
@@ -163,8 +164,8 @@ mod tests {
         ];
         let mut p = PjrtBackend::new(exe);
         let mut g = GemmBackend::new(dim, 8, 6);
-        p.process(&model_p, &windows, 0.05).unwrap();
-        g.process(&model_g, &windows, 0.05).unwrap();
+        p.process(model_p.store(), &windows, 0.05).unwrap();
+        g.process(model_g.store(), &windows, 0.05).unwrap();
 
         for r in 0..50u32 {
             for (a, b) in model_p.m_in().row(r).iter().zip(model_g.m_in().row(r)) {
@@ -183,9 +184,9 @@ mod tests {
         let mut p = PjrtBackend::new(exe);
         // s=3 != artifact s=6
         let w = window(&[1], 2, &[3, 4]);
-        assert!(p.process(&model, &[w], 0.05).is_err());
+        assert!(p.process(model.store(), &[w], 0.05).is_err());
         // b=9 > artifact cap 8
         let w = window(&[1, 2, 3, 4, 5, 6, 7, 8, 9], 10, &[3, 4, 5, 6, 7]);
-        assert!(p.process(&model, &[w], 0.05).is_err());
+        assert!(p.process(model.store(), &[w], 0.05).is_err());
     }
 }

@@ -14,7 +14,7 @@
 use super::Backend;
 use crate::linalg::sigmoid::SigmoidTable;
 use crate::linalg::vecops::{axpy, dot};
-use crate::model::SharedModel;
+use crate::model::ModelRef;
 use crate::sampling::batch::Window;
 use crate::sampling::unigram::UnigramSampler;
 use crate::util::rng::Xoshiro256ss;
@@ -41,7 +41,13 @@ impl<'a> ScalarBackend<'a> {
 
     /// Lines 2–21 of Algorithm 1 for one (input word, target) pair set.
     #[inline]
-    fn train_pair(&mut self, model: &SharedModel, input: u32, target: u32, lr: f32) {
+    fn train_pair(
+        &mut self,
+        model: ModelRef<'_>,
+        input: u32,
+        target: u32,
+        lr: f32,
+    ) {
         // SAFETY: Hogwild contract (model::hogwild module docs).
         let wi = unsafe { model.row_in(input) };
         self.temp.fill(0.0);
@@ -82,7 +88,7 @@ impl<'a> ScalarBackend<'a> {
 impl<'a> Backend for ScalarBackend<'a> {
     fn process(
         &mut self,
-        model: &SharedModel,
+        model: ModelRef<'_>,
         windows: &[Window],
         lr: f32,
     ) -> anyhow::Result<()> {
@@ -106,6 +112,7 @@ impl<'a> Backend for ScalarBackend<'a> {
 mod tests {
     use super::*;
     use crate::corpus::vocab::Vocab;
+    use crate::model::SharedModel;
     use std::collections::HashMap;
 
     fn setup(v: usize, dim: usize) -> (SharedModel, UnigramSampler) {
@@ -136,8 +143,8 @@ mod tests {
         // Two passes: M_out starts at zero (word2vec init), so the very
         // first pair leaves M_in unchanged (temp += g·0); the second pass
         // sees the updated M_out and moves M_in.
-        b.process(&model, std::slice::from_ref(&w), 0.05).unwrap();
-        b.process(&model, &[w], 0.05).unwrap();
+        b.process(model.store(), std::slice::from_ref(&w), 0.05).unwrap();
+        b.process(model.store(), &[w], 0.05).unwrap();
         // Input rows 3 and 4 must change...
         assert_ne!(model.m_in().row(3), &before_in[3][..]);
         assert_ne!(model.m_in().row(4), &before_in[4][..]);
@@ -156,7 +163,7 @@ mod tests {
         let sim = |m: &SharedModel| dot(m.m_in().row(3), m.m_out().row(9));
         let before = sim(&model);
         for _ in 0..200 {
-            b.process(&model, &[window(&[3], 9, &[1, 2, 5, 6, 7])], 0.05)
+            b.process(model.store(), &[window(&[3], 9, &[1, 2, 5, 6, 7])], 0.05)
                 .unwrap();
         }
         assert!(sim(&model) > before + 0.5, "similarity did not grow");
@@ -188,7 +195,7 @@ mod tests {
         };
         let before = obj(&model);
         for _ in 0..100 {
-            b.process(&model, &windows, 0.05).unwrap();
+            b.process(model.store(), &windows, 0.05).unwrap();
         }
         assert!(obj(&model) > before, "positive-pair objective fell");
     }
@@ -202,8 +209,8 @@ mod tests {
         w1.outputs.extend([1, 2, 6, 7, 8]);
         let mut b1 = ScalarBackend::new(&sampler, 5, 16, 42);
         let mut b2 = ScalarBackend::new(&sampler, 5, 16, 42);
-        b1.process(&m1, std::slice::from_ref(&w1), 0.05).unwrap();
-        b2.process(&m2, std::slice::from_ref(&w1), 0.05).unwrap();
+        b1.process(m1.store(), std::slice::from_ref(&w1), 0.05).unwrap();
+        b2.process(m2.store(), std::slice::from_ref(&w1), 0.05).unwrap();
         assert_eq!(m1.m_in().data(), m2.m_in().data());
         assert_eq!(m1.m_out().data(), m2.m_out().data());
     }

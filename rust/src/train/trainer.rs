@@ -28,13 +28,14 @@ use super::sgd_scalar::ScalarBackend;
 use super::Backend;
 use crate::config::{Backend as BackendKind, LrSchedule, TrainConfig};
 use crate::corpus::reader::MAX_SENTENCE_LEN;
-use crate::corpus::shard::shards_for_len;
+use crate::corpus::shard::{shards_for_len, Shard};
 use crate::corpus::source::Corpus;
 use crate::corpus::subsample::Subsampler;
 use crate::corpus::vocab::Vocab;
 use crate::linalg::simd;
 use crate::metrics::{Counters, Snapshot};
-use crate::model::SharedModel;
+use crate::model::{ModelRef, NumaModel, SharedModel};
+use crate::runtime::topology::{self, Topology};
 use crate::runtime::{Manifest, Runtime, StepExecutable};
 use crate::sampling::batch::{BatchBuilder, SuperbatchArena};
 use crate::sampling::unigram::UnigramSampler;
@@ -125,21 +126,107 @@ pub fn train_with_factory<'f>(
     // never changes which sentences a worker sees.
     let source = Corpus::open(corpus, vocab, &cfg.corpus_cache)?;
     let shards = shards_for_len(source.shard_len(), cfg.threads);
+    let ctx = WorkerCtx {
+        cfg,
+        source: &source,
+        shards: &shards,
+        lr_state: &lr_state,
+        counters: &counters,
+        subsampler: &subsampler,
+        sampler,
+        factory,
+    };
 
+    // `--numa off`: the flat model, unpinned workers — bit-for-bit the
+    // pre-NUMA path.  Otherwise: shard the model rows across the resolved
+    // topology (each node's segment first-touched by a pinned thread),
+    // pin workers round-robin over nodes, train against the sharded
+    // store, and copy the rows back into the caller's flat model.  The
+    // values computed are identical — only page placement, thread
+    // affinity, and therefore cross-socket traffic change
+    // (tests/numa_parity.rs pins 1-thread bitwise equality).  COST: the
+    // caller's flat model stays alive next to the sharded copy until
+    // copy_back — transient 2x model residency (documented in
+    // EXPERIMENTS.md §NUMA); the dist path avoids this by init-ing each
+    // replica in place on its node.
+    match topology::resolve(cfg.numa)? {
+        None => run_workers(&ctx, model.store(), None)?,
+        Some(topo) => {
+            // Under `auto`, never shard across more nodes than there
+            // are workers: a node with no pinned worker would make
+            // every access to its rows remote — WORSE than the flat
+            // path at low thread counts.  The clamp keeps the FIRST
+            // `threads` real nodes (boundaries intact, placement stays
+            // node-pure).  An explicit `--numa <n>` is the
+            // ablation/test knob and is honoured as given.
+            use crate::runtime::topology::NumaMode;
+            let topo = match cfg.numa {
+                NumaMode::Auto if cfg.threads < topo.nodes() => {
+                    topo.take_nodes(cfg.threads)
+                }
+                _ => topo,
+            };
+            if cfg.numa == NumaMode::Auto && topo.nodes() == 1 {
+                // `auto` resolved to a single node (single-socket box,
+                // or clamped to 1 worker): there is no cross-socket
+                // traffic to save, so sharding would pay the 2x
+                // transient residency and per-access shard-map lookup
+                // for nothing.  The flat path is bitwise-identical.
+                run_workers(&ctx, model.store(), None)?;
+            } else {
+                let numa = NumaModel::from_model(model, &topo);
+                run_workers(&ctx, numa.store(), Some(&topo))?;
+                numa.copy_back(model);
+            }
+        }
+    }
+
+    Ok(TrainOutcome {
+        snapshot: counters.snapshot(),
+        final_lr: lr_state.current(),
+    })
+}
+
+/// Shared borrows of everything a worker thread needs (keeps the spawn
+/// closure tidy across the flat and NUMA-sharded paths).
+struct WorkerCtx<'a, 'f> {
+    cfg: &'a TrainConfig,
+    source: &'a Corpus<'a>,
+    shards: &'a [Shard],
+    lr_state: &'a LrState,
+    counters: &'a Counters,
+    subsampler: &'a Subsampler,
+    sampler: &'f UnigramSampler,
+    factory: &'a (dyn Fn(usize) -> anyhow::Result<Box<dyn Backend + 'f>> + Sync),
+}
+
+/// Spawn one worker per corpus shard against `model`.  Under `topo`,
+/// worker `i` pins itself to node `i % nodes` BEFORE allocating its
+/// backend scratch, superbatch arena, and sentence buffer, so those hot
+/// per-worker buffers are first-touched node-locally too.
+fn run_workers(
+    ctx: &WorkerCtx<'_, '_>,
+    model: ModelRef<'_>,
+    topo: Option<&Topology>,
+) -> anyhow::Result<()> {
+    let cfg = ctx.cfg;
     std::thread::scope(|scope| -> anyhow::Result<()> {
         let mut handles = Vec::new();
-        for shard in &shards {
-            let lr_state = &lr_state;
-            let counters = &counters;
-            let subsampler = &subsampler;
-            let source = &source;
+        for shard in ctx.shards {
             let handle = scope.spawn(move || -> anyhow::Result<()> {
-                let mut backend = factory(shard.index)?;
+                if let Some(t) = topo {
+                    t.pin_to_node(shard.index % t.nodes());
+                }
+                let mut backend = (ctx.factory)(shard.index)?;
                 let mut rng = Xoshiro256ss::new(
                     cfg.seed ^ (shard.index as u64 * 0xA5A5_1234 + 17),
                 );
-                let builder =
-                    BatchBuilder::new(sampler, cfg.window, cfg.batch, cfg.negative);
+                let builder = BatchBuilder::new(
+                    ctx.sampler,
+                    cfg.window,
+                    cfg.batch,
+                    cfg.negative,
+                );
                 // Reused across the whole shard: zero allocations per
                 // window at steady state (tests/alloc_steadystate.rs).
                 // Sentence-slack sizing: `fill_arena` appends a whole
@@ -155,31 +242,31 @@ pub fn train_with_factory<'f>(
                 let mut raw_words = 0u64;
                 for _epoch in 0..cfg.epochs {
                     let mut reader =
-                        source.open_range(shard.start, shard.end)?;
+                        ctx.source.open_range(shard.start, shard.end)?;
                     while reader.next_sentence_into(&mut sent)? {
                         raw_words += sent.len() as u64;
-                        subsampler.filter(&mut sent, &mut rng);
+                        ctx.subsampler.filter(&mut sent, &mut rng);
                         builder.fill_arena(&sent, &mut rng, &mut arena);
                         if arena.len() >= cfg.superbatch {
-                            let lr = lr_state.advance(raw_words);
-                            counters.add_words(raw_words);
+                            let lr = ctx.lr_state.advance(raw_words);
+                            ctx.counters.add_words(raw_words);
                             raw_words = 0;
                             backend.process_arena(model, &arena, lr)?;
-                            counters.add_windows(arena.len() as u64);
-                            counters.add_calls(1);
+                            ctx.counters.add_windows(arena.len() as u64);
+                            ctx.counters.add_calls(1);
                             arena.clear();
                         }
                     }
                 }
                 if !arena.is_empty() {
-                    let lr = lr_state.advance(raw_words);
-                    counters.add_words(raw_words);
+                    let lr = ctx.lr_state.advance(raw_words);
+                    ctx.counters.add_words(raw_words);
                     backend.process_arena(model, &arena, lr)?;
-                    counters.add_windows(arena.len() as u64);
-                    counters.add_calls(1);
+                    ctx.counters.add_windows(arena.len() as u64);
+                    ctx.counters.add_calls(1);
                 } else if raw_words > 0 {
-                    lr_state.advance(raw_words);
-                    counters.add_words(raw_words);
+                    ctx.lr_state.advance(raw_words);
+                    ctx.counters.add_words(raw_words);
                 }
                 Ok(())
             });
@@ -189,11 +276,6 @@ pub fn train_with_factory<'f>(
             h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
         }
         Ok(())
-    })?;
-
-    Ok(TrainOutcome {
-        snapshot: counters.snapshot(),
-        final_lr: lr_state.current(),
     })
 }
 

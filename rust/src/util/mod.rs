@@ -18,6 +18,23 @@ pub fn round_up(x: usize, align: usize) -> usize {
     (x + align - 1) & !(align - 1)
 }
 
+/// Boundary `i` of the repo-wide ±1-balanced partition of `len` into
+/// `parts` contiguous ranges: range `i` is
+/// `split_point(len, parts, i)..split_point(len, parts, i+1)`.
+///
+/// This is THE split rule — corpus byte shards (`corpus::shard`), model
+/// row shards (`model::ShardMap`), and cpu regrouping
+/// (`runtime::topology`) all call it, so "sharded the same way" is a
+/// shared function, not a cross-referenced comment that can drift.
+/// Properties: `split_point(len, n, 0) == 0`,
+/// `split_point(len, n, n) == len`, monotone in `i`, and adjacent
+/// ranges differ in length by at most 1.
+#[inline]
+pub fn split_point(len: u64, parts: u64, i: u64) -> u64 {
+    debug_assert!(parts >= 1 && i <= parts);
+    len * i / parts
+}
+
 /// Human-readable SI formatting for rates ("5.8M", "110M", "1.2G").
 pub fn si(x: f64) -> String {
     let ax = x.abs();
@@ -42,6 +59,22 @@ mod tests {
         assert_eq!(round_up(1, 64), 64);
         assert_eq!(round_up(64, 64), 64);
         assert_eq!(round_up(65, 64), 128);
+    }
+
+    #[test]
+    fn split_point_partitions_balanced() {
+        for (len, n) in [(0u64, 4u64), (100, 7), (7, 7), (2, 4), (1_000_003, 32)] {
+            assert_eq!(split_point(len, n, 0), 0);
+            assert_eq!(split_point(len, n, n), len);
+            let sizes: Vec<u64> = (0..n)
+                .map(|i| split_point(len, n, i + 1) - split_point(len, n, i))
+                .collect();
+            assert_eq!(sizes.iter().sum::<u64>(), len);
+            assert!(
+                sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1,
+                "({len},{n}): {sizes:?}"
+            );
+        }
     }
 
     #[test]

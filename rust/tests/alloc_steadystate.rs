@@ -91,12 +91,12 @@ fn steady_state_training_loop_allocates_nothing() {
         for sent in &sentences {
             builder.fill_arena(sent, &mut rng, arena);
             if arena.len() >= superbatch {
-                backend.process_arena(&model, arena, 0.025).unwrap();
+                backend.process_arena(model.store(), arena, 0.025).unwrap();
                 arena.clear();
             }
         }
         if !arena.is_empty() {
-            backend.process_arena(&model, arena, 0.025).unwrap();
+            backend.process_arena(model.store(), arena, 0.025).unwrap();
             arena.clear();
         }
     };
@@ -178,12 +178,12 @@ fn steady_state_training_loop_allocates_nothing() {
                 for sent in &long_sentences {
                     builder.fill_arena(sent, &mut rng, arena);
                     if arena.len() >= superbatch {
-                        backend.process_arena(&model, arena, 0.025).unwrap();
+                        backend.process_arena(model.store(), arena, 0.025).unwrap();
                         arena.clear();
                     }
                 }
                 if !arena.is_empty() {
-                    backend.process_arena(&model, arena, 0.025).unwrap();
+                    backend.process_arena(model.store(), arena, 0.025).unwrap();
                     arena.clear();
                 }
             };
@@ -241,12 +241,12 @@ fn steady_state_training_loop_allocates_nothing() {
         while reader.next_sentence_into(sent_buf).unwrap() {
             builder.fill_arena(sent_buf, &mut rng, arena);
             if arena.len() >= superbatch {
-                backend.process_arena(&model, arena, 0.025).unwrap();
+                backend.process_arena(model.store(), arena, 0.025).unwrap();
                 arena.clear();
             }
         }
         if !arena.is_empty() {
-            backend.process_arena(&model, arena, 0.025).unwrap();
+            backend.process_arena(model.store(), arena, 0.025).unwrap();
             arena.clear();
         }
     };

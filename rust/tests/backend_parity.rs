@@ -26,6 +26,8 @@ use pw2v::train::Backend;
 use pw2v::util::rng::Xoshiro256ss;
 use std::collections::HashMap;
 
+mod common;
+
 const DIM: usize = 16;
 const VOCAB: usize = 120;
 const SEED: u64 = 4242;
@@ -45,35 +47,10 @@ fn arena_of(windows: &[Window]) -> SuperbatchArena {
     a
 }
 
-/// Max |a − b| over both embedding matrices, plus max |a − init| (so the
-/// assertion "models agree" can be qualified by "and they moved").
+/// Shared drift-vs-movement machinery (`tests/common/mod.rs`) bound to
+/// this suite's fixed geometry.
 fn model_gap(a: &SharedModel, b: &SharedModel) -> (f64, f64) {
-    let init = SharedModel::init(VOCAB, DIM, SEED);
-    let mut gap = 0.0f64;
-    let mut moved = 0.0f64;
-    for r in 0..VOCAB as u32 {
-        for ((x, y), z) in a
-            .m_in()
-            .row(r)
-            .iter()
-            .zip(b.m_in().row(r))
-            .zip(init.m_in().row(r))
-        {
-            gap = gap.max((x - y).abs() as f64);
-            moved = moved.max((x - z).abs() as f64);
-        }
-        for ((x, y), z) in a
-            .m_out()
-            .row(r)
-            .iter()
-            .zip(b.m_out().row(r))
-            .zip(init.m_out().row(r))
-        {
-            gap = gap.max((x - y).abs() as f64);
-            moved = moved.max((x - z).abs() as f64);
-        }
-    }
-    (gap, moved)
+    common::model_gap(a, b, VOCAB, DIM, SEED)
 }
 
 /// Runs `process` vs `process_arena` through two same-seeded backend
@@ -86,10 +63,10 @@ fn run_both<B: Backend>(
     let model_w = SharedModel::init(VOCAB, DIM, SEED);
     let model_a = SharedModel::init(VOCAB, DIM, SEED);
     let mut bw = make();
-    bw.process(&model_w, windows, lr).unwrap();
+    bw.process(model_w.store(), windows, lr).unwrap();
     let arena = arena_of(windows);
     let mut ba = make();
-    ba.process_arena(&model_a, &arena, lr).unwrap();
+    ba.process_arena(model_a.store(), &arena, lr).unwrap();
     model_gap(&model_w, &model_a)
 }
 

@@ -1,0 +1,46 @@
+//! Shared helpers for the parity integration suites (`backend_parity`,
+//! `numa_parity`).  Lives under `tests/common/` so cargo does not build
+//! it as its own test binary.
+
+use pw2v::model::SharedModel;
+
+/// Max |a − b| over both embedding matrices, plus max |a − init| — the
+/// drift-vs-movement machinery both parity suites bound racy/arena
+/// divergence with: an equivalence assertion is only meaningful as
+/// "models agree AND they moved".
+pub fn model_gap(
+    a: &SharedModel,
+    b: &SharedModel,
+    vocab: usize,
+    dim: usize,
+    seed: u64,
+) -> (f64, f64) {
+    assert_eq!(a.vocab(), vocab);
+    assert_eq!(b.vocab(), vocab);
+    let init = SharedModel::init(vocab, dim, seed);
+    let mut gap = 0.0f64;
+    let mut moved = 0.0f64;
+    for r in 0..vocab as u32 {
+        for ((x, y), z) in a
+            .m_in()
+            .row(r)
+            .iter()
+            .zip(b.m_in().row(r))
+            .zip(init.m_in().row(r))
+        {
+            gap = gap.max((x - y).abs() as f64);
+            moved = moved.max((x - z).abs() as f64);
+        }
+        for ((x, y), z) in a
+            .m_out()
+            .row(r)
+            .iter()
+            .zip(b.m_out().row(r))
+            .zip(init.m_out().row(r))
+        {
+            gap = gap.max((x - y).abs() as f64);
+            moved = moved.max((x - z).abs() as f64);
+        }
+    }
+    (gap, moved)
+}

@@ -1,0 +1,165 @@
+//! NUMA-path parity: `--numa off` (flat model, unpinned workers — the
+//! pre-NUMA path bit-for-bit) versus the sharded store (`--numa auto` /
+//! `--numa <nodes>`).
+//!
+//! The sharded layout changes WHERE rows live (per-node segments,
+//! first-touched by pinned threads) but never what they hold, so:
+//!
+//! * at 1 worker thread training is deterministic and the two paths must
+//!   be BITWISE equal, for both kernel organisations and any node count
+//!   (including more nodes than the machine has);
+//! * at several worker threads Hogwild races make every run (flat or
+//!   sharded) nondeterministic; the suite bounds the drift with the same
+//!   gap-vs-movement machinery as `tests/backend_parity.rs`;
+//! * the distributed replica protocol is deterministic per node count
+//!   (disjoint replicas, barrier-ordered allreduce), so single-node
+//!   `--numa auto` (replica first-touch-initialised by its own pinned
+//!   thread) must be bitwise equal to `--numa off` too.
+//!
+//! The CI matrix reruns this file under `PW2V_TOPOLOGY=0;0` (a synthetic
+//! two-node topology on a one-node runner) and pinned-scalar dispatch,
+//! so `--numa auto` legs exercise real multi-node sharding geometry.
+
+use pw2v::config::{KernelMode, TrainConfig};
+use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
+use pw2v::corpus::vocab::Vocab;
+use pw2v::dist::{train_distributed, DistConfig};
+use pw2v::model::SharedModel;
+use pw2v::runtime::topology::NumaMode;
+use pw2v::train;
+
+mod common;
+
+fn tiny_corpus(seed: u64) -> (std::path::PathBuf, Vocab) {
+    let mut scfg = SyntheticConfig::test_tiny();
+    scfg.tokens = 30_000;
+    scfg.seed = seed;
+    let lm = LatentModel::new(scfg);
+    let path = std::env::temp_dir().join(format!(
+        "pw2v_numa_parity_{seed}_{}.txt",
+        std::process::id()
+    ));
+    lm.write_corpus(&path).unwrap();
+    let vocab = Vocab::build_from_file(&path, 1).unwrap();
+    (path, vocab)
+}
+
+fn train_with(
+    cfg: &TrainConfig,
+    path: &std::path::Path,
+    vocab: &Vocab,
+) -> (SharedModel, u64) {
+    let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+    let out = train::train(cfg, path, vocab, &model).unwrap();
+    (model, out.snapshot.words)
+}
+
+/// Shared drift-vs-movement machinery (`tests/common/mod.rs`) bound to
+/// this suite's per-config geometry.
+fn model_gap(a: &SharedModel, b: &SharedModel, cfg: &TrainConfig) -> (f64, f64) {
+    common::model_gap(a, b, a.vocab(), cfg.dim, cfg.seed)
+}
+
+/// One worker thread: flat vs sharded must be BITWISE identical for both
+/// kernels and for every sharding geometry — auto (whatever this machine
+/// or `PW2V_TOPOLOGY` says), two synthetic nodes, and a node count
+/// chosen to leave some shards tiny.
+#[test]
+fn single_thread_bitwise_across_numa_modes() {
+    let (path, vocab) = tiny_corpus(71);
+    for kernel in [KernelMode::Fused, KernelMode::Gemm3] {
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.kernel = kernel;
+        cfg.sample = 0.0;
+        cfg.numa = NumaMode::Off;
+        let (flat, flat_words) = train_with(&cfg, &path, &vocab);
+        assert_eq!(flat_words, vocab.total_words());
+        for numa in [NumaMode::Auto, NumaMode::Nodes(2), NumaMode::Nodes(7)] {
+            cfg.numa = numa;
+            let (sharded, words) = train_with(&cfg, &path, &vocab);
+            assert_eq!(words, flat_words, "{kernel}/{numa}: word accounting");
+            assert_eq!(
+                flat.m_in().data(),
+                sharded.m_in().data(),
+                "{kernel}/{numa}: M_in diverged from the flat path"
+            );
+            assert_eq!(
+                flat.m_out().data(),
+                sharded.m_out().data(),
+                "{kernel}/{numa}: M_out diverged from the flat path"
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Multi-threaded: Hogwild races make each run nondeterministic, flat
+/// and sharded alike; the sharded path must stay within the same
+/// race-noise envelope (drift well below signal), with full word
+/// accounting.
+#[test]
+fn multithreaded_drift_is_bounded() {
+    let (path, vocab) = tiny_corpus(73);
+    let mut cfg = TrainConfig::test_tiny();
+    cfg.threads = 4;
+    cfg.sample = 0.0;
+    cfg.numa = NumaMode::Off;
+    let (flat, words_off) = train_with(&cfg, &path, &vocab);
+    assert_eq!(words_off, vocab.total_words());
+    for numa in [NumaMode::Auto, NumaMode::Nodes(2)] {
+        cfg.numa = numa;
+        let (sharded, words) = train_with(&cfg, &path, &vocab);
+        assert_eq!(words, words_off, "{numa}: word accounting");
+        let (gap, moved) = model_gap(&flat, &sharded, &cfg);
+        assert!(moved > 1e-4, "{numa}: model did not move ({moved})");
+        assert!(
+            gap < moved,
+            "{numa}: flat vs sharded drift {gap} not below movement {moved}"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Distributed, one node: the replica protocol is single-threaded and
+/// deterministic, so `--numa auto` (replica allocated untouched and
+/// first-touch-initialised inside its own pinned thread) must reproduce
+/// `--numa off` (main-thread `SharedModel::init`) bitwise.
+#[test]
+fn dist_single_node_numa_is_bitwise() {
+    let (path, vocab) = tiny_corpus(79);
+    let mut cfg = TrainConfig::test_tiny();
+    cfg.sample = 0.0;
+    let mut dist = DistConfig::for_nodes(1);
+    dist.sync_interval = 8_000;
+    cfg.numa = NumaMode::Off;
+    let off = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+    cfg.numa = NumaMode::Auto;
+    let auto = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+    assert_eq!(off.words, auto.words);
+    assert_eq!(off.model.m_in().data(), auto.model.m_in().data());
+    assert_eq!(off.model.m_out().data(), auto.model.m_out().data());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Distributed, several replicas under NUMA: every replica becomes
+/// node-local (pinned init + training) and the protocol still accounts
+/// every word, joins the same number of rounds on every node, and moves
+/// the merged model.
+#[test]
+fn dist_replicas_train_under_numa() {
+    let (path, vocab) = tiny_corpus(83);
+    let mut cfg = TrainConfig::test_tiny();
+    cfg.sample = 0.0;
+    cfg.numa = NumaMode::Nodes(2);
+    let mut dist = DistConfig::for_nodes(3);
+    dist.sync_interval = 4_000;
+    let out = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+    assert_eq!(out.words, vocab.total_words());
+    let rounds = out.sync_stats[0].rounds;
+    for st in &out.sync_stats {
+        assert_eq!(st.rounds, rounds);
+    }
+    let init = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+    assert_ne!(out.model.m_in().data(), init.m_in().data());
+    std::fs::remove_file(&path).ok();
+}

@@ -441,7 +441,7 @@ fn prop_gemm_step_is_ascent() {
         let windows = vec![window];
         let before = pw2v::train::ns_objective(&model, &windows);
         let mut backend = GemmBackend::new(dim, 8, 8);
-        backend.process(&model, &windows, 0.01).unwrap();
+        backend.process(model.store(), &windows, 0.01).unwrap();
         let after = pw2v::train::ns_objective(&model, &windows);
         assert!(
             after > before - 1e-9,
