@@ -22,6 +22,7 @@ use pw2v::perfmodel::arch::broadwell;
 use pw2v::perfmodel::simulate::{fig3_series, fig3_thread_axis, FigParams};
 use pw2v::runtime::topology::{NumaMode, Topology};
 use pw2v::train;
+use pw2v::train::route::RouteMode;
 use pw2v::util::args::Args;
 use pw2v::util::json::Json;
 use pw2v::util::si;
@@ -50,6 +51,7 @@ fn measure_cfg(
     simd: SimdMode,
     kernel: KernelMode,
     numa: NumaMode,
+    route: RouteMode,
     wl: &pw2v::bench::Workload,
 ) -> f64 {
     let mut cfg = TrainConfig::default();
@@ -60,6 +62,7 @@ fn measure_cfg(
     cfg.simd = simd;
     cfg.kernel = kernel;
     cfg.numa = numa;
+    cfg.route = route;
     let model = SharedModel::init(wl.vocab.len(), cfg.dim, cfg.seed);
     let out = train::train(&cfg, &wl.corpus, &wl.vocab, &model).unwrap();
     out.snapshot.words_per_sec()
@@ -71,7 +74,15 @@ fn measure_simd(
     simd: SimdMode,
     wl: &pw2v::bench::Workload,
 ) -> f64 {
-    measure_cfg(backend, threads, simd, KernelMode::Auto, NumaMode::Off, wl)
+    measure_cfg(
+        backend,
+        threads,
+        simd,
+        KernelMode::Auto,
+        NumaMode::Off,
+        RouteMode::Off,
+        wl,
+    )
 }
 
 fn measure(backend: Backend, threads: usize, wl: &pw2v::bench::Workload) -> f64 {
@@ -113,6 +124,7 @@ fn main() -> anyhow::Result<()> {
             SimdMode::Auto,
             KernelMode::Fused,
             NumaMode::Off,
+            RouteMode::Off,
             &wl,
         );
         let wg = measure_cfg(
@@ -121,6 +133,7 @@ fn main() -> anyhow::Result<()> {
             SimdMode::Auto,
             KernelMode::Gemm3,
             NumaMode::Off,
+            RouteMode::Off,
             &wl,
         );
         fused_by_t.push((t, wf));
@@ -153,6 +166,9 @@ fn main() -> anyhow::Result<()> {
         &["threads", "numa_off_wps", "numa_auto_wps", "auto_over_off"],
     );
     let mut numa_rows: Vec<Json> = Vec::new();
+    // (t, numa-auto words/sec) — the `--route` ablation's unrouted
+    // baseline below (one training run per configuration).
+    let mut auto_by_t: Vec<(usize, f64)> = Vec::new();
     for &(t, w_off) in &fused_by_t {
         let w_auto = measure_cfg(
             Backend::Gemm,
@@ -160,8 +176,10 @@ fn main() -> anyhow::Result<()> {
             SimdMode::Auto,
             KernelMode::Fused,
             NumaMode::Auto,
+            RouteMode::Off,
             &wl,
         );
+        auto_by_t.push((t, w_auto));
         numa_tbl.row(vec![
             t.to_string(),
             si(w_off),
@@ -180,6 +198,50 @@ fn main() -> anyhow::Result<()> {
     println!(
         "numa pinning leg measured on {topo_nodes} node(s) — ratios separate \
          only on multi-socket machines"
+    );
+
+    // Routing ablation: the SAME gemm/fused trainer under `--numa auto`,
+    // with windows ownership-routed (`--route owner`) vs unrouted.  On a
+    // one-node box the ratio IS the exchange overhead (mailbox hops buy
+    // no locality); the win appears on multi-socket runners, where the
+    // routed head keeps hot output rows on their home socket —
+    // BENCH_throughput.json tracks both via `fig3_route`.
+    let mut route_tbl = BenchTable::new(
+        "fig3_route_ablation",
+        &["threads", "route_off_wps", "route_owner_wps", "routed_over_unrouted"],
+    );
+    let mut route_rows: Vec<Json> = Vec::new();
+    for &(t, w_unrouted) in &auto_by_t {
+        let w_routed = measure_cfg(
+            Backend::Gemm,
+            t,
+            SimdMode::Auto,
+            KernelMode::Fused,
+            NumaMode::Auto,
+            RouteMode::Owner,
+            &wl,
+        );
+        route_tbl.row(vec![
+            t.to_string(),
+            si(w_unrouted),
+            si(w_routed),
+            format!("{:.2}x", w_routed / w_unrouted.max(1.0)),
+        ]);
+        route_rows.push(Json::obj([
+            ("threads", Json::Num(t as f64)),
+            ("nodes", Json::Num(topo_nodes as f64)),
+            ("route_off_wps", Json::num(w_unrouted)),
+            ("route_owner_wps", Json::num(w_routed)),
+            (
+                "routed_over_unrouted",
+                Json::num(w_routed / w_unrouted.max(1.0)),
+            ),
+        ]));
+    }
+    route_tbl.finish()?;
+    println!(
+        "route ablation measured on {topo_nodes} node(s) — the locality win \
+         needs a multi-socket runner; here the ratio bounds exchange overhead"
     );
 
     // Kernel-dispatch ablation: the SAME GEMM trainer, explicit-AVX2 vs
@@ -260,6 +322,7 @@ fn main() -> anyhow::Result<()> {
     if let Some(r) = report.as_mut() {
         r.set("fig3_throughput", Json::Arr(json_rows));
         r.set("fig3_numa", Json::Arr(numa_rows));
+        r.set("fig3_route", Json::Arr(route_rows));
         r.save()?;
     }
     Ok(())

@@ -13,9 +13,12 @@ use pw2v::corpus::reader::SentenceReader;
 use pw2v::corpus::vocab::Vocab;
 use pw2v::linalg::simd::{self, SimdMode};
 use pw2v::linalg::{axpy, dot, gemm_nn, gemm_nt, gemm_tn};
+use pw2v::model::ShardMap;
 use pw2v::runtime::topology::Topology;
 use pw2v::runtime::{Manifest, Runtime};
+use pw2v::sampling::batch::{BatchBuilder, SuperbatchArena};
 use pw2v::sampling::unigram::UnigramSampler;
+use pw2v::train::route::{owner_head_k, Exchange, Outbox, RouteSink, RowRouter};
 use pw2v::util::args::Args;
 use pw2v::util::json::Json;
 use pw2v::util::rng::Xoshiro256ss;
@@ -33,6 +36,7 @@ fn main() -> anyhow::Result<()> {
     simd_dispatch_bench(&mut report)?;
     sgns_window_ablation(&mut report)?;
     numa_row_update_bench(&mut report)?;
+    routing_bench(&mut report)?;
     corpus_cache_bench(&mut report)?;
     gemm_bench()?;
     vecops_bench()?;
@@ -518,6 +522,177 @@ fn numa_row_update_bench(
                         .map(|r| Json::num(local / r.max(1e-9)))
                         .unwrap_or(Json::Null),
                 ),
+            ]),
+        );
+    }
+    Ok(())
+}
+
+/// Ownership-routing layer costs and coverage on a one-node box (the
+/// cross-socket WIN needs a multi-socket runner — `fig3_route` tracks
+/// that; what is machine-robust HERE):
+///
+/// * `classify_ns_per_id` — the per-window router decision (head cutoff
+///   + shard-map home lookup) on a realistic Zipf id stream;
+/// * `routed_over_unrouted` — window-generation pipeline throughput with
+///   the full exchange in the loop (RouteSink classification, mailbox
+///   block push/pop, consumer `append_from` adoption) relative to the
+///   plain `fill_arena`, single thread.  This is the routing OVERHEAD
+///   bound (≤1 by construction here): the relative metric the trend
+///   gate watches so the exchange never silently becomes expensive;
+/// * analytic remote OUTPUT-row shares at B=16/S=6 under a two-node
+///   map: `--numa` alone vs `--route owner` (upper bound — ignores
+///   backpressure fallback), the locality headroom the routed head buys.
+fn routing_bench(report: &mut Option<ThroughputReport>) -> anyhow::Result<()> {
+    let v = 100_000usize;
+    let counts: HashMap<String, u64> = (0..v)
+        .map(|i| (format!("w{i}"), (1_000_000_000 / (i + 1)) as u64))
+        .collect();
+    let vocab = Vocab::from_counts(counts, 1);
+    let nodes = 2usize;
+    let head_k = owner_head_k(&vocab);
+    let router = RowRouter::new(ShardMap::contiguous(v, nodes), head_k);
+    let sampler = UnigramSampler::alias(&vocab, 0.75);
+    let mut rng = Xoshiro256ss::new(41);
+    let ids: Vec<u32> = (0..1_000_000).map(|_| sampler.sample(&mut rng)).collect();
+
+    // 1) Router classification throughput.
+    let st_classify = time(3, 20, || {
+        let mut acc = 0usize;
+        for &id in &ids {
+            if let Some(node) = router.route(id) {
+                acc += node;
+            }
+        }
+        std::hint::black_box(acc);
+    });
+    let classify_ns = st_classify.median * 1e9 / ids.len() as f64;
+
+    // 2) Analytic remote share of output-row accesses (S=6: target + 5
+    // shared negatives), windows generated alternately on each node.
+    let s = 6usize;
+    let windows = ids.len() / s;
+    let (mut remote_off, mut remote_owner) = (0u64, 0u64);
+    for (w, outs) in ids.chunks_exact(s).enumerate() {
+        let gen_node = w % nodes;
+        let proc_node = router.route(outs[0]).unwrap_or(gen_node);
+        for &id in outs {
+            let home = router.home_node(id);
+            if home != gen_node {
+                remote_off += 1;
+            }
+            if home != proc_node {
+                remote_owner += 1;
+            }
+        }
+    }
+    let total_rows = (windows * s) as f64;
+    let share_off = remote_off as f64 / total_rows;
+    let share_owner = remote_owner as f64 / total_rows;
+
+    // 3) Exchange overhead: the generation pipeline end to end, plain
+    // vs routed (both sides of a two-worker exchange driven by this one
+    // thread; no backend processing — isolates the routing machinery).
+    let (window, batch, negative, superbatch) = (5usize, 16usize, 5usize, 64);
+    let builder = BatchBuilder::new(&sampler, window, batch, negative);
+    let sentences: Vec<Vec<u32>> = (0..64)
+        .map(|i| {
+            let mut r = Xoshiro256ss::new(1000 + i);
+            (0..60).map(|_| sampler.sample(&mut r)).collect()
+        })
+        .collect();
+    // Every position of a multi-token sentence is a center → one window.
+    let n_windows: usize = sentences.iter().map(|sent| sent.len()).sum();
+    let mut plain = SuperbatchArena::with_sentence_slack(superbatch, batch, 1 + negative);
+    let st_plain = time(10, 200, || {
+        let mut r = Xoshiro256ss::new(7);
+        for sent in &sentences {
+            builder.fill_arena(sent, &mut r, &mut plain);
+            if plain.len() >= superbatch {
+                plain.clear();
+            }
+        }
+        plain.clear();
+        std::hint::black_box(&plain);
+    });
+    let exch = Exchange::new(2, 2, 64, batch, 1 + negative);
+    let mut a0 = SuperbatchArena::with_route_slack(
+        superbatch,
+        batch,
+        1 + negative,
+        exch.max_inflight(),
+    );
+    let mut a1 = SuperbatchArena::with_route_slack(
+        superbatch,
+        batch,
+        1 + negative,
+        exch.max_inflight(),
+    );
+    let mut outbox = Outbox::new(&exch, &router, 0);
+    let st_routed = time(10, 200, || {
+        let mut r = Xoshiro256ss::new(7);
+        for sent in &sentences {
+            {
+                let mut sink = RouteSink::new(&mut a0, &mut outbox);
+                builder.fill_arena_routed(sent, &mut r, &mut sink);
+            }
+            exch.drain_into(1, &mut a1);
+            if a0.len() >= superbatch {
+                outbox.flush();
+                a0.clear();
+            }
+            if a1.len() >= superbatch {
+                a1.clear();
+            }
+        }
+        outbox.flush();
+        exch.drain_into(1, &mut a1);
+        a0.clear();
+        a1.clear();
+        std::hint::black_box(&a1);
+    });
+    let ratio = speedup(&st_routed, &st_plain); // <1: routing overhead
+    let routed_wps = n_windows as f64 / st_routed.median;
+
+    let mut table = BenchTable::new("micro_routing", &["metric", "value"]);
+    table.row(vec![
+        "owner head K (90% mass)".into(),
+        format!("{head_k} of {v}"),
+    ]);
+    table.row(vec!["classify ns/id".into(), format!("{classify_ns:.1}")]);
+    table.row(vec![
+        "remote out-row share, numa alone".into(),
+        format!("{share_off:.3}"),
+    ]);
+    table.row(vec![
+        "remote out-row share, route owner".into(),
+        format!("{share_owner:.3}"),
+    ]);
+    table.row(vec![
+        "routed pipeline windows/sec".into(),
+        si(routed_wps),
+    ]);
+    table.row(vec![
+        "routed/unrouted generation".into(),
+        format!("{ratio:.2}x"),
+    ]);
+    table.finish()?;
+    println!(
+        "routing: head {head_k}/{v} cuts analytic remote out-row share \
+         {share_off:.3} -> {share_owner:.3}; exchange overhead {ratio:.2}x"
+    );
+    if let Some(r) = report.as_mut() {
+        r.set(
+            "micro_routing",
+            Json::obj([
+                ("vocab", Json::num(v as f64)),
+                ("nodes", Json::num(nodes as f64)),
+                ("head_k", Json::num(head_k as f64)),
+                ("classify_ns_per_id", Json::num(classify_ns)),
+                ("remote_share_off", Json::num(share_off)),
+                ("remote_share_owner", Json::num(share_owner)),
+                ("routed_windows_per_sec", Json::num(routed_wps)),
+                ("routed_over_unrouted", Json::num(ratio)),
             ]),
         );
     }

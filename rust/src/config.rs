@@ -17,6 +17,7 @@ use std::str::FromStr;
 
 use crate::linalg::simd::SimdMode;
 use crate::runtime::topology::NumaMode;
+use crate::train::route::RouteMode;
 use crate::util::args::Args;
 
 /// Which trainer back-end executes the SGNS updates.
@@ -267,6 +268,15 @@ pub struct TrainConfig {
     /// sharded copy while training (transient 2x model memory; see
     /// EXPERIMENTS.md §NUMA).
     pub numa: NumaMode,
+    /// Window routing by output-row ownership (`--route
+    /// {off,owner,head=<K>}`): `off` = every worker processes its own
+    /// windows (the pre-routing path bit-for-bit); `owner` = steer
+    /// windows whose target is in the Zipf-derived hot head to the
+    /// worker on the target row's home node (bounded mailboxes,
+    /// local-fallback backpressure); `head=<K>` = explicit cutoff
+    /// (ablations, tests).  Composes with `--numa`; without it, routing
+    /// degenerates to per-row worker ownership within the node.
+    pub route: RouteMode,
 }
 
 impl Default for TrainConfig {
@@ -293,6 +303,7 @@ impl Default for TrainConfig {
             kernel: KernelMode::Auto,
             corpus_cache: CorpusCacheMode::Off,
             numa: NumaMode::Off,
+            route: RouteMode::Off,
         }
     }
 }
@@ -355,6 +366,9 @@ impl TrainConfig {
         if let Some(nm) = a.opt::<NumaMode>("numa")? {
             self.numa = nm;
         }
+        if let Some(r) = a.opt::<RouteMode>("route")? {
+            self.route = r;
+        }
         self.validate()
     }
 
@@ -397,6 +411,15 @@ impl TrainConfig {
             anyhow::ensure!(
                 (1..=1024).contains(&n),
                 "numa nodes must be in 1..=1024 (got {n})"
+            );
+        }
+        // Same discipline for the routed-head cutoff: FromStr enforces
+        // the bound, programmatically built configs must too (ids are
+        // u32, so a larger head can never match a row).
+        if let RouteMode::Head(k) = self.route {
+            anyhow::ensure!(
+                (1..=u32::MAX as usize).contains(&k),
+                "route head must be in 1..=2^32-1 (got {k})"
             );
         }
         Ok(())
@@ -541,6 +564,33 @@ mod tests {
         c.numa = NumaMode::Nodes(500_000);
         assert!(c.validate().is_err());
         c.numa = NumaMode::Nodes(8);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn route_knob_parsing() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.route, RouteMode::Off);
+        let a = Args::parse(
+            "--route owner".split_whitespace().map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.route, RouteMode::Owner);
+        let a = Args::parse(
+            "--route head=256".split_whitespace().map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.route, RouteMode::Head(256));
+        let a = Args::parse(
+            "--route hot".split_whitespace().map(String::from),
+        );
+        assert!(c.apply_args(&a).is_err());
+        // validate() enforces the head bound for programmatically built
+        // configs too.
+        let mut c = TrainConfig::default();
+        c.route = RouteMode::Head(0);
+        assert!(c.validate().is_err());
+        c.route = RouteMode::Head(4096);
         assert!(c.validate().is_ok());
     }
 

@@ -32,11 +32,12 @@ use crate::corpus::shard::{shards_for_len, Shard};
 use crate::corpus::source::Corpus;
 use crate::corpus::subsample::Subsampler;
 use crate::corpus::vocab::Vocab;
-use crate::model::SharedModel;
+use crate::model::{set_access_node, ShardMap, SharedModel};
 use crate::runtime::topology::{self, Topology};
 use crate::sampling::batch::{BatchBuilder, SuperbatchArena};
 use crate::sampling::unigram::UnigramSampler;
 use crate::train::lr::LrState;
+use crate::train::route::{Exchange, Outbox, RouteSink, RowRouter};
 use crate::train::sgd_gemm::GemmBackend;
 use crate::train::Backend;
 use crate::util::rng::Xoshiro256ss;
@@ -209,6 +210,10 @@ fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
         // replicas read this one only inside allreduce rounds, which the
         // phase-2 barrier orders after every node's init + training leg.
         t.pin_to_node(ctx.idx % t.nodes());
+        // Debug remote-row counter context (no-op in release; replica
+        // models are flat, so nothing counts — replica-per-node is the
+        // ~0%-remote configuration by construction).
+        set_access_node(Some(ctx.idx % t.nodes()));
         model.first_touch_init(cfg.seed);
     }
     let mut backend = GemmBackend::new(cfg.dim, cfg.batch, cfg.samples())
@@ -218,6 +223,20 @@ fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
         Xoshiro256ss::new(cfg.seed ^ (ctx.idx as u64 * 0x5D1_77F + 13));
     let builder =
         BatchBuilder::new(ctx.sampler, cfg.window, cfg.batch, cfg.negative);
+    // `--route` on the replica driver: a replica is ONE pinned worker
+    // over ONE node-local model, so ownership routing collapses to the
+    // local path by construction — the router classifies every window
+    // back to its single consumer.  We still drive the routed fill so
+    // the knob exercises the same generator end to end (identical RNG
+    // consumption and window order ⇒ replica results stay bitwise
+    // unchanged; windows simply never enter a mailbox).
+    let routed = cfg.route.head_k(ctx.vocab).map(|head_k| {
+        (
+            RowRouter::new(ShardMap::contiguous(ctx.vocab.len(), 1), head_k),
+            Exchange::new(1, 1, 1, cfg.batch, cfg.samples()),
+        )
+    });
+    let mut outbox = routed.as_ref().map(|(r, e)| Outbox::new(e, r, 0));
     // Sentence-slack sizing: same overshoot bound as the shared-memory
     // trainer (fill_arena appends whole sentences).
     let mut arena = SuperbatchArena::with_sentence_slack(
@@ -272,7 +291,13 @@ fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
             processed += sent.len() as u64;
             raw_words += sent.len() as u64;
             ctx.subsampler.filter(&mut sent, &mut rng);
-            builder.fill_arena(&sent, &mut rng, &mut arena);
+            match outbox.as_mut() {
+                None => builder.fill_arena(&sent, &mut rng, &mut arena),
+                Some(ob) => {
+                    let mut sink = RouteSink::new(&mut arena, ob);
+                    builder.fill_arena_routed(&sent, &mut rng, &mut sink);
+                }
+            }
             if arena.len() >= cfg.superbatch {
                 let lr = ctx.lr_state.advance(raw_words);
                 ctx.words_done
@@ -424,6 +449,26 @@ mod tests {
         assert_ne!(out.model.m_in().data(), init.m_in().data());
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&cache).ok();
+    }
+
+    /// `--route` on the replica driver is a provable no-op: one worker
+    /// per replica means every window classifies back to its own arena,
+    /// and the routed generator consumes the RNG identically — replicas
+    /// (and their barrier-ordered merge) stay bitwise unchanged.
+    #[test]
+    fn route_knob_is_bitwise_noop_on_replicas() {
+        let (path, vocab) = tiny_corpus(61);
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        let mut dist = DistConfig::for_nodes(2);
+        dist.sync_interval = 8_000;
+        let off = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+        cfg.route = crate::train::route::RouteMode::Owner;
+        let routed = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+        assert_eq!(off.words, routed.words);
+        assert_eq!(off.model.m_in().data(), routed.model.m_in().data());
+        assert_eq!(off.model.m_out().data(), routed.model.m_out().data());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -57,16 +57,23 @@ USAGE: pw2v <subcommand> [--key value ...]
               [--backend scalar|bidmach|gemm|pjrt --threads T --dim D
                --simd auto|avx2|scalar --kernel auto|fused|gemm3
                --sigmoid exact|table --corpus-cache off|auto|PATH
-               --numa off|auto|NODES ...]
+               --numa off|auto|NODES --route off|owner|head=K ...]
               (--corpus-cache auto encodes <corpus>.pw2v.u32 once and
                trains from the u32 cache: no per-epoch re-tokenization;
                --numa auto shards M_in/M_out across NUMA nodes and pins
-               workers so Hogwild scatters stay socket-local)
+               workers so Hogwild scatters stay socket-local;
+               --route owner additionally steers each hot-target window
+               to the worker on the target row's home node — bounded
+               mailboxes, local fallback under backpressure)
   train-dist  --corpus corpus.txt --nodes N [--sync-interval W --policy sub|full]
-              [--numa off|auto|NODES --out vectors.txt]
+              [--numa off|auto|NODES --route off|owner|head=K
+               --out vectors.txt]
               (--numa auto pins each replica to a NUMA node and
                first-touches it there — one replica per socket keeps
-               training traffic node-local)
+               training traffic node-local; --route is accepted for
+               config parity but is a no-op here: each replica is one
+               worker, so every window already processes on its home
+               node)
   eval        --vectors vectors.txt [--simset sim.tsv] [--anaset ana.txt]
   simulate    --figure 3|4 [--machine bdw|knl|hsw]
   info        [--artifacts-dir artifacts]
@@ -123,7 +130,7 @@ fn cmd_train(a: &Args) -> anyhow::Result<()> {
     let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
     eprintln!(
         "training: backend={} threads={} dim={} epochs={} simd={} kernel={} \
-         sigmoid={} corpus-cache={} numa={}",
+         sigmoid={} corpus-cache={} numa={} route={}",
         cfg.backend,
         cfg.threads,
         cfg.dim,
@@ -132,7 +139,8 @@ fn cmd_train(a: &Args) -> anyhow::Result<()> {
         cfg.kernel,
         cfg.sigmoid_mode,
         cfg.corpus_cache,
-        cfg.numa
+        cfg.numa,
+        cfg.route
     );
     let outcome = train::train(&cfg, &corpus, &vocab, &model)?;
     let snap = outcome.snapshot;
@@ -172,11 +180,12 @@ fn cmd_train_dist(a: &Args) -> anyhow::Result<()> {
     let vocab = Vocab::build_from_file(&corpus, cfg.min_count)?;
     eprintln!(
         "distributed training: {} nodes, sync every {} words, vocab {}, \
-         numa={}",
+         numa={} route={}",
         nodes,
         dist.sync_interval,
         vocab.len(),
-        cfg.numa
+        cfg.numa,
+        cfg.route
     );
     let outcome = train_distributed(&cfg, &dist, &corpus, &vocab)?;
     eprintln!(

@@ -49,6 +49,88 @@ use crate::runtime::topology::Topology;
 use crate::util::rng::Xoshiro256ss;
 use crate::util::split_point;
 
+/// Debug-build instrumentation of sharded row locality (the routing PR's
+/// acceptance counter): every `NumaModel` row access made from a thread
+/// that declared its home node via [`set_access_node`] is counted as
+/// total/remote ("remote" = the row's home shard differs from the
+/// accessing worker's node).  Threads that never declare a node (the
+/// copy-back epilogue, eval, tests' main threads) are not counted, and
+/// the flat `SharedModel` path never counts — so the stats isolate
+/// exactly the cross-node Hogwild traffic `--route` attacks.  Release
+/// builds compile all of it away ([`row_access_stats`] is always
+/// `(0, 0)` there), keeping `--numa` hot-path codegen untouched.
+#[cfg(debug_assertions)]
+mod access_stats {
+    use std::cell::Cell;
+    use std::sync::atomic::AtomicU64;
+
+    pub static TOTAL: AtomicU64 = AtomicU64::new(0);
+    pub static REMOTE: AtomicU64 = AtomicU64::new(0);
+
+    thread_local! {
+        pub static NODE: Cell<Option<usize>> = const { Cell::new(None) };
+    }
+}
+
+/// Declare the calling worker thread's home node for the debug
+/// remote-row counters (`None` stops counting on this thread).  The
+/// trainer calls this right after pinning, with the node the worker was
+/// ASSIGNED — so the stats measure shard-map geometry even where
+/// best-effort pinning failed.  No-op in release builds.
+pub fn set_access_node(node: Option<usize>) {
+    #[cfg(debug_assertions)]
+    access_stats::NODE.with(|n| n.set(node));
+    #[cfg(not(debug_assertions))]
+    let _ = node;
+}
+
+/// `(total, remote)` sharded row accesses counted so far across all
+/// declared threads (debug builds; always `(0, 0)` in release).  Tests
+/// take before/after deltas — see `tests/routing_parity.rs`, which
+/// serialises its training runs around these process-wide counters.
+pub fn row_access_stats() -> (u64, u64) {
+    #[cfg(debug_assertions)]
+    {
+        use std::sync::atomic::Ordering;
+        (
+            access_stats::TOTAL.load(Ordering::Relaxed),
+            access_stats::REMOTE.load(Ordering::Relaxed),
+        )
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        (0, 0)
+    }
+}
+
+/// Zero the process-wide row-access counters (debug builds).
+pub fn reset_row_access_stats() {
+    #[cfg(debug_assertions)]
+    {
+        use std::sync::atomic::Ordering;
+        access_stats::TOTAL.store(0, Ordering::Relaxed);
+        access_stats::REMOTE.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Count one sharded row access homed on `node` against the calling
+/// thread's declared node (debug builds only; free in release).
+#[inline]
+fn note_row_access(node: usize) {
+    #[cfg(debug_assertions)]
+    {
+        use std::sync::atomic::Ordering;
+        if let Some(cur) = access_stats::NODE.with(|n| n.get()) {
+            access_stats::TOTAL.fetch_add(1, Ordering::Relaxed);
+            if cur != node {
+                access_stats::REMOTE.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    #[cfg(not(debug_assertions))]
+    let _ = node;
+}
+
 /// The row-level model handle every trainer back-end programs against:
 /// racy Hogwild row views plus the scatter-add helpers, dispatching to
 /// the flat [`SharedModel`] or the NUMA-sharded [`NumaModel`].
@@ -397,6 +479,7 @@ impl NumaModel {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn row_in(&self, w: u32) -> &mut [f32] {
         let (node, local) = self.map.locate(w);
+        note_row_access(node);
         self.shards[node].m_in.racy_row(local)
     }
 
@@ -408,6 +491,7 @@ impl NumaModel {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn row_out(&self, w: u32) -> &mut [f32] {
         let (node, local) = self.map.locate(w);
+        note_row_access(node);
         self.shards[node].m_out.racy_row(local)
     }
 
@@ -570,6 +654,51 @@ mod tests {
             assert_eq!(dst.m_in().data(), src.m_in().data());
             assert_eq!(dst.m_out().data(), src.m_out().data());
         }
+    }
+
+    /// Debug remote-row counters: only threads that declared a node
+    /// count, and "remote" follows the shard map exactly.  (Runs on its
+    /// own spawned thread so the declaration never leaks into sibling
+    /// tests; no other lib test declares a node, so the global deltas
+    /// here are exact.)
+    #[test]
+    fn row_access_counters_split_local_and_remote() {
+        if !cfg!(debug_assertions) {
+            eprintln!("skipping: row-access counters are debug-only");
+            return;
+        }
+        let topo =
+            crate::runtime::topology::Topology::single_node().regroup(2);
+        let src = SharedModel::init(10, 4, 3);
+        let numa = NumaModel::from_model(&src, &topo);
+        // Rows 0..5 home on node 0, rows 5..10 on node 1.
+        let (t0, r0) = row_access_stats();
+        // Undeclared thread: accesses must not count.
+        unsafe {
+            let _ = numa.row_in(0);
+            let _ = numa.row_out(9);
+        }
+        assert_eq!(row_access_stats(), (t0, r0), "undeclared thread counted");
+        thread::scope(|s| {
+            s.spawn(|| {
+                set_access_node(Some(0));
+                // 3 accesses on node 0 (local), 2 on node 1 (remote).
+                unsafe {
+                    let _ = numa.row_in(0);
+                    let _ = numa.row_out(1);
+                    let _ = numa.row_in(4);
+                    let _ = numa.row_in(5);
+                    let _ = numa.row_out(9);
+                }
+                set_access_node(None);
+                unsafe {
+                    let _ = numa.row_in(7); // after None: not counted
+                }
+            });
+        });
+        let (t1, r1) = row_access_stats();
+        assert_eq!(t1 - t0, 5, "total accesses");
+        assert_eq!(r1 - r0, 2, "remote accesses");
     }
 
     #[test]

@@ -7,4 +7,7 @@ pub mod hogwild;
 pub mod io;
 
 pub use embedding::Embedding;
-pub use hogwild::{ModelRef, NumaModel, ShardMap, SharedModel};
+pub use hogwild::{
+    reset_row_access_stats, row_access_stats, set_access_node, ModelRef,
+    NumaModel, ShardMap, SharedModel,
+};

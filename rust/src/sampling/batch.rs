@@ -116,7 +116,41 @@ impl SuperbatchArena {
         Self::with_capacity(superbatch + MAX_SENTENCE_LEN, b_cap, s)
     }
 
+    /// The ROUTED trainer-loop constructor (`--route {owner,head=<K>}`):
+    /// sentence slack PLUS headroom for the windows that peers can have in
+    /// flight toward this worker through the exchange mailboxes.
+    ///
+    /// Under routing the flush-time bound grows: right before a worker
+    /// processes, its arena holds up to `superbatch − 1` pending windows,
+    /// plus one clipped-at-[`MAX_SENTENCE_LEN`] appended sentence, plus
+    /// everything [`append_from`](Self::append_from) adopted from the
+    /// mailboxes — at most `inflight` windows, because the block rings are
+    /// bounded and drained once per sentence (the trainer passes
+    /// `Exchange::max_inflight()` here).  Sizing for all three terms keeps
+    /// the no-realloc-after-construction guarantee
+    /// (`with_sentence_slack`'s contract) on the routed path too, which
+    /// `tests/alloc_steadystate.rs`'s routed leg asserts.
+    pub fn with_route_slack(
+        superbatch: usize,
+        b_cap: usize,
+        s: usize,
+        inflight: usize,
+    ) -> Self {
+        Self::with_capacity(superbatch + MAX_SENTENCE_LEN + inflight, b_cap, s)
+    }
+
     /// Number of windows currently stored.
+    ///
+    /// NOTE on capacity semantics: `len()` can legitimately exceed the
+    /// `superbatch`/`windows` count a constructor was sized for — the
+    /// constructors reserve CAPACITY, they do not cap occupancy.  The
+    /// trainer's flush check is `len() >= superbatch`, and the slack
+    /// constructors ([`with_sentence_slack`](Self::with_sentence_slack),
+    /// [`with_route_slack`](Self::with_route_slack)) size for the exact
+    /// worst-case overshoot of their fill pattern so that exceeding
+    /// `superbatch` never reallocates; per-mailbox blocks are instead
+    /// capped BY THE FILLER (the outbox flushes a block before it would
+    /// pass `block_windows`), not by this type.
     #[inline]
     pub fn len(&self) -> usize {
         self.input_offsets.len() - 1
@@ -178,6 +212,19 @@ impl SuperbatchArena {
         self.input_offsets.push(self.inputs.len() as u32);
     }
 
+    /// Append every window of `other` (same geometry) — how a routed
+    /// worker adopts a mailbox block into its working arena.  One slice
+    /// copy per flat buffer plus an offset rebase; no per-window work.
+    pub fn append_from(&mut self, other: &SuperbatchArena) {
+        assert_eq!(self.s, other.s, "append_from: S mismatch");
+        assert_eq!(self.b_cap, other.b_cap, "append_from: B cap mismatch");
+        let base = self.inputs.len() as u32;
+        self.inputs.extend_from_slice(&other.inputs);
+        self.outputs.extend_from_slice(&other.outputs);
+        self.input_offsets
+            .extend(other.input_offsets[1..].iter().map(|&o| o + base));
+    }
+
     /// Materialise as allocated [`Window`]s (compatibility path for
     /// back-ends without a native arena implementation).
     pub fn to_windows(&self) -> Vec<Window> {
@@ -187,6 +234,30 @@ impl SuperbatchArena {
                 outputs: self.outputs_of(w).to_vec(),
             })
             .collect()
+    }
+}
+
+/// Where a generated window lands: the routed fill asks the sink for a
+/// destination arena PER WINDOW, keyed by the window's target (output row
+/// 0) — classification happens at generation time, BEFORE arena
+/// placement, so a routed window's ids only ever enter the arena of the
+/// worker that will process it (superbatch dedup slots stay node-local).
+///
+/// The trivial sink is an arena itself (everything local — exactly
+/// [`BatchBuilder::fill_arena`]); the routing sink
+/// (`train::route::RouteSink`) steers hot-target windows into per-worker
+/// mailbox blocks instead.
+pub trait WindowSink {
+    /// Arena the next window with this target must be appended to.  The
+    /// returned arena's geometry must match the builder's (`s == 1+K`,
+    /// `b_cap == batch`).
+    fn arena_for(&mut self, target: u32) -> &mut SuperbatchArena;
+}
+
+impl WindowSink for SuperbatchArena {
+    #[inline]
+    fn arena_for(&mut self, _target: u32) -> &mut SuperbatchArena {
+        self
     }
 }
 
@@ -271,8 +342,44 @@ impl<'a> BatchBuilder<'a> {
         // silently interleave windows at the wrong stride.
         assert_eq!(arena.s(), self.samples(), "arena S != builder 1+K");
         assert_eq!(arena.b_cap(), self.batch, "arena B cap != builder batch");
+        // The arena IS the trivial all-local sink, so the unrouted and
+        // routed fills are the same code by construction — `--route off`
+        // cannot drift from the routed generator, and both consume the
+        // RNG identically (one dynamic-window draw per position, K
+        // negative draws per emitted window).
+        self.fill_arena_routed(sentence, rng, arena);
+    }
+
+    /// The routed counterpart of [`fill_arena`](Self::fill_arena): every
+    /// window is CLASSIFIED by its target before placement — the sink
+    /// picks the destination arena (the worker's own, or a mailbox block
+    /// bound for the worker whose NUMA node owns the target row).
+    ///
+    /// RNG consumption is independent of the sink's decisions (same draws
+    /// as `fill_arena` for the same sentence), so routing never perturbs
+    /// the generated window stream — only where each window is processed
+    /// (`tests/routing_parity.rs` pins 1-thread bitwise equality).
+    pub fn fill_arena_routed(
+        &self,
+        sentence: &[u32],
+        rng: &mut Xoshiro256ss,
+        sink: &mut impl WindowSink,
+    ) {
         for t in 0..sentence.len() {
             let win = dynamic_window(self.window, rng);
+            // Singleton sentences emit no window for their only center
+            // (no context; the draw above still happens, like
+            // `windows_of`).  Checked BEFORE consulting the sink so its
+            // routed/local accounting only ever sees real windows.  For
+            // `len >= 2` every center has ≥1 context word (win >= 1),
+            // so a classified window is always emitted.
+            if sentence.len() < 2 {
+                continue;
+            }
+            let target = sentence[t];
+            let arena = sink.arena_for(target);
+            debug_assert_eq!(arena.s(), self.samples(), "arena S != builder 1+K");
+            debug_assert_eq!(arena.b_cap(), self.batch, "arena B != builder");
             let start = arena.inputs.len();
             for p in context_range(t, win, sentence.len()) {
                 if arena.inputs.len() - start == self.batch {
@@ -280,10 +387,7 @@ impl<'a> BatchBuilder<'a> {
                 }
                 arena.inputs.push(sentence[p]);
             }
-            if arena.inputs.len() == start {
-                continue; // no context: not a window
-            }
-            let target = sentence[t];
+            debug_assert!(arena.inputs.len() > start, "center lost its context");
             arena.outputs.push(target);
             for _ in 0..self.negative {
                 arena.outputs.push(self.sampler.sample_excluding(target, rng));
@@ -520,6 +624,129 @@ mod tests {
                 arena.outputs.capacity(),
             ),
             "sentence-slack arena reallocated on worst-case overshoot"
+        );
+    }
+
+    /// `append_from` rebases input offsets correctly: a concatenated
+    /// arena reads back window-for-window as source A then source B.
+    #[test]
+    fn append_from_concatenates_and_rebases_offsets() {
+        let (_, s) = builder_parts(60);
+        let b = BatchBuilder::new(&s, 4, 8, 5);
+        let sa: Vec<u32> = (0..15).collect();
+        let sb: Vec<u32> = (20..50).collect();
+        let mut a = SuperbatchArena::new(8, 6);
+        let mut bb = SuperbatchArena::new(8, 6);
+        b.fill_arena(&sa, &mut Xoshiro256ss::new(7), &mut a);
+        b.fill_arena(&sb, &mut Xoshiro256ss::new(8), &mut bb);
+        let (la, lb) = (a.len(), bb.len());
+        let mut merged = SuperbatchArena::new(8, 6);
+        merged.append_from(&a);
+        merged.append_from(&bb);
+        assert_eq!(merged.len(), la + lb);
+        for w in 0..la {
+            assert_eq!(merged.inputs_of(w), a.inputs_of(w), "window {w}");
+            assert_eq!(merged.outputs_of(w), a.outputs_of(w), "window {w}");
+        }
+        for w in 0..lb {
+            assert_eq!(merged.inputs_of(la + w), bb.inputs_of(w), "window {w}");
+            assert_eq!(merged.outputs_of(la + w), bb.outputs_of(w), "window {w}");
+        }
+    }
+
+    /// A sink that splits windows by target parity across two arenas —
+    /// the routed fill must (a) consume the RNG exactly like the plain
+    /// fill and (b) partition the plain fill's windows without loss,
+    /// duplication, or reordering within each destination.
+    #[test]
+    fn routed_fill_partitions_plain_fill() {
+        struct ParitySink {
+            even: SuperbatchArena,
+            odd: SuperbatchArena,
+        }
+        impl WindowSink for ParitySink {
+            fn arena_for(&mut self, target: u32) -> &mut SuperbatchArena {
+                if target % 2 == 0 {
+                    &mut self.even
+                } else {
+                    &mut self.odd
+                }
+            }
+        }
+        let (_, s) = builder_parts(80);
+        let b = BatchBuilder::new(&s, 5, 4, 5);
+        let sent: Vec<u32> = (0..40).map(|i| (i * 13) % 80).collect();
+        let mut plain = SuperbatchArena::new(4, 6);
+        b.fill_arena(&sent, &mut Xoshiro256ss::new(31), &mut plain);
+        let mut sink = ParitySink {
+            even: SuperbatchArena::new(4, 6),
+            odd: SuperbatchArena::new(4, 6),
+        };
+        b.fill_arena_routed(&sent, &mut Xoshiro256ss::new(31), &mut sink);
+        assert_eq!(sink.even.len() + sink.odd.len(), plain.len());
+        let (mut ie, mut io) = (0usize, 0usize);
+        for w in 0..plain.len() {
+            let target = plain.outputs_of(w)[0];
+            let (dst, idx) = if target % 2 == 0 {
+                (&sink.even, &mut ie)
+            } else {
+                (&sink.odd, &mut io)
+            };
+            assert_eq!(dst.inputs_of(*idx), plain.inputs_of(w), "window {w}");
+            assert_eq!(dst.outputs_of(*idx), plain.outputs_of(w), "window {w}");
+            *idx += 1;
+        }
+        assert_eq!(ie, sink.even.len());
+        assert_eq!(io, sink.odd.len());
+    }
+
+    /// Route-slack sizing covers the routed worst case: a superbatch one
+    /// window short of full, a clipped-at-maximum appended sentence, AND
+    /// a full complement of in-flight mailbox windows adopted via
+    /// `append_from` — no buffer may reallocate (the satellite fix for
+    /// the `len()`-vs-capacity mismatch risk under routed fills).
+    #[test]
+    fn route_slack_absorbs_sentence_plus_inflight_overshoot() {
+        let (_, s) = builder_parts(50);
+        let superbatch = 4usize;
+        let inflight = 96usize;
+        let b = BatchBuilder::new(&s, 5, 16, 5);
+        let mut arena =
+            SuperbatchArena::with_route_slack(superbatch, 16, 6, inflight);
+        let caps = (
+            arena.inputs.capacity(),
+            arena.input_offsets.capacity(),
+            arena.outputs.capacity(),
+        );
+        let mut rng = Xoshiro256ss::new(13);
+        // superbatch − 1 windows already pending...
+        let stub: Vec<u32> = (0..(superbatch as u32 - 1)).collect();
+        b.fill_arena(&stub, &mut rng, &mut arena);
+        // ...then one maximum-length sentence in one append...
+        let long: Vec<u32> =
+            (0..MAX_SENTENCE_LEN as u32).map(|i| i % 50).collect();
+        b.fill_arena(&long, &mut rng, &mut arena);
+        // ...then the worst-case mailbox drain: `inflight` windows, every
+        // one at the full B cap (worse than any real block mix).
+        let mut block = SuperbatchArena::with_capacity(inflight, 16, 6);
+        let inputs = [1u32; 16];
+        let outputs = [2u32; 6];
+        for _ in 0..inflight {
+            block.push_window(&inputs, &outputs);
+        }
+        arena.append_from(&block);
+        assert_eq!(
+            arena.len(),
+            superbatch - 1 + MAX_SENTENCE_LEN + inflight
+        );
+        assert_eq!(
+            caps,
+            (
+                arena.inputs.capacity(),
+                arena.input_offsets.capacity(),
+                arena.outputs.capacity(),
+            ),
+            "route-slack arena reallocated on worst-case routed overshoot"
         );
     }
 

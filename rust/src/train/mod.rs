@@ -14,13 +14,15 @@
 //! All run Hogwild across worker threads over corpus shards.
 
 pub mod lr;
+pub mod route;
 pub mod sgd_bidmach;
 pub mod sgd_gemm;
 pub mod sgd_pjrt;
 pub mod sgd_scalar;
 pub mod trainer;
 
-pub use lr::{LrState};
+pub use lr::LrState;
+pub use route::RouteMode;
 pub use trainer::{train, TrainOutcome};
 
 use crate::model::{ModelRef, SharedModel};

@@ -1,0 +1,899 @@
+//! Ownership-routed superbatch scheduling — steering each generated
+//! window to the worker whose NUMA node owns the window's OUTPUT rows.
+//!
+//! `--numa` sharding (PR 4) bounds the expected remote Hogwild row share
+//! at `(n−1)/n` because workers still consume an arbitrary window
+//! stream: a window's target/negative rows live on a random node
+//! relative to whoever generated it.  The paper's shared-memory scaling
+//! (Sec. IV) comes precisely from keeping hot rows resident near the
+//! threads that update them, and word ids are Zipf-distributed — a small
+//! **routed head** of output ids covers most of the traffic.  This
+//! module routes exactly that head:
+//!
+//! * [`RowRouter`] — arithmetic home-node lookup (the same
+//!   [`ShardMap`] partition `NumaModel` places rows with) plus the
+//!   Zipf-aware head cutoff: only targets with `id < K` are routed; the
+//!   cold tail stays on the generating worker, so rare rows never pay
+//!   for cross-worker queues.
+//! * [`Exchange`] — per-worker-pair bounded SPSC mailboxes moving whole
+//!   window BLOCKS (mini [`SuperbatchArena`]s) with a free-ring
+//!   recycling path back to the producer, so the steady-state routed
+//!   loop allocates nothing (`tests/alloc_steadystate.rs`, routed leg).
+//!   Std-only — the same no-new-crates discipline as
+//!   `runtime::topology`'s raw `sched_setaffinity(2)` and
+//!   `corpus::encoded`'s raw `mmap(2)`.
+//! * [`Outbox`]/[`RouteSink`] — the producer side: windows are
+//!   classified at GENERATION time (before arena placement, so dedup
+//!   slots stay node-local) and land either in the worker's own arena or
+//!   in a pending block bound for the owner's worker.
+//!
+//! **Backpressure is the load balancer.** Under a contiguous shard map
+//! the Zipf head lives almost entirely on node 0, so strict ownership
+//! routing would pile most of the window mass onto node-0 workers.  The
+//! mailboxes are bounded and producers NEVER block: when a destination's
+//! rings are full (its workers can't absorb windows any faster), the
+//! producer falls back to processing the window locally — routing is
+//! opportunistic locality, not a partition, and correctness never
+//! depends on where a window is processed (the model is shared;
+//! `tests/routing_parity.rs` bounds the drift).  `--route off` bypasses
+//! this module entirely (bit-for-bit the PR-4 path).
+
+use std::cell::UnsafeCell;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use crate::corpus::vocab::Vocab;
+use crate::model::ShardMap;
+use crate::sampling::batch::{SuperbatchArena, WindowSink};
+
+/// The `--route` config knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RouteMode {
+    /// No routing — bit-for-bit the pre-routing trainer path.
+    #[default]
+    Off,
+    /// Route windows whose target is in the Zipf-derived default head
+    /// (the smallest id prefix covering [`OWNER_COVERAGE`] of corpus
+    /// mass) to the worker on the target row's home node.
+    Owner,
+    /// Like `Owner` with an explicit head cutoff: route only targets
+    /// with `id < K` (ids are frequency-sorted, so this is the hottest-K
+    /// prefix) — the ablation/test knob.
+    Head(usize),
+}
+
+impl RouteMode {
+    /// The routed-head cutoff this mode resolves to for `vocab` —
+    /// `None` = routing off.
+    pub fn head_k(&self, vocab: &Vocab) -> Option<usize> {
+        match *self {
+            RouteMode::Off => None,
+            RouteMode::Owner => Some(owner_head_k(vocab)),
+            RouteMode::Head(k) => Some(k.min(vocab.len().max(1))),
+        }
+    }
+}
+
+impl FromStr for RouteMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "off" | "none" => Ok(RouteMode::Off),
+            "owner" => Ok(RouteMode::Owner),
+            other => {
+                let k: usize = other
+                    .strip_prefix("head=")
+                    .and_then(|k| k.parse().ok())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown route mode '{s}' (off|owner|head=<K>)"
+                        )
+                    })?;
+                // Ids are u32; a head past that can never match a row.
+                anyhow::ensure!(
+                    (1..=u32::MAX as usize).contains(&k),
+                    "--route head=<K> must be in 1..=2^32-1 (got {k})"
+                );
+                Ok(RouteMode::Head(k))
+            }
+        }
+    }
+}
+
+impl fmt::Display for RouteMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteMode::Off => f.write_str("off"),
+            RouteMode::Owner => f.write_str("owner"),
+            RouteMode::Head(k) => write!(f, "head={k}"),
+        }
+    }
+}
+
+/// Corpus-mass fraction the `--route owner` default head covers.  Under
+/// Zipf(1) frequencies the head length is sublinear in vocabulary size
+/// (`H(K)/H(V)` coverage — EXPERIMENTS.md §Routing tabulates it), so 90%
+/// of routable window mass costs a fraction of the id space.
+pub const OWNER_COVERAGE: f64 = 0.90;
+
+/// Smallest K such that ids `0..K` cover [`OWNER_COVERAGE`] of the
+/// retained corpus mass.  Relies on the vocabulary's frequency-sorted id
+/// invariant (id 0 = most frequent), which `corpus::vocab` guarantees.
+pub fn owner_head_k(vocab: &Vocab) -> usize {
+    let total = vocab.total_words();
+    if total == 0 || vocab.is_empty() {
+        return vocab.len().max(1);
+    }
+    let want = (total as f64 * OWNER_COVERAGE).ceil() as u64;
+    let mut cum = 0u64;
+    for id in 0..vocab.len() as u32 {
+        cum += vocab.count(id);
+        if cum >= want {
+            return id as usize + 1;
+        }
+    }
+    vocab.len()
+}
+
+/// Home-node lookup + routed-head cutoff: the read-only routing table
+/// every worker shares.  Built over the SAME contiguous [`ShardMap`]
+/// partition `NumaModel` shards rows with, so "home node" is literally
+/// where the row's pages live under `--numa` (and the single node of the
+/// flat model otherwise — routing then degenerates to per-row worker
+/// ownership WITHIN the node, which still keeps a hot row's `dWo`
+/// scatters on one core's cache).
+pub struct RowRouter {
+    map: ShardMap,
+    head_k: u32,
+}
+
+impl RowRouter {
+    pub fn new(map: ShardMap, head_k: usize) -> Self {
+        let head_k = head_k.min(map.vocab()).min(u32::MAX as usize) as u32;
+        Self { map, head_k }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.map.nodes()
+    }
+
+    pub fn head_k(&self) -> usize {
+        self.head_k as usize
+    }
+
+    /// Home node of a row (shard-map arithmetic lookup).
+    #[inline]
+    pub fn home_node(&self, row: u32) -> usize {
+        self.map.locate(row).0
+    }
+
+    /// `Some(home node)` iff this target is in the routed head; `None`
+    /// for the cold tail (stays on the generating worker).
+    #[inline]
+    pub fn route(&self, target: u32) -> Option<usize> {
+        if target < self.head_k {
+            Some(self.home_node(target))
+        } else {
+            None
+        }
+    }
+}
+
+/// Worker ↔ node assignment (worker `i` is pinned to node `i % nodes`,
+/// the trainer's round-robin rule) plus the destination-worker pick for
+/// a routed target: among the owning node's workers, the target id
+/// selects one DETERMINISTICALLY, so a given hot row always lands in the
+/// same worker's superbatches — maximising its dedup hit rate there.
+#[derive(Clone, Copy, Debug)]
+pub struct RoutePlan {
+    workers: usize,
+    nodes: usize,
+}
+
+impl RoutePlan {
+    pub fn new(workers: usize, nodes: usize) -> Self {
+        assert!(workers >= 1 && nodes >= 1);
+        Self { workers, nodes }
+    }
+
+    #[inline]
+    pub fn node_of_worker(&self, worker: usize) -> usize {
+        worker % self.nodes
+    }
+
+    /// Number of workers pinned to `node` (0 when `nodes > workers`
+    /// leaves the node workerless).
+    #[inline]
+    pub fn workers_on(&self, node: usize) -> usize {
+        if node >= self.workers {
+            0
+        } else {
+            (self.workers - 1 - node) / self.nodes + 1
+        }
+    }
+
+    /// Destination worker for a routed target homed on `node`; `None`
+    /// when no worker is pinned there (the window stays local).
+    #[inline]
+    pub fn consumer_for(&self, node: usize, target: u32) -> Option<usize> {
+        let cnt = self.workers_on(node);
+        if cnt == 0 {
+            None
+        } else {
+            Some(node + (target as usize % cnt) * self.nodes)
+        }
+    }
+}
+
+/// Bounded single-producer/single-consumer ring.  Lock-free with two
+/// atomic cursors: `head` is written only by the producer, `tail` only
+/// by the consumer; each side Acquire-loads the other's cursor before
+/// touching a slot, which is what makes the `UnsafeCell` access sound.
+/// The SPSC discipline itself is enforced by [`Exchange`]'s (producer,
+/// consumer) indexing — each ring has exactly one pushing worker and one
+/// popping worker.
+struct Spsc<T> {
+    slots: Box<[UnsafeCell<Option<T>>]>,
+    /// Next slot the producer writes.
+    head: AtomicUsize,
+    /// Next slot the consumer reads.
+    tail: AtomicUsize,
+    /// Producer-side "no more pushes" flag (Release-stored after the
+    /// final push, so a consumer that Acquire-observes it and then
+    /// drains sees everything).
+    closed: AtomicBool,
+}
+
+// SAFETY: slot access is ordered by the head/tail Acquire/Release
+// protocol above — a slot is touched by at most one thread at a time.
+unsafe impl<T: Send> Sync for Spsc<T> {}
+
+impl<T> Spsc<T> {
+    /// Ring holding up to `cap` items (one slot is kept empty to tell
+    /// full from empty, hence `cap + 1` physical slots).
+    fn with_capacity(cap: usize) -> Self {
+        assert!(cap >= 1);
+        Self {
+            slots: (0..cap + 1).map(|_| UnsafeCell::new(None)).collect(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Producer: push without blocking; hands the value back when full.
+    fn try_push(&self, v: T) -> Result<(), T> {
+        let head = self.head.load(Ordering::Relaxed);
+        let next = (head + 1) % self.slots.len();
+        if next == self.tail.load(Ordering::Acquire) {
+            return Err(v); // full
+        }
+        // SAFETY: single producer; the Acquire load above proves the
+        // consumer has vacated slot `head` (tail moved past it), and the
+        // consumer cannot see it again until the Release store below.
+        unsafe { *self.slots[head].get() = Some(v) };
+        self.head.store(next, Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer: pop without blocking.
+    fn try_pop(&self) -> Option<T> {
+        let tail = self.tail.load(Ordering::Relaxed);
+        if tail == self.head.load(Ordering::Acquire) {
+            return None; // empty
+        }
+        // SAFETY: single consumer; the Acquire load above synchronises
+        // with the producer's Release store, so the slot's write is
+        // visible and the producer will not touch it again until the
+        // Release store below recycles it.
+        let v = unsafe { (*self.slots[tail].get()).take() };
+        debug_assert!(v.is_some(), "non-empty ring held an empty slot");
+        self.tail.store((tail + 1) % self.slots.len(), Ordering::Release);
+        v
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+    }
+
+    fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+}
+
+/// One producer→consumer channel: the data ring carries filled window
+/// blocks forward, the free ring recycles empty blocks back.  Blocks
+/// are seeded LAZILY (`Exchange::take_free` allocates up to the
+/// `blocks` quota on first demand), so a pair that never exchanges a
+/// window — the common case, since hot-row ownership concentrates on a
+/// few consumers — costs two empty ring headers, not block buffers:
+/// the mailbox matrix is O(workers²) PAIRS but only O(active pairs)
+/// MEMORY.  At most `blocks` blocks ever circulate per pair and the
+/// data ring holds `blocks` slots, so a producer holding a block can
+/// ALWAYS push it — the invariant `Exchange::send` relies on.
+struct Mailbox {
+    data: Spsc<Box<SuperbatchArena>>,
+    free: Spsc<Box<SuperbatchArena>>,
+    /// Blocks allocated for this pair so far (≤ quota).  Only the
+    /// pair's producer touches it — Relaxed is enough.
+    seeded: AtomicUsize,
+}
+
+impl Mailbox {
+    fn new(blocks: usize) -> Self {
+        Self {
+            data: Spsc::with_capacity(blocks),
+            free: Spsc::with_capacity(blocks),
+            seeded: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// Blocks seeded per worker pair.  Two blocks per direction keep the
+/// producer filling one while the consumer drains the other; the total
+/// in-flight bound stays small (`max_inflight`), which is what the
+/// routed arena slack is sized from.
+pub const ROUTE_BLOCKS: usize = 2;
+
+/// The full worker-pair mailbox matrix plus the exchange geometry.
+///
+/// Indexing discipline (what makes the inner SPSC rings sound): for the
+/// `(p, c)` pair, only worker `p` calls the producer operations
+/// ([`Outbox`] wraps them) and only worker `c` calls
+/// [`drain_into`](Self::drain_into) / [`producers_done`](Self::producers_done).
+pub struct Exchange {
+    /// `boxes[p][c]`: channel from producer worker `p` to consumer `c`.
+    /// The `p == c` diagonal is never pushed to (local windows go
+    /// straight into the worker's own arena); keeping it makes indexing
+    /// uniform and costs only two tiny idle rings per worker.
+    boxes: Vec<Vec<Mailbox>>,
+    blocks: usize,
+    block_windows: usize,
+    /// Block geometry for lazy seeding ([`Mailbox`] docs).
+    b_cap: usize,
+    s: usize,
+}
+
+impl Exchange {
+    pub fn new(
+        workers: usize,
+        blocks: usize,
+        block_windows: usize,
+        b_cap: usize,
+        s: usize,
+    ) -> Self {
+        assert!(workers >= 1 && blocks >= 1 && block_windows >= 1);
+        let boxes = (0..workers)
+            .map(|_| (0..workers).map(|_| Mailbox::new(blocks)).collect())
+            .collect();
+        Self {
+            boxes,
+            blocks,
+            block_windows,
+            b_cap,
+            s,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.boxes.len()
+    }
+
+    /// Windows per mailbox block (the outbox flushes a block before it
+    /// would exceed this).
+    pub fn block_windows(&self) -> usize {
+        self.block_windows
+    }
+
+    /// Upper bound on windows simultaneously in flight toward ONE
+    /// consumer — the `inflight` term of
+    /// [`SuperbatchArena::with_route_slack`]: every other worker can hold
+    /// at most `blocks` full blocks in its ring to us.
+    pub fn max_inflight(&self) -> usize {
+        (self.workers() - 1) * self.blocks * self.block_windows
+    }
+
+    /// Producer `p`: an empty block for consumer `c` — recycled from
+    /// the free ring, or lazily allocated while the pair is under its
+    /// block quota.  `None` = the consumer is saturated (backpressure).
+    fn take_free(&self, p: usize, c: usize) -> Option<Box<SuperbatchArena>> {
+        let mb = &self.boxes[p][c];
+        if let Some(block) = mb.free.try_pop() {
+            return Some(block);
+        }
+        // Only this pair's producer reads/writes `seeded`, so the
+        // load-then-add below is not a race.
+        if mb.seeded.load(Ordering::Relaxed) < self.blocks {
+            mb.seeded.fetch_add(1, Ordering::Relaxed);
+            return Some(Box::new(SuperbatchArena::with_capacity(
+                self.block_windows,
+                self.b_cap,
+                self.s,
+            )));
+        }
+        None
+    }
+
+    /// Producer `p`: hand a filled block to consumer `c`.  Never fails:
+    /// the block count in circulation equals the data ring's capacity.
+    fn send(&self, p: usize, c: usize, block: Box<SuperbatchArena>) {
+        assert!(
+            self.boxes[p][c].data.try_push(block).is_ok(),
+            "data ring sized for every block in circulation"
+        );
+    }
+
+    /// Producer `p` finished generating: no more pushes to anyone.
+    /// Idempotent — the drop guard re-closes on every exit path.
+    pub fn close_producer(&self, p: usize) {
+        for mb in &self.boxes[p] {
+            mb.data.close();
+        }
+    }
+
+    /// RAII close: peers' tail loops spin until EVERY producer has
+    /// closed, so a worker that exits early — `?` error or panic — must
+    /// still close its rings or the whole training scope hangs.  Workers
+    /// arm this guard before their first fallible operation; the normal
+    /// path also closes explicitly (before its own tail drain), which is
+    /// fine because closing is idempotent.
+    pub fn producer_guard(&self, p: usize) -> ProducerGuard<'_> {
+        ProducerGuard { exch: self, p }
+    }
+
+    /// Consumer `c`: adopt queued blocks into `arena` (which must have
+    /// route slack for [`max_inflight`](Self::max_inflight) windows) and
+    /// recycle the empties.  Returns the number of windows adopted.
+    ///
+    /// Pops at most `blocks` blocks per producer PER CALL: a block
+    /// recycled mid-drain can be refilled and re-pushed by a live
+    /// producer, so an unbounded `while try_pop` could adopt more than
+    /// `max_inflight` windows in one call and overflow the arena's route
+    /// slack (reallocating on the hot path).  The cap restores the
+    /// per-call bound exactly; later arrivals wait for the next drain.
+    /// After a producer has closed, nothing refills, so one bounded
+    /// drain still empties its ring completely.
+    pub fn drain_into(&self, c: usize, arena: &mut SuperbatchArena) -> usize {
+        let mut adopted = 0usize;
+        for (p, row) in self.boxes.iter().enumerate() {
+            if p == c {
+                continue;
+            }
+            let mb = &row[c];
+            for _ in 0..self.blocks {
+                let Some(mut block) = mb.data.try_pop() else {
+                    break;
+                };
+                adopted += block.len();
+                arena.append_from(&block);
+                block.clear();
+                assert!(
+                    mb.free.try_push(block).is_ok(),
+                    "free ring sized for every block in circulation"
+                );
+            }
+        }
+        adopted
+    }
+
+    /// Consumer `c`: have ALL peers closed their rings toward us?  Once
+    /// true, one more [`drain_into`](Self::drain_into) observes every
+    /// window ever pushed (close is Release-stored after the final push).
+    pub fn producers_done(&self, c: usize) -> bool {
+        self.boxes
+            .iter()
+            .enumerate()
+            .all(|(p, row)| p == c || row[c].data.is_closed())
+    }
+}
+
+/// Closes a producer's outgoing rings when dropped (normal return,
+/// `?` error, or unwind) — see [`Exchange::producer_guard`].
+pub struct ProducerGuard<'x> {
+    exch: &'x Exchange,
+    p: usize,
+}
+
+impl Drop for ProducerGuard<'_> {
+    fn drop(&mut self) {
+        self.exch.close_producer(self.p);
+    }
+}
+
+/// Producer-side routing state for one worker: the pending
+/// partially-filled block per destination, plus the routed/fallback
+/// accounting the benches and tests read.
+pub struct Outbox<'x> {
+    exch: &'x Exchange,
+    router: &'x RowRouter,
+    plan: RoutePlan,
+    me: usize,
+    pending: Vec<Option<Box<SuperbatchArena>>>,
+    /// Windows steered into a mailbox block.
+    pub routed_windows: u64,
+    /// Routed-head windows processed locally because the destination's
+    /// rings were saturated — the backpressure valve (see module docs).
+    pub fallback_windows: u64,
+    /// Cold-tail / own-target windows that were never routing candidates.
+    pub local_windows: u64,
+}
+
+impl<'x> Outbox<'x> {
+    pub fn new(exch: &'x Exchange, router: &'x RowRouter, me: usize) -> Self {
+        let workers = exch.workers();
+        assert!(me < workers);
+        Self {
+            exch,
+            router,
+            plan: RoutePlan::new(workers, router.nodes()),
+            me,
+            pending: (0..workers).map(|_| None).collect(),
+            routed_windows: 0,
+            fallback_windows: 0,
+            local_windows: 0,
+        }
+    }
+
+    /// Decide the destination of a window with this target and make its
+    /// block current: `Some(consumer)` with `pending[consumer]` ready to
+    /// take the window, or `None` for the worker's own arena (cold tail,
+    /// own target, workerless node, or backpressure fallback).
+    fn prepare(&mut self, target: u32) -> Option<usize> {
+        let routed = self
+            .router
+            .route(target)
+            .and_then(|node| self.plan.consumer_for(node, target))
+            .filter(|&c| c != self.me);
+        let c = match routed {
+            Some(c) => c,
+            None => {
+                self.local_windows += 1;
+                return None;
+            }
+        };
+        // Hand off a block that could not take one more window, then
+        // grab a recycled one; no recycled block = the consumer is
+        // saturated, so this window processes locally instead.
+        if self.pending[c]
+            .as_ref()
+            .is_some_and(|b| b.len() >= self.exch.block_windows())
+        {
+            let block = self.pending[c].take().expect("checked above");
+            self.exch.send(self.me, c, block);
+        }
+        if self.pending[c].is_none() {
+            self.pending[c] = self.exch.take_free(self.me, c);
+        }
+        if self.pending[c].is_some() {
+            self.routed_windows += 1;
+            Some(c)
+        } else {
+            self.fallback_windows += 1;
+            None
+        }
+    }
+
+    /// The block `prepare` made current (panics if not prepared).
+    fn block(&mut self, c: usize) -> &mut SuperbatchArena {
+        self.pending[c].as_mut().expect("prepare() returned this slot")
+    }
+
+    /// Hand off every pending (possibly partial) block — the producer
+    /// half of the exchange step, run before each local superbatch and
+    /// once after the worker's final sentence.
+    pub fn flush(&mut self) {
+        for (c, slot) in self.pending.iter_mut().enumerate() {
+            if slot.as_ref().is_some_and(|b| !b.is_empty()) {
+                let block = slot.take().expect("checked above");
+                self.exch.send(self.me, c, block);
+            }
+        }
+    }
+}
+
+/// The [`WindowSink`] a routed worker fills through: local windows go to
+/// the worker's own arena, routed-head windows into the outbox's pending
+/// blocks.
+pub struct RouteSink<'a, 'x> {
+    local: &'a mut SuperbatchArena,
+    outbox: &'a mut Outbox<'x>,
+}
+
+impl<'a, 'x> RouteSink<'a, 'x> {
+    pub fn new(local: &'a mut SuperbatchArena, outbox: &'a mut Outbox<'x>) -> Self {
+        Self { local, outbox }
+    }
+}
+
+impl WindowSink for RouteSink<'_, '_> {
+    #[inline]
+    fn arena_for(&mut self, target: u32) -> &mut SuperbatchArena {
+        // `prepare` decides WITHOUT holding a borrow (it returns an
+        // index), so both arms can hand out a borrow tied to `self`.
+        match self.outbox.prepare(target) {
+            Some(c) => self.outbox.block(c),
+            None => &mut *self.local,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn zipf_vocab(v: usize) -> Vocab {
+        let counts: HashMap<String, u64> = (0..v)
+            .map(|i| (format!("w{i:05}"), (1_000_000 / (i + 1)) as u64))
+            .collect();
+        Vocab::from_counts(counts, 1)
+    }
+
+    #[test]
+    fn route_mode_parsing_and_display() {
+        assert_eq!("off".parse::<RouteMode>().unwrap(), RouteMode::Off);
+        assert_eq!("OWNER".parse::<RouteMode>().unwrap(), RouteMode::Owner);
+        assert_eq!(
+            "head=128".parse::<RouteMode>().unwrap(),
+            RouteMode::Head(128)
+        );
+        assert!("head=0".parse::<RouteMode>().is_err());
+        assert!("head=".parse::<RouteMode>().is_err());
+        assert!("head=4294967296".parse::<RouteMode>().is_err());
+        assert!("hot".parse::<RouteMode>().is_err());
+        assert_eq!(RouteMode::Off.to_string(), "off");
+        assert_eq!(RouteMode::Owner.to_string(), "owner");
+        assert_eq!(RouteMode::Head(64).to_string(), "head=64");
+        assert_eq!(RouteMode::default(), RouteMode::Off);
+    }
+
+    #[test]
+    fn owner_head_covers_mass_and_is_sublinear() {
+        let vocab = zipf_vocab(10_000);
+        let k = owner_head_k(&vocab);
+        assert!(k >= 1 && k <= vocab.len());
+        // Head must actually cover the coverage target...
+        let covered: u64 = (0..k as u32).map(|id| vocab.count(id)).sum();
+        assert!(
+            covered as f64 >= OWNER_COVERAGE * vocab.total_words() as f64,
+            "head {k} covers only {covered}/{}",
+            vocab.total_words()
+        );
+        // ...and under Zipf it is a small fraction of the id space.
+        assert!(k < vocab.len() / 2, "head {k} of {} not sublinear", vocab.len());
+        // head_k resolution per mode.
+        assert_eq!(RouteMode::Off.head_k(&vocab), None);
+        assert_eq!(RouteMode::Owner.head_k(&vocab), Some(k));
+        assert_eq!(RouteMode::Head(17).head_k(&vocab), Some(17));
+        assert_eq!(
+            RouteMode::Head(usize::MAX).head_k(&vocab),
+            Some(vocab.len())
+        );
+    }
+
+    #[test]
+    fn router_routes_head_by_home_node_only() {
+        let map = ShardMap::contiguous(100, 4);
+        let router = RowRouter::new(map.clone(), 40);
+        assert_eq!(router.nodes(), 4);
+        assert_eq!(router.head_k(), 40);
+        for row in 0..100u32 {
+            let expect_home = map.locate(row).0;
+            assert_eq!(router.home_node(row), expect_home, "row {row}");
+            match router.route(row) {
+                Some(node) => {
+                    assert!(row < 40, "cold row {row} routed");
+                    assert_eq!(node, expect_home);
+                }
+                None => assert!(row >= 40, "hot row {row} not routed"),
+            }
+        }
+        // head_k clamps to the vocabulary.
+        assert_eq!(RowRouter::new(map, 1_000_000).head_k(), 100);
+    }
+
+    #[test]
+    fn route_plan_consumer_invariants() {
+        for (workers, nodes) in
+            [(1usize, 1usize), (2, 2), (3, 2), (8, 3), (2, 5), (7, 7)]
+        {
+            let plan = RoutePlan::new(workers, nodes);
+            let mut counted = 0;
+            for node in 0..nodes {
+                counted += plan.workers_on(node);
+            }
+            assert_eq!(counted, workers, "({workers},{nodes})");
+            for node in 0..nodes {
+                for target in 0..64u32 {
+                    match plan.consumer_for(node, target) {
+                        Some(c) => {
+                            assert!(c < workers, "({workers},{nodes})");
+                            assert_eq!(
+                                plan.node_of_worker(c),
+                                node,
+                                "({workers},{nodes}) consumer off-node"
+                            );
+                        }
+                        None => assert_eq!(
+                            plan.workers_on(node),
+                            0,
+                            "({workers},{nodes}) node {node}"
+                        ),
+                    }
+                }
+            }
+        }
+        // Deterministic per target: the same id always picks the same
+        // consumer (dedup affinity).
+        let plan = RoutePlan::new(8, 2);
+        for t in 0..100u32 {
+            assert_eq!(plan.consumer_for(0, t), plan.consumer_for(0, t));
+        }
+    }
+
+    #[test]
+    fn spsc_orders_fills_and_closes() {
+        let ring: Spsc<u32> = Spsc::with_capacity(3);
+        assert!(ring.try_pop().is_none());
+        ring.try_push(1).unwrap();
+        ring.try_push(2).unwrap();
+        ring.try_push(3).unwrap();
+        // Full: the push hands the value back.
+        assert_eq!(ring.try_push(4), Err(4));
+        assert_eq!(ring.try_pop(), Some(1));
+        ring.try_push(4).unwrap();
+        assert_eq!(ring.try_pop(), Some(2));
+        assert_eq!(ring.try_pop(), Some(3));
+        assert_eq!(ring.try_pop(), Some(4));
+        assert!(ring.try_pop().is_none());
+        assert!(!ring.is_closed());
+        ring.close();
+        assert!(ring.is_closed());
+    }
+
+    #[test]
+    fn spsc_survives_threaded_stream() {
+        let ring: Spsc<u64> = Spsc::with_capacity(4);
+        const N: u64 = 20_000;
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..N {
+                    let mut v = i;
+                    loop {
+                        match ring.try_push(v) {
+                            Ok(()) => break,
+                            Err(back) => {
+                                v = back;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                }
+                ring.close();
+            });
+            s.spawn(|| {
+                let mut expect = 0u64;
+                loop {
+                    match ring.try_pop() {
+                        Some(v) => {
+                            assert_eq!(v, expect, "reordered or lost");
+                            expect += 1;
+                        }
+                        None => {
+                            if ring.is_closed() && ring.try_pop().is_none() {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+                assert_eq!(expect, N, "missing items");
+            });
+        });
+    }
+
+    /// Windows routed through the exchange arrive exactly once, in
+    /// producer order, with the cold tail left local.
+    #[test]
+    fn outbox_exchange_roundtrip() {
+        let router = RowRouter::new(ShardMap::contiguous(100, 2), 100);
+        let exch = Exchange::new(2, ROUTE_BLOCKS, 4, 8, 6);
+        assert_eq!(exch.max_inflight(), ROUTE_BLOCKS * 4);
+        let mut local = SuperbatchArena::new(8, 6);
+        let mut adopted = SuperbatchArena::new(8, 6);
+        let mut outbox = Outbox::new(&exch, &router, 0);
+        // Rows 0..50 home on node 0 (worker 0 = me → local), rows
+        // 50..100 on node 1 (worker 1 → mailbox).
+        let outputs_of = |t: u32| {
+            let mut o = vec![t];
+            o.extend_from_slice(&[1, 2, 3, 4, 5]);
+            o
+        };
+        let mut sent_remote = Vec::new();
+        for t in [10u32, 60, 61, 7, 62, 63, 64, 99] {
+            let mut sink = RouteSink::new(&mut local, &mut outbox);
+            let arena = sink.arena_for(t);
+            arena.push_window(&[t], &outputs_of(t));
+            if t >= 50 {
+                sent_remote.push(t);
+            }
+        }
+        outbox.flush();
+        exch.close_producer(0);
+        assert_eq!(outbox.local_windows, 2);
+        assert_eq!(outbox.routed_windows as usize, sent_remote.len());
+        assert_eq!(outbox.fallback_windows, 0);
+        assert_eq!(local.len(), 2);
+        let n = exch.drain_into(1, &mut adopted);
+        assert_eq!(n, sent_remote.len());
+        assert_eq!(adopted.len(), sent_remote.len());
+        for (w, &t) in sent_remote.iter().enumerate() {
+            assert_eq!(adopted.outputs_of(w)[0], t, "window {w}");
+            assert_eq!(adopted.inputs_of(w), &[t][..], "window {w}");
+        }
+        assert!(exch.producers_done(1));
+        // Nothing flowed toward worker 0.
+        assert_eq!(exch.drain_into(0, &mut local), 0);
+    }
+
+    /// When the destination's rings are saturated (consumer never
+    /// drains), the producer falls back to local processing instead of
+    /// blocking — the backpressure valve.
+    #[test]
+    fn saturated_mailbox_falls_back_to_local() {
+        let router = RowRouter::new(ShardMap::contiguous(100, 2), 100);
+        let blocks = 1usize;
+        let block_windows = 2usize;
+        let exch = Exchange::new(2, blocks, block_windows, 8, 6);
+        let mut local = SuperbatchArena::new(8, 6);
+        let mut outbox = Outbox::new(&exch, &router, 0);
+        let outputs = [60u32, 1, 2, 3, 4, 5];
+        // Capacity toward worker 1: `blocks` blocks circulate per pair,
+        // so at most `blocks * block_windows` routed windows fit before
+        // the free ring runs dry; everything past that must fall back.
+        let routable = blocks * block_windows;
+        for _ in 0..routable + 3 {
+            let mut sink = RouteSink::new(&mut local, &mut outbox);
+            let arena = sink.arena_for(60);
+            arena.push_window(&[9], &outputs);
+        }
+        assert_eq!(outbox.routed_windows as usize, routable);
+        assert_eq!(outbox.fallback_windows, 3);
+        assert_eq!(local.len(), 3, "fallback windows must land locally");
+        // Consumer drains, recycling the block back to the free ring —
+        // routing capacity returns.
+        let mut adopted = SuperbatchArena::new(8, 6);
+        outbox.flush();
+        assert_eq!(exch.drain_into(1, &mut adopted), routable);
+        let before = outbox.routed_windows;
+        {
+            let mut sink = RouteSink::new(&mut local, &mut outbox);
+            sink.arena_for(60).push_window(&[9], &outputs);
+        }
+        assert_eq!(outbox.routed_windows, before + 1, "capacity not recycled");
+    }
+
+    /// A single-worker exchange (the dist replica case) classifies every
+    /// window back to its own arena — routing collapses to the local
+    /// path by construction.
+    #[test]
+    fn single_worker_routes_everything_local() {
+        let router = RowRouter::new(ShardMap::contiguous(50, 1), 50);
+        let exch = Exchange::new(1, 1, 1, 4, 6);
+        assert_eq!(exch.max_inflight(), 0);
+        let mut local = SuperbatchArena::new(4, 6);
+        let mut outbox = Outbox::new(&exch, &router, 0);
+        for t in 0..50u32 {
+            let mut sink = RouteSink::new(&mut local, &mut outbox);
+            sink.arena_for(t).push_window(&[t], &[t, 1, 2, 3, 4, 5]);
+        }
+        assert_eq!(local.len(), 50);
+        assert_eq!(outbox.local_windows, 50);
+        assert_eq!(outbox.routed_windows, 0);
+        outbox.flush();
+        assert!(exch.producers_done(0));
+    }
+}

@@ -21,6 +21,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use super::lr::LrState;
+use super::route::{Exchange, Outbox, RouteSink, RowRouter, ROUTE_BLOCKS};
 use super::sgd_bidmach::BidmachBackend;
 use super::sgd_gemm::{GemmBackend, UpdateRule};
 use super::sgd_pjrt::PjrtBackend;
@@ -34,7 +35,7 @@ use crate::corpus::subsample::Subsampler;
 use crate::corpus::vocab::Vocab;
 use crate::linalg::simd;
 use crate::metrics::{Counters, Snapshot};
-use crate::model::{ModelRef, NumaModel, SharedModel};
+use crate::model::{set_access_node, ModelRef, NumaModel, ShardMap, SharedModel};
 use crate::runtime::topology::{self, Topology};
 use crate::runtime::{Manifest, Runtime, StepExecutable};
 use crate::sampling::batch::{BatchBuilder, SuperbatchArena};
@@ -126,6 +127,12 @@ pub fn train_with_factory<'f>(
     // never changes which sentences a worker sees.
     let source = Corpus::open(corpus, vocab, &cfg.corpus_cache)?;
     let shards = shards_for_len(source.shard_len(), cfg.threads);
+    // `--route {off,owner,head=<K>}`: Off keeps every worker on its own
+    // window stream (bit-for-bit the pre-routing path); otherwise the
+    // routed head cutoff resolves HERE, where the vocabulary's Zipf
+    // counts are in reach (`owner` = smallest id prefix covering 90% of
+    // corpus mass).
+    let route_head = cfg.route.head_k(vocab);
     let ctx = WorkerCtx {
         cfg,
         source: &source,
@@ -135,6 +142,7 @@ pub fn train_with_factory<'f>(
         subsampler: &subsampler,
         sampler,
         factory,
+        route_head,
     };
 
     // `--numa off`: the flat model, unpinned workers — bit-for-bit the
@@ -198,13 +206,30 @@ struct WorkerCtx<'a, 'f> {
     subsampler: &'a Subsampler,
     sampler: &'f UnigramSampler,
     factory: &'a (dyn Fn(usize) -> anyhow::Result<Box<dyn Backend + 'f>> + Sync),
+    /// Routed-head cutoff resolved from `cfg.route` (`None` = routing
+    /// off — take the unrouted worker loop, bit-for-bit).
+    route_head: Option<usize>,
 }
 
 /// Spawn one worker per corpus shard against `model`.  Under `topo`,
 /// worker `i` pins itself to node `i % nodes` BEFORE allocating its
 /// backend scratch, superbatch arena, and sentence buffer, so those hot
-/// per-worker buffers are first-touched node-locally too.
+/// per-worker buffers are first-touched node-locally too.  Under
+/// `--route` the workers additionally exchange generated windows by
+/// output-row ownership ([`run_workers_routed`]); `--route off` takes
+/// the unrouted loop, bit-for-bit the pre-routing path.
 fn run_workers(
+    ctx: &WorkerCtx<'_, '_>,
+    model: ModelRef<'_>,
+    topo: Option<&Topology>,
+) -> anyhow::Result<()> {
+    match ctx.route_head {
+        None => run_workers_unrouted(ctx, model, topo),
+        Some(head_k) => run_workers_routed(ctx, model, topo, head_k),
+    }
+}
+
+fn run_workers_unrouted(
     ctx: &WorkerCtx<'_, '_>,
     model: ModelRef<'_>,
     topo: Option<&Topology>,
@@ -216,6 +241,9 @@ fn run_workers(
             let handle = scope.spawn(move || -> anyhow::Result<()> {
                 if let Some(t) = topo {
                     t.pin_to_node(shard.index % t.nodes());
+                    // Debug-only remote-row share counters (no-op in
+                    // release — the unrouted path stays bit-for-bit).
+                    set_access_node(Some(shard.index % t.nodes()));
                 }
                 let mut backend = (ctx.factory)(shard.index)?;
                 let mut rng = Xoshiro256ss::new(
@@ -267,6 +295,159 @@ fn run_workers(
                 } else if raw_words > 0 {
                     ctx.lr_state.advance(raw_words);
                     ctx.counters.add_words(raw_words);
+                }
+                Ok(())
+            });
+            handles.push(handle);
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    })
+}
+
+/// The ownership-routed worker loop (`--route {owner,head=<K>}`).
+///
+/// Same shape as the unrouted loop, plus the exchange: windows are
+/// classified at generation time (the [`RouteSink`] steers routed-head
+/// targets into per-destination mailbox blocks, everything else into the
+/// worker's own arena), each worker adopts incoming blocks once per
+/// sentence, pending partial blocks are flushed before every local
+/// superbatch, and after its shard a worker keeps draining peers until
+/// every producer has closed.  Producers never block (saturated
+/// destinations fall back to local processing), so the tail loop always
+/// terminates.  Word accounting and lr decay stay with the GENERATING
+/// worker — routing moves windows, never words, so totals are unchanged
+/// (`tests/routing_parity.rs`).
+fn run_workers_routed(
+    ctx: &WorkerCtx<'_, '_>,
+    model: ModelRef<'_>,
+    topo: Option<&Topology>,
+    head_k: usize,
+) -> anyhow::Result<()> {
+    let cfg = ctx.cfg;
+    let workers = ctx.shards.len();
+    let nodes = topo.map_or(1, |t| t.nodes());
+    // The SAME contiguous partition `NumaModel` places rows with, so a
+    // routed window's home node is literally where its target row's
+    // pages live under `--numa` (one trivial node otherwise).
+    let router = RowRouter::new(
+        ShardMap::contiguous(model.vocab(), nodes),
+        head_k,
+    );
+    // Exchange sizing: mailbox blocks are lazily seeded (idle pairs
+    // cost two empty ring headers), but every worker's arena still
+    // reserves route slack for `max_inflight()` windows — so cap the
+    // per-consumer in-flight bound, or many-core runs would reserve
+    // O(workers) slack in EVERY worker (O(workers²) total).  Below ~33
+    // workers the cap leaves the 64-window blocks untouched.
+    const INFLIGHT_CAP_WINDOWS: usize = 4096;
+    let mut block_windows = cfg.superbatch.clamp(1, 64);
+    if workers > 1 {
+        block_windows = block_windows
+            .min((INFLIGHT_CAP_WINDOWS / (ROUTE_BLOCKS * (workers - 1))).max(1));
+    }
+    let exch = Exchange::new(
+        workers,
+        ROUTE_BLOCKS,
+        block_windows,
+        cfg.batch,
+        cfg.samples(),
+    );
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        let mut handles = Vec::new();
+        for shard in ctx.shards {
+            let (router, exch) = (&router, &exch);
+            let handle = scope.spawn(move || -> anyhow::Result<()> {
+                let me = shard.index;
+                // Armed before the first fallible op: peers' tail loops
+                // wait for OUR close, so an early `?` error or panic
+                // must still close our rings or the scope hangs.
+                let _close_on_exit = exch.producer_guard(me);
+                if let Some(t) = topo {
+                    t.pin_to_node(me % t.nodes());
+                    set_access_node(Some(me % t.nodes()));
+                }
+                let mut backend = (ctx.factory)(me)?;
+                let mut rng = Xoshiro256ss::new(
+                    cfg.seed ^ (me as u64 * 0xA5A5_1234 + 17),
+                );
+                let builder = BatchBuilder::new(
+                    ctx.sampler,
+                    cfg.window,
+                    cfg.batch,
+                    cfg.negative,
+                );
+                // Route slack = sentence slack + everything peers can
+                // have in flight toward us (bounded block rings), so the
+                // routed arena never reallocates after construction
+                // either (tests/alloc_steadystate.rs, routed leg).
+                let mut arena = SuperbatchArena::with_route_slack(
+                    cfg.superbatch,
+                    cfg.batch,
+                    cfg.samples(),
+                    exch.max_inflight(),
+                );
+                let mut outbox = Outbox::new(exch, router, me);
+                let mut sent: Vec<u32> = Vec::with_capacity(MAX_SENTENCE_LEN);
+                let mut raw_words = 0u64;
+                for _epoch in 0..cfg.epochs {
+                    let mut reader =
+                        ctx.source.open_range(shard.start, shard.end)?;
+                    while reader.next_sentence_into(&mut sent)? {
+                        raw_words += sent.len() as u64;
+                        ctx.subsampler.filter(&mut sent, &mut rng);
+                        {
+                            let mut sink =
+                                RouteSink::new(&mut arena, &mut outbox);
+                            builder.fill_arena_routed(
+                                &sent, &mut rng, &mut sink,
+                            );
+                        }
+                        // The exchange step: adopt whatever peers routed
+                        // here (cheap when empty — one relaxed load per
+                        // peer), then process a full local superbatch.
+                        exch.drain_into(me, &mut arena);
+                        if arena.len() >= cfg.superbatch {
+                            outbox.flush();
+                            let lr = ctx.lr_state.advance(raw_words);
+                            ctx.counters.add_words(raw_words);
+                            raw_words = 0;
+                            backend.process_arena(model, &arena, lr)?;
+                            ctx.counters.add_windows(arena.len() as u64);
+                            ctx.counters.add_calls(1);
+                            arena.clear();
+                        }
+                    }
+                }
+                // Generation done: hand off pending partial blocks,
+                // close our outgoing rings, account the tail words.
+                outbox.flush();
+                exch.close_producer(me);
+                if raw_words > 0 {
+                    ctx.lr_state.advance(raw_words);
+                    ctx.counters.add_words(raw_words);
+                }
+                // Consume peers' routed windows until every producer has
+                // closed.  Reading `producers_done` BEFORE the drain
+                // makes the final iteration complete: close is
+                // Release-stored after a producer's last push, so a
+                // drain that follows an observed close sees everything.
+                loop {
+                    let done = exch.producers_done(me);
+                    exch.drain_into(me, &mut arena);
+                    if !arena.is_empty() {
+                        let lr = ctx.lr_state.current();
+                        backend.process_arena(model, &arena, lr)?;
+                        ctx.counters.add_windows(arena.len() as u64);
+                        ctx.counters.add_calls(1);
+                        arena.clear();
+                    }
+                    if done {
+                        break;
+                    }
+                    std::thread::yield_now();
                 }
                 Ok(())
             });
@@ -401,6 +582,37 @@ mod tests {
         assert_eq!(before, after, "valid cache must not be rebuilt");
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&cache).ok();
+    }
+
+    /// The ownership-routed worker loop conserves word/window accounting
+    /// (routing moves windows, never words) and still trains; at one
+    /// thread the routed knob reproduces the unrouted model bitwise (the
+    /// full cross-feature matrix lives in tests/routing_parity.rs).
+    #[test]
+    fn routed_workers_account_and_train() {
+        let (path, vocab) = tiny_corpus();
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        let (flat, base) = run(&cfg, &path, &vocab);
+        cfg.route = crate::train::route::RouteMode::Owner;
+        let (routed1, out1) = run(&cfg, &path, &vocab);
+        assert_eq!(out1.snapshot.words, base.snapshot.words);
+        assert_eq!(out1.snapshot.windows, base.snapshot.windows);
+        assert_eq!(
+            flat.m_in().data(),
+            routed1.m_in().data(),
+            "1-thread routed must be bitwise the unrouted path"
+        );
+        cfg.threads = 3;
+        let (routed3, out3) = run(&cfg, &path, &vocab);
+        assert_eq!(out3.snapshot.words, vocab.total_words());
+        assert_eq!(
+            out3.snapshot.windows, base.snapshot.windows,
+            "routing must conserve the total window count"
+        );
+        let init = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+        assert_ne!(routed3.m_in().data(), init.m_in().data());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -24,9 +24,10 @@ use pw2v::config::{KernelMode, SigmoidMode};
 use pw2v::corpus::encoded::EncodedCorpus;
 use pw2v::corpus::vocab::Vocab;
 use pw2v::corpus::MAX_SENTENCE_LEN;
-use pw2v::model::SharedModel;
+use pw2v::model::{ShardMap, SharedModel};
 use pw2v::sampling::batch::{BatchBuilder, SuperbatchArena};
 use pw2v::sampling::unigram::UnigramSampler;
+use pw2v::train::route::{Exchange, Outbox, RouteSink, RowRouter};
 use pw2v::train::sgd_gemm::GemmBackend;
 use pw2v::train::Backend;
 use pw2v::util::rng::Xoshiro256ss;
@@ -267,4 +268,102 @@ fn steady_state_training_loop_allocates_nothing() {
     );
     std::fs::remove_file(&text_path).ok();
     std::fs::remove_file(&cache_path).ok();
+
+    // ------------------------------------------------------------------
+    // Routed-exchange leg (`--route`): one thread drives BOTH sides of a
+    // two-worker exchange — producer 0 classifies windows through the
+    // RouteSink (head = whole vocab, two-node map ⇒ high-id targets go
+    // through the mailbox to "worker" 1), consumer 1 adopts the blocks
+    // into its route-slack arena.  After a warmup that circulates every
+    // block and reaches the backend high-water, the routed pipeline must
+    // allocate NOTHING: blocks recycle through the free rings, adoption
+    // is a capacity-held `append_from`, and both arenas were sized with
+    // `with_route_slack`.
+    // ------------------------------------------------------------------
+    let router = RowRouter::new(
+        ShardMap::contiguous(vocab_size, 2),
+        vocab_size, // route the whole id space: node-1 rows go remote
+    );
+    let exch = Exchange::new(2, 2, 16, batch, 1 + negative);
+    let mut backend0 = GemmBackend::new(dim, batch, 1 + negative)
+        .with_sigmoid(SigmoidMode::Exact);
+    let mut backend1 = GemmBackend::new(dim, batch, 1 + negative)
+        .with_sigmoid(SigmoidMode::Exact);
+    let mut arena0 = SuperbatchArena::with_route_slack(
+        superbatch,
+        batch,
+        1 + negative,
+        exch.max_inflight(),
+    );
+    let mut arena1 = SuperbatchArena::with_route_slack(
+        superbatch,
+        batch,
+        1 + negative,
+        exch.max_inflight(),
+    );
+    let mut outbox = Outbox::new(&exch, &router, 0);
+    let mut routed_round = |a0: &mut SuperbatchArena,
+                            a1: &mut SuperbatchArena,
+                            b0: &mut GemmBackend,
+                            b1: &mut GemmBackend,
+                            ob: &mut Outbox<'_>| {
+        let mut rng = Xoshiro256ss::new(77);
+        for sent in &sentences {
+            {
+                let mut sink = RouteSink::new(a0, ob);
+                builder.fill_arena_routed(sent, &mut rng, &mut sink);
+            }
+            if a0.len() >= superbatch {
+                ob.flush();
+                b0.process_arena(model.store(), a0, 0.025).unwrap();
+                a0.clear();
+            }
+            exch.drain_into(1, a1);
+            if a1.len() >= superbatch {
+                b1.process_arena(model.store(), a1, 0.025).unwrap();
+                a1.clear();
+            }
+        }
+        ob.flush();
+        exch.drain_into(1, a1);
+        if !a0.is_empty() {
+            b0.process_arena(model.store(), a0, 0.025).unwrap();
+            a0.clear();
+        }
+        if !a1.is_empty() {
+            b1.process_arena(model.store(), a1, 0.025).unwrap();
+            a1.clear();
+        }
+    };
+    for _ in 0..3 {
+        routed_round(
+            &mut arena0,
+            &mut arena1,
+            &mut backend0,
+            &mut backend1,
+            &mut outbox,
+        );
+    }
+    assert!(
+        outbox.routed_windows > 0,
+        "routed leg exercised no mailbox traffic"
+    );
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..20 {
+        routed_round(
+            &mut arena0,
+            &mut arena1,
+            &mut backend0,
+            &mut backend1,
+            &mut outbox,
+        );
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state ROUTED loop allocated {} times over 20 rounds \
+         (mailbox blocks must recycle allocation-free)",
+        after - before
+    );
 }

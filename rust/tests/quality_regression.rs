@@ -1,0 +1,191 @@
+//! Quality-regression guard: seeded end-to-end training on the
+//! synthetic corpus must keep embedding QUALITY — Spearman ρ against the
+//! planted latent similarities and 3CosAdd accuracy on the planted
+//! analogies — above fixed floors for every backend × kernel × route
+//! combination.
+//!
+//! The parity suites (`backend_parity`, `numa_parity`, `routing_parity`)
+//! pin that optimisations don't change WHAT is computed; this is the
+//! first tier-1 guard that the growing feature matrix (kernel × simd ×
+//! corpus-cache × numa × routing) also keeps LEARNING — a knob
+//! combination that silently dropped windows, mis-scattered gradients,
+//! or broke the lr schedule would still pass bitwise-off parity legs but
+//! lands here.
+//!
+//! Floors are deliberately conservative (chance ρ ≈ 0, chance analogy
+//! accuracy ≈ 1/vocab = 0.05%): they catch "stopped learning", not
+//! run-to-run Hogwild noise.  The CI matrix reruns this file under
+//! pinned-scalar dispatch, a synthetic two-node topology, and the
+//! buffered (non-mmap) cache reader.
+
+use pw2v::config::{Backend, CorpusCacheMode, KernelMode, TrainConfig};
+use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
+use pw2v::corpus::vocab::Vocab;
+use pw2v::eval;
+use pw2v::model::SharedModel;
+use pw2v::runtime::topology::NumaMode;
+use pw2v::train;
+use pw2v::train::route::RouteMode;
+
+/// Spearman ρ×100 floor per combination (typical healthy runs on this
+/// fixture score far higher; chance is ~0).
+const RHO_FLOOR: f64 = 15.0;
+/// Analogy accuracy (%) floor — ≥10× chance (1/vocab = 0.05%); asserted
+/// on the GEMM combinations (the paper's scheme).
+const ANALOGY_FLOOR: f64 = 0.5;
+
+struct Fixture {
+    corpus: std::path::PathBuf,
+    vocab: Vocab,
+    latent: LatentModel,
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.corpus).ok();
+    }
+}
+
+fn fixture() -> Fixture {
+    let scfg = SyntheticConfig {
+        vocab: 2_000,
+        tokens: 300_000,
+        clusters: 20,
+        beta: 5.0,
+        seed: 29,
+        ..SyntheticConfig::default()
+    };
+    let latent = LatentModel::new(scfg);
+    let corpus = std::env::temp_dir().join(format!(
+        "pw2v_quality_{}.txt",
+        std::process::id()
+    ));
+    latent.write_corpus(&corpus).unwrap();
+    let vocab = Vocab::build_from_file(&corpus, 1).unwrap();
+    Fixture {
+        corpus,
+        vocab,
+        latent,
+    }
+}
+
+/// One test drives the whole matrix so the fixture is generated once and
+/// the heavy trainings never oversubscribe each other.
+#[test]
+fn quality_floors_across_backend_kernel_route_matrix() {
+    let f = fixture();
+    let sim_set = eval::gen_similarity_set(&f.latent, 200, 3);
+    let ana_set = eval::gen_analogy_set(&f.latent);
+    assert!(ana_set.len() > 50, "planted analogy set too small");
+
+    // (backend, kernel, route, numa, corpus-cache) — every backend with
+    // routing off AND on; both GEMM kernel organisations; the routed
+    // legs on the two-node sharded store; one leg from the encoded
+    // cache so the full feature stack (kernel × cache × numa × route)
+    // trains together at least once.
+    let combos: &[(Backend, KernelMode, RouteMode, NumaMode, CorpusCacheMode)] = &[
+        (
+            Backend::Scalar,
+            KernelMode::Auto,
+            RouteMode::Off,
+            NumaMode::Off,
+            CorpusCacheMode::Off,
+        ),
+        (
+            Backend::Scalar,
+            KernelMode::Auto,
+            RouteMode::Owner,
+            NumaMode::Nodes(2),
+            CorpusCacheMode::Off,
+        ),
+        (
+            Backend::Bidmach,
+            KernelMode::Auto,
+            RouteMode::Off,
+            NumaMode::Off,
+            CorpusCacheMode::Off,
+        ),
+        (
+            Backend::Bidmach,
+            KernelMode::Auto,
+            RouteMode::Owner,
+            NumaMode::Nodes(2),
+            CorpusCacheMode::Off,
+        ),
+        (
+            Backend::Gemm,
+            KernelMode::Fused,
+            RouteMode::Off,
+            NumaMode::Off,
+            CorpusCacheMode::Off,
+        ),
+        (
+            Backend::Gemm,
+            KernelMode::Fused,
+            RouteMode::Owner,
+            NumaMode::Nodes(2),
+            CorpusCacheMode::Auto,
+        ),
+        (
+            Backend::Gemm,
+            KernelMode::Gemm3,
+            RouteMode::Off,
+            NumaMode::Off,
+            CorpusCacheMode::Off,
+        ),
+        (
+            Backend::Gemm,
+            KernelMode::Gemm3,
+            RouteMode::Head(96),
+            NumaMode::Nodes(2),
+            CorpusCacheMode::Off,
+        ),
+    ];
+
+    for (backend, kernel, route, numa, cache) in combos.iter().cloned() {
+        let tag = format!("{backend}/{kernel}/{route}/{numa}/{cache}");
+        let mut cfg = TrainConfig::default();
+        cfg.backend = backend;
+        cfg.kernel = kernel;
+        cfg.route = route;
+        cfg.numa = numa;
+        cfg.corpus_cache = cache;
+        cfg.dim = 48;
+        cfg.epochs = 2;
+        cfg.threads = 2;
+        cfg.sample = 1e-3;
+        cfg.lr = 0.05;
+        let model = SharedModel::init(f.vocab.len(), cfg.dim, cfg.seed);
+        let out = train::train(&cfg, &f.corpus, &f.vocab, &model).unwrap();
+        assert_eq!(
+            out.snapshot.words,
+            cfg.epochs as u64 * f.vocab.total_words(),
+            "{tag}: word accounting"
+        );
+        let sim = eval::eval_similarity(&sim_set, &f.vocab, model.m_in());
+        assert!(
+            sim.pairs_covered > 150,
+            "{tag}: similarity coverage {}/{}",
+            sim.pairs_covered,
+            sim.pairs_total
+        );
+        assert!(
+            sim.rho100 > RHO_FLOOR,
+            "{tag}: rho100 {:.1} below quality floor {RHO_FLOOR}",
+            sim.rho100
+        );
+        if backend == Backend::Gemm {
+            let ana = eval::eval_analogy(&ana_set, &f.vocab, model.m_in());
+            assert!(ana.covered > 0, "{tag}: no analogy coverage");
+            assert!(
+                ana.accuracy100() > ANALOGY_FLOOR,
+                "{tag}: analogy accuracy {:.2}% below floor {ANALOGY_FLOOR}%",
+                ana.accuracy100()
+            );
+        }
+    }
+
+    let cache =
+        pw2v::corpus::encoded::EncodedCorpus::cache_path_for(&f.corpus);
+    std::fs::remove_file(&cache).ok();
+}
