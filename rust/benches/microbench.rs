@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
     sgns_window_ablation(&mut report)?;
     numa_row_update_bench(&mut report)?;
     routing_bench(&mut report)?;
+    dist_ring_bench(&mut report)?;
     corpus_cache_bench(&mut report)?;
     gemm_bench()?;
     vecops_bench()?;
@@ -693,6 +694,111 @@ fn routing_bench(report: &mut Option<ThroughputReport>) -> anyhow::Result<()> {
                 ("remote_share_owner", Json::num(share_owner)),
                 ("routed_windows_per_sec", Json::num(routed_wps)),
                 ("routed_over_unrouted", Json::num(ratio)),
+            ]),
+        );
+    }
+    Ok(())
+}
+
+/// The TCP allreduce collective on a 3-rank loopback ring: per-round
+/// latency and slice throughput for a realistic sub-model due set, plus
+/// the wire-byte CONTRACT — measured `slice_bytes_sent` must equal the
+/// frame-level predictor `gather_scatter_wire_bytes` exactly (the trend
+/// gate pins `measured_over_predicted_bytes` to 1.0; MB/s itself is
+/// machine-dependent and warn-only).
+fn dist_ring_bench(report: &mut Option<ThroughputReport>) -> anyhow::Result<()> {
+    use pw2v::dist::net::{gather_scatter_wire_bytes, NetConfig, NetStats, Ring};
+    use pw2v::dist::RingSpec;
+    use pw2v::model::SharedModel;
+    use std::net::TcpListener;
+    use std::time::Instant;
+
+    let n = 3usize;
+    let (vocab, dim) = (50_000usize, 300usize);
+    // ~19.7 MB payload per round: the hot head of a 50k vocab.
+    let due = vec![0u32..8192u32];
+    let rounds = 5u32;
+
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0"))
+        .collect::<std::io::Result<_>>()?;
+    let addrs: Vec<String> = listeners
+        .iter()
+        .map(|l| Ok(format!("127.0.0.1:{}", l.local_addr()?.port())))
+        .collect::<std::io::Result<_>>()?;
+    let net = NetConfig {
+        connect_timeout_ms: 10_000,
+        io_timeout_ms: 30_000,
+        heartbeat_ms: 200,
+    };
+
+    let outs: Vec<(f64, NetStats)> = std::thread::scope(|s| {
+        let handles: Vec<_> = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(rank, l)| {
+                let addrs = addrs.clone();
+                let due = due.clone();
+                s.spawn(move || -> anyhow::Result<(f64, NetStats)> {
+                    let spec = RingSpec { rank, addrs };
+                    let model = SharedModel::init(vocab, dim, 11);
+                    let mut ring = Ring::establish_on(l, &spec, &net, 0)?;
+                    let t0 = Instant::now();
+                    for r in 1..=rounds {
+                        ring.allreduce_rows(&model, &due, r)?;
+                    }
+                    Ok((t0.elapsed().as_secs_f64(), ring.stats()))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("bench rank panicked"))
+            .collect::<anyhow::Result<Vec<_>>>()
+    })?;
+
+    let (secs, stats) = outs[0];
+    let predicted = rounds as u64 * gather_scatter_wire_bytes(&due, n, 0, dim);
+    let measured_over_predicted = stats.slice_bytes_sent as f64 / predicted as f64;
+    let round_ms = secs / rounds as f64 * 1e3;
+    let mb_per_sec = stats.slice_bytes_sent as f64 / 1e6 / secs;
+
+    let mut table = BenchTable::new("micro_dist_ring", &["metric", "value"]);
+    table.row(vec!["ranks".into(), n.to_string()]);
+    table.row(vec![
+        "due rows x dim".into(),
+        format!("{} x {dim}", due.iter().map(|r| r.len()).sum::<usize>()),
+    ]);
+    table.row(vec!["round ms (rank 0)".into(), format!("{round_ms:.1}")]);
+    table.row(vec!["slice MB/s (rank 0)".into(), format!("{mb_per_sec:.0}")]);
+    table.row(vec![
+        "measured/predicted bytes".into(),
+        format!("{measured_over_predicted:.6}"),
+    ]);
+    table.finish()?;
+    println!(
+        "dist ring: {n} loopback ranks, {round_ms:.1} ms/round at {} slice \
+         MB/s; wire bytes measured/predicted = {measured_over_predicted:.6} \
+         (contract: exactly 1)",
+        mb_per_sec as u64
+    );
+    if let Some(r) = report.as_mut() {
+        r.set(
+            "micro_dist_ring",
+            Json::obj([
+                ("nranks", Json::num(n as f64)),
+                ("dim", Json::num(dim as f64)),
+                (
+                    "due_rows",
+                    Json::num(due.iter().map(|r| r.len()).sum::<usize>() as f64),
+                ),
+                ("rounds", Json::num(rounds as f64)),
+                ("round_ms", Json::num(round_ms)),
+                ("slice_mb_per_sec", Json::num(mb_per_sec)),
+                (
+                    "measured_over_predicted_bytes",
+                    Json::num(measured_over_predicted),
+                ),
             ]),
         );
     }

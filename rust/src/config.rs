@@ -329,6 +329,38 @@ impl TrainConfig {
         }
     }
 
+    /// FNV-1a digest of every field that shapes the training COMPUTATION
+    /// (dims, windows, schedules, seeds, kernel organisation).  Stamped
+    /// into checkpoint headers so `--resume` under a changed config is
+    /// rejected with a diagnostic instead of silently continuing a
+    /// different run.  Knobs that are parity-guaranteed no-ops on the
+    /// numbers (`--corpus-cache`, `--numa`, `--route`) are deliberately
+    /// excluded: resuming across them is sound.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv1a::new();
+        for v in [
+            self.dim as u64,
+            self.window as u64,
+            self.negative as u64,
+            self.sample.to_bits() as u64,
+            self.min_count,
+            self.lr.to_bits() as u64,
+            self.lr_min_frac.to_bits() as u64,
+            self.epochs as u64,
+            self.batch as u64,
+            self.superbatch as u64,
+            self.seed,
+            self.unigram_power.to_bits() as u64,
+            self.backend as u64,
+            self.lr_schedule as u64,
+            self.kernel as u64,
+            self.sigmoid_mode as u64,
+        ] {
+            h.update(&v.to_le_bytes());
+        }
+        h.digest()
+    }
+
     /// Apply `--key value` CLI overrides (shared across all subcommands).
     pub fn apply_args(&mut self, a: &Args) -> anyhow::Result<()> {
         self.dim = a.get("dim", self.dim)?;
@@ -455,6 +487,29 @@ mod tests {
         assert_eq!(c.window, 5);
         assert!((c.sample - 1e-4).abs() < 1e-9);
         assert_eq!(c.samples(), 6);
+    }
+
+    #[test]
+    fn fingerprint_tracks_compute_shape_only() {
+        let a = TrainConfig::default();
+        let mut b = TrainConfig::default();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Compute-shaping fields move the digest...
+        b.dim = 128;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        b = TrainConfig::default();
+        b.seed = 2;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        b = TrainConfig::default();
+        b.kernel = KernelMode::Gemm3;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // ...parity-guaranteed knobs do not (resume across them is fine).
+        b = TrainConfig::default();
+        b.corpus_cache = CorpusCacheMode::Auto;
+        b.numa = NumaMode::Auto;
+        b.route = RouteMode::Owner;
+        b.threads = 7;
+        assert_eq!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Poisonable sync barrier for the thread-mode replica driver.
+//!
+//! `std::sync::Barrier` cannot be poisoned: a replica that panics or
+//! errors between rounds leaves its peers blocked in `wait()` forever,
+//! which in tier-1 means a hung test run instead of a failure.
+//! [`AbortBarrier`] is the same generation-counted barrier, plus a
+//! poison state — once any participant poisons it, every current and
+//! future `wait()` returns an error naming the culprit, so the whole
+//! replica group fails fast.
+//!
+//! Poisoning is wired through [`BarrierGuard`] (the PR-5 `ProducerGuard`
+//! idiom): each node loop arms a guard on entry and disarms it only on
+//! clean exit, so both `?`-errors and panics (unwinding drops the guard)
+//! release waiting peers.
+
+use std::sync::{Condvar, Mutex};
+
+/// Error marker for "a peer poisoned the barrier", as opposed to a
+/// node's own root-cause failure.  The driver prefers reporting a
+/// non-`Poisoned` error when one exists, since the poison is only the
+/// echo of the real failure.
+#[derive(Debug)]
+pub struct Poisoned(pub String);
+
+impl std::fmt::Display for Poisoned {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sync barrier poisoned: {}", self.0)
+    }
+}
+
+impl std::error::Error for Poisoned {}
+
+struct State {
+    /// Participants still to arrive in the current generation.
+    waiting: usize,
+    /// Incremented each time a generation completes (wraps are fine).
+    generation: u64,
+    /// Who poisoned the barrier and why, if anyone.
+    poison: Option<String>,
+}
+
+/// A reusable N-party barrier that can be poisoned by a failing party.
+pub struct AbortBarrier {
+    n: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl AbortBarrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "barrier needs at least one participant");
+        Self {
+            n,
+            state: Mutex::new(State {
+                waiting: n,
+                generation: 0,
+                poison: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until all `n` participants arrive, or until the barrier is
+    /// poisoned — whichever happens first.  After poisoning, every call
+    /// (including from threads not yet waiting) returns `Err` wrapping
+    /// [`Poisoned`].
+    pub fn wait(&self) -> anyhow::Result<()> {
+        // The Mutex can only be std-poisoned if a thread panicked while
+        // holding it; our state stays coherent (all mutations are
+        // single assignments), so recover the guard and continue.
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(why) = &st.poison {
+            anyhow::bail!(Poisoned(why.clone()));
+        }
+        st.waiting -= 1;
+        if st.waiting == 0 {
+            st.waiting = self.n;
+            st.generation = st.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let gen = st.generation;
+        while st.generation == gen && st.poison.is_none() {
+            st = self
+                .cv
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        match &st.poison {
+            Some(why) if st.generation == gen => anyhow::bail!(Poisoned(why.clone())),
+            _ => Ok(()),
+        }
+    }
+
+    /// Poison the barrier: wake every waiter with an error and make all
+    /// future waits fail.  Idempotent — the first reason wins.
+    pub fn poison(&self, reason: &str) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.poison.is_none() {
+            st.poison = Some(reason.to_string());
+        }
+        self.cv.notify_all();
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.state
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .poison
+            .is_some()
+    }
+
+    /// Arm an RAII guard that poisons this barrier on drop unless
+    /// [`BarrierGuard::disarm`]ed first.
+    pub fn guard<'a>(&'a self, name: &str) -> BarrierGuard<'a> {
+        BarrierGuard {
+            barrier: self,
+            name: name.to_string(),
+            armed: true,
+        }
+    }
+}
+
+/// Poisons the barrier on drop unless disarmed (clean exit).  Covers
+/// both `?`-error returns and panics in the node loop.
+pub struct BarrierGuard<'a> {
+    barrier: &'a AbortBarrier,
+    name: String,
+    armed: bool,
+}
+
+impl BarrierGuard<'_> {
+    /// Mark a clean exit: dropping the guard no longer poisons.
+    pub fn disarm(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for BarrierGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.barrier
+                .poison(&format!("{} exited uncleanly", self.name));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn cycles_like_a_plain_barrier() {
+        let b = Arc::new(AbortBarrier::new(3));
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    b.wait().unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn poison_releases_waiters_and_future_waits() {
+        let b = Arc::new(AbortBarrier::new(2));
+        let waiter = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || b.wait())
+        };
+        // Give the waiter time to actually block, then poison instead
+        // of arriving.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        b.poison("node 1 failed: injected");
+        let err = waiter.join().unwrap().unwrap_err();
+        assert!(err.downcast_ref::<Poisoned>().is_some(), "{err:#}");
+        assert!(err.to_string().contains("injected"), "{err:#}");
+        // A latecomer fails immediately too.
+        assert!(b.wait().is_err());
+        assert!(b.is_poisoned());
+    }
+
+    #[test]
+    fn guard_poisons_on_panic_but_not_on_disarm() {
+        let b = Arc::new(AbortBarrier::new(2));
+        {
+            let g = b.guard("node 0");
+            g.disarm();
+        }
+        assert!(!b.is_poisoned());
+
+        let b2 = Arc::clone(&b);
+        let t = std::thread::spawn(move || {
+            let _g = b2.guard("node 1");
+            panic!("simulated replica failure");
+        });
+        assert!(t.join().is_err());
+        assert!(b.is_poisoned());
+        let err = b.wait().unwrap_err();
+        assert!(err.to_string().contains("node 1"), "{err:#}");
+    }
+
+    #[test]
+    fn first_poison_reason_wins() {
+        let b = AbortBarrier::new(1);
+        b.poison("first");
+        b.poison("second");
+        let err = b.wait().unwrap_err();
+        assert!(err.to_string().contains("first"), "{err:#}");
+    }
+}

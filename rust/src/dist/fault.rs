@@ -1,0 +1,121 @@
+//! Deterministic fault injection for the distributed runtime
+//! (`PW2V_FAULT`), so every failure path — dead peer, torn frame,
+//! wedged peer, panicking replica — is exercisable in CI instead of
+//! waiting for a real cluster to produce it.
+//!
+//! The spec is parsed once per process; in the TCP ring each process is
+//! launched with its own environment, so a test kills exactly the rank
+//! it intends to.  Frame counts are DATA frames only (hello, status,
+//! slices, abort) — heartbeats come from a timer thread and would make
+//! `kill-after=N` racy.
+//!
+//! Supported specs:
+//!
+//! * `kill-after=N` — exit(42) abruptly once N data frames were sent
+//!   (the "node died" scenario; peers must detect and abort);
+//! * `torn-frame=N` — write data frame N only partially (header + half
+//!   the payload), flush, then exit(43) (crash mid-write; the reader
+//!   must reject the torn frame, not consume garbage);
+//! * `stall-after=N` — after N data frames, hold the connection's write
+//!   lock and sleep forever.  The heartbeat thread shares that lock, so
+//!   heartbeats stop too: this is the "wedged, not dead" peer that only
+//!   deadline-based detection catches;
+//! * `panic-replica=I` — thread-mode: replica I panics at its first
+//!   sync round, exercising the barrier poison guard (peers must fail
+//!   fast, not block forever in the barrier).
+
+use std::str::FromStr;
+
+/// One injected fault (see module docs for the trigger semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// Exit abruptly after N data frames were sent.
+    KillAfterFrames(u64),
+    /// Truncate data frame N mid-payload, then exit.
+    TornFrame(u64),
+    /// After N data frames, stop sending anything (including
+    /// heartbeats) without exiting.
+    StallAfterFrames(u64),
+    /// Thread mode: replica I panics at its first sync round.
+    PanicReplica(usize),
+}
+
+impl FromStr for FaultSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        let (kind, val) = s
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("fault spec '{s}': expected kind=N"))?;
+        let n: u64 = val
+            .trim()
+            .parse()
+            .map_err(|e| anyhow::anyhow!("fault spec '{s}': bad count ({e})"))?;
+        match kind.trim() {
+            "kill-after" => Ok(FaultSpec::KillAfterFrames(n)),
+            "torn-frame" => Ok(FaultSpec::TornFrame(n)),
+            "stall-after" => Ok(FaultSpec::StallAfterFrames(n)),
+            "panic-replica" => Ok(FaultSpec::PanicReplica(n as usize)),
+            other => anyhow::bail!(
+                "unknown fault kind '{other}' \
+                 (kill-after|torn-frame|stall-after|panic-replica)"
+            ),
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Parse `PW2V_FAULT` from the environment (`Ok(None)` when unset).
+    pub fn from_env() -> anyhow::Result<Option<Self>> {
+        match std::env::var("PW2V_FAULT") {
+            Ok(s) if s.trim().is_empty() => Ok(None),
+            Ok(s) => Ok(Some(s.parse()?)),
+            Err(_) => Ok(None),
+        }
+    }
+
+    /// Should replica `idx` panic at its first sync round (thread mode)?
+    pub fn panics_replica(&self, idx: usize) -> bool {
+        matches!(self, FaultSpec::PanicReplica(i) if *i == idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind() {
+        assert_eq!(
+            "kill-after=5".parse::<FaultSpec>().unwrap(),
+            FaultSpec::KillAfterFrames(5)
+        );
+        assert_eq!(
+            "torn-frame=12".parse::<FaultSpec>().unwrap(),
+            FaultSpec::TornFrame(12)
+        );
+        assert_eq!(
+            "stall-after=0".parse::<FaultSpec>().unwrap(),
+            FaultSpec::StallAfterFrames(0)
+        );
+        assert_eq!(
+            "panic-replica=1".parse::<FaultSpec>().unwrap(),
+            FaultSpec::PanicReplica(1)
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!("kill-after".parse::<FaultSpec>().is_err());
+        assert!("kill-after=x".parse::<FaultSpec>().is_err());
+        assert!("explode=3".parse::<FaultSpec>().is_err());
+    }
+
+    #[test]
+    fn panic_targets_one_replica() {
+        let f = FaultSpec::PanicReplica(2);
+        assert!(f.panics_replica(2));
+        assert!(!f.panics_replica(0));
+        assert!(!FaultSpec::KillAfterFrames(1).panics_replica(0));
+    }
+}

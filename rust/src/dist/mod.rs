@@ -15,14 +15,32 @@
 //! accuracy holds as nodes are added (Table IV; ablated by
 //! `benches/table4_dist_accuracy.rs` with `scale_lr = false`).
 //!
+//! A second transport lifts the same allreduce onto a real TCP ring
+//! ([`net`], driver `train::train_tcp_ring`): N OS processes, one per
+//! rank, exchanging length-prefixed model-slice frames over loopback or
+//! a real network, with heartbeat-based failure detection, ABORT
+//! propagation, crash-consistent checkpoints and deterministic fault
+//! injection ([`fault`]).  Under `SyncPolicy::Full` the ring produces
+//! bitwise-identical embeddings to thread mode (pinned by
+//! `tests/dist_tcp.rs`).
+//!
 //! Module map: [`node`] — per-replica configuration; [`sync`] — sync
-//! policies and the row-averaging collective; [`train`] — the replica
-//! driver [`train_distributed`].
+//! policies and the row-averaging collective; [`barrier`] — poisonable
+//! in-process barrier (fail-fast on replica panic); [`net`] — TCP ring
+//! transport; [`fault`] — `PW2V_FAULT` injection; [`train`] — the
+//! replica drivers [`train_distributed`] and [`train_tcp_ring`].
 
+pub mod barrier;
+pub mod fault;
+pub mod net;
 pub mod node;
 pub mod sync;
 pub mod train;
 
+pub use fault::FaultSpec;
+pub use net::{NetConfig, NetStats, RingSpec};
 pub use node::DistConfig;
 pub use sync::SyncPolicy;
-pub use train::{train_distributed, DistOutcome, SyncStats};
+pub use train::{
+    train_distributed, train_tcp_ring, train_tcp_ring_on, CheckpointPolicy, DistOutcome, SyncStats,
+};

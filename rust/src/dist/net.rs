@@ -1,0 +1,1157 @@
+//! TCP ring transport for multi-process distributed training.
+//!
+//! std-only (raw sockets, no new crates — the PR-3/PR-4 discipline).
+//! N processes, one per rank, form a unidirectional ring: rank k writes
+//! to rank (k+1) % n and reads from rank (k-1+n) % n.  Everything on
+//! the wire is a length-prefixed FRAME:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  "PWRG"
+//!      4     2  version (little-endian u16, currently 1)
+//!      6     1  frame type (Hello|Status|Slice|AvgSlice|Heartbeat|Abort)
+//!      7     1  origin rank
+//!      8     4  sync round the frame belongs to (u32)
+//!     12     4  payload length in bytes (u32)
+//!     16     8  FNV-1a checksum of the payload (u64)
+//!     24     …  payload
+//! ```
+//!
+//! Robustness model:
+//!
+//! * **Ring formation** — every rank binds its listener FIRST, then
+//!   connects to its successor with bounded exponential backoff (the
+//!   connect succeeds as soon as the peer has bound, via the kernel
+//!   backlog), then accepts its predecessor.  A `Hello` exchange checks
+//!   ring wiring, rank count and the config fingerprint before any
+//!   training traffic.
+//! * **Failure detection** — a heartbeat thread sends a `Heartbeat`
+//!   frame to the successor every `heartbeat_ms`; reads carry a
+//!   deadline of `io_timeout_ms` that any complete incoming frame
+//!   resets.  A dead peer (closed socket) fails the read instantly; a
+//!   wedged peer (alive but silent — see `PW2V_FAULT stall-after`)
+//!   trips the deadline.
+//! * **Failure propagation** — a failing rank best-effort sends an
+//!   `Abort` frame carrying a reason; receivers forward it around the
+//!   ring and return an error, so every survivor exits with a
+//!   diagnostic instead of hanging in allreduce.
+//! * **Deadlock freedom** — every rank runs send-then-recv in the same
+//!   ring step, so a block larger than the kernel socket buffers would
+//!   wedge all ranks in `write`.  Block transfers are therefore split
+//!   into ≤[`CHUNK_PAYLOAD`]-byte frames with send/recv interleaved per
+//!   chunk; both sides compute the expected byte counts locally (same
+//!   due ranges, same partition rule), so chunks need no extra framing.
+//!
+//! The allreduce ([`Ring::allreduce_rows`]) is gather-circulate +
+//! scatter rather than a true ring-allreduce: reduction arithmetic runs
+//! only on the OWNER of a row (`row % n == rank`), accumulating the n
+//! per-origin contributions in origin order with the same
+//! `axpy`-into-scratch loop as the in-process collective
+//! (`sync::average_row`).  That costs more bandwidth than ring
+//! allreduce ((n-1)·P + (n-1)/n·P vs 2·(n-1)/n·P per rank) but makes
+//! the result BITWISE IDENTICAL to thread mode — the acceptance
+//! criterion this transport is built around.  `perfmodel/network.rs`
+//! carries the analytic cost model; [`gather_scatter_wire_bytes`] is
+//! the exact per-rank byte predictor that measured [`NetStats`] are
+//! checked against.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::dist::fault::FaultSpec;
+use crate::linalg::vecops::axpy;
+use crate::model::SharedModel;
+use crate::util::fnv::fnv1a;
+
+const MAGIC: [u8; 4] = *b"PWRG";
+const VERSION: u16 = 1;
+/// Frame header size on the wire.
+pub const HEADER_BYTES: usize = 24;
+/// Largest payload a single frame carries.  Must stay safely below the
+/// smallest kernel socket buffer so one in-flight chunk per direction
+/// can never wedge the ring (see module docs).
+pub const CHUNK_PAYLOAD: usize = 16 * 1024;
+/// Receive-side sanity bound on the header's length field.
+const MAX_PAYLOAD: usize = 1 << 20;
+
+/// Process exit code for `PW2V_FAULT kill-after=N`.
+pub const EXIT_FAULT_KILL: i32 = 42;
+/// Process exit code for `PW2V_FAULT torn-frame=N`.
+pub const EXIT_FAULT_TORN: i32 = 43;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameType {
+    /// Ring-formation handshake: `[nranks u32][fingerprint u64]`.
+    Hello = 1,
+    /// Small u64-array circulation (stop decision, resume negotiation).
+    Status = 2,
+    /// Gather-phase model block (raw replica rows).
+    Slice = 3,
+    /// Scatter-phase model block (averaged owner rows).
+    AvgSlice = 4,
+    /// Liveness beacon; resets the receiver's read deadline, carries no
+    /// payload, and is invisible to fault frame counting.
+    Heartbeat = 5,
+    /// Failure propagation: payload is a UTF-8 reason.
+    Abort = 6,
+}
+
+impl FrameType {
+    fn from_u8(v: u8) -> anyhow::Result<Self> {
+        Ok(match v {
+            1 => FrameType::Hello,
+            2 => FrameType::Status,
+            3 => FrameType::Slice,
+            4 => FrameType::AvgSlice,
+            5 => FrameType::Heartbeat,
+            6 => FrameType::Abort,
+            other => anyhow::bail!("unknown frame type {other} (protocol corruption)"),
+        })
+    }
+}
+
+/// One decoded frame.
+pub struct Frame {
+    pub ftype: FrameType,
+    pub origin: u8,
+    pub round: u32,
+    pub payload: Vec<u8>,
+}
+
+/// `--dist tcp:<rank>@addr0,addr1,...` — this process is `rank`;
+/// `addrs[k]` is where rank k listens.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RingSpec {
+    pub rank: usize,
+    pub addrs: Vec<String>,
+}
+
+impl RingSpec {
+    /// Parse a ring spec; a leading `tcp:` is accepted and ignored so
+    /// callers may pass the full `--dist` value.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.strip_prefix("tcp:").unwrap_or(s);
+        let (rank, addrs) = s.split_once('@').ok_or_else(|| {
+            anyhow::anyhow!("ring spec '{s}': expected <rank>@addr0,addr1,...")
+        })?;
+        let rank: usize = rank
+            .trim()
+            .parse()
+            .map_err(|e| anyhow::anyhow!("ring spec rank '{rank}': {e}"))?;
+        let addrs: Vec<String> = addrs
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        anyhow::ensure!(!addrs.is_empty(), "ring spec '{s}': no addresses");
+        anyhow::ensure!(
+            rank < addrs.len(),
+            "ring spec rank {rank} out of range for {} addresses",
+            addrs.len()
+        );
+        anyhow::ensure!(addrs.len() <= 255, "ring spec: at most 255 ranks");
+        Ok(Self { rank, addrs })
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.addrs.len()
+    }
+}
+
+/// Transport tuning knobs (all CLI-overridable; defaults documented in
+/// EXPERIMENTS.md §Distributed-TCP).
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Ring-formation budget: how long to retry connecting to the
+    /// successor (exponential backoff 10ms → 500ms) and to wait for the
+    /// predecessor to connect.
+    pub connect_timeout_ms: u64,
+    /// Read/write deadline per frame once the ring is up; a peer silent
+    /// for this long is declared dead/wedged.
+    pub io_timeout_ms: u64,
+    /// Heartbeat period (must be well under `io_timeout_ms`).
+    pub heartbeat_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            connect_timeout_ms: 15_000,
+            io_timeout_ms: 10_000,
+            heartbeat_ms: 300,
+        }
+    }
+}
+
+/// Measured transport counters for one rank (calibrates
+/// `perfmodel/network.rs`; surfaced in `DistOutcome`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetStats {
+    pub frames_sent: u64,
+    pub frames_recv: u64,
+    /// Header + payload bytes, every frame type.
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    /// Header + payload bytes of Slice/AvgSlice frames only — the
+    /// quantity [`gather_scatter_wire_bytes`] predicts exactly.
+    pub slice_bytes_sent: u64,
+    pub heartbeats_sent: u64,
+}
+
+/// Writing half of the successor connection, shared between the trainer
+/// and the heartbeat thread behind one mutex (a frame is always written
+/// under a single lock hold, so frames never interleave).
+struct FrameWriter {
+    stream: TcpStream,
+    fault: Option<FaultSpec>,
+    /// Data frames written so far (heartbeats excluded) — the counter
+    /// `PW2V_FAULT` triggers key off, kept heartbeat-free so fault
+    /// schedules are deterministic.
+    data_frames: u64,
+    frames_sent: u64,
+    bytes_sent: u64,
+    slice_bytes_sent: u64,
+    heartbeats_sent: u64,
+}
+
+impl FrameWriter {
+    fn send(&mut self, ftype: FrameType, origin: u8, round: u32, payload: &[u8]) -> anyhow::Result<()> {
+        let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.push(ftype as u8);
+        buf.push(origin);
+        buf.extend_from_slice(&round.to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&fnv1a(payload).to_le_bytes());
+        buf.extend_from_slice(payload);
+
+        if ftype != FrameType::Heartbeat {
+            match self.fault {
+                Some(FaultSpec::KillAfterFrames(n)) if self.data_frames >= n => {
+                    eprintln!("PW2V_FAULT kill-after={n}: exiting now");
+                    std::process::exit(EXIT_FAULT_KILL);
+                }
+                Some(FaultSpec::TornFrame(n)) if self.data_frames == n => {
+                    // Crash mid-write: header plus half the payload.
+                    let torn = HEADER_BYTES + payload.len() / 2;
+                    let _ = self.stream.write_all(&buf[..torn]);
+                    let _ = self.stream.flush();
+                    eprintln!("PW2V_FAULT torn-frame={n}: wrote {torn} bytes, exiting");
+                    std::process::exit(EXIT_FAULT_TORN);
+                }
+                Some(FaultSpec::StallAfterFrames(n)) if self.data_frames >= n => {
+                    // Wedge while HOLDING the writer lock: the heartbeat
+                    // thread blocks on the same mutex, so heartbeats stop
+                    // and peers must detect us via the read deadline.
+                    eprintln!("PW2V_FAULT stall-after={n}: stalling (lock held)");
+                    loop {
+                        std::thread::sleep(Duration::from_secs(3600));
+                    }
+                }
+                _ => {}
+            }
+            self.data_frames += 1;
+        }
+
+        self.stream.write_all(&buf)?;
+        self.frames_sent += 1;
+        self.bytes_sent += buf.len() as u64;
+        match ftype {
+            FrameType::Slice | FrameType::AvgSlice => {
+                self.slice_bytes_sent += buf.len() as u64;
+            }
+            FrameType::Heartbeat => self.heartbeats_sent += 1,
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+/// Reading half of the predecessor connection.
+struct FrameReader {
+    stream: TcpStream,
+    io_timeout: Duration,
+    frames_recv: u64,
+    bytes_recv: u64,
+}
+
+impl FrameReader {
+    /// Fill `buf` completely, tolerating short reads and poll timeouts,
+    /// failing once `deadline` passes with nothing left to read.
+    fn read_full(&mut self, buf: &mut [u8], deadline: Instant) -> anyhow::Result<()> {
+        let mut filled = 0;
+        while filled < buf.len() {
+            match self.stream.read(&mut buf[filled..]) {
+                Ok(0) => anyhow::bail!("peer closed the connection"),
+                Ok(k) => filled += k,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "peer silent for {}ms (dead or wedged)",
+                        self.io_timeout.as_millis()
+                    );
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Read and validate one frame (any type).
+    fn recv(&mut self) -> anyhow::Result<Frame> {
+        let deadline = Instant::now() + self.io_timeout;
+        let mut head = [0u8; HEADER_BYTES];
+        self.read_full(&mut head, deadline)?;
+        anyhow::ensure!(head[..4] == MAGIC, "bad frame magic (protocol corruption)");
+        let version = u16::from_le_bytes(head[4..6].try_into().unwrap());
+        anyhow::ensure!(
+            version == VERSION,
+            "frame version {version} (expected {VERSION})"
+        );
+        let ftype = FrameType::from_u8(head[6])?;
+        let origin = head[7];
+        let round = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        let len = u32::from_le_bytes(head[12..16].try_into().unwrap()) as usize;
+        anyhow::ensure!(len <= MAX_PAYLOAD, "frame length {len} exceeds protocol max");
+        let want = u64::from_le_bytes(head[16..24].try_into().unwrap());
+        let mut payload = vec![0u8; len];
+        self.read_full(&mut payload, deadline)
+            .map_err(|e| anyhow::anyhow!("truncated frame payload: {e}"))?;
+        anyhow::ensure!(
+            fnv1a(&payload) == want,
+            "frame checksum mismatch (corrupt or torn frame)"
+        );
+        self.frames_recv += 1;
+        self.bytes_recv += (HEADER_BYTES + len) as u64;
+        Ok(Frame {
+            ftype,
+            origin,
+            round,
+            payload,
+        })
+    }
+}
+
+/// Established ring endpoint for one rank.
+pub struct Ring {
+    rank: usize,
+    n: usize,
+    writer: Arc<Mutex<FrameWriter>>,
+    reader: FrameReader,
+    hb_stop: Arc<AtomicBool>,
+    hb_join: Option<std::thread::JoinHandle<()>>,
+}
+
+fn connect_retry(addr: &str, timeout: Duration) -> anyhow::Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_millis(10);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                anyhow::ensure!(
+                    Instant::now() + backoff < deadline,
+                    "could not connect to successor {addr} within {}ms: {e}",
+                    timeout.as_millis()
+                );
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+fn accept_deadline(listener: &TcpListener, timeout: Duration) -> anyhow::Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    listener.set_nonblocking(true)?;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false)?;
+                return Ok(s);
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "predecessor did not connect within {}ms",
+                    timeout.as_millis()
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+impl Ring {
+    /// Bind this rank's listener and form the ring.  `fingerprint`
+    /// guards against mixed-config launches: all ranks must present the
+    /// same value during the Hello exchange.
+    pub fn establish(spec: &RingSpec, net: &NetConfig, fingerprint: u64) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(&spec.addrs[spec.rank])
+            .map_err(|e| anyhow::anyhow!("rank {}: bind {}: {e}", spec.rank, spec.addrs[spec.rank]))?;
+        Self::establish_on(listener, spec, net, fingerprint)
+    }
+
+    /// Form the ring over an already-bound listener (tests and benches
+    /// bind `127.0.0.1:0` first to learn their ports).
+    pub fn establish_on(
+        listener: TcpListener,
+        spec: &RingSpec,
+        net: &NetConfig,
+        fingerprint: u64,
+    ) -> anyhow::Result<Self> {
+        let rank = spec.rank;
+        let n = spec.nranks();
+        let connect_timeout = Duration::from_millis(net.connect_timeout_ms.max(1));
+        let io_timeout = Duration::from_millis(net.io_timeout_ms.max(1));
+
+        // Listener is bound (above or by the caller) BEFORE we connect
+        // out, so every rank's connect finds every listener regardless
+        // of launch order.
+        let succ = &spec.addrs[(rank + 1) % n];
+        let out = connect_retry(succ, connect_timeout)?;
+        out.set_nodelay(true)?;
+        out.set_write_timeout(Some(io_timeout))?;
+
+        let inc = accept_deadline(&listener, connect_timeout)?;
+        inc.set_nodelay(true)?;
+        // Short poll quantum; recv loops re-check their own deadline.
+        inc.set_read_timeout(Some(Duration::from_millis(100)))?;
+
+        let mut writer = FrameWriter {
+            stream: out,
+            fault: FaultSpec::from_env()?,
+            data_frames: 0,
+            frames_sent: 0,
+            bytes_sent: 0,
+            slice_bytes_sent: 0,
+            heartbeats_sent: 0,
+        };
+        let mut reader = FrameReader {
+            stream: inc,
+            io_timeout,
+            frames_recv: 0,
+            bytes_recv: 0,
+        };
+
+        // Hello exchange: wiring + config sanity before any training
+        // traffic.
+        let mut hello = Vec::with_capacity(12);
+        hello.extend_from_slice(&(n as u32).to_le_bytes());
+        hello.extend_from_slice(&fingerprint.to_le_bytes());
+        writer.send(FrameType::Hello, rank as u8, 0, &hello)?;
+        let f = reader.recv()?;
+        anyhow::ensure!(
+            f.ftype == FrameType::Hello,
+            "rank {rank}: expected Hello, got {:?}",
+            f.ftype
+        );
+        let expect_pred = (rank + n - 1) % n;
+        anyhow::ensure!(
+            f.origin as usize == expect_pred,
+            "rank {rank}: predecessor claims rank {}, expected {expect_pred} (ring miswired)",
+            f.origin
+        );
+        anyhow::ensure!(f.payload.len() == 12, "rank {rank}: malformed Hello");
+        let peer_n = u32::from_le_bytes(f.payload[..4].try_into().unwrap()) as usize;
+        anyhow::ensure!(
+            peer_n == n,
+            "rank {rank}: predecessor believes nranks={peer_n}, we have {n}"
+        );
+        let peer_fp = u64::from_le_bytes(f.payload[4..12].try_into().unwrap());
+        anyhow::ensure!(
+            peer_fp == fingerprint,
+            "rank {rank}: config fingerprint mismatch with predecessor \
+             (mixed binaries or flags across the ring?)"
+        );
+
+        let writer = Arc::new(Mutex::new(writer));
+        let hb_stop = Arc::new(AtomicBool::new(false));
+        let hb_join = {
+            let writer = Arc::clone(&writer);
+            let stop = Arc::clone(&hb_stop);
+            let period = Duration::from_millis(net.heartbeat_ms.max(1));
+            Some(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(period);
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+                    if w.send(FrameType::Heartbeat, rank as u8, 0, &[]).is_err() {
+                        // Successor is gone; the trainer will find out
+                        // through its own send/recv errors.
+                        break;
+                    }
+                }
+            }))
+        };
+
+        Ok(Self {
+            rank,
+            n,
+            writer,
+            reader,
+            hb_stop,
+            hb_join,
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.n
+    }
+
+    fn send_frame(&self, ftype: FrameType, origin: u8, round: u32, payload: &[u8]) -> anyhow::Result<()> {
+        self.writer
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .send(ftype, origin, round, payload)
+    }
+
+    /// Receive the next DATA frame: heartbeats are skipped (each resets
+    /// the deadline simply by arriving), aborts are forwarded around
+    /// the ring and surfaced as errors.
+    fn recv_data(&mut self) -> anyhow::Result<Frame> {
+        loop {
+            let f = self.reader.recv()?;
+            match f.ftype {
+                FrameType::Heartbeat => continue,
+                FrameType::Abort => {
+                    let reason = String::from_utf8_lossy(&f.payload).into_owned();
+                    if f.origin as usize != self.rank {
+                        // Forward so the whole ring learns; best-effort,
+                        // the successor may already be gone.
+                        let _ = self.send_frame(FrameType::Abort, f.origin, f.round, &f.payload);
+                    }
+                    anyhow::bail!("rank {} aborted: {reason}", f.origin);
+                }
+                _ => return Ok(f),
+            }
+        }
+    }
+
+    /// Best-effort failure propagation: send an `Abort` with a reason.
+    /// Never fails — the caller is already on its error path.
+    pub fn abort(&self, reason: &str) {
+        let payload = reason.as_bytes();
+        let capped = &payload[..payload.len().min(4096)];
+        let _ = self.send_frame(FrameType::Abort, self.rank as u8, 0, capped);
+    }
+
+    /// Exchange one logical block per ring step: stream `out` (as
+    /// origin `origin_out`) to the successor in ≤[`CHUNK_PAYLOAD`]
+    /// chunks while collecting exactly `in_len` bytes of origin
+    /// `origin_in` from the predecessor, interleaved chunk-by-chunk so
+    /// the ring can never wedge on full socket buffers.
+    fn exchange_raw(
+        &mut self,
+        ftype: FrameType,
+        round: u32,
+        origin_out: usize,
+        out: &[u8],
+        origin_in: usize,
+        in_len: usize,
+    ) -> anyhow::Result<Vec<u8>> {
+        let mut got = Vec::with_capacity(in_len);
+        let mut sent = 0;
+        while sent < out.len() || got.len() < in_len {
+            if sent < out.len() {
+                let end = (sent + CHUNK_PAYLOAD).min(out.len());
+                self.send_frame(ftype, origin_out as u8, round, &out[sent..end])?;
+                sent = end;
+            }
+            if got.len() < in_len {
+                let f = self.recv_data()?;
+                anyhow::ensure!(
+                    f.ftype == ftype && f.origin as usize == origin_in && f.round == round,
+                    "rank {}: protocol desync (got {:?} origin {} round {}, \
+                     expected {:?} origin {} round {})",
+                    self.rank,
+                    f.ftype,
+                    f.origin,
+                    f.round,
+                    ftype,
+                    origin_in,
+                    round
+                );
+                anyhow::ensure!(
+                    got.len() + f.payload.len() <= in_len,
+                    "rank {}: oversized block from rank {origin_in}",
+                    self.rank
+                );
+                got.extend_from_slice(&f.payload);
+            }
+        }
+        Ok(got)
+    }
+
+    /// Circulate `vals` so every rank sees every rank's values (all
+    /// ranks must pass the SAME element count).  Returns the per-origin
+    /// values, own included.  This is the ring's replacement for the
+    /// in-process barrier + shared state: the stop decision and resume
+    /// negotiation both ride on it.
+    pub fn circulate_u64s(&mut self, vals: &[u64], round: u32) -> anyhow::Result<Vec<Vec<u64>>> {
+        let (n, k) = (self.n, vals.len());
+        let mut blocks: Vec<Vec<u64>> = vec![Vec::new(); n];
+        blocks[self.rank] = vals.to_vec();
+        for s in 0..n - 1 {
+            let so = (self.rank + n - s) % n;
+            let out: Vec<u8> = blocks[so].iter().flat_map(|v| v.to_le_bytes()).collect();
+            let io_ = (self.rank + n - 1 - s) % n;
+            let got = self.exchange_raw(FrameType::Status, round, so, &out, io_, k * 8)?;
+            blocks[io_] = got
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+        }
+        Ok(blocks)
+    }
+
+    /// Synchronous allreduce-average of `due` rows of both matrices
+    /// across the ring, bitwise-identical to the in-process
+    /// `sync::average_row` collective (see module docs).
+    ///
+    /// Phase 1 (gather): circulate every rank's raw due-rows block, so
+    /// each rank holds all n contributions.  Phase 2: each rank
+    /// averages the rows it OWNS (`row % n == rank`), accumulating
+    /// per-origin contributions in origin order 0..n — the exact
+    /// model-order `axpy` loop of `average_row` — and writes the means
+    /// into its replica.  Phase 3 (scatter): circulate the per-owner
+    /// averaged blocks; every rank copies foreign owners' means into
+    /// its replica.
+    pub fn allreduce_rows(
+        &mut self,
+        model: &SharedModel,
+        due: &[Range<u32>],
+        round: u32,
+    ) -> anyhow::Result<()> {
+        let (n, rank) = (self.n, self.rank);
+        let dim = model.dim();
+        let row_bytes = 8 * dim; // M_in + M_out, f32 each
+        let due_rows: Vec<u32> = due.iter().flat_map(|r| r.clone()).collect();
+        for &r in &due_rows {
+            anyhow::ensure!(
+                (r as usize) < model.vocab(),
+                "due row {r} out of range for vocab {}",
+                model.vocab()
+            );
+        }
+        if due_rows.is_empty() || n == 1 {
+            return Ok(());
+        }
+
+        // My raw contribution, rows in due order, [M_in | M_out] per row.
+        let mut mine = Vec::with_capacity(due_rows.len() * row_bytes);
+        for &r in &due_rows {
+            // SAFETY: this process's trainer is quiescent during the
+            // sync phase and the heartbeat thread never touches the
+            // model, so access is exclusive.
+            for &x in unsafe { model.row_in(r) }.iter() {
+                mine.extend_from_slice(&x.to_le_bytes());
+            }
+            for &x in unsafe { model.row_out(r) }.iter() {
+                mine.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+
+        // Gather: after n-1 steps every rank holds all n blocks.
+        let block_len = mine.len();
+        let mut blocks: Vec<Vec<u8>> = vec![Vec::new(); n];
+        blocks[rank] = mine;
+        for s in 0..n - 1 {
+            let so = (rank + n - s) % n;
+            let io_ = (rank + n - 1 - s) % n;
+            let out = std::mem::take(&mut blocks[so]);
+            let got = self.exchange_raw(FrameType::Slice, round, so, &out, io_, block_len)?;
+            blocks[so] = out;
+            blocks[io_] = got;
+        }
+
+        // Average the rows this rank owns, origin order 0..n (the
+        // model order of sync::average_row), writing means into the
+        // local replica and into the outgoing averaged block.
+        let inv = 1.0 / n as f32;
+        let mut scratch = vec![0.0f32; dim];
+        let mut tmp = vec![0.0f32; dim];
+        let owned: Vec<(usize, u32)> = due_rows
+            .iter()
+            .enumerate()
+            .filter(|(_, &r)| r as usize % n == rank)
+            .map(|(j, &r)| (j, r))
+            .collect();
+        let mut avg_mine = Vec::with_capacity(owned.len() * row_bytes);
+        for &(j, r) in &owned {
+            for half in 0..2 {
+                let off = j * row_bytes + half * 4 * dim;
+                scratch.fill(0.0);
+                for block in &blocks {
+                    decode_f32(&block[off..off + 4 * dim], &mut tmp);
+                    axpy(inv, &tmp, &mut scratch);
+                }
+                // SAFETY: as above; owners partition rows disjointly.
+                let dst = if half == 0 {
+                    unsafe { model.row_in(r) }
+                } else {
+                    unsafe { model.row_out(r) }
+                };
+                dst.copy_from_slice(&scratch);
+                for &x in scratch.iter() {
+                    avg_mine.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        drop(blocks);
+
+        // Scatter: circulate per-owner averaged blocks; apply foreign
+        // owners' means.
+        let owned_count = |o: usize| due_rows.iter().filter(|&&r| r as usize % n == o).count();
+        let mut avg: Vec<Vec<u8>> = vec![Vec::new(); n];
+        avg[rank] = avg_mine;
+        for s in 0..n - 1 {
+            let so = (rank + n - s) % n;
+            let io_ = (rank + n - 1 - s) % n;
+            let out = std::mem::take(&mut avg[so]);
+            let got = self.exchange_raw(
+                FrameType::AvgSlice,
+                round,
+                so,
+                &out,
+                io_,
+                owned_count(io_) * row_bytes,
+            )?;
+            avg[so] = out;
+            // Apply immediately; keep the block around for forwarding.
+            let mut k = 0;
+            for &r in due_rows.iter().filter(|&&r| r as usize % n == io_) {
+                decode_f32(&got[k * row_bytes..k * row_bytes + 4 * dim], &mut tmp);
+                // SAFETY: as above.
+                unsafe { model.row_in(r) }.copy_from_slice(&tmp);
+                decode_f32(&got[k * row_bytes + 4 * dim..(k + 1) * row_bytes], &mut tmp);
+                // SAFETY: as above.
+                unsafe { model.row_out(r) }.copy_from_slice(&tmp);
+                k += 1;
+            }
+            avg[io_] = got;
+        }
+        Ok(())
+    }
+
+    /// Snapshot the transport counters.
+    pub fn stats(&self) -> NetStats {
+        let w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
+        NetStats {
+            frames_sent: w.frames_sent,
+            frames_recv: self.reader.frames_recv,
+            bytes_sent: w.bytes_sent,
+            bytes_recv: self.reader.bytes_recv,
+            slice_bytes_sent: w.slice_bytes_sent,
+            heartbeats_sent: w.heartbeats_sent,
+        }
+    }
+}
+
+impl Drop for Ring {
+    fn drop(&mut self) {
+        self.hb_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.hb_join.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn decode_f32(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), 4 * out.len());
+    for (j, slot) in out.iter_mut().enumerate() {
+        *slot = f32::from_le_bytes(bytes[4 * j..4 * j + 4].try_into().unwrap());
+    }
+}
+
+/// Exact Slice/AvgSlice bytes (headers included) rank `rank` SENDS in
+/// one [`Ring::allreduce_rows`] over `due`: the prediction that
+/// measured [`NetStats::slice_bytes_sent`] must equal — pinned by
+/// `wire_bytes_prediction_is_exact` and recheck-able against any run's
+/// counters.
+pub fn gather_scatter_wire_bytes(due: &[Range<u32>], n: usize, rank: usize, dim: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    let due_total: u64 = due.iter().map(|r| r.len() as u64).sum();
+    if due_total == 0 {
+        return 0;
+    }
+    let row_bytes = 8 * dim as u64;
+    let chunk = CHUNK_PAYLOAD as u64;
+    let framed = |bytes: u64| -> u64 {
+        if bytes == 0 {
+            0
+        } else {
+            bytes + (bytes + chunk - 1) / chunk * HEADER_BYTES as u64
+        }
+    };
+    // Gather: n-1 sends of the full due block.
+    let mut total = (n as u64 - 1) * framed(due_total * row_bytes);
+    // Scatter: origins (rank - s) % n for s in 0..n-1, each origin's
+    // owned-rows block.
+    for s in 0..n - 1 {
+        let o = (rank + n - s) % n;
+        let owned = due
+            .iter()
+            .flat_map(|r| r.clone())
+            .filter(|&r| r as usize % n == o)
+            .count() as u64;
+        total += framed(owned * row_bytes);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn local_specs(n: usize) -> (Vec<TcpListener>, Vec<RingSpec>) {
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let addrs: Vec<String> = listeners
+            .iter()
+            .map(|l| format!("127.0.0.1:{}", l.local_addr().unwrap().port()))
+            .collect();
+        let specs = (0..n)
+            .map(|rank| RingSpec {
+                rank,
+                addrs: addrs.clone(),
+            })
+            .collect();
+        (listeners, specs)
+    }
+
+    fn fast_net() -> NetConfig {
+        NetConfig {
+            connect_timeout_ms: 5_000,
+            io_timeout_ms: 5_000,
+            heartbeat_ms: 50,
+        }
+    }
+
+    #[test]
+    fn ring_spec_parses_and_rejects() {
+        let s = RingSpec::parse("tcp:1@127.0.0.1:7000,127.0.0.1:7001").unwrap();
+        assert_eq!(s.rank, 1);
+        assert_eq!(s.nranks(), 2);
+        // Prefix optional.
+        assert_eq!(RingSpec::parse("1@a:1,b:2").unwrap(), s_plain());
+        assert!(RingSpec::parse("no-at-sign").is_err());
+        assert!(RingSpec::parse("x@a:1").is_err());
+        assert!(RingSpec::parse("2@a:1,b:2").is_err()); // rank out of range
+        assert!(RingSpec::parse("0@").is_err());
+    }
+
+    fn s_plain() -> RingSpec {
+        RingSpec {
+            rank: 1,
+            addrs: vec!["a:1".into(), "b:2".into()],
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_and_corruption_detection() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let out = TcpStream::connect(addr).unwrap();
+        let (inc, _) = l.accept().unwrap();
+        inc.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let mut w = FrameWriter {
+            stream: out,
+            fault: None,
+            data_frames: 0,
+            frames_sent: 0,
+            bytes_sent: 0,
+            slice_bytes_sent: 0,
+            heartbeats_sent: 0,
+        };
+        let mut r = FrameReader {
+            stream: inc,
+            io_timeout: Duration::from_millis(500),
+            frames_recv: 0,
+            bytes_recv: 0,
+        };
+
+        w.send(FrameType::Status, 2, 7, &[1, 2, 3]).unwrap();
+        w.send(FrameType::Heartbeat, 2, 0, &[]).unwrap();
+        let f = r.recv().unwrap();
+        assert_eq!(f.ftype, FrameType::Status);
+        assert_eq!(f.origin, 2);
+        assert_eq!(f.round, 7);
+        assert_eq!(f.payload, vec![1, 2, 3]);
+        let hb = r.recv().unwrap();
+        assert_eq!(hb.ftype, FrameType::Heartbeat);
+        assert!(hb.payload.is_empty());
+
+        // Corrupt frame: valid header, payload checksum wrong.
+        let mut raw = Vec::new();
+        raw.extend_from_slice(&MAGIC);
+        raw.extend_from_slice(&VERSION.to_le_bytes());
+        raw.push(FrameType::Status as u8);
+        raw.push(0);
+        raw.extend_from_slice(&0u32.to_le_bytes());
+        raw.extend_from_slice(&2u32.to_le_bytes());
+        raw.extend_from_slice(&0xBAD0_BAD0_BAD0_BAD0u64.to_le_bytes());
+        raw.extend_from_slice(&[9, 9]);
+        w.stream.write_all(&raw).unwrap();
+        let err = r.recv().unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+
+        // Garbage magic.
+        w.stream.write_all(&[0u8; HEADER_BYTES]).unwrap();
+        let err = r.recv().unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn torn_frame_is_rejected_as_truncation() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let mut out = TcpStream::connect(addr).unwrap();
+        let (inc, _) = l.accept().unwrap();
+        inc.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let mut r = FrameReader {
+            stream: inc,
+            io_timeout: Duration::from_millis(500),
+            frames_recv: 0,
+            bytes_recv: 0,
+        };
+        // Header promising 100 payload bytes, connection closed after 10.
+        let payload = [7u8; 100];
+        let mut raw = Vec::new();
+        raw.extend_from_slice(&MAGIC);
+        raw.extend_from_slice(&VERSION.to_le_bytes());
+        raw.push(FrameType::Slice as u8);
+        raw.push(0);
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&100u32.to_le_bytes());
+        raw.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        raw.extend_from_slice(&payload[..10]);
+        out.write_all(&raw).unwrap();
+        drop(out);
+        let err = r.recv().unwrap_err().to_string();
+        assert!(err.contains("truncated") || err.contains("closed"), "{err}");
+    }
+
+    #[test]
+    fn hello_rejects_fingerprint_mismatch() {
+        let (listeners, specs) = local_specs(2);
+        let mut handles = Vec::new();
+        for (i, (l, spec)) in listeners.into_iter().zip(specs).enumerate() {
+            handles.push(std::thread::spawn(move || {
+                Ring::establish_on(l, &spec, &fast_net(), 100 + i as u64).map(|_| ())
+            }));
+        }
+        for h in handles {
+            let res = h.join().unwrap();
+            assert!(res.is_err(), "mixed fingerprints must not form a ring");
+            let msg = format!("{:#}", res.unwrap_err());
+            assert!(msg.contains("fingerprint"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn circulate_sees_every_rank() {
+        let (listeners, specs) = local_specs(3);
+        let mut handles = Vec::new();
+        for (l, spec) in listeners.into_iter().zip(specs) {
+            handles.push(std::thread::spawn(move || {
+                let mut ring = Ring::establish_on(l, &spec, &fast_net(), 1).unwrap();
+                let rank = ring.rank() as u64;
+                ring.circulate_u64s(&[rank * 10, rank * 10 + 1], 1).unwrap()
+            }));
+        }
+        for h in handles {
+            let blocks = h.join().unwrap();
+            for (o, vals) in blocks.iter().enumerate() {
+                let o = o as u64;
+                assert_eq!(vals, &vec![o * 10, o * 10 + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn three_rank_allreduce_matches_in_process_average_bitwise() {
+        let (vocab, dim, n) = (37usize, 12usize, 3usize);
+        // Expected means, computed with the exact average_row arithmetic
+        // (same axpy, same origin order) on copies of the initial rows.
+        let inits: Vec<SharedModel> = (0..n)
+            .map(|i| SharedModel::init(vocab, dim, 1000 + i as u64))
+            .collect();
+        let inv = 1.0 / n as f32;
+        let mut want_in = vec![vec![0.0f32; dim]; vocab];
+        let mut want_out = vec![vec![0.0f32; dim]; vocab];
+        for r in 0..vocab as u32 {
+            for m in &inits {
+                axpy(inv, m.m_in().row(r), &mut want_in[r as usize]);
+                axpy(inv, m.m_out().row(r), &mut want_out[r as usize]);
+            }
+        }
+
+        let (listeners, specs) = local_specs(n);
+        let mut handles = Vec::new();
+        for (l, spec) in listeners.into_iter().zip(specs) {
+            handles.push(std::thread::spawn(move || {
+                let rank = spec.rank;
+                let model = SharedModel::init(37, 12, 1000 + rank as u64);
+                let mut ring = Ring::establish_on(l, &spec, &fast_net(), 7).unwrap();
+                let due = vec![0..37u32];
+                ring.allreduce_rows(&model, &due, 1).unwrap();
+                let stats = ring.stats();
+                (rank, model, stats)
+            }));
+        }
+        let due = vec![0..vocab as u32];
+        for h in handles {
+            let (rank, model, stats) = h.join().unwrap();
+            for r in 0..vocab as u32 {
+                for j in 0..dim {
+                    assert_eq!(
+                        model.m_in().row(r)[j].to_bits(),
+                        want_in[r as usize][j].to_bits(),
+                        "rank {rank} M_in[{r}][{j}]"
+                    );
+                    assert_eq!(
+                        model.m_out().row(r)[j].to_bits(),
+                        want_out[r as usize][j].to_bits(),
+                        "rank {rank} M_out[{r}][{j}]"
+                    );
+                }
+            }
+            // Measured slice traffic equals the analytic predictor
+            // exactly — this is the calibration contract.
+            assert_eq!(
+                stats.slice_bytes_sent,
+                gather_scatter_wire_bytes(&due, n, rank, dim),
+                "rank {rank} wire bytes"
+            );
+            assert!(stats.frames_sent > 0 && stats.frames_recv > 0);
+        }
+    }
+
+    #[test]
+    fn abort_reaches_peer_with_reason() {
+        let (listeners, specs) = local_specs(2);
+        let mut handles = Vec::new();
+        for (l, spec) in listeners.into_iter().zip(specs) {
+            handles.push(std::thread::spawn(move || {
+                let rank = spec.rank;
+                let mut ring = Ring::establish_on(l, &spec, &fast_net(), 3).unwrap();
+                if rank == 1 {
+                    ring.abort("injected failure for test");
+                    Ok(())
+                } else {
+                    ring.recv_data().map(|_| ())
+                }
+            }));
+        }
+        let r1 = handles.pop().unwrap().join().unwrap();
+        let r0 = handles.pop().unwrap().join().unwrap();
+        assert!(r1.is_ok());
+        let err = format!("{:#}", r0.unwrap_err());
+        assert!(err.contains("rank 1 aborted"), "{err}");
+        assert!(err.contains("injected failure"), "{err}");
+    }
+
+    #[test]
+    fn dead_peer_trips_read_deadline() {
+        let (listeners, specs) = local_specs(2);
+        let mut net = fast_net();
+        net.io_timeout_ms = 400;
+        net.heartbeat_ms = 50;
+        let mut handles = Vec::new();
+        for (l, spec) in listeners.into_iter().zip(specs) {
+            let net = net;
+            handles.push(std::thread::spawn(move || {
+                let rank = spec.rank;
+                let mut ring = Ring::establish_on(l, &spec, &net, 9).unwrap();
+                if rank == 1 {
+                    // Die silently without aborting: drop the ring (the
+                    // closed socket is what rank 0 must detect).
+                    drop(ring);
+                    Ok(())
+                } else {
+                    let t0 = Instant::now();
+                    let res = ring.recv_data().map(|_| ());
+                    assert!(
+                        t0.elapsed() < Duration::from_millis(2 * net.io_timeout_ms as u64 + 1000),
+                        "detection took {:?}",
+                        t0.elapsed()
+                    );
+                    res
+                }
+            }));
+        }
+        let r1 = handles.pop().unwrap().join().unwrap();
+        let r0 = handles.pop().unwrap().join().unwrap();
+        assert!(r1.is_ok());
+        let err = format!("{:#}", r0.unwrap_err());
+        assert!(
+            err.contains("closed") || err.contains("silent"),
+            "unexpected diagnostic: {err}"
+        );
+    }
+
+    #[test]
+    fn wire_bytes_predictor_edges() {
+        assert_eq!(gather_scatter_wire_bytes(&[], 3, 0, 8), 0);
+        assert_eq!(gather_scatter_wire_bytes(&[0..10], 1, 0, 8), 0);
+        // 2 ranks, 3 rows, dim 1: block = 3*8 = 24 bytes, one chunk.
+        // Gather: 1 send of 24+24; scatter: origin = rank itself owns
+        // ceil/floor split of rows by parity.
+        let due = vec![0..3u32];
+        let b = gather_scatter_wire_bytes(&due, 2, 0, 1);
+        // rank 0 owns rows 0 and 2 (2 rows): scatter block 2*8=16 + 24.
+        assert_eq!(b, (24 + 24) + (16 + 24));
+        let b1 = gather_scatter_wire_bytes(&due, 2, 1, 1);
+        // rank 1 owns row 1: scatter block 8 + 24.
+        assert_eq!(b1, (24 + 24) + (8 + 24));
+    }
+
+    #[test]
+    fn chunking_splits_large_blocks() {
+        // A block of 40 KiB must cost 3 headers.
+        let rows = (40 * 1024) / 8; // dim 1 → 8 bytes/row
+        let due = vec![0..rows as u32];
+        let b = gather_scatter_wire_bytes(&due, 2, 0, 1);
+        let chunk = CHUNK_PAYLOAD as u64;
+        let nchunks = |bytes: u64| (bytes + chunk - 1) / chunk;
+        let block = rows as u64 * 8;
+        let own = due
+            .iter()
+            .flat_map(|r| r.clone())
+            .filter(|&r| r % 2 == 0)
+            .count() as u64
+            * 8;
+        let expect = (block + nchunks(block) * 24) + (own + nchunks(own) * 24);
+        assert_eq!(b, expect);
+        assert_eq!(nchunks(block), 3);
+    }
+}

@@ -1,5 +1,6 @@
 //! Per-replica distributed configuration.
 
+use super::fault::FaultSpec;
 use super::sync::SyncPolicy;
 
 /// Configuration of one distributed run (shared by all replicas).
@@ -13,6 +14,11 @@ pub struct DistConfig {
     pub policy: SyncPolicy,
     /// Apply the paper's node-scaled learning rate (Sec. III-E).
     pub scale_lr: bool,
+    /// Injected fault for the thread-mode driver (tests set this
+    /// programmatically; the CLI wires `PW2V_FAULT` through).  TCP-mode
+    /// wire faults are read from the environment by the transport
+    /// itself.
+    pub fault: Option<FaultSpec>,
 }
 
 impl DistConfig {
@@ -29,6 +35,7 @@ impl DistConfig {
             sync_interval: (12_000_000 / nodes as u64).max(500_000),
             policy: SyncPolicy::submodel_default(),
             scale_lr: true,
+            fault: None,
         }
     }
 }

@@ -1,37 +1,68 @@
-//! The replica driver: N node threads, private model replicas, barrier-
-//! synchronous allreduce rounds (paper Sec. III-E).
+//! The replica drivers: thread mode (N node threads in one process) and
+//! TCP ring mode (N OS processes), both running the same
+//! barrier-synchronous allreduce protocol (paper Sec. III-E).
 //!
 //! Protocol per round, every node:
 //!
 //! 1. train ~`sync_interval` corpus words on its shard (GEMM backend over
 //!    the zero-allocation arena pipeline, exactly like the shared-memory
 //!    trainer's inner loop);
-//! 2. barrier; if EVERY node has exhausted its shard×epochs, stop;
+//! 2. stop decision: in thread mode a barrier orders a shared done
+//!    counter; on the ring every rank circulates a (done, words) status.
+//!    If EVERY node has exhausted its shard×epochs, stop;
 //! 3. otherwise allreduce: the round's due rows (policy) are partitioned
-//!    round-robin across nodes, and each node averages its rows across
-//!    all replicas in place; barrier; next round.
+//!    round-robin across nodes by `row % n`, each row's owner averages
+//!    the n contributions in node order, and every replica receives the
+//!    means.
 //!
 //! Nodes that finish early keep joining rounds (contributing their frozen
-//! replica) until all are done, so every node executes the same barrier
-//! sequence — the same discipline an MPI implementation needs.  Traffic
-//! accounting assumes a ring allreduce (`2·(N-1)/N × payload` per node
-//! per round), matching the cluster cost model in `perfmodel::network`.
+//! replica) until all are done, so every node executes the same round
+//! sequence.  The merged result is a final full average of all replicas.
 //!
-//! The merged result is a final full average of all replicas.
+//! **Phase 1 is shared code** ([`TrainLeg`]), and the learning-rate
+//! schedule is per-node (each node's schedule spans its shard×epochs
+//! words), so a node's training leg is a deterministic function of
+//! (config, shard, node index) — no cross-thread state.  Because both
+//! collectives also reduce in the same node order with the same `axpy`
+//! arithmetic, a TCP ring under any policy produces BITWISE-IDENTICAL
+//! replicas to thread mode, round by round (pinned by
+//! `tcp_ring_matches_thread_mode_bitwise`).
+//!
+//! **Failure semantics**: thread mode fails FAST — a replica that errors
+//! or panics poisons the shared [`AbortBarrier`] through an RAII guard,
+//! every peer's next `wait()` returns an error, and the driver reports
+//! the root cause (preferring it over the echoed poison errors).  Ring
+//! mode propagates an `Abort` frame and every surviving process exits
+//! non-zero within the heartbeat deadline (see `dist::net`).
+//!
+//! **Checkpoints** (ring mode): every `--checkpoint-every` rounds each
+//! rank flushes its partial superbatch (the flush is part of the round
+//! schedule, so checkpointed runs are deterministic), joins the round's
+//! allreduce, and atomically writes a two-slot checkpoint carrying the
+//! model plus all mutable trainer state (round, epoch, reader position,
+//! lr progress, RNG).  `--resume` negotiates the newest round EVERY rank
+//! can load (slot retention bounds the skew to one checkpoint period)
+//! and continues; a resumed run is bitwise-identical to the same run
+//! left uninterrupted (pinned by `tcp_checkpoint_resume_is_bitwise`).
 
+use std::net::TcpListener;
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Barrier;
 use std::time::Instant;
 
+use super::barrier::{AbortBarrier, Poisoned};
+use super::fault::FaultSpec;
+use super::net::{gather_scatter_wire_bytes, NetConfig, NetStats, Ring, RingSpec};
 use super::node::DistConfig;
 use super::sync::{average_row, SyncPolicy};
 use crate::config::TrainConfig;
 use crate::corpus::reader::MAX_SENTENCE_LEN;
 use crate::corpus::shard::{shards_for_len, Shard};
-use crate::corpus::source::Corpus;
+use crate::corpus::source::{Corpus, SourceReader};
 use crate::corpus::subsample::Subsampler;
 use crate::corpus::vocab::Vocab;
+use crate::model::io as model_io;
+use crate::model::io::Checkpoint;
 use crate::model::{set_access_node, ShardMap, SharedModel};
 use crate::runtime::topology::{self, Topology};
 use crate::sampling::batch::{BatchBuilder, SuperbatchArena};
@@ -49,7 +80,9 @@ pub struct SyncStats {
     pub rounds: u64,
     /// Model rows (× both matrices) due across those rounds.
     pub rows_synced: u64,
-    /// Bytes this node moves on the wire under a ring allreduce.
+    /// Bytes this node moves on the wire: the ring-allreduce model
+    /// (`2·(N-1)/N × payload`) in thread mode, the exact gather+scatter
+    /// frame bytes in TCP mode.
     pub wire_bytes: u64,
 }
 
@@ -62,8 +95,214 @@ pub struct DistOutcome {
     pub words: u64,
     /// Wall-clock seconds.
     pub secs: f64,
-    /// Per-node sync accounting.
+    /// Per-node sync accounting (TCP mode: this rank's only).
     pub sync_stats: Vec<SyncStats>,
+    /// Measured transport counters (TCP mode only).
+    pub net: Option<NetStats>,
+}
+
+/// Checkpoint/resume policy for the TCP driver.
+#[derive(Clone, Debug, Default)]
+pub struct CheckpointPolicy {
+    /// Base path; per-rank two-slot files live at
+    /// `<base>.rank<k>.{a,b}`.  `None` disables checkpointing.
+    pub base: Option<std::path::PathBuf>,
+    /// Checkpoint every this many sync rounds (≥ 1).
+    pub every: u64,
+    /// Resume from the newest round every rank can load.
+    pub resume: bool,
+}
+
+impl CheckpointPolicy {
+    pub fn disabled() -> Self {
+        Self {
+            base: None,
+            every: 1,
+            resume: false,
+        }
+    }
+}
+
+/// The per-node learning-rate schedule: spans this node's share of the
+/// corpus (`ceil(total/n)` words), so the schedule is a pure function of
+/// node-local progress — deterministic, and identical between thread and
+/// TCP mode by construction.
+fn node_lr_state(cfg: &TrainConfig, scale_lr: bool, total_words: u64, n: usize) -> LrState {
+    let n = n.max(1);
+    let per_node = (total_words + n as u64 - 1) / n as u64;
+    if scale_lr {
+        LrState::dist_scaled(cfg.lr, cfg.lr_min_frac, per_node, n)
+    } else {
+        LrState::linear(cfg.lr, cfg.lr_min_frac, per_node)
+    }
+}
+
+/// One node's phase-1 training leg: reader, epoch/position accounting,
+/// RNG, arena pipeline and lr schedule.  Shared verbatim by the thread
+/// and TCP drivers so their training arithmetic cannot drift apart —
+/// the TCP↔thread bitwise-parity guarantee rests on this being the SAME
+/// code, not equivalent code.
+struct TrainLeg<'a> {
+    cfg: &'a TrainConfig,
+    source: &'a Corpus<'a>,
+    shard: Shard,
+    subsampler: &'a Subsampler,
+    backend: GemmBackend,
+    builder: BatchBuilder<'a>,
+    arena: SuperbatchArena,
+    sent: Vec<u32>,
+    reader: SourceReader<'a>,
+    rng: Xoshiro256ss,
+    lr: LrState,
+    epoch: usize,
+    /// Sentences consumed in the current epoch (checkpoint replay
+    /// position).
+    sentences_in_epoch: u64,
+    exhausted: bool,
+    /// Raw words read since the last lr advance.
+    raw_words: u64,
+    /// Cumulative raw words this node has processed.
+    words: u64,
+}
+
+impl<'a> TrainLeg<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        cfg: &'a TrainConfig,
+        source: &'a Corpus<'a>,
+        shard: Shard,
+        sampler: &'a UnigramSampler,
+        subsampler: &'a Subsampler,
+        lr: LrState,
+        idx: usize,
+    ) -> anyhow::Result<Self> {
+        let backend = GemmBackend::new(cfg.dim, cfg.batch, cfg.samples())
+            .with_sigmoid(cfg.sigmoid_mode)
+            .with_kernel(cfg.kernel);
+        let rng = Xoshiro256ss::new(cfg.seed ^ (idx as u64 * 0x5D1_77F + 13));
+        let builder = BatchBuilder::new(sampler, cfg.window, cfg.batch, cfg.negative);
+        // Sentence-slack sizing: same overshoot bound as the
+        // shared-memory trainer (fill_arena appends whole sentences).
+        let arena =
+            SuperbatchArena::with_sentence_slack(cfg.superbatch, cfg.batch, cfg.samples());
+        let reader = source.open_range(shard.start, shard.end)?;
+        Ok(Self {
+            cfg,
+            source,
+            shard,
+            subsampler,
+            backend,
+            builder,
+            arena,
+            sent: Vec::with_capacity(MAX_SENTENCE_LEN),
+            reader,
+            rng,
+            lr,
+            epoch: 0,
+            sentences_in_epoch: 0,
+            exhausted: false,
+            raw_words: 0,
+            words: 0,
+        })
+    }
+
+    fn advance_lr(&mut self) -> f32 {
+        let lr = self.lr.advance(self.raw_words);
+        self.words += self.raw_words;
+        self.raw_words = 0;
+        lr
+    }
+
+    /// Train ~`interval` raw corpus words (whole sentences) into
+    /// `model`.  On shard×epochs exhaustion, flushes the tail and marks
+    /// the leg exhausted; subsequent calls are no-ops.
+    fn train_chunk(
+        &mut self,
+        interval: u64,
+        model: &SharedModel,
+        outbox: &mut Option<Outbox<'_>>,
+    ) -> anyhow::Result<()> {
+        let mut processed = 0u64;
+        while !self.exhausted && processed < interval {
+            match self.reader.next_sentence_into(&mut self.sent)? {
+                false => {
+                    self.epoch += 1;
+                    self.sentences_in_epoch = 0;
+                    if self.epoch >= self.cfg.epochs {
+                        self.exhausted = true;
+                        break;
+                    }
+                    self.reader = self.source.open_range(self.shard.start, self.shard.end)?;
+                    continue;
+                }
+                true => {}
+            }
+            self.sentences_in_epoch += 1;
+            processed += self.sent.len() as u64;
+            self.raw_words += self.sent.len() as u64;
+            self.subsampler.filter(&mut self.sent, &mut self.rng);
+            match outbox.as_mut() {
+                None => self
+                    .builder
+                    .fill_arena(&self.sent, &mut self.rng, &mut self.arena),
+                Some(ob) => {
+                    let mut sink = RouteSink::new(&mut self.arena, ob);
+                    self.builder
+                        .fill_arena_routed(&self.sent, &mut self.rng, &mut sink);
+                }
+            }
+            if self.arena.len() >= self.cfg.superbatch {
+                let lr = self.advance_lr();
+                self.backend.process_arena(model.store(), &self.arena, lr)?;
+                self.arena.clear();
+            }
+        }
+        if self.exhausted {
+            self.flush_partial(model)?;
+        }
+        Ok(())
+    }
+
+    /// Process whatever sits in the arena and account pending words.
+    /// Called on exhaustion and before every checkpoint (the flush is
+    /// part of the deterministic round schedule).
+    fn flush_partial(&mut self, model: &SharedModel) -> anyhow::Result<()> {
+        if !self.arena.is_empty() {
+            let lr = self.advance_lr();
+            self.backend.process_arena(model.store(), &self.arena, lr)?;
+            self.arena.clear();
+        } else if self.raw_words > 0 {
+            self.advance_lr();
+        }
+        Ok(())
+    }
+
+    /// Restore the leg to a checkpointed position: epoch, reader
+    /// position (sentences are SKIPPED without consuming trainer RNG —
+    /// reading touches no randomness), RNG state and lr progress.
+    fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        self.epoch = ck.epoch as usize;
+        self.exhausted = self.epoch >= self.cfg.epochs;
+        self.rng = Xoshiro256ss::from_state(ck.rng);
+        self.lr.restore(ck.lr_words);
+        self.words = ck.words_done;
+        self.raw_words = 0;
+        self.sentences_in_epoch = 0;
+        self.arena.clear();
+        if !self.exhausted {
+            self.reader = self.source.open_range(self.shard.start, self.shard.end)?;
+            for i in 0..ck.sentences_in_epoch {
+                anyhow::ensure!(
+                    self.reader.next_sentence_into(&mut self.sent)?,
+                    "checkpoint reader position {i}/{} is beyond the shard \
+                     (corpus changed since the checkpoint?)",
+                    ck.sentences_in_epoch
+                );
+            }
+            self.sentences_in_epoch = ck.sentences_in_epoch;
+        }
+        Ok(())
+    }
 }
 
 /// Train `dist.nodes` model replicas over shards of `corpus` with
@@ -84,11 +323,6 @@ pub fn train_distributed(
     let sampler = UnigramSampler::alias(vocab, cfg.unigram_power);
     let subsampler = Subsampler::new(vocab, cfg.sample);
     let total_words = vocab.total_words() * cfg.epochs as u64;
-    let lr_state = if dist.scale_lr {
-        LrState::dist_scaled(cfg.lr, cfg.lr_min_frac, total_words, n)
-    } else {
-        LrState::linear(cfg.lr, cfg.lr_min_frac, total_words)
-    };
     // Same ingest policy as the shared-memory trainer: the encoded-cache
     // backends shard over text-byte geometry, so node shards are
     // identical across `--corpus-cache` modes.
@@ -110,26 +344,21 @@ pub fn train_distributed(
         })
         .collect();
 
-    let barrier = Barrier::new(n);
+    let barrier = AbortBarrier::new(n);
     let done_nodes = AtomicUsize::new(0);
-    let words_done = AtomicUsize::new(0);
     let start = Instant::now();
 
-    let stats: Vec<SyncStats> = std::thread::scope(
-        |scope| -> anyhow::Result<Vec<SyncStats>> {
+    let results: Vec<std::thread::Result<anyhow::Result<(SyncStats, u64)>>> =
+        std::thread::scope(|scope| {
             let mut handles = Vec::new();
             for (idx, shard) in shards.iter().enumerate() {
-                let (models, barrier, done_nodes, words_done, lr_state) = (
-                    &models[..],
-                    &barrier,
-                    &done_nodes,
-                    &words_done,
-                    &lr_state,
-                );
+                let (models, barrier, done_nodes) = (&models[..], &barrier, &done_nodes);
                 let (sampler, subsampler) = (&sampler, &subsampler);
                 let source = &source;
                 let policy = dist.policy.clone();
                 let topo = topo.as_ref();
+                let fault = dist.fault;
+                let scale_lr = dist.scale_lr;
                 handles.push(scope.spawn(move || {
                     node_loop(NodeCtx {
                         cfg,
@@ -142,24 +371,49 @@ pub fn train_distributed(
                         models,
                         barrier,
                         done_nodes,
-                        words_done,
-                        lr_state,
                         sampler,
                         subsampler,
                         topo,
+                        fault,
+                        scale_lr,
+                        total_words,
                     })
                 }));
             }
-            let mut stats = Vec::with_capacity(n);
-            for h in handles {
-                stats.push(
-                    h.join()
-                        .map_err(|_| anyhow::anyhow!("node thread panicked"))??,
-                );
+            handles.into_iter().map(|h| h.join()).collect()
+        });
+
+    // Prefer the ROOT CAUSE: a node's own error or panic over the
+    // poison echoes every released peer reports.
+    let mut stats = Vec::with_capacity(n);
+    let mut words = 0u64;
+    let (mut root, mut poison) = (None, None);
+    let mut panicked = false;
+    for r in results {
+        match r {
+            Err(_) => panicked = true,
+            Ok(Ok((st, w))) => {
+                stats.push(st);
+                words += w;
             }
-            Ok(stats)
-        },
-    )?;
+            Ok(Err(e)) => {
+                if e.downcast_ref::<Poisoned>().is_some() {
+                    poison.get_or_insert(e);
+                } else {
+                    root.get_or_insert(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = root {
+        return Err(e);
+    }
+    if panicked {
+        anyhow::bail!("a replica thread panicked (see stderr); run aborted");
+    }
+    if let Some(e) = poison {
+        return Err(e);
+    }
 
     // Final full merge: one full-model averaging round (same collective
     // as the per-round sync), then replica 0 is the merged model.
@@ -172,9 +426,10 @@ pub fn train_distributed(
 
     Ok(DistOutcome {
         model: models.swap_remove(0),
-        words: words_done.load(Ordering::Relaxed) as u64,
+        words,
         secs: start.elapsed().as_secs_f64(),
         sync_stats: stats,
+        net: None,
     })
 }
 
@@ -188,18 +443,29 @@ struct NodeCtx<'a> {
     source: &'a Corpus<'a>,
     vocab: &'a Vocab,
     models: &'a [SharedModel],
-    barrier: &'a Barrier,
+    barrier: &'a AbortBarrier,
     done_nodes: &'a AtomicUsize,
-    words_done: &'a AtomicUsize,
-    lr_state: &'a LrState,
     sampler: &'a UnigramSampler,
     subsampler: &'a Subsampler,
     /// `Some` = NUMA mode: pin this node thread and first-touch its
     /// replica before training.
     topo: Option<&'a Topology>,
+    fault: Option<FaultSpec>,
+    scale_lr: bool,
+    total_words: u64,
 }
 
-fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
+fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<(SyncStats, u64)> {
+    // Poison the barrier on ANY unclean exit — `?`-errors and panics
+    // both — so peers blocked in `wait()` fail fast instead of hanging
+    // (the PR-5 `ProducerGuard` discipline).
+    let guard = ctx.barrier.guard(&format!("replica {}", ctx.idx));
+    let out = node_loop_inner(&ctx)?;
+    guard.disarm();
+    Ok(out)
+}
+
+fn node_loop_inner(ctx: &NodeCtx<'_>) -> anyhow::Result<(SyncStats, u64)> {
     let cfg = ctx.cfg;
     let n = ctx.models.len();
     let model = &ctx.models[ctx.idx];
@@ -216,13 +482,16 @@ fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
         set_access_node(Some(ctx.idx % t.nodes()));
         model.first_touch_init(cfg.seed);
     }
-    let mut backend = GemmBackend::new(cfg.dim, cfg.batch, cfg.samples())
-        .with_sigmoid(cfg.sigmoid_mode)
-        .with_kernel(cfg.kernel);
-    let mut rng =
-        Xoshiro256ss::new(cfg.seed ^ (ctx.idx as u64 * 0x5D1_77F + 13));
-    let builder =
-        BatchBuilder::new(ctx.sampler, cfg.window, cfg.batch, cfg.negative);
+    let lr = node_lr_state(cfg, ctx.scale_lr, ctx.total_words, n);
+    let mut leg = TrainLeg::new(
+        cfg,
+        ctx.source,
+        ctx.shard,
+        ctx.sampler,
+        ctx.subsampler,
+        lr,
+        ctx.idx,
+    )?;
     // `--route` on the replica driver: a replica is ONE pinned worker
     // over ONE node-local model, so ownership routing collapses to the
     // local path by construction — the router classifies every window
@@ -237,98 +506,23 @@ fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
         )
     });
     let mut outbox = routed.as_ref().map(|(r, e)| Outbox::new(e, r, 0));
-    // Sentence-slack sizing: same overshoot bound as the shared-memory
-    // trainer (fill_arena appends whole sentences).
-    let mut arena = SuperbatchArena::with_sentence_slack(
-        cfg.superbatch,
-        cfg.batch,
-        cfg.samples(),
-    );
-    let mut sent: Vec<u32> = Vec::with_capacity(MAX_SENTENCE_LEN);
     let mut scratch = vec![0.0f32; cfg.dim];
     let mut stats = SyncStats::default();
-
-    let mut reader = ctx.source.open_range(ctx.shard.start, ctx.shard.end)?;
-    let mut epoch = 0usize;
-    let mut exhausted = false;
     let mut signalled_done = false;
-    let mut raw_words = 0u64;
     let mut round: u32 = 1;
-    // A node that fails must KEEP joining barriers (acting exhausted) or
-    // the other N-1 nodes deadlock in `Barrier::wait`; the error is held
-    // here and returned once the whole group stops.
-    let mut failure: Option<anyhow::Error> = None;
 
     loop {
         // Phase 1: train ~sync_interval words of this node's shard.
-        let mut processed = 0u64;
-        while !exhausted && processed < ctx.dist_interval {
-            match reader.next_sentence_into(&mut sent) {
-                Err(e) => {
-                    failure = Some(e);
-                    exhausted = true;
-                    break;
-                }
-                Ok(false) => {
-                    epoch += 1;
-                    if epoch >= cfg.epochs {
-                        exhausted = true;
-                        break;
-                    }
-                    match ctx.source.open_range(ctx.shard.start, ctx.shard.end)
-                    {
-                        Ok(r) => reader = r,
-                        Err(e) => {
-                            failure = Some(e);
-                            exhausted = true;
-                            break;
-                        }
-                    }
-                    continue;
-                }
-                Ok(true) => {}
-            }
-            processed += sent.len() as u64;
-            raw_words += sent.len() as u64;
-            ctx.subsampler.filter(&mut sent, &mut rng);
-            match outbox.as_mut() {
-                None => builder.fill_arena(&sent, &mut rng, &mut arena),
-                Some(ob) => {
-                    let mut sink = RouteSink::new(&mut arena, ob);
-                    builder.fill_arena_routed(&sent, &mut rng, &mut sink);
-                }
-            }
-            if arena.len() >= cfg.superbatch {
-                let lr = ctx.lr_state.advance(raw_words);
-                ctx.words_done
-                    .fetch_add(raw_words as usize, Ordering::Relaxed);
-                raw_words = 0;
-                if let Err(e) = backend.process_arena(model.store(), &arena, lr) {
-                    failure = Some(e);
-                    exhausted = true;
-                }
-                arena.clear();
-                if exhausted {
-                    break;
-                }
+        leg.train_chunk(ctx.dist_interval, model, &mut outbox)?;
+        if let Some(f) = ctx.fault {
+            if f.panics_replica(ctx.idx) && round == 1 {
+                panic!(
+                    "PW2V_FAULT panic-replica={}: injected replica panic",
+                    ctx.idx
+                );
             }
         }
-        if exhausted && failure.is_none() && !arena.is_empty() {
-            let lr = ctx.lr_state.advance(raw_words);
-            ctx.words_done
-                .fetch_add(raw_words as usize, Ordering::Relaxed);
-            raw_words = 0;
-            if let Err(e) = backend.process_arena(model.store(), &arena, lr) {
-                failure = Some(e);
-            }
-            arena.clear();
-        } else if exhausted && raw_words > 0 {
-            ctx.lr_state.advance(raw_words);
-            ctx.words_done
-                .fetch_add(raw_words as usize, Ordering::Relaxed);
-            raw_words = 0;
-        }
-        if exhausted && !signalled_done {
+        if leg.exhausted && !signalled_done {
             ctx.done_nodes.fetch_add(1, Ordering::SeqCst);
             signalled_done = true;
         }
@@ -336,7 +530,7 @@ fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
         // Phase 2: uniform stop decision.  The barrier orders every
         // node's `done_nodes` update before every node's read, so all
         // replicas take the same branch.
-        ctx.barrier.wait();
+        ctx.barrier.wait()?;
         if ctx.done_nodes.load(Ordering::SeqCst) == n {
             break;
         }
@@ -358,13 +552,249 @@ fn node_loop(ctx: NodeCtx<'_>) -> anyhow::Result<SyncStats> {
         // Ring allreduce wire cost per node: 2·(N-1)/N × payload.
         let payload = 2 * due_rows * cfg.dim as u64 * 4;
         stats.wire_bytes += 2 * payload * (n as u64 - 1) / n as u64;
-        ctx.barrier.wait();
+        ctx.barrier.wait()?;
         round += 1;
     }
-    match failure {
-        Some(e) => Err(e),
-        None => Ok(stats),
+    Ok((stats, leg.words))
+}
+
+/// Train this process's replica as rank `spec.rank` of a TCP ring,
+/// binding the listener from the spec (see [`train_tcp_ring_on`]).
+#[allow(clippy::too_many_arguments)]
+pub fn train_tcp_ring(
+    cfg: &TrainConfig,
+    dist: &DistConfig,
+    spec: &RingSpec,
+    net: &NetConfig,
+    ckpt: &CheckpointPolicy,
+    corpus: &Path,
+    vocab: &Vocab,
+) -> anyhow::Result<DistOutcome> {
+    train_tcp_ring_on(None, cfg, dist, spec, net, ckpt, corpus, vocab)
+}
+
+/// [`train_tcp_ring`] over an optionally pre-bound listener (tests bind
+/// `127.0.0.1:0` to learn ports before launching ranks).
+#[allow(clippy::too_many_arguments)]
+pub fn train_tcp_ring_on(
+    listener: Option<TcpListener>,
+    cfg: &TrainConfig,
+    dist: &DistConfig,
+    spec: &RingSpec,
+    net: &NetConfig,
+    ckpt: &CheckpointPolicy,
+    corpus: &Path,
+    vocab: &Vocab,
+) -> anyhow::Result<DistOutcome> {
+    cfg.validate()?;
+    anyhow::ensure!(dist.sync_interval >= 1, "sync_interval must be >= 1");
+    anyhow::ensure!(ckpt.every >= 1, "checkpoint interval must be >= 1");
+    anyhow::ensure!(
+        !ckpt.resume || ckpt.base.is_some(),
+        "--resume requires --checkpoint"
+    );
+    crate::linalg::simd::configure(cfg.simd)?;
+    let n = spec.nranks();
+    let rank = spec.rank;
+    // Ring-wide config guard: mixed flags across ranks are refused at
+    // Hello time, before any training traffic.
+    let fp = cfg.fingerprint() ^ vocab.fingerprint() ^ n as u64;
+
+    let sampler = UnigramSampler::alias(vocab, cfg.unigram_power);
+    let subsampler = Subsampler::new(vocab, cfg.sample);
+    let total_words = vocab.total_words() * cfg.epochs as u64;
+    let source = Corpus::open(corpus, vocab, &cfg.corpus_cache)?;
+    let shard = shards_for_len(source.shard_len(), n)[rank];
+
+    let mut ring = match listener {
+        Some(l) => Ring::establish_on(l, spec, net, fp)?,
+        None => Ring::establish(spec, net, fp)?,
+    };
+    let start = Instant::now();
+    let res = tcp_node_loop(
+        &mut ring,
+        cfg,
+        dist,
+        ckpt,
+        fp,
+        &source,
+        shard,
+        vocab,
+        &sampler,
+        &subsampler,
+        total_words,
+    );
+    match res {
+        Ok((model, words, stats)) => Ok(DistOutcome {
+            model,
+            words,
+            secs: start.elapsed().as_secs_f64(),
+            sync_stats: vec![stats],
+            net: Some(ring.stats()),
+        }),
+        Err(e) => {
+            // Propagate the failure around the ring so every survivor
+            // exits with a diagnostic instead of hanging in allreduce.
+            ring.abort(&format!("rank {rank}: {e:#}"));
+            Err(e.context(format!("rank {rank} failed")))
+        }
     }
+}
+
+/// Newest checkpoint with EXACTLY the negotiated round among a rank's
+/// two slots.
+fn checkpoint_at_round(base: &Path, rank: usize, round: u64) -> Option<Checkpoint> {
+    for slot in 0..2 {
+        if let Ok(ck) = model_io::load_checkpoint(model_io::checkpoint_slot_path(base, rank, slot))
+        {
+            if ck.round == round {
+                return Some(ck);
+            }
+        }
+    }
+    None
+}
+
+#[allow(clippy::too_many_arguments)]
+fn tcp_node_loop(
+    ring: &mut Ring,
+    cfg: &TrainConfig,
+    dist: &DistConfig,
+    ckpt: &CheckpointPolicy,
+    fp: u64,
+    source: &Corpus<'_>,
+    shard: Shard,
+    vocab: &Vocab,
+    sampler: &UnigramSampler,
+    subsampler: &Subsampler,
+    total_words: u64,
+) -> anyhow::Result<(SharedModel, u64, SyncStats)> {
+    let n = ring.nranks();
+    let rank = ring.rank();
+    let lr = node_lr_state(cfg, dist.scale_lr, total_words, n);
+    let mut leg = TrainLeg::new(cfg, source, shard, sampler, subsampler, lr, rank)?;
+    let mut round: u32 = 1;
+
+    let model = if ckpt.resume {
+        let base = ckpt.base.as_deref().expect("checked by caller");
+        // Negotiate the newest round EVERY rank can load.  Two slots
+        // always suffice: ranks checkpoint the same rounds, so the
+        // latest-round skew across a crash is at most one period, and
+        // the previous period is still on disk in the other slot.
+        let latest = model_io::latest_checkpoint(base, rank)
+            .map(|c| c.round)
+            .unwrap_or(0);
+        let all = ring.circulate_u64s(&[latest], 0)?;
+        let target = all.iter().map(|v| v[0]).min().unwrap_or(0);
+        anyhow::ensure!(
+            target > 0,
+            "resume requested but at least one rank has no loadable checkpoint \
+             (latest rounds per rank: {:?})",
+            all.iter().map(|v| v[0]).collect::<Vec<_>>()
+        );
+        let ck = checkpoint_at_round(base, rank, target).ok_or_else(|| {
+            anyhow::anyhow!(
+                "rank {rank}: no checkpoint at negotiated round {target} \
+                 (have latest {latest})"
+            )
+        })?;
+        anyhow::ensure!(
+            ck.fingerprint == fp,
+            "checkpoint was written under a different config/corpus \
+             (fingerprint mismatch) — refusing to resume"
+        );
+        anyhow::ensure!(
+            ck.rank as usize == rank && ck.nranks as usize == n,
+            "checkpoint is for rank {}/{} but this process is rank {rank}/{n}",
+            ck.rank,
+            ck.nranks
+        );
+        anyhow::ensure!(
+            ck.m_in.vocab() == vocab.len() && ck.m_in.dim() == cfg.dim,
+            "checkpoint model is {}x{}, expected {}x{}",
+            ck.m_in.vocab(),
+            ck.m_in.dim(),
+            vocab.len(),
+            cfg.dim
+        );
+        leg.restore(&ck)?;
+        round = u32::try_from(target)
+            .map_err(|_| anyhow::anyhow!("checkpoint round {target} out of range"))?
+            + 1;
+        SharedModel::new(ck.m_in, ck.m_out)
+    } else {
+        SharedModel::init(vocab.len(), cfg.dim, cfg.seed)
+    };
+
+    // Same routed-fill no-op as the thread driver (one worker, one
+    // replica) so the knob stays parity-exact across transports.
+    let routed = cfg.route.head_k(vocab).map(|head_k| {
+        (
+            RowRouter::new(ShardMap::contiguous(vocab.len(), 1), head_k),
+            Exchange::new(1, 1, 1, cfg.batch, cfg.samples()),
+        )
+    });
+    let mut outbox = routed.as_ref().map(|(r, e)| Outbox::new(e, r, 0));
+    let mut stats = SyncStats::default();
+
+    let words_global;
+    loop {
+        // Phase 1 — IDENTICAL code to thread mode (TrainLeg).
+        leg.train_chunk(dist.sync_interval, &model, &mut outbox)?;
+        let ck_due = ckpt.base.is_some() && round as u64 % ckpt.every == 0;
+        if ck_due {
+            // Deterministic flush: checkpointed state never carries a
+            // partial arena, and the flush is part of the schedule, so
+            // any two runs with the same checkpoint cadence stay
+            // bitwise-identical (crashed+resumed or not).
+            leg.flush_partial(&model)?;
+        }
+
+        // Phase 2 — stop decision: circulate (done, words).
+        let st = ring.circulate_u64s(&[leg.exhausted as u64, leg.words], round)?;
+        if st.iter().all(|v| v[0] == 1) {
+            words_global = st.iter().map(|v| v[1]).sum();
+            break;
+        }
+
+        // Phase 3 — the round's allreduce.
+        let due = dist.policy.rows_due(vocab.len(), round);
+        ring.allreduce_rows(&model, &due, round)?;
+        let due_rows: u64 = due.iter().map(|r| r.len() as u64).sum();
+        stats.rounds += 1;
+        stats.rows_synced += 2 * due_rows;
+        stats.wire_bytes += gather_scatter_wire_bytes(&due, n, rank, cfg.dim);
+
+        if ck_due {
+            let base = ckpt.base.as_deref().expect("ck_due implies base");
+            let slot = ((round as u64 / ckpt.every) % 2) as usize;
+            let snapshot = Checkpoint {
+                rank: rank as u32,
+                nranks: n as u32,
+                round: round as u64,
+                epoch: leg.epoch as u32,
+                sentences_in_epoch: leg.sentences_in_epoch,
+                words_done: leg.words,
+                lr_words: leg.lr.words_done(),
+                rng: leg.rng.state(),
+                fingerprint: fp,
+                m_in: model.m_in().clone(),
+                m_out: model.m_out().clone(),
+            };
+            model_io::save_checkpoint(
+                model_io::checkpoint_slot_path(base, rank, slot),
+                &snapshot,
+            )?;
+        }
+        round += 1;
+    }
+
+    // Final full merge: every rank ends with the same merged model,
+    // bitwise equal to thread mode's merged replica 0.
+    if n > 1 && vocab.len() > 0 {
+        ring.allreduce_rows(&model, &[0..vocab.len() as u32], round)?;
+    }
+    Ok((model, words_global, stats))
 }
 
 #[cfg(test)]
@@ -386,6 +816,51 @@ mod tests {
         (path, vocab)
     }
 
+    /// Run an n-rank loopback ring in-process: one thread per rank,
+    /// ports learned by binding `127.0.0.1:0` first.
+    fn run_ring(
+        n: usize,
+        cfg: &TrainConfig,
+        dist: &DistConfig,
+        ckpt: &CheckpointPolicy,
+        path: &std::path::Path,
+        vocab: &Vocab,
+    ) -> Vec<anyhow::Result<DistOutcome>> {
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let addrs: Vec<String> = listeners
+            .iter()
+            .map(|l| format!("127.0.0.1:{}", l.local_addr().unwrap().port()))
+            .collect();
+        let net = NetConfig {
+            connect_timeout_ms: 10_000,
+            io_timeout_ms: 10_000,
+            heartbeat_ms: 50,
+        };
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (rank, l) in listeners.into_iter().enumerate() {
+                let addrs = addrs.clone();
+                let (cfg, dist, ckpt) = (cfg.clone(), dist.clone(), ckpt.clone());
+                handles.push(scope.spawn(move || {
+                    let spec = RingSpec { rank, addrs };
+                    train_tcp_ring_on(
+                        Some(l),
+                        &cfg,
+                        &dist,
+                        &spec,
+                        &net,
+                        &ckpt,
+                        path,
+                        vocab,
+                    )
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
     #[test]
     fn replicas_train_and_account_traffic() {
         let (path, vocab) = tiny_corpus(41);
@@ -396,6 +871,7 @@ mod tests {
         dist.policy = SyncPolicy::submodel_for_vocab(vocab.len());
         let out = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
         assert_eq!(out.sync_stats.len(), 3);
+        assert!(out.net.is_none());
         // Every node joined the same number of rounds.
         let r0 = out.sync_stats[0].rounds;
         assert!(r0 >= 1, "no sync rounds at interval 4k over 40k words");
@@ -424,6 +900,23 @@ mod tests {
         let out = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
         assert_eq!(out.words, vocab.total_words());
         assert_eq!(out.sync_stats[0].wire_bytes, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Per-node lr schedules make the whole thread-mode run a pure
+    /// function of (config, corpus): two runs are bitwise identical.
+    #[test]
+    fn thread_mode_is_deterministic_run_to_run() {
+        let (path, vocab) = tiny_corpus(67);
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        let mut dist = DistConfig::for_nodes(3);
+        dist.sync_interval = 4_000;
+        let a = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+        let b = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+        assert_eq!(a.words, b.words);
+        assert_eq!(a.model.m_in().data(), b.model.m_in().data());
+        assert_eq!(a.model.m_out().data(), b.model.m_out().data());
         std::fs::remove_file(&path).ok();
     }
 
@@ -499,6 +992,165 @@ mod tests {
         let out = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
         assert!(out.sync_stats[0].rounds > 5);
         assert_eq!(out.words, 2 * vocab.total_words());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The replica-panic deadlock fix: a panicking replica poisons the
+    /// barrier, peers fail fast, and the driver reports the panic — the
+    /// whole run errors out instead of hanging tier-1 forever.
+    #[test]
+    fn panicking_replica_fails_fast_instead_of_hanging() {
+        let (path, vocab) = tiny_corpus(71);
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        let mut dist = DistConfig::for_nodes(3);
+        dist.sync_interval = 4_000;
+        dist.fault = Some(FaultSpec::PanicReplica(1));
+        let t0 = Instant::now();
+        let err = train_distributed(&cfg, &dist, &path, &vocab).unwrap_err();
+        assert!(
+            t0.elapsed().as_secs() < 60,
+            "fail-fast took {:?}",
+            t0.elapsed()
+        );
+        assert!(
+            format!("{err:#}").contains("panicked"),
+            "unexpected error: {err:#}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// THE acceptance criterion: a loopback TCP ring under full sync
+    /// produces bitwise-identical embeddings to thread mode.
+    #[test]
+    fn tcp_ring_matches_thread_mode_bitwise() {
+        let (path, vocab) = tiny_corpus(73);
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        let mut dist = DistConfig::for_nodes(3);
+        dist.sync_interval = 4_000;
+        dist.policy = SyncPolicy::Full;
+        let threads = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+        let outs = run_ring(3, &cfg, &dist, &CheckpointPolicy::disabled(), &path, &vocab);
+        for (rank, out) in outs.into_iter().enumerate() {
+            let out = out.unwrap();
+            assert_eq!(out.words, threads.words, "rank {rank} words");
+            assert_eq!(
+                out.model.m_in().data(),
+                threads.model.m_in().data(),
+                "rank {rank} M_in differs from thread mode"
+            );
+            assert_eq!(
+                out.model.m_out().data(),
+                threads.model.m_out().data(),
+                "rank {rank} M_out differs from thread mode"
+            );
+            let net = out.net.expect("tcp mode reports net stats");
+            assert!(net.frames_sent > 0 && net.bytes_sent > 0);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Sub-model policy parity too: the rotating cold-tail slices pick
+    /// the same rows on both transports (same round numbering).
+    #[test]
+    fn tcp_ring_matches_thread_mode_under_submodel_policy() {
+        let (path, vocab) = tiny_corpus(79);
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        let mut dist = DistConfig::for_nodes(2);
+        dist.sync_interval = 6_000;
+        dist.policy = SyncPolicy::submodel_for_vocab(vocab.len());
+        let threads = train_distributed(&cfg, &dist, &path, &vocab).unwrap();
+        let outs = run_ring(2, &cfg, &dist, &CheckpointPolicy::disabled(), &path, &vocab);
+        for out in outs {
+            let out = out.unwrap();
+            assert_eq!(out.model.m_in().data(), threads.model.m_in().data());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The resume parity guarantee: run A checkpoints and completes;
+    /// run B resumes from A's mid-run checkpoints and must land on the
+    /// SAME final model, bit for bit.
+    #[test]
+    fn tcp_checkpoint_resume_is_bitwise() {
+        let (path, vocab) = tiny_corpus(83);
+        let base = std::env::temp_dir().join(format!(
+            "pw2v_ck_resume_{}",
+            std::process::id()
+        ));
+        for rank in 0..3 {
+            for slot in 0..2 {
+                std::fs::remove_file(model_io::checkpoint_slot_path(&base, rank, slot)).ok();
+            }
+        }
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        let mut dist = DistConfig::for_nodes(3);
+        dist.sync_interval = 3_000;
+        dist.policy = SyncPolicy::Full;
+        let ckpt = CheckpointPolicy {
+            base: Some(base.clone()),
+            every: 2,
+            resume: false,
+        };
+        let full: Vec<DistOutcome> = run_ring(3, &cfg, &dist, &ckpt, &path, &vocab)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        // Checkpoints must exist (≥ 2 rounds ran) and be loadable.
+        let ck = model_io::latest_checkpoint(&base, 0).expect("checkpoint written");
+        assert!(ck.round >= 2);
+
+        let resume = CheckpointPolicy {
+            base: Some(base.clone()),
+            every: 2,
+            resume: true,
+        };
+        let resumed: Vec<DistOutcome> = run_ring(3, &cfg, &dist, &resume, &path, &vocab)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        assert_eq!(resumed[0].words, full[0].words);
+        assert_eq!(
+            resumed[0].model.m_in().data(),
+            full[0].model.m_in().data(),
+            "resumed run diverged from the uninterrupted run"
+        );
+        assert_eq!(
+            resumed[0].model.m_out().data(),
+            full[0].model.m_out().data()
+        );
+        for rank in 0..3 {
+            for slot in 0..2 {
+                std::fs::remove_file(model_io::checkpoint_slot_path(&base, rank, slot)).ok();
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_without_checkpoints_is_refused() {
+        let (path, vocab) = tiny_corpus(89);
+        let base = std::env::temp_dir().join(format!(
+            "pw2v_ck_missing_{}",
+            std::process::id()
+        ));
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        let mut dist = DistConfig::for_nodes(2);
+        dist.sync_interval = 5_000;
+        let ckpt = CheckpointPolicy {
+            base: Some(base.clone()),
+            every: 2,
+            resume: true,
+        };
+        let outs = run_ring(2, &cfg, &dist, &ckpt, &path, &vocab);
+        for out in outs {
+            let err = format!("{:#}", out.unwrap_err());
+            assert!(err.contains("no loadable checkpoint"), "{err}");
+        }
         std::fs::remove_file(&path).ok();
     }
 }

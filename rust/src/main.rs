@@ -13,7 +13,10 @@ use std::path::PathBuf;
 use pw2v::config::TrainConfig;
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
 use pw2v::corpus::vocab::Vocab;
-use pw2v::dist::{train_distributed, DistConfig, SyncPolicy};
+use pw2v::dist::{
+    train_distributed, train_tcp_ring, CheckpointPolicy, DistConfig, FaultSpec, NetConfig,
+    RingSpec, SyncPolicy,
+};
 use pw2v::eval;
 use pw2v::model::{io as model_io, SharedModel};
 use pw2v::perfmodel::{self, simulate};
@@ -68,12 +71,24 @@ USAGE: pw2v <subcommand> [--key value ...]
   train-dist  --corpus corpus.txt --nodes N [--sync-interval W --policy sub|full]
               [--numa off|auto|NODES --route off|owner|head=K
                --out vectors.txt]
+              [--dist threads|tcp:RANK@ADDR0,ADDR1,...]
+              [--checkpoint BASE --checkpoint-every ROUNDS --resume]
+              [--net-timeout-ms MS --heartbeat-ms MS --connect-timeout-ms MS]
               (--numa auto pins each replica to a NUMA node and
                first-touches it there — one replica per socket keeps
                training traffic node-local; --route is accepted for
                config parity but is a no-op here: each replica is one
                worker, so every window already processes on its home
-               node)
+               node.
+               --dist tcp:... runs THIS process as one rank of a TCP
+               ring — launch one process per address, each with its own
+               rank; --nodes is implied by the address list.  Full-sync
+               rings are bitwise-identical to thread mode.  --checkpoint
+               writes two-slot crash-consistent snapshots at BASE.rankK.{a,b}
+               every ROUNDS sync rounds; --resume continues from the
+               newest round every rank can load.  PW2V_FAULT injects
+               deterministic faults (kill-after=N | torn-frame=N |
+               stall-after=N | panic-replica=I) for the fault suite)
   eval        --vectors vectors.txt [--simset sim.tsv] [--anaset ana.txt]
   simulate    --figure 3|4 [--machine bdw|knl|hsw]
   info        [--artifacts-dir artifacts]
@@ -161,10 +176,29 @@ fn cmd_train(a: &Args) -> anyhow::Result<()> {
 
 fn cmd_train_dist(a: &Args) -> anyhow::Result<()> {
     let corpus = PathBuf::from(a.required::<String>("corpus")?);
-    let nodes: usize = a.get("nodes", 2)?;
     let out: Option<String> = a.opt("out")?;
     let mut cfg = TrainConfig::default();
     cfg.apply_args(a)?;
+
+    // Transport: in-process replica threads (default) or one rank of a
+    // multi-process TCP ring.
+    let transport: String = a.get("dist", "threads".to_string())?;
+    let ring = match transport.as_str() {
+        "threads" => None,
+        spec if spec.starts_with("tcp:") => Some(RingSpec::parse(spec)?),
+        other => anyhow::bail!("unknown transport '{other}' (threads|tcp:RANK@ADDRS)"),
+    };
+    let nodes: usize = match &ring {
+        Some(r) => {
+            anyhow::ensure!(
+                a.opt::<usize>("nodes")?.map_or(true, |n| n == r.nranks()),
+                "--nodes disagrees with the tcp ring's address count"
+            );
+            r.nranks()
+        }
+        None => a.get("nodes", 2)?,
+    };
+
     let mut dist = DistConfig::for_nodes(nodes);
     dist.sync_interval = a.get("sync-interval", dist.sync_interval)?;
     match a.opt::<String>("policy")?.as_deref() {
@@ -175,19 +209,54 @@ fn cmd_train_dist(a: &Args) -> anyhow::Result<()> {
     if a.flag("no-lr-scaling") {
         dist.scale_lr = false;
     }
+    // Thread-mode fault injection (TCP wire faults are read from the
+    // environment by the transport itself).
+    dist.fault = FaultSpec::from_env()
+        .map_err(|e| anyhow::anyhow!("PW2V_FAULT: {e:#}"))?;
+
+    let defaults = NetConfig::default();
+    let net = NetConfig {
+        connect_timeout_ms: a.get("connect-timeout-ms", defaults.connect_timeout_ms)?,
+        io_timeout_ms: a.get("net-timeout-ms", defaults.io_timeout_ms)?,
+        heartbeat_ms: a.get("heartbeat-ms", defaults.heartbeat_ms)?,
+    };
+    let ckpt = CheckpointPolicy {
+        base: a.opt::<String>("checkpoint")?.map(PathBuf::from),
+        every: a.get("checkpoint-every", 8u64)?,
+        resume: a.flag("resume"),
+    };
     a.check_unknown()?;
 
     let vocab = Vocab::build_from_file(&corpus, cfg.min_count)?;
-    eprintln!(
-        "distributed training: {} nodes, sync every {} words, vocab {}, \
-         numa={} route={}",
-        nodes,
-        dist.sync_interval,
-        vocab.len(),
-        cfg.numa,
-        cfg.route
-    );
-    let outcome = train_distributed(&cfg, &dist, &corpus, &vocab)?;
+    let outcome = match &ring {
+        None => {
+            eprintln!(
+                "distributed training: {} replica threads, sync every {} words, \
+                 vocab {}, numa={} route={}",
+                nodes,
+                dist.sync_interval,
+                vocab.len(),
+                cfg.numa,
+                cfg.route
+            );
+            train_distributed(&cfg, &dist, &corpus, &vocab)?
+        }
+        Some(spec) => {
+            eprintln!(
+                "distributed training: rank {}/{} on tcp ring, sync every {} \
+                 words, vocab {}, checkpoint={}",
+                spec.rank,
+                nodes,
+                dist.sync_interval,
+                vocab.len(),
+                ckpt.base
+                    .as_deref()
+                    .map(|p| p.display().to_string())
+                    .unwrap_or_else(|| "off".into()),
+            );
+            train_tcp_ring(&cfg, &dist, spec, &net, &ckpt, &corpus, &vocab)?
+        }
+    };
     eprintln!(
         "done: {} words in {:.1}s = {} words/sec aggregate",
         outcome.words,
@@ -200,6 +269,18 @@ fn cmd_train_dist(a: &Args) -> anyhow::Result<()> {
             st.rounds,
             st.rows_synced,
             si(st.wire_bytes as f64)
+        );
+    }
+    if let Some(n) = &outcome.net {
+        eprintln!(
+            "  ring: {} frames / {} bytes sent ({} slice bytes), \
+             {} frames / {} bytes recv, {} heartbeats",
+            n.frames_sent,
+            si(n.bytes_sent as f64),
+            si(n.slice_bytes_sent as f64),
+            n.frames_recv,
+            si(n.bytes_recv as f64),
+            n.heartbeats_sent
         );
     }
     if let Some(p) = out {

@@ -1,15 +1,50 @@
-//! word2vec vector-file persistence, both classic formats:
+//! Model persistence.
+//!
+//! Vector files, both classic word2vec formats (interoperable with
+//! gensim / the original distribution's tools):
 //!
 //! * text:   header `V D\n`, then `word v1 v2 ... vD\n` per word;
 //! * binary: header `V D\n`, then `word<SPACE>` + D little-endian f32s.
 //!
-//! Interoperable with gensim / the original distribution's tools.
+//! Plus crash-consistent training CHECKPOINTS for the distributed
+//! drivers: a binary snapshot of one rank's full replica (both model
+//! matrices) and every piece of mutable trainer state needed to resume
+//! the run bit-for-bit — sync round, epoch, reader position, learning-
+//! rate progress and RNG state — sealed with an FNV-1a trailer.
+//!
+//! All writes here go through [`atomic_write`]: bytes land in
+//! `<path>.tmp`, are fsync'd, and the tmp is renamed over the target
+//! (the PR-3 corpus-cache discipline).  A crash mid-save leaves the
+//! previous file intact; a reader never observes a half-written one.
 
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use super::embedding::Embedding;
 use crate::corpus::vocab::Vocab;
+use crate::util::fnv::Fnv1a;
+
+/// Write `path` atomically: `write` fills a buffered writer aimed at
+/// `<path>.tmp`; on success the tmp is flushed, fsync'd and renamed
+/// over `path`.  On any error the target is left untouched (the tmp
+/// may remain and is overwritten by the next attempt).
+pub fn atomic_write<P: AsRef<Path>>(
+    path: P,
+    write: impl FnOnce(&mut BufWriter<std::fs::File>) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    let tmp = std::path::PathBuf::from(os);
+    let mut w = BufWriter::with_capacity(1 << 20, std::fs::File::create(&tmp)?);
+    write(&mut w)?;
+    w.flush()?;
+    let f = w.into_inner().map_err(|e| e.into_error())?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
 
 /// Save `M_in` (the word vectors) in text format.
 pub fn save_text<P: AsRef<Path>>(
@@ -18,17 +53,17 @@ pub fn save_text<P: AsRef<Path>>(
     emb: &Embedding,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(vocab.len() == emb.vocab(), "vocab/matrix size mismatch");
-    let mut w = BufWriter::with_capacity(1 << 20, std::fs::File::create(path)?);
-    writeln!(w, "{} {}", vocab.len(), emb.dim())?;
-    for id in 0..vocab.len() as u32 {
-        write!(w, "{}", vocab.word(id))?;
-        for &x in emb.row(id) {
-            write!(w, " {x}")?;
+    atomic_write(path, |w| {
+        writeln!(w, "{} {}", vocab.len(), emb.dim())?;
+        for id in 0..vocab.len() as u32 {
+            write!(w, "{}", vocab.word(id))?;
+            for &x in emb.row(id) {
+                write!(w, " {x}")?;
+            }
+            writeln!(w)?;
         }
-        writeln!(w)?;
-    }
-    w.flush()?;
-    Ok(())
+        Ok(())
+    })
 }
 
 /// Save in binary format.
@@ -38,17 +73,17 @@ pub fn save_binary<P: AsRef<Path>>(
     emb: &Embedding,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(vocab.len() == emb.vocab(), "vocab/matrix size mismatch");
-    let mut w = BufWriter::with_capacity(1 << 20, std::fs::File::create(path)?);
-    writeln!(w, "{} {}", vocab.len(), emb.dim())?;
-    for id in 0..vocab.len() as u32 {
-        write!(w, "{} ", vocab.word(id))?;
-        for &x in emb.row(id) {
-            w.write_all(&x.to_le_bytes())?;
+    atomic_write(path, |w| {
+        writeln!(w, "{} {}", vocab.len(), emb.dim())?;
+        for id in 0..vocab.len() as u32 {
+            write!(w, "{} ", vocab.word(id))?;
+            for &x in emb.row(id) {
+                w.write_all(&x.to_le_bytes())?;
+            }
+            writeln!(w)?;
         }
-        writeln!(w)?;
-    }
-    w.flush()?;
-    Ok(())
+        Ok(())
+    })
 }
 
 /// Load a text-format vector file: returns `(words, matrix)`.
@@ -89,6 +124,10 @@ pub fn load_binary<P: AsRef<Path>>(
     let mut header = String::new();
     r.read_line(&mut header)?;
     let (v, d) = parse_header(&header)?;
+    anyhow::ensure!(
+        v > 0 && d > 0 && v < u32::MAX as usize && d <= 1 << 20,
+        "implausible header {v}x{d}"
+    );
     let mut words = Vec::with_capacity(v);
     let mut emb = Embedding::zeros(v, d);
     for i in 0..v {
@@ -96,22 +135,26 @@ pub fn load_binary<P: AsRef<Path>>(
         let mut word = Vec::new();
         loop {
             let mut b = [0u8; 1];
-            r.read_exact(&mut b)?;
+            r.read_exact(&mut b)
+                .map_err(|e| anyhow::anyhow!("truncated at row {i} word ({e})"))?;
             if b[0] == b' ' {
                 break;
             }
+            anyhow::ensure!(word.len() < 1 << 16, "unterminated word at row {i}");
             word.push(b[0]);
         }
         words.push(String::from_utf8(word)?);
         let row = emb.row_mut(i as u32);
         let mut buf = vec![0u8; 4 * d];
-        r.read_exact(&mut buf)?;
+        r.read_exact(&mut buf)
+            .map_err(|e| anyhow::anyhow!("truncated at row {i} vector ({e})"))?;
         for (j, slot) in row.iter_mut().enumerate() {
             *slot = f32::from_le_bytes(buf[4 * j..4 * j + 4].try_into().unwrap());
         }
         // trailing newline
         let mut nl = [0u8; 1];
-        r.read_exact(&mut nl)?;
+        r.read_exact(&mut nl)
+            .map_err(|e| anyhow::anyhow!("truncated at row {i} terminator ({e})"))?;
     }
     Ok((words, emb))
 }
@@ -121,12 +164,191 @@ fn parse_header(line: &str) -> anyhow::Result<(usize, usize)> {
     let v = it
         .next()
         .ok_or_else(|| anyhow::anyhow!("bad header"))?
-        .parse()?;
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad header: not a vector file? ({e})"))?;
     let d = it
         .next()
         .ok_or_else(|| anyhow::anyhow!("bad header"))?
-        .parse()?;
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad header: not a vector file? ({e})"))?;
     Ok((v, d))
+}
+
+// ---------------------------------------------------------------------------
+// Training checkpoints
+// ---------------------------------------------------------------------------
+
+const CK_MAGIC: [u8; 4] = *b"PWCK";
+const CK_VERSION: u16 = 1;
+
+/// One rank's resumable training snapshot.  Matrices hold `vocab × dim`
+/// values — rows are written unpadded, so the on-disk size is
+/// independent of the in-memory SIMD stride.
+pub struct Checkpoint {
+    pub rank: u32,
+    pub nranks: u32,
+    /// Sync rounds completed when this snapshot was taken (training
+    /// resumes at round `round`).
+    pub round: u64,
+    /// Epoch the corpus reader was in.
+    pub epoch: u32,
+    /// Sentences already consumed within that epoch (reader replay
+    /// position; replay skips sentences WITHOUT consuming trainer RNG).
+    pub sentences_in_epoch: u64,
+    /// Raw words this rank had processed (throughput accounting).
+    pub words_done: u64,
+    /// Learning-rate schedule progress (`LrState::words_done`).
+    pub lr_words: u64,
+    /// Trainer RNG state (`Xoshiro256ss::state`).
+    pub rng: [u64; 4],
+    /// `TrainConfig::fingerprint() ^ vocab.fingerprint() ^ nranks`; a
+    /// resume under different compute-shaping flags is rejected.
+    pub fingerprint: u64,
+    pub m_in: Embedding,
+    pub m_out: Embedding,
+}
+
+fn put(w: &mut impl Write, h: &mut Fnv1a, bytes: &[u8]) -> anyhow::Result<()> {
+    h.update(bytes);
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn take<const N: usize>(r: &mut impl Read, h: &mut Fnv1a) -> anyhow::Result<[u8; N]> {
+    let mut buf = [0u8; N];
+    r.read_exact(&mut buf)
+        .map_err(|e| anyhow::anyhow!("truncated checkpoint ({e})"))?;
+    h.update(&buf);
+    Ok(buf)
+}
+
+/// Save a checkpoint atomically (tmp + rename + fsync): a crash during
+/// the save leaves the previous checkpoint file valid.
+pub fn save_checkpoint<P: AsRef<Path>>(path: P, ck: &Checkpoint) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        ck.m_in.vocab() == ck.m_out.vocab() && ck.m_in.dim() == ck.m_out.dim(),
+        "checkpoint matrices disagree on shape"
+    );
+    atomic_write(path, |w| {
+        let mut h = Fnv1a::new();
+        put(w, &mut h, &CK_MAGIC)?;
+        put(w, &mut h, &CK_VERSION.to_le_bytes())?;
+        put(w, &mut h, &ck.rank.to_le_bytes())?;
+        put(w, &mut h, &ck.nranks.to_le_bytes())?;
+        put(w, &mut h, &ck.round.to_le_bytes())?;
+        put(w, &mut h, &ck.epoch.to_le_bytes())?;
+        put(w, &mut h, &ck.sentences_in_epoch.to_le_bytes())?;
+        put(w, &mut h, &ck.words_done.to_le_bytes())?;
+        put(w, &mut h, &ck.lr_words.to_le_bytes())?;
+        for s in ck.rng {
+            put(w, &mut h, &s.to_le_bytes())?;
+        }
+        put(w, &mut h, &ck.fingerprint.to_le_bytes())?;
+        put(w, &mut h, &(ck.m_in.vocab() as u64).to_le_bytes())?;
+        put(w, &mut h, &(ck.m_in.dim() as u64).to_le_bytes())?;
+        for emb in [&ck.m_in, &ck.m_out] {
+            for id in 0..emb.vocab() as u32 {
+                for &x in emb.row(id) {
+                    put(w, &mut h, &x.to_le_bytes())?;
+                }
+            }
+        }
+        w.write_all(&h.digest().to_le_bytes())?;
+        Ok(())
+    })
+}
+
+/// Load and verify a checkpoint.  Any truncation, bit-rot or wrong-file
+/// content fails the magic/version/shape checks or the FNV-1a trailer.
+pub fn load_checkpoint<P: AsRef<Path>>(path: P) -> anyhow::Result<Checkpoint> {
+    let f = std::fs::File::open(path.as_ref())?;
+    let mut r = BufReader::with_capacity(1 << 20, f);
+    let mut h = Fnv1a::new();
+    let magic: [u8; 4] = take(&mut r, &mut h)?;
+    anyhow::ensure!(magic == CK_MAGIC, "not a pw2v checkpoint (bad magic)");
+    let version = u16::from_le_bytes(take(&mut r, &mut h)?);
+    anyhow::ensure!(
+        version == CK_VERSION,
+        "checkpoint version {version} (expected {CK_VERSION})"
+    );
+    let rank = u32::from_le_bytes(take(&mut r, &mut h)?);
+    let nranks = u32::from_le_bytes(take(&mut r, &mut h)?);
+    let round = u64::from_le_bytes(take(&mut r, &mut h)?);
+    let epoch = u32::from_le_bytes(take(&mut r, &mut h)?);
+    let sentences_in_epoch = u64::from_le_bytes(take(&mut r, &mut h)?);
+    let words_done = u64::from_le_bytes(take(&mut r, &mut h)?);
+    let lr_words = u64::from_le_bytes(take(&mut r, &mut h)?);
+    let mut rng = [0u64; 4];
+    for s in &mut rng {
+        *s = u64::from_le_bytes(take(&mut r, &mut h)?);
+    }
+    let fingerprint = u64::from_le_bytes(take(&mut r, &mut h)?);
+    let vocab = u64::from_le_bytes(take(&mut r, &mut h)?) as usize;
+    let dim = u64::from_le_bytes(take(&mut r, &mut h)?) as usize;
+    anyhow::ensure!(
+        rank < nranks && vocab > 0 && dim > 0 && vocab < u32::MAX as usize && dim <= 1 << 20,
+        "implausible checkpoint header (rank {rank}/{nranks}, {vocab}x{dim})"
+    );
+    let mut m_in = Embedding::zeros(vocab, dim);
+    let mut m_out = Embedding::zeros(vocab, dim);
+    let mut buf = vec![0u8; 4 * dim];
+    for emb in [&mut m_in, &mut m_out] {
+        for id in 0..vocab as u32 {
+            r.read_exact(&mut buf)
+                .map_err(|e| anyhow::anyhow!("truncated checkpoint row {id} ({e})"))?;
+            h.update(&buf);
+            for (j, slot) in emb.row_mut(id).iter_mut().enumerate() {
+                *slot = f32::from_le_bytes(buf[4 * j..4 * j + 4].try_into().unwrap());
+            }
+        }
+    }
+    let want = h.digest();
+    let mut tail = [0u8; 8];
+    r.read_exact(&mut tail)
+        .map_err(|e| anyhow::anyhow!("truncated checkpoint trailer ({e})"))?;
+    let got = u64::from_le_bytes(tail);
+    anyhow::ensure!(
+        got == want,
+        "checkpoint checksum mismatch (corrupt or torn file)"
+    );
+    Ok(Checkpoint {
+        rank,
+        nranks,
+        round,
+        epoch,
+        sentences_in_epoch,
+        words_done,
+        lr_words,
+        rng,
+        fingerprint,
+        m_in,
+        m_out,
+    })
+}
+
+/// The two-slot checkpoint file name for `(rank, slot)`.
+///
+/// Writers alternate slots (`slot = (round / every) % 2`), so the
+/// previous checkpoint survives a crash mid-save of the next one
+/// untouched; resume picks the newest slot that loads cleanly.
+pub fn checkpoint_slot_path(base: &Path, rank: usize, slot: usize) -> std::path::PathBuf {
+    let mut os = base.as_os_str().to_os_string();
+    os.push(format!(".rank{rank}.{}", ['a', 'b'][slot % 2]));
+    std::path::PathBuf::from(os)
+}
+
+/// Newest valid checkpoint across a rank's two slots (None when neither
+/// slot loads — e.g. first run, or both torn).
+pub fn latest_checkpoint(base: &Path, rank: usize) -> Option<Checkpoint> {
+    let mut best: Option<Checkpoint> = None;
+    for slot in 0..2 {
+        if let Ok(ck) = load_checkpoint(checkpoint_slot_path(base, rank, slot)) {
+            if best.as_ref().map_or(true, |b| ck.round > b.round) {
+                best = Some(ck);
+            }
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -160,7 +382,7 @@ mod tests {
         let path = std::env::temp_dir().join("pw2v_io_bin.vec");
         save_binary(&path, &vocab, &emb).unwrap();
         let (words, got) = load_binary(&path).unwrap();
-        assert_eq!(words.len(), 2);
+        assert_eq!(words, vec!["a".to_string(), "b".to_string()]);
         for i in 0..2u32 {
             assert_eq!(got.row(i), emb.row(i));
         }
@@ -182,5 +404,148 @@ mod tests {
         std::fs::write(&path, "3 2\nw0 1 2\n").unwrap();
         assert!(load_text(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn garbage_binary_rejected_with_clear_error() {
+        let path = std::env::temp_dir().join("pw2v_io_garbage.vec");
+        std::fs::write(&path, b"this is not a vector file at all").unwrap();
+        let err = load_binary(&path).unwrap_err().to_string();
+        assert!(err.contains("header"), "unhelpful error: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_binary_rejected() {
+        let (vocab, emb) = sample();
+        let path = std::env::temp_dir().join("pw2v_io_bintrunc.vec");
+        save_binary(&path, &vocab, &emb).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        let err = load_binary(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "unhelpful error: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_tmp_and_survives_failed_write() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("pw2v_io_atomic.txt");
+        atomic_write(&path, |w| {
+            w.write_all(b"first")?;
+            Ok(())
+        })
+        .unwrap();
+        // A failing writer must not clobber the existing file.
+        assert!(atomic_write(&path, |w| {
+            w.write_all(b"half")?;
+            anyhow::bail!("simulated failure")
+        })
+        .is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        std::fs::remove_file(&path).ok();
+        let mut tmp = path.into_os_string();
+        tmp.push(".tmp");
+        std::fs::remove_file(tmp).ok();
+    }
+
+    fn sample_checkpoint() -> Checkpoint {
+        let mut m_in = Embedding::zeros(5, 4);
+        let mut m_out = Embedding::zeros(5, 4);
+        for id in 0..5u32 {
+            for (j, x) in m_in.row_mut(id).iter_mut().enumerate() {
+                *x = id as f32 + j as f32 * 0.25;
+            }
+            for (j, x) in m_out.row_mut(id).iter_mut().enumerate() {
+                *x = -(id as f32) - j as f32 * 0.5;
+            }
+        }
+        Checkpoint {
+            rank: 1,
+            nranks: 3,
+            round: 17,
+            epoch: 2,
+            sentences_in_epoch: 4242,
+            words_done: 123_456,
+            lr_words: 120_000,
+            rng: [1, 2, 3, 4],
+            fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+            m_in,
+            m_out,
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let path = std::env::temp_dir().join("pw2v_ck_rt.ck");
+        let ck = sample_checkpoint();
+        save_checkpoint(&path, &ck).unwrap();
+        let got = load_checkpoint(&path).unwrap();
+        assert_eq!(got.rank, ck.rank);
+        assert_eq!(got.nranks, ck.nranks);
+        assert_eq!(got.round, ck.round);
+        assert_eq!(got.epoch, ck.epoch);
+        assert_eq!(got.sentences_in_epoch, ck.sentences_in_epoch);
+        assert_eq!(got.words_done, ck.words_done);
+        assert_eq!(got.lr_words, ck.lr_words);
+        assert_eq!(got.rng, ck.rng);
+        assert_eq!(got.fingerprint, ck.fingerprint);
+        for id in 0..5u32 {
+            assert_eq!(got.m_in.row(id), ck.m_in.row(id));
+            assert_eq!(got.m_out.row(id), ck.m_out.row(id));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_corruption_and_truncation() {
+        let path = std::env::temp_dir().join("pw2v_ck_bad.ck");
+        save_checkpoint(&path, &sample_checkpoint()).unwrap();
+        let full = std::fs::read(&path).unwrap();
+
+        // Bit flip in a model row: checksum must catch it.
+        let mut flipped = full.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x40;
+        std::fs::write(&path, &flipped).unwrap();
+        let err = load_checkpoint(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unhelpful error: {err}");
+
+        // Truncation (torn write): must be rejected, not misread.
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+
+        // Wrong magic.
+        let mut wrong = full.clone();
+        wrong[..4].copy_from_slice(b"NOPE");
+        std::fs::write(&path, &wrong).unwrap();
+        let err = load_checkpoint(&path).unwrap_err().to_string();
+        assert!(err.contains("magic"), "unhelpful error: {err}");
+
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn latest_checkpoint_picks_newest_valid_slot() {
+        let base = std::env::temp_dir().join("pw2v_ck_slots");
+        let mut ck = sample_checkpoint();
+        ck.round = 10;
+        save_checkpoint(checkpoint_slot_path(&base, 1, 0), &ck).unwrap();
+        ck.round = 20;
+        save_checkpoint(checkpoint_slot_path(&base, 1, 1), &ck).unwrap();
+        assert_eq!(latest_checkpoint(&base, 1).unwrap().round, 20);
+
+        // Tear the newer slot: resume falls back to the older one.
+        let newer = checkpoint_slot_path(&base, 1, 1);
+        let bytes = std::fs::read(&newer).unwrap();
+        std::fs::write(&newer, &bytes[..bytes.len() / 2]).unwrap();
+        assert_eq!(latest_checkpoint(&base, 1).unwrap().round, 10);
+
+        // No slots at all.
+        assert!(latest_checkpoint(&base, 0).is_none());
+
+        for slot in 0..2 {
+            std::fs::remove_file(checkpoint_slot_path(&base, 1, slot)).ok();
+        }
     }
 }

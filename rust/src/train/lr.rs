@@ -73,6 +73,18 @@ impl LrState {
         self.at(self.words_done.load(Ordering::Relaxed))
     }
 
+    /// Words recorded so far (checkpoint header payload).
+    pub fn words_done(&self) -> u64 {
+        self.words_done.load(Ordering::Relaxed)
+    }
+
+    /// Reset progress to an absolute point (checkpoint resume): the next
+    /// [`advance`](Self::advance) continues the schedule exactly where a
+    /// checkpointed run left it.
+    pub fn restore(&self, words: u64) {
+        self.words_done.store(words, Ordering::Relaxed);
+    }
+
     pub fn start(&self) -> f32 {
         self.start
     }
@@ -202,6 +214,18 @@ mod tests {
         assert!((lr.current() - 0.05).abs() < 1e-6);
         lr.advance(25);
         assert!((lr.current() - 0.025).abs() < 1e-6);
+    }
+
+    #[test]
+    fn restore_resumes_schedule() {
+        let a = LrState::linear(0.1, 0.0, 100);
+        a.advance(30);
+        a.advance(20);
+        let b = LrState::linear(0.1, 0.0, 100);
+        b.restore(a.words_done());
+        assert_eq!(b.words_done(), 50);
+        assert!((a.current() - b.current()).abs() < 1e-9);
+        assert!((a.advance(10) - b.advance(10)).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,71 @@
+//! FNV-1a 64-bit — the repo's one integrity/digest hash.
+//!
+//! Used by the checkpoint trailer (`model/io.rs`), the ring frame
+//! checksum (`dist/net.rs`) and the config fingerprint
+//! (`config.rs::TrainConfig::fingerprint`).  Not cryptographic; it
+//! detects truncation and corruption, which is all those callers need.
+
+const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a hasher.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Self(OFFSET)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(PRIME);
+        }
+    }
+
+    pub fn digest(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot convenience.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.digest()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn incremental_equals_one_shot() {
+        let mut h = Fnv1a::new();
+        h.update(b"foo");
+        h.update(b"bar");
+        assert_eq!(h.digest(), fnv1a(b"foobar"));
+    }
+
+    #[test]
+    fn detects_single_bit_flip() {
+        let a = fnv1a(&[0u8; 64]);
+        let mut buf = [0u8; 64];
+        buf[63] = 1;
+        assert_ne!(a, fnv1a(&buf));
+    }
+}

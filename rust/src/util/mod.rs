@@ -7,6 +7,7 @@
 
 pub mod args;
 pub mod csv;
+pub mod fnv;
 pub mod json;
 pub mod rng;
 pub mod timer;

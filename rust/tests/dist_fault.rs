@@ -1,0 +1,288 @@
+//! Deterministic fault-injection suite (`PW2V_FAULT`) against the
+//! multi-process TCP ring: every failure mode the transport claims to
+//! survive, exercised through real OS processes of the CLI binary.
+//!
+//! * `kill-after=N` — a rank exits hard (code 42) after N data frames:
+//!   the survivor must exit non-zero within its i/o deadline and both
+//!   ranks' checkpoints must remain loadable (crash consistency);
+//! * `torn-frame=N` — a rank dies mid-frame (code 43), leaving a
+//!   half-written frame on the wire: the receiver must reject the
+//!   truncation, never parse garbage;
+//! * `stall-after=N` — a rank wedges (alive, silent, heartbeats
+//!   stopped): the peer's heartbeat deadline must fire;
+//! * `panic-replica=I` — THREAD-mode: a panicking replica poisons the
+//!   shared barrier and the whole process fails fast instead of
+//!   deadlocking (the pre-PR hang this suite regression-pins).
+//!
+//! Scenarios are serialized by a file-local mutex.
+
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
+use pw2v::model::io as model_io;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_pw2v")
+}
+
+fn free_ports(n: usize) -> Vec<u16> {
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+        .collect();
+    listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().port())
+        .collect()
+}
+
+fn ring_addrs(ports: &[u16]) -> String {
+    ports
+        .iter()
+        .map(|p| format!("127.0.0.1:{p}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+struct Fixture {
+    dir: PathBuf,
+    corpus: PathBuf,
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+fn fixture(name: &str) -> Fixture {
+    let dir = std::env::temp_dir().join(format!(
+        "pw2v_dist_fault_{name}_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut scfg = SyntheticConfig::test_tiny();
+    scfg.tokens = 60_000;
+    scfg.seed = 113;
+    let corpus = dir.join("corpus.txt");
+    LatentModel::new(scfg).write_corpus(&corpus).unwrap();
+    Fixture { dir, corpus }
+}
+
+/// One rank of a 2-rank ring on the fault fixture: small dim, many
+/// rounds, tight failure-detection deadlines.
+fn rank_cmd(corpus: &Path, rank: usize, addrs: &str) -> Command {
+    let mut c = Command::new(bin());
+    c.args([
+        "train-dist",
+        "--corpus",
+        corpus.to_str().unwrap(),
+        "--dist",
+        &format!("tcp:{rank}@{addrs}"),
+        "--min-count",
+        "1",
+        "--dim",
+        "16",
+        "--epochs",
+        "2",
+        "--sync-interval",
+        "4000",
+        "--net-timeout-ms",
+        "4000",
+        "--heartbeat-ms",
+        "100",
+    ]);
+    c.stderr(Stdio::piped());
+    c
+}
+
+fn wait_deadline(mut child: Child, what: &str, deadline: Duration) -> std::process::Output {
+    let t0 = Instant::now();
+    loop {
+        if child.try_wait().unwrap().is_some() {
+            return child.wait_with_output().unwrap();
+        }
+        if t0.elapsed() > deadline {
+            child.kill().ok();
+            child.wait().ok();
+            panic!("{what} still running after {deadline:?}");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Kill one rank mid-run: the victim exits with the injected code, the
+/// survivor exits non-zero within its deadline, and both ranks'
+/// two-slot checkpoints are still loadable (atomic tmp+rename+fsync —
+/// a crash can never leave a half-written "latest").
+#[test]
+fn killed_rank_fails_survivor_fast_and_checkpoints_stay_loadable() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let f = fixture("kill");
+    let ck_base = f.dir.join("ck");
+    let ck = ck_base.to_str().unwrap().to_string();
+    let addrs = ring_addrs(&free_ports(2));
+    let t0 = Instant::now();
+    let surv = rank_cmd(&f.corpus, 0, &addrs)
+        .args(["--checkpoint", &ck, "--checkpoint-every", "1"])
+        .spawn()
+        .unwrap();
+    let victim = rank_cmd(&f.corpus, 1, &addrs)
+        .args(["--checkpoint", &ck, "--checkpoint-every", "1"])
+        .env("PW2V_FAULT", "kill-after=40")
+        .spawn()
+        .unwrap();
+
+    let out_victim = wait_deadline(victim, "killed rank", Duration::from_secs(60));
+    assert_eq!(out_victim.status.code(), Some(42));
+    let out_surv = wait_deadline(surv, "survivor", Duration::from_secs(60));
+    assert!(!out_surv.status.success(), "survivor must not succeed");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "survivor took {:?} to notice the dead peer",
+        t0.elapsed()
+    );
+    let err = String::from_utf8_lossy(&out_surv.stderr);
+    assert!(
+        err.contains("error:"),
+        "survivor exited silently: {err}"
+    );
+
+    for rank in 0..2 {
+        let ck = model_io::latest_checkpoint(&ck_base, rank)
+            .unwrap_or_else(|| panic!("rank {rank}: no loadable checkpoint after crash"));
+        assert!(ck.round >= 1);
+        assert_eq!(ck.m_in.dim(), 16);
+    }
+}
+
+/// A torn frame (header promises more payload than ever arrives) must be
+/// rejected as truncation by the receiving rank — never parsed as a
+/// short-but-valid frame.
+#[test]
+fn torn_frame_is_rejected_not_parsed() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let f = fixture("torn");
+    let addrs = ring_addrs(&free_ports(2));
+    let surv = rank_cmd(&f.corpus, 0, &addrs).spawn().unwrap();
+    let victim = rank_cmd(&f.corpus, 1, &addrs)
+        .env("PW2V_FAULT", "torn-frame=10")
+        .spawn()
+        .unwrap();
+
+    let out_victim = wait_deadline(victim, "torn rank", Duration::from_secs(60));
+    assert_eq!(out_victim.status.code(), Some(43));
+    let out_surv = wait_deadline(surv, "survivor", Duration::from_secs(60));
+    assert!(!out_surv.status.success());
+    let err = String::from_utf8_lossy(&out_surv.stderr);
+    // Whichever the survivor hits first — the half frame (truncation) or
+    // the dropped connection — it must be a transport diagnostic, not a
+    // decode of garbage.
+    assert!(
+        err.contains("truncat") || err.contains("closed") || err.contains("silent"),
+        "survivor error does not look like a transport failure: {err}"
+    );
+}
+
+/// A stalled (wedged, not dead) peer stops heartbeating; the survivor's
+/// read deadline must fire even though the TCP connection stays open.
+#[test]
+fn stalled_peer_trips_heartbeat_deadline() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let f = fixture("stall");
+    let addrs = ring_addrs(&free_ports(2));
+    let surv = rank_cmd(&f.corpus, 0, &addrs).spawn().unwrap();
+    let stalled = rank_cmd(&f.corpus, 1, &addrs)
+        .env("PW2V_FAULT", "stall-after=10")
+        .spawn()
+        .unwrap();
+
+    let t0 = Instant::now();
+    let out_surv = wait_deadline(surv, "survivor", Duration::from_secs(60));
+    assert!(!out_surv.status.success());
+    // Detection is deadline-based: must take at least roughly the i/o
+    // timeout (nothing errored eagerly) and comfortably less than the
+    // suite deadline.
+    assert!(
+        t0.elapsed() < Duration::from_secs(45),
+        "deadline detection took {:?}",
+        t0.elapsed()
+    );
+    let err = String::from_utf8_lossy(&out_surv.stderr);
+    assert!(
+        err.contains("silent") || err.contains("closed"),
+        "expected a liveness diagnostic: {err}"
+    );
+    // The stalled process sleeps forever by design: reap it.
+    let mut stalled = stalled;
+    stalled.kill().ok();
+    stalled.wait().ok();
+}
+
+/// Thread-mode fault wiring through the CLI: a panicking replica must
+/// fail the whole process fast (poisoned barrier), not deadlock it.
+#[test]
+fn thread_mode_replica_panic_fails_process() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let f = fixture("panic");
+    let child = Command::new(bin())
+        .args([
+            "train-dist",
+            "--corpus",
+            f.corpus.to_str().unwrap(),
+            "--nodes",
+            "2",
+            "--min-count",
+            "1",
+            "--dim",
+            "16",
+            "--epochs",
+            "1",
+            "--sync-interval",
+            "4000",
+        ])
+        .env("PW2V_FAULT", "panic-replica=1")
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let out = wait_deadline(child, "thread-mode run", Duration::from_secs(60));
+    assert!(!out.status.success(), "panicking replica must fail the run");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("panic"), "stderr lacks the panic report: {err}");
+}
+
+/// Malformed `PW2V_FAULT` values are a startup error, not a silent
+/// no-op — a typo'd fault spec in a harness must never "pass" by
+/// accidentally running fault-free.
+#[test]
+fn malformed_fault_spec_is_refused_at_startup() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let f = fixture("badspec");
+    let child = Command::new(bin())
+        .args([
+            "train-dist",
+            "--corpus",
+            f.corpus.to_str().unwrap(),
+            "--nodes",
+            "2",
+            "--min-count",
+            "1",
+            "--dim",
+            "16",
+            "--epochs",
+            "1",
+        ])
+        .env("PW2V_FAULT", "explode-eventually")
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let out = wait_deadline(child, "bad-spec run", Duration::from_secs(30));
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("PW2V_FAULT"), "stderr: {err}");
+}

@@ -1,0 +1,351 @@
+//! Multi-PROCESS TCP-ring integration: real OS processes of the release
+//! test binary forming a loopback ring through the CLI, pinned against
+//! the acceptance criteria:
+//!
+//! * a 3-process full-sync ring writes BITWISE-identical vectors to the
+//!   3-replica thread-mode driver (every rank ends with the merged
+//!   model);
+//! * an interrupted checkpointed run (rank killed mid-epoch by
+//!   `PW2V_FAULT`) leaves loadable checkpoints, the survivor exits
+//!   non-zero within the i/o deadline, and `--resume` completes and
+//!   passes the embedding-quality floors of `quality_regression`.
+//!
+//! In-process ring parity (including checkpoint/resume bitwise equality)
+//! lives in `src/dist/train.rs` tests; THIS suite is the only place the
+//! transport crosses a real process boundary.  Subprocess scenarios are
+//! serialized by a file-local mutex so rings never fight for CPUs.
+
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
+use pw2v::corpus::vocab::Vocab;
+use pw2v::eval;
+use pw2v::model::io as model_io;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Quality floors, matching `tests/quality_regression.rs`.
+const RHO_FLOOR: f64 = 15.0;
+const ANALOGY_FLOOR: f64 = 0.5;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_pw2v")
+}
+
+/// Reserve n distinct loopback ports.  Binding `:0` and dropping leaves
+/// a tiny race before the ranks re-bind; fine on a CI loopback.
+fn free_ports(n: usize) -> Vec<u16> {
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+        .collect();
+    listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().port())
+        .collect()
+}
+
+fn ring_addrs(ports: &[u16]) -> String {
+    ports
+        .iter()
+        .map(|p| format!("127.0.0.1:{p}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Wait for a child with a deadline; kill and panic on expiry so a
+/// wedged ring fails the test instead of hanging the suite.
+fn wait_deadline(mut child: Child, what: &str, deadline: Duration) -> std::process::ExitStatus {
+    let t0 = Instant::now();
+    loop {
+        if let Some(st) = child.try_wait().unwrap() {
+            return st;
+        }
+        if t0.elapsed() > deadline {
+            child.kill().ok();
+            child.wait().ok();
+            panic!("{what} still running after {deadline:?}");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+struct Fixture {
+    dir: PathBuf,
+    corpus: PathBuf,
+    latent: LatentModel,
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+fn fixture(name: &str, scfg: SyntheticConfig) -> Fixture {
+    let dir = std::env::temp_dir().join(format!(
+        "pw2v_dist_tcp_{name}_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let latent = LatentModel::new(scfg);
+    let corpus = dir.join("corpus.txt");
+    latent.write_corpus(&corpus).unwrap();
+    Fixture {
+        dir,
+        corpus,
+        latent,
+    }
+}
+
+/// Common `train-dist` argv for one rank of a ring.
+#[allow(clippy::too_many_arguments)]
+fn rank_cmd(
+    corpus: &Path,
+    rank: usize,
+    addrs: &str,
+    out: Option<&Path>,
+    extra: &[&str],
+) -> Command {
+    let mut c = Command::new(bin());
+    c.args([
+        "train-dist",
+        "--corpus",
+        corpus.to_str().unwrap(),
+        "--dist",
+        &format!("tcp:{rank}@{addrs}"),
+        "--min-count",
+        "1",
+    ]);
+    if let Some(o) = out {
+        c.args(["--out", o.to_str().unwrap()]);
+    }
+    c.args(extra);
+    c
+}
+
+/// THE acceptance criterion, across real process boundaries: a
+/// 3-process loopback ring under full sync writes the same vectors,
+/// byte for byte, as `--dist threads --nodes 3`.
+#[test]
+fn three_process_full_sync_ring_matches_thread_mode() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let mut scfg = SyntheticConfig::test_tiny();
+    scfg.tokens = 40_000;
+    scfg.seed = 101;
+    let f = fixture("parity", scfg);
+    let common = [
+        "--policy",
+        "full",
+        "--sync-interval",
+        "4000",
+        "--dim",
+        "32",
+        "--epochs",
+        "1",
+        "--sample",
+        "0",
+    ];
+
+    // Reference: the in-process replica-thread driver.
+    let threads_out = f.dir.join("threads.txt");
+    let st = Command::new(bin())
+        .args([
+            "train-dist",
+            "--corpus",
+            f.corpus.to_str().unwrap(),
+            "--nodes",
+            "3",
+            "--min-count",
+            "1",
+            "--out",
+            threads_out.to_str().unwrap(),
+        ])
+        .args(common)
+        .status()
+        .unwrap();
+    assert!(st.success(), "thread-mode reference run failed");
+
+    // The ring: one OS process per rank.
+    let addrs = ring_addrs(&free_ports(3));
+    let outs: Vec<PathBuf> = (0..3).map(|r| f.dir.join(format!("rank{r}.txt"))).collect();
+    let children: Vec<Child> = (0..3)
+        .map(|r| {
+            rank_cmd(&f.corpus, r, &addrs, Some(&outs[r]), &common)
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    for (r, ch) in children.into_iter().enumerate() {
+        let st = wait_deadline(ch, &format!("rank {r}"), Duration::from_secs(120));
+        assert!(st.success(), "rank {r} exited with {st}");
+    }
+
+    let reference = std::fs::read(&threads_out).unwrap();
+    assert!(!reference.is_empty());
+    for (r, out) in outs.iter().enumerate() {
+        let got = std::fs::read(out).unwrap();
+        assert_eq!(
+            got, reference,
+            "rank {r} vectors differ from thread mode (parity broken)"
+        );
+    }
+}
+
+/// Kill → survivors fail fast → checkpoints survive → `--resume`
+/// completes → the resumed embeddings still clear the quality floors.
+/// The whole fault-tolerance story end to end through the CLI.
+#[test]
+fn resume_after_mid_epoch_kill_passes_quality_floors() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // The `quality_regression` fixture geometry.
+    let scfg = SyntheticConfig {
+        vocab: 2_000,
+        tokens: 300_000,
+        clusters: 20,
+        beta: 5.0,
+        seed: 29,
+        ..SyntheticConfig::default()
+    };
+    let f = fixture("resume", scfg);
+    let ck_base = f.dir.join("ck");
+    let ck = ck_base.to_str().unwrap().to_string();
+    let common = [
+        "--sync-interval",
+        "20000",
+        "--dim",
+        "48",
+        "--epochs",
+        "3",
+        "--checkpoint-every",
+        "1",
+        "--net-timeout-ms",
+        "5000",
+        "--heartbeat-ms",
+        "100",
+    ];
+
+    // Leg 1: rank 1 is killed by fault injection after 120 data frames
+    // (mid-epoch: each sub-model round is ~10 frames and one epoch is
+    // ~7 rounds per rank here).  The survivor must exit non-zero within
+    // its i/o deadline — not hang.
+    let addrs = ring_addrs(&free_ports(2));
+    let t0 = Instant::now();
+    let surv = rank_cmd(&f.corpus, 0, &addrs, None, &common)
+        .args(["--checkpoint", &ck])
+        .spawn()
+        .unwrap();
+    let victim = rank_cmd(&f.corpus, 1, &addrs, None, &common)
+        .args(["--checkpoint", &ck])
+        .env("PW2V_FAULT", "kill-after=120")
+        .spawn()
+        .unwrap();
+    let st_victim = wait_deadline(victim, "killed rank", Duration::from_secs(60));
+    assert_eq!(
+        st_victim.code(),
+        Some(42),
+        "injected kill must exit with the kill code"
+    );
+    let st_surv = wait_deadline(surv, "survivor rank", Duration::from_secs(60));
+    assert!(
+        !st_surv.success(),
+        "survivor must fail once its peer is gone"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "failure propagation took {:?}",
+        t0.elapsed()
+    );
+
+    // Both ranks left loadable checkpoints, skewed at most one round.
+    let rounds: Vec<u64> = (0..2)
+        .map(|r| {
+            model_io::latest_checkpoint(&ck_base, r)
+                .unwrap_or_else(|| panic!("rank {r} left no loadable checkpoint"))
+                .round
+        })
+        .collect();
+    assert!(rounds[0] >= 1 && rounds[1] >= 1, "rounds {rounds:?}");
+    assert!(rounds[0].abs_diff(rounds[1]) <= 1, "rounds {rounds:?}");
+
+    // Leg 2: resume from the negotiated common round and run to
+    // completion.
+    let addrs = ring_addrs(&free_ports(2));
+    let vec_out = f.dir.join("resumed.txt");
+    let children: Vec<Child> = (0..2)
+        .map(|r| {
+            rank_cmd(
+                &f.corpus,
+                r,
+                &addrs,
+                (r == 0).then_some(vec_out.as_path()),
+                &common,
+            )
+            .args(["--checkpoint", &ck, "--resume"])
+            .spawn()
+            .unwrap()
+        })
+        .collect();
+    for (r, ch) in children.into_iter().enumerate() {
+        let st = wait_deadline(ch, &format!("resumed rank {r}"), Duration::from_secs(300));
+        assert!(st.success(), "resumed rank {r} exited with {st}");
+    }
+
+    // The resumed model must have LEARNED: same floors as
+    // `quality_regression` (chance: rho ~0, analogy ~0.05%).
+    let vocab = Vocab::build_from_file(&f.corpus, 1).unwrap();
+    let (words, emb) = model_io::load_text(&vec_out).unwrap();
+    assert_eq!(words.len(), vocab.len());
+    let sim_set = eval::gen_similarity_set(&f.latent, 200, 3);
+    let ana_set = eval::gen_analogy_set(&f.latent);
+    let rho = eval::eval_similarity(&sim_set, &vocab, &emb).rho100;
+    let ana = eval::eval_analogy(&ana_set, &vocab, &emb).accuracy100();
+    assert!(
+        rho > RHO_FLOOR,
+        "resumed run stopped learning: rho100 {rho:.1} <= {RHO_FLOOR}"
+    );
+    assert!(
+        ana > ANALOGY_FLOOR,
+        "resumed run stopped learning: analogy {ana:.2}% <= {ANALOGY_FLOOR}%"
+    );
+}
+
+/// `--resume` without any checkpoints on disk must refuse cleanly (every
+/// rank, non-zero, helpful message) rather than train from scratch.
+#[test]
+fn resume_without_checkpoints_refuses() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let mut scfg = SyntheticConfig::test_tiny();
+    scfg.tokens = 20_000;
+    scfg.seed = 103;
+    let f = fixture("noresume", scfg);
+    let ck = f.dir.join("missing").to_str().unwrap().to_string();
+    let addrs = ring_addrs(&free_ports(2));
+    let children: Vec<Child> = (0..2)
+        .map(|r| {
+            rank_cmd(
+                &f.corpus,
+                r,
+                &addrs,
+                None,
+                &["--dim", "16", "--epochs", "1", "--sync-interval", "4000"],
+            )
+            .args(["--checkpoint", &ck, "--resume"])
+            .stderr(std::process::Stdio::piped())
+            .spawn()
+            .unwrap()
+        })
+        .collect();
+    for (r, ch) in children.into_iter().enumerate() {
+        let out = ch.wait_with_output().unwrap();
+        assert!(!out.status.success(), "rank {r} must refuse to resume");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            err.contains("no loadable checkpoint"),
+            "rank {r} stderr: {err}"
+        );
+    }
+}
