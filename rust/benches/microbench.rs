@@ -730,6 +730,7 @@ fn dist_ring_bench(report: &mut Option<ThroughputReport>) -> anyhow::Result<()> 
         connect_timeout_ms: 10_000,
         io_timeout_ms: 30_000,
         heartbeat_ms: 200,
+        rejoin_grace_ms: 0,
     };
 
     let outs: Vec<(f64, NetStats)> = std::thread::scope(|s| {

@@ -22,7 +22,17 @@
 //!   deadline-based detection catches;
 //! * `panic-replica=I` — thread-mode: replica I panics at its first
 //!   sync round, exercising the barrier poison guard (peers must fail
-//!   fast, not block forever in the barrier).
+//!   fast, not block forever in the barrier);
+//! * `kill-epoch=E` — exit(42) at the first data frame sent while the
+//!   ring is at membership epoch E, exercising a fault *during* a
+//!   recovered attempt (fault-during-fault-handling);
+//! * `wedge-regroup=E` — sleep forever at the start of the regroup for
+//!   epoch E: the wedged rank still accepts TCP connects (kernel
+//!   backlog) but never answers the probe handshake, so survivors must
+//!   exclude it by probe-ack deadline, not by connect failure;
+//! * `respawn-after=MS` — sleep MS milliseconds at startup before ring
+//!   formation, the deterministic "respawned rank joins late" delay the
+//!   rejoin grace window is tested against.
 
 use std::str::FromStr;
 
@@ -38,6 +48,12 @@ pub enum FaultSpec {
     StallAfterFrames(u64),
     /// Thread mode: replica I panics at its first sync round.
     PanicReplica(usize),
+    /// Exit abruptly at the first data frame sent at membership epoch E.
+    KillEpoch(u32),
+    /// Sleep forever at the start of the regroup for epoch E.
+    WedgeRegroup(u32),
+    /// Sleep MS milliseconds at startup before ring formation.
+    RespawnAfterMs(u64),
 }
 
 impl FromStr for FaultSpec {
@@ -56,9 +72,13 @@ impl FromStr for FaultSpec {
             "torn-frame" => Ok(FaultSpec::TornFrame(n)),
             "stall-after" => Ok(FaultSpec::StallAfterFrames(n)),
             "panic-replica" => Ok(FaultSpec::PanicReplica(n as usize)),
+            "kill-epoch" => Ok(FaultSpec::KillEpoch(n as u32)),
+            "wedge-regroup" => Ok(FaultSpec::WedgeRegroup(n as u32)),
+            "respawn-after" => Ok(FaultSpec::RespawnAfterMs(n)),
             other => anyhow::bail!(
                 "unknown fault kind '{other}' \
-                 (kill-after|torn-frame|stall-after|panic-replica)"
+                 (kill-after|torn-frame|stall-after|panic-replica\
+                 |kill-epoch|wedge-regroup|respawn-after)"
             ),
         }
     }
@@ -77,6 +97,19 @@ impl FaultSpec {
     /// Should replica `idx` panic at its first sync round (thread mode)?
     pub fn panics_replica(&self, idx: usize) -> bool {
         matches!(self, FaultSpec::PanicReplica(i) if *i == idx)
+    }
+
+    /// Startup delay injected before ring formation (`respawn-after`).
+    pub fn respawn_delay_ms(&self) -> Option<u64> {
+        match self {
+            FaultSpec::RespawnAfterMs(ms) => Some(*ms),
+            _ => None,
+        }
+    }
+
+    /// Should the regroup for `epoch` wedge (sleep forever)?
+    pub fn wedges_regroup(&self, epoch: u32) -> bool {
+        matches!(self, FaultSpec::WedgeRegroup(e) if *e == epoch)
     }
 }
 
@@ -102,6 +135,27 @@ mod tests {
             "panic-replica=1".parse::<FaultSpec>().unwrap(),
             FaultSpec::PanicReplica(1)
         );
+        assert_eq!(
+            "kill-epoch=1".parse::<FaultSpec>().unwrap(),
+            FaultSpec::KillEpoch(1)
+        );
+        assert_eq!(
+            "wedge-regroup=2".parse::<FaultSpec>().unwrap(),
+            FaultSpec::WedgeRegroup(2)
+        );
+        assert_eq!(
+            "respawn-after=250".parse::<FaultSpec>().unwrap(),
+            FaultSpec::RespawnAfterMs(250)
+        );
+    }
+
+    #[test]
+    fn recovery_fault_helpers_target_their_kind() {
+        assert_eq!(FaultSpec::RespawnAfterMs(40).respawn_delay_ms(), Some(40));
+        assert_eq!(FaultSpec::KillEpoch(1).respawn_delay_ms(), None);
+        assert!(FaultSpec::WedgeRegroup(1).wedges_regroup(1));
+        assert!(!FaultSpec::WedgeRegroup(1).wedges_regroup(2));
+        assert!(!FaultSpec::KillAfterFrames(3).wedges_regroup(1));
     }
 
     #[test]

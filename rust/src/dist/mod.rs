@@ -24,11 +24,22 @@
 //! bitwise-identical embeddings to thread mode (pinned by
 //! `tests/dist_tcp.rs`).
 //!
+//! The ring is SELF-HEALING when asked (`--on-failure {shrink,rejoin}`):
+//! every frame carries a membership epoch so stale traffic is fenced, a
+//! failed peer triggers a regroup protocol electing the surviving view,
+//! survivors roll back to the newest checkpoint round all of them hold,
+//! re-shard the corpus over the shrunken world size, and continue — a
+//! healed run is bitwise-equal to a clean run launched from the same
+//! rollback state (pinned by `tests/dist_fault.rs`).  Frame deadlines
+//! adapt to measured round time (EWMA, configured timeout as floor).
+//!
 //! Module map: [`node`] — per-replica configuration; [`sync`] — sync
 //! policies and the row-averaging collective; [`barrier`] — poisonable
 //! in-process barrier (fail-fast on replica panic); [`net`] — TCP ring
-//! transport; [`fault`] — `PW2V_FAULT` injection; [`train`] — the
-//! replica drivers [`train_distributed`] and [`train_tcp_ring`].
+//! transport, regroup protocol and epoch fencing; [`fault`] —
+//! `PW2V_FAULT` injection; [`train`] — the replica drivers
+//! [`train_distributed`] and [`train_tcp_ring`], plus the recovery loop
+//! around them.
 
 pub mod barrier;
 pub mod fault;
@@ -38,9 +49,10 @@ pub mod sync;
 pub mod train;
 
 pub use fault::FaultSpec;
-pub use net::{NetConfig, NetStats, RingSpec};
-pub use node::DistConfig;
-pub use sync::SyncPolicy;
+pub use net::{peer_failure, NetConfig, NetStats, PeerFailure, RingSpec};
+pub use node::{DistConfig, OnFailure};
+pub use sync::{average_row, SyncPolicy};
 pub use train::{
-    train_distributed, train_tcp_ring, train_tcp_ring_on, CheckpointPolicy, DistOutcome, SyncStats,
+    train_distributed, train_tcp_ring, train_tcp_ring_from, train_tcp_ring_on, AttemptStart,
+    CheckpointPolicy, DistOutcome, SyncStats,
 };

@@ -8,14 +8,22 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic  "PWRG"
-//!      4     2  version (little-endian u16, currently 1)
-//!      6     1  frame type (Hello|Status|Slice|AvgSlice|Heartbeat|Abort)
-//!      7     1  origin rank
+//!      4     2  version (little-endian u16, currently 2)
+//!      6     1  frame type (Hello|Status|Slice|AvgSlice|Heartbeat|Abort
+//!                           |Regroup|RegroupAck|Members)
+//!      7     1  origin rank (ring POSITION in the current view)
 //!      8     4  sync round the frame belongs to (u32)
-//!     12     4  payload length in bytes (u32)
-//!     16     8  FNV-1a checksum of the payload (u64)
-//!     24     …  payload
+//!     12     4  membership epoch / view number (u32)
+//!     16     4  payload length in bytes (u32)
+//!     20     8  FNV-1a checksum of the payload (u64)
+//!     28     …  payload
 //! ```
+//!
+//! The **membership epoch** fences views: epoch 0 is the launch ring;
+//! every successful regroup (see below) increments it.  A receiver
+//! silently drops frames stamped with an OLDER epoch (stale traffic
+//! from a dead view) and treats a NEWER epoch as the recoverable
+//! "a regroup is underway, join it" signal.
 //!
 //! Robustness model:
 //!
@@ -34,7 +42,27 @@
 //! * **Failure propagation** — a failing rank best-effort sends an
 //!   `Abort` frame carrying a reason; receivers forward it around the
 //!   ring and return an error, so every survivor exits with a
-//!   diagnostic instead of hanging in allreduce.
+//!   diagnostic instead of hanging in allreduce.  Peer-loss errors
+//!   (closed socket, tripped deadline, torn frame, regroup announce)
+//!   are additionally tagged [`PeerFailure`] so a recovery-capable
+//!   driver can distinguish them from unrecoverable faults; `Abort`
+//!   stays fatal in every mode.
+//! * **Self-healing** — under `--on-failure shrink|rejoin` the driver
+//!   reacts to a [`PeerFailure`] by calling [`Ring::regroup`]: the
+//!   listener is retained for the whole run, survivors scan forward for
+//!   their first live successor (probe = `Regroup` frame answered by
+//!   `RegroupAck` on the same socket; a wedged peer accepts the connect
+//!   via the kernel backlog but never acks, so the ack deadline skips
+//!   it), then agree on the member set by circulating `Members` bitmap
+//!   tokens around the tentative ring (own token returning = everyone
+//!   seen).  Under rejoin, the full original membership is retried for
+//!   a grace window before any skip, so a promptly respawned rank is
+//!   readmitted.  A sole survivor forms a self-linked one-rank view.
+//! * **Adaptive read deadline** — [`Ring::observe_round`] feeds an
+//!   EWMA of round wall time (`srtt += (sample - srtt)/8`, TCP-RTT
+//!   style); the effective frame deadline is `max(io_timeout_ms,
+//!   4·srtt)`, so slow-but-alive rings stretch their own deadline while
+//!   the configured floor still detects dead peers fast.
 //! * **Deadlock freedom** — every rank runs send-then-recv in the same
 //!   ring step, so a block larger than the kernel socket buffers would
 //!   wedge all ranks in `write`.  Block transfers are therefore split
@@ -56,7 +84,7 @@
 //! checked against.
 
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -68,9 +96,9 @@ use crate::model::SharedModel;
 use crate::util::fnv::fnv1a;
 
 const MAGIC: [u8; 4] = *b"PWRG";
-const VERSION: u16 = 1;
+const VERSION: u16 = 2;
 /// Frame header size on the wire.
-pub const HEADER_BYTES: usize = 24;
+pub const HEADER_BYTES: usize = 28;
 /// Largest payload a single frame carries.  Must stay safely below the
 /// smallest kernel socket buffer so one in-flight chunk per direction
 /// can never wedge the ring (see module docs).
@@ -99,6 +127,20 @@ pub enum FrameType {
     Heartbeat = 5,
     /// Failure propagation: payload is a UTF-8 reason.
     Abort = 6,
+    /// Regroup probe / announce: `[fingerprint u64]`; the header epoch
+    /// is the proposed view number.  Sent on the old successor link as
+    /// an announce, and as the probe opening the bidirectional regroup
+    /// handshake.
+    Regroup = 7,
+    /// Answer to a `Regroup` probe, sent back on the SAME socket:
+    /// `[fingerprint u64]`; the header epoch is the acker's (possibly
+    /// newer) target epoch, which the prober adopts.
+    RegroupAck = 8,
+    /// Membership token: `[ttl u8][bitmap 32B]` of original ranks.
+    /// Each member injects its own token and forwards everyone else's
+    /// with its own bit OR-ed in; a token returning to its origin
+    /// carries the full member set of the tentative ring.
+    Members = 9,
 }
 
 impl FrameType {
@@ -110,6 +152,9 @@ impl FrameType {
             4 => FrameType::AvgSlice,
             5 => FrameType::Heartbeat,
             6 => FrameType::Abort,
+            7 => FrameType::Regroup,
+            8 => FrameType::RegroupAck,
+            9 => FrameType::Members,
             other => anyhow::bail!("unknown frame type {other} (protocol corruption)"),
         })
     }
@@ -120,7 +165,34 @@ pub struct Frame {
     pub ftype: FrameType,
     pub origin: u8,
     pub round: u32,
+    pub epoch: u32,
     pub payload: Vec<u8>,
+}
+
+/// A RECOVERABLE ring failure: the peer died, wedged, tore a frame, or
+/// announced a regroup for a newer membership epoch.  Drivers running
+/// `--on-failure shrink|rejoin` downcast to this marker (anywhere in an
+/// `anyhow` chain) to decide recovery; everything NOT tagged — notably
+/// an `Abort` frame — keeps PR-6 fail-stop semantics.
+#[derive(Debug, Clone)]
+pub struct PeerFailure {
+    /// Epoch a regroup announce asked us to join (0 = none seen; the
+    /// detector proposes `current + 1` itself).
+    pub regroup_epoch: u32,
+    pub reason: String,
+}
+
+impl std::fmt::Display for PeerFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.reason)
+    }
+}
+
+impl std::error::Error for PeerFailure {}
+
+/// Does this error chain contain a recoverable [`PeerFailure`]?
+pub fn peer_failure(err: &anyhow::Error) -> Option<&PeerFailure> {
+    err.chain().find_map(|c| c.downcast_ref::<PeerFailure>())
 }
 
 /// `--dist tcp:<rank>@addr0,addr1,...` — this process is `rank`;
@@ -172,10 +244,16 @@ pub struct NetConfig {
     /// predecessor to connect.
     pub connect_timeout_ms: u64,
     /// Read/write deadline per frame once the ring is up; a peer silent
-    /// for this long is declared dead/wedged.
+    /// for this long is declared dead/wedged.  This is the FLOOR of the
+    /// adaptive deadline — [`Ring::observe_round`] stretches the
+    /// effective deadline to `max(io_timeout_ms, 4·srtt)`.
     pub io_timeout_ms: u64,
     /// Heartbeat period (must be well under `io_timeout_ms`).
     pub heartbeat_ms: u64,
+    /// `--on-failure rejoin` only: how long a regroup keeps retrying
+    /// the FULL original membership (so a respawned rank is readmitted)
+    /// before it starts skipping dead peers.
+    pub rejoin_grace_ms: u64,
 }
 
 impl Default for NetConfig {
@@ -184,6 +262,7 @@ impl Default for NetConfig {
             connect_timeout_ms: 15_000,
             io_timeout_ms: 10_000,
             heartbeat_ms: 300,
+            rejoin_grace_ms: 5_000,
         }
     }
 }
@@ -203,12 +282,30 @@ pub struct NetStats {
     pub heartbeats_sent: u64,
 }
 
+/// Encode one frame (header + payload) into a contiguous buffer.
+fn encode_frame(ftype: FrameType, origin: u8, round: u32, epoch: u32, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.push(ftype as u8);
+    buf.push(origin);
+    buf.extend_from_slice(&round.to_le_bytes());
+    buf.extend_from_slice(&epoch.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&fnv1a(payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
 /// Writing half of the successor connection, shared between the trainer
 /// and the heartbeat thread behind one mutex (a frame is always written
 /// under a single lock hold, so frames never interleave).
 struct FrameWriter {
     stream: TcpStream,
     fault: Option<FaultSpec>,
+    /// Membership epoch stamped on every outgoing frame; bumped when a
+    /// regroup installs a new view.
+    epoch: u32,
     /// Data frames written so far (heartbeats excluded) — the counter
     /// `PW2V_FAULT` triggers key off, kept heartbeat-free so fault
     /// schedules are deterministic.
@@ -221,20 +318,16 @@ struct FrameWriter {
 
 impl FrameWriter {
     fn send(&mut self, ftype: FrameType, origin: u8, round: u32, payload: &[u8]) -> anyhow::Result<()> {
-        let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
-        buf.extend_from_slice(&MAGIC);
-        buf.extend_from_slice(&VERSION.to_le_bytes());
-        buf.push(ftype as u8);
-        buf.push(origin);
-        buf.extend_from_slice(&round.to_le_bytes());
-        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-        buf.extend_from_slice(&fnv1a(payload).to_le_bytes());
-        buf.extend_from_slice(payload);
+        let buf = encode_frame(ftype, origin, round, self.epoch, payload);
 
         if ftype != FrameType::Heartbeat {
             match self.fault {
                 Some(FaultSpec::KillAfterFrames(n)) if self.data_frames >= n => {
                     eprintln!("PW2V_FAULT kill-after={n}: exiting now");
+                    std::process::exit(EXIT_FAULT_KILL);
+                }
+                Some(FaultSpec::KillEpoch(e)) if self.epoch == e => {
+                    eprintln!("PW2V_FAULT kill-epoch={e}: exiting now");
                     std::process::exit(EXIT_FAULT_KILL);
                 }
                 Some(FaultSpec::TornFrame(n)) if self.data_frames == n => {
@@ -273,15 +366,27 @@ impl FrameWriter {
     }
 }
 
-/// Reading half of the predecessor connection.
-struct FrameReader {
-    stream: TcpStream,
+/// Reading half of the predecessor connection.  Generic over the byte
+/// source so the decode path is testable against hostile in-memory
+/// buffers (fuzz tests feed `Cursor<Vec<u8>>`); the ring itself uses
+/// `FrameReader<TcpStream>`.
+struct FrameReader<R: Read> {
+    stream: R,
     io_timeout: Duration,
     frames_recv: u64,
     bytes_recv: u64,
 }
 
-impl FrameReader {
+impl<R: Read> FrameReader<R> {
+    fn new(stream: R, io_timeout: Duration) -> Self {
+        Self {
+            stream,
+            io_timeout,
+            frames_recv: 0,
+            bytes_recv: 0,
+        }
+    }
+
     /// Fill `buf` completely, tolerating short reads and poll timeouts,
     /// failing once `deadline` passes with nothing left to read.
     fn read_full(&mut self, buf: &mut [u8], deadline: Instant) -> anyhow::Result<()> {
@@ -323,9 +428,12 @@ impl FrameReader {
         let ftype = FrameType::from_u8(head[6])?;
         let origin = head[7];
         let round = u32::from_le_bytes(head[8..12].try_into().unwrap());
-        let len = u32::from_le_bytes(head[12..16].try_into().unwrap()) as usize;
+        let epoch = u32::from_le_bytes(head[12..16].try_into().unwrap());
+        // The length field is capped BEFORE the payload allocation, so a
+        // hostile/corrupt header can never drive an OOM-sized `vec!`.
+        let len = u32::from_le_bytes(head[16..20].try_into().unwrap()) as usize;
         anyhow::ensure!(len <= MAX_PAYLOAD, "frame length {len} exceeds protocol max");
-        let want = u64::from_le_bytes(head[16..24].try_into().unwrap());
+        let want = u64::from_le_bytes(head[20..28].try_into().unwrap());
         let mut payload = vec![0u8; len];
         self.read_full(&mut payload, deadline)
             .map_err(|e| anyhow::anyhow!("truncated frame payload: {e}"))?;
@@ -339,6 +447,7 @@ impl FrameReader {
             ftype,
             origin,
             round,
+            epoch,
             payload,
         })
     }
@@ -346,10 +455,34 @@ impl FrameReader {
 
 /// Established ring endpoint for one rank.
 pub struct Ring {
+    /// Position in the CURRENT view (0..n); equals the original rank in
+    /// the launch view (epoch 0).
     rank: usize,
+    /// Current view size.
     n: usize,
+    /// Original launch rank — the fixed addressing identity used on
+    /// regroup probes regardless of view.
+    orig_rank: usize,
+    /// Launch addresses, indexed by original rank.
+    addrs: Vec<String>,
+    /// Original ranks alive in the current view, sorted ascending.
+    /// Ring order IS this order (position = index here).
+    members: Vec<usize>,
+    /// Membership epoch of the current view.
+    epoch: u32,
+    /// Launch fingerprint (config ^ vocab ^ launch nranks) — regroup
+    /// handshakes always use this, so respawned ranks with the same
+    /// argv can rejoin any view.
+    fingerprint: u64,
+    net: NetConfig,
+    /// Retained for the whole run so regroups can re-form links; PR 6
+    /// dropped it after the launch accept.
+    listener: TcpListener,
+    fault: Option<FaultSpec>,
+    /// EWMA of observed round wall time (ms); 0 until the first sample.
+    srtt_ms: f64,
     writer: Arc<Mutex<FrameWriter>>,
-    reader: FrameReader,
+    reader: FrameReader<TcpStream>,
     hb_stop: Arc<AtomicBool>,
     hb_join: Option<std::thread::JoinHandle<()>>,
 }
@@ -401,6 +534,447 @@ fn accept_deadline(listener: &TcpListener, timeout: Duration) -> anyhow::Result<
     }
 }
 
+fn spawn_heartbeat(
+    writer: &Arc<Mutex<FrameWriter>>,
+    heartbeat_ms: u64,
+    origin: u8,
+) -> (Arc<AtomicBool>, Option<std::thread::JoinHandle<()>>) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let join = {
+        let writer = Arc::clone(writer);
+        let stop = Arc::clone(&stop);
+        let period = Duration::from_millis(heartbeat_ms.max(1));
+        Some(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(period);
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+                if w.send(FrameType::Heartbeat, origin, 0, &[]).is_err() {
+                    // Successor is gone; the trainer will find out
+                    // through its own send/recv errors.
+                    break;
+                }
+            }
+        }))
+    };
+    (stop, join)
+}
+
+// ---------------------------------------------------------------------------
+// Regroup: re-forming a smaller (or restored) view after a rank failure
+// ---------------------------------------------------------------------------
+
+/// A successfully formed view: the agreed member set plus its links.
+struct View {
+    epoch: u32,
+    /// Original ranks, sorted ascending; ring order is this order.
+    members: Vec<usize>,
+    /// This process's index in `members`.
+    position: usize,
+    /// Write link to the view successor.
+    out: TcpStream,
+    /// Read link from the view predecessor.
+    inc: TcpStream,
+}
+
+/// Read exactly one frame from `stream` within `budget` (short read
+/// timeout polls underneath).  Counters are throwaway — this services
+/// the regroup handshake, not the steady-state reader.
+fn read_one_frame(stream: TcpStream, budget: Duration) -> anyhow::Result<(TcpStream, Frame)> {
+    stream.set_read_timeout(Some(Duration::from_millis(20)))?;
+    let mut r = FrameReader::new(stream, budget);
+    let f = r.recv()?;
+    Ok((r.stream, f))
+}
+
+/// One accept-poll during regroup: handle a single queued incoming
+/// connection, if any.  Returns the probe (socket + frame) when a valid
+/// same-or-newer-epoch `Regroup` arrived; `None` for no connection,
+/// stale probes (acked with OUR epoch so the prober adopts upward), or
+/// chatter such as a respawned rank's launch `Hello` (dropped — it
+/// learns the epoch from our own probe instead).
+fn poll_probe(
+    listener: &TcpListener,
+    fingerprint: u64,
+    epoch: u32,
+    orig_rank: usize,
+) -> Option<(TcpStream, Frame)> {
+    let (conn, _) = match listener.accept() {
+        Ok(c) => c,
+        Err(_) => return None,
+    };
+    conn.set_nodelay(true).ok();
+    let (mut conn, f) = read_one_frame(conn, Duration::from_millis(500)).ok()?;
+    if f.ftype != FrameType::Regroup || f.payload.len() != 8 {
+        return None;
+    }
+    let fp = u64::from_le_bytes(f.payload[..8].try_into().ok()?);
+    if fp != fingerprint {
+        return None;
+    }
+    if f.epoch < epoch {
+        // Stale probe: ack with OUR epoch so the prober adopts it and
+        // re-probes; this socket is not a view link.
+        let ack = encode_frame(
+            FrameType::RegroupAck,
+            orig_rank as u8,
+            0,
+            epoch,
+            &fingerprint.to_le_bytes(),
+        );
+        conn.write_all(&ack).ok();
+        return None;
+    }
+    Some((conn, f))
+}
+
+/// Forward-scan regroup: agree on the surviving member set for (at
+/// least) epoch `start_epoch` and form its ring links.  See the module
+/// docs for the protocol; `grace` keeps retrying the FULL original
+/// membership before any peer is skipped (the rejoin window).
+#[allow(clippy::too_many_arguments)]
+fn form_view(
+    listener: &TcpListener,
+    addrs: &[String],
+    orig_rank: usize,
+    fingerprint: u64,
+    net: &NetConfig,
+    fault: Option<FaultSpec>,
+    start_epoch: u32,
+    grace: Duration,
+) -> anyhow::Result<View> {
+    if let Some(f) = fault {
+        if f.wedges_regroup(start_epoch) {
+            eprintln!("PW2V_FAULT wedge-regroup={start_epoch}: wedging (connects accepted, never acked)");
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+    }
+    let n = addrs.len();
+    let overall = Instant::now()
+        + Duration::from_millis(net.connect_timeout_ms.max(1))
+        + grace;
+    let grace_until = Instant::now() + grace;
+    let probe = |epoch: u32| {
+        encode_frame(
+            FrameType::Regroup,
+            orig_rank as u8,
+            0,
+            epoch,
+            &fingerprint.to_le_bytes(),
+        )
+    };
+    listener.set_nonblocking(true)?;
+    let mut epoch = start_epoch;
+
+    'attempt: loop {
+        anyhow::ensure!(
+            Instant::now() < overall,
+            "regroup for epoch {epoch} exhausted its window \
+             (no agreeable surviving view)"
+        );
+
+        // --- Phase A: link formation -----------------------------------
+        // Active side: probe candidates forward of us in launch order;
+        // the first that answers RegroupAck is our view successor.
+        // Passive side: accept probes; the latest valid prober is our
+        // view predecessor.  Both run interleaved in one loop so probe
+        // handshakes cannot deadlock.
+        let mut pred: Option<(TcpStream, u8)> = None;
+        let mut succ: Option<(TcpStream, usize)> = None;
+        let mut skipped = vec![false; n];
+        let mut k = 1usize; // candidate offset being probed
+        let mut cand: Option<(TcpStream, usize, Instant)> = None; // awaiting ack
+        let mut cand_deadline = Instant::now();
+        let phase_a = loop {
+            if Instant::now() >= overall {
+                continue 'attempt;
+            }
+            // Passive: handle one queued incoming probe.
+            if let Some((conn, f)) = poll_probe(listener, fingerprint, epoch, orig_rank) {
+                let mut conn = conn;
+                let ack = encode_frame(
+                    FrameType::RegroupAck,
+                    orig_rank as u8,
+                    0,
+                    f.epoch.max(epoch),
+                    &fingerprint.to_le_bytes(),
+                );
+                if conn.write_all(&ack).is_ok() {
+                    if f.epoch > epoch {
+                        // Adopt the newer epoch: our old-epoch links are
+                        // void, rescan; the prober stays as our pred.
+                        epoch = f.epoch;
+                        succ = None;
+                        cand = None;
+                        skipped.fill(false);
+                        k = 1;
+                    }
+                    pred = Some((conn, f.origin));
+                }
+            }
+            // Active: advance the candidate scan.
+            if succ.is_none() {
+                match cand.take() {
+                    Some((stream, c, ack_by)) => {
+                        // Awaiting the ack on the probe socket.
+                        stream.set_read_timeout(Some(Duration::from_millis(20))).ok();
+                        let mut r = FrameReader::new(stream, Duration::from_millis(25));
+                        match r.recv() {
+                            Ok(f)
+                                if f.ftype == FrameType::RegroupAck
+                                    && f.payload.len() == 8
+                                    && u64::from_le_bytes(f.payload[..8].try_into().unwrap())
+                                        == fingerprint =>
+                            {
+                                if f.epoch > epoch {
+                                    // Acker is ahead: adopt and rescan.
+                                    epoch = f.epoch;
+                                    succ = None;
+                                    pred = None;
+                                    skipped.fill(false);
+                                    k = 1;
+                                } else {
+                                    succ = Some((r.stream, c));
+                                }
+                            }
+                            Ok(_) => {} // chatter: drop the socket, rescan this k
+                            Err(_) if Instant::now() < ack_by => {
+                                cand = Some((r.stream, c, ack_by));
+                            }
+                            Err(_) => {
+                                // No ack in time: dead or wedged (a wedged
+                                // peer accepts connects via the kernel
+                                // backlog but never answers).  Inside the
+                                // rejoin grace window the candidate is
+                                // retried instead of skipped.
+                                if Instant::now() >= grace_until {
+                                    skipped[c] = true;
+                                    k += 1;
+                                }
+                            }
+                        }
+                    }
+                    None => {
+                        let in_grace = Instant::now() < grace_until;
+                        if in_grace {
+                            // Rejoin grace: only the IMMEDIATE original
+                            // successor is probed, and it is retried —
+                            // never skipped — so a promptly respawned
+                            // rank restores the full membership.
+                            k = 1;
+                        }
+                        if k >= n {
+                            // Scanned everyone once.
+                            if pred.is_some() {
+                                // A live prober proves a peer exists:
+                                // retry the full membership.
+                                k = 1;
+                                skipped.fill(false);
+                            } else {
+                                break false; // sole survivor
+                            }
+                        } else {
+                            let c = (orig_rank + k) % n;
+                            if skipped[c] || c == orig_rank {
+                                k += 1;
+                            } else if Instant::now() >= cand_deadline {
+                                cand_deadline = Instant::now() + Duration::from_millis(150);
+                                let budget = Duration::from_millis(100);
+                                if let Ok(sa) = addrs[c].to_socket_addrs() {
+                                    let conn = sa
+                                        .into_iter()
+                                        .find_map(|a| TcpStream::connect_timeout(&a, budget).ok());
+                                    match conn {
+                                        Some(mut s) => {
+                                            s.set_nodelay(true).ok();
+                                            if s.write_all(&probe(epoch)).is_ok() {
+                                                cand = Some((
+                                                    s,
+                                                    c,
+                                                    Instant::now() + Duration::from_millis(600),
+                                                ));
+                                            } else if !in_grace {
+                                                skipped[c] = true;
+                                                k += 1;
+                                            }
+                                        }
+                                        None if !in_grace => {
+                                            skipped[c] = true;
+                                            k += 1;
+                                        }
+                                        None => {} // grace: retry the connect
+                                    }
+                                } else {
+                                    skipped[c] = true;
+                                    k += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if let (Some(_), Some(_)) = (&pred, &succ) {
+                break true;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+
+        if !phase_a {
+            // Sole survivor: form a one-rank self-linked view.  Drain
+            // stale queued connects first; if a live probe shows up in
+            // the drain, we are not alone — rescan.
+            while let Some((conn, f)) = poll_probe(listener, fingerprint, epoch, orig_rank) {
+                let ack = encode_frame(
+                    FrameType::RegroupAck,
+                    orig_rank as u8,
+                    0,
+                    f.epoch.max(epoch),
+                    &fingerprint.to_le_bytes(),
+                );
+                let mut conn = conn;
+                if conn.write_all(&ack).is_ok() {
+                    epoch = epoch.max(f.epoch);
+                    continue 'attempt;
+                }
+            }
+            let sa = addrs[orig_rank]
+                .to_socket_addrs()?
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("unresolvable own address {}", addrs[orig_rank]))?;
+            let out = TcpStream::connect_timeout(&sa, Duration::from_millis(1000))?;
+            out.set_nodelay(true)?;
+            let inc = accept_deadline(listener, Duration::from_millis(1000))?;
+            inc.set_nodelay(true)?;
+            inc.set_read_timeout(Some(Duration::from_millis(100)))?;
+            out.set_write_timeout(Some(Duration::from_millis(net.io_timeout_ms.max(1))))?;
+            eprintln!("rank {orig_rank}: regroup epoch {epoch}: sole survivor, continuing solo");
+            return Ok(View {
+                epoch,
+                members: vec![orig_rank],
+                position: 0,
+                out,
+                inc,
+            });
+        }
+
+        // --- Phase B: membership agreement by token circulation --------
+        let (out, succ_orig) = succ.take().map(|(s, c)| (s, c)).unwrap();
+        let (inc, pred_origin) = pred.take().unwrap();
+        out.set_write_timeout(Some(Duration::from_millis(net.io_timeout_ms.max(1))))?;
+        inc.set_read_timeout(Some(Duration::from_millis(20)))?;
+        match circulate_members(&out, inc, orig_rank, epoch, net) {
+            Ok((members, inc)) => {
+                // Validate the formed topology against the agreed set:
+                // our successor/predecessor must be the cyclic
+                // neighbours in sorted member order.
+                let position = match members.iter().position(|&m| m == orig_rank) {
+                    Some(p) => p,
+                    None => {
+                        epoch += 1;
+                        continue 'attempt;
+                    }
+                };
+                let m = members.len();
+                let want_succ = members[(position + 1) % m];
+                let want_pred = members[(position + m - 1) % m];
+                if m < 2 || m > n || succ_orig != want_succ || pred_origin as usize != want_pred {
+                    // Inconsistent topology (epoch race): next epoch.
+                    epoch += 1;
+                    continue 'attempt;
+                }
+                inc.set_read_timeout(Some(Duration::from_millis(100)))?;
+                return Ok(View {
+                    epoch,
+                    members,
+                    position,
+                    out,
+                    inc,
+                });
+            }
+            Err(_) => {
+                epoch += 1;
+                continue 'attempt;
+            }
+        }
+    }
+}
+
+/// Phase B of a regroup: every tentative-ring member injects a
+/// `Members` token carrying its own bit; each forwards every foreign
+/// token with its own bit OR-ed in and a decremented TTL.  A ring of m
+/// members passes exactly m tokens through every node, and a node's own
+/// returning token carries the full member bitmap.  Returns the agreed
+/// member set (sorted original ranks) and gives the predecessor socket
+/// back.
+fn circulate_members(
+    out: &TcpStream,
+    inc: TcpStream,
+    orig_rank: usize,
+    epoch: u32,
+    net: &NetConfig,
+) -> anyhow::Result<(Vec<usize>, TcpStream)> {
+    let n_max = 256usize;
+    let mut bitmap = [0u8; 32];
+    bitmap[orig_rank / 8] |= 1 << (orig_rank % 8);
+    let mut token = Vec::with_capacity(33);
+    token.push(u8::MAX); // TTL: generous, only guards against cycles
+    token.extend_from_slice(&bitmap);
+    let mut w = &*out;
+    w.write_all(&encode_frame(
+        FrameType::Members,
+        orig_rank as u8,
+        0,
+        epoch,
+        &token,
+    ))?;
+    let budget = Duration::from_millis(net.io_timeout_ms.max(1));
+    let deadline = Instant::now() + budget;
+    let mut r = FrameReader::new(inc, Duration::from_millis(500));
+    let mut my_set: Option<[u8; 32]> = None;
+    let mut seen = 0usize;
+    loop {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "membership circulation timed out at epoch {epoch}"
+        );
+        let f = match r.recv() {
+            Ok(f) => f,
+            Err(_) => continue, // short poll timeout: retry until deadline
+        };
+        if f.epoch != epoch || f.ftype != FrameType::Members || f.payload.len() != 33 {
+            anyhow::bail!("membership circulation desync at epoch {epoch}");
+        }
+        seen += 1;
+        anyhow::ensure!(seen <= n_max, "membership token storm at epoch {epoch}");
+        if f.origin as usize == orig_rank {
+            let mut set = [0u8; 32];
+            set.copy_from_slice(&f.payload[1..33]);
+            my_set = Some(set);
+        } else {
+            let ttl = f.payload[0];
+            anyhow::ensure!(ttl > 1, "membership token TTL exhausted");
+            let mut fwd = f.payload.clone();
+            fwd[0] = ttl - 1;
+            for (i, b) in bitmap.iter().enumerate() {
+                fwd[1 + i] |= b;
+            }
+            w.write_all(&encode_frame(FrameType::Members, f.origin, 0, epoch, &fwd))?;
+        }
+        if let Some(set) = my_set {
+            let members: Vec<usize> = (0..n_max)
+                .filter(|i| set[i / 8] & (1 << (i % 8)) != 0)
+                .collect();
+            if seen >= members.len() {
+                return Ok((members, r.stream));
+            }
+        }
+    }
+}
+
 impl Ring {
     /// Bind this rank's listener and form the ring.  `fingerprint`
     /// guards against mixed-config launches: all ranks must present the
@@ -419,10 +993,35 @@ impl Ring {
         net: &NetConfig,
         fingerprint: u64,
     ) -> anyhow::Result<Self> {
+        Self::establish_inner(listener, spec, net, fingerprint, false)
+    }
+
+    /// Like [`Ring::establish_on`], but recovery-aware: a `Regroup`
+    /// frame arriving where the `Hello` was expected means a regroup at
+    /// some epoch E is already underway (this process is a respawned
+    /// rank joining late under `--on-failure rejoin`) — instead of
+    /// failing, the endpoint joins that regroup directly.
+    pub fn establish_elastic(
+        listener: TcpListener,
+        spec: &RingSpec,
+        net: &NetConfig,
+        fingerprint: u64,
+    ) -> anyhow::Result<Self> {
+        Self::establish_inner(listener, spec, net, fingerprint, true)
+    }
+
+    fn establish_inner(
+        listener: TcpListener,
+        spec: &RingSpec,
+        net: &NetConfig,
+        fingerprint: u64,
+        elastic: bool,
+    ) -> anyhow::Result<Self> {
         let rank = spec.rank;
         let n = spec.nranks();
         let connect_timeout = Duration::from_millis(net.connect_timeout_ms.max(1));
         let io_timeout = Duration::from_millis(net.io_timeout_ms.max(1));
+        let fault = FaultSpec::from_env()?;
 
         // Listener is bound (above or by the caller) BEFORE we connect
         // out, so every rank's connect finds every listener regardless
@@ -439,19 +1038,15 @@ impl Ring {
 
         let mut writer = FrameWriter {
             stream: out,
-            fault: FaultSpec::from_env()?,
+            fault,
+            epoch: 0,
             data_frames: 0,
             frames_sent: 0,
             bytes_sent: 0,
             slice_bytes_sent: 0,
             heartbeats_sent: 0,
         };
-        let mut reader = FrameReader {
-            stream: inc,
-            io_timeout,
-            frames_recv: 0,
-            bytes_recv: 0,
-        };
+        let mut reader = FrameReader::new(inc, io_timeout);
 
         // Hello exchange: wiring + config sanity before any training
         // traffic.
@@ -460,6 +1055,26 @@ impl Ring {
         hello.extend_from_slice(&fingerprint.to_le_bytes());
         writer.send(FrameType::Hello, rank as u8, 0, &hello)?;
         let f = reader.recv()?;
+        if elastic && f.ftype == FrameType::Regroup && f.epoch > 0 {
+            // A survivor probed us mid-regroup: we are a respawned rank
+            // joining late.  Drop the half-formed launch links (the
+            // prober retries within its grace window) and join the
+            // regroup for the announced epoch through the listener.
+            let target = f.epoch;
+            drop(writer);
+            drop(reader);
+            let view = form_view(
+                &listener,
+                &spec.addrs,
+                rank,
+                fingerprint,
+                net,
+                fault,
+                target,
+                Duration::from_millis(net.rejoin_grace_ms),
+            )?;
+            return Self::from_view(listener, spec, net, fingerprint, fault, view);
+        }
         anyhow::ensure!(
             f.ftype == FrameType::Hello,
             "rank {rank}: expected Hello, got {:?}",
@@ -485,32 +1100,64 @@ impl Ring {
         );
 
         let writer = Arc::new(Mutex::new(writer));
-        let hb_stop = Arc::new(AtomicBool::new(false));
-        let hb_join = {
-            let writer = Arc::clone(&writer);
-            let stop = Arc::clone(&hb_stop);
-            let period = Duration::from_millis(net.heartbeat_ms.max(1));
-            Some(std::thread::spawn(move || {
-                while !stop.load(Ordering::Relaxed) {
-                    std::thread::sleep(period);
-                    if stop.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
-                    if w.send(FrameType::Heartbeat, rank as u8, 0, &[]).is_err() {
-                        // Successor is gone; the trainer will find out
-                        // through its own send/recv errors.
-                        break;
-                    }
-                }
-            }))
-        };
+        let (hb_stop, hb_join) = spawn_heartbeat(&writer, net.heartbeat_ms, rank as u8);
 
         Ok(Self {
             rank,
             n,
+            orig_rank: rank,
+            addrs: spec.addrs.clone(),
+            members: (0..n).collect(),
+            epoch: 0,
+            fingerprint,
+            net: *net,
+            listener,
+            fault,
+            srtt_ms: 0.0,
             writer,
             reader,
+            hb_stop,
+            hb_join,
+        })
+    }
+
+    /// Build an endpoint directly from a formed (regrouped) view — the
+    /// path a respawned rank takes when it joins a regroup instead of
+    /// completing the launch Hello exchange.
+    fn from_view(
+        listener: TcpListener,
+        spec: &RingSpec,
+        net: &NetConfig,
+        fingerprint: u64,
+        fault: Option<FaultSpec>,
+        view: View,
+    ) -> anyhow::Result<Self> {
+        let io_timeout = Duration::from_millis(net.io_timeout_ms.max(1));
+        let writer = Arc::new(Mutex::new(FrameWriter {
+            stream: view.out,
+            fault,
+            epoch: view.epoch,
+            data_frames: 0,
+            frames_sent: 0,
+            bytes_sent: 0,
+            slice_bytes_sent: 0,
+            heartbeats_sent: 0,
+        }));
+        let (hb_stop, hb_join) = spawn_heartbeat(&writer, net.heartbeat_ms, view.position as u8);
+        Ok(Self {
+            rank: view.position,
+            n: view.members.len(),
+            orig_rank: spec.rank,
+            addrs: spec.addrs.clone(),
+            members: view.members,
+            epoch: view.epoch,
+            fingerprint,
+            net: *net,
+            listener,
+            fault,
+            srtt_ms: 0.0,
+            writer,
+            reader: FrameReader::new(view.inc, io_timeout),
             hb_stop,
             hb_join,
         })
@@ -524,6 +1171,37 @@ impl Ring {
         self.n
     }
 
+    /// Membership epoch (view number) of the current ring.
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Original ranks alive in the current view, sorted ascending;
+    /// `rank()` is this process's index (position) in it.
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// Original launch rank of this process.
+    pub fn orig_rank(&self) -> usize {
+        self.orig_rank
+    }
+
+    /// Feed one completed sync round's wall time into the adaptive
+    /// deadline: `srtt += (sample - srtt)/8` (TCP-RTT style EWMA), and
+    /// the effective frame deadline becomes `max(io_timeout_ms,
+    /// 4·srtt)` — the configured value is a FLOOR, never shortened.
+    pub fn observe_round(&mut self, wall: Duration) {
+        let ms = wall.as_secs_f64() * 1e3;
+        self.srtt_ms = if self.srtt_ms == 0.0 {
+            ms
+        } else {
+            self.srtt_ms + (ms - self.srtt_ms) / 8.0
+        };
+        let eff = (self.net.io_timeout_ms as f64).max(4.0 * self.srtt_ms);
+        self.reader.io_timeout = Duration::from_millis(eff.ceil() as u64);
+    }
+
     fn send_frame(&self, ftype: FrameType, origin: u8, round: u32, payload: &[u8]) -> anyhow::Result<()> {
         self.writer
             .lock()
@@ -531,12 +1209,58 @@ impl Ring {
             .send(ftype, origin, round, payload)
     }
 
+    /// Send one frame stamped with an EXPLICIT epoch (regroup announces
+    /// target the NEXT view while the writer still carries the current
+    /// one).
+    fn send_frame_at(
+        &self,
+        ftype: FrameType,
+        origin: u8,
+        round: u32,
+        epoch: u32,
+        payload: &[u8],
+    ) -> anyhow::Result<()> {
+        let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
+        let old = w.epoch;
+        w.epoch = epoch;
+        let res = w.send(ftype, origin, round, payload);
+        w.epoch = old;
+        res
+    }
+
     /// Receive the next DATA frame: heartbeats are skipped (each resets
     /// the deadline simply by arriving), aborts are forwarded around
-    /// the ring and surfaced as errors.
+    /// the ring and surfaced as FATAL errors.  Frames from an older
+    /// membership epoch are silently dropped (fencing); a newer epoch —
+    /// or a `Regroup` announce — surfaces as a recoverable
+    /// [`PeerFailure`], as do transport-level receive failures.
     fn recv_data(&mut self) -> anyhow::Result<Frame> {
         loop {
-            let f = self.reader.recv()?;
+            let f = self.reader.recv().map_err(|e| {
+                anyhow::Error::new(PeerFailure {
+                    regroup_epoch: 0,
+                    reason: format!("recv from predecessor failed: {e:#}"),
+                })
+            })?;
+            if f.epoch < self.epoch {
+                continue; // stale frame from a dead view: fenced off
+            }
+            if f.ftype == FrameType::Regroup || f.epoch > self.epoch {
+                if f.ftype == FrameType::Regroup {
+                    // Forward the announce so the whole ring learns
+                    // fast; best-effort, the successor may be the dead
+                    // peer itself.
+                    let _ =
+                        self.send_frame_at(FrameType::Regroup, f.origin, f.round, f.epoch, &f.payload);
+                }
+                return Err(anyhow::Error::new(PeerFailure {
+                    regroup_epoch: f.epoch,
+                    reason: format!(
+                        "rank {} announced a regroup for epoch {} (current epoch {})",
+                        f.origin, f.epoch, self.epoch
+                    ),
+                }));
+            }
             match f.ftype {
                 FrameType::Heartbeat => continue,
                 FrameType::Abort => {
@@ -551,6 +1275,59 @@ impl Ring {
                 _ => return Ok(f),
             }
         }
+    }
+
+    /// Tear down the current view and form the surviving one at (at
+    /// least) `max(proposal, epoch + 1)`.  On success the endpoint
+    /// carries the new epoch, member set and position, with the
+    /// transport counters carried over; on failure the caller should
+    /// degrade to abort semantics.
+    pub fn regroup(&mut self, proposal: u32, grace_ms: u64) -> anyhow::Result<()> {
+        let target = proposal.max(self.epoch + 1);
+        // Announce the regroup on the old successor link so peers that
+        // have not noticed the failure yet join fast; best-effort — the
+        // successor may be the dead rank.
+        let _ = self.send_frame_at(
+            FrameType::Regroup,
+            self.rank as u8,
+            0,
+            target,
+            &self.fingerprint.to_le_bytes(),
+        );
+        // Stop the heartbeat thread before replacing the writer stream.
+        self.hb_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.hb_join.take() {
+            let _ = h.join();
+        }
+        let view = form_view(
+            &self.listener,
+            &self.addrs,
+            self.orig_rank,
+            self.fingerprint,
+            &self.net,
+            self.fault,
+            target,
+            Duration::from_millis(grace_ms),
+        )?;
+        {
+            // Swap the link streams in place: cumulative counters (and
+            // the deterministic data-frame fault counter) survive the
+            // view change.
+            let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
+            w.stream = view.out;
+            w.epoch = view.epoch;
+        }
+        self.reader.stream = view.inc;
+        self.reader.io_timeout = Duration::from_millis(self.net.io_timeout_ms.max(1));
+        self.srtt_ms = 0.0;
+        self.rank = view.position;
+        self.n = view.members.len();
+        self.members = view.members;
+        self.epoch = view.epoch;
+        let (stop, join) = spawn_heartbeat(&self.writer, self.net.heartbeat_ms, self.rank as u8);
+        self.hb_stop = stop;
+        self.hb_join = join;
+        Ok(())
     }
 
     /// Best-effort failure propagation: send an `Abort` with a reason.
@@ -580,7 +1357,13 @@ impl Ring {
         while sent < out.len() || got.len() < in_len {
             if sent < out.len() {
                 let end = (sent + CHUNK_PAYLOAD).min(out.len());
-                self.send_frame(ftype, origin_out as u8, round, &out[sent..end])?;
+                self.send_frame(ftype, origin_out as u8, round, &out[sent..end])
+                    .map_err(|e| {
+                        anyhow::Error::new(PeerFailure {
+                            regroup_epoch: 0,
+                            reason: format!("send to successor failed: {e:#}"),
+                        })
+                    })?;
                 sent = end;
             }
             if got.len() < in_len {
@@ -853,6 +1636,7 @@ mod tests {
             connect_timeout_ms: 5_000,
             io_timeout_ms: 5_000,
             heartbeat_ms: 50,
+            rejoin_grace_ms: 0,
         }
     }
 
@@ -886,18 +1670,14 @@ mod tests {
         let mut w = FrameWriter {
             stream: out,
             fault: None,
+            epoch: 3,
             data_frames: 0,
             frames_sent: 0,
             bytes_sent: 0,
             slice_bytes_sent: 0,
             heartbeats_sent: 0,
         };
-        let mut r = FrameReader {
-            stream: inc,
-            io_timeout: Duration::from_millis(500),
-            frames_recv: 0,
-            bytes_recv: 0,
-        };
+        let mut r = FrameReader::new(inc, Duration::from_millis(500));
 
         w.send(FrameType::Status, 2, 7, &[1, 2, 3]).unwrap();
         w.send(FrameType::Heartbeat, 2, 0, &[]).unwrap();
@@ -905,9 +1685,11 @@ mod tests {
         assert_eq!(f.ftype, FrameType::Status);
         assert_eq!(f.origin, 2);
         assert_eq!(f.round, 7);
+        assert_eq!(f.epoch, 3, "epoch must survive the wire roundtrip");
         assert_eq!(f.payload, vec![1, 2, 3]);
         let hb = r.recv().unwrap();
         assert_eq!(hb.ftype, FrameType::Heartbeat);
+        assert_eq!(hb.epoch, 3);
         assert!(hb.payload.is_empty());
 
         // Corrupt frame: valid header, payload checksum wrong.
@@ -917,6 +1699,7 @@ mod tests {
         raw.push(FrameType::Status as u8);
         raw.push(0);
         raw.extend_from_slice(&0u32.to_le_bytes());
+        raw.extend_from_slice(&0u32.to_le_bytes()); // epoch
         raw.extend_from_slice(&2u32.to_le_bytes());
         raw.extend_from_slice(&0xBAD0_BAD0_BAD0_BAD0u64.to_le_bytes());
         raw.extend_from_slice(&[9, 9]);
@@ -937,12 +1720,7 @@ mod tests {
         let mut out = TcpStream::connect(addr).unwrap();
         let (inc, _) = l.accept().unwrap();
         inc.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
-        let mut r = FrameReader {
-            stream: inc,
-            io_timeout: Duration::from_millis(500),
-            frames_recv: 0,
-            bytes_recv: 0,
-        };
+        let mut r = FrameReader::new(inc, Duration::from_millis(500));
         // Header promising 100 payload bytes, connection closed after 10.
         let payload = [7u8; 100];
         let mut raw = Vec::new();
@@ -951,6 +1729,7 @@ mod tests {
         raw.push(FrameType::Slice as u8);
         raw.push(0);
         raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&0u32.to_le_bytes()); // epoch
         raw.extend_from_slice(&100u32.to_le_bytes());
         raw.extend_from_slice(&fnv1a(&payload).to_le_bytes());
         raw.extend_from_slice(&payload[..10]);
@@ -1124,15 +1903,15 @@ mod tests {
         assert_eq!(gather_scatter_wire_bytes(&[], 3, 0, 8), 0);
         assert_eq!(gather_scatter_wire_bytes(&[0..10], 1, 0, 8), 0);
         // 2 ranks, 3 rows, dim 1: block = 3*8 = 24 bytes, one chunk.
-        // Gather: 1 send of 24+24; scatter: origin = rank itself owns
+        // Gather: 1 send of 24+28; scatter: origin = rank itself owns
         // ceil/floor split of rows by parity.
         let due = vec![0..3u32];
         let b = gather_scatter_wire_bytes(&due, 2, 0, 1);
-        // rank 0 owns rows 0 and 2 (2 rows): scatter block 2*8=16 + 24.
-        assert_eq!(b, (24 + 24) + (16 + 24));
+        // rank 0 owns rows 0 and 2 (2 rows): scatter block 2*8=16 + 28.
+        assert_eq!(b, (24 + 28) + (16 + 28));
         let b1 = gather_scatter_wire_bytes(&due, 2, 1, 1);
-        // rank 1 owns row 1: scatter block 8 + 24.
-        assert_eq!(b1, (24 + 24) + (8 + 24));
+        // rank 1 owns row 1: scatter block 8 + 28.
+        assert_eq!(b1, (24 + 28) + (8 + 28));
     }
 
     #[test]
@@ -1150,8 +1929,196 @@ mod tests {
             .filter(|&r| r % 2 == 0)
             .count() as u64
             * 8;
-        let expect = (block + nchunks(block) * 24) + (own + nchunks(own) * 24);
+        let hdr = HEADER_BYTES as u64;
+        let expect = (block + nchunks(block) * hdr) + (own + nchunks(own) * hdr);
         assert_eq!(b, expect);
         assert_eq!(nchunks(block), 3);
+    }
+
+    // -- PR 7: decode hardening, epoch fencing, adaptive deadline, regroup --
+
+    #[test]
+    fn oversized_length_header_errs_before_allocating() {
+        // Valid magic/version/type with a length field far beyond
+        // MAX_PAYLOAD: the reader must reject from the header alone —
+        // if it allocated from the length prefix first, this test would
+        // OOM rather than fail an assertion.
+        let mut raw = Vec::new();
+        raw.extend_from_slice(&MAGIC);
+        raw.extend_from_slice(&VERSION.to_le_bytes());
+        raw.push(FrameType::Slice as u8);
+        raw.push(0);
+        raw.extend_from_slice(&0u32.to_le_bytes());
+        raw.extend_from_slice(&0u32.to_le_bytes());
+        raw.extend_from_slice(&u32::MAX.to_le_bytes());
+        raw.extend_from_slice(&0u64.to_le_bytes());
+        let mut r = FrameReader::new(std::io::Cursor::new(raw), Duration::from_millis(50));
+        let err = r.recv().unwrap_err().to_string();
+        assert!(err.contains("exceeds protocol max"), "{err}");
+    }
+
+    #[test]
+    fn fuzzed_frames_never_panic_and_corruption_is_caught() {
+        // Deterministic xorshift64* stream: random bytes, truncations
+        // of a valid frame, and single-bit flips.  Every input must
+        // yield a clean Err — except flips inside the type/origin/
+        // round/epoch fields (bytes 6..16), which can legally decode as
+        // a different valid frame; even those must never panic.
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        };
+        let valid = encode_frame(FrameType::Status, 1, 7, 2, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        for trial in 0..3000usize {
+            let (bytes, flipped_byte) = match trial % 3 {
+                0 => {
+                    let len = (next() % 96) as usize;
+                    ((0..len).map(|_| next() as u8).collect::<Vec<u8>>(), None)
+                }
+                1 => {
+                    let cut = next() as usize % valid.len();
+                    (valid[..cut].to_vec(), None)
+                }
+                _ => {
+                    let mut b = valid.clone();
+                    let bit = next() as usize % (b.len() * 8);
+                    b[bit / 8] ^= 1 << (bit % 8);
+                    (b, Some(bit / 8))
+                }
+            };
+            let mut r = FrameReader::new(std::io::Cursor::new(bytes), Duration::from_millis(10));
+            let res = r.recv();
+            match flipped_byte {
+                Some(b) if (6..16).contains(&b) => {} // may decode differently
+                _ => assert!(res.is_err(), "trial {trial}: corrupt input accepted"),
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_deadline_tracks_ewma_with_floor() {
+        let (listeners, specs) = local_specs(2);
+        let mut handles = Vec::new();
+        for (l, spec) in listeners.into_iter().zip(specs) {
+            handles.push(std::thread::spawn(move || {
+                let mut net = fast_net();
+                net.io_timeout_ms = 100; // low floor so growth is visible
+                let mut ring = Ring::establish_on(l, &spec, &net, 11).unwrap();
+                if ring.rank() == 0 {
+                    // First sample seeds srtt directly: deadline 4·srtt.
+                    ring.observe_round(Duration::from_millis(1000));
+                    assert_eq!(ring.srtt_ms, 1000.0);
+                    assert_eq!(ring.reader.io_timeout, Duration::from_millis(4000));
+                    // EWMA step: srtt += (0 - srtt)/8.
+                    ring.observe_round(Duration::from_millis(0));
+                    assert_eq!(ring.srtt_ms, 875.0);
+                    assert_eq!(ring.reader.io_timeout, Duration::from_millis(3500));
+                    // Fast rounds decay toward — but never below — the
+                    // configured floor.
+                    for _ in 0..200 {
+                        ring.observe_round(Duration::from_millis(0));
+                    }
+                    assert_eq!(ring.reader.io_timeout, Duration::from_millis(100));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn stale_epochs_are_fenced_and_newer_epochs_surface_as_recoverable() {
+        let (listeners, specs) = local_specs(2);
+        let mut handles = Vec::new();
+        for (l, spec) in listeners.into_iter().zip(specs) {
+            handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
+                let mut ring = Ring::establish_on(l, &spec, &fast_net(), 21)?;
+                if ring.rank() == 1 {
+                    // A frame from a dead view (epoch 0 < receiver's 2),
+                    // the frame the receiver should actually see, then a
+                    // newer-epoch frame.
+                    ring.send_frame_at(FrameType::Status, 1, 5, 0, &[1])?;
+                    ring.send_frame_at(FrameType::Status, 1, 6, 2, &[2])?;
+                    ring.send_frame_at(FrameType::Status, 1, 7, 3, &[3])?;
+                    // Hold the link open until the peer read everything.
+                    std::thread::sleep(Duration::from_millis(600));
+                    Ok(())
+                } else {
+                    ring.epoch = 2; // as if this side regrouped twice
+                    let f = ring.recv_data()?;
+                    assert_eq!((f.round, f.epoch, &f.payload[..]), (6, 2, &[2u8][..]));
+                    let err = ring.recv_data().unwrap_err();
+                    let pf = peer_failure(&err).expect("newer epoch must be recoverable");
+                    assert_eq!(pf.regroup_epoch, 3);
+                    Ok(())
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn survivors_regroup_into_smaller_working_ring() {
+        let (listeners, specs) = local_specs(3);
+        let mut handles = Vec::new();
+        for (l, spec) in listeners.into_iter().zip(specs) {
+            handles.push(std::thread::spawn(move || {
+                let rank = spec.rank;
+                let mut ring = Ring::establish_on(l, &spec, &fast_net(), 31).unwrap();
+                if rank == 1 {
+                    drop(ring); // die silently (listener closes too)
+                    return None;
+                }
+                // Let the dead rank's sockets close, then heal.
+                std::thread::sleep(Duration::from_millis(100));
+                ring.regroup(1, 0).unwrap();
+                assert_eq!(ring.members(), &[0, 2]);
+                assert_eq!(ring.nranks(), 2);
+                assert!(ring.epoch() >= 1);
+                // The healed ring is fully operational.
+                let pos = ring.rank() as u64;
+                Some((pos, ring.circulate_u64s(&[pos + 40], 1).unwrap()))
+            }));
+        }
+        for h in handles {
+            if let Some((pos, blocks)) = h.join().unwrap() {
+                assert_eq!(blocks.len(), 2);
+                for (o, vals) in blocks.iter().enumerate() {
+                    assert_eq!(vals, &vec![o as u64 + 40], "position {pos}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sole_survivor_continues_solo() {
+        let (listeners, specs) = local_specs(2);
+        let mut handles = Vec::new();
+        for (l, spec) in listeners.into_iter().zip(specs) {
+            handles.push(std::thread::spawn(move || {
+                let rank = spec.rank;
+                let mut ring = Ring::establish_on(l, &spec, &fast_net(), 41).unwrap();
+                if rank == 1 {
+                    drop(ring);
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(100));
+                ring.regroup(1, 0).unwrap();
+                assert_eq!(ring.members(), &[0]);
+                assert_eq!(ring.nranks(), 1);
+                // Collectives degenerate to the identity at n = 1.
+                let blocks = ring.circulate_u64s(&[7, 8], 2).unwrap();
+                assert_eq!(blocks, vec![vec![7, 8]]);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

@@ -3,6 +3,37 @@
 use super::fault::FaultSpec;
 use super::sync::SyncPolicy;
 
+/// What the TCP driver does when a peer fails mid-run (`--on-failure`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OnFailure {
+    /// Fail-stop (the PR-6 semantics, bit-for-bit): propagate `Abort`
+    /// around the ring and exit non-zero.
+    #[default]
+    Abort,
+    /// Self-heal: survivors regroup into a smaller ring at the next
+    /// membership epoch, roll back to the newest checkpoint round every
+    /// survivor holds, re-shard the corpus over the shrunken world
+    /// size, and continue.  Requires `--checkpoint`.
+    Shrink,
+    /// Like `Shrink`, but survivors hold the regroup open for the
+    /// rejoin grace window first, so a promptly respawned rank (same
+    /// argv) is re-admitted and the ORIGINAL membership is restored.
+    Rejoin,
+}
+
+impl std::str::FromStr for OnFailure {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.trim() {
+            "abort" => Ok(Self::Abort),
+            "shrink" => Ok(Self::Shrink),
+            "rejoin" => Ok(Self::Rejoin),
+            other => anyhow::bail!("unknown --on-failure '{other}' (abort|shrink|rejoin)"),
+        }
+    }
+}
+
 /// Configuration of one distributed run (shared by all replicas).
 #[derive(Clone, Debug)]
 pub struct DistConfig {
@@ -19,6 +50,8 @@ pub struct DistConfig {
     /// wire faults are read from the environment by the transport
     /// itself.
     pub fault: Option<FaultSpec>,
+    /// TCP-mode failure policy (thread mode always fails fast).
+    pub on_failure: OnFailure,
 }
 
 impl DistConfig {
@@ -36,6 +69,7 @@ impl DistConfig {
             policy: SyncPolicy::submodel_default(),
             scale_lr: true,
             fault: None,
+            on_failure: OnFailure::Abort,
         }
     }
 }
@@ -61,5 +95,14 @@ mod tests {
         assert_eq!(d.nodes, 4);
         assert!(d.scale_lr);
         assert!(!matches!(d.policy, SyncPolicy::Full));
+        assert_eq!(d.on_failure, OnFailure::Abort);
+    }
+
+    #[test]
+    fn on_failure_parses_and_rejects() {
+        assert_eq!("abort".parse::<OnFailure>().unwrap(), OnFailure::Abort);
+        assert_eq!("shrink".parse::<OnFailure>().unwrap(), OnFailure::Shrink);
+        assert_eq!("rejoin".parse::<OnFailure>().unwrap(), OnFailure::Rejoin);
+        assert!("retry".parse::<OnFailure>().is_err());
     }
 }

@@ -87,7 +87,12 @@ impl SyncPolicy {
 /// Callers partition rows disjointly across nodes (see
 /// `train::allreduce_rows`), so no two threads ever touch the same row —
 /// the Hogwild raw-row access is race-free here by construction.
-pub(crate) fn average_row(models: &[SharedModel], r: u32, scratch: &mut [f32]) {
+///
+/// Public because it is the collective's ARITHMETIC ground truth: the
+/// TCP ring's `allreduce_rows` (and hence the rollback merge in
+/// elastic recovery) is pinned bitwise-identical to this loop, and the
+/// recovery-determinism suite reconstructs merges with it.
+pub fn average_row(models: &[SharedModel], r: u32, scratch: &mut [f32]) {
     let inv = 1.0 / models.len() as f32;
     // M_in
     scratch.fill(0.0);

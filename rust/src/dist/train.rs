@@ -52,8 +52,8 @@ use std::time::Instant;
 
 use super::barrier::{AbortBarrier, Poisoned};
 use super::fault::FaultSpec;
-use super::net::{gather_scatter_wire_bytes, NetConfig, NetStats, Ring, RingSpec};
-use super::node::DistConfig;
+use super::net::{gather_scatter_wire_bytes, peer_failure, NetConfig, NetStats, Ring, RingSpec};
+use super::node::{DistConfig, OnFailure};
 use super::sync::{average_row, SyncPolicy};
 use crate::config::TrainConfig;
 use crate::corpus::reader::MAX_SENTENCE_LEN;
@@ -121,6 +121,37 @@ impl CheckpointPolicy {
             resume: false,
         }
     }
+}
+
+/// Start state of one training ATTEMPT — either the launch attempt
+/// (fresh init / `--resume`) or a post-recovery attempt: the model every
+/// member starts from, the corpus passes already completed by previous
+/// attempts, and the words those attempts already accounted.
+///
+/// A recovery attempt is deliberately a FRESH run over the remaining
+/// passes: new shard geometry over the surviving world size, new
+/// per-position RNG streams, and an lr schedule spanning only the
+/// remaining words (restarting at the configured peak rate).  That makes
+/// a healed run bitwise-equal to a clean run launched from the same
+/// rollback state — the recovery-determinism test oracle.
+#[derive(Debug)]
+pub struct AttemptStart {
+    /// The (merged) model every member begins the attempt with.
+    pub model: SharedModel,
+    /// Corpus passes completed before this attempt.
+    pub epochs_done: usize,
+    /// Raw words accounted by previous attempts (survivors' checkpoint
+    /// totals; a dead rank's post-checkpoint words are lost — see
+    /// EXPERIMENTS.md §Elastic-recovery for the honest accounting).
+    pub words_base: u64,
+}
+
+/// Fingerprint stamped into an attempt's checkpoints: the launch
+/// fingerprint for epoch 0 (PR-6 layout, `--resume` compatible), salted
+/// with the membership epoch for recovery attempts so rollback never
+/// crosses attempts.
+fn attempt_fp(fp: u64, ck_epoch: u32) -> u64 {
+    fp ^ (ck_epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 /// The per-node learning-rate schedule: spans this node's share of the
@@ -575,6 +606,13 @@ pub fn train_tcp_ring(
 
 /// [`train_tcp_ring`] over an optionally pre-bound listener (tests bind
 /// `127.0.0.1:0` to learn ports before launching ranks).
+///
+/// Under `--on-failure {shrink,rejoin}` this is the self-healing driver:
+/// the training loop runs inside a recovery loop that, on a recoverable
+/// peer failure, regroups the ring into the surviving view, elects the
+/// rollback checkpoint round, merges the survivors' rollback models and
+/// restarts a fresh attempt over the remaining corpus passes.  Any
+/// failure during recovery itself degrades to abort semantics.
 #[allow(clippy::too_many_arguments)]
 pub fn train_tcp_ring_on(
     listener: Option<TcpListener>,
@@ -593,6 +631,11 @@ pub fn train_tcp_ring_on(
         !ckpt.resume || ckpt.base.is_some(),
         "--resume requires --checkpoint"
     );
+    anyhow::ensure!(
+        dist.on_failure == OnFailure::Abort || ckpt.base.is_some(),
+        "--on-failure {:?} requires --checkpoint (recovery rolls back to checkpoints)",
+        dist.on_failure
+    );
     crate::linalg::simd::configure(cfg.simd)?;
     let n = spec.nranks();
     let rank = spec.rank;
@@ -602,27 +645,54 @@ pub fn train_tcp_ring_on(
 
     let sampler = UnigramSampler::alias(vocab, cfg.unigram_power);
     let subsampler = Subsampler::new(vocab, cfg.sample);
-    let total_words = vocab.total_words() * cfg.epochs as u64;
     let source = Corpus::open(corpus, vocab, &cfg.corpus_cache)?;
-    let shard = shards_for_len(source.shard_len(), n)[rank];
 
-    let mut ring = match listener {
-        Some(l) => Ring::establish_on(l, spec, net, fp)?,
-        None => Ring::establish(spec, net, fp)?,
+    // Deterministic "respawned rank joins late" delay
+    // (`PW2V_FAULT respawn-after=MS`), injected before ring formation.
+    if let Some(f) = FaultSpec::from_env()? {
+        if let Some(ms) = f.respawn_delay_ms() {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+
+    let elastic = dist.on_failure != OnFailure::Abort;
+    let mut ring = match (listener, elastic) {
+        (Some(l), false) => Ring::establish_on(l, spec, net, fp)?,
+        (Some(l), true) => Ring::establish_elastic(l, spec, net, fp)?,
+        (None, false) => Ring::establish(spec, net, fp)?,
+        (None, true) => {
+            // A respawned rank re-binds the port its dead predecessor
+            // process freed moments ago; lingering half-closed sockets
+            // can hold the address briefly, so retry within the connect
+            // budget instead of failing the rejoin.
+            let deadline =
+                Instant::now() + std::time::Duration::from_millis(net.connect_timeout_ms.max(1));
+            let l = loop {
+                match TcpListener::bind(&spec.addrs[rank]) {
+                    Ok(l) => break l,
+                    Err(_) if Instant::now() < deadline => {
+                        std::thread::sleep(std::time::Duration::from_millis(50));
+                    }
+                    Err(e) => {
+                        anyhow::bail!("rank {rank}: bind {}: {e}", spec.addrs[rank])
+                    }
+                }
+            };
+            Ring::establish_elastic(l, spec, net, fp)?
+        }
     };
     let start = Instant::now();
-    let res = tcp_node_loop(
+    let res = drive_ring(
         &mut ring,
         cfg,
         dist,
+        net,
         ckpt,
         fp,
         &source,
-        shard,
         vocab,
         &sampler,
         &subsampler,
-        total_words,
     );
     match res {
         Ok((model, words, stats)) => Ok(DistOutcome {
@@ -641,11 +711,233 @@ pub fn train_tcp_ring_on(
     }
 }
 
-/// Newest checkpoint with EXACTLY the negotiated round among a rank's
-/// two slots.
-fn checkpoint_at_round(base: &Path, rank: usize, round: u64) -> Option<Checkpoint> {
+/// Run a ring attempt from an explicit [`AttemptStart`] instead of a
+/// fresh init: every rank of `spec` trains the REMAINING
+/// `cfg.epochs - start.epochs_done` corpus passes from `start.model`
+/// over `spec.nranks()` shards.  This is exactly the attempt a healed
+/// run restarts after rollback, exposed so tests can build the
+/// reference run the recovery-determinism guarantee is stated against.
+#[allow(clippy::too_many_arguments)]
+pub fn train_tcp_ring_from(
+    listener: Option<TcpListener>,
+    cfg: &TrainConfig,
+    dist: &DistConfig,
+    spec: &RingSpec,
+    net: &NetConfig,
+    ckpt: &CheckpointPolicy,
+    corpus: &Path,
+    vocab: &Vocab,
+    start: AttemptStart,
+) -> anyhow::Result<DistOutcome> {
+    cfg.validate()?;
+    anyhow::ensure!(dist.sync_interval >= 1, "sync_interval must be >= 1");
+    anyhow::ensure!(ckpt.every >= 1, "checkpoint interval must be >= 1");
+    crate::linalg::simd::configure(cfg.simd)?;
+    let rank = spec.rank;
+    let fp = cfg.fingerprint() ^ vocab.fingerprint() ^ spec.nranks() as u64;
+    let sampler = UnigramSampler::alias(vocab, cfg.unigram_power);
+    let subsampler = Subsampler::new(vocab, cfg.sample);
+    let source = Corpus::open(corpus, vocab, &cfg.corpus_cache)?;
+    let mut ring = match listener {
+        Some(l) => Ring::establish_on(l, spec, net, fp)?,
+        None => Ring::establish(spec, net, fp)?,
+    };
+    let t0 = Instant::now();
+    let res = tcp_node_loop(
+        &mut ring,
+        cfg,
+        dist,
+        ckpt,
+        fp,
+        &source,
+        vocab,
+        &sampler,
+        &subsampler,
+        Some(start),
+        0,
+    );
+    match res {
+        Ok((model, words, stats)) => Ok(DistOutcome {
+            model,
+            words,
+            secs: t0.elapsed().as_secs_f64(),
+            sync_stats: vec![stats],
+            net: Some(ring.stats()),
+        }),
+        Err(e) => {
+            ring.abort(&format!("rank {rank}: {e:#}"));
+            Err(e.context(format!("rank {rank} failed")))
+        }
+    }
+}
+
+/// The recovery loop around [`tcp_node_loop`]: run attempts until one
+/// completes.  Under `--on-failure abort` any error is final (the PR-6
+/// path, bit for bit).  Under shrink/rejoin a recoverable
+/// [`peer_failure`] triggers regroup → rollback election → a fresh
+/// attempt over the healed view; any OTHER error — including a failure
+/// during the recovery itself — propagates, degrading to abort
+/// semantics.
+#[allow(clippy::too_many_arguments)]
+fn drive_ring(
+    ring: &mut Ring,
+    cfg: &TrainConfig,
+    dist: &DistConfig,
+    net: &NetConfig,
+    ckpt: &CheckpointPolicy,
+    fp: u64,
+    source: &Corpus<'_>,
+    vocab: &Vocab,
+    sampler: &UnigramSampler,
+    subsampler: &Subsampler,
+) -> anyhow::Result<(SharedModel, u64, SyncStats)> {
+    // Sync accounting accumulated across attempts.
+    let mut acc = SyncStats::default();
+    // Checkpoint namespace of the attempt currently on disk:
+    // (membership epoch, this process's position in that view).
+    let mut prev_ck = (0u32, ring.orig_rank());
+    // Progress base the NEXT attempt inherits.
+    let (mut base_epochs, mut base_words) = (0usize, 0u64);
+    let mut start: Option<AttemptStart> = None;
+
+    if ring.epoch() > 0 {
+        // `establish_elastic` joined a regroup directly: this is a
+        // respawned rank re-admitted under `--on-failure rejoin`.
+        // Recover before training (its launch-attempt checkpoints feed
+        // the election like every other member's).
+        let s = elect_rollback(ring, cfg, ckpt, fp, vocab, prev_ck, base_epochs, base_words)?;
+        (base_epochs, base_words) = (s.epochs_done, s.words_base);
+        prev_ck = (ring.epoch(), ring.rank());
+        start = Some(s);
+    }
+
+    loop {
+        // Launch attempt = epoch 0 (PR-6 checkpoint layout); healed
+        // attempts namespace their checkpoints by membership epoch.
+        let ck_epoch = ring.epoch();
+        let res = tcp_node_loop(
+            ring, cfg, dist, ckpt, fp, source, vocab, sampler, subsampler,
+            start.take(), ck_epoch,
+        );
+        let err = match res {
+            Ok((model, words, stats)) => {
+                acc.rounds += stats.rounds;
+                acc.rows_synced += stats.rows_synced;
+                acc.wire_bytes += stats.wire_bytes;
+                return Ok((model, words, acc));
+            }
+            Err(e) => e,
+        };
+        if dist.on_failure == OnFailure::Abort {
+            return Err(err);
+        }
+        let Some(pf) = peer_failure(&err) else {
+            return Err(err); // not a peer failure: abort semantics
+        };
+        let proposal = pf.regroup_epoch;
+        eprintln!(
+            "rank {}: peer failure at epoch {} ({}); regrouping",
+            ring.orig_rank(),
+            ring.epoch(),
+            pf.reason
+        );
+        let grace = match dist.on_failure {
+            OnFailure::Rejoin => net.rejoin_grace_ms,
+            _ => 0,
+        };
+        ring.regroup(proposal, grace)
+            .map_err(|e| e.context("regroup after peer failure (degrading to abort)"))?;
+        let s = elect_rollback(ring, cfg, ckpt, fp, vocab, prev_ck, base_epochs, base_words)
+            .map_err(|e| e.context("rollback recovery (degrading to abort)"))?;
+        (base_epochs, base_words) = (s.epochs_done, s.words_base);
+        prev_ck = (ring.epoch(), ring.rank());
+        start = Some(s);
+    }
+}
+
+/// Rollback election on a freshly healed view: agree on the newest
+/// checkpoint round EVERY member can load from its previous attempt,
+/// load + verify it, merge the members' rollback models into one (a
+/// full-model allreduce — every member ends bitwise-identical), and
+/// account the progress the merged state embodies.
+#[allow(clippy::too_many_arguments)]
+fn elect_rollback(
+    ring: &mut Ring,
+    cfg: &TrainConfig,
+    ckpt: &CheckpointPolicy,
+    fp: u64,
+    vocab: &Vocab,
+    prev_ck: (u32, usize),
+    base_epochs: usize,
+    base_words: u64,
+) -> anyhow::Result<AttemptStart> {
+    let base = ckpt
+        .base
+        .as_deref()
+        .ok_or_else(|| anyhow::anyhow!("recovery requires --checkpoint"))?;
+    let (prev_epoch, prev_pos) = prev_ck;
+    // Round election (same shape as `--resume` negotiation, but over
+    // the healed membership and the previous attempt's namespace).
+    let latest = model_io::latest_checkpoint_epoch(base, prev_epoch, prev_pos)
+        .map(|c| c.round)
+        .unwrap_or(0);
+    let all = ring.circulate_u64s(&[latest], 0)?;
+    let target = all.iter().map(|v| v[0]).min().unwrap_or(0);
+    anyhow::ensure!(
+        target > 0,
+        "cannot roll back: a member of the healed view has no loadable \
+         checkpoint (latest rounds per member: {:?})",
+        all.iter().map(|v| v[0]).collect::<Vec<_>>()
+    );
+    let ck = checkpoint_at_round(base, prev_epoch, prev_pos, target).ok_or_else(|| {
+        anyhow::anyhow!(
+            "no checkpoint at elected rollback round {target} \
+             (attempt epoch {prev_epoch}, position {prev_pos}; have latest {latest})"
+        )
+    })?;
+    anyhow::ensure!(
+        ck.fingerprint == attempt_fp(fp, prev_epoch),
+        "rollback checkpoint was written under a different config or \
+         attempt (fingerprint mismatch) — refusing to recover"
+    );
+    anyhow::ensure!(
+        ck.m_in.vocab() == vocab.len() && ck.m_in.dim() == cfg.dim,
+        "rollback checkpoint model is {}x{}, expected {}x{}",
+        ck.m_in.vocab(),
+        ck.m_in.dim(),
+        vocab.len(),
+        cfg.dim
+    );
+    // Attempt-relative progress: every member of one attempt started
+    // from the same base, so min/sum over the view compose with it.
+    let agg = ring.circulate_u64s(&[ck.epoch as u64, ck.words_done], 1)?;
+    let epochs_min = agg.iter().map(|v| v[0]).min().unwrap_or(0) as usize;
+    let words: u64 = agg.iter().map(|v| v[1]).sum();
+    let model = SharedModel::new(ck.m_in, ck.m_out);
+    if ring.nranks() > 1 && vocab.len() > 0 {
+        ring.allreduce_rows(&model, &[0..vocab.len() as u32], 2)?;
+    }
+    eprintln!(
+        "rank {}: rolled back to round {target} of attempt epoch {prev_epoch}: \
+         {} member(s), {} corpus pass(es) done, continuing as position {}",
+        ring.orig_rank(),
+        ring.nranks(),
+        base_epochs + epochs_min,
+        ring.rank()
+    );
+    Ok(AttemptStart {
+        model,
+        epochs_done: base_epochs + epochs_min,
+        words_base: base_words + words,
+    })
+}
+
+/// Newest checkpoint with EXACTLY the negotiated round among a
+/// position's two slots in attempt-epoch `epoch`'s namespace.
+fn checkpoint_at_round(base: &Path, epoch: u32, pos: usize, round: u64) -> Option<Checkpoint> {
     for slot in 0..2 {
-        if let Ok(ck) = model_io::load_checkpoint(model_io::checkpoint_slot_path(base, rank, slot))
+        if let Ok(ck) =
+            model_io::load_checkpoint(model_io::checkpoint_slot_path_epoch(base, epoch, pos, slot))
         {
             if ck.round == round {
                 return Some(ck);
@@ -663,20 +955,51 @@ fn tcp_node_loop(
     ckpt: &CheckpointPolicy,
     fp: u64,
     source: &Corpus<'_>,
-    shard: Shard,
     vocab: &Vocab,
     sampler: &UnigramSampler,
     subsampler: &Subsampler,
-    total_words: u64,
+    start: Option<AttemptStart>,
+    ck_epoch: u32,
 ) -> anyhow::Result<(SharedModel, u64, SyncStats)> {
     let n = ring.nranks();
     let rank = ring.rank();
+    // Shard geometry follows the CURRENT view: a healed attempt
+    // re-shards the corpus over the shrunken (or restored) world size.
+    let shard = shards_for_len(source.shard_len(), n)[rank];
+    // A recovery attempt is a FRESH run over the remaining corpus
+    // passes: epochs shrink by what the rollback state embodies, and
+    // the lr schedule restarts at peak over that remaining work (the
+    // honest accounting — see EXPERIMENTS.md §Elastic recovery).
+    let mut acfg = cfg.clone();
+    let words_base = match &start {
+        Some(s) => {
+            acfg.epochs = cfg.epochs.saturating_sub(s.epochs_done);
+            s.words_base
+        }
+        None => 0,
+    };
+    let cfg = &acfg;
+    let total_words = vocab.total_words() * cfg.epochs as u64;
     let lr = node_lr_state(cfg, dist.scale_lr, total_words, n);
     let mut leg = TrainLeg::new(cfg, source, shard, sampler, subsampler, lr, rank)?;
+    if cfg.epochs == 0 {
+        // Nothing left to train (the failure hit after the last epoch
+        // boundary a checkpoint captured): the exhaustion check fires
+        // only at EOF, so flag it up front or this attempt would run
+        // one full extra pass.
+        leg.exhausted = true;
+    }
     let mut round: u32 = 1;
 
-    let model = if ckpt.resume {
-        let base = ckpt.base.as_deref().expect("checked by caller");
+    let model = if let Some(s) = start {
+        // Healed attempt: every member starts from the SAME merged
+        // rollback model (elect_rollback allreduced it).
+        s.model
+    } else if ckpt.resume {
+        let base = ckpt
+            .base
+            .as_deref()
+            .ok_or_else(|| anyhow::anyhow!("--resume requires --checkpoint"))?;
         // Negotiate the newest round EVERY rank can load.  Two slots
         // always suffice: ranks checkpoint the same rounds, so the
         // latest-round skew across a crash is at most one period, and
@@ -692,7 +1015,7 @@ fn tcp_node_loop(
              (latest rounds per rank: {:?})",
             all.iter().map(|v| v[0]).collect::<Vec<_>>()
         );
-        let ck = checkpoint_at_round(base, rank, target).ok_or_else(|| {
+        let ck = checkpoint_at_round(base, 0, rank, target).ok_or_else(|| {
             anyhow::anyhow!(
                 "rank {rank}: no checkpoint at negotiated round {target} \
                  (have latest {latest})"
@@ -739,6 +1062,7 @@ fn tcp_node_loop(
 
     let words_global;
     loop {
+        let round_t0 = Instant::now();
         // Phase 1 — IDENTICAL code to thread mode (TrainLeg).
         leg.train_chunk(dist.sync_interval, &model, &mut outbox)?;
         let ck_due = ckpt.base.is_some() && round as u64 % ckpt.every == 0;
@@ -753,7 +1077,7 @@ fn tcp_node_loop(
         // Phase 2 — stop decision: circulate (done, words).
         let st = ring.circulate_u64s(&[leg.exhausted as u64, leg.words], round)?;
         if st.iter().all(|v| v[0] == 1) {
-            words_global = st.iter().map(|v| v[1]).sum();
+            words_global = words_base + st.iter().map(|v| v[1]).sum::<u64>();
             break;
         }
 
@@ -764,9 +1088,15 @@ fn tcp_node_loop(
         stats.rounds += 1;
         stats.rows_synced += 2 * due_rows;
         stats.wire_bytes += gather_scatter_wire_bytes(&due, n, rank, cfg.dim);
+        // Feed the adaptive deadline: a full round (train + circulate +
+        // allreduce) is the unit of progress peers wait on.
+        ring.observe_round(round_t0.elapsed());
 
         if ck_due {
-            let base = ckpt.base.as_deref().expect("ck_due implies base");
+            let base = ckpt
+                .base
+                .as_deref()
+                .ok_or_else(|| anyhow::anyhow!("checkpoint due without a base path"))?;
             let slot = ((round as u64 / ckpt.every) % 2) as usize;
             let snapshot = Checkpoint {
                 rank: rank as u32,
@@ -777,12 +1107,15 @@ fn tcp_node_loop(
                 words_done: leg.words,
                 lr_words: leg.lr.words_done(),
                 rng: leg.rng.state(),
-                fingerprint: fp,
+                // Salted per attempt: a healed run's checkpoints never
+                // collide with (or pass verification as) the previous
+                // attempt's, and pre-failure files stay intact.
+                fingerprint: attempt_fp(fp, ck_epoch),
                 m_in: model.m_in().clone(),
                 m_out: model.m_out().clone(),
             };
             model_io::save_checkpoint(
-                model_io::checkpoint_slot_path(base, rank, slot),
+                model_io::checkpoint_slot_path_epoch(base, ck_epoch, rank, slot),
                 &snapshot,
             )?;
         }
@@ -837,6 +1170,7 @@ mod tests {
             connect_timeout_ms: 10_000,
             io_timeout_ms: 10_000,
             heartbeat_ms: 50,
+            rejoin_grace_ms: 0,
         };
         std::thread::scope(|scope| {
             let mut handles = Vec::new();
@@ -1150,6 +1484,92 @@ mod tests {
         for out in outs {
             let err = format!("{:#}", out.unwrap_err());
             assert!(err.contains("no loadable checkpoint"), "{err}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Recovery needs checkpoints to roll back to: shrink/rejoin without
+    /// `--checkpoint` is refused up front, before any networking.
+    #[test]
+    fn on_failure_without_checkpoint_is_refused() {
+        let (path, vocab) = tiny_corpus(97);
+        let cfg = TrainConfig::test_tiny();
+        let mut dist = DistConfig::for_nodes(2);
+        dist.on_failure = OnFailure::Shrink;
+        let spec = RingSpec {
+            rank: 0,
+            addrs: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+        };
+        let err = train_tcp_ring_on(
+            None,
+            &cfg,
+            &dist,
+            &spec,
+            &NetConfig::default(),
+            &CheckpointPolicy::disabled(),
+            &path,
+            &vocab,
+        )
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("requires --checkpoint"),
+            "{err:#}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The elastic driver with NO failure is a bitwise no-op: a healthy
+    /// run under `--on-failure shrink` lands on the same model as the
+    /// PR-6 abort path (establish_elastic, drive_ring, adaptive
+    /// deadlines — none of it may perturb training arithmetic).
+    #[test]
+    fn elastic_driver_without_failure_is_bitwise_noop() {
+        let (path, vocab) = tiny_corpus(101);
+        let mut cfg = TrainConfig::test_tiny();
+        cfg.sample = 0.0;
+        let mut dist = DistConfig::for_nodes(2);
+        dist.sync_interval = 5_000;
+        let mk_base = |tag: &str| {
+            let b = std::env::temp_dir().join(format!("pw2v_ck_{tag}_{}", std::process::id()));
+            for rank in 0..2 {
+                for slot in 0..2 {
+                    std::fs::remove_file(model_io::checkpoint_slot_path(&b, rank, slot)).ok();
+                }
+            }
+            b
+        };
+        let base_a = mk_base("noop_abort");
+        let ck_a = CheckpointPolicy {
+            base: Some(base_a.clone()),
+            every: 2,
+            resume: false,
+        };
+        let abort: Vec<_> = run_ring(2, &cfg, &dist, &ck_a, &path, &vocab)
+            .into_iter()
+            .map(|o| o.unwrap())
+            .collect();
+        dist.on_failure = OnFailure::Shrink;
+        let base_s = mk_base("noop_shrink");
+        let ck_s = CheckpointPolicy {
+            base: Some(base_s.clone()),
+            every: 2,
+            resume: false,
+        };
+        let healed: Vec<_> = run_ring(2, &cfg, &dist, &ck_s, &path, &vocab)
+            .into_iter()
+            .map(|o| o.unwrap())
+            .collect();
+        for (a, h) in abort.iter().zip(&healed) {
+            assert_eq!(a.words, h.words);
+            assert_eq!(a.model.m_in().data(), h.model.m_in().data());
+            assert_eq!(a.model.m_out().data(), h.model.m_out().data());
+        }
+        for b in [&base_a, &base_s] {
+            for rank in 0..2 {
+                for slot in 0..2 {
+                    std::fs::remove_file(model_io::checkpoint_slot_path(b, rank, slot)).ok();
+                }
+            }
         }
         std::fs::remove_file(&path).ok();
     }

@@ -15,7 +15,7 @@ use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
 use pw2v::corpus::vocab::Vocab;
 use pw2v::dist::{
     train_distributed, train_tcp_ring, CheckpointPolicy, DistConfig, FaultSpec, NetConfig,
-    RingSpec, SyncPolicy,
+    OnFailure, RingSpec, SyncPolicy,
 };
 use pw2v::eval;
 use pw2v::model::{io as model_io, SharedModel};
@@ -74,6 +74,7 @@ USAGE: pw2v <subcommand> [--key value ...]
               [--dist threads|tcp:RANK@ADDR0,ADDR1,...]
               [--checkpoint BASE --checkpoint-every ROUNDS --resume]
               [--net-timeout-ms MS --heartbeat-ms MS --connect-timeout-ms MS]
+              [--on-failure abort|shrink|rejoin --rejoin-grace-ms MS]
               (--numa auto pins each replica to a NUMA node and
                first-touches it there — one replica per socket keeps
                training traffic node-local; --route is accepted for
@@ -86,9 +87,19 @@ USAGE: pw2v <subcommand> [--key value ...]
                rings are bitwise-identical to thread mode.  --checkpoint
                writes two-slot crash-consistent snapshots at BASE.rankK.{a,b}
                every ROUNDS sync rounds; --resume continues from the
-               newest round every rank can load.  PW2V_FAULT injects
+               newest round every rank can load.
+               --on-failure shrink (needs --checkpoint) self-heals on a
+               peer failure: survivors regroup at a new membership
+               epoch, roll back to the newest checkpoint round all of
+               them hold, re-shard over the smaller ring and continue;
+               rejoin additionally holds the regroup open for
+               --rejoin-grace-ms so a promptly respawned rank is
+               re-admitted; abort (default) fails the whole run fast.
+               Frame deadlines adapt to measured round time (EWMA);
+               --net-timeout-ms is the floor.  PW2V_FAULT injects
                deterministic faults (kill-after=N | torn-frame=N |
-               stall-after=N | panic-replica=I) for the fault suite)
+               stall-after=N | panic-replica=I | kill-epoch=E |
+               wedge-regroup=E | respawn-after=MS) for the fault suite)
   eval        --vectors vectors.txt [--simset sim.tsv] [--anaset ana.txt]
   simulate    --figure 3|4 [--machine bdw|knl|hsw]
   info        [--artifacts-dir artifacts]
@@ -209,6 +220,14 @@ fn cmd_train_dist(a: &Args) -> anyhow::Result<()> {
     if a.flag("no-lr-scaling") {
         dist.scale_lr = false;
     }
+    if let Some(p) = a.opt::<String>("on-failure")? {
+        dist.on_failure = p.parse::<OnFailure>()?;
+        anyhow::ensure!(
+            ring.is_some() || dist.on_failure == OnFailure::Abort,
+            "--on-failure shrink/rejoin needs the tcp transport \
+             (thread mode always fails fast)"
+        );
+    }
     // Thread-mode fault injection (TCP wire faults are read from the
     // environment by the transport itself).
     dist.fault = FaultSpec::from_env()
@@ -219,6 +238,7 @@ fn cmd_train_dist(a: &Args) -> anyhow::Result<()> {
         connect_timeout_ms: a.get("connect-timeout-ms", defaults.connect_timeout_ms)?,
         io_timeout_ms: a.get("net-timeout-ms", defaults.io_timeout_ms)?,
         heartbeat_ms: a.get("heartbeat-ms", defaults.heartbeat_ms)?,
+        rejoin_grace_ms: a.get("rejoin-grace-ms", defaults.rejoin_grace_ms)?,
     };
     let ckpt = CheckpointPolicy {
         base: a.opt::<String>("checkpoint")?.map(PathBuf::from),
@@ -244,7 +264,7 @@ fn cmd_train_dist(a: &Args) -> anyhow::Result<()> {
         Some(spec) => {
             eprintln!(
                 "distributed training: rank {}/{} on tcp ring, sync every {} \
-                 words, vocab {}, checkpoint={}",
+                 words, vocab {}, checkpoint={}, on-failure={:?}",
                 spec.rank,
                 nodes,
                 dist.sync_interval,
@@ -253,6 +273,7 @@ fn cmd_train_dist(a: &Args) -> anyhow::Result<()> {
                     .as_deref()
                     .map(|p| p.display().to_string())
                     .unwrap_or_else(|| "off".into()),
+                dist.on_failure,
             );
             train_tcp_ring(&cfg, &dist, spec, &net, &ckpt, &corpus, &vocab)?
         }

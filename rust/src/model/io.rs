@@ -340,9 +340,37 @@ pub fn checkpoint_slot_path(base: &Path, rank: usize, slot: usize) -> std::path:
 /// Newest valid checkpoint across a rank's two slots (None when neither
 /// slot loads — e.g. first run, or both torn).
 pub fn latest_checkpoint(base: &Path, rank: usize) -> Option<Checkpoint> {
+    latest_checkpoint_epoch(base, 0, rank)
+}
+
+/// The two-slot checkpoint file name for `(epoch, rank, slot)`.
+///
+/// Membership epoch 0 (the launch view) keeps the PR-6 layout
+/// `<base>.rank{k}.{a,b}` so plain `--resume` stays compatible; healed
+/// views (epoch > 0) write to `<base>.e{epoch}.rank{k}.{a,b}` instead —
+/// the pre-failure attempt's checkpoints are left INTACT on disk, which
+/// is what lets tests (and operators) reconstruct exactly which rollback
+/// state a recovery restarted from.
+pub fn checkpoint_slot_path_epoch(
+    base: &Path,
+    epoch: u32,
+    rank: usize,
+    slot: usize,
+) -> std::path::PathBuf {
+    if epoch == 0 {
+        return checkpoint_slot_path(base, rank, slot);
+    }
+    let mut os = base.as_os_str().to_os_string();
+    os.push(format!(".e{epoch}.rank{rank}.{}", ['a', 'b'][slot % 2]));
+    std::path::PathBuf::from(os)
+}
+
+/// Newest valid checkpoint across a rank's two slots at a given
+/// membership epoch.
+pub fn latest_checkpoint_epoch(base: &Path, epoch: u32, rank: usize) -> Option<Checkpoint> {
     let mut best: Option<Checkpoint> = None;
     for slot in 0..2 {
-        if let Ok(ck) = load_checkpoint(checkpoint_slot_path(base, rank, slot)) {
+        if let Ok(ck) = load_checkpoint(checkpoint_slot_path_epoch(base, epoch, rank, slot)) {
             if best.as_ref().map_or(true, |b| ck.round > b.round) {
                 best = Some(ck);
             }
@@ -547,5 +575,37 @@ mod tests {
         for slot in 0..2 {
             std::fs::remove_file(checkpoint_slot_path(&base, 1, slot)).ok();
         }
+    }
+
+    #[test]
+    fn epoch_slot_paths_keep_attempts_separate() {
+        let base = std::path::Path::new("/tmp/ckbase");
+        // Epoch 0 must stay the PR-6 layout (plain --resume compatibility).
+        assert_eq!(
+            checkpoint_slot_path_epoch(base, 0, 2, 1),
+            checkpoint_slot_path(base, 2, 1)
+        );
+        assert_eq!(
+            checkpoint_slot_path_epoch(base, 1, 0, 0),
+            std::path::PathBuf::from("/tmp/ckbase.e1.rank0.a")
+        );
+        assert_eq!(
+            checkpoint_slot_path_epoch(base, 3, 2, 1),
+            std::path::PathBuf::from("/tmp/ckbase.e3.rank2.b")
+        );
+
+        let dir = std::env::temp_dir().join("pw2v_ck_epochs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("ck");
+        let mut ck = sample_checkpoint();
+        ck.round = 5;
+        save_checkpoint(checkpoint_slot_path_epoch(&base, 0, 1, 0), &ck).unwrap();
+        ck.round = 9;
+        save_checkpoint(checkpoint_slot_path_epoch(&base, 1, 1, 0), &ck).unwrap();
+        // Each epoch's slots are independent files.
+        assert_eq!(latest_checkpoint_epoch(&base, 0, 1).unwrap().round, 5);
+        assert_eq!(latest_checkpoint_epoch(&base, 1, 1).unwrap().round, 9);
+        assert!(latest_checkpoint_epoch(&base, 2, 1).is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -12,7 +12,12 @@
 //!   stopped): the peer's heartbeat deadline must fire;
 //! * `panic-replica=I` — THREAD-mode: a panicking replica poisons the
 //!   shared barrier and the whole process fails fast instead of
-//!   deadlocking (the pre-PR hang this suite regression-pins).
+//!   deadlocking (the pre-PR hang this suite regression-pins);
+//! * **elastic recovery** (`--on-failure shrink|rejoin`): a killed rank
+//!   triggers regroup + rollback instead of an abort — the healed run
+//!   must be bitwise-equal to a clean run launched from the same
+//!   rollback state, and a promptly respawned rank must be re-admitted
+//!   within the rejoin grace window.
 //!
 //! Scenarios are serialized by a file-local mutex.
 
@@ -22,8 +27,15 @@ use std::process::{Child, Command, Stdio};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use pw2v::config::TrainConfig;
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
+use pw2v::corpus::vocab::Vocab;
+use pw2v::dist::{
+    average_row, train_tcp_ring_from, AttemptStart, CheckpointPolicy, DistConfig, DistOutcome,
+    NetConfig, RingSpec,
+};
 use pw2v::model::io as model_io;
+use pw2v::model::SharedModel;
 
 static SERIAL: Mutex<()> = Mutex::new(());
 
@@ -285,4 +297,259 @@ fn malformed_fault_spec_is_refused_at_startup() {
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("PW2V_FAULT"), "stderr: {err}");
+}
+
+/// One rank of a 3-rank SELF-HEALING ring (`--on-failure`), with
+/// per-round checkpoints and a per-rank `--out` vectors file.
+fn heal_rank_cmd(
+    f: &Fixture,
+    rank: usize,
+    addrs: &str,
+    on_failure: &str,
+    kernel: &str,
+) -> Command {
+    let ck = f.dir.join("ck");
+    let out = f.dir.join(format!("vec{rank}.txt"));
+    let mut c = rank_cmd(&f.corpus, rank, addrs);
+    c.args([
+        "--checkpoint",
+        ck.to_str().unwrap(),
+        "--checkpoint-every",
+        "1",
+        "--on-failure",
+        on_failure,
+        "--kernel",
+        kernel,
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    c
+}
+
+/// The recovery-determinism guarantee, end to end: a 3-rank ring loses
+/// rank 1 mid-run under `--on-failure shrink`; the survivors regroup,
+/// roll back and COMPLETE (exit 0).  The test then reconstructs the
+/// rollback election from the surviving attempt-0 checkpoints on disk,
+/// merges them exactly as the recovery does, and replays the healed
+/// attempt as a clean in-process 2-rank run from that state
+/// (`train_tcp_ring_from`) — the healed embeddings must be
+/// bitwise-equal to the replay's.  Exercised under both compute
+/// kernels: recovery must not perturb training arithmetic.
+#[test]
+fn shrink_recovery_is_bitwise_deterministic() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    for kernel in ["fused", "gemm3"] {
+        let f = fixture(&format!("shrink_{kernel}"));
+        let addrs = ring_addrs(&free_ports(3));
+        let surv0 = heal_rank_cmd(&f, 0, &addrs, "shrink", kernel)
+            .spawn()
+            .unwrap();
+        let victim = heal_rank_cmd(&f, 1, &addrs, "shrink", kernel)
+            .env("PW2V_FAULT", "kill-after=40")
+            .spawn()
+            .unwrap();
+        let surv2 = heal_rank_cmd(&f, 2, &addrs, "shrink", kernel)
+            .spawn()
+            .unwrap();
+
+        let out_victim = wait_deadline(victim, "killed rank", Duration::from_secs(60));
+        assert_eq!(out_victim.status.code(), Some(42));
+        for (rank, surv) in [(0usize, surv0), (2usize, surv2)] {
+            let out = wait_deadline(surv, "healing survivor", Duration::from_secs(120));
+            let err = String::from_utf8_lossy(&out.stderr);
+            assert!(
+                out.status.success(),
+                "survivor rank {rank} failed instead of healing: {err}"
+            );
+            assert!(
+                err.contains("regrouping") && err.contains("rolled back"),
+                "rank {rank} stderr lacks the recovery trace: {err}"
+            );
+        }
+        let (w0, emb0) = model_io::load_text(f.dir.join("vec0.txt").to_str().unwrap()).unwrap();
+        let (w2, emb2) = model_io::load_text(f.dir.join("vec2.txt").to_str().unwrap()).unwrap();
+        assert_eq!(w0, w2, "[{kernel}] survivors disagree on vocab order");
+        assert_eq!(
+            emb0.data(),
+            emb2.data(),
+            "[{kernel}] survivors' healed embeddings differ"
+        );
+
+        // --- Reconstruct the election the survivors performed. ---
+        let ck_base = f.dir.join("ck");
+        let cks: Vec<model_io::Checkpoint> = [0usize, 2]
+            .iter()
+            .map(|&r| {
+                let latest = model_io::latest_checkpoint(&ck_base, r)
+                    .unwrap_or_else(|| panic!("rank {r}: no attempt-0 checkpoint"));
+                latest
+            })
+            .collect();
+        let target = cks.iter().map(|c| c.round).min().unwrap();
+        assert!(target > 0);
+        // Exact-round load (two-slot retention guarantees availability).
+        let at = |r: usize| -> model_io::Checkpoint {
+            (0..2)
+                .filter_map(|slot| {
+                    model_io::load_checkpoint(model_io::checkpoint_slot_path(&ck_base, r, slot))
+                        .ok()
+                })
+                .find(|c| c.round == target)
+                .unwrap_or_else(|| panic!("rank {r}: no checkpoint at elected round {target}"))
+        };
+        let (ck0, ck2) = (at(0), at(2));
+        let epochs_done = ck0.epoch.min(ck2.epoch) as usize;
+        let words_base = ck0.words_done + ck2.words_done;
+        let dim = ck0.m_in.dim();
+        let vocab_rows = ck0.m_in.vocab();
+        let merged = [
+            SharedModel::new(ck0.m_in, ck0.m_out),
+            SharedModel::new(ck2.m_in, ck2.m_out),
+        ];
+        let mut scratch = vec![0.0f32; dim];
+        for r in 0..vocab_rows as u32 {
+            average_row(&merged, r, &mut scratch);
+        }
+
+        // --- Replay the healed attempt as a clean 2-rank run. ---
+        let mut cfg = TrainConfig::default();
+        cfg.dim = 16;
+        cfg.epochs = 2;
+        cfg.min_count = 1;
+        cfg.kernel = kernel.parse().unwrap();
+        let vocab = Vocab::build_from_file(&f.corpus, cfg.min_count).unwrap();
+        assert_eq!(vocab.len(), vocab_rows);
+        let mut dist = DistConfig::for_nodes(3);
+        dist.sync_interval = 4000;
+        let net = NetConfig::default();
+        let ref_base = f.dir.join("ck_ref");
+        let listeners: Vec<TcpListener> = (0..2)
+            .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let ref_addrs: Vec<String> = listeners
+            .iter()
+            .map(|l| format!("127.0.0.1:{}", l.local_addr().unwrap().port()))
+            .collect();
+        let outs: Vec<DistOutcome> = std::thread::scope(|scope| {
+            let handles: Vec<_> = listeners
+                .into_iter()
+                .enumerate()
+                .map(|(rank, l)| {
+                    let (cfg, dist, vocab) = (cfg.clone(), dist.clone(), &vocab);
+                    let (ref_addrs, ref_base) = (ref_addrs.clone(), ref_base.clone());
+                    let start = AttemptStart {
+                        model: SharedModel::new(
+                            merged[0].m_in().clone(),
+                            merged[0].m_out().clone(),
+                        ),
+                        epochs_done,
+                        words_base,
+                    };
+                    let corpus = f.corpus.clone();
+                    scope.spawn(move || {
+                        let spec = RingSpec {
+                            rank,
+                            addrs: ref_addrs,
+                        };
+                        let ckpt = CheckpointPolicy {
+                            base: Some(ref_base),
+                            every: 1,
+                            resume: false,
+                        };
+                        train_tcp_ring_from(
+                            Some(l),
+                            &cfg,
+                            &dist,
+                            &spec,
+                            &net,
+                            &ckpt,
+                            &corpus,
+                            vocab,
+                            start,
+                        )
+                        .unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for out in &outs {
+            assert_eq!(
+                out.model.m_in().data(),
+                emb0.data(),
+                "[{kernel}] healed run differs from a clean run launched \
+                 from the same rollback state"
+            );
+        }
+    }
+}
+
+/// Rejoin round trip: under `--on-failure rejoin` the survivors hold
+/// the regroup open for the grace window; a promptly respawned rank 1
+/// (same argv, fault cleared) is re-admitted, the ORIGINAL 3-rank
+/// membership is restored, and all three processes complete with
+/// identical embeddings.
+#[test]
+fn rejoined_rank_is_readmitted_and_ring_completes() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let f = fixture("rejoin");
+    let addrs = ring_addrs(&free_ports(3));
+    let grace = ["--rejoin-grace-ms", "30000"];
+    let surv0 = heal_rank_cmd(&f, 0, &addrs, "rejoin", "auto")
+        .args(grace)
+        .spawn()
+        .unwrap();
+    let victim = heal_rank_cmd(&f, 1, &addrs, "rejoin", "auto")
+        .args(grace)
+        .env("PW2V_FAULT", "kill-after=40")
+        .spawn()
+        .unwrap();
+    let surv2 = heal_rank_cmd(&f, 2, &addrs, "rejoin", "auto")
+        .args(grace)
+        .spawn()
+        .unwrap();
+
+    let out_victim = wait_deadline(victim, "killed rank", Duration::from_secs(60));
+    assert_eq!(out_victim.status.code(), Some(42));
+    // Respawn rank 1 with the same argv, fault cleared: it must join
+    // the regroup the survivors hold open and be re-admitted.
+    let respawn = {
+        let mut c = heal_rank_cmd(&f, 1, &addrs, "rejoin", "auto");
+        c.args(grace);
+        c.env_remove("PW2V_FAULT");
+        c.spawn().unwrap()
+    };
+
+    let mut outs = Vec::new();
+    for (rank, child) in [(0usize, surv0), (1, respawn), (2, surv2)] {
+        let out = wait_deadline(child, "rejoin member", Duration::from_secs(120));
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            out.status.success(),
+            "rank {rank} failed instead of healing: {err}"
+        );
+        if rank != 1 {
+            assert!(
+                err.contains("regrouping"),
+                "rank {rank} stderr lacks the recovery trace: {err}"
+            );
+        }
+        // Every member rolled back to the common round and reports the
+        // RESTORED membership size.
+        assert!(
+            err.contains("rolled back") && err.contains("3 member(s)"),
+            "rank {rank} did not report a 3-member healed view: {err}"
+        );
+        outs.push(model_io::load_text(f.dir.join(format!("vec{rank}.txt")).to_str().unwrap()));
+    }
+    let (w0, emb0) = outs.remove(0).unwrap();
+    for out in outs {
+        let (w, emb) = out.unwrap();
+        assert_eq!(w0, w);
+        assert_eq!(
+            emb0.data(),
+            emb.data(),
+            "rejoin members disagree on the final embeddings"
+        );
+    }
 }
