@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
     routing_bench(&mut report)?;
     dist_ring_bench(&mut report)?;
     corpus_cache_bench(&mut report)?;
+    serve_scan_bench(&mut report)?;
     gemm_bench()?;
     vecops_bench()?;
     sampler_bench()?;
@@ -800,6 +801,72 @@ fn dist_ring_bench(report: &mut Option<ThroughputReport>) -> anyhow::Result<()> 
                     "measured_over_predicted_bytes",
                     Json::num(measured_over_predicted),
                 ),
+            ]),
+        );
+    }
+    Ok(())
+}
+
+/// Serve-scan throughput: queries/sec of the f32 unit-row scan vs the
+/// int8 quantized scan (V=5000, D=128 — a scan-bandwidth-bound shape;
+/// the bandwidth accounting lives in EXPERIMENTS.md §Serving).  `--json`
+/// lands both rates and the int8/f32 ratio in `BENCH_throughput.json`;
+/// the trend rows are warn-only (absolute q/s is machine-dependent, and
+/// the int8 WIN only materialises once the store outgrows the LLC).
+fn serve_scan_bench(report: &mut Option<ThroughputReport>) -> anyhow::Result<()> {
+    use pw2v::config::QuantMode;
+    use pw2v::model::Embedding;
+    use pw2v::serve::{RowStore, Scratch, ServeEngine};
+
+    let (v, d) = (5000usize, 128usize);
+    let mut emb = Embedding::zeros(v, d);
+    let mut rng = Xoshiro256ss::new(88);
+    for id in 0..v as u32 {
+        for x in emb.row_mut(id) {
+            *x = rng.next_f32() - 0.5;
+        }
+    }
+    let words: Vec<String> = (0..v).map(|i| format!("w{i:05}")).collect();
+    let mut table = BenchTable::new(
+        "micro_serve",
+        &["scan", "ns_per_query", "queries_per_sec"],
+    );
+    let mut qps: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let mut scratch = Scratch::default();
+    for (name, quant) in [("f32", QuantMode::Off), ("int8", QuantMode::Int8)] {
+        let eng = ServeEngine::from_store(
+            RowStore::from_model(words.clone(), &emb).unwrap(),
+            quant,
+        );
+        let mut q = 0u32;
+        let st = time(20, 200, || {
+            std::hint::black_box(eng.topk(q % v as u32, 10, &mut scratch));
+            q = q.wrapping_add(101);
+        });
+        table.row(vec![
+            name.into(),
+            format!("{:.0}", st.median * 1e9),
+            si(1.0 / st.median),
+        ]);
+        qps.insert(name, 1.0 / st.median);
+    }
+    table.finish()?;
+    let ratio = qps["int8"] / qps["f32"];
+    println!(
+        "serve scan V={v} D={d}: f32 {} q/s, int8 {} q/s ({ratio:.2}x)",
+        si(qps["f32"]),
+        si(qps["int8"])
+    );
+    if let Some(r) = report.as_mut() {
+        r.set(
+            "micro_serve",
+            Json::obj([
+                ("vocab", Json::num(v as f64)),
+                ("dim", Json::num(d as f64)),
+                ("k", Json::num(10.0)),
+                ("f32_queries_per_sec", Json::num(qps["f32"])),
+                ("int8_queries_per_sec", Json::num(qps["int8"])),
+                ("int8_over_f32", Json::num(ratio)),
             ]),
         );
     }

@@ -58,6 +58,7 @@ use std::time::Instant;
 
 use super::reader::{SentenceReader, MAX_SENTENCE_LEN};
 use super::vocab::Vocab;
+use crate::util::mmap::Bytes;
 
 /// Identifies the file as a pw2v u32 corpus cache.
 pub const MAGIC: [u8; 8] = *b"PW2VU32\0";
@@ -462,119 +463,17 @@ fn append_name(path: &Path, suffix: &str) -> PathBuf {
     PathBuf::from(os)
 }
 
-/// Backing storage for an open cache: a read-only mmap where available,
-/// else the file read into memory.
-enum Bytes {
-    Owned(Vec<u8>),
-    #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
-    Mapped(mmap::Mmap),
-}
-
-impl std::ops::Deref for Bytes {
-    type Target = [u8];
-
-    fn deref(&self) -> &[u8] {
-        match self {
-            Bytes::Owned(v) => v,
-            #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
-            Bytes::Mapped(m) => m.as_slice(),
-        }
-    }
-}
-
+/// Open the cache bytes through the shared [`crate::util::mmap`]
+/// substrate.  The `PW2V_CORPUS_MMAP=off|0` opt-out (the CI leg
+/// exercising the portable buffered reader) lives HERE, at the corpus
+/// call site — other `util::mmap` users (the serve row store) have their
+/// own policy.
 fn load_bytes(path: &Path) -> anyhow::Result<Bytes> {
-    #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
-    {
-        let off = matches!(
-            std::env::var("PW2V_CORPUS_MMAP").as_deref(),
-            Ok("off") | Ok("0")
-        );
-        if !off {
-            let f = File::open(path)?;
-            return Ok(Bytes::Mapped(mmap::Mmap::map(&f)?));
-        }
-    }
-    Ok(Bytes::Owned(std::fs::read(path)?))
-}
-
-/// Raw read-only file mapping.  `std` already links the platform libc, so
-/// declaring `mmap(2)`/`munmap(2)` directly keeps the offline build
-/// dependency-free (the constants below are the Linux/BSD values for
-/// 64-bit targets; other platforms take the buffered path).
-#[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
-mod mmap {
-    use std::ffi::{c_int, c_void};
-    use std::fs::File;
-    use std::os::unix::io::AsRawFd;
-
-    const PROT_READ: c_int = 1;
-    const MAP_PRIVATE: c_int = 2;
-
-    extern "C" {
-        fn mmap(
-            addr: *mut c_void,
-            length: usize,
-            prot: c_int,
-            flags: c_int,
-            fd: c_int,
-            offset: i64,
-        ) -> *mut c_void;
-        fn munmap(addr: *mut c_void, length: usize) -> c_int;
-    }
-
-    pub struct Mmap {
-        ptr: *mut c_void,
-        len: usize,
-    }
-
-    // SAFETY: the mapping is PROT_READ and private; no writer exists for
-    // its lifetime, so shared immutable access from any thread is sound.
-    unsafe impl Send for Mmap {}
-    unsafe impl Sync for Mmap {}
-
-    impl Mmap {
-        pub fn map(f: &File) -> std::io::Result<Self> {
-            let len = f.metadata()?.len() as usize;
-            if len == 0 {
-                // mmap(2) rejects zero-length mappings.
-                return Ok(Self {
-                    ptr: std::ptr::null_mut(),
-                    len: 0,
-                });
-            }
-            let ptr = unsafe {
-                mmap(
-                    std::ptr::null_mut(),
-                    len,
-                    PROT_READ,
-                    MAP_PRIVATE,
-                    f.as_raw_fd(),
-                    0,
-                )
-            };
-            if ptr as isize == -1 {
-                return Err(std::io::Error::last_os_error());
-            }
-            Ok(Self { ptr, len })
-        }
-
-        pub fn as_slice(&self) -> &[u8] {
-            if self.len == 0 {
-                return &[];
-            }
-            // SAFETY: `ptr` is a live PROT_READ mapping of `len` bytes.
-            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
-        }
-    }
-
-    impl Drop for Mmap {
-        fn drop(&mut self) {
-            if self.len > 0 {
-                // SAFETY: `ptr`/`len` came from a successful mmap call.
-                let _ = unsafe { munmap(self.ptr, self.len) };
-            }
-        }
-    }
+    let off = matches!(
+        std::env::var("PW2V_CORPUS_MMAP").as_deref(),
+        Ok("off") | Ok("0")
+    );
+    crate::util::mmap::load_bytes(path, !off)
 }
 
 #[cfg(test)]

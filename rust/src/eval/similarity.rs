@@ -24,6 +24,13 @@ pub struct SimilarityReport {
 }
 
 /// Cosine of two rows.
+///
+/// A zero-norm operand yields 0.0 — the neutral score the WS-353
+/// protocol wants for untrained rows (pinned by `cosine_basics`).  That
+/// convention is WRONG for a top-k scan: 0.0 ranks a padded/dead row
+/// ABOVE every genuinely negative match.  Ranked scans must therefore
+/// filter candidates through [`row_servable`] first; the serve engine
+/// does exactly that and documents the policy in its wire format.
 pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
     let (mut num, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
     for (x, y) in a.iter().zip(b) {
@@ -36,6 +43,26 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
     } else {
         num / (na.sqrt() * nb.sqrt())
     }
+}
+
+/// The serve scan's candidate policy: a row participates in ranked
+/// top-k results only if it is non-degenerate — every component finite
+/// and at least one non-zero.  Zero-norm rows (never-touched vocab
+/// slots, padding) and rows poisoned by a non-finite value are
+/// EXCLUDED from scans rather than scored: `cosine`'s 0.0 convention
+/// would rank them above true negative matches, and NaN would poison
+/// the ordering entirely.  Deterministic: depends only on the row
+/// bytes.  `eval_similarity` intentionally does NOT apply this filter —
+/// its neutral-zero behaviour is part of the WS-353 protocol.
+pub fn row_servable(row: &[f32]) -> bool {
+    let mut any_nonzero = false;
+    for &x in row {
+        if !x.is_finite() {
+            return false;
+        }
+        any_nonzero |= x != 0.0;
+    }
+    any_nonzero
 }
 
 /// Evaluate `M_in` embeddings on a pair set; OOV pairs are skipped (the
@@ -92,7 +119,37 @@ mod tests {
         assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
         assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
         assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-12);
+        // Zero-norm convention: neutral 0.0 — NOT an error, NOT skipped.
+        // `eval_similarity` depends on this; ranked scans must use
+        // `row_servable` instead (see that function's doc).
         assert_eq!(cosine(&[0.0, 0.0], &[1.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn row_servable_excludes_degenerate_rows_only() {
+        assert!(row_servable(&[1.0, 0.0]));
+        assert!(row_servable(&[-0.25, 1e-30]));
+        assert!(!row_servable(&[0.0, 0.0]), "zero-norm row must be excluded");
+        assert!(!row_servable(&[]), "empty row has zero norm");
+        assert!(!row_servable(&[1.0, f32::NAN]));
+        assert!(!row_servable(&[f32::INFINITY, 1.0]));
+        assert!(!row_servable(&[1.0, f32::NEG_INFINITY]));
+    }
+
+    #[test]
+    fn eval_similarity_zero_norm_behaviour_unchanged_by_serve_policy() {
+        // A vocab slot that training never touched scores 0.0 against
+        // everything and the pair still COUNTS — the serve-side
+        // exclusion policy must not leak into the offline protocol.
+        let vocab = Vocab::build("a a a b b z".split_whitespace(), 1);
+        let mut e = Embedding::zeros(3, 2);
+        e.row_mut(0).copy_from_slice(&[1.0, 0.0]);
+        e.row_mut(1).copy_from_slice(&[0.9, 0.1]);
+        // row 2 ("z") stays all-zero.
+        let pairs = vec![pair("a", "b", 9.0), pair("a", "z", 1.0)];
+        let r = eval_similarity(&pairs, &vocab, &e);
+        assert_eq!(r.pairs_covered, 2, "zero-norm pair must still be covered");
+        assert!((r.rho100 - 100.0).abs() < 1e-9, "rho={}", r.rho100);
     }
 
     #[test]

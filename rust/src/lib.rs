@@ -34,6 +34,7 @@ pub mod model;
 pub mod perfmodel;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod train;
 pub mod util;
 

@@ -38,6 +38,44 @@ unsafe fn hsum8(v: __m256) -> f32 {
     _mm_cvtss_f32(s)
 }
 
+/// Horizontal sum of the 8 i32 lanes.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn hsum8_epi32(v: __m256i) -> i32 {
+    let hi = _mm256_extracti128_si256::<1>(v);
+    let lo = _mm256_castsi256_si128(v);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_11_10>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+    _mm_cvtsi128_si32(s)
+}
+
+/// Integer dot `<a, b>` over int8 codes: 16 codes per step, sign-extended
+/// to i16 lanes and pair-summed into i32 by `madd` — integer arithmetic
+/// is associative, so this is EXACTLY the scalar result (the dispatcher
+/// caps the length so the i32 accumulators cannot overflow even at
+/// |code| = 127 throughout).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(pa.add(i) as *const __m128i));
+        let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(pb.add(i) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+        i += 16;
+    }
+    let mut s = hsum8_epi32(acc);
+    while i < n {
+        s += *pa.add(i) as i32 * *pb.add(i) as i32;
+        i += 1;
+    }
+    s
+}
+
 /// Dot product `<a, b>`.
 #[target_feature(enable = "avx2", enable = "fma")]
 pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {

@@ -168,6 +168,26 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     scalar::dot(a, b)
 }
 
+/// Dispatched integer dot `<a, b>` over int8 quantized codes (the serve
+/// engine's int8 row store).  Pure i32 accumulation of i8·i8 products —
+/// EXACTLY equal across dispatch levels, unlike the f32 kernels'
+/// bounded reassociation drift.  Length is capped at 2¹⁷ so the
+/// accumulator cannot overflow even with every code at ±127
+/// (2¹⁷ · 127² < 2³¹); serve dims sit orders of magnitude below that.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    assert_eq!(a.len(), b.len(), "dot_i8 length mismatch");
+    assert!(a.len() <= 1 << 17, "dot_i8 length exceeds overflow-safe bound");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if level() == SimdLevel::Avx2 {
+            // SAFETY: level() is Avx2 only when avx2+fma were detected.
+            return unsafe { avx2::dot_i8(a, b) };
+        }
+    }
+    scalar::dot_i8(a, b)
+}
+
 /// Dispatched `y += alpha * x`.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
@@ -450,6 +470,26 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The int8 dot is integer arithmetic: whatever level dispatches,
+    /// the answer must EQUAL the scalar reference — not approximate it.
+    #[test]
+    fn dot_i8_levels_agree_exactly() {
+        let mut rng = Xoshiro256ss::new(0x18_D07);
+        for n in [0usize, 1, 7, 15, 16, 17, 31, 48, 127, 300, 1024] {
+            let a: Vec<i8> = (0..n).map(|_| (rng.next_u32() & 0xFF) as u8 as i8).collect();
+            let b: Vec<i8> = (0..n).map(|_| (rng.next_u32() & 0xFF) as u8 as i8).collect();
+            let want = scalar::dot_i8(&a, &b);
+            assert_eq!(dot_i8(&a, &b), want, "n={n}");
+            // And scalar matches the obvious definition.
+            let naive: i32 = a.iter().zip(&b).map(|(x, y)| *x as i32 * *y as i32).sum();
+            assert_eq!(want, naive, "n={n}");
+        }
+        // Extremes: every code at ±127 at the dispatcher's length cap.
+        let a = vec![127i8; 1 << 17];
+        let b = vec![-127i8; 1 << 17];
+        assert_eq!(dot_i8(&a, &b), -(127i32 * 127) * (1 << 17));
     }
 
     /// Whatever level is currently dispatched, the fused err kernel must

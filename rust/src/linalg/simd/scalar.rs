@@ -12,6 +12,18 @@ use crate::linalg::sigmoid::sigmoid_exact;
 pub use crate::linalg::gemm::{gemm_nn, gemm_nt, gemm_tn};
 pub use crate::linalg::vecops::{axpy, dot};
 
+/// Integer dot `<a, b>` over int8 quantized codes, i32 accumulation.
+/// Pure integer arithmetic — no rounding, no reassociation drift — so
+/// every dispatch level returns the identical value (asserted in
+/// `simd::tests::dot_i8_levels_agree_exactly`).
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    let mut s = 0i32;
+    for (x, y) in a.iter().zip(b) {
+        s += *x as i32 * *y as i32;
+    }
+    s
+}
+
 /// `logits[r, j] <- (label(j) − σ(logits[r, j])) · lr`, exact sigmoid.
 /// Column 0 of each `s`-wide row is the positive target (label 1).
 pub fn sgns_err(logits: &mut [f32], s: usize, lr: f32) {

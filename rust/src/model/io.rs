@@ -46,7 +46,28 @@ pub fn atomic_write<P: AsRef<Path>>(
     Ok(())
 }
 
+/// A vocab token the vector writers can store losslessly.  The text
+/// format delimits columns with ASCII whitespace and rows with `\n`, and
+/// the binary format terminates the word with a single space — an empty
+/// token, or one containing ASCII whitespace, would shift every
+/// following column on reload (and `load_text`'s re-split could not even
+/// tell).  Reject at save time, where the id still names the culprit.
+fn check_token(id: u32, word: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(!word.is_empty(), "vocab id {id}: empty token cannot be saved");
+    anyhow::ensure!(
+        !word.bytes().any(|b| b.is_ascii_whitespace()),
+        "vocab id {id}: token {word:?} contains whitespace \
+         (would corrupt every later column on reload)"
+    );
+    Ok(())
+}
+
 /// Save `M_in` (the word vectors) in text format.
+///
+/// Rejects tokens that cannot survive the whitespace-delimited format
+/// ([`check_token`]) and non-finite values (`NaN`/`inf` have no
+/// interoperable text spelling — gensim and the C tools will not read
+/// them back) instead of writing a file `load_text` mis-parses.
 pub fn save_text<P: AsRef<Path>>(
     path: P,
     vocab: &Vocab,
@@ -56,8 +77,15 @@ pub fn save_text<P: AsRef<Path>>(
     atomic_write(path, |w| {
         writeln!(w, "{} {}", vocab.len(), emb.dim())?;
         for id in 0..vocab.len() as u32 {
-            write!(w, "{}", vocab.word(id))?;
+            let word = vocab.word(id);
+            check_token(id, word)?;
+            write!(w, "{word}")?;
             for &x in emb.row(id) {
+                anyhow::ensure!(
+                    x.is_finite(),
+                    "vocab id {id} ({word:?}): non-finite value {x} \
+                     does not round-trip through the text format"
+                );
                 write!(w, " {x}")?;
             }
             writeln!(w)?;
@@ -66,7 +94,9 @@ pub fn save_text<P: AsRef<Path>>(
     })
 }
 
-/// Save in binary format.
+/// Save in binary format.  Values round-trip bit-exactly (little-endian
+/// f32), but tokens face the same delimiting rules as the text format
+/// ([`check_token`]): the word is terminated by a single space.
 pub fn save_binary<P: AsRef<Path>>(
     path: P,
     vocab: &Vocab,
@@ -76,7 +106,9 @@ pub fn save_binary<P: AsRef<Path>>(
     atomic_write(path, |w| {
         writeln!(w, "{} {}", vocab.len(), emb.dim())?;
         for id in 0..vocab.len() as u32 {
-            write!(w, "{} ", vocab.word(id))?;
+            let word = vocab.word(id);
+            check_token(id, word)?;
+            write!(w, "{word} ")?;
             for &x in emb.row(id) {
                 w.write_all(&x.to_le_bytes())?;
             }
@@ -87,6 +119,12 @@ pub fn save_binary<P: AsRef<Path>>(
 }
 
 /// Load a text-format vector file: returns `(words, matrix)`.
+///
+/// Strict about row structure: every data line must hold exactly the
+/// word plus `D` parseable values.  A malformed line (token with
+/// embedded whitespace, wrong column count, unparseable value) fails
+/// loudly with the row, word and column named — never a silent column
+/// shift or a bare `ParseFloatError` with no location.
 pub fn load_text<P: AsRef<Path>>(path: P) -> anyhow::Result<(Vec<String>, Embedding)> {
     let f = std::fs::File::open(path)?;
     let mut r = BufReader::with_capacity(1 << 20, f);
@@ -102,15 +140,21 @@ pub fn load_text<P: AsRef<Path>>(path: P) -> anyhow::Result<(Vec<String>, Embedd
         let mut it = line.split_ascii_whitespace();
         let word = it
             .next()
-            .ok_or_else(|| anyhow::anyhow!("empty vector line {i}"))?;
-        words.push(word.to_string());
+            .ok_or_else(|| anyhow::anyhow!("row {i}: empty vector line"))?;
         let row = emb.row_mut(i as u32);
         for (j, slot) in row.iter_mut().enumerate() {
-            let tok = it
-                .next()
-                .ok_or_else(|| anyhow::anyhow!("row {i}: missing dim {j}"))?;
-            *slot = tok.parse()?;
+            let tok = it.next().ok_or_else(|| {
+                anyhow::anyhow!("row {i} ({word:?}): expected {d} values, line ends at column {j}")
+            })?;
+            *slot = tok.parse().map_err(|e| {
+                anyhow::anyhow!("row {i} ({word:?}) column {j}: bad value {tok:?} ({e})")
+            })?;
         }
+        anyhow::ensure!(
+            it.next().is_none(),
+            "row {i} ({word:?}): more than {d} columns (token with embedded whitespace?)"
+        );
+        words.push(word.to_string());
     }
     Ok((words, emb))
 }
@@ -431,6 +475,102 @@ mod tests {
         let path = std::env::temp_dir().join("pw2v_io_trunc.vec");
         std::fs::write(&path, "3 2\nw0 1 2\n").unwrap();
         assert!(load_text(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn vocab_of(words: &[&str]) -> Vocab {
+        // Descending counts pin ids in the given order.
+        let counts: std::collections::HashMap<String, u64> = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.to_string(), (words.len() - i) as u64))
+            .collect();
+        Vocab::from_counts(counts, 1)
+    }
+
+    #[test]
+    fn hostile_tokens_rejected_at_save_never_corrupt_a_roundtrip() {
+        let dir = std::env::temp_dir();
+        for (name, bad) in [
+            ("space", "has space"),
+            ("tab", "has\ttab"),
+            ("newline", "has\nnewline"),
+        ] {
+            let vocab = vocab_of(&["fine", bad]);
+            let emb = Embedding::zeros(2, 3);
+            let path = dir.join(format!("pw2v_io_hostile_{name}.vec"));
+            std::fs::remove_file(&path).ok();
+            let err = save_text(&path, &vocab, &emb).unwrap_err().to_string();
+            assert!(err.contains("whitespace"), "unhelpful error: {err}");
+            let err = save_binary(&path, &vocab, &emb).unwrap_err().to_string();
+            assert!(err.contains("whitespace"), "unhelpful error: {err}");
+            // The failed save must not leave a file a later load could read.
+            assert!(!path.exists(), "{name}: refused save left {path:?}");
+            let mut tmp = path.clone().into_os_string();
+            tmp.push(".tmp");
+            std::fs::remove_file(tmp).ok();
+        }
+        // Empty token: same contract.
+        let vocab = vocab_of(&["fine", ""]);
+        let emb = Embedding::zeros(2, 3);
+        let path = dir.join("pw2v_io_hostile_empty.vec");
+        let err = save_text(&path, &vocab, &emb).unwrap_err().to_string();
+        assert!(err.contains("empty token"), "unhelpful error: {err}");
+        // A well-formed vocab with odd-but-legal tokens still round-trips.
+        let vocab = vocab_of(&["naïve", "comma,token"]);
+        let mut emb = Embedding::zeros(2, 2);
+        emb.row_mut(0).copy_from_slice(&[1.0, -2.5]);
+        emb.row_mut(1).copy_from_slice(&[0.125, 3.0]);
+        let path = dir.join("pw2v_io_hostile_ok.vec");
+        save_text(&path, &vocab, &emb).unwrap();
+        let (words, got) = load_text(&path).unwrap();
+        assert_eq!(words, vec!["naïve".to_string(), "comma,token".to_string()]);
+        for i in 0..2u32 {
+            assert_eq!(got.row(i), emb.row(i));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn nonfinite_values_rejected_at_text_save() {
+        let vocab = vocab_of(&["a", "b"]);
+        let mut emb = Embedding::zeros(2, 2);
+        emb.row_mut(1)[0] = f32::NAN;
+        let path = std::env::temp_dir().join("pw2v_io_nan.vec");
+        let err = save_text(&path, &vocab, &emb).unwrap_err().to_string();
+        assert!(err.contains("non-finite"), "unhelpful error: {err}");
+        emb.row_mut(1)[0] = f32::INFINITY;
+        assert!(save_text(&path, &vocab, &emb).is_err());
+        // Binary stores raw bits: non-finite survives there losslessly.
+        save_binary(&path, &vocab, &emb).unwrap();
+        let (_, got) = load_binary(&path).unwrap();
+        assert_eq!(got.row(1)[0], f32::INFINITY);
+        std::fs::remove_file(&path).ok();
+        let mut tmp = path.into_os_string();
+        tmp.push(".tmp");
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn malformed_text_rows_fail_with_location_context() {
+        let dir = std::env::temp_dir();
+        // Unparseable value: error names row, word and column.
+        let path = dir.join("pw2v_io_badval.vec");
+        std::fs::write(&path, "2 2\nw0 1 2\nw1 3 oops\n").unwrap();
+        let err = load_text(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("row 1") && err.contains("w1") && err.contains("oops"),
+            "unhelpful error: {err}"
+        );
+        // Extra columns (the signature of an embedded-whitespace token)
+        // must be rejected, not silently dropped.
+        std::fs::write(&path, "2 2\nw0 1 2\nbad token 3 4\n").unwrap();
+        let err = load_text(&path).unwrap_err().to_string();
+        assert!(err.contains("more than 2 columns"), "unhelpful error: {err}");
+        // Short row: the missing column is named.
+        std::fs::write(&path, "2 2\nw0 1 2\nw1 3\n").unwrap();
+        let err = load_text(&path).unwrap_err().to_string();
+        assert!(err.contains("ends at column 1"), "unhelpful error: {err}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,424 @@
+//! The serve query engine: SIMD-scored exhaustive scan over the row
+//! store, answering `topk` / `analogy` requests.
+//!
+//! Steady-state discipline: every buffer a request touches lives in a
+//! caller-owned [`Scratch`] — parse scratch, query vector, int8 query
+//! codes, the hit heap and the response string.  After warm-up a
+//! request allocates NOTHING (pinned by the serve leg of
+//! `tests/alloc_steadystate.rs`), so p99 latency is not at the mercy of
+//! the allocator.
+//!
+//! Scoring:
+//! - f32 path: rows are unit-normalised, so `topk` similarity is a
+//!   plain [`simd::dot`] against the query word's unit row — under
+//!   scalar dispatch this is bit-for-bit the arithmetic of
+//!   [`crate::eval::similarity::cosine`]'s ranking and of
+//!   [`crate::eval::analogy::eval_analogy`]'s 3CosAdd argmax.
+//! - int8 path: the quantized scan of [`super::quant`], gated at
+//!   recall@10 ≥ 0.95 by `tests/serve_parity.rs`.
+//!
+//! Ranking is total and deterministic: score descending, ties broken
+//! toward the LOWER row id (matching `eval_analogy`'s first-wins strict
+//! `>` argmax); unservable rows (zero-norm / non-finite at build time)
+//! and the query's own id(s) never appear.
+
+use std::fmt::Write as _;
+
+use crate::config::QuantMode;
+use crate::linalg::simd;
+use crate::util::json::{write_json_str, JsonEscaper};
+
+use super::quant::{quantize_into, QuantStore};
+use super::request::{parse_request, Op, ReqScratch};
+use super::store::RowStore;
+
+/// Default result count when a request omits `k`.
+pub const DEFAULT_K: usize = 10;
+/// Hard cap on `k`: bounds response size and the hit buffer.
+pub const MAX_K: usize = 64;
+
+/// One ranked result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    pub id: u32,
+    pub score: f32,
+}
+
+/// Caller-owned request-lifetime buffers; capacity is retained across
+/// requests so the steady-state request path performs no allocation.
+#[derive(Default)]
+pub struct Scratch {
+    pub req: ReqScratch,
+    query: Vec<f32>,
+    qcodes: Vec<i8>,
+    hits: Vec<Hit>,
+    /// Raw request line buffer for the I/O loops.
+    pub line: Vec<u8>,
+    /// Response JSON (one line, no trailing newline).
+    pub out: String,
+}
+
+/// A loaded model ready to answer queries.
+pub struct ServeEngine {
+    store: RowStore,
+    quant: Option<QuantStore>,
+}
+
+impl ServeEngine {
+    /// Wrap a row store, optionally building the int8 shadow copy.
+    pub fn from_store(store: RowStore, mode: QuantMode) -> Self {
+        let quant = match mode {
+            QuantMode::Off => None,
+            QuantMode::Int8 => Some(QuantStore::build(store.rows(), store.dim())),
+        };
+        Self { store, quant }
+    }
+
+    pub fn store(&self) -> &RowStore {
+        &self.store
+    }
+
+    /// Is the int8 scan active?
+    pub fn quantized(&self) -> bool {
+        self.quant.is_some()
+    }
+
+    /// Nearest neighbours of `id` by cosine, excluding `id` itself.
+    pub fn topk<'s>(&self, id: u32, k: usize, s: &'s mut Scratch) -> &'s [Hit] {
+        s.query.clear();
+        s.query.extend_from_slice(self.store.row(id));
+        self.scan([id, u32::MAX, u32::MAX], k, s)
+    }
+
+    /// 3CosAdd analogy `a:b :: c:?` — the exact query vector and
+    /// exclusion set of [`crate::eval::analogy::eval_analogy`].
+    pub fn analogy<'s>(
+        &self,
+        ia: u32,
+        ib: u32,
+        ic: u32,
+        k: usize,
+        s: &'s mut Scratch,
+    ) -> &'s [Hit] {
+        let d = self.store.dim();
+        let (ua, ub, uc) = (self.store.row(ia), self.store.row(ib), self.store.row(ic));
+        s.query.clear();
+        s.query.reserve(d);
+        for l in 0..d {
+            s.query.push(ub[l] - ua[l] + uc[l]);
+        }
+        self.scan([ia, ib, ic], k, s)
+    }
+
+    /// Score every servable, non-excluded row against `s.query`, keeping
+    /// the best `k` (score desc, tie → lower id).
+    fn scan<'s>(&self, exclude: [u32; 3], k: usize, s: &'s mut Scratch) -> &'s [Hit] {
+        let k = k.min(MAX_K);
+        s.hits.clear();
+        s.hits.reserve(MAX_K);
+        if k == 0 {
+            return &s.hits;
+        }
+        let n = self.store.n_rows() as u32;
+        if let Some(q) = &self.quant {
+            s.qcodes.resize(self.store.dim(), 0);
+            let qscale = quantize_into(&s.query, &mut s.qcodes);
+            for id in 0..n {
+                if exclude.contains(&id) || !self.store.servable(id) {
+                    continue;
+                }
+                push_hit(
+                    &mut s.hits,
+                    k,
+                    Hit {
+                        id,
+                        score: q.score(&s.qcodes, qscale, id),
+                    },
+                );
+            }
+        } else {
+            for id in 0..n {
+                if exclude.contains(&id) || !self.store.servable(id) {
+                    continue;
+                }
+                push_hit(
+                    &mut s.hits,
+                    k,
+                    Hit {
+                        id,
+                        score: simd::dot(self.store.row(id), &s.query),
+                    },
+                );
+            }
+        }
+        &s.hits
+    }
+
+    /// Answer one request line, writing the full JSON response (no
+    /// trailing newline) into `s.out`.  Never panics on hostile input;
+    /// every outcome is a one-line JSON object with an `"ok"` field.
+    pub fn handle_line(&self, line: &[u8], s: &mut Scratch) {
+        s.out.clear();
+        let parsed = match parse_request(line, &mut s.req) {
+            Ok(p) => p,
+            Err(e) => {
+                s.out.push_str("{\"ok\":false,\"error\":\"");
+                let _ = write!(JsonEscaper(&mut s.out), "{e}");
+                s.out.push_str("\"}");
+                return;
+            }
+        };
+        let k = parsed.k.unwrap_or(DEFAULT_K).min(MAX_K);
+        match parsed.op {
+            Op::TopK => {
+                let Some(id) = self.lookup(0, s) else {
+                    return;
+                };
+                self.topk(id, k, s);
+                s.out.push_str("{\"ok\":true,\"op\":\"topk\",\"word\":");
+                let _ = write_json_str(&mut s.out, &s.req.word);
+                let _ = write!(s.out, ",\"k\":{k},");
+                self.write_hits(s);
+            }
+            Op::Analogy => {
+                let (Some(ia), Some(ib), Some(ic)) =
+                    (self.lookup(1, s), self.lookup(2, s), self.lookup(3, s))
+                else {
+                    return;
+                };
+                self.analogy(ia, ib, ic, k, s);
+                s.out.push_str("{\"ok\":true,\"op\":\"analogy\",\"a\":");
+                let _ = write_json_str(&mut s.out, &s.req.a);
+                s.out.push_str(",\"b\":");
+                let _ = write_json_str(&mut s.out, &s.req.b);
+                s.out.push_str(",\"c\":");
+                let _ = write_json_str(&mut s.out, &s.req.c);
+                let _ = write!(s.out, ",\"k\":{k},");
+                self.write_hits(s);
+            }
+        }
+        s.out.push('}');
+    }
+
+    /// Resolve one scratch word slot (0=word, 1=a, 2=b, 3=c) to a row
+    /// id; on the FIRST miss, write the error response (naming the
+    /// offending word) and return `None`.
+    fn lookup(&self, slot: u8, s: &mut Scratch) -> Option<u32> {
+        let w = match slot {
+            0 => &s.req.word,
+            1 => &s.req.a,
+            2 => &s.req.b,
+            _ => &s.req.c,
+        };
+        if let Some(id) = self.store.id(w) {
+            return Some(id);
+        }
+        if s.out.is_empty() {
+            s.out.push_str("{\"ok\":false,\"error\":\"unknown word\",\"word\":");
+            let _ = write_json_str(&mut s.out, w);
+            s.out.push('}');
+        }
+        None
+    }
+
+    /// Append `"hits":[{"word":…,"score":…},…]` to `s.out`.
+    fn write_hits(&self, s: &mut Scratch) {
+        s.out.push_str("\"hits\":[");
+        for (i, h) in s.hits.iter().enumerate() {
+            if i > 0 {
+                s.out.push(',');
+            }
+            s.out.push_str("{\"word\":");
+            let _ = write_json_str(&mut s.out, self.store.word(h.id));
+            let _ = write!(s.out, ",\"score\":{}}}", h.score);
+        }
+        s.out.push(']');
+    }
+}
+
+/// Keep `hits` sorted (score desc, tie → lower id) and capped at `k`.
+fn push_hit(hits: &mut Vec<Hit>, k: usize, h: Hit) {
+    let better = |x: &Hit, y: &Hit| x.score > y.score || (x.score == y.score && x.id < y.id);
+    if hits.len() == k {
+        match hits.last() {
+            Some(last) if better(&h, last) => {
+                hits.pop();
+            }
+            _ => return,
+        }
+    }
+    let end = hits.len();
+    let pos = hits.iter().position(|e| better(&h, e)).unwrap_or(end);
+    hits.insert(pos, h);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::vocab::Vocab;
+    use crate::eval::analogy::{eval_analogy, AnalogyQuestion};
+    use crate::model::Embedding;
+    use crate::util::json::Json;
+
+    /// Planted store: the analogy fixture from `eval::analogy::tests`
+    /// plus a zero (unservable) row.
+    fn planted() -> ServeEngine {
+        engine_with(QuantMode::Off)
+    }
+
+    fn engine_with(mode: QuantMode) -> ServeEngine {
+        let (words, emb) = planted_model();
+        ServeEngine::from_store(RowStore::from_model(words, &emb).unwrap(), mode)
+    }
+
+    fn planted_model() -> (Vec<String>, Embedding) {
+        let words: Vec<String> = ["king", "queen", "man", "woman", "x", "y", "dead"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let mut emb = Embedding::zeros(7, 3);
+        emb.row_mut(0).copy_from_slice(&[1.0, 0.0, 1.0]);
+        emb.row_mut(1).copy_from_slice(&[1.0, 1.0, 1.0]);
+        emb.row_mut(2).copy_from_slice(&[1.0, 0.0, -1.0]);
+        emb.row_mut(3).copy_from_slice(&[1.0, 1.0, -1.0]);
+        emb.row_mut(4).copy_from_slice(&[-1.0, -1.0, 0.0]);
+        emb.row_mut(5).copy_from_slice(&[-1.0, 0.5, -0.5]);
+        // row 6 ("dead") stays zero: unservable.
+        (words, emb)
+    }
+
+    #[test]
+    fn topk_ranks_by_cosine_excluding_self_and_unservable() {
+        let eng = planted();
+        let mut s = Scratch::default();
+        let hits = eng.topk(0, 10, &mut s).to_vec();
+        assert!(!hits.iter().any(|h| h.id == 0), "query id excluded");
+        assert!(!hits.iter().any(|h| h.id == 6), "unservable excluded");
+        assert_eq!(hits.len(), 5);
+        // Scores descending; ranking matches a brute-force unit-dot scan.
+        for w in hits.windows(2) {
+            assert!(
+                w[0].score > w[1].score || (w[0].score == w[1].score && w[0].id < w[1].id),
+                "order violated: {w:?}"
+            );
+        }
+        assert_eq!(hits[0].id, 1, "queen is nearest to king in this geometry");
+    }
+
+    #[test]
+    fn analogy_top1_matches_eval_oracle() {
+        let eng = planted();
+        let mut s = Scratch::default();
+        let hits = eng.analogy(0, 1, 2, 5, &mut s);
+        assert_eq!(hits[0].id, 3, "king:queen :: man:woman");
+        // Cross-check against eval_analogy on the same geometry.
+        let (words, emb) = planted_model();
+        let text = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let n = words.len() - i;
+                format!("{w} ").repeat(n)
+            })
+            .collect::<String>();
+        let vocab = Vocab::build(text.split_whitespace(), 1);
+        let q = vec![AnalogyQuestion {
+            a: "king".into(),
+            b: "queen".into(),
+            c: "man".into(),
+            d: "woman".into(),
+            section: "s".into(),
+        }];
+        let r = eval_analogy(&q, &vocab, &emb);
+        assert_eq!(r.correct, 1, "oracle agrees the planted answer is woman");
+    }
+
+    #[test]
+    fn k_zero_and_k_clamp() {
+        let eng = planted();
+        let mut s = Scratch::default();
+        assert!(eng.topk(0, 0, &mut s).is_empty());
+        let n = eng.topk(0, 10_000, &mut s).len();
+        assert_eq!(n, 5, "clamped k still returns every candidate");
+    }
+
+    #[test]
+    fn tie_breaks_to_lower_id() {
+        // Two identical rows: both appear, lower id first.
+        let words: Vec<String> = ["q", "t1", "t2"].iter().map(|s| s.to_string()).collect();
+        let mut emb = Embedding::zeros(3, 2);
+        emb.row_mut(0).copy_from_slice(&[1.0, 0.0]);
+        emb.row_mut(1).copy_from_slice(&[0.5, 0.5]);
+        emb.row_mut(2).copy_from_slice(&[0.5, 0.5]);
+        let eng = ServeEngine::from_store(
+            RowStore::from_model(words, &emb).unwrap(),
+            QuantMode::Off,
+        );
+        let mut s = Scratch::default();
+        let hits = eng.topk(0, 2, &mut s);
+        assert_eq!(hits[0].score.to_bits(), hits[1].score.to_bits());
+        assert_eq!((hits[0].id, hits[1].id), (1, 2));
+    }
+
+    #[test]
+    fn int8_engine_agrees_on_large_margins() {
+        let f32_eng = engine_with(QuantMode::Off);
+        let int8_eng = engine_with(QuantMode::Int8);
+        assert!(int8_eng.quantized());
+        let mut s = Scratch::default();
+        let f: Vec<u32> = f32_eng.topk(0, 3, &mut s).iter().map(|h| h.id).collect();
+        let q: Vec<u32> = int8_eng.topk(0, 3, &mut s).iter().map(|h| h.id).collect();
+        assert_eq!(f, q, "planted margins are far beyond int8 noise");
+    }
+
+    #[test]
+    fn handle_line_json_contract() {
+        let eng = planted();
+        let mut s = Scratch::default();
+
+        eng.handle_line(br#"{"op":"topk","word":"king","k":3}"#, &mut s);
+        let j = Json::parse(&s.out).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("word").unwrap().as_str(), Some("king"));
+        assert_eq!(j.get("k").unwrap().as_usize(), Some(3));
+        let hits = j.get("hits").unwrap().as_arr().unwrap();
+        assert_eq!(hits.len(), 3);
+        assert_eq!(hits[0].get("word").unwrap().as_str(), Some("queen"));
+        assert!(hits[0].get("score").unwrap().as_f64().is_some());
+
+        eng.handle_line(br#"{"op":"analogy","a":"king","b":"queen","c":"man"}"#, &mut s);
+        let j = Json::parse(&s.out).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        let hits = j.get("hits").unwrap().as_arr().unwrap();
+        assert_eq!(hits[0].get("word").unwrap().as_str(), Some("woman"));
+
+        eng.handle_line(br#"{"op":"topk","word":"zzz"}"#, &mut s);
+        let j = Json::parse(&s.out).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("error").unwrap().as_str(), Some("unknown word"));
+        assert_eq!(j.get("word").unwrap().as_str(), Some("zzz"));
+
+        eng.handle_line(br#"{"op":"frobnicate"}"#, &mut s);
+        let j = Json::parse(&s.out).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert!(
+            j.get("error").unwrap().as_str().unwrap().contains("bad request"),
+            "{}",
+            s.out
+        );
+
+        // Hostile bytes still get a JSON answer, never a panic.
+        eng.handle_line(&[0xFF, 0xFE, b'{'], &mut s);
+        assert!(Json::parse(&s.out).is_ok());
+    }
+
+    #[test]
+    fn handle_line_unknown_analogy_word_names_it() {
+        let eng = planted();
+        let mut s = Scratch::default();
+        eng.handle_line(br#"{"op":"analogy","a":"king","b":"gone","c":"man"}"#, &mut s);
+        let j = Json::parse(&s.out).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("word").unwrap().as_str(), Some("gone"));
+    }
+}

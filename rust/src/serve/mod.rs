@@ -1,0 +1,134 @@
+//! Embedding-serving engine (the `serve` subcommand).
+//!
+//! Turns a trained model into a query service: load vectors (hardened
+//! `model::io::load_text`, or the mmap-able binary [`store::RowStore`]),
+//! optionally build an int8 shadow copy ([`quant`]), then answer
+//! line-delimited JSON `topk` / `analogy` requests over stdin/stdout or
+//! a TCP socket.
+//!
+//! Layering mirrors the training side:
+//! - [`store`] — scan-ready unit rows, binary format, mmap open path
+//!   (shared `util::mmap` substrate with the corpus cache);
+//! - [`quant`] — per-row symmetric int8 codes + scales;
+//! - [`request`] — zero-allocation pull parser for request lines;
+//! - [`engine`] — SIMD-dispatched scored scan + response writer;
+//! - this module — the blocking I/O loops.
+//!
+//! The serve loop is allocation-free at steady state (request scratch,
+//! hit buffer and response string are all reused), pinned by
+//! `tests/alloc_steadystate.rs`; answer parity against the eval oracles
+//! is pinned by `tests/serve_parity.rs`.
+
+pub mod engine;
+pub mod quant;
+pub mod request;
+pub mod store;
+
+pub use engine::{Hit, Scratch, ServeEngine, DEFAULT_K, MAX_K};
+pub use store::RowStore;
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpListener;
+
+/// Serve requests from `stdin`, one JSON object per line, writing one
+/// JSON response line each.  Returns at EOF.
+pub fn run_stdio(eng: &ServeEngine) -> anyhow::Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut r = stdin.lock();
+    let mut w = BufWriter::new(stdout.lock());
+    serve_stream(eng, &mut r, &mut w)
+}
+
+/// Accept TCP connections on `addr` and serve each to completion,
+/// sequentially (the scan is memory-bandwidth-bound; interleaving
+/// clients would only thrash the row cache).  A per-connection error
+/// is logged and the accept loop continues; only accept failures and
+/// bind failures abort.
+pub fn run_listen(eng: &ServeEngine, addr: &str) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("serve: cannot listen on {addr}: {e}"))?;
+    eprintln!(
+        "serve: listening on {} ({} rows, dim {})",
+        listener.local_addr()?,
+        eng.store().n_rows(),
+        eng.store().dim()
+    );
+    loop {
+        let (sock, peer) = listener.accept()?;
+        sock.set_nodelay(true).ok();
+        let mut r = BufReader::new(sock.try_clone()?);
+        let mut w = BufWriter::new(sock);
+        if let Err(e) = serve_stream(eng, &mut r, &mut w) {
+            eprintln!("serve: connection {peer}: {e}");
+        }
+    }
+}
+
+/// The shared request/response loop: `read_until(b'\n')` into the
+/// scratch line buffer, answer, write + flush.  Flushing per line keeps
+/// a pipelined client from deadlocking against a buffered response.
+fn serve_stream<R: BufRead, W: Write>(
+    eng: &ServeEngine,
+    r: &mut R,
+    w: &mut W,
+) -> anyhow::Result<()> {
+    let mut s = Scratch::default();
+    loop {
+        s.line.clear();
+        let n = r.read_until(b'\n', &mut s.line)?;
+        if n == 0 {
+            return Ok(());
+        }
+        // The line buffer lives inside the scratch the engine mutates,
+        // so move it out for the call (a Vec move, no copy/alloc) and
+        // put it back after — capacity is retained either way.
+        let line = std::mem::take(&mut s.line);
+        let req = trim_line(&line);
+        if !req.is_empty() {
+            eng.handle_line(req, &mut s);
+            w.write_all(s.out.as_bytes())?;
+            w.write_all(b"\n")?;
+            w.flush()?;
+        }
+        s.line = line;
+    }
+}
+
+/// Strip the trailing newline (and optional CR) from a raw line.
+fn trim_line(line: &[u8]) -> &[u8] {
+    let mut end = line.len();
+    while end > 0 && (line[end - 1] == b'\n' || line[end - 1] == b'\r') {
+        end -= 1;
+    }
+    &line[..end]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantMode;
+    use crate::model::Embedding;
+
+    #[test]
+    fn stream_loop_answers_per_line_and_stops_at_eof() {
+        let words: Vec<String> = ["a", "b", "c"].iter().map(|s| s.to_string()).collect();
+        let mut emb = Embedding::zeros(3, 2);
+        emb.row_mut(0).copy_from_slice(&[1.0, 0.0]);
+        emb.row_mut(1).copy_from_slice(&[0.9, 0.1]);
+        emb.row_mut(2).copy_from_slice(&[0.0, 1.0]);
+        let eng = ServeEngine::from_store(
+            RowStore::from_model(words, &emb).unwrap(),
+            QuantMode::Off,
+        );
+        let input = b"{\"op\":\"topk\",\"word\":\"a\",\"k\":1}\n\r\n\nnot json\n";
+        let mut out = Vec::new();
+        serve_stream(&eng, &mut &input[..], &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "blank lines are skipped: {text:?}");
+        assert!(lines[0].contains("\"ok\":true"), "{}", lines[0]);
+        assert!(lines[0].contains("\"word\":\"a\""), "{}", lines[0]);
+        assert!(lines[1].contains("\"ok\":false"), "{}", lines[1]);
+    }
+}

@@ -1,0 +1,160 @@
+//! Symmetric int8 quantization of the row store (the KNL companion
+//! paper's `Wo` trick, applied to the query side): each unit row is
+//! stored as `dim` i8 codes plus one f32 scale, cutting scan bandwidth
+//! ~4× so million-word vocabs stay cache-resident.
+//!
+//! Scheme: per-row symmetric, scale `s_r = maxabs(row)/127`, code
+//! `c = round(x / s_r)` clamped to ±127.  A query is quantized the same
+//! way per request, and the scanned score is
+//!
+//! ```text
+//! score ≈ (s_q · s_r) · <q_codes, r_codes>   (i32 integer dot)
+//! ```
+//!
+//! The integer dot goes through `linalg::simd::dot_i8` (AVX2 `madd` or
+//! scalar — exactly equal either way), so the int8 scan's RANKING is
+//! dispatch-invariant by construction; its agreement with the f32 scan
+//! is a measured quantity, gated at recall@10 ≥ 0.95 in
+//! `tests/serve_parity.rs` and accounted in EXPERIMENTS.md §Serving.
+
+use crate::linalg::simd;
+
+/// Int8 codes + per-row scales for a packed `n × dim` row matrix.
+pub struct QuantStore {
+    dim: usize,
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+/// Quantize one vector into `out`, returning its scale (`maxabs/127`).
+/// All-zero or non-finite input yields scale 0.0 with `out` zeroed, so
+/// every score such a vector produces is 0.0.  Non-finiteness is
+/// tracked per component: `f32::max` IGNORES a NaN operand, so a NaN
+/// hiding among finite values would otherwise slip through the maxabs
+/// check.
+pub fn quantize_into(v: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert_eq!(v.len(), out.len());
+    let mut maxabs = 0.0f32;
+    let mut finite = true;
+    for &x in v {
+        finite &= x.is_finite();
+        maxabs = maxabs.max(x.abs());
+    }
+    if !finite || maxabs <= 0.0 {
+        out.fill(0);
+        return 0.0;
+    }
+    let scale = maxabs / 127.0;
+    let inv = 127.0 / maxabs;
+    for (o, &x) in out.iter_mut().zip(v) {
+        *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+impl QuantStore {
+    /// Quantize every row of a packed `n × dim` matrix.
+    pub fn build(rows: &[f32], dim: usize) -> Self {
+        assert!(dim > 0 && rows.len() % dim == 0, "quant geometry");
+        let n = rows.len() / dim;
+        let mut codes = vec![0i8; rows.len()];
+        let mut scales = vec![0.0f32; n];
+        for r in 0..n {
+            scales[r] = quantize_into(
+                &rows[r * dim..(r + 1) * dim],
+                &mut codes[r * dim..(r + 1) * dim],
+            );
+        }
+        Self { dim, codes, scales }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Codes of one row.
+    pub fn row_codes(&self, id: u32) -> &[i8] {
+        let d = self.dim;
+        &self.codes[id as usize * d..(id as usize + 1) * d]
+    }
+
+    /// One row's scale (`maxabs/127`).
+    pub fn scale(&self, id: u32) -> f32 {
+        self.scales[id as usize]
+    }
+
+    /// Approximate dot of a quantized query against row `id`.
+    #[inline]
+    pub fn score(&self, qcodes: &[i8], qscale: f32, id: u32) -> f32 {
+        let acc = simd::dot_i8(qcodes, self.row_codes(id));
+        (qscale * self.scales[id as usize]) * acc as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256ss;
+
+    #[test]
+    fn quantize_bounds_componentwise_error() {
+        let mut rng = Xoshiro256ss::new(0x8B17);
+        let d = 96;
+        let v: Vec<f32> = (0..d).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let mut codes = vec![0i8; d];
+        let scale = quantize_into(&v, &mut codes);
+        assert!(scale > 0.0);
+        for (x, c) in v.iter().zip(&codes) {
+            let back = *c as f32 * scale;
+            assert!(
+                (back - x).abs() <= scale * 0.5 + 1e-7,
+                "{x} -> {c} -> {back} (scale {scale})"
+            );
+        }
+        // The max-|x| component hits exactly ±127.
+        assert_eq!(codes.iter().map(|c| c.unsigned_abs()).max(), Some(127));
+    }
+
+    #[test]
+    fn zero_and_nonfinite_vectors_quantize_to_zero() {
+        let mut codes = vec![7i8; 4];
+        assert_eq!(quantize_into(&[0.0; 4], &mut codes), 0.0);
+        assert!(codes.iter().all(|&c| c == 0));
+        let mut codes = vec![7i8; 2];
+        assert_eq!(quantize_into(&[f32::NAN, 1.0], &mut codes), 0.0);
+        assert!(codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn quantized_dot_tracks_f32_dot() {
+        let mut rng = Xoshiro256ss::new(0xD07_5EED);
+        let (n, d) = (32usize, 64usize);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.next_f32() - 0.5).collect();
+        let qs = QuantStore::build(&rows, d);
+        assert_eq!(qs.n_rows(), n);
+        let q: Vec<f32> = (0..d).map(|_| rng.next_f32() - 0.5).collect();
+        let mut qcodes = vec![0i8; d];
+        let qscale = quantize_into(&q, &mut qcodes);
+        for id in 0..n as u32 {
+            let exact: f32 = q
+                .iter()
+                .zip(&rows[id as usize * d..(id as usize + 1) * d])
+                .map(|(a, b)| a * b)
+                .sum();
+            let approx = qs.score(&qcodes, qscale, id);
+            // Per-component error ≤ (s_q/2)·|r_i| + (s_r/2)·|q_i| + s_q·s_r/4
+            // with |values| ≤ 0.5 here; summed, a loose-but-sound bound is
+            // d · (s_q + s_r) / 2.  Enough to catch scheme-level mistakes
+            // (wrong scale, sign, clamp) without flaking on rounding.
+            let bound = d as f32 * (qscale + qs.scale(id)) * 0.5;
+            assert!(
+                (approx - exact).abs() <= bound,
+                "id {id}: {approx} vs {exact} (bound {bound})"
+            );
+        }
+    }
+}

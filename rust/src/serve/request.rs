@@ -1,0 +1,407 @@
+//! Pull-parsed serve requests: one flat JSON object per line.
+//!
+//! In the style of picojson-rs: a hand-rolled, iterative (no recursion),
+//! panic-free scanner over the raw line bytes that writes string values
+//! into CALLER-OWNED scratch buffers — at steady state a request parse
+//! allocates nothing (the `alloc_steadystate` gate covers the whole
+//! serve loop).  This is deliberately NOT `util::json::Json::parse`,
+//! which builds an owned tree per document; the response side reuses
+//! `util::json`'s escaping writer instead.
+//!
+//! Accepted grammar (flat object, known keys, any order):
+//!
+//! ```text
+//! {"op":"topk","word":W,"k":K}
+//! {"op":"analogy","a":A,"b":B,"c":C,"k":K}
+//! ```
+//!
+//! `k` is optional (the engine applies its default and cap).  Unknown
+//! keys, nested values, duplicate keys, or missing required keys are
+//! errors — a serving endpoint should reject what it does not
+//! understand, not guess.  String escapes match `util::json`'s parser
+//! (`\" \\ \/ \b \f \n \r \t \uXXXX`, no surrogate pairs).
+
+use std::fmt;
+
+/// Request verb.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    TopK,
+    Analogy,
+}
+
+/// Parse outcome: the op plus the requested `k`.  String fields live
+/// in the [`ReqScratch`] the parser filled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParsedRequest {
+    pub op: Op,
+    /// Requested k; `None` means "engine default".
+    pub k: Option<usize>,
+}
+
+/// Caller-owned string scratch: buffers are cleared and refilled per
+/// request, retaining capacity across requests.
+#[derive(Default)]
+pub struct ReqScratch {
+    pub word: String,
+    pub a: String,
+    pub b: String,
+    pub c: String,
+}
+
+/// Parse error: byte position + static message (no allocation on the
+/// error path either — a hostile client must not make the server
+/// allocate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReqError {
+    pub pos: usize,
+    pub msg: &'static str,
+}
+
+impl fmt::Display for ReqError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "bad request at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ReqError {}
+
+struct Scanner<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Scanner<'a> {
+    fn err(&self, msg: &'static str) -> ReqError {
+        ReqError { pos: self.pos, msg }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8, msg: &'static str) -> Result<(), ReqError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(msg))
+        }
+    }
+
+    /// Scan a JSON string, unescaping into `out` (cleared first).
+    fn string_into(&mut self, out: &mut String) -> Result<(), ReqError> {
+        out.clear();
+        self.eat(b'"', "expected '\"'")?;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let e = self.peek().ok_or_else(|| self.err("bad escape"))?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            if self.pos + 4 > self.b.len() {
+                                return Err(self.err("bad \\u"));
+                            }
+                            let mut cp = 0u32;
+                            for i in 0..4 {
+                                let d = self.b[self.pos + i];
+                                cp = cp * 16
+                                    + match d {
+                                        b'0'..=b'9' => (d - b'0') as u32,
+                                        b'a'..=b'f' => (d - b'a' + 10) as u32,
+                                        b'A'..=b'F' => (d - b'A' + 10) as u32,
+                                        _ => return Err(self.err("bad \\u")),
+                                    };
+                            }
+                            self.pos += 4;
+                            // Surrogate pairs unsupported, matching
+                            // util::json: map to the replacement char.
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(self.err("bad escape char")),
+                    }
+                }
+                Some(_) => {
+                    // Copy a maximal run of plain bytes; the line must be
+                    // UTF-8 for the value to be accepted.
+                    let start = self.pos;
+                    while let Some(c) = self.peek() {
+                        if c == b'"' || c == b'\\' {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    let run = std::str::from_utf8(&self.b[start..self.pos])
+                        .map_err(|_| ReqError {
+                            pos: start,
+                            msg: "string is not UTF-8",
+                        })?;
+                    out.push_str(run);
+                }
+            }
+        }
+    }
+
+    /// Scan a small non-negative integer (the only number the grammar
+    /// holds is `k`).
+    fn small_uint(&mut self) -> Result<usize, ReqError> {
+        let start = self.pos;
+        let mut v: usize = 0;
+        while let Some(c) = self.peek() {
+            if !c.is_ascii_digit() {
+                break;
+            }
+            v = v
+                .checked_mul(10)
+                .and_then(|v| v.checked_add((c - b'0') as usize))
+                .ok_or(ReqError {
+                    pos: start,
+                    msg: "k out of range",
+                })?;
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err("expected a non-negative integer"));
+        }
+        Ok(v)
+    }
+}
+
+/// Key slots the grammar knows, for duplicate detection.
+const K_OP: u8 = 0;
+const K_WORD: u8 = 1;
+const K_A: u8 = 2;
+const K_B: u8 = 3;
+const K_C: u8 = 4;
+const K_K: u8 = 5;
+
+/// Parse one request line into `scratch`, returning the op and `k`.
+pub fn parse_request(line: &[u8], scratch: &mut ReqScratch) -> Result<ParsedRequest, ReqError> {
+    let mut s = Scanner { b: line, pos: 0 };
+    let mut op: Option<Op> = None;
+    let mut k: Option<usize> = None;
+    let mut seen = [false; 6];
+    scratch.word.clear();
+    scratch.a.clear();
+    scratch.b.clear();
+    scratch.c.clear();
+    s.ws();
+    s.eat(b'{', "expected '{'")?;
+    s.ws();
+    if s.peek() == Some(b'}') {
+        return Err(s.err("empty request"));
+    }
+    loop {
+        s.ws();
+        // Keys are short known ASCII literals: match them without an
+        // unescape buffer.
+        let kslot = key_slot(&mut s)?;
+        if seen[kslot as usize] {
+            return Err(s.err("duplicate key"));
+        }
+        seen[kslot as usize] = true;
+        s.ws();
+        s.eat(b':', "expected ':'")?;
+        s.ws();
+        match kslot {
+            K_OP => op = Some(op_value(&mut s)?),
+            K_WORD => s.string_into(&mut scratch.word)?,
+            K_A => s.string_into(&mut scratch.a)?,
+            K_B => s.string_into(&mut scratch.b)?,
+            K_C => s.string_into(&mut scratch.c)?,
+            _ => k = Some(s.small_uint()?),
+        }
+        s.ws();
+        match s.peek() {
+            Some(b',') => s.pos += 1,
+            Some(b'}') => {
+                s.pos += 1;
+                break;
+            }
+            _ => return Err(s.err("expected ',' or '}'")),
+        }
+    }
+    s.ws();
+    if s.pos != s.b.len() {
+        return Err(s.err("trailing data after request"));
+    }
+    let op = op.ok_or(ReqError {
+        pos: 0,
+        msg: "missing \"op\"",
+    })?;
+    match op {
+        Op::TopK => {
+            if !seen[K_WORD as usize] {
+                return Err(ReqError {
+                    pos: 0,
+                    msg: "topk requires \"word\"",
+                });
+            }
+            if seen[K_A as usize] || seen[K_B as usize] || seen[K_C as usize] {
+                return Err(ReqError {
+                    pos: 0,
+                    msg: "topk takes \"word\", not \"a\"/\"b\"/\"c\"",
+                });
+            }
+        }
+        Op::Analogy => {
+            if !(seen[K_A as usize] && seen[K_B as usize] && seen[K_C as usize]) {
+                return Err(ReqError {
+                    pos: 0,
+                    msg: "analogy requires \"a\", \"b\" and \"c\"",
+                });
+            }
+            if seen[K_WORD as usize] {
+                return Err(ReqError {
+                    pos: 0,
+                    msg: "analogy takes \"a\"/\"b\"/\"c\", not \"word\"",
+                });
+            }
+        }
+    }
+    Ok(ParsedRequest { op, k })
+}
+
+/// Match one of the known keys (a quoted ASCII literal) in place.
+fn key_slot(s: &mut Scanner) -> Result<u8, ReqError> {
+    s.eat(b'"', "expected a key")?;
+    let start = s.pos;
+    while let Some(c) = s.peek() {
+        if c == b'"' {
+            break;
+        }
+        if c == b'\\' {
+            return Err(s.err("escapes not allowed in keys"));
+        }
+        s.pos += 1;
+    }
+    let name = &s.b[start..s.pos];
+    s.eat(b'"', "unterminated key")?;
+    match name {
+        b"op" => Ok(K_OP),
+        b"word" => Ok(K_WORD),
+        b"a" => Ok(K_A),
+        b"b" => Ok(K_B),
+        b"c" => Ok(K_C),
+        b"k" => Ok(K_K),
+        _ => Err(ReqError {
+            pos: start,
+            msg: "unknown key (op|word|a|b|c|k)",
+        }),
+    }
+}
+
+/// Match the `"topk"` / `"analogy"` op literal in place.
+fn op_value(s: &mut Scanner) -> Result<Op, ReqError> {
+    s.eat(b'"', "op must be a string")?;
+    let start = s.pos;
+    while let Some(c) = s.peek() {
+        if c == b'"' {
+            break;
+        }
+        s.pos += 1;
+    }
+    let name = &s.b[start..s.pos];
+    s.eat(b'"', "unterminated op")?;
+    match name {
+        b"topk" => Ok(Op::TopK),
+        b"analogy" => Ok(Op::Analogy),
+        _ => Err(ReqError {
+            pos: start,
+            msg: "unknown op (topk|analogy)",
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(line: &str) -> Result<(ParsedRequest, ReqScratch), ReqError> {
+        let mut s = ReqScratch::default();
+        parse_request(line.as_bytes(), &mut s).map(|r| (r, s))
+    }
+
+    #[test]
+    fn parses_topk() {
+        let (r, s) = parse(r#"{"op":"topk","word":"king","k":5}"#).unwrap();
+        assert_eq!(r.op, Op::TopK);
+        assert_eq!(r.k, Some(5));
+        assert_eq!(s.word, "king");
+    }
+
+    #[test]
+    fn parses_analogy_any_key_order() {
+        let (r, s) =
+            parse(r#" { "c" : "man" , "op" : "analogy" , "a" : "king" , "b" : "queen" } "#)
+                .unwrap();
+        assert_eq!(r.op, Op::Analogy);
+        assert_eq!(r.k, None);
+        assert_eq!((s.a.as_str(), s.b.as_str(), s.c.as_str()), ("king", "queen", "man"));
+    }
+
+    #[test]
+    fn unescapes_values() {
+        let (_, s) = parse(r#"{"op":"topk","word":"a\tbé\"q\""}"#).unwrap();
+        assert_eq!(s.word, "a\tbé\"q\"");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for (line, want) in [
+            ("", "expected '{'"),
+            ("{}", "empty request"),
+            (r#"{"op":"topk"}"#, "topk requires \"word\""),
+            (r#"{"word":"x"}"#, "missing \"op\""),
+            (r#"{"op":"frob","word":"x"}"#, "unknown op (topk|analogy)"),
+            (r#"{"op":"topk","word":"x","word":"y"}"#, "duplicate key"),
+            (r#"{"op":"topk","word":"x","zzz":1}"#, "unknown key (op|word|a|b|c|k)"),
+            (r#"{"op":"topk","word":"x"} extra"#, "trailing data after request"),
+            (r#"{"op":"topk","word":"x","k":-1}"#, "expected a non-negative integer"),
+            (r#"{"op":"topk","word":"x","k":99999999999999999999}"#, "k out of range"),
+            (r#"{"op":"analogy","a":"x","b":"y"}"#, "analogy requires \"a\", \"b\" and \"c\""),
+            (
+                r#"{"op":"analogy","a":"x","b":"y","c":"z","word":"w"}"#,
+                "analogy takes \"a\"/\"b\"/\"c\", not \"word\"",
+            ),
+            (r#"{"op":"topk","word":"x","a":"y"}"#, "topk takes \"word\", not \"a\"/\"b\"/\"c\""),
+            (r#"{"op":"topk","word":"x"#, "unterminated string"),
+        ] {
+            let err = parse(line).unwrap_err();
+            assert_eq!(err.msg, want, "line {line:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn scratch_capacity_is_reused() {
+        let mut s = ReqScratch::default();
+        parse_request(br#"{"op":"topk","word":"a-rather-long-word-here"}"#, &mut s).unwrap();
+        let cap = s.word.capacity();
+        let p = s.word.as_ptr();
+        parse_request(br#"{"op":"topk","word":"short"}"#, &mut s).unwrap();
+        assert_eq!(s.word, "short");
+        assert_eq!(s.word.capacity(), cap, "no shrink");
+        assert_eq!(s.word.as_ptr(), p, "no realloc");
+    }
+}

@@ -1,0 +1,403 @@
+//! The serve-side row store: unit-normalised embedding rows in a binary
+//! file the server can `mmap(2)` and scan without parsing.
+//!
+//! Loading a text vector file means float-parsing `V·D` decimals at
+//! every server start; the row store does that ONCE (`build` + `save`)
+//! and afterwards `open` is O(header + vocab) — the row payload maps
+//! straight into the scan loop through the PR-3 raw-mmap discipline
+//! (`util::mmap`, shared with the corpus cache).
+//!
+//! ## File format (version 1)
+//!
+//! ```text
+//! offset  size        field
+//! 0       8           magic "PW2VRST\0"
+//! 8       4           version (u32 LE) = 1
+//! 12      4           dim (u32 LE)
+//! 16      8           n_rows (u64 LE)
+//! 24      8           word-table length in bytes (u64 LE)
+//! 32      8           FNV-1a over [word table ‖ flag bytes] (u64 LE)
+//! 40      …           word table: per row u16 LE length + UTF-8 bytes
+//! …       n_rows      servable flags (1 byte each, 0/1)
+//! …       0–63        zero padding to a 64-byte multiple offset
+//! …       4·n·dim     unit rows (f32 LE, row-major, packed)
+//! ```
+//!
+//! Rows are stored UNIT-NORMALISED (exactly
+//! [`crate::eval::analogy::normalized_matrix`]'s arithmetic), so the
+//! scan's score is a plain dot product and bitwise-matches the eval
+//! oracles.  Servable flags bake in the
+//! [`crate::eval::similarity::row_servable`] policy at build time:
+//! zero-norm and non-finite rows never enter ranked results.
+//!
+//! The word table and flags are FNV-checksummed (they are small and
+//! parsed eagerly); the row payload is validated by SIZE only, like the
+//! corpus cache — opening a multi-GB store must stay O(1), not a
+//! full-file scan.  The f32 payload starts at a 64-byte-multiple file
+//! offset, so a page-aligned mapping lets the scan cast the bytes in
+//! place; misaligned or big-endian configurations fall back to one
+//! parsed copy.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::eval::analogy::normalized_matrix;
+use crate::eval::similarity::row_servable;
+use crate::model::io::atomic_write;
+use crate::model::Embedding;
+use crate::util::fnv::Fnv1a;
+use crate::util::mmap::{load_bytes, Bytes};
+
+/// Identifies the file as a pw2v serve row store.
+pub const MAGIC: [u8; 8] = *b"PW2VRST\0";
+/// Current format version.
+pub const VERSION: u32 = 1;
+
+const HEADER_LEN: usize = 40;
+/// Row payload alignment (file offset); also covers any SIMD width.
+const ROW_ALIGN: usize = 64;
+/// Dimension cap: keeps `simd::dot_i8`'s i32 accumulation overflow-free
+/// and rejects absurd headers before any allocation sizing.
+pub const MAX_DIM: usize = 1 << 17;
+
+/// Where the unit rows live after `open`.
+enum RowsData {
+    /// Parsed/copied into memory (text-model builds, misaligned or
+    /// big-endian fallbacks).
+    Owned(Vec<f32>),
+    /// Borrowed in place from the file bytes (mmap fast path): `off` is
+    /// the byte offset of the payload, `n` its length in f32s.
+    #[cfg(target_endian = "little")]
+    Raw { bytes: Bytes, off: usize, n: usize },
+}
+
+/// A validated, scan-ready set of unit rows with their vocabulary.
+pub struct RowStore {
+    words: Vec<String>,
+    /// First-occurrence word → row id (duplicate words in a hostile
+    /// input resolve to the lowest id, deterministically).
+    index: HashMap<String, u32>,
+    servable: Vec<bool>,
+    dim: usize,
+    data: RowsData,
+}
+
+impl RowStore {
+    /// Build from an in-memory model: rows are unit-normalised with the
+    /// analogy oracle's exact arithmetic and flagged through the serve
+    /// scan policy ([`row_servable`] on the ORIGINAL rows).
+    pub fn from_model(words: Vec<String>, emb: &Embedding) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            words.len() == emb.vocab(),
+            "word list ({}) and matrix ({}) disagree",
+            words.len(),
+            emb.vocab()
+        );
+        anyhow::ensure!(
+            emb.vocab() > 0 && emb.dim() > 0 && emb.dim() <= MAX_DIM,
+            "unservable model shape {}x{}",
+            emb.vocab(),
+            emb.dim()
+        );
+        let servable = (0..emb.vocab() as u32)
+            .map(|id| row_servable(emb.row(id)))
+            .collect();
+        let unit = normalized_matrix(emb);
+        let index = build_index(&words);
+        Ok(Self {
+            words,
+            index,
+            servable,
+            dim: emb.dim(),
+            data: RowsData::Owned(unit),
+        })
+    }
+
+    /// Serialise to the binary format via the atomic tmp+rename+fsync
+    /// discipline.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut names = Vec::new();
+        for w in &self.words {
+            let b = w.as_bytes();
+            anyhow::ensure!(b.len() <= u16::MAX as usize, "word longer than 64KiB");
+            names.extend_from_slice(&(b.len() as u16).to_le_bytes());
+            names.extend_from_slice(b);
+        }
+        let flags: Vec<u8> = self.servable.iter().map(|&s| s as u8).collect();
+        let mut h = Fnv1a::new();
+        h.update(&names);
+        h.update(&flags);
+        let digest = h.digest();
+        let rows = self.rows();
+        atomic_write(path, |w| {
+            use std::io::Write as _;
+            w.write_all(&MAGIC)?;
+            w.write_all(&VERSION.to_le_bytes())?;
+            w.write_all(&(self.dim as u32).to_le_bytes())?;
+            w.write_all(&(self.words.len() as u64).to_le_bytes())?;
+            w.write_all(&(names.len() as u64).to_le_bytes())?;
+            w.write_all(&digest.to_le_bytes())?;
+            w.write_all(&names)?;
+            w.write_all(&flags)?;
+            let body = HEADER_LEN + names.len() + flags.len();
+            let pad = crate::util::round_up(body, ROW_ALIGN) - body;
+            w.write_all(&vec![0u8; pad])?;
+            for &x in rows {
+                w.write_all(&x.to_le_bytes())?;
+            }
+            Ok(())
+        })
+    }
+
+    /// Open and validate a row store.  The row payload is borrowed from
+    /// the mapping when alignment and endianness allow, else copied.
+    pub fn open(path: &Path) -> anyhow::Result<Self> {
+        let bytes = load_bytes(path, true)?;
+        anyhow::ensure!(
+            bytes.len() >= HEADER_LEN && bytes[..8] == MAGIC,
+            "not a pw2v row store (bad magic): {}",
+            path.display()
+        );
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        anyhow::ensure!(
+            version == VERSION,
+            "row store version {version} (expected {VERSION})"
+        );
+        let dim = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let n = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        let names_len = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+        let digest = u64::from_le_bytes(bytes[32..40].try_into().unwrap());
+        anyhow::ensure!(
+            n > 0 && dim > 0 && dim <= MAX_DIM && n < u32::MAX as u64,
+            "implausible row store header ({n} x {dim})"
+        );
+        // All size arithmetic in u128: a hostile header must not wrap.
+        let body = HEADER_LEN as u128 + names_len as u128 + n as u128;
+        let rows_off = body.div_ceil(ROW_ALIGN as u128) * ROW_ALIGN as u128;
+        let want = rows_off + 4 * n as u128 * dim as u128;
+        anyhow::ensure!(
+            bytes.len() as u128 == want,
+            "row store is {} bytes, header implies {want}",
+            bytes.len()
+        );
+        let (n, names_len, rows_off) = (n as usize, names_len as usize, rows_off as usize);
+        let names = &bytes[HEADER_LEN..HEADER_LEN + names_len];
+        let flags = &bytes[HEADER_LEN + names_len..HEADER_LEN + names_len + n];
+        let mut h = Fnv1a::new();
+        h.update(names);
+        h.update(flags);
+        anyhow::ensure!(
+            h.digest() == digest,
+            "row store word-table checksum mismatch (corrupt or torn file)"
+        );
+        let mut words = Vec::with_capacity(n);
+        let mut pos = 0usize;
+        for i in 0..n {
+            anyhow::ensure!(pos + 2 <= names.len(), "word table truncated at row {i}");
+            let len = u16::from_le_bytes(names[pos..pos + 2].try_into().unwrap()) as usize;
+            pos += 2;
+            anyhow::ensure!(pos + len <= names.len(), "word table truncated at row {i}");
+            let w = std::str::from_utf8(&names[pos..pos + len])
+                .map_err(|e| anyhow::anyhow!("row {i}: word is not UTF-8 ({e})"))?;
+            words.push(w.to_string());
+            pos += len;
+        }
+        anyhow::ensure!(
+            pos == names.len(),
+            "word table has {} trailing bytes",
+            names.len() - pos
+        );
+        let servable: Vec<bool> = flags.iter().map(|&b| b != 0).collect();
+        let index = build_index(&words);
+        let data = rows_data(bytes, rows_off, n * dim);
+        Ok(Self {
+            words,
+            index,
+            servable,
+            dim,
+            data,
+        })
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        &self.words[id as usize]
+    }
+
+    pub fn words(&self) -> &[String] {
+        &self.words
+    }
+
+    /// Row id for `word` (first occurrence on duplicates).
+    pub fn id(&self, word: &str) -> Option<u32> {
+        self.index.get(word).copied()
+    }
+
+    /// May `id` appear in ranked results?  (The build-time
+    /// [`row_servable`] verdict.)
+    pub fn servable(&self, id: u32) -> bool {
+        self.servable[id as usize]
+    }
+
+    /// The full packed unit-row payload (`n_rows · dim`).
+    pub fn rows(&self) -> &[f32] {
+        match &self.data {
+            RowsData::Owned(v) => v,
+            #[cfg(target_endian = "little")]
+            RowsData::Raw { bytes, off, n } => {
+                let raw = &bytes[*off..*off + 4 * *n];
+                // SAFETY: 4-byte alignment was verified when this
+                // variant was constructed (and the backing buffer —
+                // mapping or Vec — never moves while borrowed); every
+                // bit pattern is a valid f32; the slice lives as long
+                // as `self.data` holds `bytes`.
+                unsafe { std::slice::from_raw_parts(raw.as_ptr() as *const f32, *n) }
+            }
+        }
+    }
+
+    /// One unit row.
+    pub fn row(&self, id: u32) -> &[f32] {
+        let d = self.dim;
+        &self.rows()[id as usize * d..(id as usize + 1) * d]
+    }
+}
+
+fn build_index(words: &[String]) -> HashMap<String, u32> {
+    let mut index = HashMap::with_capacity(words.len());
+    for (i, w) in words.iter().enumerate() {
+        index.entry(w.clone()).or_insert(i as u32);
+    }
+    index
+}
+
+/// Borrow the row payload in place when the platform and alignment
+/// allow, else parse one owned copy.
+fn rows_data(bytes: Bytes, rows_off: usize, n: usize) -> RowsData {
+    #[cfg(target_endian = "little")]
+    {
+        if (bytes.as_ptr() as usize + rows_off) % std::mem::align_of::<f32>() == 0 {
+            return RowsData::Raw {
+                bytes,
+                off: rows_off,
+                n,
+            };
+        }
+    }
+    let raw = &bytes[rows_off..rows_off + 4 * n];
+    let mut v = Vec::with_capacity(n);
+    for c in raw.chunks_exact(4) {
+        v.push(f32::from_le_bytes(c.try_into().unwrap()));
+    }
+    RowsData::Owned(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (Vec<String>, Embedding) {
+        let words: Vec<String> = ["alpha", "beta", "gamma", "dead"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let mut emb = Embedding::zeros(4, 3);
+        emb.row_mut(0).copy_from_slice(&[1.0, 0.0, 0.5]);
+        emb.row_mut(1).copy_from_slice(&[-0.25, 2.0, 0.0]);
+        emb.row_mut(2).copy_from_slice(&[0.5, 0.5, -1.5]);
+        // row 3 stays all-zero: must be flagged unservable.
+        (words, emb)
+    }
+
+    #[test]
+    fn build_normalises_and_flags() {
+        let (words, emb) = sample();
+        let st = RowStore::from_model(words, &emb).unwrap();
+        assert_eq!(st.n_rows(), 4);
+        assert_eq!(st.dim(), 3);
+        assert_eq!(st.id("beta"), Some(1));
+        assert_eq!(st.id("zzz"), None);
+        assert!(st.servable(0) && st.servable(1) && st.servable(2));
+        assert!(!st.servable(3), "zero row must be unservable");
+        // Rows equal the analogy oracle's unit matrix bit for bit.
+        let unit = normalized_matrix(&emb);
+        assert_eq!(st.rows(), &unit[..]);
+    }
+
+    #[test]
+    fn save_open_roundtrip_is_bitwise() {
+        let (words, emb) = sample();
+        let st = RowStore::from_model(words.clone(), &emb).unwrap();
+        let path = std::env::temp_dir().join("pw2v_rst_rt.rst");
+        st.save(&path).unwrap();
+        let got = RowStore::open(&path).unwrap();
+        assert_eq!(got.words(), st.words());
+        assert_eq!(got.dim(), st.dim());
+        for id in 0..4u32 {
+            assert_eq!(got.servable(id), st.servable(id));
+            let (a, b) = (got.row(id), st.row(id));
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "row {id}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_and_truncation_rejected() {
+        let (words, emb) = sample();
+        let st = RowStore::from_model(words, &emb).unwrap();
+        let path = std::env::temp_dir().join("pw2v_rst_bad.rst");
+        st.save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+
+        // Flipped bit in the word table: checksum catches it.
+        let mut flipped = full.clone();
+        flipped[HEADER_LEN + 3] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        let err = RowStore::open(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unhelpful error: {err}");
+
+        // Truncated payload: size check catches it.
+        std::fs::write(&path, &full[..full.len() - 4]).unwrap();
+        let err = RowStore::open(&path).unwrap_err().to_string();
+        assert!(err.contains("bytes"), "unhelpful error: {err}");
+
+        // Wrong magic.
+        let mut wrong = full.clone();
+        wrong[..8].copy_from_slice(b"NOTASTOR");
+        std::fs::write(&path, &wrong).unwrap();
+        let err = RowStore::open(&path).unwrap_err().to_string();
+        assert!(err.contains("magic"), "unhelpful error: {err}");
+
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn duplicate_words_resolve_to_first_id() {
+        let words: Vec<String> = ["x", "x", "y"].iter().map(|s| s.to_string()).collect();
+        let mut emb = Embedding::zeros(3, 2);
+        for id in 0..3u32 {
+            emb.row_mut(id).copy_from_slice(&[1.0 + id as f32, -1.0]);
+        }
+        let st = RowStore::from_model(words, &emb).unwrap();
+        assert_eq!(st.id("x"), Some(0));
+        assert_eq!(st.id("y"), Some(2));
+    }
+
+    #[test]
+    fn from_model_rejects_mismatched_shapes() {
+        let (_, emb) = sample();
+        let words: Vec<String> = vec!["only".to_string()];
+        assert!(RowStore::from_model(words, &emb).is_err());
+    }
+}

@@ -99,7 +99,9 @@ impl Json {
         )
     }
 
-    /// Shorthand numeric constructor.
+    /// Shorthand numeric constructor.  Non-finite values are accepted
+    /// here but serialise as `null` — JSON has no NaN/Infinity literal,
+    /// and the writer must never emit a document its own parser rejects.
     pub fn num<T: Into<f64>>(x: T) -> Json {
         Json::Num(x.into())
     }
@@ -107,6 +109,40 @@ impl Json {
     /// Shorthand string constructor.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
+    }
+}
+
+/// Write `s` as a JSON string literal (quotes + escapes) into any
+/// `fmt::Write` sink.  This is the single escaping routine: `Json::Str`'s
+/// `Display` delegates here, and the serve response path calls it
+/// directly on a reusable `String` so emitting a response allocates
+/// nothing beyond the buffer it is given.
+pub fn write_json_str<W: fmt::Write>(w: &mut W, s: &str) -> fmt::Result {
+    w.write_char('"')?;
+    JsonEscaper(w).write_str(s)?;
+    w.write_char('"')
+}
+
+/// `fmt::Write` adapter that JSON-escapes everything written through it
+/// (content only — the caller writes the surrounding quotes).  Lets a
+/// `Display` value be streamed straight into a JSON string field with
+/// no intermediate allocation.
+pub struct JsonEscaper<'a, W: fmt::Write>(pub &'a mut W);
+
+impl<W: fmt::Write> fmt::Write for JsonEscaper<'_, W> {
+    fn write_str(&mut self, s: &str) -> fmt::Result {
+        for c in s.chars() {
+            match c {
+                '"' => self.0.write_str("\\\"")?,
+                '\\' => self.0.write_str("\\\\")?,
+                '\n' => self.0.write_str("\\n")?,
+                '\r' => self.0.write_str("\\r")?,
+                '\t' => self.0.write_str("\\t")?,
+                c if (c as u32) < 0x20 => write!(self.0, "\\u{:04x}", c as u32)?,
+                c => self.0.write_char(c)?,
+            }
+        }
+        Ok(())
     }
 }
 
@@ -294,27 +330,20 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                // JSON has no spelling for NaN/±Infinity: `{x}` would
+                // emit `NaN`/`inf`, which this module's own parser (and
+                // every other one) rejects.  Emit `null` instead so the
+                // writer can never produce un-parseable output — the
+                // asymmetry is pinned by `nonfinite_numbers_serialise_as_null`.
+                if !x.is_finite() {
+                    write!(f, "null")
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     write!(f, "{}", *x as i64)
                 } else {
                     write!(f, "{x}")
                 }
             }
-            Json::Str(s) => {
-                write!(f, "\"")?;
-                for c in s.chars() {
-                    match c {
-                        '"' => write!(f, "\\\"")?,
-                        '\\' => write!(f, "\\\\")?,
-                        '\n' => write!(f, "\\n")?,
-                        '\r' => write!(f, "\\r")?,
-                        '\t' => write!(f, "\\t")?,
-                        c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
-                        c => write!(f, "{c}")?,
-                    }
-                }
-                write!(f, "\"")
-            }
+            Json::Str(s) => write_json_str(f, s),
             Json::Arr(v) => {
                 write!(f, "[")?;
                 for (i, x) in v.iter().enumerate() {
@@ -407,5 +436,78 @@ mod tests {
     fn whitespace_tolerant() {
         let j = Json::parse(" {\n\t\"k\" :\r [ 1 , 2 ] } ").unwrap();
         assert_eq!(j.get("k").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn escaper_streams_display_values() {
+        use fmt::Write as _;
+        let mut out = String::new();
+        write!(JsonEscaper(&mut out), "say \"hi\"\n{}", 1.5).unwrap();
+        assert_eq!(out, "say \\\"hi\\\"\\n1.5");
+        assert!(Json::parse(&format!("\"{out}\"")).is_ok());
+    }
+
+    #[test]
+    fn nonfinite_numbers_serialise_as_null() {
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::num(x).to_string();
+            assert_eq!(s, "null", "{x} must not leak into the output");
+            assert_eq!(Json::parse(&s).unwrap(), Json::Null);
+        }
+        // Nested: a hostile value anywhere in a tree still yields a
+        // document the parser accepts.
+        let j = Json::obj([
+            ("ok", Json::num(1.25)),
+            ("bad", Json::Arr(vec![Json::num(f64::NAN), Json::num(2)])),
+        ]);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("bad").unwrap().as_arr().unwrap()[0], Json::Null);
+        assert_eq!(back.get("ok").unwrap().as_f64(), Some(1.25));
+    }
+
+    #[test]
+    fn numeric_write_parse_roundtrip_property() {
+        // Every f64 the writer can see — integral, subnormal-adjacent,
+        // huge, tiny, negative, and non-finite — must serialise to
+        // something the parser accepts; finite values must round-trip
+        // to an equal value (Rust's shortest-repr float Display is
+        // exact; the sole canonicalisation is -0.0 -> "0").
+        let mut rng = crate::util::rng::Xoshiro256ss::new(0x5EED_1234);
+        let mut cases: Vec<f64> = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            1e-300,
+            -1e300,
+            1e15,
+            -1e15,
+            (1u64 << 53) as f64,
+            f64::MIN_POSITIVE,
+            f64::EPSILON,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        ];
+        for _ in 0..500 {
+            // Random bit patterns cover exponent/mantissa space far
+            // better than uniform [0,1) draws.
+            cases.push(f64::from_bits(rng.next_u64()));
+            cases.push(rng.next_f64() * 1e6 - 5e5);
+        }
+        for x in cases {
+            let s = Json::num(x).to_string();
+            let back = Json::parse(&s)
+                .unwrap_or_else(|e| panic!("writer emitted unparseable {s:?} for {x}: {e}"));
+            if x.is_finite() {
+                let y = back.as_f64().unwrap_or_else(|| panic!("{x} -> {s:?} -> non-number"));
+                assert!(y == x, "{x} -> {s:?} -> {y}");
+                if x != 0.0 {
+                    assert_eq!(y.to_bits(), x.to_bits(), "{x} -> {s:?} -> {y}");
+                }
+            } else {
+                assert_eq!(back, Json::Null, "{x} -> {s:?}");
+            }
+        }
     }
 }

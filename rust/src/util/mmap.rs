@@ -1,0 +1,161 @@
+//! Raw read-only file mapping, shared by the corpus cache
+//! (`corpus::encoded`) and the serve-side row store (`serve::store`).
+//!
+//! `std` already links the platform libc, so declaring
+//! `mmap(2)`/`munmap(2)` directly keeps the offline build dependency-free
+//! (the constants below are the Linux/BSD values for 64-bit targets;
+//! other platforms take the buffered path).  Callers hold a [`Bytes`]:
+//! a private read-only mapping where available, else the file read into
+//! memory — behind `Deref<Target = [u8]>` the two are interchangeable.
+
+use std::path::Path;
+
+/// Backing storage for an open read-only file: a mmap where available,
+/// else the file contents in memory.
+pub enum Bytes {
+    Owned(Vec<u8>),
+    #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+    Mapped(Mmap),
+}
+
+impl std::ops::Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match self {
+            Bytes::Owned(v) => v,
+            #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+            Bytes::Mapped(m) => m.as_slice(),
+        }
+    }
+}
+
+/// Open `path` read-only.  With `prefer_map` set the file is mmapped on
+/// 64-bit unix builds with the `mmap` feature; otherwise (or on any other
+/// configuration) it is read into memory in one buffered pass.  Callers
+/// own their opt-out policy — e.g. `corpus::encoded` consults
+/// `PW2V_CORPUS_MMAP` before asking for a mapping.
+pub fn load_bytes(path: &Path, prefer_map: bool) -> anyhow::Result<Bytes> {
+    #[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+    {
+        if prefer_map {
+            let f = std::fs::File::open(path)?;
+            return Ok(Bytes::Mapped(Mmap::map(&f)?));
+        }
+    }
+    let _ = prefer_map;
+    Ok(Bytes::Owned(std::fs::read(path)?))
+}
+
+/// Raw read-only private mapping of a whole file.
+#[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+pub struct Mmap {
+    ptr: *mut std::ffi::c_void,
+    len: usize,
+}
+
+#[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+mod imp {
+    use super::Mmap;
+    use std::ffi::{c_int, c_void};
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, length: usize) -> c_int;
+    }
+
+    // SAFETY: the mapping is PROT_READ and private; no writer exists for
+    // its lifetime, so shared immutable access from any thread is sound.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        pub fn map(f: &File) -> std::io::Result<Self> {
+            let len = f.metadata()?.len() as usize;
+            if len == 0 {
+                // mmap(2) rejects zero-length mappings.
+                return Ok(Self {
+                    ptr: std::ptr::null_mut(),
+                    len: 0,
+                });
+            }
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    f.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Self { ptr, len })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            if self.len == 0 {
+                return &[];
+            }
+            // SAFETY: `ptr` is a live PROT_READ mapping of `len` bytes.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            if self.len > 0 {
+                // SAFETY: `ptr`/`len` came from a successful mmap call.
+                let _ = unsafe { munmap(self.ptr, self.len) };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::path::PathBuf;
+
+    fn write_tmp(name: &str, content: &[u8]) -> PathBuf {
+        let path = std::env::temp_dir()
+            .join(format!("pw2v_mmap_{}_{name}", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(content).unwrap();
+        path
+    }
+
+    #[test]
+    fn mapped_and_owned_agree() {
+        let path = write_tmp("agree.bin", b"hello mapped world");
+        let mapped = load_bytes(&path, true).unwrap();
+        let owned = load_bytes(&path, false).unwrap();
+        assert_eq!(&mapped[..], b"hello mapped world");
+        assert_eq!(&mapped[..], &owned[..]);
+        assert!(matches!(owned, Bytes::Owned(_)));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn zero_length_file_maps_to_empty_slice() {
+        let path = write_tmp("empty.bin", b"");
+        let b = load_bytes(&path, true).unwrap();
+        assert!(b.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -9,6 +9,7 @@ pub mod args;
 pub mod csv;
 pub mod fnv;
 pub mod json;
+pub mod mmap;
 pub mod rng;
 pub mod timer;
 

@@ -20,11 +20,12 @@ use std::collections::HashMap;
 use std::io::Write;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use pw2v::config::{KernelMode, SigmoidMode};
+use pw2v::config::{KernelMode, QuantMode, SigmoidMode};
 use pw2v::corpus::encoded::EncodedCorpus;
 use pw2v::corpus::vocab::Vocab;
 use pw2v::corpus::MAX_SENTENCE_LEN;
-use pw2v::model::{ShardMap, SharedModel};
+use pw2v::model::{Embedding, ShardMap, SharedModel};
+use pw2v::serve::{RowStore, Scratch as ServeScratch, ServeEngine};
 use pw2v::sampling::batch::{BatchBuilder, SuperbatchArena};
 use pw2v::sampling::unigram::UnigramSampler;
 use pw2v::train::route::{Exchange, Outbox, RouteSink, RowRouter};
@@ -366,4 +367,57 @@ fn steady_state_training_loop_allocates_nothing() {
          (mailbox blocks must recycle allocation-free)",
         after - before
     );
+
+    // ------------------------------------------------------------------
+    // Serve leg (PR 8): the request/response path of the embedding
+    // server — pull-parse, SIMD scan (f32 AND int8), hit selection,
+    // JSON response writing — must allocate NOTHING at steady state.
+    // Every buffer lives in the caller-owned serve Scratch; warmup
+    // reaches each one's high-water capacity (including the error
+    // paths, which a hostile client can drive at line rate).
+    // ------------------------------------------------------------------
+    let (sv, sd) = (300usize, 32usize);
+    let mut semb = Embedding::zeros(sv, sd);
+    {
+        let mut rng = Xoshiro256ss::new(4242);
+        for id in 0..sv as u32 {
+            for x in semb.row_mut(id) {
+                *x = rng.next_f32() - 0.5;
+            }
+        }
+    }
+    let swords: Vec<String> = (0..sv).map(|i| format!("s{i:04}")).collect();
+    let serve_reqs: [&[u8]; 4] = [
+        br#"{"op":"topk","word":"s0007","k":10}"#,
+        br#"{"op":"analogy","a":"s0001","b":"s0002","c":"s0003","k":5}"#,
+        br#"{"op":"topk","word":"no-such-word"}"#,
+        br#"{"op":"frobnicate"}"#,
+    ];
+    for quant in [QuantMode::Off, QuantMode::Int8] {
+        let eng = ServeEngine::from_store(
+            RowStore::from_model(swords.clone(), &semb).unwrap(),
+            quant,
+        );
+        let mut scratch = ServeScratch::default();
+        for _ in 0..3 {
+            for r in serve_reqs {
+                eng.handle_line(r, &mut scratch);
+            }
+        }
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..100 {
+            for r in serve_reqs {
+                eng.handle_line(r, &mut scratch);
+                assert!(!scratch.out.is_empty());
+            }
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state SERVE loop (quant {quant:?}) allocated {} times \
+             over 400 requests",
+            after - before
+        );
+    }
 }

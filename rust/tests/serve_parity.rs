@@ -1,0 +1,298 @@
+//! Serve-engine parity acceptance: the `serve` scan must answer exactly
+//! what the eval layer's brute-force oracles compute.
+//!
+//! Legs (one test fn: the trained fixture is built once, and the
+//! dispatch level is process-global):
+//!
+//! 1. **topk vs oracle** — trained fixture; the oracle is the
+//!    brute-force unit-row dot scan with `linalg::dot` (the exact
+//!    arithmetic of `eval::analogy`'s argmax).  Under SCALAR dispatch
+//!    the serve scan is bit-for-bit this oracle: ids AND score bits
+//!    must match.  Under AVX2 FMA reassociates the reduction, so a
+//!    rank swap is tolerated only where the oracle itself scores the
+//!    two ids within a near-tie margin.
+//! 2. **analogy vs `eval_analogy`** — serve top-1 per covered question
+//!    against the replicated per-question oracle, and (scalar) the
+//!    aggregate `correct` count against `eval_analogy`'s own report.
+//! 3. **int8 recall@10 ≥ 0.95** against the f32 scan — the acceptance
+//!    gate for `--quant int8` (accounting in EXPERIMENTS.md §Serving).
+//! 4. **planted large-margin fixture** — strict id equality under BOTH
+//!    dispatch levels (margins far beyond any reassociation noise).
+//!
+//! `PW2V_SIMD=scalar` (the CI dispatch-matrix leg) pins the whole file
+//! to the portable kernels, upgrading every tolerance to exactness.
+
+use pw2v::config::{QuantMode, TrainConfig};
+use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
+use pw2v::corpus::vocab::Vocab;
+use pw2v::eval;
+use pw2v::eval::analogy::normalized_matrix;
+use pw2v::linalg::simd::{self, SimdLevel, SimdMode};
+use pw2v::model::{Embedding, SharedModel};
+use pw2v::serve::{RowStore, Scratch, ServeEngine};
+use pw2v::train;
+
+/// Near-tie margin for AVX2 rank swaps: two candidates whose ORACLE
+/// scores differ by more than this must never swap.
+const NEAR_TIE: f32 = 1e-5;
+/// Int8 acceptance floor.
+const INT8_RECALL_FLOOR: f64 = 0.95;
+
+fn env_mode() -> SimdMode {
+    match std::env::var("PW2V_SIMD").as_deref() {
+        Ok("scalar") => SimdMode::Scalar,
+        Ok("avx2") => SimdMode::Avx2,
+        _ => SimdMode::Auto,
+    }
+}
+
+/// Brute-force oracle: rank every servable row (except the exclusions)
+/// by `linalg::dot` against `query`, score desc, tie → lower id.
+fn oracle_rank(
+    unit: &[f32],
+    d: usize,
+    servable: &[bool],
+    exclude: &[u32],
+    query: &[f32],
+    k: usize,
+) -> Vec<(u32, f32)> {
+    let n = unit.len() / d;
+    let mut scored: Vec<(u32, f32)> = (0..n as u32)
+        .filter(|w| !exclude.contains(w) && servable[*w as usize])
+        .map(|w| {
+            let row = &unit[w as usize * d..(w as usize + 1) * d];
+            (w, pw2v::linalg::dot(row, query))
+        })
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    scored.truncate(k);
+    scored
+}
+
+/// Compare a serve hit list against the oracle's: exact when `strict`,
+/// else rank swaps only within the oracle's near-tie margin.
+fn assert_hits_match(
+    tag: &str,
+    serve: &[(u32, f32)],
+    oracle: &[(u32, f32)],
+    full_oracle: &[(u32, f32)],
+    strict: bool,
+) {
+    assert_eq!(serve.len(), oracle.len(), "{tag}: hit count");
+    if strict {
+        for (i, (s, o)) in serve.iter().zip(oracle).enumerate() {
+            assert_eq!(s.0, o.0, "{tag}: rank {i} id");
+            assert_eq!(
+                s.1.to_bits(),
+                o.1.to_bits(),
+                "{tag}: rank {i} score bits ({} vs {})",
+                s.1,
+                o.1
+            );
+        }
+        return;
+    }
+    // AVX2: scores agree loosely everywhere, and any positional
+    // mismatch must be a near-tie in the ORACLE's own scores.
+    let score_of = |id: u32| -> f32 {
+        full_oracle
+            .iter()
+            .find(|(w, _)| *w == id)
+            .unwrap_or_else(|| panic!("{tag}: id {id} not in oracle ranking"))
+            .1
+    };
+    for (i, (s, o)) in serve.iter().zip(oracle).enumerate() {
+        assert!(
+            (s.1 - score_of(s.0)).abs() <= 1e-4,
+            "{tag}: rank {i} serve score {} far from oracle {}",
+            s.1,
+            score_of(s.0)
+        );
+        if s.0 != o.0 {
+            let gap = (score_of(s.0) - o.1).abs();
+            assert!(
+                gap <= NEAR_TIE,
+                "{tag}: rank {i} swapped {} for {} with oracle gap {gap:.2e}",
+                s.0,
+                o.0
+            );
+        }
+    }
+}
+
+#[test]
+fn serve_answers_match_eval_oracles() {
+    let level = simd::configure(env_mode()).unwrap();
+    let strict = level == SimdLevel::Scalar;
+
+    // ---- trained fixture (single-threaded: bitwise deterministic) ----
+    let scfg = SyntheticConfig {
+        vocab: 800,
+        tokens: 120_000,
+        clusters: 16,
+        beta: 5.0,
+        seed: 31,
+        ..SyntheticConfig::default()
+    };
+    let latent = LatentModel::new(scfg);
+    let corpus = std::env::temp_dir().join(format!("pw2v_serve_parity_{}.txt", std::process::id()));
+    latent.write_corpus(&corpus).unwrap();
+    let vocab = Vocab::build_from_file(&corpus, 1).unwrap();
+    let mut cfg = TrainConfig::default();
+    cfg.dim = 32;
+    cfg.epochs = 2;
+    cfg.threads = 1;
+    cfg.sample = 1e-3;
+    cfg.lr = 0.05;
+    // train() re-pins dispatch from cfg.simd; keep it at the mode this
+    // test run is exercising so the serve legs stay on that level.
+    cfg.simd = env_mode();
+    let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+    train::train(&cfg, &corpus, &vocab, &model).unwrap();
+    std::fs::remove_file(&corpus).ok();
+    let emb = model.m_in();
+
+    let words: Vec<String> = (0..vocab.len() as u32)
+        .map(|id| vocab.word(id).to_string())
+        .collect();
+    let unit = normalized_matrix(emb);
+    let d = cfg.dim;
+    let servable: Vec<bool> = (0..vocab.len() as u32)
+        .map(|id| pw2v::eval::similarity::row_servable(emb.row(id)))
+        .collect();
+
+    let eng = ServeEngine::from_store(
+        RowStore::from_model(words.clone(), emb).unwrap(),
+        QuantMode::Off,
+    );
+    let mut s = Scratch::default();
+    let queries: Vec<u32> = (0..25u32)
+        .map(|i| (i * 31) % vocab.len() as u32)
+        .filter(|&q| servable[q as usize])
+        .collect();
+    assert!(queries.len() >= 20, "fixture produced degenerate rows");
+
+    // ---- leg 1: topk vs brute-force oracle --------------------------
+    for &q in &queries {
+        let serve: Vec<(u32, f32)> = eng
+            .topk(q, 10, &mut s)
+            .iter()
+            .map(|h| (h.id, h.score))
+            .collect();
+        let qrow = &unit[q as usize * d..(q as usize + 1) * d];
+        let full = oracle_rank(&unit, d, &servable, &[q], qrow, vocab.len());
+        assert_hits_match(
+            &format!("topk({})", vocab.word(q)),
+            &serve,
+            &full[..10],
+            &full,
+            strict,
+        );
+    }
+
+    // ---- leg 2: analogy vs eval_analogy -----------------------------
+    let qs = eval::gen_analogy_set(&latent);
+    let mut covered = 0usize;
+    let mut serve_correct = 0usize;
+    for q in &qs {
+        let (Some(ia), Some(ib), Some(ic), Some(id_)) =
+            (vocab.id(&q.a), vocab.id(&q.b), vocab.id(&q.c), vocab.id(&q.d))
+        else {
+            continue;
+        };
+        covered += 1;
+        let mut query = vec![0.0f32; d];
+        let (ua, ub, uc) = (
+            &unit[ia as usize * d..(ia as usize + 1) * d],
+            &unit[ib as usize * d..(ib as usize + 1) * d],
+            &unit[ic as usize * d..(ic as usize + 1) * d],
+        );
+        for l in 0..d {
+            query[l] = ub[l] - ua[l] + uc[l];
+        }
+        let full = oracle_rank(&unit, d, &servable, &[ia, ib, ic], &query, vocab.len());
+        let serve: Vec<(u32, f32)> = eng
+            .analogy(ia, ib, ic, 1, &mut s)
+            .iter()
+            .map(|h| (h.id, h.score))
+            .collect();
+        assert_hits_match(
+            &format!("analogy({}:{}::{})", q.a, q.b, q.c),
+            &serve,
+            &full[..1],
+            &full,
+            strict,
+        );
+        if serve[0].0 == id_ {
+            serve_correct += 1;
+        }
+    }
+    assert!(covered > 50, "analogy coverage too small: {covered}");
+    if strict {
+        // The aggregate anchor: serve's per-question top-1 reproduces
+        // eval_analogy's correct count exactly (same arithmetic, same
+        // tie policy, same exclusions).
+        let report = eval::eval_analogy(&qs, &vocab, emb);
+        assert_eq!(report.covered, covered, "coverage accounting");
+        assert_eq!(
+            serve_correct, report.correct,
+            "serve analogy disagrees with eval_analogy's correct count"
+        );
+    }
+
+    // ---- leg 3: int8 recall@10 --------------------------------------
+    let eng8 = ServeEngine::from_store(
+        RowStore::from_model(words.clone(), emb).unwrap(),
+        QuantMode::Int8,
+    );
+    assert!(eng8.quantized());
+    let mut overlap = 0usize;
+    let mut total = 0usize;
+    for &q in &queries {
+        let f: Vec<u32> = eng.topk(q, 10, &mut s).iter().map(|h| h.id).collect();
+        let i8s: Vec<u32> = eng8.topk(q, 10, &mut s).iter().map(|h| h.id).collect();
+        overlap += i8s.iter().filter(|id| f.contains(id)).count();
+        total += f.len();
+    }
+    let recall = overlap as f64 / total as f64;
+    assert!(
+        recall >= INT8_RECALL_FLOOR,
+        "int8 recall@10 = {recall:.3} below the {INT8_RECALL_FLOOR} gate \
+         ({overlap}/{total} over {} queries)",
+        queries.len()
+    );
+
+    // ---- leg 4: planted large-margin fixture, both dispatch levels --
+    let pwords: Vec<String> = ["anchor", "near", "mid", "far", "anti"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let mut pemb = Embedding::zeros(5, 4);
+    pemb.row_mut(0).copy_from_slice(&[1.0, 0.0, 0.0, 0.0]);
+    pemb.row_mut(1).copy_from_slice(&[0.9, 0.1, 0.0, 0.0]);
+    pemb.row_mut(2).copy_from_slice(&[0.5, 0.5, 0.5, 0.0]);
+    pemb.row_mut(3).copy_from_slice(&[0.0, 0.0, 1.0, 0.0]);
+    pemb.row_mut(4).copy_from_slice(&[-1.0, 0.0, 0.0, 0.0]);
+    let modes: &[SimdMode] = if matches!(env_mode(), SimdMode::Scalar) {
+        &[SimdMode::Scalar]
+    } else {
+        &[SimdMode::Scalar, SimdMode::Auto]
+    };
+    for &mode in modes {
+        simd::configure(mode).unwrap();
+        for quant in [QuantMode::Off, QuantMode::Int8] {
+            let peng = ServeEngine::from_store(
+                RowStore::from_model(pwords.clone(), &pemb).unwrap(),
+                quant,
+            );
+            let ids: Vec<u32> = peng.topk(0, 4, &mut s).iter().map(|h| h.id).collect();
+            assert_eq!(
+                ids,
+                vec![1, 2, 3, 4],
+                "planted topk order must be dispatch- and quant-invariant \
+                 ({mode:?}/{quant:?})"
+            );
+        }
+    }
+    simd::configure(env_mode()).unwrap();
+}
