@@ -5,12 +5,12 @@
 //!
 //! Run with:  cargo run --release --example distributed_sim
 
-use pw2v::config::TrainConfig;
+use pw2v::TrainConfig;
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
-use pw2v::corpus::vocab::Vocab;
+use pw2v::Vocab;
 use pw2v::dist::{train_distributed, DistConfig, SyncPolicy};
 use pw2v::eval;
-use pw2v::model::SharedModel;
+use pw2v::SharedModel;
 use pw2v::train;
 use pw2v::util::si;
 

@@ -4,12 +4,13 @@
 //!
 //! Run with:  cargo run --release --example quickstart
 
-use pw2v::config::{Backend, TrainConfig};
+use pw2v::config::Backend;
+use pw2v::TrainConfig;
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
-use pw2v::corpus::vocab::Vocab;
+use pw2v::Vocab;
 use pw2v::eval;
 use pw2v::eval::similarity::cosine;
-use pw2v::model::SharedModel;
+use pw2v::SharedModel;
 use pw2v::train;
 use pw2v::util::si;
 

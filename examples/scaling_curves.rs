@@ -6,7 +6,7 @@
 //! Run with:  cargo run --release --example scaling_curves
 
 use pw2v::bench::workload;
-use pw2v::config::TrainConfig;
+use pw2v::TrainConfig;
 use pw2v::corpus::synthetic::SyntheticConfig;
 use pw2v::perfmodel::arch;
 use pw2v::perfmodel::calibrate::Calibration;

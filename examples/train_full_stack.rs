@@ -12,11 +12,12 @@
 //!
 //! Run with:  cargo run --release --example train_full_stack
 
-use pw2v::config::{Backend, TrainConfig};
+use pw2v::config::Backend;
+use pw2v::TrainConfig;
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
-use pw2v::corpus::vocab::Vocab;
+use pw2v::Vocab;
 use pw2v::eval;
-use pw2v::model::SharedModel;
+use pw2v::SharedModel;
 use pw2v::sampling::batch::BatchBuilder;
 use pw2v::sampling::unigram::UnigramSampler;
 use pw2v::train::{self, ns_objective};

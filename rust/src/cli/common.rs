@@ -1,0 +1,91 @@
+//! Flag plumbing shared by every subcommand.
+//!
+//! The training-family commands (`train`, `train-dist`, `stream`)
+//! accept the same execution knobs; [`SHARED_FLAGS`] is the one help
+//! block describing them (appended to each command's usage) and
+//! [`train_config`] is the one loader (defaults → `--config` file →
+//! CLI overrides), so a flag added to `TrainConfig::apply_args` shows
+//! up everywhere at once.
+
+use std::path::PathBuf;
+
+use crate::config::TrainConfig;
+use crate::util::args::Args;
+
+/// The shared execution-knob table, one help block for all trainers.
+pub const SHARED_FLAGS: &str = "\
+shared training flags (train / train-dist / stream):
+  --config FILE               key=value file applied before CLI overrides
+  --dim D --window W --negative N --sample S --lr LR --min-count C
+  --epochs E --threads T --seed S --batch B --superbatch SB
+  --backend scalar|bidmach|gemm|pjrt
+  --kernel auto|fused|gemm3   fused Pallas-style kernel vs 3-GEMM reference
+  --sigmoid exact|table       exact sigmoid or the C tool's 1000-slot table
+  --simd auto|avx2|scalar     SIMD dispatch for kernels and serving scans
+  --corpus-cache off|auto|P   reuse the .pw2v.u32 encoded-corpus cache
+  --numa off|auto|NODES       NUMA-aware model placement + worker pinning
+  --route off|owner|head=K    hot-target window routing (train only)
+  --vocab-reserve N           pre-allocate N rows for streaming admission
+";
+
+/// Defaults → optional `--config` file → CLI overrides, in that order.
+/// `base` lets a command pre-seed command-specific defaults (e.g.
+/// `stream` pins `backend=gemm threads=1 epochs=1`) that explicit flags
+/// still override.
+pub fn train_config(a: &Args, base: TrainConfig) -> anyhow::Result<TrainConfig> {
+    let mut cfg = base;
+    if let Some(f) = a.opt::<String>("config")? {
+        cfg.load_file(f)?;
+    }
+    cfg.apply_args(a)?;
+    Ok(cfg)
+}
+
+/// The corpus path: `--corpus PATH`, or the first positional (which is
+/// how the bare `pw2v <corpus>` compatibility alias delivers it).
+pub fn corpus_arg(a: &Args) -> anyhow::Result<PathBuf> {
+    if let Some(c) = a.opt::<String>("corpus")? {
+        return Ok(PathBuf::from(c));
+    }
+    match a.positional().first() {
+        Some(p) => Ok(PathBuf::from(p)),
+        None => anyhow::bail!("missing --corpus (or bare `pw2v <corpus>`)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn corpus_comes_from_flag_or_positional() {
+        assert_eq!(
+            corpus_arg(&args("--corpus a.txt")).unwrap(),
+            PathBuf::from("a.txt")
+        );
+        assert_eq!(
+            corpus_arg(&args("b.txt --dim 8")).unwrap(),
+            PathBuf::from("b.txt")
+        );
+        assert!(corpus_arg(&args("--dim 8")).is_err());
+    }
+
+    #[test]
+    fn explicit_flags_override_the_preseeded_base() {
+        let mut base = TrainConfig::test_tiny();
+        base.threads = 1;
+        let cfg = train_config(&args("--threads 3"), base).unwrap();
+        assert_eq!(cfg.threads, 3);
+        let cfg2 = train_config(&args(""), {
+            let mut b = TrainConfig::test_tiny();
+            b.threads = 1;
+            b
+        })
+        .unwrap();
+        assert_eq!(cfg2.threads, 1);
+    }
+}

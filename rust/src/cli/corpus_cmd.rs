@@ -1,0 +1,92 @@
+//! Corpus-side subcommands: `gen-corpus` (synthetic latent-model
+//! corpus + eval sets) and `encode` (pre-build the `.pw2v.u32` cache).
+
+use std::path::PathBuf;
+
+use crate::config::TrainConfig;
+use crate::corpus::encoded::EncodedCorpus;
+use crate::corpus::synthetic::{LatentModel, SyntheticConfig};
+use crate::corpus::vocab::Vocab;
+use crate::eval;
+use crate::util::args::Args;
+use crate::util::si;
+
+use super::common;
+
+pub const GEN_HELP: &str = "\
+USAGE: pw2v gen-corpus --out corpus.txt
+         [--tokens N --vocab V --clusters C --seed S]
+         [--simset sim.tsv --anaset ana.txt]
+
+Generate a synthetic corpus from a latent cluster model, plus matching
+similarity/analogy evaluation sets whose ground truth the model knows.
+";
+
+pub const ENCODE_HELP: &str = "\
+USAGE: pw2v encode --corpus corpus.txt [--cache PATH] [--min-count C]
+
+Pre-build the .pw2v.u32 encoded-corpus cache (tokenized sentences as
+vocab ids).  Training with --corpus-cache auto finds it at
+<corpus>.pw2v.u32 — the default --cache — and skips per-epoch
+re-tokenization; `stream` adopts and appends to the same file.
+";
+
+pub fn gen_corpus(a: &Args) -> anyhow::Result<()> {
+    let out: String = a.required("out")?;
+    let mut scfg = SyntheticConfig::default();
+    scfg.tokens = a.get("tokens", scfg.tokens)?;
+    scfg.vocab = a.get("vocab", scfg.vocab)?;
+    scfg.clusters = a.get("clusters", scfg.clusters)?;
+    scfg.seed = a.get("seed", scfg.seed)?;
+    let simset: Option<String> = a.opt("simset")?;
+    let anaset: Option<String> = a.opt("anaset")?;
+    a.check_unknown()?;
+
+    eprintln!(
+        "generating {} tokens, vocab {}, {} clusters ...",
+        scfg.tokens, scfg.vocab, scfg.clusters
+    );
+    let lm = LatentModel::new(scfg);
+    let n = lm.write_corpus(&out)?;
+    eprintln!("wrote {n} tokens to {out}");
+    if let Some(p) = simset {
+        let set = eval::gen_similarity_set(&lm, 350, 7);
+        eval::datasets::save_similarity_set(&p, &set)?;
+        eprintln!("wrote {} similarity pairs to {p}", set.len());
+    }
+    if let Some(p) = anaset {
+        let set = eval::gen_analogy_set(&lm);
+        eval::datasets::save_analogy_set(&p, &set)?;
+        eprintln!("wrote {} analogy questions to {p}", set.len());
+    }
+    Ok(())
+}
+
+pub fn encode(a: &Args) -> anyhow::Result<()> {
+    let corpus = common::corpus_arg(a)?;
+    let min_count: u64 = a.get("min-count", TrainConfig::default().min_count)?;
+    let cache: PathBuf = a
+        .opt::<String>("cache")?
+        .map(PathBuf::from)
+        .unwrap_or_else(|| EncodedCorpus::cache_path_for(&corpus));
+    a.check_unknown()?;
+
+    let vocab = Vocab::build_from_file(&corpus, min_count)?;
+    eprintln!(
+        "encode: vocab {} words, corpus {} tokens",
+        vocab.len(),
+        vocab.total_words()
+    );
+    let st = EncodedCorpus::build(&corpus, &vocab, &cache)?;
+    eprintln!(
+        "encoded {} sentences / {} tokens ({} source bytes) in {:.1}s \
+         = {} tokens/sec -> {}",
+        st.sentences,
+        st.tokens,
+        si(st.text_bytes as f64),
+        st.secs,
+        si(st.tokens as f64 / st.secs.max(1e-9)),
+        cache.display()
+    );
+    Ok(())
+}

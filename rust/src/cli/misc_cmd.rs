@@ -1,0 +1,139 @@
+//! Leaf subcommands: `eval` (similarity/analogy over saved vectors),
+//! `simulate` (the paper's Fig 3 / Fig 4 scaling curves from the
+//! calibrated performance model) and `info` (runtime diagnostics).
+
+use crate::corpus::vocab::Vocab;
+use crate::eval;
+use crate::model::io as model_io;
+use crate::perfmodel::{self, simulate};
+use crate::util::args::Args;
+use crate::util::si;
+
+pub const EVAL_HELP: &str = "\
+USAGE: pw2v eval --vectors vectors.txt [--simset sim.tsv] [--anaset ana.txt]
+
+Evaluate saved text vectors: Spearman rho (x100) over a tab-separated
+similarity set and/or top-1 accuracy over an analogy set.
+";
+
+pub const SIM_HELP: &str = "\
+USAGE: pw2v simulate --figure 3|4 [--machine bdw|knl|hsw]
+
+Regenerate the paper's scaling curves from the calibrated performance
+model: Fig 3 (shared-memory thread scaling, original vs ours) or Fig 4
+(cluster node scaling over the machine's fabric).
+";
+
+pub const INFO_HELP: &str = "\
+USAGE: pw2v info [--artifacts-dir artifacts]
+
+Print version, PJRT platform availability, and the compiled-artifact
+manifest (HLO executables consumed by --backend pjrt).
+";
+
+pub fn eval(a: &Args) -> anyhow::Result<()> {
+    let vectors: String = a.required("vectors")?;
+    let simset: Option<String> = a.opt("simset")?;
+    let anaset: Option<String> = a.opt("anaset")?;
+    a.check_unknown()?;
+
+    let (words, emb) = model_io::load_text(&vectors)?;
+    // Rebuild a vocab view over the saved order (ranks become counts so
+    // the frequency-sorted invariant holds).
+    let n = words.len();
+    let counts: std::collections::HashMap<String, u64> = words
+        .iter()
+        .enumerate()
+        .map(|(i, w)| (w.clone(), (n - i) as u64))
+        .collect();
+    let vocab = Vocab::from_counts(counts, 1);
+    eprintln!("loaded {} vectors of dim {}", n, emb.dim());
+
+    if let Some(p) = simset {
+        let pairs = eval::load_similarity_set(&p)?;
+        let r = eval::eval_similarity(&pairs, &vocab, &emb);
+        println!(
+            "similarity: rho100 = {:.1} over {}/{} pairs",
+            r.rho100, r.pairs_covered, r.pairs_total
+        );
+    }
+    if let Some(p) = anaset {
+        let qs = eval::load_analogy_set(&p)?;
+        let r = eval::eval_analogy(&qs, &vocab, &emb);
+        println!(
+            "analogy: accuracy = {:.1}% over {}/{} questions",
+            r.accuracy100(),
+            r.covered,
+            r.total
+        );
+    }
+    Ok(())
+}
+
+pub fn simulate(a: &Args) -> anyhow::Result<()> {
+    let figure: usize = a.get("figure", 3)?;
+    let machine: String = a.get("machine", "bdw".to_string())?;
+    a.check_unknown()?;
+    let spec = match machine.as_str() {
+        "bdw" => perfmodel::arch::broadwell(),
+        "knl" => perfmodel::arch::knl(),
+        "hsw" => perfmodel::arch::haswell(),
+        m => anyhow::bail!("unknown machine '{m}' (bdw|knl|hsw)"),
+    };
+    let p = simulate::FigParams::default();
+    match figure {
+        3 => {
+            let axis = simulate::fig3_thread_axis(&spec);
+            let (scalar, gemm) =
+                simulate::fig3_series(&spec, &p, 70_000.0, 182_000.0, &axis);
+            println!("# Fig 3 ({}): threads original ours", spec.name);
+            for (s, g) in scalar.iter().zip(&gemm) {
+                println!(
+                    "{:>3}  {:>10}  {:>10}",
+                    s.x,
+                    si(s.words_per_sec),
+                    si(g.words_per_sec)
+                );
+            }
+        }
+        4 => {
+            let fabric = if machine == "knl" {
+                perfmodel::arch::omnipath()
+            } else {
+                perfmodel::arch::fdr_infiniband()
+            };
+            let nodes = [1, 2, 4, 8, 16, 32];
+            let series =
+                simulate::fig4_series(&spec, fabric, &p, 182_000.0, &nodes);
+            println!("# Fig 4 ({} cluster): nodes words/sec", spec.name);
+            for pt in series {
+                println!("{:>3}  {:>10}", pt.x, si(pt.words_per_sec));
+            }
+        }
+        f => anyhow::bail!("unknown figure {f} (3|4)"),
+    }
+    Ok(())
+}
+
+pub fn info(a: &Args) -> anyhow::Result<()> {
+    let dir: String = a.get("artifacts-dir", "artifacts".to_string())?;
+    a.check_unknown()?;
+    println!("pw2v {}", env!("CARGO_PKG_VERSION"));
+    match crate::runtime::Runtime::cpu() {
+        Ok(rt) => println!("pjrt platform: {}", rt.platform()),
+        Err(e) => println!("pjrt unavailable: {e}"),
+    }
+    match crate::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts ({dir}):");
+            for v in &m.entries {
+                println!(
+                    "  {:<28} kind={:<6} W={} B={} S={} D={}",
+                    v.name, v.kind, v.w, v.b, v.s, v.d
+                );
+            }
+        }
+        Err(e) => println!("artifacts: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,184 @@
+//! The `pw2v` command-line surface.
+//!
+//! `main.rs` is a thin shim over [`run`]; the whole dispatchable surface
+//! lives in the library so the CLI contract itself is testable —
+//! `tests/cli_compat.rs` pins it end-to-end over the real binary.
+//!
+//! Contract:
+//! - every subcommand answers `--help` with its own usage block;
+//! - errors are prefixed with the subcommand name (`pw2v train: ...`);
+//! - bare `pw2v <corpus>` — the original single-purpose invocation —
+//!   aliases to `train --corpus <corpus>` when `<corpus>` names an
+//!   existing file.
+//!
+//! One module per command family:
+//! - [`corpus_cmd`] — `gen-corpus`, `encode`
+//! - [`train_cmd`] — `train`, `train-dist`
+//! - [`stream_cmd`] — `stream` (continuous ingest + training)
+//! - [`serve_cmd`] — `serve` (query engine, `--watch` hot-swap)
+//! - [`misc_cmd`] — `eval`, `simulate`, `info`
+//! - [`common`] — the shared flag table and config plumbing
+
+pub mod common;
+pub mod corpus_cmd;
+pub mod misc_cmd;
+pub mod serve_cmd;
+pub mod stream_cmd;
+pub mod train_cmd;
+
+use crate::util::args::Args;
+
+const HELP: &str = "\
+pw2v — Parallelizing Word2Vec in Shared and Distributed Memory (Ji et al. 2016)
+
+USAGE: pw2v <subcommand> [--key value ...]
+       pw2v <corpus>                  alias for `train --corpus <corpus>`
+       pw2v <subcommand> --help       per-subcommand flags
+
+  gen-corpus  generate a synthetic latent-model corpus + eval sets
+  encode      pre-build the .pw2v.u32 encoded-corpus cache
+  train       shared-memory training (backend selectable)
+  train-dist  distributed data-parallel training (threads or tcp ring)
+  stream      tail a growing corpus and train continuously
+  eval        evaluate saved vectors on similarity/analogy sets
+  serve       answer topk/analogy/stats queries over a trained model
+  simulate    regenerate the paper's Fig 3 / Fig 4 scaling curves
+  info        runtime + artifact diagnostics
+";
+
+type Handler = fn(&Args) -> anyhow::Result<()>;
+
+/// Name → handler → per-command help.  Dispatch order == help order.
+const COMMANDS: &[(&str, Handler, &str)] = &[
+    ("gen-corpus", corpus_cmd::gen_corpus, corpus_cmd::GEN_HELP),
+    ("encode", corpus_cmd::encode, corpus_cmd::ENCODE_HELP),
+    ("train", train_cmd::train, train_cmd::TRAIN_HELP),
+    ("train-dist", train_cmd::train_dist, train_cmd::DIST_HELP),
+    ("stream", stream_cmd::stream, stream_cmd::HELP),
+    ("eval", misc_cmd::eval, misc_cmd::EVAL_HELP),
+    ("serve", serve_cmd::serve, serve_cmd::HELP),
+    ("simulate", misc_cmd::simulate, misc_cmd::SIM_HELP),
+    ("info", misc_cmd::info, misc_cmd::INFO_HELP),
+];
+
+/// What a raw argv resolves to, before anything runs.  Pure — the
+/// filesystem check that legitimises [`Resolution::TrainAlias`] happens
+/// in [`dispatch`], so this stays unit-testable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resolution {
+    /// Top-level help (empty argv included).
+    Help,
+    /// Index into [`COMMANDS`]; the command's arguments are `argv[1..]`.
+    Command(usize),
+    /// Bare `pw2v <corpus>`: run `train` over the FULL argv (the corpus
+    /// rides along as a positional).
+    TrainAlias,
+}
+
+pub fn resolve(argv: &[String]) -> anyhow::Result<Resolution> {
+    let first = argv.first().map(String::as_str).unwrap_or("");
+    if matches!(first, "" | "help" | "--help" | "-h") {
+        return Ok(Resolution::Help);
+    }
+    if let Some(i) = COMMANDS.iter().position(|(n, ..)| *n == first) {
+        return Ok(Resolution::Command(i));
+    }
+    anyhow::ensure!(
+        !first.starts_with('-'),
+        "unknown option '{first}' before a subcommand (try `pw2v help`)"
+    );
+    Ok(Resolution::TrainAlias)
+}
+
+/// Entry point for the binary shim: dispatch over `std::env::args`.
+pub fn run() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    dispatch(&argv)
+}
+
+pub fn dispatch(argv: &[String]) -> anyhow::Result<()> {
+    let ((name, handler, help), tail) = match resolve(argv)? {
+        Resolution::Help => {
+            print!("{HELP}");
+            return Ok(());
+        }
+        Resolution::Command(i) => (COMMANDS[i], &argv[1..]),
+        Resolution::TrainAlias => {
+            let word = argv[0].as_str();
+            anyhow::ensure!(
+                std::path::Path::new(word).exists(),
+                "unknown subcommand '{word}' (and no such corpus file; \
+                 try `pw2v help`)"
+            );
+            let train = COMMANDS
+                .iter()
+                .find(|(n, ..)| *n == "train")
+                .copied()
+                .expect("train is always registered");
+            (train, argv)
+        }
+    };
+    let args = Args::parse(tail.iter().cloned());
+    // `--help` anywhere in the tail prints the command's usage.  The
+    // parser binds `--help <value>` as an option, so check both shapes.
+    if args.flag("help") || args.opt::<String>("help")?.is_some() {
+        print!("{help}");
+        if help.contains("[shared flags]") {
+            print!("{}", common::SHARED_FLAGS);
+        }
+        return Ok(());
+    }
+    handler(&args).map_err(|e| e.context(format!("pw2v {name}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn known_subcommands_resolve_by_name() {
+        for (i, (name, ..)) in COMMANDS.iter().enumerate() {
+            let r = resolve(&argv(&format!("{name} --x 1"))).unwrap();
+            assert_eq!(r, Resolution::Command(i), "{name}");
+        }
+    }
+
+    #[test]
+    fn empty_and_help_spellings_resolve_to_help() {
+        for s in ["", "help", "--help", "-h"] {
+            assert_eq!(resolve(&argv(s)).unwrap(), Resolution::Help, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn bare_word_resolves_to_the_train_alias() {
+        assert_eq!(
+            resolve(&argv("corpus.txt --dim 8")).unwrap(),
+            Resolution::TrainAlias
+        );
+    }
+
+    #[test]
+    fn leading_option_is_rejected() {
+        let e = resolve(&argv("--dim 8")).unwrap_err().to_string();
+        assert!(e.contains("--dim") || e.contains("-dim"), "{e}");
+    }
+
+    #[test]
+    fn alias_for_a_missing_file_names_the_word() {
+        let e = dispatch(&argv("frobnicate")).unwrap_err().to_string();
+        assert!(e.contains("unknown subcommand 'frobnicate'"), "{e}");
+    }
+
+    #[test]
+    fn errors_are_prefixed_with_the_subcommand() {
+        // eval without --vectors must fail, and the context names it.
+        let e = format!("{:#}", dispatch(&argv("eval")).unwrap_err());
+        assert!(e.starts_with("pw2v eval"), "{e}");
+        assert!(e.contains("--vectors"), "{e}");
+    }
+}

@@ -1,0 +1,83 @@
+//! The `serve` subcommand: answer topk/analogy/stats queries over a
+//! trained model, with optional `--watch` hot-swapping of the row store.
+
+use std::path::Path;
+
+use crate::config::QuantMode;
+use crate::linalg::simd::{self, SimdMode};
+use crate::model::io as model_io;
+use crate::serve::{run_listen, run_stdio, RowStore, ServeEngine, StoreWatcher};
+use crate::util::args::Args;
+
+pub const HELP: &str = "\
+USAGE: pw2v serve --vectors vectors.txt | --store model.rst
+         [--save-store model.rst --quant off|int8
+          --simd auto|avx2|scalar --listen HOST:PORT --watch]
+
+Line-delimited JSON over stdin/stdout, or TCP with --listen.
+Requests (one JSON response line each):
+  {\"op\":\"topk\",\"word\":W,\"k\":K}
+  {\"op\":\"analogy\",\"a\":A,\"b\":B,\"c\":C,\"k\":K}
+  {\"op\":\"stats\"}                  -> vocab/dim/quant/generation
+
+--save-store writes the mmap-able binary row store (then serves from
+it); --store opens one directly — O(header+vocab) startup, no float
+parsing.  --quant int8 scans per-row symmetric int8 codes: ~4x less
+scan bandwidth, recall gated in CI.  --watch (needs --store) polls the
+store file between request lines and hot-swaps to newer
+generation-stamped exports (`stream --store` writes them) without
+dropping the connection.
+";
+
+pub fn serve(a: &Args) -> anyhow::Result<()> {
+    let vectors: Option<String> = a.opt("vectors")?;
+    let store_path: Option<String> = a.opt("store")?;
+    let save_store: Option<String> = a.opt("save-store")?;
+    let quant: QuantMode = a.get("quant", QuantMode::default())?;
+    let simd_mode: SimdMode = a.get("simd", SimdMode::default())?;
+    let listen: Option<String> = a.opt("listen")?;
+    let watch = a.flag("watch");
+    a.check_unknown()?;
+
+    let level = simd::configure(simd_mode)?;
+    let store = match (&vectors, &store_path) {
+        (Some(v), None) => {
+            let (words, emb) = model_io::load_text(v)?;
+            let st = RowStore::from_model(words, &emb)?;
+            eprintln!(
+                "serve: loaded {} vectors of dim {} from {v}",
+                st.n_rows(),
+                st.dim()
+            );
+            st
+        }
+        (None, Some(p)) => {
+            let st = RowStore::open(Path::new(p))?;
+            eprintln!(
+                "serve: opened row store {p} ({} rows, dim {}, generation {})",
+                st.n_rows(),
+                st.dim(),
+                st.generation()
+            );
+            st
+        }
+        _ => anyhow::bail!("serve needs exactly one of --vectors or --store"),
+    };
+    if let Some(p) = &save_store {
+        store.save(Path::new(p))?;
+        eprintln!("serve: row store saved to {p}");
+    }
+    let mut watcher = match (watch, &store_path) {
+        (false, _) => None,
+        (true, Some(p)) => Some(StoreWatcher::new(Path::new(p))),
+        (true, None) => {
+            anyhow::bail!("--watch needs --store (a file to poll for new exports)")
+        }
+    };
+    let mut eng = ServeEngine::from_store(store, quant);
+    eprintln!("serve: simd={level:?} quant={quant} watch={watch}");
+    match listen {
+        Some(addr) => run_listen(&mut eng, &addr, watcher.as_mut()),
+        None => run_stdio(&mut eng, watcher.as_mut()),
+    }
+}

@@ -1,0 +1,102 @@
+//! The `stream` subcommand: tail a growing corpus and train
+//! continuously, with optional vocabulary admission, periodic
+//! checkpoints and serve-ready store exports (see `stream::driver`).
+
+use std::path::PathBuf;
+
+use crate::config::{Backend, TrainConfig};
+use crate::model::{io as model_io, Embedding};
+use crate::stream::{StreamOptions, StreamTrainer};
+use crate::util::args::Args;
+use crate::util::si;
+
+use super::common;
+
+pub const HELP: &str = "\
+USAGE: pw2v stream --corpus corpus.txt
+         [--vocab-reserve N --checkpoint BASE --checkpoint-every FLUSHES
+          --resume --follow tcp:HOST:PORT --store model.rst
+          --poll-ms MS --idle-ms MS --out vectors.txt] [shared flags]
+
+Tail `corpus.txt` as it grows and train continuously through the same
+superbatch pipeline as `train`.  Over a file that never grows, a frozen
+-vocab stream run is bitwise-identical to the batch trainer (pinned by
+tests/stream_parity.rs).  Stream pins backend=gemm, threads=1,
+epochs=1; other backends/schedules are rejected with an explanation.
+
+  --vocab-reserve N      pre-allocate N extra model rows; unknown words
+                         are counted and admitted once they clear
+                         --min-count (subsample/unigram tables rebuild
+                         incrementally on admission)
+  --checkpoint BASE      two-slot PWCK snapshots + a .stream sidecar,
+                         written every --checkpoint-every superbatch
+                         flushes; --resume warm-restarts bitwise
+  --follow tcp:ADDR      also accept line-oriented socket feeds and
+                         append them to the corpus file
+  --store model.rst      export a serve-ready row store at every
+                         checkpoint (generation-stamped; `serve --watch`
+                         hot-swaps to it)
+  --idle-ms MS           exit after MS with no new complete line
+                         (0 = run until killed); --poll-ms is the file
+                         poll cadence
+  --out vectors.txt      save the live rows as text vectors at exit
+
+";
+
+pub fn stream(a: &Args) -> anyhow::Result<()> {
+    let corpus = common::corpus_arg(a)?;
+    let out: Option<String> = a.opt("out")?;
+    // Stream-compatible defaults; explicit flags still land on top and
+    // are validated (with stream-specific messages) by the driver.
+    let mut base = TrainConfig::default();
+    base.backend = Backend::Gemm;
+    base.threads = 1;
+    base.epochs = 1;
+    let cfg = common::train_config(a, base)?;
+    let opts = StreamOptions {
+        checkpoint: a.opt::<String>("checkpoint")?.map(PathBuf::from),
+        ckpt_every: a.get("checkpoint-every", 8u64)?,
+        resume: a.flag("resume"),
+        poll_ms: a.get("poll-ms", 50u64)?,
+        idle_ms: a.get("idle-ms", 0u64)?,
+        follow: a.opt("follow")?,
+        store: a.opt::<String>("store")?.map(PathBuf::from),
+    };
+    a.check_unknown()?;
+
+    let mut tr = StreamTrainer::open(&cfg, &corpus, opts)?;
+    eprintln!(
+        "stream: vocab {} words ({} rows reserved), dim {}, resuming at \
+         byte {} of {}",
+        tr.vocab().len(),
+        tr.model().vocab() - tr.vocab().len(),
+        cfg.dim,
+        tr.pos(),
+        corpus.display()
+    );
+    let outcome = tr.run()?;
+    eprintln!(
+        "stream done: {} words in {:.1}s = {} words/sec, vocab {} \
+         ({} admitted live), {} corpus bytes, final lr {:.5}",
+        outcome.snapshot.words,
+        outcome.snapshot.secs,
+        si(outcome.snapshot.words_per_sec()),
+        outcome.vocab_len,
+        outcome.admitted,
+        outcome.trained_bytes,
+        outcome.final_lr
+    );
+    if let Some(p) = out {
+        // The model over-allocates by --vocab-reserve; save only the
+        // live prefix the vocabulary actually names.
+        let vocab = tr.vocab();
+        let m_in = tr.model().m_in();
+        let mut live = Embedding::zeros(vocab.len(), m_in.dim());
+        for id in 0..vocab.len() as u32 {
+            live.row_mut(id).copy_from_slice(m_in.row(id));
+        }
+        model_io::save_text(&p, vocab, &live)?;
+        eprintln!("vectors saved to {p}");
+    }
+    Ok(())
+}

@@ -1,0 +1,253 @@
+//! The training-family subcommands: `train` (shared-memory) and
+//! `train-dist` (replica threads or a multi-process TCP ring).
+
+use std::path::PathBuf;
+
+use crate::config::TrainConfig;
+use crate::corpus::vocab::Vocab;
+use crate::dist::{
+    train_distributed, train_tcp_ring, CheckpointPolicy, DistConfig, FaultSpec,
+    NetConfig, OnFailure, RingSpec, SyncPolicy,
+};
+use crate::model::{io as model_io, SharedModel};
+use crate::train;
+use crate::util::args::Args;
+use crate::util::si;
+
+use super::common;
+
+pub const TRAIN_HELP: &str = "\
+USAGE: pw2v train --corpus corpus.txt [--out vectors.txt] [shared flags]
+       pw2v <corpus>                  (compatibility alias)
+
+Shared-memory training.  --corpus-cache auto encodes <corpus>.pw2v.u32
+once and trains from the u32 cache: no per-epoch re-tokenization.
+--numa auto shards M_in/M_out across NUMA nodes and pins workers so
+Hogwild scatters stay socket-local; --route owner additionally steers
+each hot-target window to the worker on the target row's home node —
+bounded mailboxes, local fallback under backpressure.
+
+";
+
+pub const DIST_HELP: &str = "\
+USAGE: pw2v train-dist --corpus corpus.txt --nodes N
+         [--sync-interval W --policy sub|full --no-lr-scaling]
+         [--out vectors.txt]
+         [--dist threads|tcp:RANK@ADDR0,ADDR1,...]
+         [--checkpoint BASE --checkpoint-every ROUNDS --resume]
+         [--net-timeout-ms MS --heartbeat-ms MS --connect-timeout-ms MS]
+         [--on-failure abort|shrink|rejoin --rejoin-grace-ms MS]
+         [shared flags]
+
+Distributed data-parallel training.  --numa auto pins each replica to a
+NUMA node and first-touches it there — one replica per socket keeps
+training traffic node-local; --route is accepted for config parity but
+is a no-op here: each replica is one worker, so every window already
+processes on its home node.
+
+--dist tcp:... runs THIS process as one rank of a TCP ring — launch one
+process per address, each with its own rank; --nodes is implied by the
+address list.  Full-sync rings are bitwise-identical to thread mode.
+--checkpoint writes two-slot crash-consistent snapshots at
+BASE.rankK.{a,b} every ROUNDS sync rounds; --resume continues from the
+newest round every rank can load.
+
+--on-failure shrink (needs --checkpoint) self-heals on a peer failure:
+survivors regroup at a new membership epoch, roll back to the newest
+checkpoint round all of them hold, re-shard over the smaller ring and
+continue; rejoin additionally holds the regroup open for
+--rejoin-grace-ms so a promptly respawned rank is re-admitted; abort
+(default) fails the whole run fast.  Frame deadlines adapt to measured
+round time (EWMA); --net-timeout-ms is the floor.  PW2V_FAULT injects
+deterministic faults (kill-after=N | torn-frame=N | stall-after=N |
+panic-replica=I | kill-epoch=E | wedge-regroup=E | respawn-after=MS)
+for the fault suite.
+
+";
+
+pub fn train(a: &Args) -> anyhow::Result<()> {
+    let corpus = common::corpus_arg(a)?;
+    let out: Option<String> = a.opt("out")?;
+    let cfg = common::train_config(a, TrainConfig::default())?;
+    a.check_unknown()?;
+
+    eprintln!("building vocabulary ...");
+    let vocab = Vocab::build_from_file(&corpus, cfg.min_count)?;
+    eprintln!(
+        "vocab {} words, corpus {} tokens",
+        vocab.len(),
+        vocab.total_words()
+    );
+    let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+    eprintln!(
+        "training: backend={} threads={} dim={} epochs={} simd={} kernel={} \
+         sigmoid={} corpus-cache={} numa={} route={}",
+        cfg.backend,
+        cfg.threads,
+        cfg.dim,
+        cfg.epochs,
+        cfg.simd,
+        cfg.kernel,
+        cfg.sigmoid_mode,
+        cfg.corpus_cache,
+        cfg.numa,
+        cfg.route
+    );
+    let outcome = train::train(&cfg, &corpus, &vocab, &model)?;
+    let snap = outcome.snapshot;
+    eprintln!(
+        "done: {} words in {:.1}s = {} words/sec ({} windows, {} calls)",
+        snap.words,
+        snap.secs,
+        si(snap.words_per_sec()),
+        snap.windows,
+        snap.calls
+    );
+    if let Some(p) = out {
+        model_io::save_text(&p, &vocab, model.m_in())?;
+        eprintln!("vectors saved to {p}");
+    }
+    Ok(())
+}
+
+pub fn train_dist(a: &Args) -> anyhow::Result<()> {
+    let corpus = common::corpus_arg(a)?;
+    let out: Option<String> = a.opt("out")?;
+    let cfg = common::train_config(a, TrainConfig::default())?;
+
+    // Transport: in-process replica threads (default) or one rank of a
+    // multi-process TCP ring.
+    let transport: String = a.get("dist", "threads".to_string())?;
+    let ring = match transport.as_str() {
+        "threads" => None,
+        spec if spec.starts_with("tcp:") => Some(RingSpec::parse(spec)?),
+        other => anyhow::bail!("unknown transport '{other}' (threads|tcp:RANK@ADDRS)"),
+    };
+    let nodes: usize = match &ring {
+        Some(r) => {
+            anyhow::ensure!(
+                a.opt::<usize>("nodes")?.map_or(true, |n| n == r.nranks()),
+                "--nodes disagrees with the tcp ring's address count"
+            );
+            r.nranks()
+        }
+        None => a.get("nodes", 2)?,
+    };
+
+    let mut dist = DistConfig::for_nodes(nodes);
+    dist.sync_interval = a.get("sync-interval", dist.sync_interval)?;
+    match a.opt::<String>("policy")?.as_deref() {
+        Some("full") => dist.policy = SyncPolicy::Full,
+        Some("sub") | None => {}
+        Some(p) => anyhow::bail!("unknown policy '{p}' (sub|full)"),
+    }
+    if a.flag("no-lr-scaling") {
+        dist.scale_lr = false;
+    }
+    if let Some(p) = a.opt::<String>("on-failure")? {
+        dist.on_failure = p.parse::<OnFailure>()?;
+        anyhow::ensure!(
+            ring.is_some() || dist.on_failure == OnFailure::Abort,
+            "--on-failure shrink/rejoin needs the tcp transport \
+             (thread mode always fails fast)"
+        );
+    }
+    // Thread-mode fault injection (TCP wire faults are read from the
+    // environment by the transport itself).
+    dist.fault = FaultSpec::from_env()
+        .map_err(|e| anyhow::anyhow!("PW2V_FAULT: {e:#}"))?;
+
+    let defaults = NetConfig::default();
+    let net = NetConfig {
+        connect_timeout_ms: a.get("connect-timeout-ms", defaults.connect_timeout_ms)?,
+        io_timeout_ms: a.get("net-timeout-ms", defaults.io_timeout_ms)?,
+        heartbeat_ms: a.get("heartbeat-ms", defaults.heartbeat_ms)?,
+        rejoin_grace_ms: a.get("rejoin-grace-ms", defaults.rejoin_grace_ms)?,
+    };
+    let ckpt = CheckpointPolicy {
+        base: a.opt::<String>("checkpoint")?.map(PathBuf::from),
+        every: a.get("checkpoint-every", 8u64)?,
+        resume: a.flag("resume"),
+    };
+    a.check_unknown()?;
+
+    let vocab = Vocab::build_from_file(&corpus, cfg.min_count)?;
+    let outcome = match &ring {
+        None => {
+            eprintln!(
+                "distributed training: {} replica threads, sync every {} words, \
+                 vocab {}, numa={} route={}",
+                nodes,
+                dist.sync_interval,
+                vocab.len(),
+                cfg.numa,
+                cfg.route
+            );
+            train_distributed(&cfg, &dist, &corpus, &vocab)?
+        }
+        Some(spec) => {
+            eprintln!(
+                "distributed training: rank {}/{} on tcp ring, sync every {} \
+                 words, vocab {}, checkpoint={}, on-failure={:?}",
+                spec.rank,
+                nodes,
+                dist.sync_interval,
+                vocab.len(),
+                ckpt.base
+                    .as_deref()
+                    .map(|p| p.display().to_string())
+                    .unwrap_or_else(|| "off".into()),
+                dist.on_failure,
+            );
+            train_tcp_ring(&cfg, &dist, spec, &net, &ckpt, &corpus, &vocab)?
+        }
+    };
+    eprintln!(
+        "done: {} words in {:.1}s = {} words/sec aggregate",
+        outcome.words,
+        outcome.secs,
+        si(outcome.words as f64 / outcome.secs.max(1e-9))
+    );
+    for (i, st) in outcome.sync_stats.iter().enumerate() {
+        eprintln!(
+            "  node {i}: {} rounds, {} rows synced, {} wire bytes",
+            st.rounds,
+            st.rows_synced,
+            si(st.wire_bytes as f64)
+        );
+    }
+    if let Some(n) = &outcome.net {
+        eprintln!(
+            "  ring: {} frames / {} bytes sent ({} slice bytes), \
+             {} frames / {} bytes recv, {} heartbeats",
+            n.frames_sent,
+            si(n.bytes_sent as f64),
+            si(n.slice_bytes_sent as f64),
+            n.frames_recv,
+            si(n.bytes_recv as f64),
+            n.heartbeats_sent
+        );
+    }
+    if let Some(p) = out {
+        model_io::save_text(&p, &vocab, outcome.model.m_in())?;
+        eprintln!("vectors saved to {p}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::common::SHARED_FLAGS;
+
+    #[test]
+    fn help_texts_reference_the_shared_flag_table_keys() {
+        for key in ["--corpus", "shared flags"] {
+            assert!(TRAIN_HELP.contains(key), "train help lacks {key}");
+            assert!(DIST_HELP.contains(key), "dist help lacks {key}");
+        }
+        for key in ["--simd", "--corpus-cache", "--numa", "--vocab-reserve"] {
+            assert!(SHARED_FLAGS.contains(key), "shared table lacks {key}");
+        }
+    }
+}

@@ -301,6 +301,13 @@ pub struct TrainConfig {
     /// sharded copy while training (transient 2x model memory; see
     /// EXPERIMENTS.md §NUMA).
     pub numa: NumaMode,
+    /// Reserved embedding rows for STREAMING vocabulary admission
+    /// (`--vocab-reserve <N>`): the model is allocated with this many
+    /// extra rows past the initial vocabulary, pre-initialised from the
+    /// same sequential RNG stream as the base rows, and admissions
+    /// consume them in order.  0 (the default) freezes the vocabulary —
+    /// batch training ignores the knob entirely.
+    pub vocab_reserve: usize,
     /// Window routing by output-row ownership (`--route
     /// {off,owner,head=<K>}`): `off` = every worker processes its own
     /// windows (the pre-routing path bit-for-bit); `owner` = steer
@@ -335,6 +342,7 @@ impl Default for TrainConfig {
             sigmoid_mode: SigmoidMode::Exact,
             kernel: KernelMode::Auto,
             corpus_cache: CorpusCacheMode::Off,
+            vocab_reserve: 0,
             numa: NumaMode::Off,
             route: RouteMode::Off,
         }
@@ -391,6 +399,12 @@ impl TrainConfig {
         ] {
             h.update(&v.to_le_bytes());
         }
+        // Reserved rows change the model allocation (and therefore what
+        // a checkpoint holds), but only when non-zero — mixing the field
+        // conditionally preserves every pre-streaming digest.
+        if self.vocab_reserve != 0 {
+            h.update(&(self.vocab_reserve as u64).to_le_bytes());
+        }
         h.digest()
     }
 
@@ -428,6 +442,7 @@ impl TrainConfig {
         if let Some(c) = a.opt::<CorpusCacheMode>("corpus-cache")? {
             self.corpus_cache = c;
         }
+        self.vocab_reserve = a.get("vocab-reserve", self.vocab_reserve)?;
         if let Some(nm) = a.opt::<NumaMode>("numa")? {
             self.numa = nm;
         }
@@ -543,6 +558,22 @@ mod tests {
         b.route = RouteMode::Owner;
         b.threads = 7;
         assert_eq!(a.fingerprint(), b.fingerprint());
+        // Reserved rows reshape the model allocation, so they move the
+        // digest — but only when non-zero (old digests preserved).
+        b = TrainConfig::default();
+        b.vocab_reserve = 64;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn vocab_reserve_knob_parses() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.vocab_reserve, 0);
+        let a = Args::parse(
+            "--vocab-reserve 128".split_whitespace().map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.vocab_reserve, 128);
     }
 
     #[test]

@@ -108,8 +108,24 @@ impl EncodedCorpus {
     /// a crashed build never leaves a half-written cache that a later
     /// `auto` run could pick up.
     pub fn build(text: &Path, vocab: &Vocab, out: &Path) -> anyhow::Result<BuildStats> {
-        let t0 = Instant::now();
         let text_len = std::fs::metadata(text)?.len();
+        Self::build_upto(text, vocab, out, text_len)
+    }
+
+    /// [`build`](Self::build) over the text prefix `[0, upto)` only.  The
+    /// stream driver uses this for its cold-start cache: training stops
+    /// at the last COMPLETE line, so the cache must too (a trailing
+    /// partial line would otherwise be encoded as a sentence the text
+    /// path never yields, and the next [`append`](Self::append) would
+    /// refuse the dirty boundary).
+    pub fn build_upto(
+        text: &Path,
+        vocab: &Vocab,
+        out: &Path,
+        upto: u64,
+    ) -> anyhow::Result<BuildStats> {
+        let t0 = Instant::now();
+        let text_len = upto;
         let tmp = append_name(out, ".tmp");
         let mut w = BufWriter::with_capacity(1 << 20, File::create(&tmp)?);
         w.write_all(&MAGIC)?;
@@ -126,7 +142,7 @@ impl EncodedCorpus {
         let mut starts: Vec<u64> = vec![0];
         let mut n_tokens = 0u64;
         let mut max_id = 0u32;
-        let mut reader = SentenceReader::open(text, vocab)?;
+        let mut reader = SentenceReader::open_range(text, vocab, 0, upto)?;
         let mut sent: Vec<u32> = Vec::with_capacity(MAX_SENTENCE_LEN);
         while let Some(line_off) = reader.next_sentence_into_with_pos(&mut sent)? {
             offsets.push(line_off);
@@ -161,6 +177,102 @@ impl EncodedCorpus {
         })
     }
 
+    /// Append-aware builder (streaming ingest): extend an existing cache
+    /// with the source bytes `[recorded_text_len, upto)` WITHOUT
+    /// re-tokenizing the prefix.  The prefix token/offset/index sections
+    /// are copied raw; only the suffix is streamed through the
+    /// [`SentenceReader`].  The extended cache lands via the same
+    /// tmp+rename discipline as [`build`](Self::build).
+    ///
+    /// `expect_fp` is the vocab fingerprint the EXISTING cache must
+    /// carry.  It may differ from `vocab.fingerprint()` when admissions
+    /// happened since the last append — the caller (the stream driver)
+    /// guarantees `vocab` is an append-extension of the vocabulary the
+    /// cache was built under, which keeps every prefix token id valid.
+    /// The rewritten header carries the CURRENT fingerprint.
+    ///
+    /// Fails (caller falls back to a full rebuild) when the recorded
+    /// prefix does not end at a line boundary — appended bytes would
+    /// otherwise extend a sentence the cache already encoded.
+    pub fn append(
+        text: &Path,
+        vocab: &Vocab,
+        cache: &Path,
+        expect_fp: u64,
+        upto: u64,
+    ) -> anyhow::Result<BuildStats> {
+        let t0 = Instant::now();
+        let old = Self::parse_with(load_bytes(cache)?, vocab, expect_fp)
+            .map_err(|e| e.context(format!("corpus cache {}", cache.display())))?;
+        let old_len = old.text_len;
+        anyhow::ensure!(
+            upto >= old_len,
+            "append window ends at {upto}, before the recorded prefix \
+             ({old_len} bytes)"
+        );
+        anyhow::ensure!(
+            prefix_ends_at_newline(text, old_len)?,
+            "recorded prefix does not end at a line boundary; the last \
+             cached sentence could grow — full rebuild required"
+        );
+        // Encode the suffix first (counts are needed up front — the
+        // rewrite streams every section in order, no placeholder pass).
+        let mut suf_tokens: Vec<u32> = Vec::new();
+        let mut suf_offsets: Vec<u64> = Vec::new();
+        let mut suf_starts: Vec<u64> = Vec::new();
+        let mut max_id = u32::from_le_bytes(old.bytes[12..16].try_into().unwrap());
+        let mut reader = SentenceReader::open_range(text, vocab, old_len, upto)?;
+        let mut sent: Vec<u32> = Vec::with_capacity(MAX_SENTENCE_LEN);
+        while let Some(line_off) = reader.next_sentence_into_with_pos(&mut sent)? {
+            suf_offsets.push(line_off);
+            for &id in &sent {
+                max_id = max_id.max(id);
+                suf_tokens.push(id);
+            }
+            suf_starts.push(old.n_tokens + suf_tokens.len() as u64);
+        }
+        let n_sentences = old.n_sentences + suf_offsets.len() as u64;
+        let n_tokens = old.n_tokens + suf_tokens.len() as u64;
+        let tmp = append_name(cache, ".tmp");
+        let mut w = BufWriter::with_capacity(1 << 20, File::create(&tmp)?);
+        w.write_all(&MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&max_id.to_le_bytes())?;
+        w.write_all(&vocab.fingerprint().to_le_bytes())?;
+        w.write_all(&upto.to_le_bytes())?;
+        w.write_all(&n_sentences.to_le_bytes())?;
+        w.write_all(&n_tokens.to_le_bytes())?;
+        // Prefix sections raw, suffix entries appended to each.
+        w.write_all(&old.bytes[HEADER_LEN..old.off_off])?;
+        for &id in &suf_tokens {
+            w.write_all(&id.to_le_bytes())?;
+        }
+        w.write_all(&old.bytes[old.off_off..old.starts_off])?;
+        for &o in &suf_offsets {
+            w.write_all(&o.to_le_bytes())?;
+        }
+        // The old starts section already ends with starts[n] =
+        // old_n_tokens, which is exactly the first suffix boundary.
+        w.write_all(
+            &old.bytes[old.starts_off..old.starts_off + 8 * (old.n_sentences as usize + 1)],
+        )?;
+        for &s in &suf_starts {
+            w.write_all(&s.to_le_bytes())?;
+        }
+        w.flush()?;
+        let f = w.into_inner().map_err(|e| e.into_error())?;
+        f.sync_all()?;
+        drop(f);
+        drop(old); // release the mapping before replacing the file
+        std::fs::rename(&tmp, cache)?;
+        Ok(BuildStats {
+            sentences: suf_offsets.len() as u64,
+            tokens: suf_tokens.len() as u64,
+            text_bytes: upto - old_len,
+            secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
     /// Open and fully validate a cache against `vocab`.  Every rejection
     /// path here is exercised by `tests/corpus_parity.rs`.
     pub fn open(path: &Path, vocab: &Vocab) -> anyhow::Result<Self> {
@@ -172,6 +284,14 @@ impl EncodedCorpus {
     }
 
     fn parse(bytes: Bytes, vocab: &Vocab) -> anyhow::Result<Self> {
+        Self::parse_with(bytes, vocab, vocab.fingerprint())
+    }
+
+    /// Like [`parse`](Self::parse) but accepting an explicit expected
+    /// fingerprint: the APPEND path validates a cache written under an
+    /// earlier vocabulary generation (ids unchanged — admission only
+    /// appends entries) before extending it under the current one.
+    fn parse_with(bytes: Bytes, vocab: &Vocab, expected_fp: u64) -> anyhow::Result<Self> {
         let b: &[u8] = &bytes;
         anyhow::ensure!(
             b.len() >= HEADER_LEN,
@@ -190,7 +310,6 @@ impl EncodedCorpus {
         let max_id = u32::from_le_bytes(b[12..16].try_into().unwrap());
         let le64 = |at: usize| u64::from_le_bytes(b[at..at + 8].try_into().unwrap());
         let fp = le64(16);
-        let expected_fp = vocab.fingerprint();
         anyhow::ensure!(
             fp == expected_fp,
             "stale vocab fingerprint {fp:#018x} (current vocabulary is \
@@ -277,7 +396,14 @@ impl EncodedCorpus {
     /// `text` when missing or stale.  Staleness: failed validation, a
     /// changed source length, or a source file modified AFTER the cache
     /// was written (catches same-length rewrites — e.g. a line-shuffled
-    /// corpus — that the fingerprint and length cannot see).  A
+    /// corpus — that the fingerprint and length cannot see).  One
+    /// exception, for streaming ingest: a source that GREW past a
+    /// still-valid cache whose prefix ends at a line boundary is
+    /// extended in place via [`append`](Self::append) — only the new
+    /// suffix is tokenized.  (The grown-file mtime is necessarily newer;
+    /// the rule trusts that growth means append, which is the streaming
+    /// contract — a same-length-prefix rewrite plus growth is
+    /// indistinguishable and remains the caller's responsibility.)  A
     /// stale/corrupt cache is preserved as `<cache>.bak` before the
     /// rebuild, like `BENCH_throughput.json` does for the perf
     /// trajectory.  Returns the cache and whether this call (re)built it.
@@ -303,6 +429,29 @@ impl EncodedCorpus {
             let why = match Self::open(cache, vocab) {
                 Ok(c) if c.text_len() == text_len && !text_newer => {
                     return Ok((c, false))
+                }
+                Ok(c) if c.text_len() < text_len => {
+                    // Source grew by a suffix: extend instead of rebuild.
+                    let fp = vocab.fingerprint();
+                    match Self::append(text, vocab, cache, fp, text_len) {
+                        Ok(st) => {
+                            eprintln!(
+                                "extended corpus cache {}: +{} sentences, \
+                                 +{} tokens from {} new text bytes in {:.2}s",
+                                cache.display(),
+                                st.sentences,
+                                st.tokens,
+                                st.text_bytes,
+                                st.secs
+                            );
+                            return Ok((Self::open(cache, vocab)?, true));
+                        }
+                        Err(e) => format!(
+                            "source grew ({} -> {text_len}) but cannot be \
+                             append-encoded: {e:#}",
+                            c.text_len()
+                        ),
+                    }
                 }
                 Ok(c) if c.text_len() != text_len => format!(
                     "source text length changed ({} -> {text_len})",
@@ -463,6 +612,20 @@ fn append_name(path: &Path, suffix: &str) -> PathBuf {
     PathBuf::from(os)
 }
 
+/// Does the source prefix `[0, len)` end exactly at a line boundary?
+/// (`len == 0` counts: an empty prefix is a trivially clean boundary.)
+fn prefix_ends_at_newline(text: &Path, len: u64) -> anyhow::Result<bool> {
+    if len == 0 {
+        return Ok(true);
+    }
+    use std::io::Read;
+    let mut f = File::open(text)?;
+    f.seek(SeekFrom::Start(len - 1))?;
+    let mut b = [0u8; 1];
+    f.read_exact(&mut b)?;
+    Ok(b[0] == b'\n')
+}
+
 /// Open the cache bytes through the shared [`crate::util::mmap`]
 /// substrate.  The `PW2V_CORPUS_MMAP=off|0` opt-out (the CI leg
 /// exercising the portable buffered reader) lives HERE, at the corpus
@@ -522,7 +685,7 @@ mod tests {
     }
 
     #[test]
-    fn ensure_reuses_then_rebuilds_on_text_change() {
+    fn ensure_reuses_then_appends_on_suffix_growth() {
         let path = write_tmp("ens.txt", "a b\nb c\n");
         let cache = append_name(&path, CACHE_SUFFIX);
         let vocab = vocab_abc();
@@ -530,17 +693,113 @@ mod tests {
         assert!(built);
         let (_, built) = EncodedCorpus::ensure(&path, &vocab, &cache).unwrap();
         assert!(!built, "valid cache must be reused");
-        // Appending to the text invalidates via the recorded length.
+        // Suffix growth takes the append path: extended, no .bak.
         let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
         f.write_all(b"c c\n").unwrap();
         drop(f);
         let (enc, built) = EncodedCorpus::ensure(&path, &vocab, &cache).unwrap();
-        assert!(built, "length change must trigger a rebuild");
+        assert!(built, "growth must extend the cache");
         assert_eq!(enc.n_sentences(), 3);
-        assert!(append_name(&cache, ".bak").exists(), "old cache preserved");
+        assert_eq!(enc.text_len(), 12);
+        assert!(
+            !append_name(&cache, ".bak").exists(),
+            "append must not leave a .bak (nothing was discarded)"
+        );
+        // The extended cache matches a from-scratch text read exactly.
+        let got = enc.reader().collect_sentences().unwrap();
+        let want = SentenceReader::open(&path, &vocab)
+            .unwrap()
+            .collect_sentences()
+            .unwrap();
+        assert_eq!(got, want);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&cache).ok();
+    }
+
+    #[test]
+    fn ensure_rebuilds_when_prefix_boundary_is_dirty() {
+        // Initial text ends WITHOUT a newline: the cached last sentence
+        // could grow, so growth must fall back to a full rebuild.
+        let path = write_tmp("dirty.txt", "a b\nb c");
+        let cache = append_name(&path, CACHE_SUFFIX);
+        let vocab = vocab_abc();
+        let (enc, _) = EncodedCorpus::ensure(&path, &vocab, &cache).unwrap();
+        assert_eq!(enc.n_sentences(), 2);
+        drop(enc);
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b" c\na a\n").unwrap();
+        drop(f);
+        let (enc, built) = EncodedCorpus::ensure(&path, &vocab, &cache).unwrap();
+        assert!(built);
+        assert_eq!(enc.n_sentences(), 3, "grown line re-read whole");
+        assert!(append_name(&cache, ".bak").exists(), "rebuild preserves old");
+        let got = enc.reader().collect_sentences().unwrap();
+        let want = SentenceReader::open(&path, &vocab)
+            .unwrap()
+            .collect_sentences()
+            .unwrap();
+        assert_eq!(got, want);
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&cache).ok();
         std::fs::remove_file(append_name(&cache, ".bak")).ok();
+    }
+
+    #[test]
+    fn append_across_vocab_generations_rewrites_fingerprint() {
+        let path = write_tmp("gen.txt", "a b c\n");
+        let cache = append_name(&path, CACHE_SUFFIX);
+        let mut vocab = vocab_abc();
+        EncodedCorpus::build(&path, &vocab, &cache).unwrap();
+        let old_fp = vocab.fingerprint();
+        // Admit a new word, then append a suffix that uses it.
+        vocab.observe("zz");
+        vocab.observe("zz");
+        vocab.admit("zz").unwrap();
+        assert_ne!(vocab.fingerprint(), old_fp);
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"zz a zz\n").unwrap();
+        drop(f);
+        let upto = std::fs::metadata(&path).unwrap().len();
+        let st = EncodedCorpus::append(&path, &vocab, &cache, old_fp, upto).unwrap();
+        assert_eq!(st.sentences, 1);
+        assert_eq!(st.tokens, 3);
+        // The extended cache validates under the NEW fingerprint...
+        let enc = EncodedCorpus::open(&cache, &vocab).unwrap();
+        assert_eq!(enc.n_sentences(), 2);
+        assert_eq!(enc.n_tokens(), 6);
+        let sents = enc.reader().collect_sentences().unwrap();
+        let zz = vocab.id("zz").unwrap();
+        let a = vocab.id("a").unwrap();
+        assert_eq!(sents[1], vec![zz, a, zz]);
+        // ...and a second append with the wrong expected fp is refused.
+        drop(enc);
+        let err =
+            EncodedCorpus::append(&path, &vocab, &cache, old_fp, upto).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&cache).ok();
+    }
+
+    #[test]
+    fn append_window_can_stop_before_file_end() {
+        // The stream driver only feeds complete-line prefixes: an append
+        // window ending before a trailing partial line must encode only
+        // the complete lines and record text_len = window end.
+        let path = write_tmp("win.txt", "a b\n");
+        let cache = append_name(&path, CACHE_SUFFIX);
+        let vocab = vocab_abc();
+        EncodedCorpus::build(&path, &vocab, &cache).unwrap();
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"c c\nb b").unwrap(); // "b b" is incomplete
+        drop(f);
+        let st = EncodedCorpus::append(&path, &vocab, &cache, vocab.fingerprint(), 8)
+            .unwrap();
+        assert_eq!(st.sentences, 1);
+        let enc = EncodedCorpus::open(&cache, &vocab).unwrap();
+        assert_eq!(enc.text_len(), 8);
+        assert_eq!(enc.n_sentences(), 2);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&cache).ok();
     }
 
     #[test]

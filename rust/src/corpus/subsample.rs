@@ -62,6 +62,22 @@ impl Subsampler {
             sentence.retain(|&id| rng.next_f32() < self.keep[id as usize]);
         }
     }
+
+    /// Extend the keep table for newly ADMITTED vocabulary ids (streaming):
+    /// every id in `old_len..new_len` gets keep probability 1.0.
+    ///
+    /// This is deliberately NOT what a cold rebuild would compute.  An
+    /// admitted word just crossed the admission threshold, so under any
+    /// realistic `sample` its exact keep probability rounds to 1.0 anyway
+    /// — and the frozen prefix keeps its original probabilities (a cold
+    /// rebuild would perturb ALL of them through the grown total `T`,
+    /// changing every already-trained word's subsampling mid-run).  The
+    /// divergence is documented in EXPERIMENTS.md §Streaming.
+    pub fn extend_for_admitted(&mut self, new_len: usize) {
+        while self.keep.len() < new_len {
+            self.keep.push(1.0);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -112,6 +128,23 @@ mod tests {
         let want = s.keep_prob(0) as f64;
         let got = kept as f64 / n as f64;
         assert!((got - want).abs() < 0.01, "got {got} want {want}");
+    }
+
+    #[test]
+    fn extend_for_admitted_keeps_prefix_and_appends_ones() {
+        let v = zipf_vocab(100);
+        let mut s = Subsampler::new(&v, 1e-4);
+        let prefix: Vec<f32> = (0..100u32).map(|i| s.keep_prob(i)).collect();
+        s.extend_for_admitted(103);
+        for (i, p) in prefix.iter().enumerate() {
+            assert_eq!(s.keep_prob(i as u32), *p, "prefix perturbed at {i}");
+        }
+        for i in 100..103u32 {
+            assert_eq!(s.keep_prob(i), 1.0);
+        }
+        // Idempotent / never shrinks.
+        s.extend_for_admitted(50);
+        assert_eq!(s.keep_prob(102), 1.0);
     }
 
     #[test]

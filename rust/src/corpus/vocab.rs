@@ -3,6 +3,19 @@
 //! descending so id 0 is the most frequent word.  Frequency-sorted ids are
 //! load-bearing downstream: the distributed sub-model synchroniser and the
 //! cache-conflict performance model both reason about "the top-k rows".
+//!
+//! STREAMING extension: a vocabulary may GROW after construction.  OOV
+//! tokens seen by the stream driver accumulate in a candidate buffer
+//! ([`Vocab::observe`]); once a candidate's count crosses the admission
+//! threshold it is [admitted](Vocab::admit) — appended at the next free
+//! id, never renumbering existing ids (which keeps every encoded cache,
+//! checkpoint and row store built so far valid).  Each admission bumps a
+//! `generation` counter that [`Vocab::fingerprint`] mixes in (only when
+//! non-zero, so frozen vocabularies keep their pre-streaming digests).
+//! The admitted tail is frequency-sorted only within itself — the global
+//! "id 0 is most frequent" invariant holds for the frozen prefix, and
+//! downstream top-k reasoning is unaffected because admitted words are
+//! rare by construction (they just crossed `min_count`).
 
 use std::collections::HashMap;
 use std::io::{BufRead, Write};
@@ -22,6 +35,13 @@ pub struct Vocab {
     /// asserts this stays flat while training from a cache (the cached
     /// path never hashes a token).  Release builds never touch it.
     lookups: AtomicU64,
+    /// OOV candidate buffer (streaming): word → count seen so far.
+    /// Empty for batch-built vocabularies.
+    candidates: HashMap<String, u64>,
+    /// Number of admissions performed on this vocabulary.  0 = frozen
+    /// batch vocabulary (and the fingerprint is then byte-identical to
+    /// the pre-streaming scheme).
+    generation: u64,
 }
 
 impl Clone for Vocab {
@@ -32,6 +52,8 @@ impl Clone for Vocab {
             index: self.index.clone(),
             total: self.total,
             lookups: AtomicU64::new(self.lookups.load(Ordering::Relaxed)),
+            candidates: self.candidates.clone(),
+            generation: self.generation,
         }
     }
 }
@@ -144,6 +166,105 @@ impl Vocab {
         self.counts[id as usize] as f64 / self.total.max(1) as f64
     }
 
+    // ---- streaming growth --------------------------------------------
+
+    /// Record one occurrence of an out-of-vocabulary token in the
+    /// candidate buffer, returning its accumulated count.  The stream
+    /// driver calls this for every OOV token in newly arrived bytes.
+    pub fn observe(&mut self, word: &str) -> u64 {
+        match self.candidates.get_mut(word) {
+            Some(c) => {
+                *c += 1;
+                *c
+            }
+            None => {
+                self.candidates.insert(word.to_string(), 1);
+                1
+            }
+        }
+    }
+
+    /// Candidates whose accumulated count has reached `threshold`,
+    /// sorted (count desc, then lexicographic — the same tie-break as
+    /// [`from_counts`](Self::from_counts)) so admission order is
+    /// deterministic.
+    pub fn admissible(&self, threshold: u64) -> Vec<(String, u64)> {
+        let mut due: Vec<(String, u64)> = self
+            .candidates
+            .iter()
+            .filter(|(_, c)| **c >= threshold.max(1))
+            .map(|(w, c)| (w.clone(), *c))
+            .collect();
+        due.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        due
+    }
+
+    /// Admit one candidate: append it at the next free id with its
+    /// buffered count, bump the generation, and drop it from the
+    /// candidate buffer.  Existing ids are never renumbered.  Returns
+    /// the new id, or `None` if the word is already in the vocabulary.
+    pub fn admit(&mut self, word: &str) -> Option<u32> {
+        if self.index.contains_key(word) {
+            self.candidates.remove(word);
+            return None;
+        }
+        let count = self.candidates.remove(word)?;
+        let id = self.words.len() as u32;
+        self.index.insert(word.to_string(), id);
+        self.words.push(word.to_string());
+        self.counts.push(count);
+        self.total += count;
+        self.generation += 1;
+        Some(id)
+    }
+
+    /// Number of admissions performed (0 = frozen batch vocabulary).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Pending (not yet admitted) candidate count.
+    pub fn candidate_len(&self) -> usize {
+        self.candidates.len()
+    }
+
+    /// Iterate the candidate buffer (checkpoint sidecar serialisation).
+    pub fn candidates(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.candidates.iter().map(|(w, c)| (w.as_str(), *c))
+    }
+
+    /// Restore one candidate-buffer entry (checkpoint resume).
+    pub fn restore_candidate(&mut self, word: &str, count: u64) {
+        self.candidates.insert(word.to_string(), count);
+    }
+
+    /// Rebuild a streamed (admission-extended) vocabulary from saved
+    /// state: the frozen prefix plus admitted tail in id order, and the
+    /// generation stamp.  Unlike [`load`](Self::load) this does NOT
+    /// enforce the global frequency-sort invariant — an admitted tail
+    /// legitimately breaks it — but it does require ids to be dense and
+    /// words unique.
+    pub fn from_saved_parts(
+        words: Vec<String>,
+        counts: Vec<u64>,
+        generation: u64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(words.len() == counts.len(), "words/counts length mismatch");
+        let mut v = Vocab::default();
+        for (w, c) in words.into_iter().zip(counts) {
+            anyhow::ensure!(
+                !v.index.contains_key(&w),
+                "duplicate word {w:?} in saved vocab"
+            );
+            v.index.insert(w.clone(), v.words.len() as u32);
+            v.words.push(w);
+            v.counts.push(c);
+            v.total += c;
+        }
+        v.generation = generation;
+        Ok(v)
+    }
+
     /// Order-sensitive 64-bit FNV-1a digest over the full (word, count)
     /// sequence.  The encoded corpus cache stores it in its header: a
     /// cache built under a different vocabulary (different corpus,
@@ -162,6 +283,12 @@ impl Vocab {
             // 0xFF never occurs in UTF-8: an unambiguous separator.
             mix(&mut h, &[0xFF]);
             mix(&mut h, &c.to_le_bytes());
+        }
+        // Generation stamp: mixed only when admissions have happened, so
+        // every pre-streaming digest (existing caches, checkpoints, row
+        // stores) is preserved byte-for-byte at generation 0.
+        if self.generation > 0 {
+            mix(&mut h, &self.generation.to_le_bytes());
         }
         h
     }
@@ -305,5 +432,94 @@ mod tests {
         let v = sample();
         let s: f64 = (0..v.len() as u32).map(|i| v.freq(i)).sum();
         assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn observe_admit_appends_without_renumbering() {
+        let mut v = sample();
+        let frozen: Vec<String> =
+            (0..v.len() as u32).map(|i| v.word(i).to_string()).collect();
+        let before_total = v.total_words();
+        assert_eq!(v.generation(), 0);
+        for _ in 0..3 {
+            v.observe("zebra");
+        }
+        v.observe("yak");
+        assert_eq!(v.candidate_len(), 2);
+        // Only zebra crossed threshold 3.
+        let due = v.admissible(3);
+        assert_eq!(due, vec![("zebra".to_string(), 3)]);
+        let id = v.admit("zebra").unwrap();
+        assert_eq!(id as usize, frozen.len());
+        assert_eq!(v.generation(), 1);
+        assert_eq!(v.count(id), 3);
+        assert_eq!(v.total_words(), before_total + 3);
+        assert_eq!(v.candidate_len(), 1); // yak still pending
+        for (i, w) in frozen.iter().enumerate() {
+            assert_eq!(v.word(i as u32), w, "frozen prefix id moved");
+        }
+        // Re-admitting (or admitting a known word) is a no-op.
+        assert!(v.admit("zebra").is_none());
+        assert!(v.admit("the").is_none());
+        assert_eq!(v.generation(), 1);
+    }
+
+    #[test]
+    fn admissible_orders_deterministically() {
+        let mut v = sample();
+        for _ in 0..2 {
+            v.observe("bb");
+        }
+        for _ in 0..2 {
+            v.observe("aa");
+        }
+        for _ in 0..5 {
+            v.observe("cc");
+        }
+        let due = v.admissible(2);
+        let names: Vec<&str> = due.iter().map(|(w, _)| w.as_str()).collect();
+        assert_eq!(names, ["cc", "aa", "bb"], "count desc, then lexicographic");
+    }
+
+    #[test]
+    fn generation_stamps_fingerprint_only_after_admission() {
+        let mut v = sample();
+        let frozen_fp = v.fingerprint();
+        v.observe("zebra"); // candidates alone do not move the digest
+        assert_eq!(v.fingerprint(), frozen_fp);
+        v.observe("zebra");
+        v.admit("zebra").unwrap();
+        let g1 = v.fingerprint();
+        assert_ne!(g1, frozen_fp);
+        // Same words/counts at a DIFFERENT generation → different digest
+        // (a resumed store must match the exact admission history).
+        let same_words: Vec<String> =
+            (0..v.len() as u32).map(|i| v.word(i).to_string()).collect();
+        let same_counts = v.counts().to_vec();
+        let rebuilt =
+            Vocab::from_saved_parts(same_words.clone(), same_counts.clone(), 1).unwrap();
+        assert_eq!(rebuilt.fingerprint(), g1);
+        let wrong_gen = Vocab::from_saved_parts(same_words, same_counts, 2).unwrap();
+        assert_ne!(wrong_gen.fingerprint(), g1);
+    }
+
+    #[test]
+    fn from_saved_parts_accepts_admitted_tail_and_rejects_dupes() {
+        // An admitted tail breaks the global sort (count 9 after count 1)
+        // — from_saved_parts accepts it, load() would not.
+        let v = Vocab::from_saved_parts(
+            vec!["a".into(), "b".into(), "late".into()],
+            vec![5, 1, 9],
+            1,
+        )
+        .unwrap();
+        assert_eq!(v.id("late"), Some(2));
+        assert_eq!(v.total_words(), 15);
+        assert!(Vocab::from_saved_parts(
+            vec!["a".into(), "a".into()],
+            vec![2, 1],
+            0
+        )
+        .is_err());
     }
 }

@@ -24,6 +24,7 @@
 //! mapping every table/figure of the paper to a bench target.
 
 pub mod bench;
+pub mod cli;
 pub mod config;
 pub mod corpus;
 pub mod dist;
@@ -35,7 +36,40 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod sampling;
 pub mod serve;
+pub mod stream;
 pub mod train;
 pub mod util;
 
+// ---------------------------------------------------------------------
+// Curated facade: the stable public surface.  Examples, integration
+// tests and downstream users should reach for these re-exports; the
+// module paths above remain public for the adventurous but may be
+// reorganised between versions.
+// ---------------------------------------------------------------------
+
+/// All training hyperparameters and execution knobs (`TrainConfig::default`
+/// matches the paper's shared-memory setup; `apply_args` layers CLI flags).
 pub use config::TrainConfig;
+
+/// The `.pw2v.u32` encoded-corpus cache: tokenized sentences as ids,
+/// built once, mmap-shared by every worker (`EncodedCorpus::ensure`
+/// reuses / appends / rebuilds as the source file evolves).
+pub use corpus::encoded::EncodedCorpus;
+
+/// Frequency-sorted vocabulary with streaming admission support.
+pub use corpus::vocab::Vocab;
+
+/// The shared Hogwild model store (two embedding matrices, racy rows).
+pub use model::SharedModel;
+
+/// Serve-side: mmap-able unit-row store and the query engine behind the
+/// `serve` subcommand.
+pub use serve::{RowStore, ServeEngine};
+
+/// Streaming ingest: tail a growing corpus and train continuously
+/// (the `stream` subcommand).
+pub use stream::{StreamOptions, StreamOutcome, StreamTrainer};
+
+/// Batch trainer entry point: `train(&cfg, &corpus_path)` runs the full
+/// vocabulary → superbatch → backend pipeline and returns the model.
+pub use train::{train, TrainOutcome};

@@ -1,472 +1,13 @@
-//! `pw2v` — the command-line launcher.
+//! `pw2v` — thin binary shim over the library CLI ([`pw2v::cli`]).
 //!
-//! Subcommands:
-//!   gen-corpus   generate a synthetic latent-model corpus + test sets
-//!   train        shared-memory training (backend selectable)
-//!   train-dist   distributed data-parallel training (replica threads)
-//!   eval         evaluate saved vectors on similarity/analogy sets
-//!   serve        answer topk/analogy queries over a trained model
-//!   simulate     regenerate the paper's Fig 3 / Fig 4 scaling curves
-//!   info         runtime + artifact diagnostics
-
-use std::path::PathBuf;
-
-use pw2v::config::TrainConfig;
-use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
-use pw2v::corpus::vocab::Vocab;
-use pw2v::dist::{
-    train_distributed, train_tcp_ring, CheckpointPolicy, DistConfig, FaultSpec, NetConfig,
-    OnFailure, RingSpec, SyncPolicy,
-};
-use pw2v::eval;
-use pw2v::model::{io as model_io, SharedModel};
-use pw2v::perfmodel::{self, simulate};
-use pw2v::train;
-use pw2v::util::args::Args;
-use pw2v::util::si;
+//! All subcommand parsing, help text and handlers live in `src/cli/`
+//! so the command surface is unit-testable; `tests/cli_compat.rs` pins
+//! the end-to-end contract (subcommand names, the bare-corpus alias,
+//! per-subcommand `--help`) over this binary.
 
 fn main() {
-    if let Err(e) = run() {
+    if let Err(e) = pw2v::cli::run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
-}
-
-fn run() -> anyhow::Result<()> {
-    let cmd = std::env::args().nth(1).unwrap_or_default();
-    let args = Args::from_env_tail(2);
-    match cmd.as_str() {
-        "gen-corpus" => gen_corpus(&args),
-        "train" => cmd_train(&args),
-        "train-dist" => cmd_train_dist(&args),
-        "eval" => cmd_eval(&args),
-        "serve" => cmd_serve(&args),
-        "simulate" => cmd_simulate(&args),
-        "info" => cmd_info(&args),
-        "" | "help" | "--help" => {
-            print!("{HELP}");
-            Ok(())
-        }
-        other => anyhow::bail!("unknown subcommand '{other}' (try `pw2v help`)"),
-    }
-}
-
-const HELP: &str = "\
-pw2v — Parallelizing Word2Vec in Shared and Distributed Memory (Ji et al. 2016)
-
-USAGE: pw2v <subcommand> [--key value ...]
-
-  gen-corpus  --out corpus.txt [--tokens N --vocab V --seed S]
-              [--simset sim.tsv --anaset ana.txt]
-  train       --corpus corpus.txt --out vectors.txt
-              [--backend scalar|bidmach|gemm|pjrt --threads T --dim D
-               --simd auto|avx2|scalar --kernel auto|fused|gemm3
-               --sigmoid exact|table --corpus-cache off|auto|PATH
-               --numa off|auto|NODES --route off|owner|head=K ...]
-              (--corpus-cache auto encodes <corpus>.pw2v.u32 once and
-               trains from the u32 cache: no per-epoch re-tokenization;
-               --numa auto shards M_in/M_out across NUMA nodes and pins
-               workers so Hogwild scatters stay socket-local;
-               --route owner additionally steers each hot-target window
-               to the worker on the target row's home node — bounded
-               mailboxes, local fallback under backpressure)
-  train-dist  --corpus corpus.txt --nodes N [--sync-interval W --policy sub|full]
-              [--numa off|auto|NODES --route off|owner|head=K
-               --out vectors.txt]
-              [--dist threads|tcp:RANK@ADDR0,ADDR1,...]
-              [--checkpoint BASE --checkpoint-every ROUNDS --resume]
-              [--net-timeout-ms MS --heartbeat-ms MS --connect-timeout-ms MS]
-              [--on-failure abort|shrink|rejoin --rejoin-grace-ms MS]
-              (--numa auto pins each replica to a NUMA node and
-               first-touches it there — one replica per socket keeps
-               training traffic node-local; --route is accepted for
-               config parity but is a no-op here: each replica is one
-               worker, so every window already processes on its home
-               node.
-               --dist tcp:... runs THIS process as one rank of a TCP
-               ring — launch one process per address, each with its own
-               rank; --nodes is implied by the address list.  Full-sync
-               rings are bitwise-identical to thread mode.  --checkpoint
-               writes two-slot crash-consistent snapshots at BASE.rankK.{a,b}
-               every ROUNDS sync rounds; --resume continues from the
-               newest round every rank can load.
-               --on-failure shrink (needs --checkpoint) self-heals on a
-               peer failure: survivors regroup at a new membership
-               epoch, roll back to the newest checkpoint round all of
-               them hold, re-shard over the smaller ring and continue;
-               rejoin additionally holds the regroup open for
-               --rejoin-grace-ms so a promptly respawned rank is
-               re-admitted; abort (default) fails the whole run fast.
-               Frame deadlines adapt to measured round time (EWMA);
-               --net-timeout-ms is the floor.  PW2V_FAULT injects
-               deterministic faults (kill-after=N | torn-frame=N |
-               stall-after=N | panic-replica=I | kill-epoch=E |
-               wedge-regroup=E | respawn-after=MS) for the fault suite)
-  eval        --vectors vectors.txt [--simset sim.tsv] [--anaset ana.txt]
-  serve       --vectors vectors.txt | --store model.rst
-              [--save-store model.rst --quant off|int8
-               --simd auto|avx2|scalar --listen HOST:PORT]
-              (line-delimited JSON over stdin/stdout, or TCP with
-               --listen.  Requests: {\"op\":\"topk\",\"word\":W,\"k\":K} and
-               {\"op\":\"analogy\",\"a\":A,\"b\":B,\"c\":C,\"k\":K}; one JSON
-               response per line.  --save-store writes the mmap-able
-               binary row store (then serves from it); --store opens
-               one directly — O(header+vocab) startup, no float
-               parsing.  --quant int8 scans per-row symmetric int8
-               codes: ~4x less scan bandwidth, recall gated in CI)
-  simulate    --figure 3|4 [--machine bdw|knl|hsw]
-  info        [--artifacts-dir artifacts]
-";
-
-fn gen_corpus(a: &Args) -> anyhow::Result<()> {
-    let out: String = a.required("out")?;
-    let mut scfg = SyntheticConfig::default();
-    scfg.tokens = a.get("tokens", scfg.tokens)?;
-    scfg.vocab = a.get("vocab", scfg.vocab)?;
-    scfg.clusters = a.get("clusters", scfg.clusters)?;
-    scfg.seed = a.get("seed", scfg.seed)?;
-    let simset: Option<String> = a.opt("simset")?;
-    let anaset: Option<String> = a.opt("anaset")?;
-    a.check_unknown()?;
-
-    eprintln!(
-        "generating {} tokens, vocab {}, {} clusters ...",
-        scfg.tokens, scfg.vocab, scfg.clusters
-    );
-    let lm = LatentModel::new(scfg);
-    let n = lm.write_corpus(&out)?;
-    eprintln!("wrote {n} tokens to {out}");
-    if let Some(p) = simset {
-        let set = eval::gen_similarity_set(&lm, 350, 7);
-        eval::datasets::save_similarity_set(&p, &set)?;
-        eprintln!("wrote {} similarity pairs to {p}", set.len());
-    }
-    if let Some(p) = anaset {
-        let set = eval::gen_analogy_set(&lm);
-        eval::datasets::save_analogy_set(&p, &set)?;
-        eprintln!("wrote {} analogy questions to {p}", set.len());
-    }
-    Ok(())
-}
-
-fn cmd_train(a: &Args) -> anyhow::Result<()> {
-    let corpus = PathBuf::from(a.required::<String>("corpus")?);
-    let out: Option<String> = a.opt("out")?;
-    let mut cfg = TrainConfig::default();
-    if let Some(f) = a.opt::<String>("config")? {
-        cfg.load_file(f)?;
-    }
-    cfg.apply_args(a)?;
-    a.check_unknown()?;
-
-    eprintln!("building vocabulary ...");
-    let vocab = Vocab::build_from_file(&corpus, cfg.min_count)?;
-    eprintln!(
-        "vocab {} words, corpus {} tokens",
-        vocab.len(),
-        vocab.total_words()
-    );
-    let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
-    eprintln!(
-        "training: backend={} threads={} dim={} epochs={} simd={} kernel={} \
-         sigmoid={} corpus-cache={} numa={} route={}",
-        cfg.backend,
-        cfg.threads,
-        cfg.dim,
-        cfg.epochs,
-        cfg.simd,
-        cfg.kernel,
-        cfg.sigmoid_mode,
-        cfg.corpus_cache,
-        cfg.numa,
-        cfg.route
-    );
-    let outcome = train::train(&cfg, &corpus, &vocab, &model)?;
-    let snap = outcome.snapshot;
-    eprintln!(
-        "done: {} words in {:.1}s = {} words/sec ({} windows, {} calls)",
-        snap.words,
-        snap.secs,
-        si(snap.words_per_sec()),
-        snap.windows,
-        snap.calls
-    );
-    if let Some(p) = out {
-        model_io::save_text(&p, &vocab, model.m_in())?;
-        eprintln!("vectors saved to {p}");
-    }
-    Ok(())
-}
-
-fn cmd_train_dist(a: &Args) -> anyhow::Result<()> {
-    let corpus = PathBuf::from(a.required::<String>("corpus")?);
-    let out: Option<String> = a.opt("out")?;
-    let mut cfg = TrainConfig::default();
-    cfg.apply_args(a)?;
-
-    // Transport: in-process replica threads (default) or one rank of a
-    // multi-process TCP ring.
-    let transport: String = a.get("dist", "threads".to_string())?;
-    let ring = match transport.as_str() {
-        "threads" => None,
-        spec if spec.starts_with("tcp:") => Some(RingSpec::parse(spec)?),
-        other => anyhow::bail!("unknown transport '{other}' (threads|tcp:RANK@ADDRS)"),
-    };
-    let nodes: usize = match &ring {
-        Some(r) => {
-            anyhow::ensure!(
-                a.opt::<usize>("nodes")?.map_or(true, |n| n == r.nranks()),
-                "--nodes disagrees with the tcp ring's address count"
-            );
-            r.nranks()
-        }
-        None => a.get("nodes", 2)?,
-    };
-
-    let mut dist = DistConfig::for_nodes(nodes);
-    dist.sync_interval = a.get("sync-interval", dist.sync_interval)?;
-    match a.opt::<String>("policy")?.as_deref() {
-        Some("full") => dist.policy = SyncPolicy::Full,
-        Some("sub") | None => {}
-        Some(p) => anyhow::bail!("unknown policy '{p}' (sub|full)"),
-    }
-    if a.flag("no-lr-scaling") {
-        dist.scale_lr = false;
-    }
-    if let Some(p) = a.opt::<String>("on-failure")? {
-        dist.on_failure = p.parse::<OnFailure>()?;
-        anyhow::ensure!(
-            ring.is_some() || dist.on_failure == OnFailure::Abort,
-            "--on-failure shrink/rejoin needs the tcp transport \
-             (thread mode always fails fast)"
-        );
-    }
-    // Thread-mode fault injection (TCP wire faults are read from the
-    // environment by the transport itself).
-    dist.fault = FaultSpec::from_env()
-        .map_err(|e| anyhow::anyhow!("PW2V_FAULT: {e:#}"))?;
-
-    let defaults = NetConfig::default();
-    let net = NetConfig {
-        connect_timeout_ms: a.get("connect-timeout-ms", defaults.connect_timeout_ms)?,
-        io_timeout_ms: a.get("net-timeout-ms", defaults.io_timeout_ms)?,
-        heartbeat_ms: a.get("heartbeat-ms", defaults.heartbeat_ms)?,
-        rejoin_grace_ms: a.get("rejoin-grace-ms", defaults.rejoin_grace_ms)?,
-    };
-    let ckpt = CheckpointPolicy {
-        base: a.opt::<String>("checkpoint")?.map(PathBuf::from),
-        every: a.get("checkpoint-every", 8u64)?,
-        resume: a.flag("resume"),
-    };
-    a.check_unknown()?;
-
-    let vocab = Vocab::build_from_file(&corpus, cfg.min_count)?;
-    let outcome = match &ring {
-        None => {
-            eprintln!(
-                "distributed training: {} replica threads, sync every {} words, \
-                 vocab {}, numa={} route={}",
-                nodes,
-                dist.sync_interval,
-                vocab.len(),
-                cfg.numa,
-                cfg.route
-            );
-            train_distributed(&cfg, &dist, &corpus, &vocab)?
-        }
-        Some(spec) => {
-            eprintln!(
-                "distributed training: rank {}/{} on tcp ring, sync every {} \
-                 words, vocab {}, checkpoint={}, on-failure={:?}",
-                spec.rank,
-                nodes,
-                dist.sync_interval,
-                vocab.len(),
-                ckpt.base
-                    .as_deref()
-                    .map(|p| p.display().to_string())
-                    .unwrap_or_else(|| "off".into()),
-                dist.on_failure,
-            );
-            train_tcp_ring(&cfg, &dist, spec, &net, &ckpt, &corpus, &vocab)?
-        }
-    };
-    eprintln!(
-        "done: {} words in {:.1}s = {} words/sec aggregate",
-        outcome.words,
-        outcome.secs,
-        si(outcome.words as f64 / outcome.secs.max(1e-9))
-    );
-    for (i, st) in outcome.sync_stats.iter().enumerate() {
-        eprintln!(
-            "  node {i}: {} rounds, {} rows synced, {} wire bytes",
-            st.rounds,
-            st.rows_synced,
-            si(st.wire_bytes as f64)
-        );
-    }
-    if let Some(n) = &outcome.net {
-        eprintln!(
-            "  ring: {} frames / {} bytes sent ({} slice bytes), \
-             {} frames / {} bytes recv, {} heartbeats",
-            n.frames_sent,
-            si(n.bytes_sent as f64),
-            si(n.slice_bytes_sent as f64),
-            n.frames_recv,
-            si(n.bytes_recv as f64),
-            n.heartbeats_sent
-        );
-    }
-    if let Some(p) = out {
-        model_io::save_text(&p, &vocab, outcome.model.m_in())?;
-        eprintln!("vectors saved to {p}");
-    }
-    Ok(())
-}
-
-fn cmd_eval(a: &Args) -> anyhow::Result<()> {
-    let vectors: String = a.required("vectors")?;
-    let simset: Option<String> = a.opt("simset")?;
-    let anaset: Option<String> = a.opt("anaset")?;
-    a.check_unknown()?;
-
-    let (words, emb) = model_io::load_text(&vectors)?;
-    // Rebuild a vocab view over the saved order (ranks become counts so
-    // the frequency-sorted invariant holds).
-    let n = words.len();
-    let counts: std::collections::HashMap<String, u64> = words
-        .iter()
-        .enumerate()
-        .map(|(i, w)| (w.clone(), (n - i) as u64))
-        .collect();
-    let vocab = Vocab::from_counts(counts, 1);
-    eprintln!("loaded {} vectors of dim {}", n, emb.dim());
-
-    if let Some(p) = simset {
-        let pairs = eval::load_similarity_set(&p)?;
-        let r = eval::eval_similarity(&pairs, &vocab, &emb);
-        println!(
-            "similarity: rho100 = {:.1} over {}/{} pairs",
-            r.rho100, r.pairs_covered, r.pairs_total
-        );
-    }
-    if let Some(p) = anaset {
-        let qs = eval::load_analogy_set(&p)?;
-        let r = eval::eval_analogy(&qs, &vocab, &emb);
-        println!(
-            "analogy: accuracy = {:.1}% over {}/{} questions",
-            r.accuracy100(),
-            r.covered,
-            r.total
-        );
-    }
-    Ok(())
-}
-
-fn cmd_serve(a: &Args) -> anyhow::Result<()> {
-    use pw2v::config::QuantMode;
-    use pw2v::linalg::simd::{self, SimdMode};
-    use pw2v::serve::{run_listen, run_stdio, RowStore, ServeEngine};
-
-    let vectors: Option<String> = a.opt("vectors")?;
-    let store_path: Option<String> = a.opt("store")?;
-    let save_store: Option<String> = a.opt("save-store")?;
-    let quant: QuantMode = a.get("quant", QuantMode::default())?;
-    let simd_mode: SimdMode = a.get("simd", SimdMode::default())?;
-    let listen: Option<String> = a.opt("listen")?;
-    a.check_unknown()?;
-
-    let level = simd::configure(simd_mode)?;
-    let store = match (vectors, store_path) {
-        (Some(v), None) => {
-            let (words, emb) = model_io::load_text(&v)?;
-            let st = RowStore::from_model(words, &emb)?;
-            eprintln!("serve: loaded {} vectors of dim {} from {v}", st.n_rows(), st.dim());
-            st
-        }
-        (None, Some(p)) => {
-            let st = RowStore::open(std::path::Path::new(&p))?;
-            eprintln!("serve: opened row store {p} ({} rows, dim {})", st.n_rows(), st.dim());
-            st
-        }
-        _ => anyhow::bail!("serve needs exactly one of --vectors or --store"),
-    };
-    if let Some(p) = save_store {
-        store.save(std::path::Path::new(&p))?;
-        eprintln!("serve: row store saved to {p}");
-    }
-    let eng = ServeEngine::from_store(store, quant);
-    eprintln!("serve: simd={level:?} quant={quant}");
-    match listen {
-        Some(addr) => run_listen(&eng, &addr),
-        None => run_stdio(&eng),
-    }
-}
-
-fn cmd_simulate(a: &Args) -> anyhow::Result<()> {
-    let figure: usize = a.get("figure", 3)?;
-    let machine: String = a.get("machine", "bdw".to_string())?;
-    a.check_unknown()?;
-    let spec = match machine.as_str() {
-        "bdw" => perfmodel::arch::broadwell(),
-        "knl" => perfmodel::arch::knl(),
-        "hsw" => perfmodel::arch::haswell(),
-        m => anyhow::bail!("unknown machine '{m}' (bdw|knl|hsw)"),
-    };
-    let p = simulate::FigParams::default();
-    match figure {
-        3 => {
-            let axis = simulate::fig3_thread_axis(&spec);
-            let (scalar, gemm) =
-                simulate::fig3_series(&spec, &p, 70_000.0, 182_000.0, &axis);
-            println!("# Fig 3 ({}): threads original ours", spec.name);
-            for (s, g) in scalar.iter().zip(&gemm) {
-                println!(
-                    "{:>3}  {:>10}  {:>10}",
-                    s.x,
-                    si(s.words_per_sec),
-                    si(g.words_per_sec)
-                );
-            }
-        }
-        4 => {
-            let fabric = if machine == "knl" {
-                perfmodel::arch::omnipath()
-            } else {
-                perfmodel::arch::fdr_infiniband()
-            };
-            let nodes = [1, 2, 4, 8, 16, 32];
-            let series =
-                simulate::fig4_series(&spec, fabric, &p, 182_000.0, &nodes);
-            println!("# Fig 4 ({} cluster): nodes words/sec", spec.name);
-            for pt in series {
-                println!("{:>3}  {:>10}", pt.x, si(pt.words_per_sec));
-            }
-        }
-        f => anyhow::bail!("unknown figure {f} (3|4)"),
-    }
-    Ok(())
-}
-
-fn cmd_info(a: &Args) -> anyhow::Result<()> {
-    let dir: String = a.get("artifacts-dir", "artifacts".to_string())?;
-    a.check_unknown()?;
-    println!("pw2v {}", env!("CARGO_PKG_VERSION"));
-    match pw2v::runtime::Runtime::cpu() {
-        Ok(rt) => println!("pjrt platform: {}", rt.platform()),
-        Err(e) => println!("pjrt unavailable: {e}"),
-    }
-    match pw2v::runtime::Manifest::load(&dir) {
-        Ok(m) => {
-            println!("artifacts ({dir}):");
-            for v in &m.entries {
-                println!(
-                    "  {:<28} kind={:<6} W={} B={} S={} D={}",
-                    v.name, v.kind, v.w, v.b, v.s, v.d
-                );
-            }
-        }
-        Err(e) => println!("artifacts: {e}"),
-    }
-    Ok(())
 }

@@ -18,6 +18,8 @@ pub struct Counters {
     pub syncs: AtomicU64,
     /// Bytes sent over the (simulated or real) transport.
     pub bytes_sent: AtomicU64,
+    /// Vocabulary admissions performed (streaming ingest).
+    pub admissions: AtomicU64,
     start: Instant,
 }
 
@@ -35,6 +37,7 @@ impl Counters {
             calls: AtomicU64::new(0),
             syncs: AtomicU64::new(0),
             bytes_sent: AtomicU64::new(0),
+            admissions: AtomicU64::new(0),
             start: Instant::now(),
         }
     }
@@ -64,6 +67,11 @@ impl Counters {
         self.bytes_sent.fetch_add(n, Ordering::Relaxed);
     }
 
+    #[inline]
+    pub fn add_admissions(&self, n: u64) {
+        self.admissions.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn words_now(&self) -> u64 {
         self.words.load(Ordering::Relaxed)
     }
@@ -90,6 +98,7 @@ impl Counters {
             calls: self.calls.load(Ordering::Relaxed),
             syncs: self.syncs.load(Ordering::Relaxed),
             bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            admissions: self.admissions.load(Ordering::Relaxed),
             secs: self.elapsed_secs(),
         }
     }
@@ -102,6 +111,7 @@ pub struct Snapshot {
     pub calls: u64,
     pub syncs: u64,
     pub bytes_sent: u64,
+    pub admissions: u64,
     pub secs: f64,
 }
 

@@ -237,6 +237,22 @@ impl SharedModel {
         )
     }
 
+    /// Init with `reserve` pre-allocated rows past the live vocabulary
+    /// (streaming ingest, `--vocab-reserve`).  Because `uniform_init`
+    /// draws ONE sequential RNG stream over rows, the first `vocab` rows
+    /// are bitwise identical to `init(vocab, dim, seed)` — reserving
+    /// rows never perturbs the live model, and an admitted word's row
+    /// already carries exactly the init it would have had in a batch run
+    /// over a vocabulary that included it at that id.
+    pub fn init_with_reserve(
+        vocab: usize,
+        reserve: usize,
+        dim: usize,
+        seed: u64,
+    ) -> Self {
+        Self::init(vocab + reserve, dim, seed)
+    }
+
     pub fn vocab(&self) -> usize {
         self.m_in.vocab()
     }
@@ -527,6 +543,19 @@ mod tests {
         // M_out starts zero, M_in doesn't.
         assert!(m.m_out().data().iter().all(|&x| x == 0.0));
         assert!(m.m_in().data().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn reserve_rows_leave_live_prefix_bitwise_stable() {
+        let plain = SharedModel::init(40, 16, 11);
+        let reserved = SharedModel::init_with_reserve(40, 24, 16, 11);
+        assert_eq!(reserved.vocab(), 64);
+        for w in 0..40u32 {
+            assert_eq!(plain.m_in().row(w), reserved.m_in().row(w), "row {w}");
+        }
+        // Reserved rows are real initialised rows, not zeros.
+        assert!(reserved.m_in().row(63).iter().any(|&x| x != 0.0));
+        assert!(reserved.m_out().data().iter().all(|&x| x == 0.0));
     }
 
     #[test]

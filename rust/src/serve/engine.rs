@@ -78,6 +78,19 @@ impl ServeEngine {
         &self.store
     }
 
+    /// Replace the row store in place (hot-swap to a newer export
+    /// without dropping the connection).  The int8 shadow copy is
+    /// rebuilt iff the engine was quantized, so the scan mode the
+    /// operator chose survives the swap.
+    pub fn swap_store(&mut self, store: RowStore) {
+        let quant = self
+            .quant
+            .as_ref()
+            .map(|_| QuantStore::build(store.rows(), store.dim()));
+        self.store = store;
+        self.quant = quant;
+    }
+
     /// Is the int8 scan active?
     pub fn quantized(&self) -> bool {
         self.quant.is_some()
@@ -195,6 +208,17 @@ impl ServeEngine {
                 let _ = write_json_str(&mut s.out, &s.req.c);
                 let _ = write!(s.out, ",\"k\":{k},");
                 self.write_hits(s);
+            }
+            Op::Stats => {
+                let _ = write!(
+                    s.out,
+                    "{{\"ok\":true,\"op\":\"stats\",\"vocab\":{},\"dim\":{},\
+                     \"quant\":\"{}\",\"generation\":{}",
+                    self.store.n_rows(),
+                    self.store.dim(),
+                    if self.quant.is_some() { "int8" } else { "off" },
+                    self.store.generation()
+                );
             }
         }
         s.out.push('}');
@@ -410,6 +434,47 @@ mod tests {
         // Hostile bytes still get a JSON answer, never a panic.
         eng.handle_line(&[0xFF, 0xFE, b'{'], &mut s);
         assert!(Json::parse(&s.out).is_ok());
+    }
+
+    #[test]
+    fn stats_reports_shape_quant_and_generation() {
+        let (words, emb) = planted_model();
+        let mut store = RowStore::from_model(words, &emb).unwrap();
+        store.set_generation(9);
+        let eng = ServeEngine::from_store(store, QuantMode::Int8);
+        let mut s = Scratch::default();
+        eng.handle_line(br#"{"op":"stats"}"#, &mut s);
+        let j = Json::parse(&s.out).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("op").unwrap().as_str(), Some("stats"));
+        assert_eq!(j.get("vocab").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("dim").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("quant").unwrap().as_str(), Some("int8"));
+        assert_eq!(j.get("generation").unwrap().as_usize(), Some(9));
+    }
+
+    #[test]
+    fn swap_store_serves_new_rows_and_keeps_quant_mode() {
+        let eng_plain = engine_with(QuantMode::Off);
+        assert!(!eng_plain.quantized());
+        let mut eng = engine_with(QuantMode::Int8);
+        // Swap in a 2-word store with a bumped generation.
+        let words: Vec<String> = ["late", "word"].iter().map(|s| s.to_string()).collect();
+        let mut emb = Embedding::zeros(2, 3);
+        emb.row_mut(0).copy_from_slice(&[1.0, 0.0, 0.0]);
+        emb.row_mut(1).copy_from_slice(&[0.8, 0.6, 0.0]);
+        let mut st = RowStore::from_model(words, &emb).unwrap();
+        st.set_generation(3);
+        eng.swap_store(st);
+        assert!(eng.quantized(), "quant mode survives the swap");
+        let mut s = Scratch::default();
+        eng.handle_line(br#"{"op":"topk","word":"late","k":1}"#, &mut s);
+        let j = Json::parse(&s.out).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        eng.handle_line(br#"{"op":"stats"}"#, &mut s);
+        let j = Json::parse(&s.out).unwrap();
+        assert_eq!(j.get("vocab").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("generation").unwrap().as_usize(), Some(3));
     }
 
     #[test]

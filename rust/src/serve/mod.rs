@@ -29,23 +29,80 @@ pub use store::RowStore;
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::time::SystemTime;
+
+/// Polls a row-store file for replacement by a newer export (the
+/// `stream` trainer rewrites it atomically at every checkpoint) so a
+/// long-lived server hot-swaps without dropping its connection.
+///
+/// Change detection is (mtime, length); the check runs between request
+/// lines, so an idle connection costs nothing and a busy one pays one
+/// `stat(2)` per request.
+pub struct StoreWatcher {
+    path: PathBuf,
+    seen: Option<(SystemTime, u64)>,
+}
+
+impl StoreWatcher {
+    /// Watch `path`; the file as it exists NOW counts as already
+    /// served (the caller just loaded it).
+    pub fn new(path: &Path) -> Self {
+        Self {
+            seen: Self::stat(path),
+            path: path.to_path_buf(),
+        }
+    }
+
+    fn stat(path: &Path) -> Option<(SystemTime, u64)> {
+        let m = std::fs::metadata(path).ok()?;
+        Some((m.modified().ok()?, m.len()))
+    }
+
+    /// Reload when the file changed since the last look.  An unreadable
+    /// or invalid file is logged and skipped — the exporter writes via
+    /// atomic rename, so this only fires on genuine corruption, and the
+    /// current store keeps serving.
+    pub fn poll(&mut self) -> Option<RowStore> {
+        let now = Self::stat(&self.path)?;
+        if self.seen == Some(now) {
+            return None;
+        }
+        // Mark seen even on failure: retrying the same bad bytes every
+        // request line would only spam the log.
+        self.seen = Some(now);
+        match RowStore::open(&self.path) {
+            Ok(st) => Some(st),
+            Err(e) => {
+                eprintln!("serve: watch {}: {e:#}; keeping current store", self.path.display());
+                None
+            }
+        }
+    }
+}
 
 /// Serve requests from `stdin`, one JSON object per line, writing one
-/// JSON response line each.  Returns at EOF.
-pub fn run_stdio(eng: &ServeEngine) -> anyhow::Result<()> {
+/// JSON response line each.  Returns at EOF.  With a watcher, the
+/// store hot-swaps between request lines.
+pub fn run_stdio(eng: &mut ServeEngine, watcher: Option<&mut StoreWatcher>) -> anyhow::Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     let mut r = stdin.lock();
     let mut w = BufWriter::new(stdout.lock());
-    serve_stream(eng, &mut r, &mut w)
+    serve_stream(eng, watcher, &mut r, &mut w)
 }
 
 /// Accept TCP connections on `addr` and serve each to completion,
 /// sequentially (the scan is memory-bandwidth-bound; interleaving
 /// clients would only thrash the row cache).  A per-connection error
 /// is logged and the accept loop continues; only accept failures and
-/// bind failures abort.
-pub fn run_listen(eng: &ServeEngine, addr: &str) -> anyhow::Result<()> {
+/// bind failures abort.  With a watcher, the store hot-swaps between
+/// request lines — mid-connection included.
+pub fn run_listen(
+    eng: &mut ServeEngine,
+    addr: &str,
+    mut watcher: Option<&mut StoreWatcher>,
+) -> anyhow::Result<()> {
     let listener = TcpListener::bind(addr)
         .map_err(|e| anyhow::anyhow!("serve: cannot listen on {addr}: {e}"))?;
     eprintln!(
@@ -59,7 +116,7 @@ pub fn run_listen(eng: &ServeEngine, addr: &str) -> anyhow::Result<()> {
         sock.set_nodelay(true).ok();
         let mut r = BufReader::new(sock.try_clone()?);
         let mut w = BufWriter::new(sock);
-        if let Err(e) = serve_stream(eng, &mut r, &mut w) {
+        if let Err(e) = serve_stream(eng, watcher.as_deref_mut(), &mut r, &mut w) {
             eprintln!("serve: connection {peer}: {e}");
         }
     }
@@ -68,8 +125,10 @@ pub fn run_listen(eng: &ServeEngine, addr: &str) -> anyhow::Result<()> {
 /// The shared request/response loop: `read_until(b'\n')` into the
 /// scratch line buffer, answer, write + flush.  Flushing per line keeps
 /// a pipelined client from deadlocking against a buffered response.
+/// The watcher (if any) is polled between lines, never mid-answer.
 fn serve_stream<R: BufRead, W: Write>(
-    eng: &ServeEngine,
+    eng: &mut ServeEngine,
+    mut watcher: Option<&mut StoreWatcher>,
     r: &mut R,
     w: &mut W,
 ) -> anyhow::Result<()> {
@@ -79,6 +138,16 @@ fn serve_stream<R: BufRead, W: Write>(
         let n = r.read_until(b'\n', &mut s.line)?;
         if n == 0 {
             return Ok(());
+        }
+        if let Some(wt) = watcher.as_deref_mut() {
+            if let Some(st) = wt.poll() {
+                eprintln!(
+                    "serve: hot-swapped store (generation {}, {} rows)",
+                    st.generation(),
+                    st.n_rows()
+                );
+                eng.swap_store(st);
+            }
         }
         // The line buffer lives inside the scratch the engine mutates,
         // so move it out for the call (a Vec move, no copy/alloc) and
@@ -117,18 +186,62 @@ mod tests {
         emb.row_mut(0).copy_from_slice(&[1.0, 0.0]);
         emb.row_mut(1).copy_from_slice(&[0.9, 0.1]);
         emb.row_mut(2).copy_from_slice(&[0.0, 1.0]);
-        let eng = ServeEngine::from_store(
+        let mut eng = ServeEngine::from_store(
             RowStore::from_model(words, &emb).unwrap(),
             QuantMode::Off,
         );
         let input = b"{\"op\":\"topk\",\"word\":\"a\",\"k\":1}\n\r\n\nnot json\n";
         let mut out = Vec::new();
-        serve_stream(&eng, &mut &input[..], &mut out).unwrap();
+        serve_stream(&mut eng, None, &mut &input[..], &mut out).unwrap();
         let text = String::from_utf8(out).unwrap();
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 2, "blank lines are skipped: {text:?}");
         assert!(lines[0].contains("\"ok\":true"), "{}", lines[0]);
         assert!(lines[0].contains("\"word\":\"a\""), "{}", lines[0]);
         assert!(lines[1].contains("\"ok\":false"), "{}", lines[1]);
+    }
+
+    fn tiny_store(words: &[&str], generation: u64) -> RowStore {
+        let words: Vec<String> = words.iter().map(|s| s.to_string()).collect();
+        let mut emb = Embedding::zeros(words.len(), 2);
+        for id in 0..words.len() as u32 {
+            emb.row_mut(id).copy_from_slice(&[1.0, id as f32]);
+        }
+        let mut st = RowStore::from_model(words, &emb).unwrap();
+        st.set_generation(generation);
+        st
+    }
+
+    #[test]
+    fn watcher_hot_swaps_store_between_lines() {
+        let path = std::env::temp_dir().join(format!(
+            "pw2v_watch_{}.rst",
+            std::process::id()
+        ));
+        tiny_store(&["a", "b"], 1).save(&path).unwrap();
+        let mut eng =
+            ServeEngine::from_store(RowStore::open(&path).unwrap(), QuantMode::Off);
+        let mut watcher = StoreWatcher::new(&path);
+        // Unchanged file: no reload.
+        assert!(watcher.poll().is_none());
+        // A newer export lands (longer word list changes the length, so
+        // detection never depends on mtime granularity).
+        tiny_store(&["a", "b", "late-arrival"], 2).save(&path).unwrap();
+        let input = b"{\"op\":\"stats\"}\n{\"op\":\"topk\",\"word\":\"late-arrival\",\"k\":1}\n";
+        let mut out = Vec::new();
+        serve_stream(&mut eng, Some(&mut watcher), &mut &input[..], &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(
+            lines[0].contains("\"generation\":2") && lines[0].contains("\"vocab\":3"),
+            "stats must see the swapped store: {}",
+            lines[0]
+        );
+        assert!(
+            lines[1].contains("\"ok\":true"),
+            "word existing only in the new export must resolve: {}",
+            lines[1]
+        );
+        std::fs::remove_file(&path).ok();
     }
 }

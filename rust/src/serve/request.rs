@@ -13,6 +13,7 @@
 //! ```text
 //! {"op":"topk","word":W,"k":K}
 //! {"op":"analogy","a":A,"b":B,"c":C,"k":K}
+//! {"op":"stats"}
 //! ```
 //!
 //! `k` is optional (the engine applies its default and cap).  Unknown
@@ -28,6 +29,9 @@ use std::fmt;
 pub enum Op {
     TopK,
     Analogy,
+    /// Engine introspection: vocab size, dim, quant mode, store
+    /// generation.  Takes no other field.
+    Stats,
 }
 
 /// Parse outcome: the op plus the requested `k`.  String fields live
@@ -279,6 +283,19 @@ pub fn parse_request(line: &[u8], scratch: &mut ReqScratch) -> Result<ParsedRequ
                 });
             }
         }
+        Op::Stats => {
+            if seen[K_WORD as usize]
+                || seen[K_A as usize]
+                || seen[K_B as usize]
+                || seen[K_C as usize]
+                || seen[K_K as usize]
+            {
+                return Err(ReqError {
+                    pos: 0,
+                    msg: "stats takes no field besides \"op\"",
+                });
+            }
+        }
     }
     Ok(ParsedRequest { op, k })
 }
@@ -327,9 +344,10 @@ fn op_value(s: &mut Scanner) -> Result<Op, ReqError> {
     match name {
         b"topk" => Ok(Op::TopK),
         b"analogy" => Ok(Op::Analogy),
+        b"stats" => Ok(Op::Stats),
         _ => Err(ReqError {
             pos: start,
-            msg: "unknown op (topk|analogy)",
+            msg: "unknown op (topk|analogy|stats)",
         }),
     }
 }
@@ -362,6 +380,13 @@ mod tests {
     }
 
     #[test]
+    fn parses_stats() {
+        let (r, _) = parse(r#"{"op":"stats"}"#).unwrap();
+        assert_eq!(r.op, Op::Stats);
+        assert_eq!(r.k, None);
+    }
+
+    #[test]
     fn unescapes_values() {
         let (_, s) = parse(r#"{"op":"topk","word":"a\tbé\"q\""}"#).unwrap();
         assert_eq!(s.word, "a\tbé\"q\"");
@@ -374,7 +399,9 @@ mod tests {
             ("{}", "empty request"),
             (r#"{"op":"topk"}"#, "topk requires \"word\""),
             (r#"{"word":"x"}"#, "missing \"op\""),
-            (r#"{"op":"frob","word":"x"}"#, "unknown op (topk|analogy)"),
+            (r#"{"op":"frob","word":"x"}"#, "unknown op (topk|analogy|stats)"),
+            (r#"{"op":"stats","word":"x"}"#, "stats takes no field besides \"op\""),
+            (r#"{"op":"stats","k":3}"#, "stats takes no field besides \"op\""),
             (r#"{"op":"topk","word":"x","word":"y"}"#, "duplicate key"),
             (r#"{"op":"topk","word":"x","zzz":1}"#, "unknown key (op|word|a|b|c|k)"),
             (r#"{"op":"topk","word":"x"} extra"#, "trailing data after request"),

@@ -7,21 +7,28 @@
 //! straight into the scan loop through the PR-3 raw-mmap discipline
 //! (`util::mmap`, shared with the corpus cache).
 //!
-//! ## File format (version 1)
+//! ## File format (version 2)
 //!
 //! ```text
 //! offset  size        field
 //! 0       8           magic "PW2VRST\0"
-//! 8       4           version (u32 LE) = 1
+//! 8       4           version (u32 LE) = 2
 //! 12      4           dim (u32 LE)
 //! 16      8           n_rows (u64 LE)
 //! 24      8           word-table length in bytes (u64 LE)
 //! 32      8           FNV-1a over [word table ‖ flag bytes] (u64 LE)
-//! 40      …           word table: per row u16 LE length + UTF-8 bytes
+//! 40      8           generation (u64 LE) — producer's export counter
+//! 48      …           word table: per row u16 LE length + UTF-8 bytes
 //! …       n_rows      servable flags (1 byte each, 0/1)
 //! …       0–63        zero padding to a 64-byte multiple offset
 //! …       4·n·dim     unit rows (f32 LE, row-major, packed)
 //! ```
+//!
+//! Version 1 (no generation field, word table at offset 40) is still
+//! accepted by `open` and reads as generation 0.  The generation lets a
+//! hot-swapping server (`serve --watch` fed by the `stream` trainer's
+//! periodic exports) report WHICH export it is serving — the `stats`
+//! op exposes it on the wire.
 //!
 //! Rows are stored UNIT-NORMALISED (exactly
 //! [`crate::eval::analogy::normalized_matrix`]'s arithmetic), so the
@@ -51,9 +58,11 @@ use crate::util::mmap::{load_bytes, Bytes};
 /// Identifies the file as a pw2v serve row store.
 pub const MAGIC: [u8; 8] = *b"PW2VRST\0";
 /// Current format version.
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
 
-const HEADER_LEN: usize = 40;
+/// Version-1 header (no generation field); still readable.
+const V1_HEADER_LEN: usize = 40;
+const HEADER_LEN: usize = 48;
 /// Row payload alignment (file offset); also covers any SIMD width.
 const ROW_ALIGN: usize = 64;
 /// Dimension cap: keeps `simd::dot_i8`'s i32 accumulation overflow-free
@@ -79,6 +88,8 @@ pub struct RowStore {
     index: HashMap<String, u32>,
     servable: Vec<bool>,
     dim: usize,
+    /// Producer's export counter (0 for batch builds and v1 files).
+    generation: u64,
     data: RowsData,
 }
 
@@ -109,8 +120,20 @@ impl RowStore {
             index,
             servable,
             dim: emb.dim(),
+            generation: 0,
             data: RowsData::Owned(unit),
         })
+    }
+
+    /// Stamp the export counter (streaming checkpoint exports; batch
+    /// builds stay at 0).
+    pub fn set_generation(&mut self, generation: u64) {
+        self.generation = generation;
+    }
+
+    /// Producer's export counter this store was written with.
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// Serialise to the binary format via the atomic tmp+rename+fsync
@@ -137,6 +160,7 @@ impl RowStore {
             w.write_all(&(self.words.len() as u64).to_le_bytes())?;
             w.write_all(&(names.len() as u64).to_le_bytes())?;
             w.write_all(&digest.to_le_bytes())?;
+            w.write_all(&self.generation.to_le_bytes())?;
             w.write_all(&names)?;
             w.write_all(&flags)?;
             let body = HEADER_LEN + names.len() + flags.len();
@@ -154,25 +178,36 @@ impl RowStore {
     pub fn open(path: &Path) -> anyhow::Result<Self> {
         let bytes = load_bytes(path, true)?;
         anyhow::ensure!(
-            bytes.len() >= HEADER_LEN && bytes[..8] == MAGIC,
+            bytes.len() >= V1_HEADER_LEN && bytes[..8] == MAGIC,
             "not a pw2v row store (bad magic): {}",
             path.display()
         );
         let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
         anyhow::ensure!(
-            version == VERSION,
-            "row store version {version} (expected {VERSION})"
+            version == 1 || version == VERSION,
+            "row store version {version} (this build reads 1..={VERSION})"
+        );
+        let header_len = if version == 1 { V1_HEADER_LEN } else { HEADER_LEN };
+        anyhow::ensure!(
+            bytes.len() >= header_len,
+            "row store header truncated: {}",
+            path.display()
         );
         let dim = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
         let n = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
         let names_len = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
         let digest = u64::from_le_bytes(bytes[32..40].try_into().unwrap());
+        let generation = if version == 1 {
+            0
+        } else {
+            u64::from_le_bytes(bytes[40..48].try_into().unwrap())
+        };
         anyhow::ensure!(
             n > 0 && dim > 0 && dim <= MAX_DIM && n < u32::MAX as u64,
             "implausible row store header ({n} x {dim})"
         );
         // All size arithmetic in u128: a hostile header must not wrap.
-        let body = HEADER_LEN as u128 + names_len as u128 + n as u128;
+        let body = header_len as u128 + names_len as u128 + n as u128;
         let rows_off = body.div_ceil(ROW_ALIGN as u128) * ROW_ALIGN as u128;
         let want = rows_off + 4 * n as u128 * dim as u128;
         anyhow::ensure!(
@@ -181,8 +216,8 @@ impl RowStore {
             bytes.len()
         );
         let (n, names_len, rows_off) = (n as usize, names_len as usize, rows_off as usize);
-        let names = &bytes[HEADER_LEN..HEADER_LEN + names_len];
-        let flags = &bytes[HEADER_LEN + names_len..HEADER_LEN + names_len + n];
+        let names = &bytes[header_len..header_len + names_len];
+        let flags = &bytes[header_len + names_len..header_len + names_len + n];
         let mut h = Fnv1a::new();
         h.update(names);
         h.update(flags);
@@ -215,6 +250,7 @@ impl RowStore {
             index,
             servable,
             dim,
+            generation,
             data,
         })
     }
@@ -379,6 +415,51 @@ mod tests {
         let err = RowStore::open(&path).unwrap_err().to_string();
         assert!(err.contains("magic"), "unhelpful error: {err}");
 
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn generation_roundtrips() {
+        let (words, emb) = sample();
+        let mut st = RowStore::from_model(words, &emb).unwrap();
+        assert_eq!(st.generation(), 0);
+        st.set_generation(42);
+        let path = std::env::temp_dir().join("pw2v_rst_gen.rst");
+        st.save(&path).unwrap();
+        assert_eq!(RowStore::open(&path).unwrap().generation(), 42);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version1_files_open_as_generation_zero() {
+        // Hand-rolled v1 file: one word "solo", dim 2, unit row.
+        let names: Vec<u8> = [&4u16.to_le_bytes()[..], b"solo"].concat();
+        let flags = [1u8];
+        let mut h = Fnv1a::new();
+        h.update(&names);
+        h.update(&flags);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // version 1
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // dim
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // n_rows
+        bytes.extend_from_slice(&(names.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&h.digest().to_le_bytes());
+        bytes.extend_from_slice(&names);
+        bytes.extend_from_slice(&flags);
+        while bytes.len() % ROW_ALIGN != 0 {
+            bytes.push(0);
+        }
+        for x in [0.6f32, 0.8] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        let path = std::env::temp_dir().join("pw2v_rst_v1.rst");
+        std::fs::write(&path, &bytes).unwrap();
+        let st = RowStore::open(&path).unwrap();
+        assert_eq!(st.generation(), 0);
+        assert_eq!(st.n_rows(), 1);
+        assert_eq!(st.id("solo"), Some(0));
+        assert_eq!(st.row(0), &[0.6, 0.8]);
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,274 @@
+//! The `.stream` sidecar: everything a killed streamer needs to resume
+//! that the PR-6 `PWCK` model checkpoint does not carry.
+//!
+//! A streaming checkpoint is two files written in a fixed order:
+//!
+//! 1. the model snapshot, via the existing two-slot `PWCK` machinery
+//!    (`model/io.rs`) — slot `round % 2`, so a crash mid-write can only
+//!    corrupt the slot being replaced;
+//! 2. this sidecar (atomic rename), which records the stream cursor,
+//!    the grown learning-rate horizon, the encoded-cache watermark and
+//!    the LIVE vocabulary (admissions included) plus pending admission
+//!    candidates.
+//!
+//! Because the sidecar lands last, a loaded sidecar always references a
+//! fully-written `PWCK` slot; `round` ties the two together and the
+//! `PWCK` fingerprint (config ^ vocab ^ nranks) cross-checks that the
+//! restored vocabulary is the one the model rows were trained against.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::model::io::atomic_write;
+use crate::util::fnv::Fnv1a;
+
+const MAGIC: [u8; 8] = *b"PWSTRM\0\0";
+const VERSION: u16 = 1;
+/// Sanity cap on serialized token length (bytes).
+const MAX_TOKEN_LEN: u32 = 1 << 20;
+
+/// Stream-cursor state saved alongside a `PWCK` model checkpoint.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamState {
+    /// Checkpoint sequence number (+1 per checkpoint, NOT per flush —
+    /// an even `ckpt_every` would otherwise pin one slot forever);
+    /// selects `PWCK` slot `round % 2`.
+    pub round: u64,
+    /// Byte offset of the next unread line start in the corpus.
+    pub pos: u64,
+    /// Bytes whose word counts are already in the lr horizon.
+    pub observed_end: u64,
+    /// Vocabulary length at cold start — the prefix whose subsampling
+    /// probabilities were computed from the original counts.  Resume
+    /// rebuilds the subsampler from `vocab.truncated(base_len)` and
+    /// extends with keep-probability 1.0 for admitted rows, exactly
+    /// reproducing the running streamer's table (a plain rebuild over
+    /// the grown vocab would perturb every prefix probability through
+    /// the larger total `T`).
+    pub base_len: u64,
+    /// Learning-rate horizon (`LrState::total`), grown by every
+    /// observed suffix.
+    pub lr_total: u64,
+    /// Corpus bytes the on-disk encoded cache covers (0 = no cache
+    /// written yet).
+    pub cache_end: u64,
+    /// Vocab fingerprint the encoded cache was built under.
+    pub cache_fp: u64,
+    /// Vocab admission generation.
+    pub generation: u64,
+    /// Live vocabulary in id order.
+    pub words: Vec<String>,
+    pub counts: Vec<u64>,
+    /// Pending admission candidates (word, observed count).
+    pub candidates: Vec<(String, u64)>,
+}
+
+/// `<base>.stream` next to the `PWCK` slots.
+pub fn sidecar_path(base: &Path) -> PathBuf {
+    let mut os = base.as_os_str().to_os_string();
+    os.push(".stream");
+    PathBuf::from(os)
+}
+
+fn put(w: &mut impl Write, h: &mut Fnv1a, bytes: &[u8]) -> anyhow::Result<()> {
+    h.update(bytes);
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn put_str(w: &mut impl Write, h: &mut Fnv1a, s: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        s.len() <= MAX_TOKEN_LEN as usize,
+        "stream sidecar: token of {} bytes exceeds the {} cap",
+        s.len(),
+        MAX_TOKEN_LEN
+    );
+    put(w, h, &(s.len() as u32).to_le_bytes())?;
+    put(w, h, s.as_bytes())
+}
+
+fn take<const N: usize>(r: &mut impl Read, h: &mut Fnv1a) -> anyhow::Result<[u8; N]> {
+    let mut buf = [0u8; N];
+    r.read_exact(&mut buf)?;
+    h.update(&buf);
+    Ok(buf)
+}
+
+fn take_u64(r: &mut impl Read, h: &mut Fnv1a) -> anyhow::Result<u64> {
+    Ok(u64::from_le_bytes(take::<8>(r, h)?))
+}
+
+fn take_str(r: &mut impl Read, h: &mut Fnv1a) -> anyhow::Result<String> {
+    let len = u32::from_le_bytes(take::<4>(r, h)?);
+    anyhow::ensure!(
+        len <= MAX_TOKEN_LEN,
+        "stream sidecar: token length {len} exceeds the {MAX_TOKEN_LEN} cap (corrupt?)"
+    );
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    h.update(&buf);
+    String::from_utf8(buf).map_err(|_| anyhow::anyhow!("stream sidecar: non-UTF-8 token"))
+}
+
+/// Write the sidecar atomically (`.tmp` + fsync + rename), FNV-1a
+/// trailer last.
+pub fn save_state(base: &Path, st: &StreamState) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        st.words.len() == st.counts.len(),
+        "stream sidecar: {} words vs {} counts",
+        st.words.len(),
+        st.counts.len()
+    );
+    atomic_write(sidecar_path(base), |w| {
+        let mut h = Fnv1a::new();
+        put(w, &mut h, &MAGIC)?;
+        put(w, &mut h, &VERSION.to_le_bytes())?;
+        for v in [
+            st.round,
+            st.pos,
+            st.observed_end,
+            st.base_len,
+            st.lr_total,
+            st.cache_end,
+            st.cache_fp,
+            st.generation,
+            st.words.len() as u64,
+        ] {
+            put(w, &mut h, &v.to_le_bytes())?;
+        }
+        for (word, count) in st.words.iter().zip(&st.counts) {
+            put_str(w, &mut h, word)?;
+            put(w, &mut h, &count.to_le_bytes())?;
+        }
+        put(w, &mut h, &(st.candidates.len() as u64).to_le_bytes())?;
+        for (word, count) in &st.candidates {
+            put_str(w, &mut h, word)?;
+            put(w, &mut h, &count.to_le_bytes())?;
+        }
+        w.write_all(&h.digest().to_le_bytes())?;
+        Ok(())
+    })
+}
+
+/// Load and verify `<base>.stream`.
+pub fn load_state(base: &Path) -> anyhow::Result<StreamState> {
+    let path = sidecar_path(base);
+    let mut r = std::io::BufReader::new(std::fs::File::open(&path)?);
+    let mut h = Fnv1a::new();
+    let magic = take::<8>(&mut r, &mut h)?;
+    anyhow::ensure!(
+        magic == MAGIC,
+        "{}: not a stream sidecar (bad magic)",
+        path.display()
+    );
+    let version = u16::from_le_bytes(take::<2>(&mut r, &mut h)?);
+    anyhow::ensure!(
+        version == VERSION,
+        "{}: sidecar version {version}, this build reads {VERSION}",
+        path.display()
+    );
+    let round = take_u64(&mut r, &mut h)?;
+    let pos = take_u64(&mut r, &mut h)?;
+    let observed_end = take_u64(&mut r, &mut h)?;
+    let base_len = take_u64(&mut r, &mut h)?;
+    let lr_total = take_u64(&mut r, &mut h)?;
+    let cache_end = take_u64(&mut r, &mut h)?;
+    let cache_fp = take_u64(&mut r, &mut h)?;
+    let generation = take_u64(&mut r, &mut h)?;
+    let n_words = take_u64(&mut r, &mut h)?;
+    let mut words = Vec::with_capacity(n_words.min(1 << 24) as usize);
+    let mut counts = Vec::with_capacity(words.capacity());
+    for _ in 0..n_words {
+        words.push(take_str(&mut r, &mut h)?);
+        counts.push(take_u64(&mut r, &mut h)?);
+    }
+    let n_cand = take_u64(&mut r, &mut h)?;
+    let mut candidates = Vec::with_capacity(n_cand.min(1 << 24) as usize);
+    for _ in 0..n_cand {
+        let w = take_str(&mut r, &mut h)?;
+        candidates.push((w, take_u64(&mut r, &mut h)?));
+    }
+    let want = h.digest();
+    let mut trailer = [0u8; 8];
+    r.read_exact(&mut trailer)?;
+    anyhow::ensure!(
+        u64::from_le_bytes(trailer) == want,
+        "{}: sidecar checksum mismatch (truncated or corrupt)",
+        path.display()
+    );
+    Ok(StreamState {
+        round,
+        pos,
+        observed_end,
+        base_len,
+        lr_total,
+        cache_end,
+        cache_fp,
+        generation,
+        words,
+        counts,
+        candidates,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StreamState {
+        StreamState {
+            round: 7,
+            pos: 4096,
+            observed_end: 5000,
+            base_len: 3,
+            lr_total: 123_456,
+            cache_end: 2048,
+            cache_fp: 0xDEAD_BEEF,
+            generation: 2,
+            words: vec!["the".into(), "quick".into(), "fox".into(), "nova".into()],
+            counts: vec![100, 40, 17, 5],
+            candidates: vec![("comet".into(), 3), ("quasar".into(), 1)],
+        }
+    }
+
+    fn base(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("pw2v_sidecar_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let b = base("roundtrip");
+        let st = sample();
+        save_state(&b, &st).unwrap();
+        assert_eq!(load_state(&b).unwrap(), st);
+        std::fs::remove_file(sidecar_path(&b)).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let b = base("corrupt");
+        save_state(&b, &sample()).unwrap();
+        let p = sidecar_path(&b);
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_state(&b).unwrap_err().to_string();
+        assert!(
+            err.contains("checksum") || err.contains("cap") || err.contains("token"),
+            "unexpected error: {err}"
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let b = base("trunc");
+        save_state(&b, &sample()).unwrap();
+        let p = sidecar_path(&b);
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load_state(&b).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,688 @@
+//! The streaming trainer: tail a growing corpus and train continuously
+//! over the arriving suffix with the batch trainer's exact sampling and
+//! update pipeline.
+//!
+//! # Reproducibility contract
+//!
+//! The driver replays the single-shard batch worker loop line for line:
+//! same RNG seeding (`seed ^ 17` for shard 0), same subsample → window
+//! generation → superbatch flush order, same learning-rate bookkeeping.
+//! Two consequences, both pinned by `tests/stream_parity.rs`:
+//!
+//! * a stream over a file that NEVER grows is bitwise identical to the
+//!   batch run on the same bytes — streaming is a strict generalisation,
+//!   not a different trainer;
+//! * a stream killed and resumed from its checkpoint is bitwise
+//!   identical to the uninterrupted stream, because checkpoints are only
+//!   taken at superbatch flush boundaries (arena empty, word counter
+//!   drained) where the whole trainer state is eight u64s plus the
+//!   model.
+//!
+//! # Growth
+//!
+//! New bytes extend the learning-rate horizon (`LrState::extend_total`)
+//! by their unclipped in-vocabulary token count — the same quantity the
+//! batch vocabulary pass would have counted.  Out-of-vocabulary tokens
+//! in fresh bytes feed the vocabulary candidate buffer; once a word's
+//! count reaches `min_count` it is admitted into a pre-allocated
+//! reserve row (`--vocab-reserve`), already initialised by the cold
+//! model init's sequential RNG stream.  Admission rebuilds the unigram
+//! alias table and extends the subsample keep-table (see
+//! `Subsampler::extend_for_admitted` for why the prefix is frozen).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::config::{Backend as BackendKind, CorpusCacheMode, LrSchedule, TrainConfig};
+use crate::corpus::encoded::EncodedCorpus;
+use crate::corpus::reader::MAX_SENTENCE_LEN;
+use crate::corpus::subsample::Subsampler;
+use crate::corpus::vocab::Vocab;
+use crate::linalg::simd;
+use crate::metrics::{Counters, Snapshot};
+use crate::model::io as model_io;
+use crate::model::{Embedding, SharedModel};
+use crate::sampling::batch::{BatchBuilder, SuperbatchArena};
+use crate::sampling::unigram::UnigramSampler;
+use crate::serve::RowStore;
+use crate::train::sgd_gemm::{GemmBackend, UpdateRule};
+use crate::train::Backend;
+use crate::train::LrState;
+use crate::util::rng::Xoshiro256ss;
+
+use super::ckpt::{self, StreamState};
+use super::tail::{self, TailReader};
+
+/// Knobs for a streaming run (everything else comes from
+/// [`TrainConfig`]).
+#[derive(Clone, Debug)]
+pub struct StreamOptions {
+    /// Checkpoint base path (PR-6 two-slot `PWCK` files plus the
+    /// `.stream` sidecar).  `None` = never checkpoint.
+    pub checkpoint: Option<PathBuf>,
+    /// Superbatch flushes between checkpoints.
+    pub ckpt_every: u64,
+    /// Warm-restart from `checkpoint` when its sidecar exists.
+    pub resume: bool,
+    /// Sleep between file polls in [`run`](StreamTrainer::run).
+    pub poll_ms: u64,
+    /// Stop after this long with no new complete line (0 = run until
+    /// killed).
+    pub idle_ms: u64,
+    /// `tcp:<addr>`: accept line-oriented socket connections and append
+    /// them to the corpus file (the ingest feed).
+    pub follow: Option<String>,
+    /// Export a serve-ready [`RowStore`] here at every checkpoint (and
+    /// at finish), for `serve --watch` hot-swapping.
+    pub store: Option<PathBuf>,
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        Self {
+            checkpoint: None,
+            ckpt_every: 8,
+            resume: false,
+            poll_ms: 50,
+            idle_ms: 0,
+            follow: None,
+            store: None,
+        }
+    }
+}
+
+/// What a finished streaming run hands back.
+#[derive(Debug)]
+pub struct StreamOutcome {
+    pub snapshot: Snapshot,
+    pub final_lr: f32,
+    /// Live vocabulary size (admissions included).
+    pub vocab_len: usize,
+    /// Words admitted during this process's lifetime.
+    pub admitted: u64,
+    /// Corpus bytes consumed (next unread line start).
+    pub trained_bytes: u64,
+}
+
+/// Continuous trainer over a growing corpus file.
+pub struct StreamTrainer {
+    cfg: TrainConfig,
+    corpus: PathBuf,
+    opts: StreamOptions,
+    vocab: Vocab,
+    /// Vocab length at cold start (subsampler prefix; see sidecar docs).
+    base_len: usize,
+    model: SharedModel,
+    backend: GemmBackend,
+    sampler: UnigramSampler,
+    subsampler: Subsampler,
+    lr: LrState,
+    counters: Counters,
+    rng: Xoshiro256ss,
+    tail: TailReader,
+    /// Reused line buffer (steady state allocates nothing).
+    line: String,
+    /// Reused sentence buffer.
+    sent: Vec<u32>,
+    arena: SuperbatchArena,
+    /// Words consumed since the last superbatch flush.
+    raw_words: u64,
+    /// Next unread line start (mirrors `tail.pos()` between polls).
+    pos: u64,
+    /// Corpus bytes whose word counts are in the lr horizon.
+    observed_end: u64,
+    /// Checkpoint sequence number; slot `seq % 2` alternates regardless
+    /// of `ckpt_every`.
+    ckpt_seq: u64,
+    /// Encoded-cache target (resolved from `cfg.corpus_cache`).
+    cache: Option<PathBuf>,
+    /// Corpus bytes the on-disk cache covers (0 = none yet).
+    cache_end: u64,
+    /// Vocab fingerprint the cache was built under.
+    cache_fp: u64,
+}
+
+fn check_stream_cfg(cfg: &TrainConfig) -> anyhow::Result<()> {
+    cfg.validate()?;
+    anyhow::ensure!(
+        matches!(cfg.backend, BackendKind::Gemm),
+        "stream: only the gemm backend is supported (its updates are \
+         stateless, which is what makes kill/resume bitwise); got {:?}",
+        cfg.backend
+    );
+    anyhow::ensure!(
+        cfg.epochs == 1,
+        "stream: epochs must be 1 (a stream has no epoch boundary); got {}",
+        cfg.epochs
+    );
+    anyhow::ensure!(
+        cfg.threads == 1,
+        "stream: single worker only (the checkpoint cursor is a single \
+         file offset); got threads={}",
+        cfg.threads
+    );
+    anyhow::ensure!(
+        !matches!(cfg.lr_schedule, LrSchedule::DistScaled),
+        "stream: lr-schedule dist-scaled is for multi-node runs; use linear"
+    );
+    anyhow::ensure!(
+        matches!(cfg.lr_schedule, LrSchedule::Linear),
+        "stream: per-parameter lr schedules are not supported; use linear"
+    );
+    Ok(())
+}
+
+fn gemm_backend(cfg: &TrainConfig) -> GemmBackend {
+    GemmBackend::new(cfg.dim, cfg.batch, cfg.samples())
+        .with_rule(UpdateRule::Plain)
+        .with_sigmoid(cfg.sigmoid_mode)
+        .with_kernel(cfg.kernel)
+}
+
+fn cache_target(cfg: &TrainConfig, corpus: &Path) -> Option<PathBuf> {
+    match &cfg.corpus_cache {
+        CorpusCacheMode::Off => None,
+        CorpusCacheMode::Auto => Some(EncodedCorpus::cache_path_for(corpus)),
+        CorpusCacheMode::Path(p) => Some(p.clone()),
+    }
+}
+
+impl StreamTrainer {
+    /// Open a streaming run: resume from `opts.checkpoint` when asked
+    /// and possible, cold-start otherwise (PR-6 warm-restart
+    /// semantics: `--resume` with no checkpoint yet is a fresh run, so
+    /// one flag works for both the first launch and every relaunch).
+    pub fn open(cfg: &TrainConfig, corpus: &Path, opts: StreamOptions) -> anyhow::Result<Self> {
+        check_stream_cfg(cfg)?;
+        simd::configure(cfg.simd)?;
+        if opts.resume {
+            if let Some(base) = opts.checkpoint.clone() {
+                if ckpt::sidecar_path(&base).exists() {
+                    return Self::resumed(cfg, corpus, opts, &base);
+                }
+                eprintln!(
+                    "stream: no sidecar at {} yet; cold-starting",
+                    ckpt::sidecar_path(&base).display()
+                );
+            }
+        }
+        Self::cold(cfg, corpus, opts)
+    }
+
+    fn cold(cfg: &TrainConfig, corpus: &Path, opts: StreamOptions) -> anyhow::Result<Self> {
+        let vocab = Vocab::build_from_file(corpus, cfg.min_count)?;
+        anyhow::ensure!(
+            !vocab.is_empty(),
+            "stream: no word in {} meets min_count {} — seed the corpus \
+             with at least one countable line before streaming",
+            corpus.display(),
+            cfg.min_count
+        );
+        let file_len = std::fs::metadata(corpus)?.len();
+        let model =
+            SharedModel::init_with_reserve(vocab.len(), cfg.vocab_reserve, cfg.dim, cfg.seed);
+        let sampler = UnigramSampler::alias(&vocab, cfg.unigram_power);
+        let subsampler = Subsampler::new(&vocab, cfg.sample);
+        let lr = LrState::linear(cfg.lr, cfg.lr_min_frac, vocab.total_words());
+        // Shard 0 of the batch worker pool: seed ^ (0 * mix + 17).
+        let rng = Xoshiro256ss::new(cfg.seed ^ 17);
+        let cache = cache_target(cfg, corpus);
+        // Adopt a pre-built encoded cache when it matches this
+        // vocabulary and covers a prefix of the current file.
+        let (mut cache_end, mut cache_fp) = (0u64, 0u64);
+        if let Some(c) = &cache {
+            if let Ok(enc) = EncodedCorpus::open(c, &vocab) {
+                if enc.text_len() <= file_len {
+                    cache_end = enc.text_len();
+                    cache_fp = vocab.fingerprint();
+                }
+            }
+        }
+        let base_len = vocab.len();
+        Ok(Self {
+            cfg: cfg.clone(),
+            corpus: corpus.to_path_buf(),
+            opts,
+            vocab,
+            base_len,
+            model,
+            backend: gemm_backend(cfg),
+            sampler,
+            subsampler,
+            lr,
+            counters: Counters::new(),
+            rng,
+            tail: TailReader::open(corpus, 0)?,
+            line: String::with_capacity(4096),
+            sent: Vec::with_capacity(MAX_SENTENCE_LEN),
+            arena: SuperbatchArena::with_sentence_slack(cfg.superbatch, cfg.batch, cfg.samples()),
+            raw_words: 0,
+            pos: 0,
+            // The initial bytes are already counted in total_words().
+            observed_end: file_len,
+            ckpt_seq: 0,
+            cache,
+            cache_end,
+            cache_fp,
+        })
+    }
+
+    fn resumed(
+        cfg: &TrainConfig,
+        corpus: &Path,
+        opts: StreamOptions,
+        base: &Path,
+    ) -> anyhow::Result<Self> {
+        let st = ckpt::load_state(base)?;
+        let mut vocab = Vocab::from_saved_parts(st.words, st.counts, st.generation)?;
+        for (w, c) in &st.candidates {
+            vocab.restore_candidate(w, *c);
+        }
+        let slot = (st.round % 2) as usize;
+        let ck = model_io::load_checkpoint(model_io::checkpoint_slot_path(base, 0, slot))?;
+        anyhow::ensure!(
+            ck.round == st.round,
+            "stream resume: sidecar is at checkpoint {} but PWCK slot {} \
+             holds checkpoint {} (mixed files from different runs?)",
+            st.round,
+            slot,
+            ck.round
+        );
+        let want = cfg.fingerprint() ^ vocab.fingerprint() ^ 1;
+        anyhow::ensure!(
+            ck.fingerprint == want,
+            "stream resume: checkpoint fingerprint {:#x} != expected {:#x} \
+             (config or vocabulary changed since the checkpoint)",
+            ck.fingerprint,
+            want
+        );
+        anyhow::ensure!(
+            ck.m_in.vocab() >= vocab.len() && ck.m_in.dim() == cfg.dim,
+            "stream resume: model {}x{} cannot serve vocab {} dim {}",
+            ck.m_in.vocab(),
+            ck.m_in.dim(),
+            vocab.len(),
+            cfg.dim
+        );
+        let file_len = std::fs::metadata(corpus)?.len();
+        anyhow::ensure!(
+            file_len >= st.pos,
+            "stream resume: {} is {} bytes but the checkpoint cursor is at \
+             {} — the corpus shrank since the checkpoint",
+            corpus.display(),
+            file_len,
+            st.pos
+        );
+        let rng = Xoshiro256ss::from_state(ck.rng);
+        let lr = LrState::linear(cfg.lr, cfg.lr_min_frac, 1);
+        lr.restore_total(st.lr_total);
+        lr.restore(ck.lr_words);
+        let counters = Counters::new();
+        counters.add_words(ck.words_done);
+        let sampler = UnigramSampler::alias(&vocab, cfg.unigram_power);
+        // Rebuild the subsampler the running streamer had: the cold
+        // prefix's probabilities from the cold counts, admitted rows at
+        // keep=1.  `Subsampler::new` over the grown vocab would instead
+        // recompute EVERY prefix probability under the larger total.
+        let mut subsampler = Subsampler::new(&vocab.truncated(st.base_len as usize), cfg.sample);
+        subsampler.extend_for_admitted(vocab.len());
+        let model = SharedModel::new(ck.m_in, ck.m_out);
+        eprintln!(
+            "stream: resumed checkpoint {} at byte {} ({} live words, generation {})",
+            st.round,
+            st.pos,
+            vocab.len(),
+            vocab.generation()
+        );
+        Ok(Self {
+            cfg: cfg.clone(),
+            corpus: corpus.to_path_buf(),
+            opts,
+            base_len: st.base_len as usize,
+            model,
+            backend: gemm_backend(cfg),
+            sampler,
+            subsampler,
+            lr,
+            counters,
+            rng,
+            tail: TailReader::open(corpus, st.pos)?,
+            line: String::with_capacity(4096),
+            sent: Vec::with_capacity(MAX_SENTENCE_LEN),
+            arena: SuperbatchArena::with_sentence_slack(cfg.superbatch, cfg.batch, cfg.samples()),
+            raw_words: 0,
+            pos: st.pos,
+            observed_end: st.observed_end,
+            ckpt_seq: st.round,
+            cache: cache_target(cfg, corpus),
+            cache_end: st.cache_end,
+            cache_fp: st.cache_fp,
+            vocab,
+        })
+    }
+
+    // ---- accessors (tests, cli reporting) ----------------------------
+
+    pub fn model(&self) -> &SharedModel {
+        &self.model
+    }
+
+    pub fn vocab(&self) -> &Vocab {
+        &self.vocab
+    }
+
+    pub fn pos(&self) -> u64 {
+        self.pos
+    }
+
+    pub fn lr_current(&self) -> f32 {
+        self.lr.current()
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        self.counters.snapshot()
+    }
+
+    // ---- the loop ----------------------------------------------------
+
+    /// Admit every due candidate for which a reserve row remains, then
+    /// consume every complete line up to `limit` (pass the current file
+    /// length; tests pass explicit byte windows to replay a growth
+    /// schedule deterministically).  Returns whether any line was
+    /// consumed.
+    pub fn poll_once(&mut self, limit: u64) -> anyhow::Result<bool> {
+        self.maybe_admit()?;
+        let mut progressed = false;
+        loop {
+            let Some((_, line_end)) = self.tail.next_line_into(limit, &mut self.line)? else {
+                break;
+            };
+            self.process_line(line_end)?;
+            progressed = true;
+        }
+        Ok(progressed)
+    }
+
+    /// One line through the batch worker's exact pipeline.
+    fn process_line(&mut self, line_end: u64) -> anyhow::Result<()> {
+        let fresh = line_end > self.observed_end;
+        let observe_oov = fresh && self.model.vocab() > self.vocab.len();
+        self.sent.clear();
+        let mut fresh_tokens = 0u64;
+        for tok in self.line.split_ascii_whitespace() {
+            match self.vocab.id(tok) {
+                Some(id) => {
+                    fresh_tokens += 1;
+                    // Same clip as SentenceReader: at most
+                    // MAX_SENTENCE_LEN ids per line.  (The horizon
+                    // count above stays unclipped — it mirrors the
+                    // vocabulary pass, which never clipped.)
+                    if self.sent.len() < MAX_SENTENCE_LEN {
+                        self.sent.push(id);
+                    }
+                }
+                None => {
+                    if observe_oov {
+                        self.vocab.observe(tok);
+                    }
+                }
+            }
+        }
+        if fresh {
+            self.lr.extend_total(fresh_tokens);
+            self.observed_end = line_end;
+        }
+        self.pos = line_end;
+        if self.sent.is_empty() {
+            // SentenceReader never surfaces empty sentences; consuming
+            // no RNG here keeps the streams aligned.
+            return Ok(());
+        }
+        self.raw_words += self.sent.len() as u64;
+        self.subsampler.filter(&mut self.sent, &mut self.rng);
+        let builder =
+            BatchBuilder::new(&self.sampler, self.cfg.window, self.cfg.batch, self.cfg.negative);
+        builder.fill_arena(&self.sent, &mut self.rng, &mut self.arena);
+        if self.arena.len() >= self.cfg.superbatch {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Superbatch flush — verbatim the batch worker's flush block, plus
+    /// the checkpoint cadence hook (flush boundaries are the only
+    /// points where trainer state is small enough to snapshot).
+    fn flush(&mut self) -> anyhow::Result<()> {
+        let lr = self.lr.advance(self.raw_words);
+        self.counters.add_words(self.raw_words);
+        self.raw_words = 0;
+        self.backend
+            .process_arena(self.model.store(), &self.arena, lr)?;
+        self.counters.add_windows(self.arena.len() as u64);
+        self.counters.add_calls(1);
+        self.arena.clear();
+        if self.opts.checkpoint.is_some() && self.counters.snapshot().calls % self.opts.ckpt_every.max(1) == 0
+        {
+            self.checkpoint()?;
+        }
+        Ok(())
+    }
+
+    /// Admit due candidates into reserve rows and rebuild the sampling
+    /// tables.  No-op (and allocation-free) while nothing is due.
+    fn maybe_admit(&mut self) -> anyhow::Result<()> {
+        if self.vocab.candidate_len() == 0 || self.model.vocab() <= self.vocab.len() {
+            return Ok(());
+        }
+        let due = self.vocab.admissible(self.cfg.min_count);
+        if due.is_empty() {
+            return Ok(());
+        }
+        let mut admitted = 0u64;
+        for (word, _count) in due {
+            if self.vocab.len() >= self.model.vocab() {
+                break;
+            }
+            if self.vocab.admit(&word).is_some() {
+                admitted += 1;
+            }
+        }
+        if admitted == 0 {
+            return Ok(());
+        }
+        self.sampler = UnigramSampler::alias(&self.vocab, self.cfg.unigram_power);
+        self.subsampler.extend_for_admitted(self.vocab.len());
+        self.counters.add_admissions(admitted);
+        eprintln!(
+            "stream: admitted {admitted} words ({} live / {} rows, generation {})",
+            self.vocab.len(),
+            self.model.vocab(),
+            self.vocab.generation()
+        );
+        Ok(())
+    }
+
+    /// Bring the encoded cache up to the cursor.  Lazy: called at
+    /// checkpoint/finish events only, so the steady-state loop never
+    /// touches it.  `pos` always ends at a complete line, so the
+    /// append path's newline precondition holds by construction.
+    fn sync_cache(&mut self) -> anyhow::Result<()> {
+        let Some(cache) = self.cache.clone() else {
+            return Ok(());
+        };
+        if self.pos == 0 || self.cache_end >= self.pos {
+            return Ok(());
+        }
+        let fresh_fp = self.vocab.fingerprint();
+        let rebuild = self.cache_end == 0 || self.cache_fp != fresh_fp;
+        if rebuild {
+            EncodedCorpus::build_upto(&self.corpus, &self.vocab, &cache, self.pos)?;
+        } else if let Err(why) =
+            EncodedCorpus::append(&self.corpus, &self.vocab, &cache, self.cache_fp, self.pos)
+        {
+            eprintln!("stream: cache append failed ({why:#}); rebuilding");
+            EncodedCorpus::build_upto(&self.corpus, &self.vocab, &cache, self.pos)?;
+        }
+        self.cache_end = self.pos;
+        self.cache_fp = fresh_fp;
+        Ok(())
+    }
+
+    /// Snapshot model + cursor.  Must only run at a flush boundary.
+    fn checkpoint(&mut self) -> anyhow::Result<()> {
+        let Some(base) = self.opts.checkpoint.clone() else {
+            return Ok(());
+        };
+        debug_assert!(self.arena.is_empty() && self.raw_words == 0);
+        self.sync_cache()?;
+        self.ckpt_seq += 1;
+        let ck = model_io::Checkpoint {
+            rank: 0,
+            nranks: 1,
+            round: self.ckpt_seq,
+            epoch: 0,
+            sentences_in_epoch: 0,
+            words_done: self.counters.words_now(),
+            lr_words: self.lr.words_done(),
+            rng: self.rng.state(),
+            fingerprint: self.cfg.fingerprint() ^ self.vocab.fingerprint() ^ 1,
+            m_in: self.model.m_in().clone(),
+            m_out: self.model.m_out().clone(),
+        };
+        let slot = (self.ckpt_seq % 2) as usize;
+        model_io::save_checkpoint(model_io::checkpoint_slot_path(&base, 0, slot), &ck)?;
+        // Sidecar LAST: a loaded sidecar always references a
+        // fully-written PWCK slot.
+        ckpt::save_state(&base, &self.state_snapshot())?;
+        self.export_store()?;
+        Ok(())
+    }
+
+    fn state_snapshot(&self) -> StreamState {
+        StreamState {
+            round: self.ckpt_seq,
+            pos: self.pos,
+            observed_end: self.observed_end,
+            base_len: self.base_len as u64,
+            lr_total: self.lr.total(),
+            cache_end: self.cache_end,
+            cache_fp: self.cache_fp,
+            generation: self.vocab.generation(),
+            words: (0..self.vocab.len() as u32)
+                .map(|i| self.vocab.word(i).to_string())
+                .collect(),
+            counts: self.vocab.counts().to_vec(),
+            candidates: self
+                .vocab
+                .candidates()
+                .map(|(w, c)| (w.to_string(), c))
+                .collect(),
+        }
+    }
+
+    /// Export the live rows as a serve-ready [`RowStore`] (generation =
+    /// checkpoint sequence, so `serve` stats expose swap progress).
+    /// The model keeps reserve rows past the live vocabulary; the store
+    /// gets exactly the live prefix.
+    fn export_store(&self) -> anyhow::Result<()> {
+        let Some(path) = &self.opts.store else {
+            return Ok(());
+        };
+        let live = self.vocab.len();
+        let mut emb = Embedding::zeros(live, self.model.dim());
+        for id in 0..live as u32 {
+            emb.row_mut(id).copy_from_slice(self.model.m_in().row(id));
+        }
+        let words: Vec<String> = (0..live as u32)
+            .map(|i| self.vocab.word(i).to_string())
+            .collect();
+        let mut store = RowStore::from_model(words, &emb)?;
+        store.set_generation(self.ckpt_seq);
+        store.save(path)?;
+        Ok(())
+    }
+
+    /// Drain the ragged tail (the batch epilogue), take a final
+    /// checkpoint, and report.
+    pub fn finish(&mut self) -> anyhow::Result<StreamOutcome> {
+        if !self.arena.is_empty() {
+            let lr = self.lr.advance(self.raw_words);
+            self.counters.add_words(self.raw_words);
+            self.raw_words = 0;
+            self.backend
+                .process_arena(self.model.store(), &self.arena, lr)?;
+            self.counters.add_windows(self.arena.len() as u64);
+            self.counters.add_calls(1);
+            self.arena.clear();
+        } else if self.raw_words > 0 {
+            self.lr.advance(self.raw_words);
+            self.counters.add_words(self.raw_words);
+            self.raw_words = 0;
+        }
+        if self.opts.checkpoint.is_some() {
+            self.checkpoint()?;
+        } else {
+            self.sync_cache()?;
+            self.export_store()?;
+        }
+        let snapshot = self.counters.snapshot();
+        Ok(StreamOutcome {
+            snapshot,
+            final_lr: self.lr.current(),
+            vocab_len: self.vocab.len(),
+            admitted: snapshot.admissions,
+            trained_bytes: self.pos,
+        })
+    }
+
+    /// Poll-train until the idle deadline passes (or forever when
+    /// `idle_ms` is 0 — the kill-and-`--resume` deployment mode), with
+    /// the optional `--follow tcp:` ingest feed appending to the corpus
+    /// in a side thread.
+    pub fn run(&mut self) -> anyhow::Result<StreamOutcome> {
+        let listener = match &self.opts.follow {
+            Some(spec) => {
+                let l = tail::follow_listener(tail::parse_follow(spec)?)?;
+                eprintln!("stream: ingest feed listening on {}", l.local_addr()?);
+                Some(l)
+            }
+            None => None,
+        };
+        let stop = AtomicBool::new(false);
+        let corpus = self.corpus.clone();
+        let poll = Duration::from_millis(self.opts.poll_ms.max(1));
+        let idle_ms = self.opts.idle_ms;
+        std::thread::scope(|scope| -> anyhow::Result<()> {
+            let feeder = listener.as_ref().map(|l| {
+                let corpus = corpus.clone();
+                let stop = &stop;
+                scope.spawn(move || tail::pump_tcp(l, &corpus, stop))
+            });
+            let mut last_progress = Instant::now();
+            loop {
+                let len = std::fs::metadata(&self.corpus)?.len();
+                if self.poll_once(len)? {
+                    last_progress = Instant::now();
+                } else if idle_ms > 0
+                    && last_progress.elapsed() >= Duration::from_millis(idle_ms)
+                {
+                    break;
+                }
+                std::thread::sleep(poll);
+            }
+            stop.store(true, Ordering::Release);
+            if let Some(f) = feeder {
+                match f.join() {
+                    Ok(Ok(bytes)) => {
+                        eprintln!("stream: ingest feed closed ({bytes} bytes appended)")
+                    }
+                    Ok(Err(e)) => eprintln!("stream: ingest feed error: {e:#}"),
+                    Err(_) => eprintln!("stream: ingest feed thread panicked"),
+                }
+            }
+            Ok(())
+        })?;
+        self.finish()
+    }
+}

@@ -1,0 +1,33 @@
+//! Streaming ingest: train continuously over a corpus that is still
+//! being written.
+//!
+//! The paper's trainer (and every batch word2vec) assumes the corpus is
+//! finished before training starts.  This subsystem removes that
+//! assumption without forking the training pipeline: the stream driver
+//! feeds the SAME subsample → window-generation → superbatch → fused
+//! GEMM kernel path as `train`, reading lines through a persistent
+//! [`TailReader`] instead of a fixed-range `SentenceReader`.
+//!
+//! Layout:
+//!
+//! * [`tail`] — file tailer (partial-line push-back) and the
+//!   `--follow tcp:` ingest feed that turns a socket into file appends;
+//! * [`driver`] — [`StreamTrainer`]: the batch worker loop replayed
+//!   line-at-a-time, plus vocabulary admission into `--vocab-reserve`
+//!   rows, learning-rate horizon growth, lazy encoded-cache
+//!   maintenance, and serve-store export;
+//! * [`ckpt`] — the `.stream` sidecar that rides next to the PR-6
+//!   two-slot `PWCK` model checkpoint so a killed streamer warm-restarts
+//!   bitwise (`--resume`).
+//!
+//! Guarantees (pinned by `tests/stream_parity.rs`): a stream over a
+//! never-growing file is bitwise identical to the batch run on the same
+//! bytes, and kill + resume is bitwise identical to an uninterrupted
+//! stream.
+
+pub mod ckpt;
+pub mod driver;
+pub mod tail;
+
+pub use driver::{StreamOptions, StreamOutcome, StreamTrainer};
+pub use tail::TailReader;

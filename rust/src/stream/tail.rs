@@ -1,0 +1,265 @@
+//! Corpus tailing primitives.
+//!
+//! * [`TailReader`] — a persistent buffered reader over a growing text
+//!   file.  Unlike `SentenceReader` (which owns a fixed `[start, end)`
+//!   range), the tailer keeps its `BufReader` open across polls and
+//!   hands out one complete `\n`-terminated line at a time, pushing a
+//!   partial trailing line back (the writer has not finished it yet) so
+//!   the stream of consumed lines is independent of poll timing.  That
+//!   independence is what makes streaming training reproducible: the
+//!   sentence sequence fed to the trainer is a pure function of the
+//!   final file bytes, never of when we looked.
+//! * [`follow_listener`] / [`pump_tcp`] — the `--follow tcp:<addr>`
+//!   ingest feed: a listener thread accepts line-oriented socket
+//!   connections and appends complete lines to the corpus file, turning
+//!   the socket feed into the same grew-by-suffix file the tailer reads.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+/// Persistent tail over a growing text file.
+pub struct TailReader {
+    reader: BufReader<File>,
+    /// Byte offset of the next unread line start.
+    pos: u64,
+}
+
+impl TailReader {
+    /// Open `path` positioned at byte `from` (must be a line start —
+    /// offset 0 or the byte after a `\n`).  Seeking past the current
+    /// EOF is fine: reads return nothing until the file grows.
+    pub fn open(path: &Path, from: u64) -> anyhow::Result<Self> {
+        let mut f = File::open(path)?;
+        f.seek(SeekFrom::Start(from))?;
+        Ok(Self {
+            reader: BufReader::with_capacity(1 << 20, f),
+            pos: from,
+        })
+    }
+
+    /// Byte offset of the next unread line start.
+    pub fn pos(&self) -> u64 {
+        self.pos
+    }
+
+    /// Read the next complete line (without its `\n`) into `out`,
+    /// returning its `(start, end)` byte span — `end` is the offset just
+    /// past the terminator, i.e. the next line start.  Returns `None`
+    /// when the cursor has reached `limit`, when the file has no more
+    /// bytes, or when only a PARTIAL line is available: the partial tail
+    /// is pushed back (the reader rewinds) and will be retried on the
+    /// next call, by which time the writer may have finished it.
+    ///
+    /// `out` is caller-owned so the steady-state loop reuses one
+    /// allocation forever.
+    pub fn next_line_into(
+        &mut self,
+        limit: u64,
+        out: &mut String,
+    ) -> anyhow::Result<Option<(u64, u64)>> {
+        if self.pos >= limit {
+            return Ok(None);
+        }
+        out.clear();
+        let n = self.reader.read_line(out)?;
+        if n == 0 {
+            return Ok(None);
+        }
+        if !out.ends_with('\n') {
+            // Partial tail: the writer is mid-line.  Push it back and
+            // wait; consuming it now would split one sentence in two
+            // and make training depend on poll timing.
+            self.reader.seek_relative(-(n as i64))?;
+            out.clear();
+            return Ok(None);
+        }
+        let start = self.pos;
+        self.pos += n as u64;
+        out.truncate(out.trim_end_matches(['\n', '\r']).len());
+        Ok(Some((start, self.pos)))
+    }
+}
+
+/// Parse a `--follow` spec; only `tcp:<addr>` is understood.
+pub fn parse_follow(spec: &str) -> anyhow::Result<&str> {
+    match spec.strip_prefix("tcp:") {
+        Some(addr) if !addr.is_empty() => Ok(addr),
+        _ => anyhow::bail!("stream: --follow expects tcp:HOST:PORT, got '{spec}'"),
+    }
+}
+
+/// Bind the ingest listener up front so an unusable address fails the
+/// run immediately instead of surfacing at thread-join time.
+pub fn follow_listener(addr: &str) -> anyhow::Result<TcpListener> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("stream: cannot listen on {addr}: {e}"))?;
+    listener.set_nonblocking(true)?;
+    Ok(listener)
+}
+
+/// Accept connections sequentially and append their complete
+/// `\n`-terminated lines to `corpus`; a dangling partial line at
+/// connection close is completed with a `\n` (the sender hung up
+/// mid-line — dropping the words would silently lose data).  Returns
+/// the number of bytes appended.  Checks `stop` between reads.
+pub fn pump_tcp(listener: &TcpListener, corpus: &Path, stop: &AtomicBool) -> anyhow::Result<u64> {
+    let mut sink = OpenOptions::new().append(true).create(true).open(corpus)?;
+    let mut appended = 0u64;
+    let mut carry: Vec<u8> = Vec::new();
+    let mut buf = [0u8; 64 * 1024];
+    'accept: while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // The accepted socket may inherit the listener's
+                // nonblocking flag on some platforms; force blocking
+                // with a timeout so the stop flag stays responsive.
+                stream.set_nonblocking(false)?;
+                stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+                let mut stream = stream;
+                loop {
+                    if stop.load(Ordering::Acquire) {
+                        break 'accept;
+                    }
+                    match stream.read(&mut buf) {
+                        Ok(0) => break,
+                        Ok(n) => {
+                            carry.extend_from_slice(&buf[..n]);
+                            if let Some(cut) = carry.iter().rposition(|&b| b == b'\n') {
+                                sink.write_all(&carry[..=cut])?;
+                                sink.flush()?;
+                                appended += (cut + 1) as u64;
+                                carry.drain(..=cut);
+                            }
+                        }
+                        Err(e)
+                            if e.kind() == std::io::ErrorKind::WouldBlock
+                                || e.kind() == std::io::ErrorKind::TimedOut =>
+                        {
+                            continue;
+                        }
+                        Err(e) => return Err(e.into()),
+                    }
+                }
+                if !carry.is_empty() {
+                    sink.write_all(&carry)?;
+                    sink.write_all(b"\n")?;
+                    sink.flush()?;
+                    appended += carry.len() as u64 + 1;
+                    carry.clear();
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(appended)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn tmp(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("pw2v_tail_{name}_{}", std::process::id()));
+        std::fs::write(&p, contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn yields_complete_lines_and_pushes_back_partials() {
+        let p = tmp("partial", b"alpha beta\ngamma");
+        let mut t = TailReader::open(&p, 0).unwrap();
+        let mut line = String::new();
+        let span = t.next_line_into(u64::MAX, &mut line).unwrap();
+        assert_eq!(span, Some((0, 11)));
+        assert_eq!(line, "alpha beta");
+        // "gamma" has no terminator yet: pushed back, not consumed.
+        assert_eq!(t.next_line_into(u64::MAX, &mut line).unwrap(), None);
+        assert_eq!(t.pos(), 11);
+        // Writer finishes the line and adds another.
+        let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+        f.write_all(b" delta\nepsilon\n").unwrap();
+        drop(f);
+        let span = t.next_line_into(u64::MAX, &mut line).unwrap();
+        assert_eq!(span, Some((11, 23)));
+        assert_eq!(line, "gamma delta");
+        let span = t.next_line_into(u64::MAX, &mut line).unwrap();
+        assert_eq!(span, Some((23, 31)));
+        assert_eq!(line, "epsilon");
+        assert_eq!(t.next_line_into(u64::MAX, &mut line).unwrap(), None);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn limit_is_respected() {
+        let p = tmp("limit", b"one\ntwo\nthree\n");
+        let mut t = TailReader::open(&p, 0).unwrap();
+        let mut line = String::new();
+        assert!(t.next_line_into(4, &mut line).unwrap().is_some());
+        assert_eq!(line, "one");
+        // Cursor is at 4 == limit: nothing more inside the window.
+        assert_eq!(t.next_line_into(4, &mut line).unwrap(), None);
+        // A wider window resumes exactly where we stopped.
+        assert!(t.next_line_into(8, &mut line).unwrap().is_some());
+        assert_eq!(line, "two");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn open_past_eof_waits_for_growth() {
+        let p = tmp("past_eof", b"short\n");
+        let mut t = TailReader::open(&p, 6).unwrap();
+        let mut line = String::new();
+        assert_eq!(t.next_line_into(u64::MAX, &mut line).unwrap(), None);
+        let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+        f.write_all(b"grown\n").unwrap();
+        drop(f);
+        assert_eq!(
+            t.next_line_into(u64::MAX, &mut line).unwrap(),
+            Some((6, 12))
+        );
+        assert_eq!(line, "grown");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn parse_follow_accepts_tcp_only() {
+        assert_eq!(parse_follow("tcp:127.0.0.1:0").unwrap(), "127.0.0.1:0");
+        assert!(parse_follow("udp:1.2.3.4:5").is_err());
+        assert!(parse_follow("tcp:").is_err());
+    }
+
+    #[test]
+    fn pump_appends_lines_and_completes_partial_tail() {
+        use std::net::TcpStream;
+        let p = tmp("pump", b"");
+        let listener = follow_listener("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let pump = s.spawn(|| pump_tcp(&listener, &p, &stop));
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(b"fed line one\nfed line").unwrap();
+            drop(c); // partial "fed line" gets its newline at close
+            // Wait until the feeder has flushed both lines.
+            for _ in 0..200 {
+                if std::fs::metadata(&p).map(|m| m.len()).unwrap_or(0) >= 22 {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            stop.store(true, Ordering::Release);
+            let appended = pump.join().unwrap().unwrap();
+            assert_eq!(appended, 22);
+        });
+        assert_eq!(std::fs::read(&p).unwrap(), b"fed line one\nfed line\n");
+        std::fs::remove_file(&p).ok();
+    }
+}

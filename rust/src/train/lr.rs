@@ -20,7 +20,10 @@ pub struct LrState {
     /// Sharpness multiplier on the progress term (1.0 = original).
     decay_mult: f32,
     /// Total words the run will process (epochs × corpus words).
-    total: u64,
+    /// Atomic because a STREAMING run's horizon grows while workers
+    /// read it ([`extend_total`](Self::extend_total)); batch runs store
+    /// it once and the schedule is bit-for-bit the plain-field version.
+    total: AtomicU64,
     words_done: AtomicU64,
 }
 
@@ -32,7 +35,7 @@ impl LrState {
             start,
             min: start * min_frac,
             decay_mult: 1.0,
-            total: total.max(1),
+            total: AtomicU64::new(total.max(1)),
             words_done: AtomicU64::new(0),
         }
     }
@@ -52,7 +55,7 @@ impl LrState {
             start,
             min: start * min_frac,
             decay_mult: 1.0,
-            total: total.max(1),
+            total: AtomicU64::new(total.max(1)),
             words_done: AtomicU64::new(0),
         }
     }
@@ -65,8 +68,27 @@ impl LrState {
 
     /// Rate at an absolute progress point.
     pub fn at(&self, words_done: u64) -> f32 {
-        let p = words_done as f32 / self.total as f32;
+        let p = words_done as f32 / self.total.load(Ordering::Relaxed) as f32;
         (self.start * (1.0 - p * self.decay_mult)).max(self.min)
+    }
+
+    /// Total words the schedule currently spans.
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Grow the schedule horizon by `more` words (streaming ingest: the
+    /// corpus grew, so the linear decay now spans the longer run).  The
+    /// already-consumed progress is unchanged — the rate simply decays
+    /// more slowly from here on, which is the standard online treatment
+    /// of an open-ended corpus.
+    pub fn extend_total(&self, more: u64) {
+        self.total.fetch_add(more, Ordering::Relaxed);
+    }
+
+    /// Pin the horizon to an absolute value (stream checkpoint resume).
+    pub fn restore_total(&self, total: u64) {
+        self.total.store(total.max(1), Ordering::Relaxed);
     }
 
     pub fn current(&self) -> f32 {
@@ -214,6 +236,21 @@ mod tests {
         assert!((lr.current() - 0.05).abs() < 1e-6);
         lr.advance(25);
         assert!((lr.current() - 0.025).abs() < 1e-6);
+    }
+
+    #[test]
+    fn extend_total_flattens_future_decay_only() {
+        let lr = LrState::linear(0.1, 0.0, 100);
+        lr.advance(50);
+        let before = lr.current();
+        lr.extend_total(100); // horizon now 200; progress unchanged
+        assert_eq!(lr.total(), 200);
+        assert!(lr.current() > before, "same words over a longer run");
+        assert!((lr.current() - 0.1 * 0.75).abs() < 1e-6);
+        let pinned = LrState::linear(0.1, 0.0, 123);
+        pinned.restore_total(200);
+        pinned.restore(lr.words_done());
+        assert!((pinned.current() - lr.current()).abs() < 1e-9);
     }
 
     #[test]

@@ -20,12 +20,14 @@ use std::collections::HashMap;
 use std::io::Write;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use pw2v::config::{KernelMode, QuantMode, SigmoidMode};
-use pw2v::corpus::encoded::EncodedCorpus;
-use pw2v::corpus::vocab::Vocab;
+use pw2v::config::{Backend as BackendKind, KernelMode, QuantMode, SigmoidMode};
+use pw2v::EncodedCorpus;
+use pw2v::Vocab;
+use pw2v::{StreamOptions, StreamTrainer, TrainConfig};
 use pw2v::corpus::MAX_SENTENCE_LEN;
 use pw2v::model::{Embedding, ShardMap, SharedModel};
-use pw2v::serve::{RowStore, Scratch as ServeScratch, ServeEngine};
+use pw2v::serve::Scratch as ServeScratch;
+use pw2v::{RowStore, ServeEngine};
 use pw2v::sampling::batch::{BatchBuilder, SuperbatchArena};
 use pw2v::sampling::unigram::UnigramSampler;
 use pw2v::train::route::{Exchange, Outbox, RouteSink, RowRouter};
@@ -420,4 +422,111 @@ fn steady_state_training_loop_allocates_nothing() {
             after - before
         );
     }
+
+    // ------------------------------------------------------------------
+    // Streaming leg (PR 9): the ingest→train loop — tail read into the
+    // reused line buffer, tokenize, subsample, fill_arena, flush — must
+    // allocate NOTHING at steady state while every arriving word is
+    // known.  Allocation is permitted ONLY on admission events (OOV
+    // candidate bookkeeping, the alias-table rebuild on admit); after an
+    // admission the loop must return to zero.  The growth schedule is
+    // appended up front and replayed through explicit poll limits so
+    // the measured window performs no file writes of its own.
+    // ------------------------------------------------------------------
+    let stream_path = std::env::temp_dir().join(format!(
+        "pw2v_alloc_stream_{}.txt",
+        std::process::id()
+    ));
+    let fixture_block: String = {
+        let mut s = String::new();
+        for sent in &sentences {
+            let line: Vec<&str> = sent.iter().map(|&id| vocab.word(id)).collect();
+            s.push_str(&line.join(" "));
+            s.push('\n');
+        }
+        s
+    };
+    std::fs::write(&stream_path, &fixture_block).unwrap();
+    let seed_len = std::fs::metadata(&stream_path).unwrap().len();
+
+    let mut scfg = TrainConfig::test_tiny();
+    scfg.backend = BackendKind::Gemm;
+    scfg.threads = 1;
+    scfg.epochs = 1;
+    scfg.sample = 1e-3;
+    scfg.seed = 7;
+    scfg.vocab_reserve = 16; // admission armed, so its no-op cost is measured
+    let mut tr = StreamTrainer::open(&scfg, &stream_path, StreamOptions::default())
+        .unwrap();
+    assert!(tr.poll_once(seed_len).unwrap());
+
+    // Phase 1: 30 known-vocab growth rounds.  Phase 2: an OOV burst.
+    // Phase 3: 10 more known-vocab rounds after the admission.
+    let mut appender = std::fs::OpenOptions::new()
+        .append(true)
+        .open(&stream_path)
+        .unwrap();
+    let mut limits: Vec<u64> = Vec::new();
+    let mut end = seed_len;
+    for _ in 0..30 {
+        appender.write_all(fixture_block.as_bytes()).unwrap();
+        end += fixture_block.len() as u64;
+        limits.push(end);
+    }
+    let oov_line = format!("novelalpha novelbeta {}", fixture_block.lines().next().unwrap());
+    appender.write_all(oov_line.as_bytes()).unwrap();
+    appender.write_all(b"\n").unwrap();
+    end += oov_line.len() as u64 + 1;
+    let oov_limit = end;
+    let mut limits_after: Vec<u64> = Vec::new();
+    for _ in 0..10 {
+        appender.write_all(fixture_block.as_bytes()).unwrap();
+        end += fixture_block.len() as u64;
+        limits_after.push(end);
+    }
+    drop(appender);
+
+    for l in &limits[..5] {
+        tr.poll_once(*l).unwrap(); // warmup: line buffer + backend high-water
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for l in &limits[5..] {
+        tr.poll_once(*l).unwrap();
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state STREAM ingest→train loop allocated {} times over 25 \
+         known-vocab growth rounds",
+        after - before
+    );
+
+    // Admission event: first poll observes the OOV pair, second admits
+    // them (allocations here are the allowed admission cost).
+    tr.poll_once(oov_limit).unwrap();
+    tr.poll_once(oov_limit).unwrap();
+    assert_eq!(
+        tr.snapshot().admissions,
+        2,
+        "OOV burst was not admitted (candidates: observe → admit)"
+    );
+
+    // Back to zero after the admission: the rebuilt tables are reused.
+    for l in &limits_after[..3] {
+        tr.poll_once(*l).unwrap();
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for l in &limits_after[3..] {
+        tr.poll_once(*l).unwrap();
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "post-admission STREAM loop allocated {} times over 7 known-vocab \
+         rounds (admission cost must not leak into steady state)",
+        after - before
+    );
+    std::fs::remove_file(&stream_path).ok();
 }

@@ -15,8 +15,8 @@
 //!   near-equality over ONE superbatch at small lr, not bit-equality.
 
 use pw2v::config::KernelMode;
-use pw2v::corpus::vocab::Vocab;
-use pw2v::model::SharedModel;
+use pw2v::Vocab;
+use pw2v::SharedModel;
 use pw2v::sampling::batch::{BatchBuilder, SuperbatchArena, Window};
 use pw2v::sampling::unigram::UnigramSampler;
 use pw2v::train::sgd_bidmach::BidmachBackend;

@@ -1,0 +1,147 @@
+//! CLI-compatibility contract, pinned over the real binary (cargo sets
+//! `CARGO_BIN_EXE_pw2v` for integration tests):
+//!
+//! - every subcommand — the pre-split set AND the new `encode`/`stream`
+//!   — answers `--help` with its own usage block;
+//! - bare `pw2v <corpus>` still works as an alias for
+//!   `train --corpus <corpus>` (the original single-purpose invocation);
+//! - unknown subcommands are rejected with a diagnostic;
+//! - errors name the subcommand that produced them.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+const SUBCOMMANDS: &[&str] = &[
+    "gen-corpus",
+    "encode",
+    "train",
+    "train-dist",
+    "stream",
+    "eval",
+    "serve",
+    "simulate",
+    "info",
+];
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_pw2v"))
+}
+
+fn run(args: &[&str]) -> Output {
+    bin().args(args).output().expect("spawn pw2v")
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stdout).into_owned()
+}
+
+fn stderr(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stderr).into_owned()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pw2v_cli_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn top_level_help_lists_every_subcommand() {
+    for invocation in [&[][..], &["help"][..], &["--help"][..]] {
+        let o = run(invocation);
+        assert!(o.status.success(), "{invocation:?}: {}", stderr(&o));
+        let out = stdout(&o);
+        for name in SUBCOMMANDS {
+            assert!(out.contains(name), "{invocation:?} help lacks {name}");
+        }
+    }
+}
+
+#[test]
+fn every_subcommand_answers_help_with_its_own_usage() {
+    for name in SUBCOMMANDS {
+        let o = run(&[name, "--help"]);
+        assert!(o.status.success(), "{name} --help failed: {}", stderr(&o));
+        let out = stdout(&o);
+        assert!(
+            out.contains(&format!("USAGE: pw2v {name}")),
+            "{name} --help does not lead with its usage:\n{out}"
+        );
+    }
+    // The training-family helps carry the shared flag table.
+    for name in ["train", "train-dist", "stream"] {
+        let out = stdout(&run(&[name, "--help"]));
+        for flag in ["--simd", "--corpus-cache", "--numa"] {
+            assert!(out.contains(flag), "{name} --help lacks shared flag {flag}");
+        }
+    }
+}
+
+#[test]
+fn bare_corpus_invocation_aliases_to_train() {
+    let corpus = tmp("alias.txt");
+    let vectors = tmp("alias.vec");
+    let mut text = String::new();
+    for i in 0..120 {
+        text.push_str(&format!("w{} w{} w{} w{}\n", i % 7, (i + 1) % 7, (i + 2) % 7, i % 5));
+    }
+    std::fs::write(&corpus, text).unwrap();
+
+    let o = run(&[
+        corpus.to_str().unwrap(),
+        "--backend",
+        "scalar",
+        "--dim",
+        "32",
+        "--epochs",
+        "1",
+        "--threads",
+        "1",
+        "--out",
+        vectors.to_str().unwrap(),
+    ]);
+    assert!(o.status.success(), "alias run failed: {}", stderr(&o));
+    assert!(
+        stderr(&o).contains("training:"),
+        "alias did not reach the trainer: {}",
+        stderr(&o)
+    );
+    let saved = std::fs::read_to_string(&vectors).unwrap();
+    assert!(saved.starts_with("7 32"), "unexpected vector header: {saved:.20}");
+    std::fs::remove_file(&corpus).ok();
+    std::fs::remove_file(&vectors).ok();
+}
+
+#[test]
+fn unknown_subcommand_is_rejected_with_a_diagnostic() {
+    let o = run(&["frobnicate"]);
+    assert!(!o.status.success());
+    let err = stderr(&o);
+    assert!(
+        err.contains("unknown subcommand 'frobnicate'"),
+        "unhelpful error: {err}"
+    );
+}
+
+#[test]
+fn errors_name_the_subcommand_that_produced_them() {
+    // train without a corpus; stream with a forbidden backend.
+    let o = run(&["train"]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("pw2v train"), "{}", stderr(&o));
+    assert!(stderr(&o).contains("--corpus"), "{}", stderr(&o));
+
+    let corpus = tmp("err.txt");
+    std::fs::write(&corpus, "a b c a b c\n").unwrap();
+    let o = run(&["stream", corpus.to_str().unwrap(), "--backend", "scalar"]);
+    assert!(!o.status.success());
+    let err = stderr(&o);
+    assert!(err.contains("pw2v stream"), "{err}");
+    assert!(err.contains("gemm"), "{err}");
+    std::fs::remove_file(&corpus).ok();
+}
+
+#[test]
+fn unknown_flags_still_fail_fast_per_subcommand() {
+    let o = run(&["simulate", "--figure", "3", "--typo", "1"]);
+    assert!(!o.status.success());
+    assert!(stderr(&o).contains("typo"), "{}", stderr(&o));
+}

@@ -2,7 +2,7 @@
 //! `numa_parity`).  Lives under `tests/common/` so cargo does not build
 //! it as its own test binary.
 
-use pw2v::model::SharedModel;
+use pw2v::SharedModel;
 
 /// Max |a − b| over both embedding matrices, plus max |a − init| — the
 /// drift-vs-movement machinery both parity suites bound racy/arena

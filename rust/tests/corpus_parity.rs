@@ -18,15 +18,17 @@
 
 use std::path::{Path, PathBuf};
 
-use pw2v::config::{CorpusCacheMode, KernelMode, TrainConfig};
-use pw2v::corpus::encoded::{EncodedCorpus, CACHE_SUFFIX, MAGIC};
+use pw2v::config::{CorpusCacheMode, KernelMode};
+use pw2v::TrainConfig;
+use pw2v::corpus::encoded::{CACHE_SUFFIX, MAGIC};
+use pw2v::EncodedCorpus;
 use pw2v::corpus::reader::SentenceReader;
 use pw2v::corpus::shard::shards_for_len;
 use pw2v::corpus::source::Corpus;
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
-use pw2v::corpus::vocab::Vocab;
+use pw2v::Vocab;
 use pw2v::corpus::MAX_SENTENCE_LEN;
-use pw2v::model::SharedModel;
+use pw2v::SharedModel;
 use pw2v::train;
 use pw2v::util::rng::Xoshiro256ss;
 

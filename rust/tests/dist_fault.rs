@@ -27,15 +27,15 @@ use std::process::{Child, Command, Stdio};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use pw2v::config::TrainConfig;
+use pw2v::TrainConfig;
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
-use pw2v::corpus::vocab::Vocab;
+use pw2v::Vocab;
 use pw2v::dist::{
     average_row, train_tcp_ring_from, AttemptStart, CheckpointPolicy, DistConfig, DistOutcome,
     NetConfig, RingSpec,
 };
 use pw2v::model::io as model_io;
-use pw2v::model::SharedModel;
+use pw2v::SharedModel;
 
 static SERIAL: Mutex<()> = Mutex::new(());
 

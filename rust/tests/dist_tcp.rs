@@ -22,7 +22,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
-use pw2v::corpus::vocab::Vocab;
+use pw2v::Vocab;
 use pw2v::eval;
 use pw2v::model::io as model_io;
 

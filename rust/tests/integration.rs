@@ -5,9 +5,10 @@
 use std::path::PathBuf;
 use std::process::Command;
 
-use pw2v::config::{Backend, TrainConfig};
+use pw2v::config::Backend;
+use pw2v::TrainConfig;
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
-use pw2v::corpus::vocab::Vocab;
+use pw2v::Vocab;
 use pw2v::dist::{train_distributed, DistConfig, SyncPolicy};
 use pw2v::eval;
 use pw2v::model::{io as model_io, SharedModel};

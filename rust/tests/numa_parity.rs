@@ -20,11 +20,12 @@
 //! two-node topology on a one-node runner) and pinned-scalar dispatch,
 //! so `--numa auto` legs exercise real multi-node sharding geometry.
 
-use pw2v::config::{KernelMode, TrainConfig};
+use pw2v::config::KernelMode;
+use pw2v::TrainConfig;
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
-use pw2v::corpus::vocab::Vocab;
+use pw2v::Vocab;
 use pw2v::dist::{train_distributed, DistConfig};
-use pw2v::model::SharedModel;
+use pw2v::SharedModel;
 use pw2v::runtime::topology::NumaMode;
 use pw2v::train;
 

@@ -6,7 +6,7 @@ use pw2v::corpus::shard::{shards_for_len, subshards};
 use pw2v::eval::spearman::spearman;
 use pw2v::linalg::simd::{self, SimdMode};
 use pw2v::linalg::{dot, gemm_nn, gemm_nt, gemm_tn};
-use pw2v::model::SharedModel;
+use pw2v::SharedModel;
 use pw2v::sampling::batch::Window;
 use pw2v::train::sgd_gemm::GemmBackend;
 use pw2v::train::Backend;

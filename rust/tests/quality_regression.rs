@@ -18,11 +18,12 @@
 //! pinned-scalar dispatch, a synthetic two-node topology, and the
 //! buffered (non-mmap) cache reader.
 
-use pw2v::config::{Backend, CorpusCacheMode, KernelMode, TrainConfig};
+use pw2v::config::{Backend, CorpusCacheMode, KernelMode};
+use pw2v::TrainConfig;
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
-use pw2v::corpus::vocab::Vocab;
+use pw2v::Vocab;
 use pw2v::eval;
-use pw2v::model::SharedModel;
+use pw2v::SharedModel;
 use pw2v::runtime::topology::NumaMode;
 use pw2v::train;
 use pw2v::train::route::RouteMode;
@@ -186,6 +187,6 @@ fn quality_floors_across_backend_kernel_route_matrix() {
     }
 
     let cache =
-        pw2v::corpus::encoded::EncodedCorpus::cache_path_for(&f.corpus);
+        pw2v::EncodedCorpus::cache_path_for(&f.corpus);
     std::fs::remove_file(&cache).ok();
 }

@@ -23,9 +23,10 @@
 //! remote-row counters are process-wide, so concurrent numa-mode
 //! trainings from sibling tests would pollute the deltas.
 
-use pw2v::config::{CorpusCacheMode, KernelMode, TrainConfig};
+use pw2v::config::{CorpusCacheMode, KernelMode};
+use pw2v::TrainConfig;
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
-use pw2v::corpus::vocab::Vocab;
+use pw2v::Vocab;
 use pw2v::model::{reset_row_access_stats, row_access_stats, SharedModel};
 use pw2v::runtime::topology::NumaMode;
 use pw2v::train;
@@ -110,7 +111,7 @@ fn single_thread_bitwise_across_route_modes() {
 fn routed_encoded_cache_matches_text_bitwise() {
     let _g = lock();
     let (path, vocab) = tiny_corpus(97);
-    let cache = pw2v::corpus::encoded::EncodedCorpus::cache_path_for(&path);
+    let cache = pw2v::EncodedCorpus::cache_path_for(&path);
     std::fs::remove_file(&cache).ok();
     let mut cfg = TrainConfig::test_tiny();
     cfg.sample = 0.0;

@@ -22,14 +22,16 @@
 //! `PW2V_SIMD=scalar` (the CI dispatch-matrix leg) pins the whole file
 //! to the portable kernels, upgrading every tolerance to exactness.
 
-use pw2v::config::{QuantMode, TrainConfig};
+use pw2v::config::QuantMode;
+use pw2v::TrainConfig;
 use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
-use pw2v::corpus::vocab::Vocab;
+use pw2v::Vocab;
 use pw2v::eval;
 use pw2v::eval::analogy::normalized_matrix;
 use pw2v::linalg::simd::{self, SimdLevel, SimdMode};
 use pw2v::model::{Embedding, SharedModel};
-use pw2v::serve::{RowStore, Scratch, ServeEngine};
+use pw2v::serve::Scratch;
+use pw2v::{RowStore, ServeEngine};
 use pw2v::train;
 
 /// Near-tie margin for AVX2 rank swaps: two candidates whose ORACLE

@@ -1,0 +1,304 @@
+//! Streaming-trainer acceptance suite (the stream PR's tier-1 gate).
+//!
+//! 1. A frozen-vocabulary stream over a file that NEVER grows is
+//!    BITWISE identical to the batch trainer on the same bytes — for
+//!    both GEMM kernel organisations, against the batch run's
+//!    `--corpus-cache` path (itself pinned bitwise-equal to text by
+//!    `corpus_parity`).  Streaming is a strict generalisation of batch
+//!    training, not a different trainer.
+//! 2. A stream killed mid-run and `--resume`d from its two-slot
+//!    checkpoint is BITWISE identical to the uninterrupted stream over
+//!    the same growth schedule: the checkpoint replays from a superbatch
+//!    flush boundary, and the gemm backend is stateless between
+//!    flushes.
+//! 3. A run with planted LATE words — held out of the cold-start seed
+//!    and fed only through growth — admits them into reserve rows and
+//!    still clears the `quality_regression` Spearman floor, with the
+//!    late words resolving in the final vocabulary.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use pw2v::config::{Backend, CorpusCacheMode, KernelMode};
+use pw2v::corpus::synthetic::{LatentModel, SyntheticConfig};
+use pw2v::eval;
+use pw2v::serve::RowStore;
+use pw2v::stream::ckpt::sidecar_path;
+use pw2v::train;
+use pw2v::{
+    EncodedCorpus, SharedModel, StreamOptions, StreamTrainer, TrainConfig, Vocab,
+};
+
+/// Same floor as `quality_regression` (chance rho is ~0).
+const RHO_FLOOR: f64 = 15.0;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pw2v_stream_{}_{name}", std::process::id()))
+}
+
+fn append(path: &Path, text: &str) {
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(path)
+        .unwrap();
+    f.write_all(text.as_bytes()).unwrap();
+}
+
+fn stream_cfg(kernel: KernelMode) -> TrainConfig {
+    let mut cfg = TrainConfig::test_tiny();
+    cfg.backend = Backend::Gemm;
+    cfg.kernel = kernel;
+    cfg.threads = 1;
+    cfg.epochs = 1;
+    cfg.sample = 1e-3; // exercise the subsampler on both paths
+    cfg.seed = 99;
+    cfg
+}
+
+fn synthetic_text(seed: u64, tokens: usize) -> String {
+    let mut scfg = SyntheticConfig::test_tiny();
+    scfg.tokens = tokens;
+    scfg.seed = seed;
+    let lm = LatentModel::new(scfg);
+    let path = tmp(&format!("gen_{seed}.txt"));
+    lm.write_corpus(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    text
+}
+
+fn assert_models_bitwise(a: &SharedModel, b: &SharedModel, rows: usize, tag: &str) {
+    for r in 0..rows as u32 {
+        assert_eq!(a.m_in().row(r), b.m_in().row(r), "{tag}: M_in row {r}");
+        assert_eq!(a.m_out().row(r), b.m_out().row(r), "{tag}: M_out row {r}");
+    }
+}
+
+/// Acceptance criterion 1: frozen vocab, never-growing file, both
+/// kernels — stream == batch, bit for bit.
+#[test]
+fn frozen_stream_matches_batch_bitwise() {
+    let text = synthetic_text(71, 25_000);
+    let path = tmp("frozen.txt");
+    std::fs::write(&path, &text).unwrap();
+    let vocab = Vocab::build_from_file(&path, 1).unwrap();
+    let batch_cache = tmp("frozen.batch.u32");
+    let stream_cache = tmp("frozen.stream.u32");
+    let store_path = tmp("frozen.rst");
+    EncodedCorpus::build(&path, &vocab, &batch_cache).unwrap();
+
+    for kernel in [KernelMode::Gemm3, KernelMode::Fused] {
+        let tag = format!("kernel {kernel}");
+        let mut cfg = stream_cfg(kernel);
+
+        cfg.corpus_cache = CorpusCacheMode::Path(batch_cache.clone());
+        let batch_model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
+        let batch_out = train::train(&cfg, &path, &vocab, &batch_model).unwrap();
+
+        cfg.corpus_cache = CorpusCacheMode::Path(stream_cache.clone());
+        let opts = StreamOptions {
+            store: Some(store_path.clone()),
+            ..StreamOptions::default()
+        };
+        let mut tr = StreamTrainer::open(&cfg, &path, opts).unwrap();
+        let len = std::fs::metadata(&path).unwrap().len();
+        assert!(tr.poll_once(len).unwrap(), "{tag}: nothing consumed");
+        let out = tr.finish().unwrap();
+
+        assert_eq!(
+            batch_out.snapshot.words, out.snapshot.words,
+            "{tag}: word accounting"
+        );
+        assert_eq!(out.trained_bytes, len, "{tag}: cursor at EOF");
+        assert_eq!(out.admitted, 0, "{tag}: frozen vocab admits nothing");
+        assert_models_bitwise(&batch_model, tr.model(), vocab.len(), &tag);
+
+        // The lazily synced cache must cover exactly the trained bytes
+        // and open under the same vocabulary.
+        let enc = EncodedCorpus::open(&stream_cache, &vocab).unwrap();
+        assert_eq!(enc.text_len(), len, "{tag}: cache covers the corpus");
+        // Finish without a checkpoint base still exports the store, at
+        // generation 0 (no checkpoint was ever taken).
+        let st = RowStore::open(&store_path).unwrap();
+        assert_eq!(st.n_rows(), vocab.len(), "{tag}: store rows");
+        assert_eq!(st.generation(), 0, "{tag}: store generation");
+
+        std::fs::remove_file(&stream_cache).ok();
+        std::fs::remove_file(&store_path).ok();
+    }
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&batch_cache).ok();
+}
+
+/// Acceptance criterion 2: kill + `--resume` is bitwise identical to
+/// the uninterrupted stream over the same growth schedule.
+#[test]
+fn killed_and_resumed_stream_matches_uninterrupted() {
+    let text = synthetic_text(72, 25_000);
+    let lines: Vec<&str> = text.lines().collect();
+    let split = lines.len() * 3 / 5;
+    let seed_part: String = lines[..split]
+        .iter()
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let growth_part: String = lines[split..]
+        .iter()
+        .map(|l| format!("{l}\n"))
+        .collect();
+
+    let cfg = stream_cfg(KernelMode::Fused);
+    let run = |name: &str, kill: bool| -> (SharedModel, u64, f32) {
+        let path = tmp(&format!("resume_{name}.txt"));
+        let base = tmp(&format!("resume_{name}.ckpt"));
+        std::fs::write(&path, &seed_part).unwrap();
+        let seed_len = std::fs::metadata(&path).unwrap().len();
+        let opts = StreamOptions {
+            checkpoint: Some(base.clone()),
+            ckpt_every: 1,
+            ..StreamOptions::default()
+        };
+        let mut tr = StreamTrainer::open(&cfg, &path, opts.clone()).unwrap();
+        tr.poll_once(seed_len).unwrap();
+        if kill {
+            // Superbatches flushed (and checkpointed) during the seed
+            // segment; the un-flushed ragged tail past the last
+            // checkpoint is what a real kill discards and replays.
+            assert!(tr.snapshot().calls > 0, "seed part too small to flush");
+            assert!(sidecar_path(&base).exists(), "no checkpoint before kill");
+            drop(tr);
+            append(&path, &growth_part);
+            let opts = StreamOptions {
+                resume: true,
+                ..opts
+            };
+            tr = StreamTrainer::open(&cfg, &path, opts).unwrap();
+        } else {
+            append(&path, &growth_part);
+        }
+        let len = std::fs::metadata(&path).unwrap().len();
+        tr.poll_once(len).unwrap();
+        let out = tr.finish().unwrap();
+        let words = out.snapshot.words;
+        let lr = out.final_lr;
+        let model = SharedModel::new(tr.model().m_in().clone(), tr.model().m_out().clone());
+        for p in [&path, &sidecar_path(&base)] {
+            std::fs::remove_file(p).ok();
+        }
+        for slot in 0..2 {
+            std::fs::remove_file(pw2v::model::io::checkpoint_slot_path(&base, 0, slot)).ok();
+        }
+        (model, words, lr)
+    };
+
+    let (ref_model, ref_words, ref_lr) = run("ref", false);
+    let (res_model, res_words, res_lr) = run("kill", true);
+    assert_eq!(ref_words, res_words, "word accounting across kill/resume");
+    assert_eq!(ref_lr.to_bits(), res_lr.to_bits(), "final lr");
+    assert_eq!(ref_model.vocab(), res_model.vocab());
+    assert_models_bitwise(&ref_model, &res_model, ref_model.vocab(), "kill/resume");
+}
+
+/// Acceptance criterion 3: planted late words stream in through growth,
+/// get admitted into reserve rows, and the run still clears the
+/// `quality_regression` Spearman floor.
+#[test]
+fn admission_run_clears_quality_floor_with_planted_late_words() {
+    let scfg = SyntheticConfig {
+        vocab: 2_000,
+        tokens: 300_000,
+        clusters: 20,
+        beta: 5.0,
+        seed: 29,
+        ..SyntheticConfig::default()
+    };
+    let latent = LatentModel::new(scfg);
+    let path = tmp("admit.txt");
+    latent.write_corpus(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+
+    // Plant the late words: pick moderately rare tokens, then hold every
+    // line containing one of them out of the cold-start seed.
+    let full_vocab = Vocab::build_from_file(&path, 1).unwrap();
+    let mut late: Vec<&str> = (0..full_vocab.len() as u32)
+        .map(|i| full_vocab.word(i))
+        .filter(|w| {
+            let c = full_vocab.counts()[full_vocab.id(w).unwrap() as usize];
+            (3..=30).contains(&c)
+        })
+        .take(12)
+        .collect();
+    assert!(late.len() >= 8, "fixture has too few rare words to plant");
+    let is_late_line =
+        |l: &str| l.split_ascii_whitespace().any(|t| late.contains(&t));
+    let seed_part: String = text
+        .lines()
+        .filter(|l| !is_late_line(l))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let growth_lines: Vec<&str> = text.lines().filter(|l| is_late_line(l)).collect();
+    assert!(!growth_lines.is_empty());
+    std::fs::write(&path, &seed_part).unwrap();
+
+    let mut cfg = TrainConfig::default();
+    cfg.backend = Backend::Gemm;
+    cfg.kernel = KernelMode::Fused;
+    cfg.threads = 1;
+    cfg.epochs = 1;
+    cfg.dim = 48;
+    cfg.sample = 1e-3;
+    cfg.lr = 0.05;
+    // Admission threshold 1: a planted word is due after its first
+    // observed occurrence (their full-corpus counts go as low as 3).
+    cfg.min_count = 1;
+    cfg.vocab_reserve = 256;
+    let mut tr = StreamTrainer::open(&cfg, &path, StreamOptions::default()).unwrap();
+    let cold_len = tr.vocab().len();
+    for w in &late {
+        assert!(tr.vocab().id(w).is_none(), "{w} leaked into the seed vocab");
+    }
+    tr.poll_once(std::fs::metadata(&path).unwrap().len()).unwrap();
+
+    // Feed the held-out lines in chunks, polling between chunks so words
+    // admitted from one chunk train on the occurrences in the next.
+    for chunk in growth_lines.chunks(growth_lines.len().div_ceil(10).max(1)) {
+        let mut s = String::new();
+        for l in chunk {
+            s.push_str(l);
+            s.push('\n');
+        }
+        append(&path, &s);
+        tr.poll_once(std::fs::metadata(&path).unwrap().len()).unwrap();
+    }
+    // One idle poll so candidates from the final chunk can be admitted.
+    tr.poll_once(std::fs::metadata(&path).unwrap().len()).unwrap();
+    let out = tr.finish().unwrap();
+
+    assert!(
+        out.admitted >= late.len() as u64,
+        "only {} admissions for {} planted words",
+        out.admitted,
+        late.len()
+    );
+    assert!(out.vocab_len > cold_len, "vocab never grew");
+    for w in &late {
+        assert!(
+            tr.vocab().id(w).is_some(),
+            "planted word {w} was never admitted"
+        );
+    }
+
+    let sim_set = eval::gen_similarity_set(&latent, 200, 3);
+    let sim = eval::eval_similarity(&sim_set, tr.vocab(), tr.model().m_in());
+    assert!(
+        sim.pairs_covered > 150,
+        "similarity coverage {}/{}",
+        sim.pairs_covered,
+        sim.pairs_total
+    );
+    assert!(
+        sim.rho100 > RHO_FLOOR,
+        "rho100 {:.1} below quality floor {RHO_FLOOR} after admission run",
+        sim.rho100
+    );
+    std::fs::remove_file(&path).ok();
+}
