@@ -30,6 +30,26 @@ fn randv(n: usize, seed: u64) -> Vec<f32> {
     (0..n).map(|_| r.next_f32() - 0.5).collect()
 }
 
+/// Dispatch levels this machine can run, widest first, scalar always
+/// last (the reference row every speedup normalises against).  Missing
+/// tiers are logged, not errors — the benches degrade per level.
+fn available_levels(bench: &str) -> Vec<SimdMode> {
+    let mut levels = Vec::new();
+    if simd::configure(SimdMode::Avx512).is_ok() {
+        levels.push(SimdMode::Avx512);
+    } else {
+        eprintln!("{bench}: no avx512f+avx512bw, avx512 tier skipped");
+    }
+    if simd::configure(SimdMode::Avx2).is_ok() {
+        levels.push(SimdMode::Avx2);
+    } else {
+        eprintln!("{bench}: no avx2+fma, avx2 tier skipped");
+    }
+    levels.push(SimdMode::Scalar);
+    simd::configure(SimdMode::Auto).expect("auto never fails");
+    levels
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env_tail(1);
     let mut report = args.flag("json").then(ThroughputReport::open_at_repo_root);
@@ -80,14 +100,9 @@ fn sgns_window_ablation(
         "micro_sgns_window",
         &["level", "kernel", "ns_per_window", "gflops", "windows_per_sec"],
     );
-    let levels: &[SimdMode] = if simd::configure(SimdMode::Avx2).is_ok() {
-        &[SimdMode::Avx2, SimdMode::Scalar]
-    } else {
-        eprintln!("micro_sgns_window: no avx2+fma, scalar level only");
-        &[SimdMode::Scalar]
-    };
+    let levels = available_levels("micro_sgns_window");
     let mut json_levels: BTreeMap<String, Json> = BTreeMap::new();
-    for &mode in levels {
+    for &mode in &levels {
         let level = simd::configure(mode)?;
         dwo_uniq.fill(0.0);
         let st3 = time(100, 2000, || {
@@ -141,11 +156,88 @@ fn sgns_window_ablation(
             "sgns window @({b},{s},{d}) [{level}]: fused {ratio:.2}x over \
              gemm3 (acceptance floor 1.3x single-thread)"
         );
+
+        // Cross-window reuse ablation (`--reuse sentence`): a run of R=8
+        // windows sharing one negative set — 8 sequential per-window
+        // fused calls (the `--reuse off` traffic pattern, Wo rows
+        // re-read per window) vs ONE `sgns_fused_run` (negative rows +
+        // dWo accumulators carried across the run).  Same math bitwise;
+        // the ratio is pure memory-traffic win.
+        let r_n = 8usize;
+        let wi_run = randv(r_n * b * d, 23);
+        let offs: Vec<u32> = (0..=r_n as u32).map(|w| w * b as u32).collect();
+        let positives: [u32; 8] = [3, 1, 5, 7, 11, 13, 21, 27];
+        let mut slots_run = Vec::with_capacity(r_n * s);
+        for w in 0..r_n {
+            slots_run.push(positives[w]);
+            slots_run.extend_from_slice(&slots[1..]);
+        }
+        let mut err_run = vec![0.0f32; r_n * b * s];
+        let mut dwi_run = vec![0.0f32; r_n * b * d];
+        dwo_uniq.fill(0.0);
+        let st_seq = time(50, 500, || {
+            for w in 0..r_n {
+                let (lo, hi) = (w * b, (w + 1) * b);
+                simd::sgns_fused(
+                    s,
+                    d,
+                    lr,
+                    &wi_run[lo * d..hi * d],
+                    &wo_uniq,
+                    &slots_run[w * s..(w + 1) * s],
+                    &mut err_run[lo * s..hi * s],
+                    &mut dwi_run[lo * d..hi * d],
+                    &mut dwo_uniq,
+                );
+            }
+            std::hint::black_box(&dwo_uniq);
+        });
+        dwo_uniq.fill(0.0);
+        let st_run = time(50, 500, || {
+            simd::sgns_fused_run(
+                s,
+                d,
+                lr,
+                &wi_run,
+                &offs,
+                &wo_uniq,
+                &slots_run,
+                &mut err_run,
+                &mut dwi_run,
+                &mut dwo_uniq,
+            );
+            std::hint::black_box(&dwo_uniq);
+        });
+        let reuse_ratio = speedup(&st_run, &st_seq); // >1: run kernel wins
+        let mut run_row = |kernel: &str, st: &pw2v::bench::Stats| {
+            table.row(vec![
+                level.to_string(),
+                kernel.into(),
+                format!("{:.0}", st.median / r_n as f64 * 1e9),
+                format!("{:.2}", flops * r_n as f64 / st.median / 1e9),
+                si(r_n as f64 / st.median),
+            ]);
+        };
+        run_row("fused_seq_r8", &st_seq);
+        run_row("fused_run_r8", &st_run);
+        println!(
+            "sgns reuse run @R={r_n} [{level}]: run kernel {reuse_ratio:.2}x \
+             over sequential fused (cross-window negative reuse)"
+        );
+
         let per_kernel = |st: &pw2v::bench::Stats| {
             Json::obj([
                 ("ns_per_window", Json::num(st.median * 1e9)),
                 ("gflops", Json::num(flops / st.median / 1e9)),
                 ("words_per_sec", Json::num(1.0 / st.median)),
+            ])
+        };
+        let per_run_window = |st: &pw2v::bench::Stats| {
+            let per_window = st.median / r_n as f64;
+            Json::obj([
+                ("ns_per_window", Json::num(per_window * 1e9)),
+                ("gflops", Json::num(flops / per_window / 1e9)),
+                ("words_per_sec", Json::num(1.0 / per_window)),
             ])
         };
         json_levels.insert(
@@ -154,6 +246,9 @@ fn sgns_window_ablation(
                 ("fused", per_kernel(&stf)),
                 ("gemm3", per_kernel(&st3)),
                 ("fused_over_gemm3", Json::num(ratio)),
+                ("fused_seq_r8", per_run_window(&st_seq)),
+                ("fused_run_r8", per_run_window(&st_run)),
+                ("fused_reuse_over_off", Json::num(reuse_ratio)),
             ]),
         );
     }
@@ -170,6 +265,7 @@ fn sgns_window_ablation(
                         ("s", Json::Num(s as f64)),
                         ("d", Json::Num(d as f64)),
                         ("uniq_rows", Json::Num(u as f64)),
+                        ("run_windows", Json::Num(8.0)),
                     ]),
                 ),
                 ("levels", Json::Obj(json_levels)),
@@ -205,19 +301,17 @@ fn simd_dispatch_bench(
     let iters = 2000;
 
     let mut speedups: Vec<(String, f64)> = Vec::new();
-    let levels: &[SimdMode] = if simd::configure(SimdMode::Avx2).is_ok() {
-        &[SimdMode::Avx2, SimdMode::Scalar]
-    } else {
-        eprintln!("micro_simd_dispatch: no avx2+fma, scalar level only");
-        &[SimdMode::Scalar]
-    };
-    let mut per_kernel: HashMap<&'static str, Vec<pw2v::bench::Stats>> =
+    let levels = available_levels("micro_simd_dispatch");
+    let mut per_kernel: HashMap<&'static str, Vec<(String, pw2v::bench::Stats)>> =
         HashMap::new();
-    for &mode in levels {
+    for &mode in &levels {
         let level = simd::configure(mode)?;
         let mut level_json: BTreeMap<String, Json> = BTreeMap::new();
         let mut entry = |name: &'static str, st: pw2v::bench::Stats, flops: f64| {
-            per_kernel.entry(name).or_default().push(st);
+            per_kernel
+                .entry(name)
+                .or_default()
+                .push((level.to_string(), st));
             level_json.insert(
                 name.to_string(),
                 Json::obj([
@@ -287,21 +381,36 @@ fn simd_dispatch_bench(
         r.set("micro_kernels", Json::Obj(json_levels));
     }
 
-    if levels.len() == 2 {
+    if levels.len() > 1 {
+        // Pair every vector tier against the scalar reference BY NAME —
+        // never by index, so the table stays correct whichever subset of
+        // {avx512, avx2} this machine has.
         let mut table = BenchTable::new(
             "micro_simd_speedup",
-            &["kernel", "avx2_over_scalar"],
+            &["kernel", "level", "over_scalar"],
         );
         for name in ["dot", "axpy", "gemm_nt", "gemm_nn", "gemm_tn", "sgns_err"] {
-            let t = &per_kernel[name];
-            // t[0] ran under avx2, t[1] under scalar.
-            let ratio = pw2v::bench::speedup(&t[0], &t[1]);
-            speedups.push((name.to_string(), ratio));
-            table.row(vec![name.into(), format!("{ratio:.2}x")]);
+            let runs = &per_kernel[name];
+            let scalar = runs
+                .iter()
+                .find(|(l, _)| l == "scalar")
+                .expect("scalar tier always runs");
+            for (lvl, st) in runs {
+                if lvl == "scalar" {
+                    continue;
+                }
+                let ratio = pw2v::bench::speedup(st, &scalar.1);
+                speedups.push((format!("{name}/{lvl}"), ratio));
+                table.row(vec![
+                    name.into(),
+                    lvl.clone(),
+                    format!("{ratio:.2}x"),
+                ]);
+            }
         }
         table.finish()?;
         if let Some((_, r)) =
-            speedups.iter().find(|(n, _)| n == "gemm_nt")
+            speedups.iter().find(|(n, _)| n == "gemm_nt/avx2")
         {
             println!(
                 "gemm_nt avx2 speedup at (16,6,300): {r:.2}x \
@@ -596,7 +705,7 @@ fn routing_bench(report: &mut Option<ThroughputReport>) -> anyhow::Result<()> {
     // vs routed (both sides of a two-worker exchange driven by this one
     // thread; no backend processing — isolates the routing machinery).
     let (window, batch, negative, superbatch) = (5usize, 16usize, 5usize, 64);
-    let builder = BatchBuilder::new(&sampler, window, batch, negative);
+    let mut builder = BatchBuilder::new(&sampler, window, batch, negative);
     let sentences: Vec<Vec<u32>> = (0..64)
         .map(|i| {
             let mut r = Xoshiro256ss::new(1000 + i);
@@ -837,7 +946,8 @@ fn serve_scan_bench(report: &mut Option<ThroughputReport>) -> anyhow::Result<()>
         let eng = ServeEngine::from_store(
             RowStore::from_model(words.clone(), &emb).unwrap(),
             quant,
-        );
+        )
+        .unwrap();
         let mut q = 0u32;
         let st = time(20, 200, || {
             std::hint::black_box(eng.topk(q % v as u32, 10, &mut scratch));

@@ -21,7 +21,8 @@ shared training flags (train / train-dist / stream):
   --backend scalar|bidmach|gemm|pjrt
   --kernel auto|fused|gemm3   fused Pallas-style kernel vs 3-GEMM reference
   --sigmoid exact|table       exact sigmoid or the C tool's 1000-slot table
-  --simd auto|avx2|scalar     SIMD dispatch for kernels and serving scans
+  --simd auto|avx512|avx2|scalar  SIMD dispatch for kernels and serving scans
+  --reuse off|window|sentence negative-sample lifetime (gemm backend)
   --corpus-cache off|auto|P   reuse the .pw2v.u32 encoded-corpus cache
   --numa off|auto|NODES       NUMA-aware model placement + worker pinning
   --route off|owner|head=K    hot-target window routing (train only)

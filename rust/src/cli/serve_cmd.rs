@@ -12,7 +12,7 @@ use crate::util::args::Args;
 pub const HELP: &str = "\
 USAGE: pw2v serve --vectors vectors.txt | --store model.rst
          [--save-store model.rst --quant off|int8
-          --simd auto|avx2|scalar --listen HOST:PORT --watch]
+          --simd auto|avx512|avx2|scalar --listen HOST:PORT --watch]
 
 Line-delimited JSON over stdin/stdout, or TCP with --listen.
 Requests (one JSON response line each):
@@ -74,7 +74,7 @@ pub fn serve(a: &Args) -> anyhow::Result<()> {
             anyhow::bail!("--watch needs --store (a file to poll for new exports)")
         }
     };
-    let mut eng = ServeEngine::from_store(store, quant);
+    let mut eng = ServeEngine::from_store(store, quant)?;
     eprintln!("serve: simd={level:?} quant={quant} watch={watch}");
     match listen {
         Some(addr) => run_listen(&mut eng, &addr, watcher.as_mut()),

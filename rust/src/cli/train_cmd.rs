@@ -81,13 +81,14 @@ pub fn train(a: &Args) -> anyhow::Result<()> {
     let model = SharedModel::init(vocab.len(), cfg.dim, cfg.seed);
     eprintln!(
         "training: backend={} threads={} dim={} epochs={} simd={} kernel={} \
-         sigmoid={} corpus-cache={} numa={} route={}",
+         reuse={} sigmoid={} corpus-cache={} numa={} route={}",
         cfg.backend,
         cfg.threads,
         cfg.dim,
         cfg.epochs,
         cfg.simd,
         cfg.kernel,
+        cfg.reuse,
         cfg.sigmoid_mode,
         cfg.corpus_cache,
         cfg.numa,
@@ -246,7 +247,14 @@ mod tests {
             assert!(TRAIN_HELP.contains(key), "train help lacks {key}");
             assert!(DIST_HELP.contains(key), "dist help lacks {key}");
         }
-        for key in ["--simd", "--corpus-cache", "--numa", "--vocab-reserve"] {
+        for key in [
+            "--simd",
+            "--reuse",
+            "avx512",
+            "--corpus-cache",
+            "--numa",
+            "--vocab-reserve",
+        ] {
             assert!(SHARED_FLAGS.contains(key), "shared table lacks {key}");
         }
     }

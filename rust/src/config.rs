@@ -136,6 +136,52 @@ impl fmt::Display for KernelMode {
     }
 }
 
+/// Cross-window negative-reuse policy in the GEMM backend (`--reuse`;
+/// the FULL-W2V lever, arxiv 2312.07743): how long one drawn negative
+/// set stays live across a sentence's consecutive windows.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReuseMode {
+    /// Fresh negatives every window, one kernel call per window — the
+    /// PR-2 fused kernel bit for bit.
+    #[default]
+    Off,
+    /// Negatives still drawn per window, but execution goes through the
+    /// run-grouping driver with every run pinned to length 1.  Bitwise
+    /// equal to `Off`; exists to ablate the driver overhead separately
+    /// from the reuse payoff.
+    Window,
+    /// One negative set per SENTENCE, shared by all its windows; the run
+    /// kernel keeps those `Wo` rows and `dWo` accumulators live in
+    /// registers/L1 across the window sequence (bitwise-equal to the
+    /// scalar reference on single-thread runs).
+    Sentence,
+}
+
+impl FromStr for ReuseMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Ok(ReuseMode::Off),
+            "window" => Ok(ReuseMode::Window),
+            "sentence" => Ok(ReuseMode::Sentence),
+            other => anyhow::bail!(
+                "unknown reuse mode '{other}' (off|window|sentence)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for ReuseMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ReuseMode::Off => "off",
+            ReuseMode::Window => "window",
+            ReuseMode::Sentence => "sentence",
+        })
+    }
+}
+
 /// Where the trainer reads sentences from (`--corpus-cache`): the
 /// streaming text path, or the pre-encoded `u32` cache
 /// (`corpus::encoded`) that deletes per-epoch tokenization and vocab
@@ -289,6 +335,13 @@ pub struct TrainConfig {
     /// Kernel organisation in the GEMM backend (`--kernel`): the fused
     /// single-pass window kernel vs the ablation-preserved gemm3 chain.
     pub kernel: KernelMode,
+    /// Cross-window negative reuse in the GEMM backend (`--reuse
+    /// {off,window,sentence}`): `off` = per-window negatives, PR-2 path
+    /// bit-for-bit; `sentence` = one negative set per sentence held
+    /// register-resident across its windows (FULL-W2V).  Changes which
+    /// negatives are drawn, so it participates in the config
+    /// fingerprint (when not `Off`).
+    pub reuse: ReuseMode,
     /// Corpus ingest backend (`--corpus-cache {off,auto,<path>}`): stream
     /// the text file per epoch, or train from the pre-encoded `u32`
     /// cache.
@@ -341,6 +394,7 @@ impl Default for TrainConfig {
             simd: SimdMode::Auto,
             sigmoid_mode: SigmoidMode::Exact,
             kernel: KernelMode::Auto,
+            reuse: ReuseMode::Off,
             corpus_cache: CorpusCacheMode::Off,
             vocab_reserve: 0,
             numa: NumaMode::Off,
@@ -405,6 +459,15 @@ impl TrainConfig {
         if self.vocab_reserve != 0 {
             h.update(&(self.vocab_reserve as u64).to_le_bytes());
         }
+        // Sentence reuse changes which negatives each window sees (one
+        // draw per sentence instead of per window), so resuming across
+        // it would silently continue a different run — mixed
+        // conditionally, like vocab_reserve, to preserve every pre-reuse
+        // digest.  `Window` is a parity-guaranteed no-op on the numbers
+        // (same draws, same kernels bit-for-bit) and stays excluded.
+        if self.reuse == ReuseMode::Sentence {
+            h.update(&(self.reuse as u64).to_le_bytes());
+        }
         h.digest()
     }
 
@@ -438,6 +501,9 @@ impl TrainConfig {
         }
         if let Some(k) = a.opt::<KernelMode>("kernel")? {
             self.kernel = k;
+        }
+        if let Some(r) = a.opt::<ReuseMode>("reuse")? {
+            self.reuse = r;
         }
         if let Some(c) = a.opt::<CorpusCacheMode>("corpus-cache")? {
             self.corpus_cache = c;
@@ -483,6 +549,13 @@ impl TrainConfig {
                 && self.sigmoid_mode == SigmoidMode::Table),
             "--kernel fused evaluates the exact sigmoid; \
              use --kernel gemm3 with --sigmoid table"
+        );
+        // Reuse lives in the GEMM backend's run-grouping driver; the
+        // scalar/bidmach/pjrt paths have no superbatch arena to group.
+        anyhow::ensure!(
+            self.reuse == ReuseMode::Off || self.backend == Backend::Gemm,
+            "--reuse {} requires --backend gemm",
+            self.reuse
         );
         // Same bound as NumaMode's FromStr: programmatically built
         // configs must not reach the per-node allocation/thread spawn
@@ -726,8 +799,58 @@ mod tests {
         c.apply_args(&a).unwrap();
         assert_eq!(c.simd, SimdMode::Scalar);
         assert_eq!(c.sigmoid_mode, SigmoidMode::Table);
-        assert!("avx512".parse::<SimdMode>().is_err());
+        // The 16-lane tier is a first-class mode since the AVX-512 PR
+        // (it used to be a parse error; runtime availability is checked
+        // by simd::configure, not the parser).
+        assert_eq!("avx512".parse::<SimdMode>().unwrap(), SimdMode::Avx512);
         assert!("lut".parse::<SigmoidMode>().is_err());
+        let a = Args::parse(
+            "--simd avx512".split_whitespace().map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.simd, SimdMode::Avx512);
+    }
+
+    #[test]
+    fn reuse_knob_parsing_and_validation() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.reuse, ReuseMode::Off);
+        let a = Args::parse(
+            "--reuse sentence".split_whitespace().map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.reuse, ReuseMode::Sentence);
+        assert_eq!("window".parse::<ReuseMode>().unwrap(), ReuseMode::Window);
+        assert_eq!("OFF".parse::<ReuseMode>().unwrap(), ReuseMode::Off);
+        assert!("epoch".parse::<ReuseMode>().is_err());
+        assert_eq!(ReuseMode::Sentence.to_string(), "sentence");
+
+        // Reuse needs the GEMM backend's run-grouping driver.
+        let mut c = TrainConfig::default();
+        c.reuse = ReuseMode::Sentence;
+        c.backend = Backend::Scalar;
+        assert!(c.validate().is_err());
+        c.backend = Backend::Gemm;
+        assert!(c.validate().is_ok());
+        // Window mode is a driver ablation, same backend requirement.
+        c.reuse = ReuseMode::Window;
+        c.backend = Backend::Pjrt;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_sentence_reuse_only() {
+        let a = TrainConfig::default();
+        // Sentence reuse changes the negative draws → digest moves.
+        let mut b = TrainConfig::default();
+        b.reuse = ReuseMode::Sentence;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // Window mode is bitwise-equal to off → digest preserved
+        // (resuming across it is sound), as is the default itself.
+        b.reuse = ReuseMode::Window;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.reuse = ReuseMode::Off;
+        assert_eq!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

@@ -209,9 +209,12 @@ impl<'a> TrainLeg<'a> {
     ) -> anyhow::Result<Self> {
         let backend = GemmBackend::new(cfg.dim, cfg.batch, cfg.samples())
             .with_sigmoid(cfg.sigmoid_mode)
-            .with_kernel(cfg.kernel);
+            .with_kernel(cfg.kernel)
+            .with_reuse(cfg.reuse);
         let rng = Xoshiro256ss::new(cfg.seed ^ (idx as u64 * 0x5D1_77F + 13));
-        let builder = BatchBuilder::new(sampler, cfg.window, cfg.batch, cfg.negative);
+        let builder =
+            BatchBuilder::new(sampler, cfg.window, cfg.batch, cfg.negative)
+                .with_reuse(cfg.reuse);
         // Sentence-slack sizing: same overshoot bound as the
         // shared-memory trainer (fill_arena appends whole sentences).
         let arena =

@@ -1,74 +1,52 @@
-//! AVX2+FMA implementations of the hot-path kernels (`std::arch`
-//! intrinsics, unaligned loads throughout — gathered blocks and arena
-//! slices carry no alignment guarantee).
+//! AVX-512 implementations of the hot-path kernels: 16-lane twins of
+//! `avx2.rs` (`std::arch` intrinsics, unaligned loads throughout — the
+//! gathered blocks and arena slices carry no alignment guarantee).
+//!
+//! The companion many-core paper (arxiv 1611.06172) runs the same
+//! register-tiled SGNS scheme on 16-lane vectors; this module is that
+//! retarget.  Structure mirrors `avx2.rs` kernel for kernel — D-axis
+//! blocks widen from 8 to 16 lanes, horizontal sums become the
+//! deterministic `_mm512_reduce_add_*` reductions, and the int8 dot eats
+//! 32 codes per step (`avx512bw` word-madd) — so the two files review
+//! side by side.
 //!
 //! Safety: every `pub` function here is `#[target_feature(enable =
-//! "avx2,fma")]` and must only be called after `simd::level()` resolved to
-//! [`super::SimdLevel::Avx2`], i.e. after CPUID reported both features.
-//! The dispatchers in `simd::mod` are the only callers and enforce this.
+//! "avx512f,avx512bw")]` and must only be called after `simd::level()`
+//! resolved to [`super::SimdLevel::Avx512`], i.e. after CPUID reported
+//! both features.  The dispatchers in `simd::mod` are the only callers
+//! and enforce this; `--simd auto` never selects this tier (512-bit
+//! downclocking — see EXPERIMENTS.md §AVX-512), so it runs only when
+//! explicitly requested.
 //!
-//! Kernel structure (paper shapes B≈16, S≈6, D≈300):
-//!
-//! * `gemm_nt` — rows-dot-rows; the `S` output columns are blocked by 4 so
-//!   each 8-lane load of the `Wi` row feeds 4 FMA accumulators (the `Wo`
-//!   reuse that makes the scheme level-3 instead of level-1);
-//! * `gemm_nn` / `gemm_tn` — vectorised along the contiguous `D` axis with
-//!   the tiny `S`/`B` reduction in registers;
-//! * `sgns_err` — fused sigmoid + gradient scale using a Cephes-style
-//!   vector `exp` (relative error ≲ 2e-7, far inside the 1e-4 parity
-//!   budget asserted by `tests/props.rs`);
-//! * `sgns_fused` — the single-pass window kernel: logits, error, and
-//!   BOTH gradient accumulations in one call, with the slot block's `wo`
-//!   rows and `dwo` accumulators register-resident across all `b` input
-//!   rows (the FULL-W2V-style fusion that replaces the gemm3 chain).
+//! Numerics: `_mm512_reduce_add_ps` is a fixed tree reduction, so the
+//! f32 kernels are deterministic run-to-run but reassociate relative to
+//! scalar — the same bounded drift budget as AVX2 (≤ 1e-4 relative,
+//! asserted in `tests/props.rs`).  The int8 dot is pure integer
+//! arithmetic and matches scalar EXACTLY.
 
 #![allow(clippy::missing_safety_doc)]
 
 use core::arch::x86_64::*;
 
-/// Horizontal sum of the 8 lanes.
-#[inline]
-#[target_feature(enable = "avx2", enable = "fma")]
-unsafe fn hsum8(v: __m256) -> f32 {
-    let hi = _mm256_extractf128_ps::<1>(v);
-    let lo = _mm256_castps256_ps128(v);
-    let s = _mm_add_ps(lo, hi);
-    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-    let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
-    _mm_cvtss_f32(s)
-}
-
-/// Horizontal sum of the 8 i32 lanes.
-#[inline]
-#[target_feature(enable = "avx2", enable = "fma")]
-unsafe fn hsum8_epi32(v: __m256i) -> i32 {
-    let hi = _mm256_extracti128_si256::<1>(v);
-    let lo = _mm256_castsi256_si128(v);
-    let s = _mm_add_epi32(lo, hi);
-    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_11_10>(s));
-    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
-    _mm_cvtsi128_si32(s)
-}
-
-/// Integer dot `<a, b>` over int8 codes: 16 codes per step, sign-extended
+/// Integer dot `<a, b>` over int8 codes: 32 codes per step, sign-extended
 /// to i16 lanes and pair-summed into i32 by `madd` — integer arithmetic
-/// is associative, so this is EXACTLY the scalar result (the dispatcher
+/// is associative, so this is EXACTLY the scalar result (the store layer
 /// caps the length so the i32 accumulators cannot overflow even at
 /// |code| = 127 throughout).
-#[target_feature(enable = "avx2", enable = "fma")]
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
 pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let (pa, pb) = (a.as_ptr(), b.as_ptr());
-    let mut acc = _mm256_setzero_si256();
+    let mut acc = _mm512_setzero_si512();
     let mut i = 0usize;
-    while i + 16 <= n {
-        let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(pa.add(i) as *const __m128i));
-        let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(pb.add(i) as *const __m128i));
-        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
-        i += 16;
+    while i + 32 <= n {
+        let va = _mm512_cvtepi8_epi16(_mm256_loadu_si256(pa.add(i) as *const __m256i));
+        let vb = _mm512_cvtepi8_epi16(_mm256_loadu_si256(pb.add(i) as *const __m256i));
+        acc = _mm512_add_epi32(acc, _mm512_madd_epi16(va, vb));
+        i += 32;
     }
-    let mut s = hsum8_epi32(acc);
+    let mut s = _mm512_reduce_add_epi32(acc);
     while i < n {
         s += *pa.add(i) as i32 * *pb.add(i) as i32;
         i += 1;
@@ -77,36 +55,36 @@ pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
 }
 
 /// Dot product `<a, b>`.
-#[target_feature(enable = "avx2", enable = "fma")]
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
 pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let (pa, pb) = (a.as_ptr(), b.as_ptr());
-    let mut acc0 = _mm256_setzero_ps();
-    let mut acc1 = _mm256_setzero_ps();
+    let mut acc0 = _mm512_setzero_ps();
+    let mut acc1 = _mm512_setzero_ps();
     let mut i = 0usize;
-    while i + 16 <= n {
-        acc0 = _mm256_fmadd_ps(
-            _mm256_loadu_ps(pa.add(i)),
-            _mm256_loadu_ps(pb.add(i)),
+    while i + 32 <= n {
+        acc0 = _mm512_fmadd_ps(
+            _mm512_loadu_ps(pa.add(i)),
+            _mm512_loadu_ps(pb.add(i)),
             acc0,
         );
-        acc1 = _mm256_fmadd_ps(
-            _mm256_loadu_ps(pa.add(i + 8)),
-            _mm256_loadu_ps(pb.add(i + 8)),
+        acc1 = _mm512_fmadd_ps(
+            _mm512_loadu_ps(pa.add(i + 16)),
+            _mm512_loadu_ps(pb.add(i + 16)),
             acc1,
+        );
+        i += 32;
+    }
+    if i + 16 <= n {
+        acc0 = _mm512_fmadd_ps(
+            _mm512_loadu_ps(pa.add(i)),
+            _mm512_loadu_ps(pb.add(i)),
+            acc0,
         );
         i += 16;
     }
-    if i + 8 <= n {
-        acc0 = _mm256_fmadd_ps(
-            _mm256_loadu_ps(pa.add(i)),
-            _mm256_loadu_ps(pb.add(i)),
-            acc0,
-        );
-        i += 8;
-    }
-    let mut s = hsum8(_mm256_add_ps(acc0, acc1));
+    let mut s = _mm512_reduce_add_ps(_mm512_add_ps(acc0, acc1));
     while i < n {
         s += *pa.add(i) * *pb.add(i);
         i += 1;
@@ -115,17 +93,17 @@ pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// `y += alpha * x`.
-#[target_feature(enable = "avx2", enable = "fma")]
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
 pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     let n = x.len();
     let (px, py) = (x.as_ptr(), y.as_mut_ptr());
-    let va = _mm256_set1_ps(alpha);
+    let va = _mm512_set1_ps(alpha);
     let mut i = 0usize;
-    while i + 8 <= n {
-        let v = _mm256_fmadd_ps(va, _mm256_loadu_ps(px.add(i)), _mm256_loadu_ps(py.add(i)));
-        _mm256_storeu_ps(py.add(i), v);
-        i += 8;
+    while i + 16 <= n {
+        let v = _mm512_fmadd_ps(va, _mm512_loadu_ps(px.add(i)), _mm512_loadu_ps(py.add(i)));
+        _mm512_storeu_ps(py.add(i), v);
+        i += 16;
     }
     while i < n {
         *py.add(i) += alpha * *px.add(i);
@@ -136,7 +114,7 @@ pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 /// Four simultaneous dots of `pa[..k]` against `pb0..pb3[..k]`: one load
 /// of the shared row feeds 4 FMA chains (the `Wo` reuse of GEMM 1).
 #[inline]
-#[target_feature(enable = "avx2", enable = "fma")]
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
 unsafe fn dot4(
     pa: *const f32,
     pb0: *const f32,
@@ -145,21 +123,25 @@ unsafe fn dot4(
     pb3: *const f32,
     k: usize,
 ) -> (f32, f32, f32, f32) {
-    let mut a0 = _mm256_setzero_ps();
-    let mut a1 = _mm256_setzero_ps();
-    let mut a2 = _mm256_setzero_ps();
-    let mut a3 = _mm256_setzero_ps();
+    let mut a0 = _mm512_setzero_ps();
+    let mut a1 = _mm512_setzero_ps();
+    let mut a2 = _mm512_setzero_ps();
+    let mut a3 = _mm512_setzero_ps();
     let mut i = 0usize;
-    while i + 8 <= k {
-        let va = _mm256_loadu_ps(pa.add(i));
-        a0 = _mm256_fmadd_ps(va, _mm256_loadu_ps(pb0.add(i)), a0);
-        a1 = _mm256_fmadd_ps(va, _mm256_loadu_ps(pb1.add(i)), a1);
-        a2 = _mm256_fmadd_ps(va, _mm256_loadu_ps(pb2.add(i)), a2);
-        a3 = _mm256_fmadd_ps(va, _mm256_loadu_ps(pb3.add(i)), a3);
-        i += 8;
+    while i + 16 <= k {
+        let va = _mm512_loadu_ps(pa.add(i));
+        a0 = _mm512_fmadd_ps(va, _mm512_loadu_ps(pb0.add(i)), a0);
+        a1 = _mm512_fmadd_ps(va, _mm512_loadu_ps(pb1.add(i)), a1);
+        a2 = _mm512_fmadd_ps(va, _mm512_loadu_ps(pb2.add(i)), a2);
+        a3 = _mm512_fmadd_ps(va, _mm512_loadu_ps(pb3.add(i)), a3);
+        i += 16;
     }
-    let (mut s0, mut s1, mut s2, mut s3) =
-        (hsum8(a0), hsum8(a1), hsum8(a2), hsum8(a3));
+    let (mut s0, mut s1, mut s2, mut s3) = (
+        _mm512_reduce_add_ps(a0),
+        _mm512_reduce_add_ps(a1),
+        _mm512_reduce_add_ps(a2),
+        _mm512_reduce_add_ps(a3),
+    );
     while i < k {
         let x = *pa.add(i);
         s0 += x * *pb0.add(i);
@@ -172,7 +154,7 @@ unsafe fn dot4(
 }
 
 /// `c[m,n] = alpha * a[m,k] · b[n,k]ᵀ + beta * c` (rows-dot-rows).
-#[target_feature(enable = "avx2", enable = "fma")]
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
 #[allow(clippy::too_many_arguments)]
 pub unsafe fn gemm_nt(
     m: usize,
@@ -218,7 +200,7 @@ pub unsafe fn gemm_nt(
 /// `c[m,n] = alpha * a[m,k] · b[k,n] + beta * c`, vectorised along `n`
 /// with the `k` reduction in registers (coefficient broadcast per source
 /// row).
-#[target_feature(enable = "avx2", enable = "fma")]
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
 #[allow(clippy::too_many_arguments)]
 pub unsafe fn gemm_nn(
     m: usize,
@@ -240,7 +222,7 @@ pub unsafe fn gemm_nn(
 
 /// `c[m,n] = alpha * a[k,m]ᵀ · b[k,n] + beta * c`; the coefficient for
 /// output row `j` is the strided column `a[:, j]`.
-#[target_feature(enable = "avx2", enable = "fma")]
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
 #[allow(clippy::too_many_arguments)]
 pub unsafe fn gemm_tn(
     m: usize,
@@ -260,10 +242,10 @@ pub unsafe fn gemm_tn(
 }
 
 /// `crow[0..n] = beta*crow + alpha * Σ_l coeff[l*stride] · b[l, 0..n]`,
-/// one vectorised sweep over `n` per 8-lane block with all `k`
+/// one vectorised sweep over `n` per 16-lane block with all `k`
 /// coefficients applied in registers.
 #[inline]
-#[target_feature(enable = "avx2", enable = "fma")]
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
 #[allow(clippy::too_many_arguments)]
 unsafe fn accumulate_rows_ptr(
     n: usize,
@@ -276,26 +258,26 @@ unsafe fn accumulate_rows_ptr(
     crow: *mut f32,
 ) {
     let mut j = 0usize;
-    while j + 8 <= n {
+    while j + 16 <= n {
         let mut acc = if beta == 0.0 {
-            _mm256_setzero_ps()
+            _mm512_setzero_ps()
         } else {
-            _mm256_mul_ps(_mm256_set1_ps(beta), _mm256_loadu_ps(crow.add(j)))
+            _mm512_mul_ps(_mm512_set1_ps(beta), _mm512_loadu_ps(crow.add(j)))
         };
         let mut l = 0usize;
         while l + 2 <= k {
-            let c0 = _mm256_set1_ps(alpha * *coeff.add(l * stride));
-            let c1 = _mm256_set1_ps(alpha * *coeff.add((l + 1) * stride));
-            acc = _mm256_fmadd_ps(c0, _mm256_loadu_ps(b.add(l * n + j)), acc);
-            acc = _mm256_fmadd_ps(c1, _mm256_loadu_ps(b.add((l + 1) * n + j)), acc);
+            let c0 = _mm512_set1_ps(alpha * *coeff.add(l * stride));
+            let c1 = _mm512_set1_ps(alpha * *coeff.add((l + 1) * stride));
+            acc = _mm512_fmadd_ps(c0, _mm512_loadu_ps(b.add(l * n + j)), acc);
+            acc = _mm512_fmadd_ps(c1, _mm512_loadu_ps(b.add((l + 1) * n + j)), acc);
             l += 2;
         }
         if l < k {
-            let c0 = _mm256_set1_ps(alpha * *coeff.add(l * stride));
-            acc = _mm256_fmadd_ps(c0, _mm256_loadu_ps(b.add(l * n + j)), acc);
+            let c0 = _mm512_set1_ps(alpha * *coeff.add(l * stride));
+            acc = _mm512_fmadd_ps(c0, _mm512_loadu_ps(b.add(l * n + j)), acc);
         }
-        _mm256_storeu_ps(crow.add(j), acc);
-        j += 8;
+        _mm512_storeu_ps(crow.add(j), acc);
+        j += 16;
     }
     while j < n {
         let mut s = if beta == 0.0 { 0.0 } else { beta * *crow.add(j) };
@@ -307,63 +289,50 @@ unsafe fn accumulate_rows_ptr(
     }
 }
 
-/// Vector `exp` (Cephes polynomial, range-reduced by `ln 2`): relative
-/// error ≲ 2e-7 over the clamped domain, exactly what the EXP_TABLE-free
-/// sigmoid needs.
+/// Vector `exp` (Cephes polynomial, range-reduced by `ln 2`, identical
+/// constants to `avx2::exp256`): relative error ≲ 2e-7 over the clamped
+/// domain.
 #[inline]
-#[target_feature(enable = "avx2", enable = "fma")]
-unsafe fn exp256(x: __m256) -> __m256 {
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
+unsafe fn exp512(x: __m512) -> __m512 {
     // Clamp so 2^n stays in normal f32 range (σ saturates there anyway).
-    let x = _mm256_min_ps(x, _mm256_set1_ps(88.0));
-    let x = _mm256_max_ps(x, _mm256_set1_ps(-88.0));
-    // n = round(x / ln 2)
-    let log2e = _mm256_set1_ps(std::f32::consts::LOG2_E);
-    let n = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
-        _mm256_mul_ps(x, log2e),
-    );
+    let x = _mm512_min_ps(x, _mm512_set1_ps(88.0));
+    let x = _mm512_max_ps(x, _mm512_set1_ps(-88.0));
+    // n = round(x / ln 2); roundscale imm 0x08 = nearest-even, no exc.
+    let log2e = _mm512_set1_ps(std::f32::consts::LOG2_E);
+    let n = _mm512_roundscale_ps::<0x08>(_mm512_mul_ps(x, log2e));
     // r = x - n*ln2, split high/low for extra bits.
-    let ln2_hi = _mm256_set1_ps(0.693_359_375);
-    let ln2_lo = _mm256_set1_ps(-2.121_944_4e-4);
-    let r = _mm256_fnmadd_ps(n, ln2_hi, x);
-    let r = _mm256_fnmadd_ps(n, ln2_lo, r);
+    let ln2_hi = _mm512_set1_ps(0.693_359_375);
+    let ln2_lo = _mm512_set1_ps(-2.121_944_4e-4);
+    let r = _mm512_fnmadd_ps(n, ln2_hi, x);
+    let r = _mm512_fnmadd_ps(n, ln2_lo, r);
     // e^r ≈ 1 + r + r²·P(r) (Cephes cephes_exp_p coefficients).
-    let mut p = _mm256_set1_ps(1.987_569_1e-4);
-    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.398_199_9e-3));
-    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(8.333_452e-3));
-    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(4.166_579_6e-2));
-    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.666_666_5e-1));
-    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(5.000_000_1e-1));
-    let r2 = _mm256_mul_ps(r, r);
-    let y = _mm256_fmadd_ps(p, r2, _mm256_add_ps(r, _mm256_set1_ps(1.0)));
+    let mut p = _mm512_set1_ps(1.987_569_1e-4);
+    p = _mm512_fmadd_ps(p, r, _mm512_set1_ps(1.398_199_9e-3));
+    p = _mm512_fmadd_ps(p, r, _mm512_set1_ps(8.333_452e-3));
+    p = _mm512_fmadd_ps(p, r, _mm512_set1_ps(4.166_579_6e-2));
+    p = _mm512_fmadd_ps(p, r, _mm512_set1_ps(1.666_666_5e-1));
+    p = _mm512_fmadd_ps(p, r, _mm512_set1_ps(5.000_000_1e-1));
+    let r2 = _mm512_mul_ps(r, r);
+    let y = _mm512_fmadd_ps(p, r2, _mm512_add_ps(r, _mm512_set1_ps(1.0)));
     // Scale by 2^n via exponent-field construction.
-    let ni = _mm256_cvtps_epi32(n);
-    let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+    let ni = _mm512_cvtps_epi32(n);
+    let pow2 = _mm512_castsi512_ps(_mm512_slli_epi32::<23>(_mm512_add_epi32(
         ni,
-        _mm256_set1_epi32(127),
+        _mm512_set1_epi32(127),
     )));
-    _mm256_mul_ps(y, pow2)
+    _mm512_mul_ps(y, pow2)
 }
 
-/// Fused single-pass SGNS window kernel (see `scalar::sgns_fused` for the
-/// reference semantics).  Three register-resident phases over the gathered
-/// tiles, no materialised `logits`/`err` round trips between kernels:
-///
-/// 1. **logits tile** — `err[i,j] = <wi_i, wo[slots_j]>` with the same
-///    dot4 column blocking as `gemm_nt` (one `Wi` load feeds 4 FMA
-///    chains);
-/// 2. **error** — the vectorised `(label − σ)·lr` transform in place over
-///    the `b·s` tile (L1-resident, ≤ 384 B at paper shapes);
-/// 3. **gradient sweep** — ONE pass over the `D` axis per output-slot
-///    block: the block's `wo` rows and `dwo` accumulators live in
-///    registers while ALL `b` input rows stream through, so each `dwo`
-///    row is read+written once per window (the gemm3 chain's `gemm_nn` +
-///    `gemm_tn` instead re-read the `wo`/`wi` blocks `b`- and `s`-fold).
-///
-/// The register-tiled phase 3 requires DISTINCT slots (two accumulators
-/// for one row would lose an update at store time); windows with a
-/// duplicated negative draw — rare under a large unigram table — take a
-/// sequential axpy fallback with identical semantics.
-#[target_feature(enable = "avx2", enable = "fma")]
+/// Fused single-pass SGNS window kernel, 16-lane twin of
+/// `avx2::sgns_fused` (see `scalar::sgns_fused` for the reference
+/// semantics): logits via dot4 column blocking, in-place error
+/// transform, then ONE register-tiled sweep over the D axis per
+/// output-slot block with the block's `wo` rows and `dwo` accumulators
+/// live in zmm registers while all `b` input rows stream through.
+/// Duplicate slots take the sequential (reference-order) fallback, as in
+/// the AVX2 kernel.
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
 #[allow(clippy::too_many_arguments)]
 pub unsafe fn sgns_fused(
     s: usize,
@@ -413,9 +382,8 @@ pub unsafe fn sgns_fused(
     // Phase 2: vectorised error transform over the L1-resident tile.
     sgns_err(&mut err[..b * s], s, lr);
 
-    // Duplicate slots (same output id drawn twice in one window): the
-    // register-tiled phase 3 would lose one accumulator at store time, so
-    // take the sequential (reference-order) path instead.
+    // Duplicate slots: the register-tiled phase 3 would lose one
+    // accumulator at store time, so take the sequential path instead.
     let has_dup = slots
         .iter()
         .enumerate()
@@ -434,11 +402,7 @@ pub unsafe fn sgns_fused(
         return;
     }
 
-    // Phase 3: register-tiled gradient sweep, slot blocks of 4/2/1.  For
-    // each 8-lane block of D, the slot block's `wo` vectors and `dwo`
-    // accumulators stay in registers while all `b` input rows stream by;
-    // `dwi` is overwritten by the first slot block and accumulated by the
-    // rest.
+    // Phase 3: register-tiled gradient sweep, slot blocks of 4/2/1.
     let pwi = wi.as_ptr();
     let pwo = wo.as_ptr();
     let pdwi = dwi.as_mut_ptr();
@@ -453,42 +417,42 @@ pub unsafe fn sgns_fused(
             let r2 = slots[j0 + 2] as usize * d;
             let r3 = slots[j0 + 3] as usize * d;
             let mut l = 0usize;
-            while l + 8 <= d {
-                let w0 = _mm256_loadu_ps(pwo.add(r0 + l));
-                let w1 = _mm256_loadu_ps(pwo.add(r1 + l));
-                let w2 = _mm256_loadu_ps(pwo.add(r2 + l));
-                let w3 = _mm256_loadu_ps(pwo.add(r3 + l));
-                let mut a0 = _mm256_loadu_ps(pdwo.add(r0 + l));
-                let mut a1 = _mm256_loadu_ps(pdwo.add(r1 + l));
-                let mut a2 = _mm256_loadu_ps(pdwo.add(r2 + l));
-                let mut a3 = _mm256_loadu_ps(pdwo.add(r3 + l));
+            while l + 16 <= d {
+                let w0 = _mm512_loadu_ps(pwo.add(r0 + l));
+                let w1 = _mm512_loadu_ps(pwo.add(r1 + l));
+                let w2 = _mm512_loadu_ps(pwo.add(r2 + l));
+                let w3 = _mm512_loadu_ps(pwo.add(r3 + l));
+                let mut a0 = _mm512_loadu_ps(pdwo.add(r0 + l));
+                let mut a1 = _mm512_loadu_ps(pdwo.add(r1 + l));
+                let mut a2 = _mm512_loadu_ps(pdwo.add(r2 + l));
+                let mut a3 = _mm512_loadu_ps(pdwo.add(r3 + l));
                 for i in 0..b {
                     let e = perr.add(i * s + j0);
-                    let vwi = _mm256_loadu_ps(pwi.add(i * d + l));
-                    let e0 = _mm256_set1_ps(*e);
-                    let e1 = _mm256_set1_ps(*e.add(1));
-                    let e2 = _mm256_set1_ps(*e.add(2));
-                    let e3 = _mm256_set1_ps(*e.add(3));
+                    let vwi = _mm512_loadu_ps(pwi.add(i * d + l));
+                    let e0 = _mm512_set1_ps(*e);
+                    let e1 = _mm512_set1_ps(*e.add(1));
+                    let e2 = _mm512_set1_ps(*e.add(2));
+                    let e3 = _mm512_set1_ps(*e.add(3));
                     let mut g = if first {
-                        _mm256_setzero_ps()
+                        _mm512_setzero_ps()
                     } else {
-                        _mm256_loadu_ps(pdwi.add(i * d + l))
+                        _mm512_loadu_ps(pdwi.add(i * d + l))
                     };
-                    g = _mm256_fmadd_ps(e0, w0, g);
-                    g = _mm256_fmadd_ps(e1, w1, g);
-                    g = _mm256_fmadd_ps(e2, w2, g);
-                    g = _mm256_fmadd_ps(e3, w3, g);
-                    _mm256_storeu_ps(pdwi.add(i * d + l), g);
-                    a0 = _mm256_fmadd_ps(e0, vwi, a0);
-                    a1 = _mm256_fmadd_ps(e1, vwi, a1);
-                    a2 = _mm256_fmadd_ps(e2, vwi, a2);
-                    a3 = _mm256_fmadd_ps(e3, vwi, a3);
+                    g = _mm512_fmadd_ps(e0, w0, g);
+                    g = _mm512_fmadd_ps(e1, w1, g);
+                    g = _mm512_fmadd_ps(e2, w2, g);
+                    g = _mm512_fmadd_ps(e3, w3, g);
+                    _mm512_storeu_ps(pdwi.add(i * d + l), g);
+                    a0 = _mm512_fmadd_ps(e0, vwi, a0);
+                    a1 = _mm512_fmadd_ps(e1, vwi, a1);
+                    a2 = _mm512_fmadd_ps(e2, vwi, a2);
+                    a3 = _mm512_fmadd_ps(e3, vwi, a3);
                 }
-                _mm256_storeu_ps(pdwo.add(r0 + l), a0);
-                _mm256_storeu_ps(pdwo.add(r1 + l), a1);
-                _mm256_storeu_ps(pdwo.add(r2 + l), a2);
-                _mm256_storeu_ps(pdwo.add(r3 + l), a3);
-                l += 8;
+                _mm512_storeu_ps(pdwo.add(r0 + l), a0);
+                _mm512_storeu_ps(pdwo.add(r1 + l), a1);
+                _mm512_storeu_ps(pdwo.add(r2 + l), a2);
+                _mm512_storeu_ps(pdwo.add(r3 + l), a3);
+                l += 16;
             }
             while l < d {
                 let mut a0 = *pdwo.add(r0 + l);
@@ -520,30 +484,30 @@ pub unsafe fn sgns_fused(
             let r0 = slots[j0] as usize * d;
             let r1 = slots[j0 + 1] as usize * d;
             let mut l = 0usize;
-            while l + 8 <= d {
-                let w0 = _mm256_loadu_ps(pwo.add(r0 + l));
-                let w1 = _mm256_loadu_ps(pwo.add(r1 + l));
-                let mut a0 = _mm256_loadu_ps(pdwo.add(r0 + l));
-                let mut a1 = _mm256_loadu_ps(pdwo.add(r1 + l));
+            while l + 16 <= d {
+                let w0 = _mm512_loadu_ps(pwo.add(r0 + l));
+                let w1 = _mm512_loadu_ps(pwo.add(r1 + l));
+                let mut a0 = _mm512_loadu_ps(pdwo.add(r0 + l));
+                let mut a1 = _mm512_loadu_ps(pdwo.add(r1 + l));
                 for i in 0..b {
                     let e = perr.add(i * s + j0);
-                    let vwi = _mm256_loadu_ps(pwi.add(i * d + l));
-                    let e0 = _mm256_set1_ps(*e);
-                    let e1 = _mm256_set1_ps(*e.add(1));
+                    let vwi = _mm512_loadu_ps(pwi.add(i * d + l));
+                    let e0 = _mm512_set1_ps(*e);
+                    let e1 = _mm512_set1_ps(*e.add(1));
                     let mut g = if first {
-                        _mm256_setzero_ps()
+                        _mm512_setzero_ps()
                     } else {
-                        _mm256_loadu_ps(pdwi.add(i * d + l))
+                        _mm512_loadu_ps(pdwi.add(i * d + l))
                     };
-                    g = _mm256_fmadd_ps(e0, w0, g);
-                    g = _mm256_fmadd_ps(e1, w1, g);
-                    _mm256_storeu_ps(pdwi.add(i * d + l), g);
-                    a0 = _mm256_fmadd_ps(e0, vwi, a0);
-                    a1 = _mm256_fmadd_ps(e1, vwi, a1);
+                    g = _mm512_fmadd_ps(e0, w0, g);
+                    g = _mm512_fmadd_ps(e1, w1, g);
+                    _mm512_storeu_ps(pdwi.add(i * d + l), g);
+                    a0 = _mm512_fmadd_ps(e0, vwi, a0);
+                    a1 = _mm512_fmadd_ps(e1, vwi, a1);
                 }
-                _mm256_storeu_ps(pdwo.add(r0 + l), a0);
-                _mm256_storeu_ps(pdwo.add(r1 + l), a1);
-                l += 8;
+                _mm512_storeu_ps(pdwo.add(r0 + l), a0);
+                _mm512_storeu_ps(pdwo.add(r1 + l), a1);
+                l += 16;
             }
             while l < d {
                 let mut a0 = *pdwo.add(r0 + l);
@@ -565,23 +529,23 @@ pub unsafe fn sgns_fused(
         } else {
             let r0 = slots[j0] as usize * d;
             let mut l = 0usize;
-            while l + 8 <= d {
-                let w0 = _mm256_loadu_ps(pwo.add(r0 + l));
-                let mut a0 = _mm256_loadu_ps(pdwo.add(r0 + l));
+            while l + 16 <= d {
+                let w0 = _mm512_loadu_ps(pwo.add(r0 + l));
+                let mut a0 = _mm512_loadu_ps(pdwo.add(r0 + l));
                 for i in 0..b {
-                    let e0 = _mm256_set1_ps(*perr.add(i * s + j0));
-                    let vwi = _mm256_loadu_ps(pwi.add(i * d + l));
+                    let e0 = _mm512_set1_ps(*perr.add(i * s + j0));
+                    let vwi = _mm512_loadu_ps(pwi.add(i * d + l));
                     let mut g = if first {
-                        _mm256_setzero_ps()
+                        _mm512_setzero_ps()
                     } else {
-                        _mm256_loadu_ps(pdwi.add(i * d + l))
+                        _mm512_loadu_ps(pdwi.add(i * d + l))
                     };
-                    g = _mm256_fmadd_ps(e0, w0, g);
-                    _mm256_storeu_ps(pdwi.add(i * d + l), g);
-                    a0 = _mm256_fmadd_ps(e0, vwi, a0);
+                    g = _mm512_fmadd_ps(e0, w0, g);
+                    _mm512_storeu_ps(pdwi.add(i * d + l), g);
+                    a0 = _mm512_fmadd_ps(e0, vwi, a0);
                 }
-                _mm256_storeu_ps(pdwo.add(r0 + l), a0);
-                l += 8;
+                _mm512_storeu_ps(pdwo.add(r0 + l), a0);
+                l += 16;
             }
             while l < d {
                 let mut a0 = *pdwo.add(r0 + l);
@@ -602,29 +566,12 @@ pub unsafe fn sgns_fused(
 }
 
 /// Fused kernel over a RUN of consecutive windows sharing one negative
-/// set (`scalar::sgns_fused_run` is the bitwise ground truth: repeated
-/// per-window [`sgns_fused`] calls).  The FULL-W2V-style payoff lives in
-/// phase 3: the per-window kernel re-loads and re-stores every negative
-/// `wo` row and `dwo` accumulator once per window; here the shared
-/// lanes are loaded ONCE per D-block and carried in registers across
-/// the whole run's window loop, so an 8-window run cuts the negative
-/// tile traffic 8-fold.  Only the positive lane (lane 0 of the first
-/// slot block, a different row per window) still reloads per window.
-///
-/// Bitwise equality with the repeated per-window kernel holds because
-/// (a) an f32 store/reload round-trip is exact, so carrying a register
-/// instead of bouncing through memory changes no value, and (b) every
-/// per-location operation order is preserved: phases 1/2 read only
-/// `wi`/`wo` (never written during a run), and phase 3 visits each
-/// `dwo`/`dwi` location in the same window-then-row order the
-/// sequential calls would.
-///
-/// Caller contract (debug-asserted by the dispatcher): every window's
-/// `slots[1..]` identical across the run, and multi-window runs
-/// duplicate-free per window — the driver routes duplicate-slot windows
-/// into singleton runs, which delegate to the per-window kernel and its
-/// sequential fallback.
-#[target_feature(enable = "avx2", enable = "fma")]
+/// set, 16-lane twin of `avx2::sgns_fused_run` (see that kernel for the
+/// bitwise-equality argument and the driver contract;
+/// `scalar::sgns_fused_run` is the ground truth).  Shared negative lanes
+/// are loaded once per D-block and carried in zmm registers across the
+/// run's window loop; only the per-window positive lane reloads.
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
 #[allow(clippy::too_many_arguments)]
 pub unsafe fn sgns_fused_run(
     s: usize,
@@ -689,9 +636,6 @@ pub unsafe fn sgns_fused_run(
     }
 
     // Phase 3: register-tiled gradient sweep with cross-window carry.
-    // Same slot-block partition (4/2/1 over s) and per-row FMA order as
-    // the per-window kernel; the window loop sits between the D-block
-    // loop and the row loop so shared lanes stay live across it.
     let pwi = wi.as_ptr();
     let pwo = wo.as_ptr();
     let pdwi = dwi.as_mut_ptr();
@@ -701,67 +645,65 @@ pub unsafe fn sgns_fused_run(
     let mut j0 = 0usize;
     while j0 < s {
         let first = j0 == 0;
-        // Lane 0 of the first block is the positive (per-window row);
-        // every other lane is a shared negative.
         let lane0_shared = j0 != 0;
         if s - j0 >= 4 {
             let r1 = negs[j0 + 1] as usize * d;
             let r2 = negs[j0 + 2] as usize * d;
             let r3 = negs[j0 + 3] as usize * d;
             let mut l = 0usize;
-            while l + 8 <= d {
-                let w1 = _mm256_loadu_ps(pwo.add(r1 + l));
-                let w2 = _mm256_loadu_ps(pwo.add(r2 + l));
-                let w3 = _mm256_loadu_ps(pwo.add(r3 + l));
-                let mut a1 = _mm256_loadu_ps(pdwo.add(r1 + l));
-                let mut a2 = _mm256_loadu_ps(pdwo.add(r2 + l));
-                let mut a3 = _mm256_loadu_ps(pdwo.add(r3 + l));
-                let mut w0 = _mm256_setzero_ps();
-                let mut a0 = _mm256_setzero_ps();
+            while l + 16 <= d {
+                let w1 = _mm512_loadu_ps(pwo.add(r1 + l));
+                let w2 = _mm512_loadu_ps(pwo.add(r2 + l));
+                let w3 = _mm512_loadu_ps(pwo.add(r3 + l));
+                let mut a1 = _mm512_loadu_ps(pdwo.add(r1 + l));
+                let mut a2 = _mm512_loadu_ps(pdwo.add(r2 + l));
+                let mut a3 = _mm512_loadu_ps(pdwo.add(r3 + l));
+                let mut w0 = _mm512_setzero_ps();
+                let mut a0 = _mm512_setzero_ps();
                 if lane0_shared {
                     let r0 = negs[j0] as usize * d;
-                    w0 = _mm256_loadu_ps(pwo.add(r0 + l));
-                    a0 = _mm256_loadu_ps(pdwo.add(r0 + l));
+                    w0 = _mm512_loadu_ps(pwo.add(r0 + l));
+                    a0 = _mm512_loadu_ps(pdwo.add(r0 + l));
                 }
                 for w in 0..r_n {
                     let r0 = slots[w * s + j0] as usize * d;
                     if !lane0_shared {
-                        w0 = _mm256_loadu_ps(pwo.add(r0 + l));
-                        a0 = _mm256_loadu_ps(pdwo.add(r0 + l));
+                        w0 = _mm512_loadu_ps(pwo.add(r0 + l));
+                        a0 = _mm512_loadu_ps(pdwo.add(r0 + l));
                     }
                     for gi in offs[w] as usize..offs[w + 1] as usize {
                         let e = perr.add(gi * s + j0);
-                        let vwi = _mm256_loadu_ps(pwi.add(gi * d + l));
-                        let e0 = _mm256_set1_ps(*e);
-                        let e1 = _mm256_set1_ps(*e.add(1));
-                        let e2 = _mm256_set1_ps(*e.add(2));
-                        let e3 = _mm256_set1_ps(*e.add(3));
+                        let vwi = _mm512_loadu_ps(pwi.add(gi * d + l));
+                        let e0 = _mm512_set1_ps(*e);
+                        let e1 = _mm512_set1_ps(*e.add(1));
+                        let e2 = _mm512_set1_ps(*e.add(2));
+                        let e3 = _mm512_set1_ps(*e.add(3));
                         let mut g = if first {
-                            _mm256_setzero_ps()
+                            _mm512_setzero_ps()
                         } else {
-                            _mm256_loadu_ps(pdwi.add(gi * d + l))
+                            _mm512_loadu_ps(pdwi.add(gi * d + l))
                         };
-                        g = _mm256_fmadd_ps(e0, w0, g);
-                        g = _mm256_fmadd_ps(e1, w1, g);
-                        g = _mm256_fmadd_ps(e2, w2, g);
-                        g = _mm256_fmadd_ps(e3, w3, g);
-                        _mm256_storeu_ps(pdwi.add(gi * d + l), g);
-                        a0 = _mm256_fmadd_ps(e0, vwi, a0);
-                        a1 = _mm256_fmadd_ps(e1, vwi, a1);
-                        a2 = _mm256_fmadd_ps(e2, vwi, a2);
-                        a3 = _mm256_fmadd_ps(e3, vwi, a3);
+                        g = _mm512_fmadd_ps(e0, w0, g);
+                        g = _mm512_fmadd_ps(e1, w1, g);
+                        g = _mm512_fmadd_ps(e2, w2, g);
+                        g = _mm512_fmadd_ps(e3, w3, g);
+                        _mm512_storeu_ps(pdwi.add(gi * d + l), g);
+                        a0 = _mm512_fmadd_ps(e0, vwi, a0);
+                        a1 = _mm512_fmadd_ps(e1, vwi, a1);
+                        a2 = _mm512_fmadd_ps(e2, vwi, a2);
+                        a3 = _mm512_fmadd_ps(e3, vwi, a3);
                     }
                     if !lane0_shared {
-                        _mm256_storeu_ps(pdwo.add(r0 + l), a0);
+                        _mm512_storeu_ps(pdwo.add(r0 + l), a0);
                     }
                 }
                 if lane0_shared {
-                    _mm256_storeu_ps(pdwo.add(negs[j0] as usize * d + l), a0);
+                    _mm512_storeu_ps(pdwo.add(negs[j0] as usize * d + l), a0);
                 }
-                _mm256_storeu_ps(pdwo.add(r1 + l), a1);
-                _mm256_storeu_ps(pdwo.add(r2 + l), a2);
-                _mm256_storeu_ps(pdwo.add(r3 + l), a3);
-                l += 8;
+                _mm512_storeu_ps(pdwo.add(r1 + l), a1);
+                _mm512_storeu_ps(pdwo.add(r2 + l), a2);
+                _mm512_storeu_ps(pdwo.add(r3 + l), a3);
+                l += 16;
             }
             while l < d {
                 let mut a1 = *pdwo.add(r1 + l);
@@ -806,47 +748,47 @@ pub unsafe fn sgns_fused_run(
         } else if s - j0 >= 2 {
             let r1 = negs[j0 + 1] as usize * d;
             let mut l = 0usize;
-            while l + 8 <= d {
-                let w1 = _mm256_loadu_ps(pwo.add(r1 + l));
-                let mut a1 = _mm256_loadu_ps(pdwo.add(r1 + l));
-                let mut w0 = _mm256_setzero_ps();
-                let mut a0 = _mm256_setzero_ps();
+            while l + 16 <= d {
+                let w1 = _mm512_loadu_ps(pwo.add(r1 + l));
+                let mut a1 = _mm512_loadu_ps(pdwo.add(r1 + l));
+                let mut w0 = _mm512_setzero_ps();
+                let mut a0 = _mm512_setzero_ps();
                 if lane0_shared {
                     let r0 = negs[j0] as usize * d;
-                    w0 = _mm256_loadu_ps(pwo.add(r0 + l));
-                    a0 = _mm256_loadu_ps(pdwo.add(r0 + l));
+                    w0 = _mm512_loadu_ps(pwo.add(r0 + l));
+                    a0 = _mm512_loadu_ps(pdwo.add(r0 + l));
                 }
                 for w in 0..r_n {
                     let r0 = slots[w * s + j0] as usize * d;
                     if !lane0_shared {
-                        w0 = _mm256_loadu_ps(pwo.add(r0 + l));
-                        a0 = _mm256_loadu_ps(pdwo.add(r0 + l));
+                        w0 = _mm512_loadu_ps(pwo.add(r0 + l));
+                        a0 = _mm512_loadu_ps(pdwo.add(r0 + l));
                     }
                     for gi in offs[w] as usize..offs[w + 1] as usize {
                         let e = perr.add(gi * s + j0);
-                        let vwi = _mm256_loadu_ps(pwi.add(gi * d + l));
-                        let e0 = _mm256_set1_ps(*e);
-                        let e1 = _mm256_set1_ps(*e.add(1));
+                        let vwi = _mm512_loadu_ps(pwi.add(gi * d + l));
+                        let e0 = _mm512_set1_ps(*e);
+                        let e1 = _mm512_set1_ps(*e.add(1));
                         let mut g = if first {
-                            _mm256_setzero_ps()
+                            _mm512_setzero_ps()
                         } else {
-                            _mm256_loadu_ps(pdwi.add(gi * d + l))
+                            _mm512_loadu_ps(pdwi.add(gi * d + l))
                         };
-                        g = _mm256_fmadd_ps(e0, w0, g);
-                        g = _mm256_fmadd_ps(e1, w1, g);
-                        _mm256_storeu_ps(pdwi.add(gi * d + l), g);
-                        a0 = _mm256_fmadd_ps(e0, vwi, a0);
-                        a1 = _mm256_fmadd_ps(e1, vwi, a1);
+                        g = _mm512_fmadd_ps(e0, w0, g);
+                        g = _mm512_fmadd_ps(e1, w1, g);
+                        _mm512_storeu_ps(pdwi.add(gi * d + l), g);
+                        a0 = _mm512_fmadd_ps(e0, vwi, a0);
+                        a1 = _mm512_fmadd_ps(e1, vwi, a1);
                     }
                     if !lane0_shared {
-                        _mm256_storeu_ps(pdwo.add(r0 + l), a0);
+                        _mm512_storeu_ps(pdwo.add(r0 + l), a0);
                     }
                 }
                 if lane0_shared {
-                    _mm256_storeu_ps(pdwo.add(negs[j0] as usize * d + l), a0);
+                    _mm512_storeu_ps(pdwo.add(negs[j0] as usize * d + l), a0);
                 }
-                _mm256_storeu_ps(pdwo.add(r1 + l), a1);
-                l += 8;
+                _mm512_storeu_ps(pdwo.add(r1 + l), a1);
+                l += 16;
             }
             while l < d {
                 let mut a1 = *pdwo.add(r1 + l);
@@ -881,40 +823,40 @@ pub unsafe fn sgns_fused_run(
             j0 += 2;
         } else {
             let mut l = 0usize;
-            while l + 8 <= d {
-                let mut w0 = _mm256_setzero_ps();
-                let mut a0 = _mm256_setzero_ps();
+            while l + 16 <= d {
+                let mut w0 = _mm512_setzero_ps();
+                let mut a0 = _mm512_setzero_ps();
                 if lane0_shared {
                     let r0 = negs[j0] as usize * d;
-                    w0 = _mm256_loadu_ps(pwo.add(r0 + l));
-                    a0 = _mm256_loadu_ps(pdwo.add(r0 + l));
+                    w0 = _mm512_loadu_ps(pwo.add(r0 + l));
+                    a0 = _mm512_loadu_ps(pdwo.add(r0 + l));
                 }
                 for w in 0..r_n {
                     let r0 = slots[w * s + j0] as usize * d;
                     if !lane0_shared {
-                        w0 = _mm256_loadu_ps(pwo.add(r0 + l));
-                        a0 = _mm256_loadu_ps(pdwo.add(r0 + l));
+                        w0 = _mm512_loadu_ps(pwo.add(r0 + l));
+                        a0 = _mm512_loadu_ps(pdwo.add(r0 + l));
                     }
                     for gi in offs[w] as usize..offs[w + 1] as usize {
-                        let e0 = _mm256_set1_ps(*perr.add(gi * s + j0));
-                        let vwi = _mm256_loadu_ps(pwi.add(gi * d + l));
+                        let e0 = _mm512_set1_ps(*perr.add(gi * s + j0));
+                        let vwi = _mm512_loadu_ps(pwi.add(gi * d + l));
                         let mut g = if first {
-                            _mm256_setzero_ps()
+                            _mm512_setzero_ps()
                         } else {
-                            _mm256_loadu_ps(pdwi.add(gi * d + l))
+                            _mm512_loadu_ps(pdwi.add(gi * d + l))
                         };
-                        g = _mm256_fmadd_ps(e0, w0, g);
-                        _mm256_storeu_ps(pdwi.add(gi * d + l), g);
-                        a0 = _mm256_fmadd_ps(e0, vwi, a0);
+                        g = _mm512_fmadd_ps(e0, w0, g);
+                        _mm512_storeu_ps(pdwi.add(gi * d + l), g);
+                        a0 = _mm512_fmadd_ps(e0, vwi, a0);
                     }
                     if !lane0_shared {
-                        _mm256_storeu_ps(pdwo.add(r0 + l), a0);
+                        _mm512_storeu_ps(pdwo.add(r0 + l), a0);
                     }
                 }
                 if lane0_shared {
-                    _mm256_storeu_ps(pdwo.add(negs[j0] as usize * d + l), a0);
+                    _mm512_storeu_ps(pdwo.add(negs[j0] as usize * d + l), a0);
                 }
-                l += 8;
+                l += 16;
             }
             while l < d {
                 let mut a0 = 0.0f32;
@@ -950,21 +892,22 @@ pub unsafe fn sgns_fused_run(
 
 /// Fused `logits <- (label − σ(logits)) · lr`: the bulk is computed with
 /// label 0 (`-σ·lr`), then the positive column (j = 0 of each `s`-wide
-/// row) gets its `+lr` label term added back.
-#[target_feature(enable = "avx2", enable = "fma")]
+/// row) gets its `+lr` label term added back.  16-lane twin of
+/// `avx2::sgns_err` with the identical branch-stable scalar tail.
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
 pub unsafe fn sgns_err(logits: &mut [f32], s: usize, lr: f32) {
     let n = logits.len();
     let p = logits.as_mut_ptr();
-    let one = _mm256_set1_ps(1.0);
-    let neg_lr = _mm256_set1_ps(-lr);
-    let zero = _mm256_setzero_ps();
+    let one = _mm512_set1_ps(1.0);
+    let neg_lr = _mm512_set1_ps(-lr);
+    let zero = _mm512_setzero_ps();
     let mut i = 0usize;
-    while i + 8 <= n {
-        let x = _mm256_loadu_ps(p.add(i));
-        let e = exp256(_mm256_sub_ps(zero, x));
-        let sig = _mm256_div_ps(one, _mm256_add_ps(one, e));
-        _mm256_storeu_ps(p.add(i), _mm256_mul_ps(neg_lr, sig));
-        i += 8;
+    while i + 16 <= n {
+        let x = _mm512_loadu_ps(p.add(i));
+        let e = exp512(_mm512_sub_ps(zero, x));
+        let sig = _mm512_div_ps(one, _mm512_add_ps(one, e));
+        _mm512_storeu_ps(p.add(i), _mm512_mul_ps(neg_lr, sig));
+        i += 16;
     }
     while i < n {
         let x = *p.add(i);

@@ -5,17 +5,21 @@
 //! kernels at wider vector units explicitly.  The portable kernels in
 //! `linalg::vecops` / `linalg::gemm` *hope* LLVM autovectorises; this
 //! module removes the hope: every hot-path primitive has an AVX2+FMA
-//! implementation (`std::arch` intrinsics) next to the portable-scalar
-//! one, selected once per process.
+//! implementation and a 16-lane AVX-512 one (`std::arch` intrinsics)
+//! next to the portable-scalar one, selected once per process.
 //!
 //! Dispatch:
 //!
-//! * [`level()`] resolves to [`SimdLevel::Avx2`] iff the CPU reports
-//!   `avx2` **and** `fma` (detection result cached in a `OnceLock`);
+//! * [`SimdLevel::ALL`] is the level registry (widest first); parsing,
+//!   `Display`, availability and the `PINNED` encoding all derive from
+//!   it, so adding a tier is one enum variant plus one row per match;
+//! * [`level()`] resolves `Auto` to the widest AUTO-ELIGIBLE level the
+//!   CPU has (AVX2+FMA today — AVX-512 is opt-in, see
+//!   [`SimdLevel::auto_eligible`]); detection is cached in `OnceLock`s;
 //! * [`configure`] pins the level explicitly — the `--simd
-//!   {auto,avx2,scalar}` config knob routes here, so ablations can compare
-//!   dispatch paths on the same binary.  `--simd scalar` executes the
-//!   exact same code as the pre-SIMD crate, bit for bit.
+//!   {auto,avx512,avx2,scalar}` config knob routes here, so ablations can
+//!   compare dispatch paths on the same binary.  `--simd scalar` executes
+//!   the exact same code as the pre-SIMD crate, bit for bit.
 //!
 //! The dispatched surface is the complete per-window hot path: `dot`,
 //! `axpy`, the three GEMM microkernels at the paper's (B≈16, S≈6, D≈300)
@@ -24,7 +28,9 @@
 //! window kernel that replaces that whole four-kernel chain with one
 //! register-tiled sweep (`--kernel {auto,fused,gemm3}` selects between
 //! them in the GEMM backend; `gemm3` keeps the chain bit-for-bit for
-//! ablation).
+//! ablation), plus [`sgns_fused_run`], the FULL-W2V-style extension that
+//! carries the shared negative rows and accumulators across a RUN of
+//! consecutive windows (`--reuse {off,window,sentence}`).
 
 use std::fmt;
 use std::str::FromStr;
@@ -33,60 +39,161 @@ use std::sync::OnceLock;
 
 #[cfg(target_arch = "x86_64")]
 pub(crate) mod avx2;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx512;
 pub(crate) mod scalar;
 
 /// The `--simd` config knob: requested dispatch policy.
+///
+/// `Auto` follows detection; every other mode pins exactly one
+/// [`SimdLevel`].  Parsing, `Display` and the error text derive from the
+/// level registry ([`SimdLevel::ALL`]), so the mode surface tracks the
+/// level surface automatically.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SimdMode {
-    /// Use AVX2+FMA when the CPU has it, scalar otherwise.
+    /// Use the widest auto-eligible level the CPU has (AVX2+FMA today;
+    /// AVX-512 must be requested explicitly — downclock caveats in
+    /// EXPERIMENTS.md §AVX-512).
     #[default]
     Auto,
+    /// Require the 16-lane AVX-512 kernels (error on CPUs without
+    /// avx512f+avx512bw).
+    Avx512,
     /// Require the AVX2+FMA kernels (error on CPUs without them).
     Avx2,
     /// Force the portable kernels (bit-identical to the pre-SIMD crate).
     Scalar,
 }
 
+impl SimdMode {
+    /// The level this mode pins; `None` for `Auto`.
+    #[inline]
+    pub fn pinned_level(self) -> Option<SimdLevel> {
+        match self {
+            SimdMode::Auto => None,
+            SimdMode::Avx512 => Some(SimdLevel::Avx512),
+            SimdMode::Avx2 => Some(SimdLevel::Avx2),
+            SimdMode::Scalar => Some(SimdLevel::Scalar),
+        }
+    }
+
+    /// The mode that pins `level` (inverse of [`Self::pinned_level`]).
+    pub fn pinning(level: SimdLevel) -> SimdMode {
+        match level {
+            SimdLevel::Avx512 => SimdMode::Avx512,
+            SimdLevel::Avx2 => SimdMode::Avx2,
+            SimdLevel::Scalar => SimdMode::Scalar,
+        }
+    }
+}
+
 impl FromStr for SimdMode {
     type Err = anyhow::Error;
 
     fn from_str(s: &str) -> anyhow::Result<Self> {
-        match s.to_ascii_lowercase().as_str() {
-            "auto" => Ok(SimdMode::Auto),
-            "avx2" => Ok(SimdMode::Avx2),
-            "scalar" => Ok(SimdMode::Scalar),
-            other => anyhow::bail!("unknown simd mode '{other}' (auto|avx2|scalar)"),
+        let lower = s.to_ascii_lowercase();
+        if lower == "auto" {
+            return Ok(SimdMode::Auto);
         }
+        for l in SimdLevel::ALL {
+            if lower == l.name() {
+                return Ok(SimdMode::pinning(l));
+            }
+        }
+        let names: Vec<&str> = std::iter::once("auto")
+            .chain(SimdLevel::ALL.iter().map(|l| l.name()))
+            .collect();
+        anyhow::bail!("unknown simd mode '{lower}' ({})", names.join("|"))
     }
 }
 
 impl fmt::Display for SimdMode {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(match self {
-            SimdMode::Auto => "auto",
-            SimdMode::Avx2 => "avx2",
-            SimdMode::Scalar => "scalar",
-        })
+        match self.pinned_level() {
+            None => f.write_str("auto"),
+            Some(l) => f.write_str(l.name()),
+        }
     }
 }
 
-/// The resolved dispatch level actually executing.
+/// The resolved dispatch level actually executing, widest first.
+///
+/// Discriminants match the [`Self::ALL`] registry positions — the
+/// `PINNED` encoding (`code()`/`from_code()`) relies on that, so keep the
+/// declaration order and the registry order identical.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
 pub enum SimdLevel {
+    /// 16-lane AVX-512 kernels (avx512f + avx512bw).
+    Avx512,
+    /// 8-lane AVX2+FMA kernels.
     Avx2,
+    /// Portable kernels (the pre-SIMD crate, bit for bit).
     Scalar,
+}
+
+impl SimdLevel {
+    /// Every dispatchable level, widest first — THE registry that
+    /// parsing, `Display`, availability, the `PINNED` encoding and the
+    /// bench level sweeps derive from.  Adding a tier is one enum
+    /// variant plus one row in each match below; no string tables or
+    /// encodings elsewhere need touching.
+    pub const ALL: [SimdLevel; 3] =
+        [SimdLevel::Avx512, SimdLevel::Avx2, SimdLevel::Scalar];
+
+    /// Canonical knob spelling (`--simd <name>`, `PW2V_SIMD=<name>`).
+    pub const fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Avx512 => "avx512",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Scalar => "scalar",
+        }
+    }
+
+    /// The CPUID features the level needs (for diagnostics).
+    const fn requirement(self) -> &'static str {
+        match self {
+            SimdLevel::Avx512 => "avx512f+avx512bw",
+            SimdLevel::Avx2 => "avx2+fma",
+            SimdLevel::Scalar => "nothing",
+        }
+    }
+
+    /// Whether this CPU can run the level (cached CPUID detection).
+    pub fn available(self) -> bool {
+        match self {
+            SimdLevel::Avx512 => avx512_available(),
+            SimdLevel::Avx2 => avx2_available(),
+            SimdLevel::Scalar => true,
+        }
+    }
+
+    /// Whether `--simd auto` may resolve to this level.  AVX-512 is
+    /// deliberately opt-in: on many cores 512-bit vectors downclock the
+    /// whole socket, so the 16-lane tier must be requested explicitly
+    /// after measuring (EXPERIMENTS.md §AVX-512).
+    const fn auto_eligible(self) -> bool {
+        !matches!(self, SimdLevel::Avx512)
+    }
+
+    /// `PINNED` encoding: 0 is "unpinned", each level is its registry
+    /// position + 1.
+    fn code(self) -> u8 {
+        self as u8 + 1
+    }
+
+    fn from_code(code: u8) -> Option<SimdLevel> {
+        SimdLevel::ALL.get(code.wrapping_sub(1) as usize).copied()
+    }
 }
 
 impl fmt::Display for SimdLevel {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(match self {
-            SimdLevel::Avx2 => "avx2",
-            SimdLevel::Scalar => "scalar",
-        })
+        f.write_str(self.name())
     }
 }
 
-/// 0 = unpinned (follow detection), 1 = avx2, 2 = scalar.
+/// 0 = unpinned (follow detection); `level.code()` pins that level.
 static PINNED: AtomicU8 = AtomicU8::new(0);
 
 /// CPUID detection, done once per process.
@@ -104,35 +211,58 @@ fn avx2_available() -> bool {
     })
 }
 
-/// Apply a [`SimdMode`]; returns the level that will run.  `Avx2` /
-/// `Scalar` pin the level; `Auto` UNPINS (back to detection), so a
+/// CPUID detection for the 16-lane tier, done once per process:
+/// `avx512f` (512-bit f32 FMA foundation) plus `avx512bw` (byte/word
+/// integer ops, needed by the int8 dot).
+fn avx512_available() -> bool {
+    static AVAILABLE: OnceLock<bool> = OnceLock::new();
+    *AVAILABLE.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            is_x86_feature_detected!("avx512f")
+                && is_x86_feature_detected!("avx512bw")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// The level `Auto` resolves to: the widest auto-eligible level this CPU
+/// has (always terminates at Scalar, which is unconditionally available).
+fn detected() -> SimdLevel {
+    for l in SimdLevel::ALL {
+        if l.auto_eligible() && l.available() {
+            return l;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// Apply a [`SimdMode`]; returns the level that will run.  Pinning modes
+/// pin their level; `Auto` UNPINS (back to detection), so a
 /// scalar-pinned run never leaks into a later `--simd auto` run in the
-/// same process.  `Avx2` errors on CPUs without avx2+fma instead of
-/// mis-executing.
+/// same process.  A pinned level errors when the CPU lacks its features
+/// instead of mis-executing — `--simd avx512` on a non-AVX-512 box is a
+/// clean startup error, never an illegal instruction.
 ///
 /// The dispatch level is deliberately PROCESS-GLOBAL (the issue's
-/// "selected once at startup"): both levels compute the same answers, so
+/// "selected once at startup"): all levels compute the same answers, so
 /// concurrent trainers with different `--simd` settings stay correct,
 /// but they would contaminate each other's *timings* — run dispatch
 /// ablations sequentially, as the benches do.
 pub fn configure(mode: SimdMode) -> anyhow::Result<SimdLevel> {
-    let (pin, level) = match mode {
-        SimdMode::Auto => (
-            0,
-            if avx2_available() {
-                SimdLevel::Avx2
-            } else {
-                SimdLevel::Scalar
-            },
-        ),
-        SimdMode::Avx2 => {
+    let (pin, level) = match mode.pinned_level() {
+        None => (0, detected()),
+        Some(l) => {
             anyhow::ensure!(
-                avx2_available(),
-                "--simd avx2 requested but the CPU lacks avx2+fma"
+                l.available(),
+                "--simd {l} requested but the CPU lacks {}",
+                l.requirement()
             );
-            (1, SimdLevel::Avx2)
+            (l.code(), l)
         }
-        SimdMode::Scalar => (2, SimdLevel::Scalar),
     };
     PINNED.store(pin, Ordering::Relaxed);
     Ok(level)
@@ -141,16 +271,9 @@ pub fn configure(mode: SimdMode) -> anyhow::Result<SimdLevel> {
 /// The dispatch level in effect (pinned, else detected).
 #[inline]
 pub fn level() -> SimdLevel {
-    match PINNED.load(Ordering::Relaxed) {
-        1 => SimdLevel::Avx2,
-        2 => SimdLevel::Scalar,
-        _ => {
-            if avx2_available() {
-                SimdLevel::Avx2
-            } else {
-                SimdLevel::Scalar
-            }
-        }
+    match SimdLevel::from_code(PINNED.load(Ordering::Relaxed)) {
+        Some(l) => l,
+        None => detected(),
     }
 }
 
@@ -160,9 +283,13 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len(), "dot length mismatch");
     #[cfg(target_arch = "x86_64")]
     {
-        if level() == SimdLevel::Avx2 {
-            // SAFETY: level() is Avx2 only when avx2+fma were detected.
-            return unsafe { avx2::dot(a, b) };
+        // SAFETY: level() returns a vector tier only when its CPUID
+        // features were detected (or explicitly pinned via configure,
+        // which re-checks availability).
+        match level() {
+            SimdLevel::Avx512 => return unsafe { avx512::dot(a, b) },
+            SimdLevel::Avx2 => return unsafe { avx2::dot(a, b) },
+            SimdLevel::Scalar => {}
         }
     }
     scalar::dot(a, b)
@@ -171,18 +298,26 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// Dispatched integer dot `<a, b>` over int8 quantized codes (the serve
 /// engine's int8 row store).  Pure i32 accumulation of i8·i8 products —
 /// EXACTLY equal across dispatch levels, unlike the f32 kernels'
-/// bounded reassociation drift.  Length is capped at 2¹⁷ so the
-/// accumulator cannot overflow even with every code at ±127
-/// (2¹⁷ · 127² < 2³¹); serve dims sit orders of magnitude below that.
+/// bounded reassociation drift.  The i32-overflow length bound
+/// (len ≤ 2¹⁷, so 2¹⁷·127² < 2³¹) is validated ONCE, with a typed
+/// error, where int8 stores are built (`serve::store::MAX_DIM` at
+/// `RowStore` construction and `QuantStore::build`); the kernel keeps a
+/// `debug_assert!` only, so a hot serve request can never panic
+/// mid-scan in release builds.
 #[inline]
 pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     assert_eq!(a.len(), b.len(), "dot_i8 length mismatch");
-    assert!(a.len() <= 1 << 17, "dot_i8 length exceeds overflow-safe bound");
+    debug_assert!(
+        a.len() <= 1 << 17,
+        "dot_i8 length exceeds overflow-safe bound"
+    );
     #[cfg(target_arch = "x86_64")]
     {
-        if level() == SimdLevel::Avx2 {
-            // SAFETY: level() is Avx2 only when avx2+fma were detected.
-            return unsafe { avx2::dot_i8(a, b) };
+        // SAFETY: detection gate as in `dot`.
+        match level() {
+            SimdLevel::Avx512 => return unsafe { avx512::dot_i8(a, b) },
+            SimdLevel::Avx2 => return unsafe { avx2::dot_i8(a, b) },
+            SimdLevel::Scalar => {}
         }
     }
     scalar::dot_i8(a, b)
@@ -194,9 +329,11 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len(), "axpy length mismatch");
     #[cfg(target_arch = "x86_64")]
     {
-        if level() == SimdLevel::Avx2 {
-            // SAFETY: detection gate as in `dot`.
-            return unsafe { avx2::axpy(alpha, x, y) };
+        // SAFETY: detection gate as in `dot`.
+        match level() {
+            SimdLevel::Avx512 => return unsafe { avx512::axpy(alpha, x, y) },
+            SimdLevel::Avx2 => return unsafe { avx2::axpy(alpha, x, y) },
+            SimdLevel::Scalar => {}
         }
     }
     scalar::axpy(alpha, x, y)
@@ -216,14 +353,21 @@ pub fn gemm_nt(
     beta: f32,
     c: &mut [f32],
 ) {
-    // Release-mode asserts: the AVX2 kernels index through raw pointers,
-    // so undersized slices must panic here, not corrupt memory there.
+    // Release-mode asserts: the vector kernels index through raw
+    // pointers, so undersized slices must panic here, not corrupt memory
+    // there.
     assert!(a.len() >= m * k && b.len() >= n * k && c.len() >= m * n);
     #[cfg(target_arch = "x86_64")]
     {
-        if level() == SimdLevel::Avx2 {
-            // SAFETY: detection gate; slice bounds asserted above.
-            return unsafe { avx2::gemm_nt(m, n, k, alpha, a, b, beta, c) };
+        // SAFETY: detection gate; slice bounds asserted above.
+        match level() {
+            SimdLevel::Avx512 => {
+                return unsafe { avx512::gemm_nt(m, n, k, alpha, a, b, beta, c) }
+            }
+            SimdLevel::Avx2 => {
+                return unsafe { avx2::gemm_nt(m, n, k, alpha, a, b, beta, c) }
+            }
+            SimdLevel::Scalar => {}
         }
     }
     scalar::gemm_nt(m, n, k, alpha, a, b, beta, c)
@@ -245,9 +389,15 @@ pub fn gemm_nn(
     assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
     #[cfg(target_arch = "x86_64")]
     {
-        if level() == SimdLevel::Avx2 {
-            // SAFETY: detection gate; slice bounds asserted above.
-            return unsafe { avx2::gemm_nn(m, n, k, alpha, a, b, beta, c) };
+        // SAFETY: detection gate; slice bounds asserted above.
+        match level() {
+            SimdLevel::Avx512 => {
+                return unsafe { avx512::gemm_nn(m, n, k, alpha, a, b, beta, c) }
+            }
+            SimdLevel::Avx2 => {
+                return unsafe { avx2::gemm_nn(m, n, k, alpha, a, b, beta, c) }
+            }
+            SimdLevel::Scalar => {}
         }
     }
     scalar::gemm_nn(m, n, k, alpha, a, b, beta, c)
@@ -269,9 +419,15 @@ pub fn gemm_tn(
     assert!(a.len() >= k * m && b.len() >= k * n && c.len() >= m * n);
     #[cfg(target_arch = "x86_64")]
     {
-        if level() == SimdLevel::Avx2 {
-            // SAFETY: detection gate; slice bounds asserted above.
-            return unsafe { avx2::gemm_tn(m, n, k, alpha, a, b, beta, c) };
+        // SAFETY: detection gate; slice bounds asserted above.
+        match level() {
+            SimdLevel::Avx512 => {
+                return unsafe { avx512::gemm_tn(m, n, k, alpha, a, b, beta, c) }
+            }
+            SimdLevel::Avx2 => {
+                return unsafe { avx2::gemm_tn(m, n, k, alpha, a, b, beta, c) }
+            }
+            SimdLevel::Scalar => {}
         }
     }
     scalar::gemm_tn(m, n, k, alpha, a, b, beta, c)
@@ -286,9 +442,11 @@ pub fn sgns_err(logits: &mut [f32], s: usize, lr: f32) {
     assert!(s > 0 && logits.len() % s == 0, "sgns_err geometry");
     #[cfg(target_arch = "x86_64")]
     {
-        if level() == SimdLevel::Avx2 {
-            // SAFETY: detection gate.
-            return unsafe { avx2::sgns_err(logits, s, lr) };
+        // SAFETY: detection gate.
+        match level() {
+            SimdLevel::Avx512 => return unsafe { avx512::sgns_err(logits, s, lr) },
+            SimdLevel::Avx2 => return unsafe { avx2::sgns_err(logits, s, lr) },
+            SimdLevel::Scalar => {}
         }
     }
     scalar::sgns_err(logits, s, lr)
@@ -297,7 +455,7 @@ pub fn sgns_err(logits: &mut [f32], s: usize, lr: f32) {
 /// Dispatched FUSED single-pass SGNS window kernel — the perf-PR
 /// tentpole that collapses `gemm_nt → sgns_err → gemm_nn → gemm_tn` into
 /// one call (see `scalar::sgns_fused` for the reference semantics and
-/// `avx2::sgns_fused` for the register-tiling):
+/// `avx2::sgns_fused` / `avx512::sgns_fused` for the register-tiling):
 ///
 /// * `wi` holds `b = wi.len()/d` gathered input rows;
 /// * `slots` selects the `s` output rows inside `wo`/`dwo` (the
@@ -321,8 +479,9 @@ pub fn sgns_fused(
     dwi: &mut [f32],
     dwo: &mut [f32],
 ) {
-    // Release-mode asserts: the AVX2 kernel indexes through raw pointers,
-    // so bad geometry must panic here, not corrupt memory there.
+    // Release-mode asserts: the vector kernels index through raw
+    // pointers, so bad geometry must panic here, not corrupt memory
+    // there.
     assert!(d > 0 && s > 0 && slots.len() == s, "sgns_fused geometry");
     assert!(
         wi.len() % d == 0 && dwi.len() == wi.len(),
@@ -337,14 +496,113 @@ pub fn sgns_fused(
     );
     #[cfg(target_arch = "x86_64")]
     {
-        if level() == SimdLevel::Avx2 {
-            // SAFETY: detection gate; slice bounds asserted above.
-            return unsafe {
-                avx2::sgns_fused(s, d, lr, wi, wo, slots, err, dwi, dwo)
-            };
+        // SAFETY: detection gate; slice bounds asserted above.
+        match level() {
+            SimdLevel::Avx512 => {
+                return unsafe {
+                    avx512::sgns_fused(s, d, lr, wi, wo, slots, err, dwi, dwo)
+                }
+            }
+            SimdLevel::Avx2 => {
+                return unsafe {
+                    avx2::sgns_fused(s, d, lr, wi, wo, slots, err, dwi, dwo)
+                }
+            }
+            SimdLevel::Scalar => {}
         }
     }
     scalar::sgns_fused(s, d, lr, wi, wo, slots, err, dwi, dwo)
+}
+
+/// Dispatched fused kernel over a RUN of consecutive windows that share
+/// one negative-slot set — the FULL-W2V-style cross-window reuse behind
+/// `--reuse sentence` (the driver groups a sentence's windows into runs):
+///
+/// * `offs` delimits each window's rows inside `wi`/`dwi` (CSR-style
+///   row offsets; `offs.len() - 1` windows, strictly increasing);
+/// * `slots` holds `s` output slots per window, window-major; every
+///   window's `slots[1..]` (the shared negatives) must be identical
+///   across the run, and for runs longer than one window each window's
+///   slots must be pairwise distinct — the driver routes duplicate-slot
+///   windows into singleton runs, where the per-window kernel's
+///   sequential fallback applies;
+/// * `err` is caller scratch of at least `rows·s` (global-row-major:
+///   run row `g` occupies `err[g·s .. (g+1)·s]`);
+/// * semantics are EXACTLY `offs.len() - 1` consecutive [`sgns_fused`]
+///   calls at the same dispatch level (pinned bitwise in
+///   `tests/props.rs`): the vector paths keep the shared negative `wo`
+///   rows and their `dwo` accumulators in registers across the whole run
+///   instead of re-reading them per window — bit-identical because an
+///   f32 store/reload round-trip is exact and the per-location operation
+///   order is unchanged.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn sgns_fused_run(
+    s: usize,
+    d: usize,
+    lr: f32,
+    wi: &[f32],
+    offs: &[u32],
+    wo: &[f32],
+    slots: &[u32],
+    err: &mut [f32],
+    dwi: &mut [f32],
+    dwo: &mut [f32],
+) {
+    assert!(d > 0 && s > 0 && offs.len() >= 2, "sgns_fused_run geometry");
+    let r_n = offs.len() - 1;
+    assert_eq!(slots.len(), r_n * s, "sgns_fused_run slots geometry");
+    assert!(
+        offs[0] == 0 && offs.windows(2).all(|p| p[0] < p[1]),
+        "sgns_fused_run offsets not strictly increasing from 0"
+    );
+    let rows = offs[r_n] as usize;
+    assert!(
+        wi.len() == rows * d && dwi.len() == wi.len(),
+        "sgns_fused_run wi/dwi geometry"
+    );
+    assert!(err.len() >= rows * s, "sgns_fused_run err scratch undersized");
+    let max_row = slots.iter().map(|&x| x as usize).max().unwrap_or(0);
+    assert!(
+        (max_row + 1) * d <= wo.len() && (max_row + 1) * d <= dwo.len(),
+        "sgns_fused_run slot out of range"
+    );
+    // Driver contract, checked in debug builds: negatives shared across
+    // the run, and multi-window runs duplicate-free per window.
+    debug_assert!(
+        (1..r_n).all(|w| slots[w * s + 1..(w + 1) * s] == slots[1..s]),
+        "sgns_fused_run: negatives differ across the run"
+    );
+    debug_assert!(
+        r_n == 1
+            || (0..r_n).all(|w| {
+                let sl = &slots[w * s..(w + 1) * s];
+                sl.iter().enumerate().all(|(j, x)| !sl[..j].contains(x))
+            }),
+        "sgns_fused_run: duplicate slot inside a multi-window run"
+    );
+    #[cfg(target_arch = "x86_64")]
+    {
+        // SAFETY: detection gate; slice bounds asserted above.
+        match level() {
+            SimdLevel::Avx512 => {
+                return unsafe {
+                    avx512::sgns_fused_run(
+                        s, d, lr, wi, offs, wo, slots, err, dwi, dwo,
+                    )
+                }
+            }
+            SimdLevel::Avx2 => {
+                return unsafe {
+                    avx2::sgns_fused_run(
+                        s, d, lr, wi, offs, wo, slots, err, dwi, dwo,
+                    )
+                }
+            }
+            SimdLevel::Scalar => {}
+        }
+    }
+    scalar::sgns_fused_run(s, d, lr, wi, offs, wo, slots, err, dwi, dwo)
 }
 
 #[cfg(test)]
@@ -366,6 +624,38 @@ mod tests {
         assert!("sse9".parse::<SimdMode>().is_err());
         assert_eq!(SimdMode::Avx2.to_string(), "avx2");
         assert_eq!(SimdLevel::Scalar.to_string(), "scalar");
+        // The 16-lane tier is a first-class mode: it parses (the old
+        // closed-enum contract asserted this FAILED), displays, and its
+        // name appears in the error text for unknown modes.
+        assert_eq!("avx512".parse::<SimdMode>().unwrap(), SimdMode::Avx512);
+        assert_eq!("AVX512".parse::<SimdMode>().unwrap(), SimdMode::Avx512);
+        assert_eq!(SimdMode::Avx512.to_string(), "avx512");
+        let err = "sse9".parse::<SimdMode>().unwrap_err().to_string();
+        assert!(err.contains("auto|avx512|avx2|scalar"), "{err}");
+    }
+
+    /// The registry IS the single source of truth: every mode except
+    /// `Auto` round-trips through a registry level, codes round-trip
+    /// through `from_code`, and 0 means unpinned.
+    #[test]
+    fn level_registry_is_consistent() {
+        assert_eq!(SimdLevel::from_code(0), None);
+        for (i, l) in SimdLevel::ALL.into_iter().enumerate() {
+            assert_eq!(l.code() as usize, i + 1, "{l}: code is position + 1");
+            assert_eq!(SimdLevel::from_code(l.code()), Some(l));
+            assert_eq!(l.name().parse::<SimdMode>().unwrap().pinned_level(), Some(l));
+            assert_eq!(SimdMode::pinning(l).to_string(), l.name());
+        }
+        assert_eq!(
+            SimdLevel::from_code(SimdLevel::ALL.len() as u8 + 1),
+            None,
+            "codes past the registry are unpinned, never UB"
+        );
+        assert!(SimdLevel::Scalar.available(), "scalar is always runnable");
+        assert!(
+            !SimdLevel::Avx512.auto_eligible(),
+            "avx512 stays opt-in under --simd auto"
+        );
     }
 
     /// `configure`'s RETURN VALUE reports the resolved level (asserting
@@ -384,6 +674,17 @@ mod tests {
             }
             Err(_) => assert_eq!(auto, SimdLevel::Scalar),
         }
+        // avx512: configure either pins the 16-lane tier (CPU has it) or
+        // errors with the requirement named — never panics, never pins a
+        // level the CPU cannot run.  Auto NEVER resolves to it.
+        match configure(SimdMode::Avx512) {
+            Ok(l) => assert_eq!(l, SimdLevel::Avx512),
+            Err(e) => assert!(
+                e.to_string().contains("avx512f+avx512bw"),
+                "rejection must name the missing features: {e}"
+            ),
+        }
+        assert_ne!(configure(SimdMode::Auto).unwrap(), SimdLevel::Avx512);
         // Leave the process unpinned for everyone else.
         configure(SimdMode::Auto).unwrap();
     }
@@ -472,6 +773,68 @@ mod tests {
         }
     }
 
+    /// Whatever level is currently dispatched, the RUN kernel must equal
+    /// repeated per-window [`sgns_fused`] calls BIT FOR BIT — this is
+    /// the run kernel's defining contract (the level×shape matrix lives
+    /// in `tests/props.rs`; this is the in-crate smoke).
+    #[test]
+    fn sgns_fused_run_is_bitwise_repeated_windows() {
+        let (s, d, u) = (6usize, 37usize, 11usize);
+        let bs = [3usize, 1, 4]; // rows per window
+        let rows: usize = bs.iter().sum();
+        let mut rng = Xoshiro256ss::new(0x4E57);
+        let wi = randv(rows * d, rng.next_u64());
+        let wo = randv(u * d, rng.next_u64());
+        let lr = 0.025f32;
+        // Shared negatives, per-window positives (dup-free per window).
+        let negs = [7u32, 2, 9, 4, 0];
+        let mut slots = Vec::new();
+        let mut offs = vec![0u32];
+        for (w, &b) in bs.iter().enumerate() {
+            slots.push(w as u32 + 1); // positive: 1, 2, 3 (≠ negs? 2 IS a neg)
+            slots.extend_from_slice(&negs);
+            offs.push(offs.last().unwrap() + b as u32);
+        }
+        // Window 1's positive (2) duplicates a shared negative, which a
+        // multi-window run forbids — fix it to a clean id.
+        slots[s] = 10;
+
+        let mut want_dwi = vec![0.0f32; rows * d];
+        let mut want_dwo = randv(u * d, 3);
+        let mut got_dwi = vec![0.0f32; rows * d];
+        let mut got_dwo = want_dwo.clone();
+        let mut err = vec![0.0f32; rows * s];
+        for (w, _) in bs.iter().enumerate() {
+            let (lo, hi) = (offs[w] as usize, offs[w + 1] as usize);
+            sgns_fused(
+                s,
+                d,
+                lr,
+                &wi[lo * d..hi * d],
+                &wo,
+                &slots[w * s..(w + 1) * s],
+                &mut err[lo * s..hi * s],
+                &mut want_dwi[lo * d..hi * d],
+                &mut want_dwo,
+            );
+        }
+        let mut err2 = vec![0.0f32; rows * s];
+        sgns_fused_run(
+            s, d, lr, &wi, &offs, &wo, &slots, &mut err2, &mut got_dwi,
+            &mut got_dwo,
+        );
+        assert_eq!(
+            got_dwi.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want_dwi.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "dwi must be bitwise the repeated per-window kernel"
+        );
+        assert_eq!(
+            got_dwo.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want_dwo.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "dwo must be bitwise the repeated per-window kernel"
+        );
+    }
+
     /// The int8 dot is integer arithmetic: whatever level dispatches,
     /// the answer must EQUAL the scalar reference — not approximate it.
     #[test]
@@ -486,7 +849,8 @@ mod tests {
             let naive: i32 = a.iter().zip(&b).map(|(x, y)| *x as i32 * *y as i32).sum();
             assert_eq!(want, naive, "n={n}");
         }
-        // Extremes: every code at ±127 at the dispatcher's length cap.
+        // Extremes: every code at ±127 at the store layer's length cap
+        // (`serve::store::MAX_DIM`; the kernel itself only debug-asserts).
         let a = vec![127i8; 1 << 17];
         let b = vec![-127i8; 1 << 17];
         assert_eq!(dot_i8(&a, &b), -(127i32 * 127) * (1 << 17));

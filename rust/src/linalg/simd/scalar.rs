@@ -85,3 +85,43 @@ pub fn sgns_fused(
         }
     }
 }
+
+/// Fused kernel over a run of consecutive windows sharing one negative
+/// set, portable reference form — and THE bitwise ground truth for the
+/// vector run kernels: a run is DEFINED as `offs.len() - 1` consecutive
+/// [`sgns_fused`] calls over per-window slices.  `offs` holds CSR-style
+/// row offsets into `wi`/`dwi` (window `w` owns rows
+/// `offs[w]..offs[w+1]`), `slots` is `s` entries per window
+/// (window-major), and `err` is global-row-major scratch of at least
+/// `rows·s`.  The register-resident reuse in the vector twins must
+/// reproduce this loop bit for bit — an f32 store/reload round-trip is
+/// exact, so keeping a row live across windows changes nothing as long
+/// as the per-location operation order is preserved.
+#[allow(clippy::too_many_arguments)]
+pub fn sgns_fused_run(
+    s: usize,
+    d: usize,
+    lr: f32,
+    wi: &[f32],
+    offs: &[u32],
+    wo: &[f32],
+    slots: &[u32],
+    err: &mut [f32],
+    dwi: &mut [f32],
+    dwo: &mut [f32],
+) {
+    for w in 0..offs.len() - 1 {
+        let (lo, hi) = (offs[w] as usize, offs[w + 1] as usize);
+        sgns_fused(
+            s,
+            d,
+            lr,
+            &wi[lo * d..hi * d],
+            wo,
+            &slots[w * s..(w + 1) * s],
+            &mut err[lo * s..hi * s],
+            &mut dwi[lo * d..hi * d],
+            dwo,
+        );
+    }
+}

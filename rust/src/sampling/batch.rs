@@ -16,6 +16,7 @@
 
 use super::unigram::UnigramSampler;
 use super::window::{context_range, dynamic_window};
+use crate::config::ReuseMode;
 use crate::corpus::reader::MAX_SENTENCE_LEN;
 use crate::util::rng::Xoshiro256ss;
 
@@ -72,6 +73,19 @@ pub struct SuperbatchArena {
     inputs: Vec<u32>,
     input_offsets: Vec<u32>,
     outputs: Vec<u32>,
+    /// Sentence serial of each window (one entry per window) — the
+    /// reuse-lifetime bookkeeping: the GEMM backend's run-grouping
+    /// driver may only share negatives across CONSECUTIVE windows with
+    /// equal serials (`--reuse sentence`).  Serials are wrapping u32
+    /// counters, unique enough to separate sentences within one arena;
+    /// a wrap collision is backstopped by the driver's slots-equality
+    /// check (and a false-positive group with identical negatives IS
+    /// the defined reuse semantics, deterministically).
+    sent: Vec<u32>,
+    /// Serial stamped on the next [`push_window`](Self::push_window)
+    /// (each direct push is its own sentence; the builder fills stamp
+    /// their own per-sentence serial and advance this past it).
+    next_sent: u32,
     /// Output rows per window (1 + K).
     s: usize,
     /// Input batch cap B (windows never exceed it).
@@ -85,6 +99,8 @@ impl SuperbatchArena {
             inputs: Vec::new(),
             input_offsets: vec![0],
             outputs: Vec::new(),
+            sent: Vec::new(),
+            next_sent: 0,
             s,
             b_cap,
         }
@@ -97,6 +113,7 @@ impl SuperbatchArena {
         a.inputs.reserve(windows * b_cap);
         a.input_offsets.reserve(windows + 1);
         a.outputs.reserve(windows * s);
+        a.sent.reserve(windows);
         a
     }
 
@@ -173,12 +190,15 @@ impl SuperbatchArena {
         self.b_cap
     }
 
-    /// Reset to empty, KEEPING all buffer capacity.
+    /// Reset to empty, KEEPING all buffer capacity.  The sentence-serial
+    /// counter is NOT reset, so windows filled after a clear never share
+    /// a serial with windows from before it.
     pub fn clear(&mut self) {
         self.inputs.clear();
         self.input_offsets.clear();
         self.input_offsets.push(0);
         self.outputs.clear();
+        self.sent.clear();
     }
 
     /// Context ids of window `w`.
@@ -202,27 +222,57 @@ impl SuperbatchArena {
         &self.outputs
     }
 
+    /// Sentence serial of window `w` — equal serials on CONSECUTIVE
+    /// windows license the reuse driver to group them into one run.
+    #[inline]
+    pub fn sentence_of(&self, w: usize) -> u32 {
+        self.sent[w]
+    }
+
     /// Append one window directly (tests / custom drivers; the trainer
-    /// fills through [`BatchBuilder::fill_arena`]).
+    /// fills through [`BatchBuilder::fill_arena`]).  Each direct push is
+    /// stamped as its OWN sentence, so hand-built arenas never group
+    /// into reuse runs unless pushed through
+    /// [`push_window_in_sentence`](Self::push_window_in_sentence).
     pub fn push_window(&mut self, inputs: &[u32], outputs: &[u32]) {
+        let serial = self.next_sent;
+        self.next_sent = self.next_sent.wrapping_add(1);
+        self.push_window_in_sentence(inputs, outputs, serial);
+    }
+
+    /// Append one window stamped with an explicit sentence serial
+    /// (tests / custom drivers building multi-window reuse runs).
+    pub fn push_window_in_sentence(
+        &mut self,
+        inputs: &[u32],
+        outputs: &[u32],
+        sentence: u32,
+    ) {
         assert!(!inputs.is_empty() && inputs.len() <= self.b_cap);
         assert_eq!(outputs.len(), self.s);
         self.inputs.extend_from_slice(inputs);
         self.outputs.extend_from_slice(outputs);
+        self.sent.push(sentence);
         self.input_offsets.push(self.inputs.len() as u32);
+        self.next_sent = self.next_sent.max(sentence.wrapping_add(1));
     }
 
     /// Append every window of `other` (same geometry) — how a routed
     /// worker adopts a mailbox block into its working arena.  One slice
     /// copy per flat buffer plus an offset rebase; no per-window work.
+    /// Sentence serials are adopted verbatim (the mailbox block was
+    /// filled sentence-at-a-time by its producer, so serial runs stay
+    /// contiguous within the block).
     pub fn append_from(&mut self, other: &SuperbatchArena) {
         assert_eq!(self.s, other.s, "append_from: S mismatch");
         assert_eq!(self.b_cap, other.b_cap, "append_from: B cap mismatch");
         let base = self.inputs.len() as u32;
         self.inputs.extend_from_slice(&other.inputs);
         self.outputs.extend_from_slice(&other.outputs);
+        self.sent.extend_from_slice(&other.sent);
         self.input_offsets
             .extend(other.input_offsets[1..].iter().map(|&o| o + base));
+        self.next_sent = self.next_sent.max(other.next_sent);
     }
 
     /// Materialise as allocated [`Window`]s (compatibility path for
@@ -270,6 +320,15 @@ pub struct BatchBuilder<'a> {
     batch: usize,
     /// Negative samples K.
     negative: usize,
+    /// Negative-draw lifetime (`--reuse`): `Off`/`Window` draw K
+    /// negatives per window (identical RNG streams); `Sentence` draws K
+    /// once per sentence and shares them across all its windows.
+    reuse: ReuseMode,
+    /// Sentence-scoped negative buffer (pre-sized to K at construction,
+    /// so the steady-state fill stays allocation-free).
+    neg_buf: Vec<u32>,
+    /// Serial stamped on every window of the next filled sentence.
+    sent_serial: u32,
 }
 
 impl<'a> BatchBuilder<'a> {
@@ -285,7 +344,17 @@ impl<'a> BatchBuilder<'a> {
             window,
             batch,
             negative,
+            reuse: ReuseMode::Off,
+            neg_buf: Vec::with_capacity(negative),
+            sent_serial: 0,
         }
+    }
+
+    /// Builder-style reuse selection (`--reuse`); `Off` is the default
+    /// and keeps the per-window draw stream bit-for-bit.
+    pub fn with_reuse(mut self, reuse: ReuseMode) -> Self {
+        self.reuse = reuse;
+        self
     }
 
     /// Output rows per window (1 + K).
@@ -333,7 +402,7 @@ impl<'a> BatchBuilder<'a> {
     /// draw per position, K negative draws per emitted window), so the two
     /// paths produce the same windows for the same seed (tested below).
     pub fn fill_arena(
-        &self,
+        &mut self,
         sentence: &[u32],
         rng: &mut Xoshiro256ss,
         arena: &mut SuperbatchArena,
@@ -359,12 +428,32 @@ impl<'a> BatchBuilder<'a> {
     /// as `fill_arena` for the same sentence), so routing never perturbs
     /// the generated window stream — only where each window is processed
     /// (`tests/routing_parity.rs` pins 1-thread bitwise equality).
+    /// RNG NOTE under `--reuse sentence`: the per-sentence negative set
+    /// is drawn up front (K draws, excluding the sentence's FIRST
+    /// center), so the stream differs from the per-window modes by
+    /// design — sentence reuse is a different (cheaper) sampling
+    /// schedule, not a reordering of the same draws.  A later center
+    /// that collides with one of the shared negatives simply yields a
+    /// duplicate-slot window; the reuse driver routes those into
+    /// singleton runs where the kernels' sequential fallback keeps the
+    /// reference semantics.
     pub fn fill_arena_routed(
-        &self,
+        &mut self,
         sentence: &[u32],
         rng: &mut Xoshiro256ss,
         sink: &mut impl WindowSink,
     ) {
+        let sentence_negs =
+            self.reuse == ReuseMode::Sentence && sentence.len() >= 2;
+        if sentence_negs {
+            self.neg_buf.clear();
+            for _ in 0..self.negative {
+                self.neg_buf
+                    .push(self.sampler.sample_excluding(sentence[0], rng));
+            }
+        }
+        let serial = self.sent_serial;
+        self.sent_serial = self.sent_serial.wrapping_add(1);
         for t in 0..sentence.len() {
             let win = dynamic_window(self.window, rng);
             // Singleton sentences emit no window for their only center
@@ -389,10 +478,18 @@ impl<'a> BatchBuilder<'a> {
             }
             debug_assert!(arena.inputs.len() > start, "center lost its context");
             arena.outputs.push(target);
-            for _ in 0..self.negative {
-                arena.outputs.push(self.sampler.sample_excluding(target, rng));
+            if sentence_negs {
+                arena.outputs.extend_from_slice(&self.neg_buf);
+            } else {
+                for _ in 0..self.negative {
+                    arena
+                        .outputs
+                        .push(self.sampler.sample_excluding(target, rng));
+                }
             }
+            arena.sent.push(serial);
             arena.input_offsets.push(arena.inputs.len() as u32);
+            arena.next_sent = arena.next_sent.max(serial.wrapping_add(1));
         }
     }
 
@@ -540,7 +637,7 @@ mod tests {
     #[test]
     fn arena_matches_windows_of() {
         let (_, s) = builder_parts(80);
-        let b = BatchBuilder::new(&s, 5, 4, 5);
+        let mut b = BatchBuilder::new(&s, 5, 4, 5);
         let sent: Vec<u32> = (0..40).map(|i| i % 80).collect();
         let windows = b.windows_of(&sent, &mut Xoshiro256ss::new(21));
         let mut arena = SuperbatchArena::new(4, 6);
@@ -558,7 +655,7 @@ mod tests {
     #[test]
     fn arena_clear_keeps_capacity() {
         let (_, s) = builder_parts(50);
-        let b = BatchBuilder::new(&s, 5, 16, 5);
+        let mut b = BatchBuilder::new(&s, 5, 16, 5);
         let sent: Vec<u32> = (0..30).collect();
         let mut arena = SuperbatchArena::new(16, 6);
         b.fill_arena(&sent, &mut Xoshiro256ss::new(3), &mut arena);
@@ -599,7 +696,7 @@ mod tests {
     fn sentence_slack_absorbs_max_sentence_overshoot() {
         let (_, s) = builder_parts(50);
         let superbatch = 4usize;
-        let b = BatchBuilder::new(&s, 5, 16, 5);
+        let mut b = BatchBuilder::new(&s, 5, 16, 5);
         let mut arena = SuperbatchArena::with_sentence_slack(superbatch, 16, 6);
         let caps = (
             arena.inputs.capacity(),
@@ -632,7 +729,7 @@ mod tests {
     #[test]
     fn append_from_concatenates_and_rebases_offsets() {
         let (_, s) = builder_parts(60);
-        let b = BatchBuilder::new(&s, 4, 8, 5);
+        let mut b = BatchBuilder::new(&s, 4, 8, 5);
         let sa: Vec<u32> = (0..15).collect();
         let sb: Vec<u32> = (20..50).collect();
         let mut a = SuperbatchArena::new(8, 6);
@@ -674,7 +771,7 @@ mod tests {
             }
         }
         let (_, s) = builder_parts(80);
-        let b = BatchBuilder::new(&s, 5, 4, 5);
+        let mut b = BatchBuilder::new(&s, 5, 4, 5);
         let sent: Vec<u32> = (0..40).map(|i| (i * 13) % 80).collect();
         let mut plain = SuperbatchArena::new(4, 6);
         b.fill_arena(&sent, &mut Xoshiro256ss::new(31), &mut plain);
@@ -710,7 +807,7 @@ mod tests {
         let (_, s) = builder_parts(50);
         let superbatch = 4usize;
         let inflight = 96usize;
-        let b = BatchBuilder::new(&s, 5, 16, 5);
+        let mut b = BatchBuilder::new(&s, 5, 16, 5);
         let mut arena =
             SuperbatchArena::with_route_slack(superbatch, 16, 6, inflight);
         let caps = (
@@ -758,5 +855,88 @@ mod tests {
         let w1 = b.windows_of(&sent, &mut Xoshiro256ss::new(9));
         let w2 = b.windows_of(&sent, &mut Xoshiro256ss::new(9));
         assert_eq!(w1, w2);
+    }
+
+    /// `reuse window` must not perturb generation at all: same RNG
+    /// stream, same windows, bit for bit — only the driver changes.
+    #[test]
+    fn window_reuse_generates_identical_windows() {
+        let (_, s) = builder_parts(60);
+        let sent: Vec<u32> = (0..25).map(|i| (i * 7) % 60).collect();
+        let mut off = SuperbatchArena::new(16, 6);
+        let mut win = SuperbatchArena::new(16, 6);
+        let mut b_off = BatchBuilder::new(&s, 5, 16, 5);
+        let mut b_win =
+            BatchBuilder::new(&s, 5, 16, 5).with_reuse(ReuseMode::Window);
+        b_off.fill_arena(&sent, &mut Xoshiro256ss::new(17), &mut off);
+        b_win.fill_arena(&sent, &mut Xoshiro256ss::new(17), &mut win);
+        assert_eq!(off.to_windows(), win.to_windows());
+    }
+
+    /// Sentence reuse: every window of a sentence carries the SAME K
+    /// negatives (drawn once, excluding the first center), each window
+    /// keeps its own positive, and all windows share one serial.
+    #[test]
+    fn sentence_reuse_shares_negatives_and_serial() {
+        let (_, s) = builder_parts(60);
+        let mut b =
+            BatchBuilder::new(&s, 5, 16, 5).with_reuse(ReuseMode::Sentence);
+        let sent: Vec<u32> = (0..20).map(|i| (i * 3) % 60).collect();
+        let mut arena = SuperbatchArena::new(16, 6);
+        b.fill_arena(&sent, &mut Xoshiro256ss::new(23), &mut arena);
+        assert_eq!(arena.len(), sent.len());
+        let negs = arena.outputs_of(0)[1..].to_vec();
+        for n in &negs {
+            assert_ne!(*n, sent[0], "negatives exclude the first center");
+        }
+        let serial = arena.sentence_of(0);
+        for w in 0..arena.len() {
+            assert_eq!(arena.outputs_of(w)[0], sent[w], "positive per window");
+            assert_eq!(
+                &arena.outputs_of(w)[1..],
+                &negs[..],
+                "window {w}: negatives not shared"
+            );
+            assert_eq!(arena.sentence_of(w), serial, "window {w} serial");
+        }
+        // A second sentence gets a fresh serial and fresh negatives.
+        let sent2: Vec<u32> = (30..45).collect();
+        b.fill_arena(&sent2, &mut Xoshiro256ss::new(24), &mut arena);
+        assert_ne!(arena.sentence_of(sent.len()), serial);
+        for w in sent.len()..arena.len() {
+            assert_eq!(arena.sentence_of(w), arena.sentence_of(sent.len()));
+        }
+    }
+
+    /// Serial bookkeeping across the arena plumbing: direct pushes are
+    /// one sentence each, explicit-serial pushes group, `append_from`
+    /// adopts serials verbatim, and `clear` never recycles a serial.
+    #[test]
+    fn sentence_serial_bookkeeping() {
+        let mut a = SuperbatchArena::new(4, 3);
+        a.push_window(&[1, 2], &[7, 8, 9]);
+        a.push_window(&[3], &[10, 11, 12]);
+        assert_ne!(a.sentence_of(0), a.sentence_of(1), "direct pushes split");
+        a.push_window_in_sentence(&[4], &[13, 14, 15], 40);
+        a.push_window_in_sentence(&[5], &[13, 14, 15], 40);
+        assert_eq!(a.sentence_of(2), 40);
+        assert_eq!(a.sentence_of(3), 40);
+        // next_sent advanced past the explicit serial: a later direct
+        // push cannot collide with sentence 40.
+        a.push_window(&[6], &[16, 17, 18]);
+        assert_ne!(a.sentence_of(4), 40);
+
+        let mut b = SuperbatchArena::new(4, 3);
+        b.append_from(&a);
+        for w in 0..a.len() {
+            assert_eq!(b.sentence_of(w), a.sentence_of(w), "window {w}");
+        }
+
+        // clear keeps the counter running: post-clear pushes never share
+        // a serial with pre-clear windows.
+        let before = a.sentence_of(4);
+        a.clear();
+        a.push_window(&[1], &[7, 8, 9]);
+        assert!(a.sentence_of(0) > before);
     }
 }

@@ -66,12 +66,17 @@ pub struct ServeEngine {
 
 impl ServeEngine {
     /// Wrap a row store, optionally building the int8 shadow copy.
-    pub fn from_store(store: RowStore, mode: QuantMode) -> Self {
+    /// Errors (a checked result, not a panic — a store with over-bound
+    /// dims must fail THIS load, not kill the process) only when the
+    /// int8 build rejects the store's geometry.
+    pub fn from_store(store: RowStore, mode: QuantMode) -> anyhow::Result<Self> {
         let quant = match mode {
             QuantMode::Off => None,
-            QuantMode::Int8 => Some(QuantStore::build(store.rows(), store.dim())),
+            QuantMode::Int8 => {
+                Some(QuantStore::build(store.rows(), store.dim())?)
+            }
         };
-        Self { store, quant }
+        Ok(Self { store, quant })
     }
 
     pub fn store(&self) -> &RowStore {
@@ -81,14 +86,17 @@ impl ServeEngine {
     /// Replace the row store in place (hot-swap to a newer export
     /// without dropping the connection).  The int8 shadow copy is
     /// rebuilt iff the engine was quantized, so the scan mode the
-    /// operator chose survives the swap.
-    pub fn swap_store(&mut self, store: RowStore) {
-        let quant = self
-            .quant
-            .as_ref()
-            .map(|_| QuantStore::build(store.rows(), store.dim()));
+    /// operator chose survives the swap.  On error the OLD store keeps
+    /// serving untouched — a bad export must never take down a healthy
+    /// engine.
+    pub fn swap_store(&mut self, store: RowStore) -> anyhow::Result<()> {
+        let quant = match &self.quant {
+            None => None,
+            Some(_) => Some(QuantStore::build(store.rows(), store.dim())?),
+        };
         self.store = store;
         self.quant = quant;
+        Ok(())
     }
 
     /// Is the int8 scan active?
@@ -293,6 +301,7 @@ mod tests {
     fn engine_with(mode: QuantMode) -> ServeEngine {
         let (words, emb) = planted_model();
         ServeEngine::from_store(RowStore::from_model(words, &emb).unwrap(), mode)
+            .unwrap()
     }
 
     fn planted_model() -> (Vec<String>, Embedding) {
@@ -377,7 +386,8 @@ mod tests {
         let eng = ServeEngine::from_store(
             RowStore::from_model(words, &emb).unwrap(),
             QuantMode::Off,
-        );
+        )
+        .unwrap();
         let mut s = Scratch::default();
         let hits = eng.topk(0, 2, &mut s);
         assert_eq!(hits[0].score.to_bits(), hits[1].score.to_bits());
@@ -441,7 +451,7 @@ mod tests {
         let (words, emb) = planted_model();
         let mut store = RowStore::from_model(words, &emb).unwrap();
         store.set_generation(9);
-        let eng = ServeEngine::from_store(store, QuantMode::Int8);
+        let eng = ServeEngine::from_store(store, QuantMode::Int8).unwrap();
         let mut s = Scratch::default();
         eng.handle_line(br#"{"op":"stats"}"#, &mut s);
         let j = Json::parse(&s.out).unwrap();
@@ -465,7 +475,7 @@ mod tests {
         emb.row_mut(1).copy_from_slice(&[0.8, 0.6, 0.0]);
         let mut st = RowStore::from_model(words, &emb).unwrap();
         st.set_generation(3);
-        eng.swap_store(st);
+        eng.swap_store(st).unwrap();
         assert!(eng.quantized(), "quant mode survives the swap");
         let mut s = Scratch::default();
         eng.handle_line(br#"{"op":"topk","word":"late","k":1}"#, &mut s);

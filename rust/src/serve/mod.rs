@@ -141,12 +141,20 @@ fn serve_stream<R: BufRead, W: Write>(
         }
         if let Some(wt) = watcher.as_deref_mut() {
             if let Some(st) = wt.poll() {
-                eprintln!(
-                    "serve: hot-swapped store (generation {}, {} rows)",
-                    st.generation(),
-                    st.n_rows()
-                );
-                eng.swap_store(st);
+                let (generation, rows) = (st.generation(), st.n_rows());
+                // A bad export must not kill a healthy engine: log and
+                // keep serving the old store (swap_store leaves it
+                // untouched on error).
+                match eng.swap_store(st) {
+                    Ok(()) => eprintln!(
+                        "serve: hot-swapped store (generation \
+                         {generation}, {rows} rows)"
+                    ),
+                    Err(e) => eprintln!(
+                        "serve: REJECTED store swap (generation \
+                         {generation}): {e}; keeping current store"
+                    ),
+                }
             }
         }
         // The line buffer lives inside the scratch the engine mutates,
@@ -189,7 +197,8 @@ mod tests {
         let mut eng = ServeEngine::from_store(
             RowStore::from_model(words, &emb).unwrap(),
             QuantMode::Off,
-        );
+        )
+        .unwrap();
         let input = b"{\"op\":\"topk\",\"word\":\"a\",\"k\":1}\n\r\n\nnot json\n";
         let mut out = Vec::new();
         serve_stream(&mut eng, None, &mut &input[..], &mut out).unwrap();
@@ -220,7 +229,8 @@ mod tests {
         ));
         tiny_store(&["a", "b"], 1).save(&path).unwrap();
         let mut eng =
-            ServeEngine::from_store(RowStore::open(&path).unwrap(), QuantMode::Off);
+            ServeEngine::from_store(RowStore::open(&path).unwrap(), QuantMode::Off)
+                .unwrap();
         let mut watcher = StoreWatcher::new(&path);
         // Unchanged file: no reload.
         assert!(watcher.poll().is_none());

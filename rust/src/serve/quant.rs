@@ -18,6 +18,7 @@
 //! `tests/serve_parity.rs` and accounted in EXPERIMENTS.md §Serving.
 
 use crate::linalg::simd;
+use crate::serve::store::MAX_DIM;
 
 /// Int8 codes + per-row scales for a packed `n × dim` row matrix.
 pub struct QuantStore {
@@ -54,8 +55,22 @@ pub fn quantize_into(v: &[f32], out: &mut [i8]) -> f32 {
 
 impl QuantStore {
     /// Quantize every row of a packed `n × dim` matrix.
-    pub fn build(rows: &[f32], dim: usize) -> Self {
-        assert!(dim > 0 && rows.len() % dim == 0, "quant geometry");
+    ///
+    /// Dimension bounds are checked HERE, once, with a typed error —
+    /// `dim ≤ MAX_DIM` is the i32-overflow contract of the `dot_i8`
+    /// scan kernel, which itself only `debug_assert`s it (a panicking
+    /// hot-loop assert would take the whole serve process down on a
+    /// malformed store instead of failing the one load).
+    pub fn build(rows: &[f32], dim: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            dim > 0 && dim <= MAX_DIM,
+            "quant: dim {dim} outside 1..={MAX_DIM} (int8 dot i32 bound)"
+        );
+        anyhow::ensure!(
+            rows.len() % dim == 0,
+            "quant: {} row floats not a multiple of dim {dim}",
+            rows.len()
+        );
         let n = rows.len() / dim;
         let mut codes = vec![0i8; rows.len()];
         let mut scales = vec![0.0f32; n];
@@ -65,7 +80,7 @@ impl QuantStore {
                 &mut codes[r * dim..(r + 1) * dim],
             );
         }
-        Self { dim, codes, scales }
+        Ok(Self { dim, codes, scales })
     }
 
     pub fn dim(&self) -> usize {
@@ -129,12 +144,27 @@ mod tests {
         assert!(codes.iter().all(|&c| c == 0));
     }
 
+    /// Over-bound or misaligned geometry is a checked error, not a
+    /// panic — the serve engine surfaces it per load/swap.
+    #[test]
+    fn build_rejects_bad_geometry_with_typed_error() {
+        let err = QuantStore::build(&[0.0; 8], 0).unwrap_err();
+        assert!(err.to_string().contains("dim 0"), "{err}");
+        let err = QuantStore::build(&[0.0; 7], 4).unwrap_err();
+        assert!(err.to_string().contains("multiple of dim"), "{err}");
+        // One past the int8-dot i32 bound (geometry check only — no
+        // MAX_DIM-sized allocation needed to trip it).
+        let err = QuantStore::build(&[], MAX_DIM + 1).unwrap_err();
+        assert!(err.to_string().contains("int8 dot"), "{err}");
+        assert!(QuantStore::build(&[0.25; 8], 4).is_ok());
+    }
+
     #[test]
     fn quantized_dot_tracks_f32_dot() {
         let mut rng = Xoshiro256ss::new(0xD07_5EED);
         let (n, d) = (32usize, 64usize);
         let rows: Vec<f32> = (0..n * d).map(|_| rng.next_f32() - 0.5).collect();
-        let qs = QuantStore::build(&rows, d);
+        let qs = QuantStore::build(&rows, d).unwrap();
         assert_eq!(qs.n_rows(), n);
         let q: Vec<f32> = (0..d).map(|_| rng.next_f32() - 0.5).collect();
         let mut qcodes = vec![0i8; d];

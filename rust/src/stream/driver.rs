@@ -178,6 +178,7 @@ fn gemm_backend(cfg: &TrainConfig) -> GemmBackend {
         .with_rule(UpdateRule::Plain)
         .with_sigmoid(cfg.sigmoid_mode)
         .with_kernel(cfg.kernel)
+        .with_reuse(cfg.reuse)
 }
 
 fn cache_target(cfg: &TrainConfig, corpus: &Path) -> Option<PathBuf> {
@@ -441,8 +442,20 @@ impl StreamTrainer {
         }
         self.raw_words += self.sent.len() as u64;
         self.subsampler.filter(&mut self.sent, &mut self.rng);
-        let builder =
-            BatchBuilder::new(&self.sampler, self.cfg.window, self.cfg.batch, self.cfg.negative);
+        // Built per sentence (the sampler lives in `self`, so a held
+        // builder would self-borrow).  Under `--reuse sentence` every
+        // fresh builder stamps serial 0; consecutive sentences in one
+        // arena then share a serial, and the reuse driver's
+        // slots-equality check is what keeps their runs apart (equal
+        // negatives across sentences would merge — which IS the defined
+        // reuse semantics, deterministically).
+        let mut builder = BatchBuilder::new(
+            &self.sampler,
+            self.cfg.window,
+            self.cfg.batch,
+            self.cfg.negative,
+        )
+        .with_reuse(self.cfg.reuse);
         builder.fill_arena(&self.sent, &mut self.rng, &mut self.arena);
         if self.arena.len() >= self.cfg.superbatch {
             self.flush()?;

@@ -51,7 +51,7 @@ use std::sync::Arc;
 
 use super::lr::{AdaGrad, RmsProp};
 use super::Backend;
-use crate::config::{KernelMode, SigmoidMode};
+use crate::config::{KernelMode, ReuseMode, SigmoidMode};
 use crate::linalg::sigmoid::SigmoidTable;
 use crate::linalg::simd;
 use crate::model::ModelRef;
@@ -102,6 +102,15 @@ impl FxU32Hasher {
 
 type FxU32Map<V> = HashMap<u32, V, BuildHasherDefault<FxU32Hasher>>;
 
+/// Max windows per reuse run (`--reuse sentence`): bounds the scratch
+/// growth (`RUN_CAP ×` the per-window `Wi`/`dWi`/`logits` blocks, sized
+/// once in [`GemmBackend::with_reuse`]) and keeps a run's shared
+/// negative rows + `dWo` accumulators register/L1-resident in the
+/// vector run kernels.  Past ~8 windows the gathered context rows — not
+/// the shared negatives — dominate the traffic, so longer runs stop
+/// paying (EXPERIMENTS.md §Fused reuse).
+const RUN_CAP: usize = 8;
+
 /// Per-parameter update rule applied at scatter time.
 #[derive(Clone, Default)]
 pub enum UpdateRule {
@@ -125,6 +134,11 @@ pub struct GemmBackend {
     sigmoid_table: Option<SigmoidTable>,
     /// Kernel organisation (`--kernel`); see [`Self::use_fused`].
     kernel: KernelMode,
+    /// Negative-reuse driver (`--reuse`); see [`Self::process_arena_runs`].
+    reuse: ReuseMode,
+    /// CSR window→row offsets of the current reuse run (reused;
+    /// steady-state allocation-free).
+    run_offs: Vec<u32>,
     /// Identity slot map `0..s` for the fused window-at-a-time path
     /// (reused; steady-state allocation-free).
     win_slots: Vec<u32>,
@@ -148,6 +162,8 @@ impl GemmBackend {
             rule: UpdateRule::Plain,
             sigmoid_table: None,
             kernel: KernelMode::Auto,
+            reuse: ReuseMode::Off,
+            run_offs: Vec::new(),
             win_slots: Vec::new(),
             uniq_ids: Vec::new(),
             slot_of: FxU32Map::default(),
@@ -177,6 +193,26 @@ impl GemmBackend {
         self
     }
 
+    /// Select the negative-reuse driver (`--reuse`).  `Sentence` grows
+    /// the per-window scratch to hold a whole run ([`RUN_CAP`] windows
+    /// of `Wi`/`dWi`/`logits` rows) HERE, at construction, so the run
+    /// path stays allocation-free at steady state
+    /// (`tests/alloc_steadystate.rs`); `Window` keeps the per-window
+    /// sizing — its runs never exceed one window.
+    pub fn with_reuse(mut self, reuse: ReuseMode) -> Self {
+        if reuse == ReuseMode::Sentence && self.reuse != ReuseMode::Sentence {
+            let wi_len = self.wi.len();
+            self.wi.resize(wi_len * RUN_CAP, 0.0);
+            let dwi_len = self.dwi.len();
+            self.dwi.resize(dwi_len * RUN_CAP, 0.0);
+            let logits_len = self.logits.len();
+            self.logits.resize(logits_len * RUN_CAP, 0.0);
+            self.run_offs.reserve(RUN_CAP + 1);
+        }
+        self.reuse = reuse;
+        self
+    }
+
     /// The fused single-pass kernel runs unless the caller pinned `gemm3`
     /// or configured the EXP_TABLE sigmoid (the fused kernel evaluates
     /// the exact sigmoid only; the contradictory `--kernel fused
@@ -189,7 +225,16 @@ impl GemmBackend {
     /// `logits[..b*s] <- (label - σ) · lr` under the configured sigmoid.
     #[inline]
     fn err_inplace(&mut self, b: usize, s: usize, lr: f32) {
-        let logits = &mut self.logits[..b * s];
+        self.err_rows(0, b, s, lr);
+    }
+
+    /// The row-slice form of [`err_inplace`](Self::err_inplace) for
+    /// run-gathered logits: `logits[lo*s..hi*s] <- (label - σ) · lr`.
+    /// Each window's rows are a self-contained `s`-wide tile, so the
+    /// label pattern is identical whatever `lo` is.
+    #[inline]
+    fn err_rows(&mut self, lo: usize, hi: usize, s: usize, lr: f32) {
+        let logits = &mut self.logits[lo * s..hi * s];
         match &self.sigmoid_table {
             None => simd::sgns_err(logits, s, lr),
             Some(t) => {
@@ -291,15 +336,200 @@ impl GemmBackend {
 
     /// Scatter `dwi` rows for `inputs`, applying the update rule.
     fn scatter_dwi(&mut self, model: ModelRef<'_>, inputs: &[u32]) {
+        self.scatter_dwi_from(model, inputs, 0);
+    }
+
+    /// The run-offset form of [`scatter_dwi`](Self::scatter_dwi):
+    /// window rows live at `base..base+inputs.len()` of the gathered
+    /// run block.
+    fn scatter_dwi_from(
+        &mut self,
+        model: ModelRef<'_>,
+        inputs: &[u32],
+        base: usize,
+    ) {
         let d = self.dim;
         for (i, &inp) in inputs.iter().enumerate() {
-            let delta = &mut self.dwi[i * d..(i + 1) * d];
+            let row = base + i;
+            let delta = &mut self.dwi[row * d..(row + 1) * d];
             match &self.rule {
                 UpdateRule::Plain => {}
                 UpdateRule::Adagrad(ag) => ag.adjust_in(inp, delta),
                 UpdateRule::Rmsprop(rp) => rp.adjust_in(inp, delta),
             }
             model.add_in(inp, delta);
+        }
+    }
+
+    /// Reuse-path driver (`--reuse {window,sentence}`): walk the arena
+    /// in maximal RUNS of consecutive windows licensed to share one
+    /// negative set, gather each run's `Wi` rows back to back, hand
+    /// fused runs to [`simd::sgns_fused_run`] as ONE call, and defer
+    /// the input-row scatter to the end of the run — the FULL-W2V
+    /// lifetime extension: the shared negative rows and their `dWo`
+    /// accumulators stay register/L1-resident across the whole run
+    /// instead of being re-streamed per window.
+    ///
+    /// A run grows past its head window only while ALL of:
+    ///
+    /// * same sentence serial ([`SuperbatchArena::sentence_of`]) — the
+    ///   builder only shares draws within a sentence;
+    /// * identical negative slots (`slots[1..]` equality — the
+    ///   authoritative check, which also backstops sentence-serial wrap
+    ///   collisions);
+    /// * duplicate-free slots on BOTH sides (a positive colliding with
+    ///   a shared negative routes that window into its own singleton
+    ///   run, where the window kernel's sequential-fallback semantics
+    ///   apply);
+    /// * run length < [`RUN_CAP`].
+    ///
+    /// Under `ReuseMode::Window` the cap is 1: every window is its own
+    /// run, and a one-window run is BITWISE the `Off` path (same
+    /// gathers, same kernel call — the run kernels delegate `R == 1` to
+    /// the window kernel — same scatter), so `--reuse window` isolates
+    /// pure driver overhead for the ablation.  Deferring the input
+    /// scatter to run end matches the scalar reference
+    /// [`crate::linalg::simd::scalar::sgns_fused_run`]: a run's rows
+    /// are all read up front, so an input repeating across a run's
+    /// windows accumulates every gradient against the same pre-run row.
+    fn process_arena_runs(
+        &mut self,
+        model: ModelRef<'_>,
+        arena: &SuperbatchArena,
+        lr: f32,
+        fused: bool,
+    ) {
+        fn has_dup(sl: &[u32]) -> bool {
+            sl.iter().enumerate().any(|(j, x)| sl[..j].contains(x))
+        }
+        let d = self.dim;
+        let s = arena.s();
+        let n = arena.len();
+        let u = self.uniq_ids.len();
+        let run_cap = match self.reuse {
+            ReuseMode::Sentence => RUN_CAP,
+            _ => 1,
+        };
+        let mut w = 0;
+        while w < n {
+            // Grow the run (reads only slots + serials; no model state).
+            let mut r_n = 1;
+            {
+                let head = &self.out_slots[w * s..(w + 1) * s];
+                if !has_dup(head) {
+                    while r_n < run_cap && w + r_n < n {
+                        let r = w + r_n;
+                        if arena.sentence_of(r) != arena.sentence_of(w) {
+                            break;
+                        }
+                        let sl = &self.out_slots[r * s..(r + 1) * s];
+                        if sl[1..] != head[1..] || has_dup(sl) {
+                            break;
+                        }
+                        r_n += 1;
+                    }
+                }
+            }
+
+            // Gather the run's Wi rows back to back; `run_offs` holds
+            // the CSR window→row offsets the run kernel consumes.
+            self.run_offs.clear();
+            self.run_offs.push(0);
+            let mut rows = 0usize;
+            for win in w..w + r_n {
+                for &inp in arena.inputs_of(win) {
+                    // SAFETY: Hogwild contract (model::hogwild docs).
+                    let row = unsafe { model.row_in(inp) };
+                    self.wi[rows * d..(rows + 1) * d].copy_from_slice(row);
+                    rows += 1;
+                }
+                self.run_offs.push(rows as u32);
+            }
+            debug_assert!(rows * d <= self.wi.len(), "run exceeds scratch");
+
+            if fused {
+                // ONE call per run: negatives' Wo rows + dWo slot
+                // accumulators live across all r_n windows.
+                simd::sgns_fused_run(
+                    s,
+                    d,
+                    lr,
+                    &self.wi[..rows * d],
+                    &self.run_offs,
+                    &self.wo_uniq[..u * d],
+                    &self.out_slots[w * s..(w + r_n) * s],
+                    &mut self.logits[..rows * s],
+                    &mut self.dwi[..rows * d],
+                    &mut self.dwo_uniq[..u * d],
+                );
+            } else {
+                // gemm3 ablation under reuse: per-window 3-GEMM chain
+                // over slices of the gathered run — identical per-window
+                // math to the Off path, so fused-vs-gemm3 comparisons
+                // stay apples-to-apples at every reuse setting.
+                for k in 0..r_n {
+                    let lo = self.run_offs[k] as usize;
+                    let hi = self.run_offs[k + 1] as usize;
+                    let b = hi - lo;
+                    let win = w + k;
+                    {
+                        let slots = &self.out_slots[win * s..(win + 1) * s];
+                        for (j, &slot) in slots.iter().enumerate() {
+                            let src = slot as usize * d;
+                            self.wo[j * d..(j + 1) * d]
+                                .copy_from_slice(&self.wo_uniq[src..src + d]);
+                        }
+                    }
+                    simd::gemm_nt(
+                        b,
+                        s,
+                        d,
+                        1.0,
+                        &self.wi[lo * d..hi * d],
+                        &self.wo[..s * d],
+                        0.0,
+                        &mut self.logits[lo * s..hi * s],
+                    );
+                    self.err_rows(lo, hi, s, lr);
+                    simd::gemm_nn(
+                        b,
+                        d,
+                        s,
+                        1.0,
+                        &self.logits[lo * s..hi * s],
+                        &self.wo[..s * d],
+                        0.0,
+                        &mut self.dwi[lo * d..hi * d],
+                    );
+                    simd::gemm_tn(
+                        s,
+                        d,
+                        b,
+                        1.0,
+                        &self.logits[lo * s..hi * s],
+                        &self.wi[lo * d..hi * d],
+                        0.0,
+                        &mut self.dwo[..s * d],
+                    );
+                    let slots = &self.out_slots[win * s..(win + 1) * s];
+                    for (j, &slot) in slots.iter().enumerate() {
+                        let dst = slot as usize * d;
+                        simd::axpy(
+                            1.0,
+                            &self.dwo[j * d..(j + 1) * d],
+                            &mut self.dwo_uniq[dst..dst + d],
+                        );
+                    }
+                }
+            }
+
+            // Deferred input scatter: after the WHOLE run, matching the
+            // up-front gather above (run-kernel reference semantics).
+            for k in 0..r_n {
+                let base = self.run_offs[k] as usize;
+                self.scatter_dwi_from(model, arena.inputs_of(w + k), base);
+            }
+            w += r_n;
         }
     }
 }
@@ -371,86 +601,93 @@ impl Backend for GemmBackend {
         self.dwo_uniq[..u * d].fill(0.0);
 
         let fused = self.use_fused();
-        for w in 0..arena.len() {
-            let b = arena.inputs_of(w).len();
-            debug_assert!(b >= 1 && b <= arena.b_cap());
+        if self.reuse != ReuseMode::Off {
+            // FULL-W2V-style run driver: group consecutive windows that
+            // share one negative set and extend the gathered rows' /
+            // accumulators' lifetime across the whole run.
+            self.process_arena_runs(model, arena, lr, fused);
+        } else {
+            for w in 0..arena.len() {
+                let b = arena.inputs_of(w).len();
+                debug_assert!(b >= 1 && b <= arena.b_cap());
 
-            // Gather Wi fresh per window (context rows rarely repeat).
-            for (i, &inp) in arena.inputs_of(w).iter().enumerate() {
-                // SAFETY: Hogwild contract.
-                let row = unsafe { model.row_in(inp) };
-                self.wi[i * d..(i + 1) * d].copy_from_slice(row);
-            }
+                // Gather Wi fresh per window (context rows rarely repeat).
+                for (i, &inp) in arena.inputs_of(w).iter().enumerate() {
+                    // SAFETY: Hogwild contract.
+                    let row = unsafe { model.row_in(inp) };
+                    self.wi[i * d..(i + 1) * d].copy_from_slice(row);
+                }
 
-            if fused {
-                // One single-pass kernel call that reads Wo rows and
-                // accumulates dWo THROUGH the dedup slots — no per-window
-                // Wo block assembly, no per-window dWo accumulation pass.
-                simd::sgns_fused(
+                if fused {
+                    // One single-pass kernel call that reads Wo rows and
+                    // accumulates dWo THROUGH the dedup slots — no per-window
+                    // Wo block assembly, no per-window dWo accumulation pass.
+                    simd::sgns_fused(
+                        s,
+                        d,
+                        lr,
+                        &self.wi[..b * d],
+                        &self.wo_uniq[..u * d],
+                        &self.out_slots[w * s..(w + 1) * s],
+                        &mut self.logits[..b * s],
+                        &mut self.dwi[..b * d],
+                        &mut self.dwo_uniq[..u * d],
+                    );
+                    self.scatter_dwi(model, arena.inputs_of(w));
+                    continue;
+                }
+
+                // Assemble the window's Wo block from the L1-hot dedup copy.
+                let slots = &self.out_slots[w * s..(w + 1) * s];
+                for (j, &slot) in slots.iter().enumerate() {
+                    let src = slot as usize * d;
+                    self.wo[j * d..(j + 1) * d]
+                        .copy_from_slice(&self.wo_uniq[src..src + d]);
+                }
+
+                simd::gemm_nt(
+                    b,
                     s,
                     d,
-                    lr,
-                    &self.wi[..b * d],
-                    &self.wo_uniq[..u * d],
-                    &self.out_slots[w * s..(w + 1) * s],
-                    &mut self.logits[..b * s],
-                    &mut self.dwi[..b * d],
-                    &mut self.dwo_uniq[..u * d],
-                );
-                self.scatter_dwi(model, arena.inputs_of(w));
-                continue;
-            }
-
-            // Assemble the window's Wo block from the L1-hot dedup copy.
-            let slots = &self.out_slots[w * s..(w + 1) * s];
-            for (j, &slot) in slots.iter().enumerate() {
-                let src = slot as usize * d;
-                self.wo[j * d..(j + 1) * d]
-                    .copy_from_slice(&self.wo_uniq[src..src + d]);
-            }
-
-            simd::gemm_nt(
-                b,
-                s,
-                d,
-                1.0,
-                &self.wi[..b * d],
-                &self.wo[..s * d],
-                0.0,
-                &mut self.logits[..b * s],
-            );
-            self.err_inplace(b, s, lr);
-            simd::gemm_nn(
-                b,
-                d,
-                s,
-                1.0,
-                &self.logits[..b * s],
-                &self.wo[..s * d],
-                0.0,
-                &mut self.dwi[..b * d],
-            );
-            simd::gemm_tn(
-                s,
-                d,
-                b,
-                1.0,
-                &self.logits[..b * s],
-                &self.wi[..b * d],
-                0.0,
-                &mut self.dwo[..s * d],
-            );
-
-            // Wi scatters stay per window; dWo accumulates per slot.
-            self.scatter_dwi(model, arena.inputs_of(w));
-            let slots = &self.out_slots[w * s..(w + 1) * s];
-            for (j, &slot) in slots.iter().enumerate() {
-                let dst = slot as usize * d;
-                simd::axpy(
                     1.0,
-                    &self.dwo[j * d..(j + 1) * d],
-                    &mut self.dwo_uniq[dst..dst + d],
+                    &self.wi[..b * d],
+                    &self.wo[..s * d],
+                    0.0,
+                    &mut self.logits[..b * s],
                 );
+                self.err_inplace(b, s, lr);
+                simd::gemm_nn(
+                    b,
+                    d,
+                    s,
+                    1.0,
+                    &self.logits[..b * s],
+                    &self.wo[..s * d],
+                    0.0,
+                    &mut self.dwi[..b * d],
+                );
+                simd::gemm_tn(
+                    s,
+                    d,
+                    b,
+                    1.0,
+                    &self.logits[..b * s],
+                    &self.wi[..b * d],
+                    0.0,
+                    &mut self.dwo[..s * d],
+                );
+
+                // Wi scatters stay per window; dWo accumulates per slot.
+                self.scatter_dwi(model, arena.inputs_of(w));
+                let slots = &self.out_slots[w * s..(w + 1) * s];
+                for (j, &slot) in slots.iter().enumerate() {
+                    let dst = slot as usize * d;
+                    simd::axpy(
+                        1.0,
+                        &self.dwo[j * d..(j + 1) * d],
+                        &mut self.dwo_uniq[dst..dst + d],
+                    );
+                }
             }
         }
 
@@ -756,6 +993,199 @@ mod tests {
         for l in 0..dim {
             assert!((d_dup[l] - 2.0 * d_single[l]).abs() < 1e-6, "dim {l}");
         }
+    }
+
+    /// Deterministic M_out prewarm (word2vec zero-init would zero every
+    /// dWi and hide the input-gradient half of the reuse driver).
+    fn prewarm_out(m: &mut SharedModel, rows: u32) {
+        for r in 0..rows {
+            for (i, x) in m.m_out_mut().row_mut(r).iter_mut().enumerate() {
+                *x = 0.02
+                    * ((r as f32) - 19.5)
+                    * if i % 2 == 0 { 0.05 } else { -0.05 };
+            }
+        }
+    }
+
+    fn assert_models_bitwise(a: &SharedModel, b: &SharedModel, rows: u32, tag: &str) {
+        for r in 0..rows {
+            for (l, (x, y)) in
+                a.m_in().row(r).iter().zip(b.m_in().row(r)).enumerate()
+            {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tag} m_in row {r} dim {l}");
+            }
+            for (l, (x, y)) in
+                a.m_out().row(r).iter().zip(b.m_out().row(r)).enumerate()
+            {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tag} m_out row {r} dim {l}");
+            }
+        }
+    }
+
+    /// Arena of sentence-grouped windows sharing one negative set —
+    /// what `BatchBuilder` emits under `--reuse sentence`.
+    fn grouped_arena(sentences: &[&[Window]], b_cap: usize, s: usize) -> SuperbatchArena {
+        let mut a = SuperbatchArena::new(b_cap, s);
+        for (serial, sent) in sentences.iter().enumerate() {
+            for w in *sent {
+                a.push_window_in_sentence(&w.inputs, &w.outputs, serial as u32);
+            }
+        }
+        a
+    }
+
+    /// `--reuse window` is a pure driver ablation: runs are pinned to
+    /// one window, so the model must equal `--reuse off` BIT FOR BIT on
+    /// the same arena — for both kernel organisations, even when the
+    /// arena is grouped so that `sentence` reuse WOULD form runs.
+    #[test]
+    fn reuse_window_is_bitwise_off_both_kernels() {
+        let dim = 24;
+        let negs = [20u32, 21, 22, 23, 24];
+        let sent: Vec<Window> = (0..4u32)
+            .map(|t| window(&[t * 2 + 1, t * 2 + 2], t + 10, &negs))
+            .collect();
+        let arena = grouped_arena(&[&sent], 16, 6);
+        for kernel in [KernelMode::Fused, KernelMode::Gemm3] {
+            let mut m_off = SharedModel::init(40, dim, 91);
+            let mut m_win = SharedModel::init(40, dim, 91);
+            prewarm_out(&mut m_off, 40);
+            prewarm_out(&mut m_win, 40);
+            let mut g_off = GemmBackend::new(dim, 16, 6).with_kernel(kernel);
+            let mut g_win = GemmBackend::new(dim, 16, 6)
+                .with_kernel(kernel)
+                .with_reuse(ReuseMode::Window);
+            g_off.process_arena(m_off.store(), &arena, 0.05).unwrap();
+            g_win.process_arena(m_win.store(), &arena, 0.05).unwrap();
+            assert_models_bitwise(&m_off, &m_win, 40, "window-vs-off");
+        }
+    }
+
+    /// Satellite regression: duplicate slots WITHIN a window (positive
+    /// colliding with a shared negative) and ACROSS consecutive windows,
+    /// in both orders (dup-first and dup-later).  With all-distinct
+    /// input rows the deferred scatter is unobservable, so `sentence`
+    /// reuse must equal `off` BIT FOR BIT: dup windows drop into
+    /// singleton runs whose kernels keep the sequential reference
+    /// semantics, clean neighbours still group.
+    #[test]
+    fn reuse_sentence_dup_slots_bitwise_off() {
+        let dim = 24;
+        let negs = [20u32, 21, 22, 23, 24];
+        // Sentence 0: clean, DUP (target 21 ∈ negs), clean.
+        let s0 = [
+            window(&[1, 2], 10, &negs),
+            window(&[3], 21, &negs),
+            window(&[4, 5, 6], 12, &negs),
+        ];
+        // Sentence 1: DUP first (target 22 ∈ negs), then two clean.
+        let s1 = [
+            window(&[7], 22, &negs),
+            window(&[8, 9], 13, &negs),
+            window(&[11], 14, &negs),
+        ];
+        let arena = grouped_arena(&[&s0, &s1], 16, 6);
+        for kernel in [KernelMode::Fused, KernelMode::Gemm3] {
+            let mut m_off = SharedModel::init(40, dim, 47);
+            let mut m_sen = SharedModel::init(40, dim, 47);
+            prewarm_out(&mut m_off, 40);
+            prewarm_out(&mut m_sen, 40);
+            let mut g_off = GemmBackend::new(dim, 16, 6).with_kernel(kernel);
+            let mut g_sen = GemmBackend::new(dim, 16, 6)
+                .with_kernel(kernel)
+                .with_reuse(ReuseMode::Sentence);
+            g_off.process_arena(m_off.store(), &arena, 0.05).unwrap();
+            g_sen.process_arena(m_sen.store(), &arena, 0.05).unwrap();
+            assert_models_bitwise(&m_off, &m_sen, 40, "sentence-vs-off");
+        }
+    }
+
+    /// An input word repeating across two windows of one run makes the
+    /// deferred scatter observable: both its gradients must be computed
+    /// against the PRE-RUN row (the run kernel read all rows up front).
+    /// Pinned against a naive all-from-initial-state computation, and
+    /// fused/gemm3 must agree under reuse like they do without it.
+    #[test]
+    fn reuse_sentence_defers_repeated_input_scatter() {
+        let dim = 16;
+        let lr = 0.05f32;
+        let negs = [20u32, 21, 22, 23, 24];
+        // Input 3 appears in windows 0 and 2 of the same run.
+        let sent = [
+            window(&[1, 3], 10, &negs),
+            window(&[2], 11, &negs),
+            window(&[3, 4], 12, &negs),
+        ];
+        let arena = grouped_arena(&[&sent], 16, 6);
+
+        let mut m_fused = SharedModel::init(30, dim, 63);
+        let mut m_gemm3 = SharedModel::init(30, dim, 63);
+        let mut m_naive = SharedModel::init(30, dim, 63);
+        for m in [&mut m_fused, &mut m_gemm3, &mut m_naive] {
+            prewarm_out(m, 30);
+        }
+        let mut gf = GemmBackend::new(dim, 16, 6)
+            .with_kernel(KernelMode::Fused)
+            .with_reuse(ReuseMode::Sentence);
+        let mut g3 = GemmBackend::new(dim, 16, 6)
+            .with_kernel(KernelMode::Gemm3)
+            .with_reuse(ReuseMode::Sentence);
+        gf.process_arena(m_fused.store(), &arena, lr).unwrap();
+        g3.process_arena(m_gemm3.store(), &arena, lr).unwrap();
+
+        // Naive: EVERY gradient from the initial state, applied at end
+        // (one run spans the whole superbatch here, so pre-run == pre-
+        // superbatch for the Wi rows too).
+        let mut d_in: HashMap<u32, Vec<f32>> = HashMap::new();
+        let mut d_out: HashMap<u32, Vec<f32>> = HashMap::new();
+        for w in &sent {
+            for &inp in &w.inputs {
+                for (j, &out) in w.outputs.iter().enumerate() {
+                    let wi = m_naive.m_in().row(inp).to_vec();
+                    let wo = m_naive.m_out().row(out).to_vec();
+                    let label = if j == 0 { 1.0 } else { 0.0 };
+                    let gld = (label - sigmoid_exact(dot(&wi, &wo))) * lr;
+                    let di = d_in.entry(inp).or_insert_with(|| vec![0.0; dim]);
+                    let dp = d_out.entry(out).or_insert_with(|| vec![0.0; dim]);
+                    for l in 0..dim {
+                        di[l] += gld * wo[l];
+                        dp[l] += gld * wi[l];
+                    }
+                }
+            }
+        }
+        for (inp, delta) in &d_in {
+            m_naive.add_in(*inp, delta);
+        }
+        for (out, delta) in &d_out {
+            m_naive.add_out(*out, delta);
+        }
+
+        for r in 0..30u32 {
+            for (x, y) in m_fused.m_in().row(r).iter().zip(m_gemm3.m_in().row(r)) {
+                assert!((x - y).abs() < 1e-5, "fused-vs-gemm3 m_in row {r}");
+            }
+            for (x, y) in m_fused.m_in().row(r).iter().zip(m_naive.m_in().row(r)) {
+                assert!((x - y).abs() < 1e-5, "fused-vs-naive m_in row {r}");
+            }
+            for (x, y) in m_fused.m_out().row(r).iter().zip(m_naive.m_out().row(r)) {
+                assert!((x - y).abs() < 1e-5, "fused-vs-naive m_out row {r}");
+            }
+        }
+        // And the deferral is real: window 2's gradient for input 3 was
+        // NOT taken against a row already moved by window 0 (which the
+        // Off driver would do), so Off and Sentence must differ here.
+        let mut m_off = SharedModel::init(30, dim, 63);
+        prewarm_out(&mut m_off, 30);
+        let mut g_off = GemmBackend::new(dim, 16, 6).with_kernel(KernelMode::Fused);
+        g_off.process_arena(m_off.store(), &arena, lr).unwrap();
+        let differs = m_off
+            .m_in()
+            .row(3)
+            .iter()
+            .zip(m_fused.m_in().row(3))
+            .any(|(x, y)| x.to_bits() != y.to_bits());
+        assert!(differs, "deferred scatter had no observable effect");
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! place;
 //! back-ends consume the arena directly via [`Backend::process_arena`].
 //! `train` also pins the SIMD dispatch level from `cfg.simd` before the
-//! workers start (`--simd {auto,avx2,scalar}`).  The learning rate
+//! workers start (`--simd {auto,avx512,avx2,scalar}`).  The learning rate
 //! decays with GLOBAL progress (an atomic word counter), exactly like the
 //! original's `word_count_actual`.
 
@@ -92,7 +92,8 @@ pub fn train(
                 GemmBackend::new(cfg.dim, cfg.batch, cfg.samples())
                     .with_rule(UpdateRule::Plain)
                     .with_sigmoid(cfg.sigmoid_mode)
-                    .with_kernel(cfg.kernel),
+                    .with_kernel(cfg.kernel)
+                    .with_reuse(cfg.reuse),
             ),
             BackendKind::Pjrt => Box::new(PjrtBackend::new(
                 pjrt_exe.as_ref().expect("pjrt exe prepared above").clone(),
@@ -249,12 +250,13 @@ fn run_workers_unrouted(
                 let mut rng = Xoshiro256ss::new(
                     cfg.seed ^ (shard.index as u64 * 0xA5A5_1234 + 17),
                 );
-                let builder = BatchBuilder::new(
+                let mut builder = BatchBuilder::new(
                     ctx.sampler,
                     cfg.window,
                     cfg.batch,
                     cfg.negative,
-                );
+                )
+                .with_reuse(cfg.reuse);
                 // Reused across the whole shard: zero allocations per
                 // window at steady state (tests/alloc_steadystate.rs).
                 // Sentence-slack sizing: `fill_arena` appends a whole
@@ -373,12 +375,13 @@ fn run_workers_routed(
                 let mut rng = Xoshiro256ss::new(
                     cfg.seed ^ (me as u64 * 0xA5A5_1234 + 17),
                 );
-                let builder = BatchBuilder::new(
+                let mut builder = BatchBuilder::new(
                     ctx.sampler,
                     cfg.window,
                     cfg.batch,
                     cfg.negative,
-                );
+                )
+                .with_reuse(cfg.reuse);
                 // Route slack = sentence slack + everything peers can
                 // have in flight toward us (bounded block rings), so the
                 // routed arena never reallocates after construction

@@ -20,7 +20,7 @@ use std::collections::HashMap;
 use std::io::Write;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use pw2v::config::{Backend as BackendKind, KernelMode, QuantMode, SigmoidMode};
+use pw2v::config::{Backend as BackendKind, KernelMode, QuantMode, ReuseMode, SigmoidMode};
 use pw2v::EncodedCorpus;
 use pw2v::Vocab;
 use pw2v::{StreamOptions, StreamTrainer, TrainConfig};
@@ -73,7 +73,7 @@ fn steady_state_training_loop_allocates_nothing() {
     let vocab = Vocab::from_counts(counts, 1);
     let sampler = UnigramSampler::alias(&vocab, 0.75);
     let (dim, window, batch, negative, superbatch) = (64usize, 5usize, 16usize, 5usize, 32usize);
-    let builder = BatchBuilder::new(&sampler, window, batch, negative);
+    let mut builder = BatchBuilder::new(&sampler, window, batch, negative);
     let model = SharedModel::init(vocab_size, dim, 7);
     let mut backend = GemmBackend::new(dim, batch, 1 + negative)
         .with_sigmoid(SigmoidMode::Exact);
@@ -90,7 +90,9 @@ fn steady_state_training_loop_allocates_nothing() {
         })
         .collect();
 
-    let mut round = |arena: &mut SuperbatchArena, backend: &mut GemmBackend| {
+    let round = |arena: &mut SuperbatchArena,
+                 backend: &mut GemmBackend,
+                 builder: &mut BatchBuilder| {
         let mut rng = Xoshiro256ss::new(99);
         for sent in &sentences {
             builder.fill_arena(sent, &mut rng, arena);
@@ -107,7 +109,7 @@ fn steady_state_training_loop_allocates_nothing() {
 
     // Warmup: reach the high-water capacity of every reused buffer.
     for _ in 0..3 {
-        round(&mut arena, &mut backend);
+        round(&mut arena, &mut backend, &mut builder);
     }
 
     let windows_per_round: usize = {
@@ -125,7 +127,7 @@ fn steady_state_training_loop_allocates_nothing() {
     // Steady state: zero allocator calls over 50 rounds (~36k windows).
     let before = ALLOC_CALLS.load(Ordering::SeqCst);
     for _ in 0..50 {
-        round(&mut arena, &mut backend);
+        round(&mut arena, &mut backend, &mut builder);
     }
     let after = ALLOC_CALLS.load(Ordering::SeqCst);
     assert_eq!(
@@ -176,8 +178,10 @@ fn steady_state_training_loop_allocates_nothing() {
         let mut backend = GemmBackend::new(dim, batch, 1 + negative)
             .with_sigmoid(SigmoidMode::Exact)
             .with_kernel(kernel);
-        let mut long_round =
-            |arena: &mut SuperbatchArena, backend: &mut GemmBackend| {
+        let long_round =
+            |arena: &mut SuperbatchArena,
+             backend: &mut GemmBackend,
+             builder: &mut BatchBuilder| {
                 let mut rng = Xoshiro256ss::new(321);
                 for sent in &long_sentences {
                     builder.fill_arena(sent, &mut rng, arena);
@@ -193,11 +197,11 @@ fn steady_state_training_loop_allocates_nothing() {
             };
         // Warmup reaches the backend scratch high-water (wo_uniq etc.).
         for _ in 0..3 {
-            long_round(&mut long_arena, &mut backend);
+            long_round(&mut long_arena, &mut backend, &mut builder);
         }
         let before = ALLOC_CALLS.load(Ordering::SeqCst);
         for _ in 0..20 {
-            long_round(&mut long_arena, &mut backend);
+            long_round(&mut long_arena, &mut backend, &mut builder);
         }
         let after = ALLOC_CALLS.load(Ordering::SeqCst);
         assert_eq!(
@@ -205,6 +209,38 @@ fn steady_state_training_loop_allocates_nothing() {
             0,
             "steady-state long-sentence loop allocated {} times \
              (kernel {kernel:?})",
+            after - before
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // Reuse leg (PR 10): `--reuse sentence` — the run-grouping driver
+    // (sentence-shared negative draws, run gather, `sgns_fused_run`,
+    // deferred input scatter) must also be allocation-free at steady
+    // state, for both kernel organisations.  All run scratch (the
+    // RUN_CAP-wide wi/dwi/logits blocks, the run offsets) is sized at
+    // construction by `with_reuse`.
+    // ------------------------------------------------------------------
+    let mut reuse_builder = BatchBuilder::new(&sampler, window, batch, negative)
+        .with_reuse(ReuseMode::Sentence);
+    for kernel in [KernelMode::Fused, KernelMode::Gemm3] {
+        let mut backend = GemmBackend::new(dim, batch, 1 + negative)
+            .with_sigmoid(SigmoidMode::Exact)
+            .with_kernel(kernel)
+            .with_reuse(ReuseMode::Sentence);
+        for _ in 0..3 {
+            round(&mut arena, &mut backend, &mut reuse_builder);
+        }
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..20 {
+            round(&mut arena, &mut backend, &mut reuse_builder);
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state REUSE (sentence) loop allocated {} times over 20 \
+             rounds (kernel {kernel:?})",
             after - before
         );
     }
@@ -237,9 +273,10 @@ fn steady_state_training_loop_allocates_nothing() {
     let mut backend = GemmBackend::new(dim, batch, 1 + negative)
         .with_sigmoid(SigmoidMode::Exact);
     let mut sent_buf: Vec<u32> = Vec::with_capacity(MAX_SENTENCE_LEN);
-    let mut enc_round = |arena: &mut SuperbatchArena,
-                         backend: &mut GemmBackend,
-                         sent_buf: &mut Vec<u32>| {
+    let enc_round = |arena: &mut SuperbatchArena,
+                     backend: &mut GemmBackend,
+                     builder: &mut BatchBuilder,
+                     sent_buf: &mut Vec<u32>| {
         let mut rng = Xoshiro256ss::new(99);
         let mut reader = enc.reader_range(0, enc.text_len());
         while reader.next_sentence_into(sent_buf).unwrap() {
@@ -255,11 +292,11 @@ fn steady_state_training_loop_allocates_nothing() {
         }
     };
     for _ in 0..3 {
-        enc_round(&mut arena, &mut backend, &mut sent_buf);
+        enc_round(&mut arena, &mut backend, &mut builder, &mut sent_buf);
     }
     let before = ALLOC_CALLS.load(Ordering::SeqCst);
     for _ in 0..50 {
-        enc_round(&mut arena, &mut backend, &mut sent_buf);
+        enc_round(&mut arena, &mut backend, &mut builder, &mut sent_buf);
     }
     let after = ALLOC_CALLS.load(Ordering::SeqCst);
     assert_eq!(
@@ -305,11 +342,12 @@ fn steady_state_training_loop_allocates_nothing() {
         exch.max_inflight(),
     );
     let mut outbox = Outbox::new(&exch, &router, 0);
-    let mut routed_round = |a0: &mut SuperbatchArena,
-                            a1: &mut SuperbatchArena,
-                            b0: &mut GemmBackend,
-                            b1: &mut GemmBackend,
-                            ob: &mut Outbox<'_>| {
+    let routed_round = |a0: &mut SuperbatchArena,
+                        a1: &mut SuperbatchArena,
+                        b0: &mut GemmBackend,
+                        b1: &mut GemmBackend,
+                        builder: &mut BatchBuilder,
+                        ob: &mut Outbox<'_>| {
         let mut rng = Xoshiro256ss::new(77);
         for sent in &sentences {
             {
@@ -344,6 +382,7 @@ fn steady_state_training_loop_allocates_nothing() {
             &mut arena1,
             &mut backend0,
             &mut backend1,
+            &mut builder,
             &mut outbox,
         );
     }
@@ -358,6 +397,7 @@ fn steady_state_training_loop_allocates_nothing() {
             &mut arena1,
             &mut backend0,
             &mut backend1,
+            &mut builder,
             &mut outbox,
         );
     }
@@ -399,7 +439,8 @@ fn steady_state_training_loop_allocates_nothing() {
         let eng = ServeEngine::from_store(
             RowStore::from_model(swords.clone(), &semb).unwrap(),
             quant,
-        );
+        )
+        .unwrap();
         let mut scratch = ServeScratch::default();
         for _ in 0..3 {
             for r in serve_reqs {

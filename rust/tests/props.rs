@@ -502,3 +502,244 @@ fn prop_dot_linearity() {
         assert!((dot(&a, &b) - dot(&b, &a)).abs() < 1e-4);
     }
 }
+
+// ---------------------------------------------------------------------------
+// PR 10: cross-window negative reuse (`sgns_fused_run`) and the AVX-512
+// dispatch tier.  Everything below is new; the contracts above predate
+// the reuse path and stay untouched.
+// ---------------------------------------------------------------------------
+
+use pw2v::config::{KernelMode, ReuseMode};
+use pw2v::sampling::batch::SuperbatchArena;
+
+/// Dispatch levels the reuse/AVX-512 matrix tests exercise this run.
+/// `PW2V_SIMD=scalar` / `PW2V_SIMD=avx512` (the CI dispatch-matrix legs)
+/// pin one vector tier next to the scalar reference; without the env var
+/// every level this CPU supports is covered.  A pinned tier the CPU
+/// lacks soft-skips with an explicit log line, so the avx512 CI leg
+/// stays green on avx2-only runners.  Callers hold [`DISPATCH_LOCK`].
+fn matrix_modes() -> Vec<SimdMode> {
+    let mut modes = vec![SimdMode::Scalar];
+    match std::env::var("PW2V_SIMD").as_deref() {
+        Ok("scalar") => {}
+        Ok("avx512") => {
+            if simd::configure(SimdMode::Avx512).is_ok() {
+                modes.push(SimdMode::Avx512);
+            } else {
+                eprintln!(
+                    "PW2V_SIMD=avx512: this CPU lacks avx512f+avx512bw, \
+                     avx512 legs soft-skipped"
+                );
+            }
+        }
+        _ => {
+            if simd::configure(SimdMode::Avx2).is_ok() {
+                modes.push(SimdMode::Avx2);
+            } else {
+                eprintln!("skipping avx2 legs: this CPU has no avx2+fma");
+            }
+            if simd::configure(SimdMode::Avx512).is_ok() {
+                modes.push(SimdMode::Avx512);
+            } else {
+                eprintln!(
+                    "skipping avx512 legs: this CPU has no avx512f+avx512bw"
+                );
+            }
+        }
+    }
+    simd::configure(SimdMode::Auto).unwrap();
+    modes
+}
+
+/// `sgns_fused_run` is BIT-FOR-BIT `R` consecutive `sgns_fused` calls at
+/// the same dispatch level — the reuse tentpole's correctness contract
+/// (mod docs point here) — across awkward geometry: R=1 singleton runs
+/// (the driver's duplicate-slot route), per-window row counts down to
+/// B=1, D % 16 != 0 (both vector tiers' remainder lanes), and D smaller
+/// than one vector register.
+#[test]
+fn prop_fused_run_bitwise_equals_sequential_fused() {
+    let _guard = DISPATCH_LOCK.lock().unwrap();
+    let mut rng = Xoshiro256ss::new(0xF0CE2);
+    // (r_n, s, d): windows per run × samples × dim.
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 6, 300), // singleton run (the dup-slot fallback route)
+        (2, 2, 1),   // everything minimal
+        (3, 6, 300), // paper shape
+        (4, 6, 299), // D % 16 != 0 (avx512 remainder), % 8 != 0 (avx2)
+        (5, 5, 17),
+        (8, 3, 7),   // D below one 8-lane register
+        (8, 6, 304), // D % 16 == 0 but not a multiple of 32
+        (2, 9, 33),
+    ];
+    for mode in matrix_modes() {
+        simd::configure(mode).unwrap();
+        for &(r_n, s, d) in shapes {
+            let u = r_n + s + 2;
+            // Driver contract for multi-window runs: negatives shared,
+            // positives distinct, every window dup-free.
+            let negs: Vec<u32> =
+                (r_n as u32..(r_n + s - 1) as u32).collect();
+            let mut slots = Vec::with_capacity(r_n * s);
+            for w in 0..r_n as u32 {
+                slots.push(w);
+                slots.extend_from_slice(&negs);
+            }
+            // CSR row offsets with varying window widths, B=1 included.
+            let mut offs = vec![0u32];
+            for w in 0..r_n {
+                let b = 1 + (w + rng.below(3)) % 4;
+                offs.push(offs[w] + b as u32);
+            }
+            let rows = *offs.last().unwrap() as usize;
+            let wi = randv(&mut rng, rows * d);
+            let wo = randv(&mut rng, u * d);
+            let lr = 0.025f32;
+
+            // Reference: R consecutive sgns_fused calls — the run
+            // kernel's DEFINED semantics — at the same level.
+            let mut want_err = vec![0.0f32; rows * s];
+            let mut want_dwi = vec![0.0f32; rows * d];
+            let mut want_dwo = vec![0.0f32; u * d];
+            for w in 0..r_n {
+                let (lo, hi) = (offs[w] as usize, offs[w + 1] as usize);
+                simd::sgns_fused(
+                    s,
+                    d,
+                    lr,
+                    &wi[lo * d..hi * d],
+                    &wo,
+                    &slots[w * s..(w + 1) * s],
+                    &mut want_err[lo * s..hi * s],
+                    &mut want_dwi[lo * d..hi * d],
+                    &mut want_dwo,
+                );
+            }
+
+            let mut got_err = vec![0.0f32; rows * s];
+            let mut got_dwi = vec![0.0f32; rows * d];
+            let mut got_dwo = vec![0.0f32; u * d];
+            simd::sgns_fused_run(
+                s, d, lr, &wi, &offs, &wo, &slots, &mut got_err,
+                &mut got_dwi, &mut got_dwo,
+            );
+
+            let what = format!("({r_n},{s},{d}) {mode:?}");
+            for i in 0..rows * d {
+                assert_eq!(
+                    got_dwi[i].to_bits(),
+                    want_dwi[i].to_bits(),
+                    "dwi {what} i={i}: {} vs {}",
+                    got_dwi[i],
+                    want_dwi[i]
+                );
+            }
+            for i in 0..u * d {
+                assert_eq!(
+                    got_dwo[i].to_bits(),
+                    want_dwo[i].to_bits(),
+                    "dwo {what} i={i}: {} vs {}",
+                    got_dwo[i],
+                    want_dwo[i]
+                );
+            }
+        }
+    }
+    simd::configure(SimdMode::Auto).unwrap();
+}
+
+/// The trainer-surface matrix the reuse path ships under:
+/// {scalar, avx2, avx512} × {fused, gemm3} × {off, window, sentence} on
+/// one thread.  `--reuse window` must be BIT-FOR-BIT `--reuse off`
+/// (singleton runs process identical slices through identical kernels);
+/// `--reuse sentence` is bitwise-equal here too because every window's
+/// inputs are distinct, so the run driver's deferred input scatter is
+/// unobservable.  Geometry is deliberately awkward: D % 8 != 0, a
+/// singleton-window sentence, a B=1 window, and a window that repeats
+/// its own positive as a negative (duplicate slot — routed to a
+/// singleton run where the kernels' sequential fallback applies).
+#[test]
+fn prop_reuse_matrix_levels_kernels() {
+    let _guard = DISPATCH_LOCK.lock().unwrap();
+    const D: usize = 17;
+    const V: usize = 70;
+    let s = 6;
+    let lr = 0.025f32;
+
+    let arena = {
+        let mut a = SuperbatchArena::new(4, s);
+        let negs_a = [40u32, 41, 42, 43, 44];
+        let negs_b = [50u32, 51, 52, 53, 54];
+        let negs_c = [60u32, 61, 62, 63, 64];
+        // Sentence 0: three windows sharing one negative set (a run).
+        for (target, inputs) in [
+            (10u32, &[1u32, 2, 3][..]),
+            (11, &[4][..]),
+            (12, &[5, 6, 7, 8][..]),
+        ] {
+            let mut outs = vec![target];
+            outs.extend_from_slice(&negs_a);
+            a.push_window_in_sentence(inputs, &outs, 0);
+        }
+        // Sentence 1: a singleton window (run of length one).
+        let mut outs = vec![13u32];
+        outs.extend_from_slice(&negs_b);
+        a.push_window_in_sentence(&[9], &outs, 1);
+        // Sentence 2: clean window, then a duplicate-slot window (its
+        // positive repeated as the last negative).
+        let mut outs = vec![14u32];
+        outs.extend_from_slice(&negs_c);
+        a.push_window_in_sentence(&[16, 17], &outs, 2);
+        a.push_window_in_sentence(&[18], &[15, 60, 61, 62, 63, 15], 2);
+        a
+    };
+
+    // Deterministic nonzero M_out so every gradient path is live.
+    let prewarmed = |seed: u64| {
+        let model = SharedModel::init(V, D, seed);
+        for r in 0..V as u32 {
+            // SAFETY: single-threaded test.
+            let row = unsafe { model.row_out(r) };
+            for (i, x) in row.iter_mut().enumerate() {
+                *x = 0.01 * ((r as usize * 31 + i) % 17) as f32 - 0.08;
+            }
+        }
+        model
+    };
+    let run = |kernel: KernelMode, reuse: ReuseMode| {
+        let model = prewarmed(99);
+        let mut backend = GemmBackend::new(D, 4, s)
+            .with_kernel(kernel)
+            .with_reuse(reuse);
+        backend.process_arena(model.store(), &arena, lr).unwrap();
+        model
+    };
+    let bits = |m: &SharedModel| {
+        let mut v: Vec<u32> =
+            m.m_in().data().iter().map(|x| x.to_bits()).collect();
+        v.extend(m.m_out().data().iter().map(|x| x.to_bits()));
+        v
+    };
+
+    for mode in matrix_modes() {
+        simd::configure(mode).unwrap();
+        for kernel in [KernelMode::Fused, KernelMode::Gemm3] {
+            let off = bits(&run(kernel, ReuseMode::Off));
+            // The model must actually move, or the equalities are vacuous.
+            let init = bits(&prewarmed(99));
+            assert_ne!(off, init, "{mode:?}/{kernel}: model did not move");
+            let window = bits(&run(kernel, ReuseMode::Window));
+            assert_eq!(
+                off, window,
+                "{mode:?}/{kernel}: --reuse window drifted from off"
+            );
+            let sentence = bits(&run(kernel, ReuseMode::Sentence));
+            assert_eq!(
+                off, sentence,
+                "{mode:?}/{kernel}: --reuse sentence drifted from off \
+                 on distinct-input windows"
+            );
+        }
+    }
+    simd::configure(SimdMode::Auto).unwrap();
+}

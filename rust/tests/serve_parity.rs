@@ -166,7 +166,8 @@ fn serve_answers_match_eval_oracles() {
     let eng = ServeEngine::from_store(
         RowStore::from_model(words.clone(), emb).unwrap(),
         QuantMode::Off,
-    );
+    )
+    .unwrap();
     let mut s = Scratch::default();
     let queries: Vec<u32> = (0..25u32)
         .map(|i| (i * 31) % vocab.len() as u32)
@@ -246,7 +247,8 @@ fn serve_answers_match_eval_oracles() {
     let eng8 = ServeEngine::from_store(
         RowStore::from_model(words.clone(), emb).unwrap(),
         QuantMode::Int8,
-    );
+    )
+    .unwrap();
     assert!(eng8.quantized());
     let mut overlap = 0usize;
     let mut total = 0usize;
@@ -286,7 +288,8 @@ fn serve_answers_match_eval_oracles() {
             let peng = ServeEngine::from_store(
                 RowStore::from_model(pwords.clone(), &pemb).unwrap(),
                 quant,
-            );
+            )
+            .unwrap();
             let ids: Vec<u32> = peng.topk(0, 4, &mut s).iter().map(|h| h.id).collect();
             assert_eq!(
                 ids,
